@@ -1,0 +1,141 @@
+//! End-to-end driver (EXPERIMENTS.md §E2E): proves all three layers
+//! compose on a real workload.
+//!
+//! 1. **Real numerics** — loads the AOT-compiled HLO artifacts (Pallas
+//!    conv kernels → JAX blocks → HLO text, built by `make artifacts`),
+//!    serves batched back-to-back requests of the executable model through
+//!    per-processor worker threads (LiveSession + PJRT), validates the
+//!    output against the JAX golden values, and reports latency/throughput.
+//! 2. **Real GRU corrector** — wires `gru.hlo.txt` into the profiler and
+//!    serves two concurrent app streams (video detection + classifier)
+//!    through the virtual-time engine under the high condition.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example concurrent_serving
+//! ```
+
+use std::path::PathBuf;
+
+use adaoper::config::schema::{ConditionKind, PolicyKind};
+use adaoper::coordinator::live::{ExecutorFactory, LiveSession};
+use adaoper::coordinator::{Engine, EngineConfig, StreamSpec};
+use adaoper::graph::zoo;
+use adaoper::partition::dp::DpPartitioner;
+use adaoper::partition::{Objective, Partitioner};
+use adaoper::profiler::calibrate::{calibrate, CalibConfig};
+use adaoper::profiler::corrector::GruCorrector;
+use adaoper::profiler::EnergyProfiler;
+use adaoper::runtime::session::{gru_infer_fn, ArtifactExecutor};
+use adaoper::soc::device::{Device, DeviceConfig};
+use adaoper::workload::{Arrival, WorkloadCondition};
+
+fn artifacts_dir() -> anyhow::Result<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    anyhow::ensure!(
+        dir.join("manifest.txt").exists(),
+        "artifacts not found — run `make artifacts` first"
+    );
+    Ok(dir)
+}
+
+fn main() -> anyhow::Result<()> {
+    let dir = artifacts_dir()?;
+
+    // ---------------------------------------------------------------
+    // Part 1: real HLO numerics through per-processor worker threads
+    // ---------------------------------------------------------------
+    println!("== part 1: PJRT serving of the executable model ==");
+    let g = zoo::tiny_exec();
+    let mut device = Device::new(DeviceConfig::snapdragon_855());
+    device.apply_condition(&WorkloadCondition::moderate().spec);
+
+    // plan with the AdaOper DP against the device oracle (quick demo)
+    let snap = device.snapshot();
+    let plan = DpPartitioner::new(Objective::MinEdp).partition(&g, &device, &snap)?;
+    println!(
+        "plan: {}",
+        plan.placements
+            .iter()
+            .map(|p| p.label())
+            .collect::<Vec<_>>()
+            .join(" ")
+    );
+
+    // each worker thread builds its own PJRT executor from the artifacts
+    let dir2 = dir.clone();
+    let factory: ExecutorFactory = Box::new(move || {
+        Box::new(ArtifactExecutor::new(&dir2).expect("artifacts load"))
+    });
+    let n_in: usize = g.input_shape.elems() as usize;
+    let input: Vec<f32> = (0..n_in).map(|i| ((i % 97) as f32 - 48.0) / 97.0).collect();
+    let n_requests = 24;
+    let wall0 = std::time::Instant::now();
+    let (report, output) =
+        LiveSession::run(&g, &plan, &mut device, factory, n_requests, input)?;
+    let wall = wall0.elapsed().as_secs_f64();
+    print!("{}", report.pretty());
+    println!(
+        "real compute: {} requests in {:.2}s wall ({:.1} req/s host throughput)",
+        n_requests,
+        wall,
+        n_requests as f64 / wall
+    );
+
+    // validate against the JAX golden values
+    let golden = std::fs::read_to_string(dir.join("golden.txt"))?;
+    let mut checked = 0;
+    for line in golden.lines().filter(|l| !l.starts_with('#') && !l.trim().is_empty()) {
+        let mut it = line.split_whitespace();
+        let idx: usize = it.next().unwrap().parse()?;
+        let want: f32 = it.next().unwrap().parse()?;
+        let got = output[idx];
+        anyhow::ensure!(
+            (got - want).abs() <= 1e-4 * (1.0 + want.abs()),
+            "golden mismatch at {idx}: {got} vs {want}"
+        );
+        checked += 1;
+    }
+    println!("numerics: {checked} golden values match JAX ✓\n");
+
+    // ---------------------------------------------------------------
+    // Part 2: concurrent streams with the real GRU corrector
+    // ---------------------------------------------------------------
+    println!("== part 2: concurrent serving with the AOT GRU corrector ==");
+    let calib = CalibConfig {
+        samples: 3000,
+        seed: 7,
+        gbdt: adaoper::profiler::gbdt::GbdtParams {
+            trees: 80,
+            ..Default::default()
+        },
+    };
+    let offline = calibrate(&calib);
+    let dir3 = dir.clone();
+    let profiler = EnergyProfiler::with_correctors(offline, || {
+        let infer = gru_infer_fn(&dir3, 8).expect("gru artifact");
+        Box::new(GruCorrector::new(8, infer))
+    });
+    let mut engine = Engine::with_profiler(
+        EngineConfig {
+            policy: PolicyKind::AdaOper,
+            condition: ConditionKind::High,
+            duration_s: 6.0,
+            seed: 11,
+            calib,
+            ..Default::default()
+        },
+        profiler,
+    );
+    let streams = vec![
+        StreamSpec::new(0, zoo::yolov2(), Arrival::Periodic { hz: 3.0, jitter: 0.02 }, 0.6),
+        StreamSpec::new(1, zoo::mobilenet_v1(), Arrival::Poisson { hz: 5.0 }, 0.3),
+    ];
+    let report = engine.run(&streams)?;
+    print!("{}", report.pretty());
+    println!(
+        "profiler corrector: {} (drift stat {:.3})",
+        engine.profiler().corrector_name(),
+        engine.profiler().drift_stat()
+    );
+    Ok(())
+}

@@ -1,0 +1,52 @@
+//! Energy-profiler adaptation demo (ablation A1): drive the device through
+//! idle → moderate → high → moderate and watch each predictor arm's error,
+//! including the real AOT-compiled GRU corrector when artifacts exist.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example energy_profiler
+//! ```
+
+use std::path::PathBuf;
+
+use adaoper::experiments::ablations;
+use adaoper::profiler::calibrate::CalibConfig;
+use adaoper::profiler::corrector::{Corrector, GruCorrector};
+use adaoper::profiler::gbdt::GbdtParams;
+use adaoper::runtime::session::gru_infer_fn;
+
+fn main() -> anyhow::Result<()> {
+    let calib = CalibConfig {
+        samples: 4000,
+        seed: 3,
+        gbdt: GbdtParams {
+            trees: 100,
+            ..Default::default()
+        },
+    };
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let gru: Option<Box<dyn FnMut() -> Box<dyn Corrector>>> =
+        if dir.join("manifest.txt").exists() {
+            let d = dir.clone();
+            Some(Box::new(move || {
+                let infer = gru_infer_fn(&d, 8).expect("gru artifact");
+                Box::new(GruCorrector::new(8, infer))
+            }))
+        } else {
+            eprintln!("(artifacts not built — skipping the GRU arm; run `make artifacts`)");
+            None
+        };
+
+    let rows = ablations::profiler_accuracy(&calib, 3.0, 11, gru)?;
+    println!(
+        "{:<12} {:>14} {:>14} {:>8}",
+        "arm", "energy MAPE", "latency MAPE", "obs"
+    );
+    for r in &rows {
+        println!(
+            "{:<12} {:>13.1}% {:>13.1}% {:>8}",
+            r.arm, r.energy_mape, r.latency_mape, r.observations
+        );
+    }
+    println!("\n(the paper's profiler = offline GBDT + runtime GRU correction)");
+    Ok(())
+}

@@ -1,0 +1,39 @@
+//! Reproduce the paper's Figure 2: YOLOv2 on the simulated Xiaomi 9 under
+//! moderate/high workload conditions, MACE-on-GPU vs CoDL vs AdaOper.
+//!
+//! ```sh
+//! cargo run --release --example fig2_repro            # full budget
+//! cargo run --release --example fig2_repro -- quick   # smaller budget
+//! ```
+
+use adaoper::experiments::fig2;
+use adaoper::profiler::calibrate::CalibConfig;
+use adaoper::profiler::gbdt::GbdtParams;
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "quick");
+    let cfg = fig2::Fig2Config {
+        model: "yolov2".into(),
+        n_requests: if quick { 15 } else { 40 },
+        seed: 7,
+        calib: if quick {
+            CalibConfig {
+                samples: 2500,
+                seed: 42,
+                gbdt: GbdtParams {
+                    trees: 80,
+                    ..Default::default()
+                },
+            }
+        } else {
+            CalibConfig::default()
+        },
+    };
+    eprintln!(
+        "running Figure 2 matrix ({} requests/cell, {} calibration samples) …",
+        cfg.n_requests, cfg.calib.samples
+    );
+    let rows = fig2::run(&cfg)?;
+    print!("{}", fig2::render(&rows));
+    Ok(())
+}

@@ -1,0 +1,67 @@
+//! Quickstart: plan an energy-aware partition for YOLOv2 on the simulated
+//! Snapdragon 855 and serve a few inferences with it.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use adaoper::config::schema::{ConditionKind, PolicyKind};
+use adaoper::coordinator::{Engine, EngineConfig, StreamSpec};
+use adaoper::graph::zoo;
+use adaoper::profiler::calibrate::CalibConfig;
+use adaoper::profiler::gbdt::GbdtParams;
+use adaoper::soc::Placement;
+use adaoper::workload::Arrival;
+
+fn main() -> anyhow::Result<()> {
+    // 1. pick the workload: full YOLOv2 (the paper's Figure-2 model)
+    let model = zoo::yolov2();
+    println!(
+        "model {}: {} ops, {:.1} GFLOPs",
+        model.name,
+        model.num_ops(),
+        model.total_flops() as f64 / 1e9
+    );
+
+    // 2. build the serving engine: this calibrates the offline GBDT energy
+    //    model on the simulated device (once), wires the runtime corrector,
+    //    and selects the AdaOper DP partitioner.
+    let mut engine = Engine::new(EngineConfig {
+        policy: PolicyKind::AdaOper,
+        condition: ConditionKind::Moderate,
+        seed: 7,
+        calib: CalibConfig {
+            samples: 3000, // quick calibration for the demo
+            seed: 7,
+            gbdt: GbdtParams {
+                trees: 80,
+                ..Default::default()
+            },
+        },
+        ..Default::default()
+    });
+
+    // 3. run 15 back-to-back inferences (closed loop)
+    let spec = StreamSpec::new(0, model, Arrival::Poisson { hz: 10.0 }, 0.5);
+    let report = engine.run_closed_loop(&spec, 15)?;
+    print!("{}", report.pretty());
+
+    // 4. peek at the kind of plan AdaOper chose
+    let g = zoo::yolov2();
+    let plan = adaoper::partition::dp::DpPartitioner::new(
+        adaoper::partition::Objective::MinEdp,
+    )
+    .solve(&g, engine.profiler(), &engine.device().snapshot())?;
+    let splits = plan
+        .placements
+        .iter()
+        .filter(|p| matches!(p, Placement::Split { .. }))
+        .count();
+    println!(
+        "\ncurrent plan: {} ops co-executed (split), {} GPU-only, {} CPU-only",
+        splits,
+        plan.placements.iter().filter(|&&p| p == Placement::GPU).count(),
+        plan.placements.iter().filter(|&&p| p == Placement::CPU).count(),
+    );
+    Ok(())
+}

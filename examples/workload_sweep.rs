@@ -1,0 +1,55 @@
+//! Policy × condition sweep: open-loop serving of YOLOv2, printing one
+//! Figure-2-style row per combination — a quick scan of the whole design
+//! space the paper's evaluation slices.
+//!
+//! ```sh
+//! cargo run --release --example workload_sweep
+//! ```
+
+use adaoper::config::schema::{ConditionKind, PolicyKind};
+use adaoper::coordinator::{Engine, EngineConfig, StreamSpec};
+use adaoper::graph::zoo;
+use adaoper::profiler::calibrate::CalibConfig;
+use adaoper::profiler::gbdt::GbdtParams;
+use adaoper::workload::Arrival;
+
+fn main() -> anyhow::Result<()> {
+    let calib = CalibConfig {
+        samples: 3000,
+        seed: 5,
+        gbdt: GbdtParams {
+            trees: 80,
+            ..Default::default()
+        },
+    };
+    for condition in [ConditionKind::Idle, ConditionKind::Moderate, ConditionKind::High] {
+        for policy in [
+            PolicyKind::AllCpu,
+            PolicyKind::MaceGpu,
+            PolicyKind::GreedyEnergy,
+            PolicyKind::Codl,
+            PolicyKind::AdaOper,
+        ] {
+            let mut engine = Engine::new(EngineConfig {
+                policy,
+                condition,
+                duration_s: 5.0,
+                seed: 13,
+                calib: calib.clone(),
+                ..Default::default()
+            });
+            let streams = vec![StreamSpec::new(
+                0,
+                zoo::yolov2(),
+                Arrival::Poisson { hz: 2.0 },
+                0.8,
+            )];
+            match engine.run(&streams) {
+                Ok(r) => println!("{}", r.row()),
+                Err(e) => println!("{:<14} {:<9} failed: {e}", policy.name(), condition.name()),
+            }
+        }
+        println!();
+    }
+    Ok(())
+}

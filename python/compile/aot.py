@@ -1,0 +1,131 @@
+"""AOT export: lower the L2/L1 computations to HLO *text* artifacts.
+
+Interchange format is HLO text (NOT serialized HloModuleProto): jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the published `xla` 0.1.6 rust crate binds) rejects; the text
+parser reassigns ids and round-trips cleanly. See /opt/xla-example.
+
+Outputs (under --out, default ../artifacts):
+  tiny_exec_<op>.hlo.txt   one per operator of the executable model
+  tiny_exec_full.hlo.txt   the whole model in one computation
+  gru.hlo.txt              the trained GRU corrector (window -> scalar)
+  manifest.txt             op -> artifact index with shapes (rust parses it)
+
+Python runs ONCE at build time (`make artifacts`); the rust binary never
+imports it.
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # CRITICAL: the default printer elides large constants as `{...}`,
+    # which the consuming parser (xla_extension 0.5.1) silently reads as
+    # zeros — every baked weight would vanish. Print with full constants.
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    # newer XLA emits metadata attributes (source_end_line, …) the 0.5.1
+    # parser rejects — strip metadata entirely.
+    opts.print_metadata = False
+    return comp.get_hlo_module().to_string(opts)
+
+
+def shape_str(shape) -> str:
+    return "x".join(str(d) for d in shape)
+
+
+def export(out_dir: str, gru_steps: int = 300, verbose: bool = True):
+    os.makedirs(out_dir, exist_ok=True)
+    params = model.tiny_exec_params()
+    manifest = []
+
+    # --- per-op artifacts
+    x_shape = model.INPUT_SHAPE
+    for name, in_shape, out_shape in model.op_shapes(params):
+        fn = lambda x, _name=name: (model.op_forward(_name, params, x),)
+        spec = jax.ShapeDtypeStruct(in_shape, jnp.float32)
+        text = to_hlo_text(jax.jit(fn).lower(spec))
+        fname = f"tiny_exec_{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        manifest.append(
+            f"tiny-exec/{name} {fname} {shape_str(in_shape)} {shape_str(out_shape)}"
+        )
+        if verbose:
+            print(f"  wrote {fname} ({len(text)} chars)")
+
+    # --- full model
+    spec = jax.ShapeDtypeStruct(x_shape, jnp.float32)
+    full = lambda x: (model.tiny_exec_forward(params, x),)
+    text = to_hlo_text(jax.jit(full).lower(spec))
+    with open(os.path.join(out_dir, "tiny_exec_full.hlo.txt"), "w") as f:
+        f.write(text)
+    out_shape = model.op_shapes(params)[-1][2]
+    manifest.append(
+        f"tiny-exec/full tiny_exec_full.hlo.txt {shape_str(x_shape)} {shape_str(out_shape)}"
+    )
+    if verbose:
+        print(f"  wrote tiny_exec_full.hlo.txt ({len(text)} chars)")
+
+    # --- GRU corrector (trained on synthetic drift traces)
+    gparams, losses = model.gru_train(steps=gru_steps)
+    if verbose:
+        print(f"  gru train loss {losses[0]:.4f} -> {losses[-1]:.4f}")
+    gfn = lambda w: (model.gru_predict(gparams, w),)
+    gspec = jax.ShapeDtypeStruct((model.GRU_WINDOW, model.GRU_IN_FEATURES), jnp.float32)
+    text = to_hlo_text(jax.jit(gfn).lower(gspec))
+    with open(os.path.join(out_dir, "gru.hlo.txt"), "w") as f:
+        f.write(text)
+    manifest.append(
+        f"gru/predict gru.hlo.txt {model.GRU_WINDOW}x{model.GRU_IN_FEATURES} 1"
+    )
+    if verbose:
+        print(f"  wrote gru.hlo.txt ({len(text)} chars)")
+
+    # --- cross-language golden values: run the full model in python on a
+    # deterministic input and record sampled outputs; the rust runtime
+    # test replays the same input through the artifacts and compares.
+    # (Guards against silent HLO-text corruption — e.g. elided constants.)
+    import numpy as np
+    n_in = 1
+    for d in model.INPUT_SHAPE:
+        n_in *= d
+    golden_in = (np.arange(n_in) % 97 - 48.0).astype(np.float32) / 97.0
+    golden_out = np.asarray(
+        model.tiny_exec_forward(params, jnp.asarray(golden_in.reshape(model.INPUT_SHAPE)))
+    ).reshape(-1)
+    with open(os.path.join(out_dir, "golden.txt"), "w") as f:
+        f.write("# idx value — tiny-exec/full outputs for the canonical input\n")
+        for idx in range(0, golden_out.size, max(1, golden_out.size // 64)):
+            f.write(f"{idx} {golden_out[idx]:.6e}\n")
+    if verbose:
+        print(f"  wrote golden.txt")
+
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("# name file in_shape out_shape\n")
+        f.write("\n".join(manifest) + "\n")
+    if verbose:
+        print(f"  wrote manifest.txt ({len(manifest)} entries)")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--gru-steps", type=int, default=300)
+    args = ap.parse_args()
+    export(args.out, gru_steps=args.gru_steps)
+
+
+if __name__ == "__main__":
+    main()

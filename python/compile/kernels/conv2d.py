@@ -1,0 +1,28 @@
+"""L1/L2 bridge: convolution as im2col (jnp) + Pallas GEMM (kernels.matmul).
+
+`conv2d` is what the model's conv blocks call; its numerics are pinned to
+`ref.conv2d_ref` by pytest. Depth of the Pallas path: the GEMM — which is
+where ~99 % of the FLOPs live — runs inside the Pallas kernel.
+"""
+
+import jax.numpy as jnp
+
+from . import matmul
+from . import ref
+
+
+def conv2d(x, w, b, stride=1, pad=1, act="leaky"):
+    """NCHW convolution via im2col + Pallas GEMM.
+
+    x: [N, C, H, W]; w: [O, C, kh, kw]; b: [O] → [N, O, OH, OW].
+    """
+    o, c, kh, kw = w.shape
+    cols, (n, oh, ow) = ref.im2col(x, kh, kw, stride=stride, pad=pad)
+    w2 = w.reshape(o, c * kh * kw).T  # [C*kh*kw, O]
+    y = matmul.matmul_bias_act(cols, w2, b, act=act)  # [N*OH*OW, O]
+    return y.reshape(n, oh, ow, o).transpose(0, 3, 1, 2)
+
+
+def maxpool2x2(x):
+    """2x2/2 max pool (L2 op — bandwidth-bound, no Pallas needed)."""
+    return ref.maxpool2x2_ref(x)

@@ -1,0 +1,60 @@
+"""L1 Pallas kernel: fused GRU cell (the profiler's runtime corrector).
+
+One Pallas program computes all three gates for a step: both input and
+recurrent projections are issued as MXU-shaped dots on VMEM-resident
+blocks, with the gate nonlinearities fused. The L2 sequence model
+(`model.gru_predict`) scans this cell over the residual window.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _cell_kernel(x_ref, h_ref, wx_ref, wh_ref, b_ref, o_ref):
+    x = x_ref[...]  # [1, F]
+    h = h_ref[...]  # [1, H]
+    wx = wx_ref[...]  # [F, 3H]
+    wh = wh_ref[...]  # [H, 3H]
+    b = b_ref[...]  # [3H]
+    hidden = h.shape[-1]
+    gx = jnp.dot(x, wx, preferred_element_type=jnp.float32) + b[None, :]
+    gh = jnp.dot(h, wh, preferred_element_type=jnp.float32)
+    r = jax.nn.sigmoid(gx[:, :hidden] + gh[:, :hidden])
+    z = jax.nn.sigmoid(gx[:, hidden : 2 * hidden] + gh[:, hidden : 2 * hidden])
+    n = jnp.tanh(gx[:, 2 * hidden :] + r * gh[:, 2 * hidden :])
+    o_ref[...] = ((1.0 - z) * n + z * h).astype(o_ref.dtype)
+
+
+@jax.jit
+def gru_cell(x, h, wx, wh, b):
+    """One GRU step. x: [F], h: [H] → [H]. Weights as in ref.gru_cell_ref."""
+    f = x.shape[0]
+    hidden = h.shape[0]
+    out = pl.pallas_call(
+        _cell_kernel,
+        out_shape=jax.ShapeDtypeStruct((1, hidden), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(
+        x.reshape(1, f),
+        h.reshape(1, hidden),
+        wx,
+        wh,
+        b,
+    )
+    return out[0]
+
+
+@functools.partial(jax.jit, static_argnames=())
+def gru_sequence(window, wx, wh, b, wo, bo):
+    """Scan the Pallas cell over a [K, F] window; dense head → scalar."""
+    hidden = wh.shape[0]
+    h0 = jnp.zeros((hidden,), jnp.float32)
+
+    def step(h, x_t):
+        return gru_cell(x_t, h, wx, wh, b), None
+
+    h, _ = jax.lax.scan(step, h0, window)
+    return h @ wo + bo

@@ -1,0 +1,78 @@
+"""L1 Pallas kernel: tiled matmul with fused bias + activation.
+
+This is the compute hot-spot of the executable model: every convolution is
+lowered to im2col (L2, jnp) followed by this GEMM kernel, so the Pallas
+kernel sits on the path of every conv block artifact.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid tiles M×N output
+blocks; each program loads an (bm × K) LHS stripe and (K × bn) RHS stripe
+into VMEM-like block memory and issues one MXU-shaped `dot`. On real TPU
+hardware the same BlockSpec schedule double-buffers HBM→VMEM; under
+`interpret=True` (mandatory on this CPU-only PJRT build) the schedule runs
+as a grid loop with identical numerics.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default block shape: multiples of the 128×128 MXU tile are ideal on TPU;
+# the executable model's GEMMs are small, so blocks are modest.
+BM, BN = 128, 128
+
+
+def _kernel(a_ref, b_ref, bias_ref, o_ref, *, act: str, alpha: float):
+    a = a_ref[...]
+    b = b_ref[...]
+    acc = jnp.dot(a, b, preferred_element_type=jnp.float32)
+    acc = acc + bias_ref[...][None, :]
+    if act == "leaky":
+        acc = jnp.where(acc >= 0, acc, alpha * acc)
+    elif act == "relu":
+        acc = jnp.maximum(acc, 0.0)
+    elif act != "linear":
+        raise ValueError(f"unknown act {act}")
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+@functools.partial(jax.jit, static_argnames=("act", "alpha", "bm", "bn"))
+def matmul_bias_act(a, b, bias, act="linear", alpha=0.1, bm=BM, bn=BN):
+    """act(a @ b + bias) with a Pallas-tiled GEMM.
+
+    a: [M, K] f32; b: [K, N] f32; bias: [N] f32 → [M, N] f32.
+    Shapes are padded up to block multiples and sliced back, so any size
+    works; K is kept whole per block (the model's K ≤ 1152 fits VMEM).
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"K mismatch {k} vs {k2}"
+    assert bias.shape == (n,)
+    mp, np_ = _ceil_to(m, bm), _ceil_to(n, bn)
+    a_p = jnp.pad(a, ((0, mp - m), (0, 0)))
+    b_p = jnp.pad(b, ((0, 0), (0, np_ - n)))
+    bias_p = jnp.pad(bias, (0, np_ - n))
+    grid = (mp // bm, np_ // bn)
+    out = pl.pallas_call(
+        functools.partial(_kernel, act=act, alpha=alpha),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(a_p, b_p, bias_p)
+    return out[:m, :n]
+
+
+def vmem_bytes(bm: int, bn: int, k: int, dtype_bytes: int = 4) -> int:
+    """Estimated VMEM footprint per program (perf analysis, DESIGN.md §Perf)."""
+    return dtype_bytes * (bm * k + k * bn + bn + bm * bn)

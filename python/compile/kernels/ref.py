@@ -1,0 +1,106 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 correctness).
+
+Every kernel in this package must match its oracle here to float32
+tolerance under pytest (the CORE correctness signal of the build path).
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def leaky_relu(x, alpha=0.1):
+    """YOLO's leaky ReLU."""
+    return jnp.where(x >= 0, x, alpha * x)
+
+
+def matmul_bias_act_ref(a, b, bias, act="linear", alpha=0.1):
+    """C = act(A @ B + bias). a: [M, K], b: [K, N], bias: [N]."""
+    c = a @ b + bias[None, :]
+    if act == "leaky":
+        return leaky_relu(c, alpha)
+    if act == "relu":
+        return jnp.maximum(c, 0.0)
+    if act == "linear":
+        return c
+    raise ValueError(f"unknown act {act}")
+
+
+def conv2d_ref(x, w, b, stride=1, pad=1, act="leaky"):
+    """NCHW conv oracle via lax.conv_general_dilated.
+
+    x: [N, C, H, W]; w: [O, C, kh, kw]; b: [O].
+    """
+    y = jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding=[(pad, pad), (pad, pad)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    y = y + b[None, :, None, None]
+    if act == "leaky":
+        return leaky_relu(y)
+    if act == "relu":
+        return jnp.maximum(y, 0.0)
+    return y
+
+
+def maxpool2x2_ref(x):
+    """2x2/2 max pool, NCHW."""
+    return jax.lax.reduce_window(
+        x,
+        -jnp.inf,
+        jax.lax.max,
+        window_dimensions=(1, 1, 2, 2),
+        window_strides=(1, 1, 2, 2),
+        padding="VALID",
+    )
+
+
+def im2col(x, kh, kw, stride=1, pad=1):
+    """Unfold NCHW x into [N*OH*OW, C*kh*kw] patches (GEMM lowering of conv).
+
+    Column order matches w.reshape(O, C*kh*kw).T - i.e. (C, kh, kw) row-major.
+    """
+    n, c, h, w = x.shape
+    xp = jnp.pad(x, ((0, 0), (0, 0), (pad, pad), (pad, pad)))
+    oh = (h + 2 * pad - kh) // stride + 1
+    ow = (w + 2 * pad - kw) // stride + 1
+    patches = []
+    for i in range(kh):
+        for j in range(kw):
+            patches.append(
+                jax.lax.slice(
+                    xp,
+                    (0, 0, i, j),
+                    (n, c, i + (oh - 1) * stride + 1, j + (ow - 1) * stride + 1),
+                    (1, 1, stride, stride),
+                )
+            )  # [N, C, OH, OW]
+    # [kh*kw, N, C, OH, OW] -> [N, OH, OW, C, kh*kw] -> [N*OH*OW, C*kh*kw]
+    stack = jnp.stack(patches, axis=0)
+    stack = stack.transpose(1, 3, 4, 2, 0)
+    return stack.reshape(n * oh * ow, c * kh * kw), (n, oh, ow)
+
+
+def gru_cell_ref(x, h, wx, wh, b):
+    """Standard GRU cell.
+
+    x: [F], h: [H], wx: [F, 3H], wh: [H, 3H], b: [3H].
+    Gate order: reset (r), update (z), candidate (n).
+    """
+    hidden = h.shape[-1]
+    gx = x @ wx + b
+    gh = h @ wh
+    r = jax.nn.sigmoid(gx[:hidden] + gh[:hidden])
+    z = jax.nn.sigmoid(gx[hidden : 2 * hidden] + gh[hidden : 2 * hidden])
+    n = jnp.tanh(gx[2 * hidden :] + r * gh[2 * hidden :])
+    return (1.0 - z) * n + z * h
+
+
+def gru_seq_ref(window, wx, wh, b, wo, bo):
+    """Run the GRU over a [K, F] window, then a dense head -> scalar."""
+    h = jnp.zeros(wh.shape[0], window.dtype)
+    for t in range(window.shape[0]):
+        h = gru_cell_ref(window[t], h, wx, wh, b)
+    return h @ wo + bo

@@ -1,0 +1,187 @@
+"""L2: the executable model (JAX forward functions calling the L1 Pallas
+kernels) and the GRU runtime corrector.
+
+The conv-block graph here MUST stay in sync with the rust zoo's
+`tiny_exec()` (rust/src/graph/zoo.rs): `aot.py` exports one HLO artifact
+per operator below and the rust runtime executes them per the partition
+plan. Weights are deterministic (seeded) and baked into the artifacts as
+constants, so the rust side only ever passes activations.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import conv2d as k_conv
+from .kernels import gru as k_gru
+from .kernels import ref as k_ref
+
+# ---------------------------------------------------------------------------
+# tiny-exec: the executable conv net (input 1x3x64x64, see zoo::tiny_exec)
+# ---------------------------------------------------------------------------
+
+INPUT_SHAPE = (1, 3, 64, 64)
+
+# (name, kind, params) in topological order; must mirror rust zoo.
+TINY_EXEC_OPS = [
+    ("conv1", "conv", dict(out_c=8, k=3, stride=1, pad=1, act="leaky")),
+    ("pool1", "pool", {}),
+    ("conv2", "conv", dict(out_c=16, k=3, stride=1, pad=1, act="leaky")),
+    ("pool2", "pool", {}),
+    ("conv3", "conv", dict(out_c=32, k=3, stride=1, pad=1, act="leaky")),
+    ("pool3", "pool", {}),
+    ("conv4", "conv", dict(out_c=64, k=3, stride=1, pad=1, act="leaky")),
+    ("conv5", "conv", dict(out_c=20, k=1, stride=1, pad=0, act="linear")),
+]
+
+
+def tiny_exec_params(seed: int = 0):
+    """Deterministic He-style init for every conv op."""
+    key = jax.random.PRNGKey(seed)
+    params = {}
+    in_c = INPUT_SHAPE[1]
+    for name, kind, p in TINY_EXEC_OPS:
+        if kind != "conv":
+            continue
+        key, kw, kb = jax.random.split(key, 3)
+        fan_in = in_c * p["k"] * p["k"]
+        w = jax.random.normal(kw, (p["out_c"], in_c, p["k"], p["k"]), jnp.float32)
+        w = w * jnp.sqrt(2.0 / fan_in)
+        b = 0.01 * jax.random.normal(kb, (p["out_c"],), jnp.float32)
+        params[name] = (w, b)
+        in_c = p["out_c"]
+    return params
+
+
+def op_forward(name: str, params, x):
+    """Forward one named operator (artifact granularity)."""
+    for n, kind, p in TINY_EXEC_OPS:
+        if n != name:
+            continue
+        if kind == "conv":
+            w, b = params[name]
+            return k_conv.conv2d(x, w, b, stride=p["stride"], pad=p["pad"], act=p["act"])
+        return k_conv.maxpool2x2(x)
+    raise KeyError(f"unknown op {name}")
+
+
+def op_shapes(params):
+    """Input/output shape per op, in topo order (manifest generation)."""
+    x = jnp.zeros(INPUT_SHAPE, jnp.float32)
+    shapes = []
+    for name, _, _ in TINY_EXEC_OPS:
+        in_shape = x.shape
+        x = op_forward(name, params, x)
+        shapes.append((name, in_shape, x.shape))
+    return shapes
+
+
+def tiny_exec_forward(params, x):
+    """Full model: chained ops (quickstart artifact + validation)."""
+    for name, _, _ in TINY_EXEC_OPS:
+        x = op_forward(name, params, x)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# GRU corrector (profiler runtime stage)
+# ---------------------------------------------------------------------------
+
+GRU_WINDOW = 8     # must match profiler::corrector usage in rust
+GRU_IN_FEATURES = 4  # must match corrector::GRU_IN_FEATURES
+GRU_HIDDEN = 16
+
+
+def gru_init(seed: int = 1):
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = 1.0 / jnp.sqrt(GRU_HIDDEN)
+    return {
+        "wx": s * jax.random.normal(k1, (GRU_IN_FEATURES, 3 * GRU_HIDDEN), jnp.float32),
+        "wh": s * jax.random.normal(k2, (GRU_HIDDEN, 3 * GRU_HIDDEN), jnp.float32),
+        "b": jnp.zeros((3 * GRU_HIDDEN,), jnp.float32),
+        "wo": s * jax.random.normal(k3, (GRU_HIDDEN,), jnp.float32),
+        "bo": 0.0 * jax.random.normal(k4, ()),
+    }
+
+
+def gru_predict(params, window):
+    """Predicted next log-residual from a [K, F] residual window."""
+    return k_gru.gru_sequence(
+        window, params["wx"], params["wh"], params["b"], params["wo"], params["bo"]
+    )
+
+
+# --- offline training on synthetic drift traces -----------------------------
+# The simulator's hidden drift is an OU process on the log factor plus
+# bursty background; we train the GRU on exactly that family (the
+# real-system analogue: traces recorded on the device fleet).
+
+
+def _gen_traces(key, n_traces: int, length: int, theta=0.15, sigma=0.10, noise=0.05):
+    """OU log-residual traces + synthetic monitor features. [T, L, F]."""
+    def one(key):
+        k1, k2, k3 = jax.random.split(key, 3)
+        dt = 0.2
+        eps = jax.random.normal(k1, (length,)) * sigma * jnp.sqrt(dt)
+
+        def step(x, e):
+            x = x + (-theta * x) * dt + e
+            return x, x
+
+        _, xs = jax.lax.scan(step, 0.0, eps)
+        obs = xs + noise * jax.random.normal(k2, (length,))
+        util = 0.4 + 0.1 * jax.random.normal(k3, (length,))
+        feats = jnp.stack(
+            [obs, util, 0.1 * jnp.ones_like(obs), 0.45 * jnp.ones_like(obs)], axis=-1
+        )
+        return feats, xs
+
+    keys = jax.random.split(key, n_traces)
+    feats, truth = jax.vmap(one)(keys)
+    return feats, truth
+
+
+def gru_train(seed: int = 2, n_traces: int = 96, length: int = 48,
+              steps: int = 300, lr: float = 1e-2):
+    """Fit the GRU to predict the next true log-residual from the window.
+
+    Optimized with Adam (plain SGD underfits the gated recurrence badly).
+    """
+    params = gru_init(seed)
+    key = jax.random.PRNGKey(seed + 100)
+    feats, truth = _gen_traces(key, n_traces, length, sigma=0.16)
+
+    # windows: [B, K, F] -> target next true residual [B]
+    xs, ys = [], []
+    for t in range(GRU_WINDOW, length - 1):
+        xs.append(feats[:, t - GRU_WINDOW : t, :])
+        ys.append(truth[:, t])
+    x = jnp.concatenate(xs, axis=0)
+    y = jnp.concatenate(ys, axis=0)
+
+    # NOTE: training differentiates the pure-jnp reference (pallas_call has
+    # no VJP under interpret mode); pytest pins the Pallas cell to the same
+    # math, and the exported artifact uses the Pallas path.
+    def loss_fn(p):
+        pred = jax.vmap(
+            lambda w: k_ref.gru_seq_ref(w, p["wx"], p["wh"], p["b"], p["wo"], p["bo"])
+        )(x)
+        return jnp.mean((pred - y) ** 2)
+
+    grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+    # Adam
+    m = jax.tree.map(jnp.zeros_like, params)
+    v = jax.tree.map(jnp.zeros_like, params)
+    b1, b2, eps = 0.9, 0.999, 1e-8
+    losses = []
+    for t in range(1, steps + 1):
+        l, g = grad_fn(params)
+        losses.append(float(l))
+        m = jax.tree.map(lambda a, b: b1 * a + (1 - b1) * b, m, g)
+        v = jax.tree.map(lambda a, b: b2 * a + (1 - b2) * b * b, v, g)
+        mhat = jax.tree.map(lambda a: a / (1 - b1**t), m)
+        vhat = jax.tree.map(lambda a: a / (1 - b2**t), v)
+        params = jax.tree.map(
+            lambda p, mm, vv: p - lr * mm / (jnp.sqrt(vv) + eps), params, mhat, vhat
+        )
+    return params, losses

@@ -1,0 +1,61 @@
+"""AOT export tests: HLO text artifacts are produced, well-formed, and the
+manifest is consistent. Uses a tmpdir and a tiny GRU training budget."""
+
+import os
+
+import pytest
+
+from compile import aot, model
+
+
+@pytest.fixture(scope="module")
+def exported(tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("artifacts"))
+    aot.export(out, gru_steps=3, verbose=False)
+    return out
+
+
+def test_all_artifacts_exist(exported):
+    names = [f"tiny_exec_{n}.hlo.txt" for n, _, _ in model.TINY_EXEC_OPS]
+    names += ["tiny_exec_full.hlo.txt", "gru.hlo.txt", "manifest.txt"]
+    for n in names:
+        p = os.path.join(exported, n)
+        assert os.path.exists(p), n
+        assert os.path.getsize(p) > 0, n
+
+
+def test_hlo_text_wellformed(exported):
+    for n in os.listdir(exported):
+        if not n.endswith(".hlo.txt"):
+            continue
+        text = open(os.path.join(exported, n)).read()
+        assert "HloModule" in text, n
+        assert "ENTRY" in text, n
+
+
+def test_manifest_consistent(exported):
+    lines = [
+        l
+        for l in open(os.path.join(exported, "manifest.txt")).read().splitlines()
+        if l and not l.startswith("#")
+    ]
+    assert len(lines) == len(model.TINY_EXEC_OPS) + 2  # + full + gru
+    for line in lines:
+        name, fname, in_s, out_s = line.split()
+        assert os.path.exists(os.path.join(exported, fname)), fname
+        assert all(p.isdigit() for p in in_s.split("x"))
+        assert all(p.isdigit() for p in out_s.split("x"))
+
+
+def test_manifest_shapes_match_model(exported):
+    params = model.tiny_exec_params()
+    shapes = {f"tiny-exec/{n}": (i, o) for n, i, o in model.op_shapes(params)}
+    for line in open(os.path.join(exported, "manifest.txt")).read().splitlines():
+        if not line or line.startswith("#") or not line.startswith("tiny-exec/"):
+            continue
+        name, _, in_s, out_s = line.split()
+        if name == "tiny-exec/full":
+            continue
+        want_in, want_out = shapes[name]
+        assert in_s == "x".join(map(str, want_in))
+        assert out_s == "x".join(map(str, want_out))

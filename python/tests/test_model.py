@@ -1,0 +1,67 @@
+"""L2 model tests: shapes stay in sync with the rust zoo; full model =
+chained ops; GRU training improves loss."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+
+jax.config.update("jax_platform_name", "cpu")
+
+# mirror of rust/src/graph/zoo.rs::tiny_exec expected shapes
+EXPECTED_SHAPES = {
+    "conv1": ((1, 3, 64, 64), (1, 8, 64, 64)),
+    "pool1": ((1, 8, 64, 64), (1, 8, 32, 32)),
+    "conv2": ((1, 8, 32, 32), (1, 16, 32, 32)),
+    "pool2": ((1, 16, 32, 32), (1, 16, 16, 16)),
+    "conv3": ((1, 16, 16, 16), (1, 32, 16, 16)),
+    "pool3": ((1, 32, 16, 16), (1, 32, 8, 8)),
+    "conv4": ((1, 32, 8, 8), (1, 64, 8, 8)),
+    "conv5": ((1, 64, 8, 8), (1, 20, 8, 8)),
+}
+
+
+def test_op_shapes_match_rust_zoo():
+    params = model.tiny_exec_params()
+    for name, in_shape, out_shape in model.op_shapes(params):
+        want_in, want_out = EXPECTED_SHAPES[name]
+        assert in_shape == want_in, name
+        assert out_shape == want_out, name
+
+
+def test_full_equals_chained_ops():
+    params = model.tiny_exec_params()
+    x = jax.random.normal(jax.random.PRNGKey(3), model.INPUT_SHAPE, jnp.float32)
+    full = model.tiny_exec_forward(params, x)
+    y = x
+    for name, _, _ in model.TINY_EXEC_OPS:
+        y = model.op_forward(name, params, y)
+    np.testing.assert_allclose(full, y, rtol=1e-6)
+
+
+def test_params_deterministic():
+    a = model.tiny_exec_params()
+    b = model.tiny_exec_params()
+    for k in a:
+        np.testing.assert_array_equal(a[k][0], b[k][0])
+
+
+def test_output_finite_and_nontrivial():
+    params = model.tiny_exec_params()
+    x = jax.random.normal(jax.random.PRNGKey(5), model.INPUT_SHAPE, jnp.float32)
+    y = model.tiny_exec_forward(params, x)
+    assert bool(jnp.all(jnp.isfinite(y)))
+    assert float(jnp.std(y)) > 1e-4
+
+
+def test_gru_training_reduces_loss():
+    _, losses = model.gru_train(steps=60, n_traces=16, length=24)
+    assert losses[-1] < losses[0] * 0.9, (losses[0], losses[-1])
+
+
+def test_gru_predict_shape():
+    p = model.gru_init()
+    w = jnp.zeros((model.GRU_WINDOW, model.GRU_IN_FEATURES), jnp.float32)
+    out = model.gru_predict(p, w)
+    assert out.shape == ()

@@ -1,0 +1,31 @@
+//! Bench A5: concurrency scaling — 1–4 concurrent app streams per policy.
+
+use adaoper::experiments::ablations;
+use adaoper::profiler::calibrate::CalibConfig;
+use adaoper::profiler::gbdt::GbdtParams;
+
+fn main() {
+    let quick = std::env::var("ADAOPER_BENCH_QUICK").is_ok();
+    let calib = CalibConfig {
+        samples: if quick { 2000 } else { 5000 },
+        seed: 3,
+        gbdt: GbdtParams { trees: if quick { 60 } else { 120 }, ..Default::default() },
+    };
+    println!("== A5: concurrent app streams (open loop, moderate) ==");
+    let rows = ablations::concurrency_scaling(&calib, 7, if quick { 4.0 } else { 8.0 }).unwrap();
+    println!(
+        "{:<12} {:>8} {:>12} {:>10} {:>12} {:>8}",
+        "policy", "streams", "req/s", "p90 ms", "mJ/inf", "miss%"
+    );
+    for r in rows {
+        println!(
+            "{:<12} {:>8} {:>12.2} {:>10.1} {:>12.1} {:>8.1}",
+            r.policy.name(),
+            r.streams,
+            r.throughput_hz,
+            r.p95_ms,
+            r.mj_per_inf,
+            r.miss_rate * 100.0
+        );
+    }
+}

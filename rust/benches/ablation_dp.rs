@@ -1,0 +1,39 @@
+//! Bench A2/A6: DP optimality vs exhaustive + decision-time microbench
+//! across the zoo and pruning resolutions.
+
+use adaoper::experiments::ablations;
+use adaoper::util::bench::{Bencher, black_box, print_table};
+use adaoper::graph::zoo;
+use adaoper::partition::dp::DpPartitioner;
+use adaoper::partition::plan::Objective;
+use adaoper::partition::Partitioner;
+use adaoper::soc::device::{Device, DeviceConfig};
+use adaoper::workload::WorkloadCondition;
+
+fn main() {
+    println!("== A2: optimality vs exhaustive (chain-8) + solve times ==");
+    let rows = ablations::dp_comparison(5).unwrap();
+    println!("{:<22} {:>14} {:>10} {:>12}", "case", "score", "rel", "solve µs");
+    for r in &rows {
+        println!("{:<22} {:>14.6} {:>10.4} {:>12.1}", r.case, r.score, r.relative, r.solve_us);
+    }
+
+    println!("\n== A6: DP solve-time microbench (oracle model, per graph) ==");
+    let mut d = Device::new(DeviceConfig {
+        noise_sigma: 0.0,
+        drift_sigma: 0.0,
+        ..DeviceConfig::snapdragon_855()
+    });
+    d.apply_condition(&WorkloadCondition::moderate().spec);
+    let snap = d.snapshot();
+    let b = Bencher::default();
+    let mut results = Vec::new();
+    for name in zoo::names() {
+        let g = zoo::by_name(name).unwrap();
+        let dp = DpPartitioner::new(Objective::MinEdp);
+        results.push(b.run(&format!("dp-solve/{name}"), || {
+            black_box(dp.partition(&g, &d, &snap).unwrap());
+        }));
+    }
+    print_table("DP full-solve wall time", &results);
+}

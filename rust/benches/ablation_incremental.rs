@@ -1,0 +1,13 @@
+//! Bench A3: incremental (windowed) vs full repartitioning — decision time
+//! and plan quality after a moderate→high condition switch.
+
+use adaoper::experiments::ablations;
+
+fn main() {
+    println!("== A3: incremental vs full repartition (stale moderate plan, high device) ==");
+    let rows = ablations::incremental_vs_full(&[2, 4, 8, 16]).unwrap();
+    println!("{:<18} {:>14} {:>14}", "scheme", "decision µs", "EDP vs full");
+    for r in rows {
+        println!("{:<18} {:>14.1} {:>14.4}", r.scheme, r.decision_us, r.edp_vs_full);
+    }
+}

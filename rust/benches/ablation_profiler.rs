@@ -1,0 +1,40 @@
+//! Bench A1: profiler accuracy under dynamic conditions — static GBDT vs
+//! GBDT+EWMA vs GBDT+GRU (real AOT artifact when built).
+
+use std::path::PathBuf;
+
+use adaoper::experiments::ablations;
+use adaoper::profiler::calibrate::CalibConfig;
+use adaoper::profiler::corrector::{Corrector, GruCorrector};
+use adaoper::profiler::gbdt::GbdtParams;
+use adaoper::runtime::session::gru_infer_fn;
+
+fn main() {
+    let quick = std::env::var("ADAOPER_BENCH_QUICK").is_ok();
+    let calib = CalibConfig {
+        samples: if quick { 2000 } else { 5000 },
+        seed: 3,
+        gbdt: GbdtParams { trees: if quick { 60 } else { 120 }, ..Default::default() },
+    };
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let gru: Option<Box<dyn FnMut() -> Box<dyn Corrector>>> =
+        if dir.join("manifest.txt").exists() {
+            Some(Box::new(move || {
+                let infer = gru_infer_fn(&dir, 8).expect("gru artifact");
+                Box::new(GruCorrector::new(8, infer))
+            }))
+        } else {
+            eprintln!("(artifacts missing — GRU arm skipped)");
+            None
+        };
+    let rows =
+        ablations::profiler_accuracy(&calib, if quick { 2.0 } else { 4.0 }, 11, gru).unwrap();
+    println!("== A1: profiler accuracy under idle→moderate→high→moderate ==");
+    println!("{:<12} {:>14} {:>14} {:>8}", "arm", "energy MAPE", "latency MAPE", "obs");
+    for r in rows {
+        println!(
+            "{:<12} {:>13.1}% {:>13.1}% {:>8}",
+            r.arm, r.energy_mape, r.latency_mape, r.observations
+        );
+    }
+}

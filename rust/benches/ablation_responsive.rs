@@ -1,0 +1,31 @@
+//! Bench A4: responsiveness across a moderate→high switch — post-switch
+//! latency overshoot per policy.
+
+use adaoper::experiments::ablations;
+use adaoper::profiler::calibrate::CalibConfig;
+use adaoper::profiler::gbdt::GbdtParams;
+
+fn main() {
+    let quick = std::env::var("ADAOPER_BENCH_QUICK").is_ok();
+    let calib = CalibConfig {
+        samples: if quick { 2000 } else { 5000 },
+        seed: 3,
+        gbdt: GbdtParams { trees: if quick { 60 } else { 120 }, ..Default::default() },
+    };
+    println!("== A4: adaptation to a moderate→high condition switch ==");
+    let rows = ablations::responsiveness(&calib, 7).unwrap();
+    println!(
+        "{:<12} {:>15} {:>12} {:>10} {:>8}",
+        "policy", "post-switch ms", "steady ms", "overshoot", "repart"
+    );
+    for r in rows {
+        println!(
+            "{:<12} {:>15.2} {:>12.2} {:>10.3} {:>8}",
+            r.policy.name(),
+            r.post_switch_ms,
+            r.steady_high_ms,
+            r.overshoot,
+            r.repartitions
+        );
+    }
+}

@@ -1,0 +1,26 @@
+//! Bench: regenerate the paper's Figure 2 (both panels).
+//! `cargo bench --bench fig2`; set ADAOPER_BENCH_QUICK=1 for a fast pass.
+
+use adaoper::experiments::fig2;
+use adaoper::profiler::calibrate::CalibConfig;
+use adaoper::profiler::gbdt::GbdtParams;
+
+fn main() {
+    let quick = std::env::var("ADAOPER_BENCH_QUICK").is_ok();
+    let cfg = fig2::Fig2Config {
+        model: "yolov2".into(),
+        n_requests: if quick { 15 } else { 40 },
+        seed: 7,
+        calib: if quick {
+            CalibConfig {
+                samples: 2500,
+                seed: 42,
+                gbdt: GbdtParams { trees: 80, ..Default::default() },
+            }
+        } else {
+            CalibConfig::default()
+        },
+    };
+    let rows = fig2::run(&cfg).expect("fig2 run");
+    print!("{}", fig2::render(&rows));
+}

@@ -1,0 +1,122 @@
+//! Minimal argument parser: `--key value`, `--flag`, and positionals.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw argv (excluding the program name). `bool_flags` lists
+    /// options that take no value.
+    pub fn parse(argv: &[String], bool_flags: &[&str]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                if bool_flags.contains(&name) {
+                    out.flags.push(name.to_string());
+                } else {
+                    let v = argv
+                        .get(i + 1)
+                        .ok_or_else(|| anyhow!("--{name} needs a value"))?;
+                    if v.starts_with("--") {
+                        bail!("--{name} needs a value, got `{v}`");
+                    }
+                    out.options.insert(name.to_string(), v.clone());
+                    i += 1;
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{name}: `{v}` is not a number")),
+        }
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{name}: `{v}` is not an integer")),
+        }
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{name}: `{v}` is not an integer")),
+        }
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(str::to_string).collect()
+    }
+
+    #[test]
+    fn parses_mixed() {
+        let a = Args::parse(&argv("serve --policy codl --seed 9 --verbose x"), &["verbose"])
+            .unwrap();
+        assert_eq!(a.positional, vec!["serve", "x"]);
+        assert_eq!(a.get("policy"), Some("codl"));
+        assert_eq!(a.u64_or("seed", 0).unwrap(), 9);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(Args::parse(&argv("--policy"), &[]).is_err());
+        assert!(Args::parse(&argv("--policy --seed 3"), &[]).is_err());
+    }
+
+    #[test]
+    fn bad_number_errors() {
+        let a = Args::parse(&argv("--seed abc"), &[]).unwrap();
+        assert!(a.u64_or("seed", 0).is_err());
+        assert!(a.f64_or("seed", 0.0).is_err());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(&argv(""), &[]).unwrap();
+        assert_eq!(a.f64_or("rate", 5.0).unwrap(), 5.0);
+        assert_eq!(a.str_or("policy", "adaoper"), "adaoper");
+    }
+}

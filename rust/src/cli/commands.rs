@@ -1,0 +1,330 @@
+//! `adaoper` subcommands.
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use crate::config::schema::{AppConfig, ConditionKind, PolicyKind};
+use crate::coordinator::{Engine, EngineConfig, StreamSpec};
+use crate::experiments::{ablations, fig2};
+use crate::graph::zoo;
+use crate::partition::baselines::by_policy;
+use crate::partition::plan::Objective;
+use crate::profiler::calibrate::{self, CalibConfig};
+use crate::profiler::gbdt::GbdtParams;
+use crate::soc::device::{Device, DeviceConfig};
+use crate::workload::{Arrival, WorkloadCondition};
+
+use super::args::Args;
+
+pub const USAGE: &str = "\
+adaoper — energy-efficient concurrent DNN inference (AdaOper, MobiSys'24)
+
+USAGE: adaoper <command> [options]
+
+COMMANDS
+  zoo [model]                 list zoo models / describe one
+  partition --model M         plan a partition and print per-op placements
+      [--policy P] [--condition C] [--objective O]
+  serve                       run the concurrent serving engine
+      [--config F] [--models a,b] [--policy P] [--condition C]
+      [--rate HZ] [--duration S] [--slo-ms MS] [--seed N]
+  fig2 [--requests N]         reproduce the paper's Figure 2
+  calibrate [--samples N]     run the offline calibration sweep and report
+                              held-out accuracy
+  ablation <a1|a2|a3|a4|a5>   run one ablation experiment
+  help                        this text
+
+COMMON OPTIONS
+  --policy   adaoper|codl|mace-gpu|all-cpu|greedy   (default adaoper)
+  --condition idle|moderate|high                    (default moderate)
+  --seed N                                          (default 7)
+  --quick                     smaller calibration budget (faster, rougher)
+";
+
+fn calib_of(args: &Args) -> Result<CalibConfig> {
+    Ok(if args.flag("quick") {
+        CalibConfig {
+            samples: 2000,
+            seed: args.u64_or("seed", 7)?,
+            gbdt: GbdtParams {
+                trees: 60,
+                ..Default::default()
+            },
+        }
+    } else {
+        CalibConfig {
+            seed: args.u64_or("seed", 7)?,
+            ..CalibConfig::default()
+        }
+    })
+}
+
+/// Entry point used by `main.rs`.
+pub fn run(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv, &["quick", "verbose", "oracle"])?;
+    if args.flag("verbose") {
+        crate::util::logger::set_level(crate::util::logger::Level::Debug);
+    }
+    let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
+    match cmd {
+        "zoo" => cmd_zoo(&args),
+        "partition" => cmd_partition(&args),
+        "serve" => cmd_serve(&args),
+        "fig2" => cmd_fig2(&args),
+        "calibrate" => cmd_calibrate(&args),
+        "ablation" => cmd_ablation(&args),
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command `{other}`\n\n{USAGE}"),
+    }
+}
+
+fn cmd_zoo(args: &Args) -> Result<()> {
+    match args.positional.get(1) {
+        None => {
+            println!("{:<14} {:>7} {:>10} {:>12}", "model", "ops", "GFLOPs", "weights MB");
+            for name in zoo::names() {
+                let g = zoo::by_name(name).unwrap();
+                println!(
+                    "{:<14} {:>7} {:>10.2} {:>12.1}",
+                    name,
+                    g.num_ops(),
+                    g.total_flops() as f64 / 1e9,
+                    g.total_weight_bytes() as f64 / 1e6
+                );
+            }
+        }
+        Some(name) => match zoo::by_name(name) {
+            Some(g) => print!("{}", g.describe()),
+            None => bail!("unknown model `{name}` (see `adaoper zoo`)"),
+        },
+    }
+    Ok(())
+}
+
+fn cmd_partition(args: &Args) -> Result<()> {
+    let model = args.str_or("model", "yolov2");
+    let g = zoo::by_name(&model).ok_or_else(|| anyhow::anyhow!("unknown model {model}"))?;
+    let policy = PolicyKind::parse(&args.str_or("policy", "adaoper"))?;
+    let condition = ConditionKind::parse(&args.str_or("condition", "moderate"))?;
+    let objective = match args.str_or("objective", "min-edp").as_str() {
+        "min-edp" => Objective::MinEdp,
+        "min-latency" => Objective::MinLatency,
+        o => {
+            if let Some(ms) = o.strip_prefix("slo:") {
+                Objective::MinEnergyUnderSlo {
+                    slo_s: ms.parse::<f64>()? / 1e3,
+                }
+            } else {
+                bail!("unknown objective `{o}` (min-edp|min-latency|slo:<ms>)")
+            }
+        }
+    };
+    let mut device = Device::new(DeviceConfig::snapdragon_855());
+    device.apply_condition(&WorkloadCondition::by_name(condition.name()).unwrap().spec);
+    let snap = device.snapshot();
+
+    let partitioner = by_policy(policy, objective);
+    let plan = if args.flag("oracle") {
+        partitioner.partition(&g, &device, &snap)?
+    } else {
+        println!("calibrating profiler …");
+        let offline = calibrate::calibrate(&calib_of(args)?);
+        let prof = crate::profiler::EnergyProfiler::offline_only(offline);
+        partitioner.partition(&g, &prof, &snap)?
+    };
+    println!(
+        "plan for {model} under {} by {} (objective {:?}):",
+        condition.name(),
+        plan.policy,
+        objective
+    );
+    for (op, p) in g.ops.iter().zip(&plan.placements) {
+        println!("  [{:>3}] {:<22} -> {}", op.id, op.name, p);
+    }
+    println!(
+        "predicted: {:.2} ms, {:.2} mJ",
+        plan.predicted.latency_s * 1e3,
+        plan.predicted.energy_j * 1e3
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let mut cfg = AppConfig::load(args.get("config").map(Path::new))?;
+    // CLI overrides
+    if let Some(m) = args.get("models") {
+        cfg.serve.models = m.split(',').map(str::to_string).collect();
+    }
+    if let Some(p) = args.get("policy") {
+        cfg.serve.policy = PolicyKind::parse(p)?;
+    }
+    if let Some(c) = args.get("condition") {
+        cfg.serve.condition = ConditionKind::parse(c)?;
+    }
+    cfg.serve.rate_hz = args.f64_or("rate", cfg.serve.rate_hz)?;
+    cfg.serve.duration_s = args.f64_or("duration", cfg.serve.duration_s)?;
+    cfg.serve.slo_ms = args.f64_or("slo-ms", cfg.serve.slo_ms)?;
+    cfg.serve.seed = args.u64_or("seed", cfg.serve.seed)?;
+
+    let mut engine = Engine::new(EngineConfig {
+        policy: cfg.serve.policy,
+        condition: cfg.serve.condition,
+        duration_s: cfg.serve.duration_s,
+        seed: cfg.serve.seed,
+        window: cfg.partition.window,
+        calib: CalibConfig {
+            samples: cfg.profiler.calib_samples,
+            seed: cfg.serve.seed,
+            gbdt: GbdtParams {
+                trees: cfg.profiler.gbdt_trees,
+                max_depth: cfg.profiler.gbdt_depth,
+                eta: cfg.profiler.gbdt_eta,
+                subsample: cfg.profiler.gbdt_subsample,
+                ..Default::default()
+            },
+        },
+        use_corrector: cfg.profiler.use_gru,
+        ..Default::default()
+    });
+
+    let mut streams = Vec::new();
+    for (i, m) in cfg.serve.models.iter().enumerate() {
+        let g = zoo::by_name(m).ok_or_else(|| anyhow::anyhow!("unknown model {m}"))?;
+        let arrival = Arrival::parse(&cfg.serve.arrival, cfg.serve.rate_hz)
+            .ok_or_else(|| anyhow::anyhow!("unknown arrival {}", cfg.serve.arrival))?;
+        streams.push(StreamSpec::new(i, g, arrival, cfg.serve.slo_ms / 1e3));
+    }
+    println!(
+        "serving {:?} for {:.1}s (policy {}, condition {}) …",
+        cfg.serve.models,
+        cfg.serve.duration_s,
+        cfg.serve.policy.name(),
+        cfg.serve.condition.name()
+    );
+    let report = engine.run(&streams)?;
+    print!("{}", report.pretty());
+    Ok(())
+}
+
+fn cmd_fig2(args: &Args) -> Result<()> {
+    let cfg = fig2::Fig2Config {
+        model: args.str_or("model", "yolov2"),
+        n_requests: args.usize_or("requests", 40)?,
+        seed: args.u64_or("seed", 7)?,
+        calib: calib_of(args)?,
+    };
+    println!("running Figure 2 matrix ({} requests per cell) …", cfg.n_requests);
+    let rows = fig2::run(&cfg)?;
+    print!("{}", fig2::render(&rows));
+    Ok(())
+}
+
+fn cmd_calibrate(args: &Args) -> Result<()> {
+    let mut cfg = calib_of(args)?;
+    cfg.samples = args.usize_or("samples", cfg.samples)?;
+    println!("generating {} calibration samples …", cfg.samples);
+    let samples = calibrate::generate(&cfg);
+    let split = samples.len() * 4 / 5;
+    let model = calibrate::fit(&samples[..split], &cfg.gbdt);
+    for (name, proc) in [("cpu", crate::soc::Proc::Cpu), ("gpu", crate::soc::Proc::Gpu)] {
+        let rows: Vec<&calibrate::Sample> = samples[split..]
+            .iter()
+            .filter(|s| s.proc == proc)
+            .collect();
+        let m = match proc {
+            crate::soc::Proc::Cpu => &model.cpu,
+            crate::soc::Proc::Gpu => &model.gpu,
+        };
+        let pe: Vec<f64> = rows.iter().map(|s| m.energy.predict(&s.features).exp()).collect();
+        let te: Vec<f64> = rows.iter().map(|s| s.energy_j).collect();
+        let pl: Vec<f64> = rows.iter().map(|s| m.latency.predict(&s.features).exp()).collect();
+        let tl: Vec<f64> = rows.iter().map(|s| s.latency_s).collect();
+        println!(
+            "{name}: held-out energy MAPE {:>5.1}%  latency MAPE {:>5.1}%  ({} samples)",
+            crate::util::stats::mape(&pe, &te),
+            crate::util::stats::mape(&pl, &tl),
+            rows.len()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_ablation(args: &Args) -> Result<()> {
+    let which = args
+        .positional
+        .get(1)
+        .map(String::as_str)
+        .unwrap_or("a1");
+    let calib = calib_of(args)?;
+    let seed = args.u64_or("seed", 7)?;
+    match which {
+        "a1" => {
+            let rows = ablations::profiler_accuracy(&calib, 3.0, seed, None)?;
+            println!("{:<12} {:>14} {:>14} {:>8}", "arm", "energy MAPE", "latency MAPE", "n");
+            for r in rows {
+                println!(
+                    "{:<12} {:>13.1}% {:>13.1}% {:>8}",
+                    r.arm, r.energy_mape, r.latency_mape, r.observations
+                );
+            }
+        }
+        "a2" => {
+            let rows = ablations::dp_comparison(seed)?;
+            println!("{:<22} {:>12} {:>10} {:>12}", "case", "score", "rel", "solve µs");
+            for r in rows {
+                println!(
+                    "{:<22} {:>12.6} {:>10.4} {:>12.1}",
+                    r.case, r.score, r.relative, r.solve_us
+                );
+            }
+        }
+        "a3" => {
+            let rows = ablations::incremental_vs_full(&[2, 4, 8, 16])?;
+            println!("{:<18} {:>14} {:>12}", "scheme", "decision µs", "EDP vs full");
+            for r in rows {
+                println!("{:<18} {:>14.1} {:>12.4}", r.scheme, r.decision_us, r.edp_vs_full);
+            }
+        }
+        "a4" => {
+            let rows = ablations::responsiveness(&calib, seed)?;
+            println!(
+                "{:<12} {:>14} {:>14} {:>10} {:>8}",
+                "policy", "post-switch ms", "steady ms", "overshoot", "repart"
+            );
+            for r in rows {
+                println!(
+                    "{:<12} {:>14.2} {:>14.2} {:>10.3} {:>8}",
+                    r.policy.name(),
+                    r.post_switch_ms,
+                    r.steady_high_ms,
+                    r.overshoot,
+                    r.repartitions
+                );
+            }
+        }
+        "a5" => {
+            let rows = ablations::concurrency_scaling(&calib, seed, 6.0)?;
+            println!(
+                "{:<12} {:>8} {:>12} {:>10} {:>12} {:>8}",
+                "policy", "streams", "req/s", "p90 ms", "mJ/inf", "miss%"
+            );
+            for r in rows {
+                println!(
+                    "{:<12} {:>8} {:>12.2} {:>10.1} {:>12.1} {:>8.1}",
+                    r.policy.name(),
+                    r.streams,
+                    r.throughput_hz,
+                    r.p95_ms,
+                    r.mj_per_inf,
+                    r.miss_rate * 100.0
+                );
+            }
+        }
+        other => bail!("unknown ablation `{other}` (a1..a5)"),
+    }
+    Ok(())
+}

@@ -1,0 +1,8 @@
+//! Hand-rolled CLI (no `clap` in the offline crate universe): a tiny
+//! flag parser plus the subcommand implementations behind the `adaoper`
+//! binary.
+
+pub mod args;
+pub mod commands;
+
+pub use args::Args;

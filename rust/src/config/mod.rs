@@ -1,0 +1,9 @@
+//! Configuration system: a minimal TOML-subset parser ([`toml`]) plus the
+//! typed application schema ([`schema`]). Built in-repo because the offline
+//! crate universe has no `serde`/`toml`.
+
+pub mod schema;
+pub mod toml;
+
+pub use schema::AppConfig;
+pub use toml::{parse, Value};

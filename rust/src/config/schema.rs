@@ -1,0 +1,346 @@
+//! Typed application configuration, decoded from the TOML-subset [`Value`]
+//! tree. Every field has a default so an empty file (or no file) yields a
+//! runnable configuration; `adaoper serve --config serve.toml` overrides.
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use super::toml::{self, Value};
+
+/// Which workload condition preset to start the device in.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ConditionKind {
+    Idle,
+    Moderate,
+    High,
+}
+
+impl ConditionKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "idle" => ConditionKind::Idle,
+            "moderate" => ConditionKind::Moderate,
+            "high" => ConditionKind::High,
+            other => bail!("unknown workload condition `{other}` (idle|moderate|high)"),
+        })
+    }
+    pub fn name(&self) -> &'static str {
+        match self {
+            ConditionKind::Idle => "idle",
+            ConditionKind::Moderate => "moderate",
+            ConditionKind::High => "high",
+        }
+    }
+}
+
+/// Partitioning policy selector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PolicyKind {
+    /// AdaOper: energy-aware DP (the paper's contribution).
+    AdaOper,
+    /// CoDL: latency-optimal CPU+GPU co-execution (baseline).
+    Codl,
+    /// MACE-style all-on-GPU (baseline).
+    MaceGpu,
+    /// Everything on CPU (baseline).
+    AllCpu,
+    /// Greedy per-op energy minimizer (ablation baseline).
+    GreedyEnergy,
+}
+
+impl PolicyKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "adaoper" => PolicyKind::AdaOper,
+            "codl" => PolicyKind::Codl,
+            "mace-gpu" | "mace_gpu" | "gpu" => PolicyKind::MaceGpu,
+            "all-cpu" | "all_cpu" | "cpu" => PolicyKind::AllCpu,
+            "greedy" | "greedy-energy" => PolicyKind::GreedyEnergy,
+            other => bail!(
+                "unknown policy `{other}` (adaoper|codl|mace-gpu|all-cpu|greedy)"
+            ),
+        })
+    }
+    pub fn name(&self) -> &'static str {
+        match self {
+            PolicyKind::AdaOper => "adaoper",
+            PolicyKind::Codl => "codl",
+            PolicyKind::MaceGpu => "mace-gpu",
+            PolicyKind::AllCpu => "all-cpu",
+            PolicyKind::GreedyEnergy => "greedy-energy",
+        }
+    }
+    pub fn all() -> [PolicyKind; 5] {
+        [
+            PolicyKind::AdaOper,
+            PolicyKind::Codl,
+            PolicyKind::MaceGpu,
+            PolicyKind::AllCpu,
+            PolicyKind::GreedyEnergy,
+        ]
+    }
+}
+
+/// Serving-engine configuration.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Models served concurrently (zoo names, one stream per entry).
+    pub models: Vec<String>,
+    /// Mean request rate per stream (Hz) for Poisson arrivals; periodic
+    /// streams use it as the frame rate.
+    pub rate_hz: f64,
+    /// `poisson` or `periodic` arrivals.
+    pub arrival: String,
+    /// Per-request latency SLO in milliseconds.
+    pub slo_ms: f64,
+    /// Total simulated duration in seconds.
+    pub duration_s: f64,
+    /// Partition policy.
+    pub policy: PolicyKind,
+    /// Initial device condition.
+    pub condition: ConditionKind,
+    /// Random seed for workload + simulator noise.
+    pub seed: u64,
+    /// Execute real numerics through PJRT artifacts when available.
+    pub execute_artifacts: bool,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            models: vec!["yolov2".to_string()],
+            rate_hz: 10.0,
+            arrival: "poisson".to_string(),
+            slo_ms: 150.0,
+            duration_s: 10.0,
+            policy: PolicyKind::AdaOper,
+            condition: ConditionKind::Moderate,
+            seed: 1,
+            execute_artifacts: false,
+        }
+    }
+}
+
+/// Profiler configuration.
+#[derive(Debug, Clone)]
+pub struct ProfilerConfig {
+    /// GBDT: number of boosting rounds.
+    pub gbdt_trees: usize,
+    /// GBDT: maximum tree depth.
+    pub gbdt_depth: usize,
+    /// GBDT: learning rate (shrinkage).
+    pub gbdt_eta: f64,
+    /// GBDT: per-tree row subsample fraction.
+    pub gbdt_subsample: f64,
+    /// Calibration sweep size (samples).
+    pub calib_samples: usize,
+    /// Residual window length fed to the GRU (must match the exported HLO).
+    pub gru_window: usize,
+    /// Drift threshold (relative) that triggers repartitioning.
+    pub drift_threshold: f64,
+    /// Use the GRU corrector (false → GBDT only, for ablation A1).
+    pub use_gru: bool,
+}
+
+impl Default for ProfilerConfig {
+    fn default() -> Self {
+        ProfilerConfig {
+            gbdt_trees: 120,
+            gbdt_depth: 5,
+            gbdt_eta: 0.1,
+            gbdt_subsample: 0.8,
+            calib_samples: 6000,
+            gru_window: 8,
+            drift_threshold: 0.07,
+            use_gru: true,
+        }
+    }
+}
+
+/// Partitioner configuration.
+#[derive(Debug, Clone)]
+pub struct PartitionConfig {
+    /// `min-edp` or `min-energy-slo`.
+    pub objective: String,
+    /// Latency buckets for the SLO-constrained DP lattice.
+    pub latency_buckets: usize,
+    /// Incremental repartition window (operators).
+    pub window: usize,
+}
+
+impl Default for PartitionConfig {
+    fn default() -> Self {
+        PartitionConfig {
+            objective: "min-edp".to_string(),
+            latency_buckets: 64,
+            window: 8,
+        }
+    }
+}
+
+/// Top-level application configuration.
+#[derive(Debug, Clone, Default)]
+pub struct AppConfig {
+    pub serve: ServeConfig,
+    pub profiler: ProfilerConfig,
+    pub partition: PartitionConfig,
+    /// Directory holding `*.hlo.txt` artifacts.
+    pub artifacts_dir: String,
+}
+
+impl AppConfig {
+    /// Decode from a parsed TOML tree; missing keys fall back to defaults.
+    pub fn from_value(v: &Value) -> Result<AppConfig> {
+        let mut cfg = AppConfig {
+            artifacts_dir: v.str_or("artifacts_dir", "artifacts"),
+            ..AppConfig::default()
+        };
+
+        if let Some(models) = v.get("serve.models").and_then(|m| m.as_array()) {
+            cfg.serve.models = models
+                .iter()
+                .filter_map(|m| m.as_str().map(str::to_string))
+                .collect();
+            if cfg.serve.models.is_empty() {
+                bail!("serve.models must contain at least one model name");
+            }
+        }
+        cfg.serve.rate_hz = v.float_or("serve.rate_hz", cfg.serve.rate_hz);
+        cfg.serve.arrival = v.str_or("serve.arrival", &cfg.serve.arrival);
+        cfg.serve.slo_ms = v.float_or("serve.slo_ms", cfg.serve.slo_ms);
+        cfg.serve.duration_s = v.float_or("serve.duration_s", cfg.serve.duration_s);
+        cfg.serve.policy = PolicyKind::parse(&v.str_or("serve.policy", "adaoper"))?;
+        cfg.serve.condition =
+            ConditionKind::parse(&v.str_or("serve.condition", "moderate"))?;
+        cfg.serve.seed = v.int_or("serve.seed", cfg.serve.seed as i64) as u64;
+        cfg.serve.execute_artifacts =
+            v.bool_or("serve.execute_artifacts", cfg.serve.execute_artifacts);
+        if cfg.serve.rate_hz <= 0.0 {
+            bail!("serve.rate_hz must be > 0");
+        }
+        if cfg.serve.slo_ms <= 0.0 {
+            bail!("serve.slo_ms must be > 0");
+        }
+
+        cfg.profiler.gbdt_trees =
+            v.int_or("profiler.gbdt_trees", cfg.profiler.gbdt_trees as i64) as usize;
+        cfg.profiler.gbdt_depth =
+            v.int_or("profiler.gbdt_depth", cfg.profiler.gbdt_depth as i64) as usize;
+        cfg.profiler.gbdt_eta = v.float_or("profiler.gbdt_eta", cfg.profiler.gbdt_eta);
+        cfg.profiler.gbdt_subsample =
+            v.float_or("profiler.gbdt_subsample", cfg.profiler.gbdt_subsample);
+        cfg.profiler.calib_samples =
+            v.int_or("profiler.calib_samples", cfg.profiler.calib_samples as i64) as usize;
+        cfg.profiler.gru_window =
+            v.int_or("profiler.gru_window", cfg.profiler.gru_window as i64) as usize;
+        cfg.profiler.drift_threshold =
+            v.float_or("profiler.drift_threshold", cfg.profiler.drift_threshold);
+        cfg.profiler.use_gru = v.bool_or("profiler.use_gru", cfg.profiler.use_gru);
+        if !(0.0..=1.0).contains(&cfg.profiler.gbdt_subsample) {
+            bail!("profiler.gbdt_subsample must be in [0, 1]");
+        }
+
+        cfg.partition.objective = v.str_or("partition.objective", &cfg.partition.objective);
+        if cfg.partition.objective != "min-edp" && cfg.partition.objective != "min-energy-slo"
+        {
+            bail!(
+                "partition.objective must be `min-edp` or `min-energy-slo`, got `{}`",
+                cfg.partition.objective
+            );
+        }
+        cfg.partition.latency_buckets =
+            v.int_or("partition.latency_buckets", cfg.partition.latency_buckets as i64)
+                as usize;
+        cfg.partition.window =
+            v.int_or("partition.window", cfg.partition.window as i64) as usize;
+
+        Ok(cfg)
+    }
+
+    /// Parse a config file; a missing path yields defaults.
+    pub fn load(path: Option<&Path>) -> Result<AppConfig> {
+        match path {
+            None => Ok(AppConfig::default()),
+            Some(p) => {
+                let v = toml::parse_file(p)?;
+                AppConfig::from_value(&v)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_from_empty() {
+        let v = toml::parse("").unwrap();
+        let cfg = AppConfig::from_value(&v).unwrap();
+        assert_eq!(cfg.serve.models, vec!["yolov2".to_string()]);
+        assert_eq!(cfg.serve.policy, PolicyKind::AdaOper);
+        assert_eq!(cfg.profiler.gbdt_trees, 120);
+    }
+
+    #[test]
+    fn full_decode() {
+        let v = toml::parse(
+            r#"
+            artifacts_dir = "my_artifacts"
+            [serve]
+            models = ["yolov2", "mobilenetv1"]
+            rate_hz = 30.0
+            arrival = "periodic"
+            slo_ms = 80.0
+            duration_s = 5.0
+            policy = "codl"
+            condition = "high"
+            seed = 99
+            execute_artifacts = true
+            [profiler]
+            gbdt_trees = 10
+            use_gru = false
+            [partition]
+            objective = "min-energy-slo"
+            window = 4
+            "#,
+        )
+        .unwrap();
+        let cfg = AppConfig::from_value(&v).unwrap();
+        assert_eq!(cfg.artifacts_dir, "my_artifacts");
+        assert_eq!(cfg.serve.models.len(), 2);
+        assert_eq!(cfg.serve.policy, PolicyKind::Codl);
+        assert_eq!(cfg.serve.condition, ConditionKind::High);
+        assert!(cfg.serve.execute_artifacts);
+        assert_eq!(cfg.profiler.gbdt_trees, 10);
+        assert!(!cfg.profiler.use_gru);
+        assert_eq!(cfg.partition.objective, "min-energy-slo");
+        assert_eq!(cfg.partition.window, 4);
+    }
+
+    #[test]
+    fn invalid_policy_rejected() {
+        let v = toml::parse("[serve]\npolicy = \"fastest\"\n").unwrap();
+        assert!(AppConfig::from_value(&v).is_err());
+    }
+
+    #[test]
+    fn invalid_objective_rejected() {
+        let v = toml::parse("[partition]\nobjective = \"min-flops\"\n").unwrap();
+        assert!(AppConfig::from_value(&v).is_err());
+    }
+
+    #[test]
+    fn invalid_rate_rejected() {
+        let v = toml::parse("[serve]\nrate_hz = 0.0\n").unwrap();
+        assert!(AppConfig::from_value(&v).is_err());
+    }
+
+    #[test]
+    fn policy_roundtrip_names() {
+        for p in PolicyKind::all() {
+            assert_eq!(PolicyKind::parse(p.name()).unwrap(), p);
+        }
+    }
+}

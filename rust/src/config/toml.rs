@@ -1,0 +1,484 @@
+//! Minimal TOML-subset parser.
+//!
+//! Supported: `[table]` / `[table.sub]` headers, `key = value` pairs,
+//! basic strings (`"..."` with `\n \t \\ \"` escapes), integers, floats,
+//! booleans, homogeneous-or-not arrays (`[1, 2, 3]`, may span one line),
+//! `#` comments, bare and quoted keys, dotted keys (`a.b = 1`).
+//! Not supported (rejected with an error): multi-line strings, datetimes,
+//! inline tables, array-of-tables (`[[x]]`).
+//!
+//! This is a substrate module (no `serde`/`toml` offline); see DESIGN.md.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// A parsed TOML value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    String(String),
+    Integer(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+    Table(BTreeMap<String, Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::String(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Integer(i) => Some(*i),
+            _ => None,
+        }
+    }
+    /// Floats accept integer literals too (`x = 3` readable as 3.0).
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Integer(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+    pub fn as_table(&self) -> Option<&BTreeMap<String, Value>> {
+        match self {
+            Value::Table(t) => Some(t),
+            _ => None,
+        }
+    }
+
+    /// Dotted-path lookup: `get("device.cpu.freq_mhz")`.
+    pub fn get(&self, path: &str) -> Option<&Value> {
+        let mut cur = self;
+        for part in path.split('.') {
+            cur = cur.as_table()?.get(part)?;
+        }
+        Some(cur)
+    }
+
+    /// Typed lookups with defaults — the common pattern in schema.rs.
+    pub fn float_or(&self, path: &str, default: f64) -> f64 {
+        self.get(path).and_then(|v| v.as_float()).unwrap_or(default)
+    }
+    pub fn int_or(&self, path: &str, default: i64) -> i64 {
+        self.get(path).and_then(|v| v.as_int()).unwrap_or(default)
+    }
+    pub fn bool_or(&self, path: &str, default: bool) -> bool {
+        self.get(path).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+    pub fn str_or(&self, path: &str, default: &str) -> String {
+        self.get(path)
+            .and_then(|v| v.as_str())
+            .unwrap_or(default)
+            .to_string()
+    }
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Value::String(s) => write!(f, "{s:?}"),
+            Value::Integer(i) => write!(f, "{i}"),
+            Value::Float(x) => write!(f, "{x}"),
+            Value::Bool(b) => write!(f, "{b}"),
+            Value::Array(a) => {
+                write!(f, "[")?;
+                for (i, v) in a.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "{v}")?;
+                }
+                write!(f, "]")
+            }
+            Value::Table(t) => {
+                write!(f, "{{")?;
+                for (i, (k, v)) in t.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "{k} = {v}")?;
+                }
+                write!(f, "}}")
+            }
+        }
+    }
+}
+
+/// Parse TOML-subset text into a root table.
+pub fn parse(input: &str) -> Result<Value> {
+    let mut root = BTreeMap::new();
+    let mut current_path: Vec<String> = Vec::new();
+
+    let mut lines = input.lines().enumerate().peekable();
+    while let Some((lineno, raw)) = lines.next() {
+        let line = strip_comment(raw).trim().to_string();
+        if line.is_empty() {
+            continue;
+        }
+        let err_ctx = |m: &str| format!("line {}: {m}: `{raw}`", lineno + 1);
+
+        if line.starts_with("[[") {
+            bail!(err_ctx("array-of-tables `[[..]]` is not supported"));
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let inner = rest
+                .strip_suffix(']')
+                .ok_or_else(|| anyhow!(err_ctx("unterminated table header")))?;
+            current_path = split_key_path(inner).context(err_ctx("bad table name"))?;
+            // Ensure the table exists (and is a table).
+            ensure_table(&mut root, &current_path).context(err_ctx("table conflict"))?;
+            continue;
+        }
+
+        // key = value (value may continue over lines if an array is open)
+        let eq = line
+            .find('=')
+            .ok_or_else(|| anyhow!(err_ctx("expected `key = value`")))?;
+        let key_part = line[..eq].trim();
+        let mut val_part = line[eq + 1..].trim().to_string();
+        // Join continuation lines while an array literal is unbalanced.
+        while unbalanced_array(&val_part) {
+            let (_, next) = lines
+                .next()
+                .ok_or_else(|| anyhow!(err_ctx("unterminated array")))?;
+            val_part.push(' ');
+            val_part.push_str(strip_comment(next).trim());
+        }
+
+        let keys = split_key_path(key_part).context(err_ctx("bad key"))?;
+        let value = parse_value(val_part.trim()).context(err_ctx("bad value"))?;
+
+        let mut full = current_path.clone();
+        full.extend_from_slice(&keys[..keys.len() - 1]);
+        let table = ensure_table(&mut root, &full).context(err_ctx("table conflict"))?;
+        let leaf = keys.last().unwrap().clone();
+        if table.contains_key(&leaf) {
+            bail!(err_ctx("duplicate key"));
+        }
+        table.insert(leaf, value);
+    }
+    Ok(Value::Table(root))
+}
+
+/// Parse a file from disk.
+pub fn parse_file(path: &std::path::Path) -> Result<Value> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading config {}", path.display()))?;
+    parse(&text).with_context(|| format!("parsing config {}", path.display()))
+}
+
+fn strip_comment(line: &str) -> &str {
+    // `#` starts a comment unless inside a basic string.
+    let mut in_str = false;
+    let mut escaped = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '\\' if in_str => escaped = !escaped,
+            '"' if !escaped => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => escaped = false,
+        }
+    }
+    line
+}
+
+fn unbalanced_array(s: &str) -> bool {
+    let mut depth = 0i32;
+    let mut in_str = false;
+    let mut escaped = false;
+    for c in s.chars() {
+        match c {
+            '\\' if in_str => escaped = !escaped,
+            '"' if !escaped => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth -= 1,
+            _ => escaped = false,
+        }
+    }
+    depth > 0
+}
+
+fn split_key_path(s: &str) -> Result<Vec<String>> {
+    let mut parts = Vec::new();
+    for part in s.split('.') {
+        let part = part.trim();
+        let key = if let Some(inner) = part.strip_prefix('"') {
+            inner
+                .strip_suffix('"')
+                .ok_or_else(|| anyhow!("unterminated quoted key"))?
+                .to_string()
+        } else {
+            if part.is_empty()
+                || !part
+                    .chars()
+                    .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-')
+            {
+                bail!("invalid bare key `{part}`");
+            }
+            part.to_string()
+        };
+        parts.push(key);
+    }
+    Ok(parts)
+}
+
+fn ensure_table<'a>(
+    root: &'a mut BTreeMap<String, Value>,
+    path: &[String],
+) -> Result<&'a mut BTreeMap<String, Value>> {
+    let mut cur = root;
+    for part in path {
+        let entry = cur
+            .entry(part.clone())
+            .or_insert_with(|| Value::Table(BTreeMap::new()));
+        match entry {
+            Value::Table(t) => cur = t,
+            _ => bail!("`{part}` is not a table"),
+        }
+    }
+    Ok(cur)
+}
+
+fn parse_value(s: &str) -> Result<Value> {
+    if s.is_empty() {
+        bail!("empty value");
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        return parse_basic_string(rest);
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if s.starts_with('[') {
+        return parse_array(s);
+    }
+    // Number: integer if it parses as i64 and has no float markers.
+    let clean = s.replace('_', "");
+    let looks_float = clean.contains('.') || clean.contains('e') || clean.contains('E');
+    if !looks_float {
+        if let Ok(i) = clean.parse::<i64>() {
+            return Ok(Value::Integer(i));
+        }
+    }
+    if let Ok(f) = clean.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    bail!("cannot parse value `{s}`");
+}
+
+fn parse_basic_string(rest: &str) -> Result<Value> {
+    let mut out = String::new();
+    let mut chars = rest.chars();
+    while let Some(c) = chars.next() {
+        match c {
+            '"' => {
+                let trailing: String = chars.collect();
+                if !trailing.trim().is_empty() {
+                    bail!("trailing characters after string: `{trailing}`");
+                }
+                return Ok(Value::String(out));
+            }
+            '\\' => match chars.next() {
+                Some('n') => out.push('\n'),
+                Some('t') => out.push('\t'),
+                Some('r') => out.push('\r'),
+                Some('\\') => out.push('\\'),
+                Some('"') => out.push('"'),
+                other => bail!("bad escape `\\{other:?}`"),
+            },
+            _ => out.push(c),
+        }
+    }
+    bail!("unterminated string")
+}
+
+fn parse_array(s: &str) -> Result<Value> {
+    let inner = s
+        .strip_prefix('[')
+        .and_then(|x| x.strip_suffix(']'))
+        .ok_or_else(|| anyhow!("unterminated array `{s}`"))?;
+    let mut items = Vec::new();
+    for piece in split_top_level(inner) {
+        let piece = piece.trim();
+        if piece.is_empty() {
+            continue; // trailing comma
+        }
+        items.push(parse_value(piece)?);
+    }
+    Ok(Value::Array(items))
+}
+
+/// Split on commas not inside strings or nested brackets.
+fn split_top_level(s: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut depth = 0;
+    let mut in_str = false;
+    let mut escaped = false;
+    let mut cur = String::new();
+    for c in s.chars() {
+        match c {
+            '\\' if in_str => {
+                escaped = !escaped;
+                cur.push(c);
+                continue;
+            }
+            '"' if !escaped => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth -= 1,
+            ',' if !in_str && depth == 0 => {
+                out.push(std::mem::take(&mut cur));
+                escaped = false;
+                continue;
+            }
+            _ => {}
+        }
+        escaped = false;
+        cur.push(c);
+    }
+    if !cur.trim().is_empty() {
+        out.push(cur);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars() {
+        let v = parse(
+            r#"
+            name = "adaoper"
+            iters = 42
+            ratio = 0.75
+            neg = -3
+            sci = 1.5e3
+            on = true
+            off = false
+            "#,
+        )
+        .unwrap();
+        assert_eq!(v.get("name").unwrap().as_str().unwrap(), "adaoper");
+        assert_eq!(v.get("iters").unwrap().as_int().unwrap(), 42);
+        assert_eq!(v.get("ratio").unwrap().as_float().unwrap(), 0.75);
+        assert_eq!(v.get("neg").unwrap().as_int().unwrap(), -3);
+        assert_eq!(v.get("sci").unwrap().as_float().unwrap(), 1500.0);
+        assert_eq!(v.get("on").unwrap().as_bool().unwrap(), true);
+        assert_eq!(v.get("off").unwrap().as_bool().unwrap(), false);
+    }
+
+    #[test]
+    fn parses_tables_and_nesting() {
+        let v = parse(
+            r#"
+            [device]
+            name = "sd855"
+            [device.cpu]
+            cores = 8
+            [workload]
+            kind = "poisson"
+            "#,
+        )
+        .unwrap();
+        assert_eq!(v.get("device.name").unwrap().as_str().unwrap(), "sd855");
+        assert_eq!(v.get("device.cpu.cores").unwrap().as_int().unwrap(), 8);
+        assert_eq!(v.get("workload.kind").unwrap().as_str().unwrap(), "poisson");
+    }
+
+    #[test]
+    fn parses_dotted_keys() {
+        let v = parse("a.b.c = 1").unwrap();
+        assert_eq!(v.get("a.b.c").unwrap().as_int().unwrap(), 1);
+    }
+
+    #[test]
+    fn parses_arrays_incl_nested_and_multiline() {
+        let v = parse(
+            "xs = [1, 2, 3]\nys = [[1, 2], [3, 4]]\nzs = [1.0,\n 2.0,\n 3.0]\n",
+        )
+        .unwrap();
+        assert_eq!(v.get("xs").unwrap().as_array().unwrap().len(), 3);
+        let ys = v.get("ys").unwrap().as_array().unwrap();
+        assert_eq!(ys[1].as_array().unwrap()[0].as_int().unwrap(), 3);
+        assert_eq!(v.get("zs").unwrap().as_array().unwrap().len(), 3);
+    }
+
+    #[test]
+    fn comments_and_strings_with_hash() {
+        let v = parse("a = 1 # comment\nb = \"x # y\" # more\n").unwrap();
+        assert_eq!(v.get("a").unwrap().as_int().unwrap(), 1);
+        assert_eq!(v.get("b").unwrap().as_str().unwrap(), "x # y");
+    }
+
+    #[test]
+    fn string_escapes() {
+        let v = parse(r#"s = "line\nnext\t\"q\"""#).unwrap();
+        assert_eq!(v.get("s").unwrap().as_str().unwrap(), "line\nnext\t\"q\"");
+    }
+
+    #[test]
+    fn duplicate_key_rejected() {
+        assert!(parse("a = 1\na = 2\n").is_err());
+    }
+
+    #[test]
+    fn array_of_tables_rejected() {
+        assert!(parse("[[x]]\na = 1\n").is_err());
+    }
+
+    #[test]
+    fn table_scalar_conflict_rejected() {
+        assert!(parse("a = 1\n[a]\nb = 2\n").is_err());
+    }
+
+    #[test]
+    fn typed_defaults() {
+        let v = parse("[x]\ny = 2\n").unwrap();
+        assert_eq!(v.float_or("x.y", 0.0), 2.0);
+        assert_eq!(v.float_or("x.z", 7.5), 7.5);
+        assert_eq!(v.str_or("x.name", "dflt"), "dflt");
+        assert_eq!(v.bool_or("x.flag", true), true);
+        assert_eq!(v.int_or("x.y", 0), 2);
+    }
+
+    #[test]
+    fn unterminated_array_errors() {
+        assert!(parse("xs = [1, 2").is_err());
+    }
+
+    #[test]
+    fn int_float_coercion() {
+        let v = parse("n = 3").unwrap();
+        assert_eq!(v.get("n").unwrap().as_float().unwrap(), 3.0);
+        assert_eq!(v.get("n").unwrap().as_int().unwrap(), 3);
+    }
+
+    #[test]
+    fn underscore_numbers() {
+        let v = parse("big = 1_000_000").unwrap();
+        assert_eq!(v.get("big").unwrap().as_int().unwrap(), 1_000_000);
+    }
+}

@@ -1,0 +1,711 @@
+//! The virtual-time serving engine: a two-resource op-level list scheduler
+//! over the simulated SoC.
+//!
+//! Multiple app streams issue requests; each request executes its model's
+//! operators in topological order under the stream's current partition
+//! plan. Ops from *different* requests interleave freely across the CPU
+//! and GPU (that is the "concurrent DNN inference" of the title): an op
+//! becomes eligible when its inputs are ready, starts when the processors
+//! its placement needs are free, and occupies them for its measured
+//! duration. Every measurement feeds the profiler; drift and regime
+//! triggers flow through the [`super::repartition`] controller, and
+//! decision time is charged to the CPU timeline (the partitioner runs on
+//! the phone's CPU in real deployments).
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+use crate::config::schema::{ConditionKind, PolicyKind};
+use crate::graph::{ModelGraph, OpNode};
+use crate::metrics::{EnergyAccount, LatencyRecorder, ServingReport};
+use crate::partition::baselines::by_policy;
+use crate::partition::dp::DpPartitioner;
+use crate::partition::incremental::IncrementalRepartitioner;
+use crate::partition::plan::{Objective, Partitioner, Plan, INPUT_CPU_FRAC};
+use crate::profiler::calibrate::{calibrate, CalibConfig};
+use crate::profiler::corrector::{Corrector, EwmaCorrector};
+use crate::profiler::monitor::ResourceMonitor;
+use crate::profiler::{CostModel, EnergyProfiler};
+use crate::soc::device::{Device, DeviceConfig, ExecCtx};
+use crate::soc::{Placement, Proc};
+use crate::util::Prng;
+use crate::workload::WorkloadCondition;
+
+use super::repartition::RepartitionController;
+use super::request::{Request, RequestOutcome, StreamSpec};
+
+/// How the planner sees costs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlannerInfo {
+    /// The runtime energy profiler (the AdaOper system).
+    Profiler,
+    /// Ground-truth oracle (upper bound; ablation only).
+    Oracle,
+}
+
+/// Engine configuration.
+#[derive(Clone)]
+pub struct EngineConfig {
+    pub policy: PolicyKind,
+    pub objective: Objective,
+    pub condition: ConditionKind,
+    pub duration_s: f64,
+    pub seed: u64,
+    /// Incremental repartition window (ops).
+    pub window: usize,
+    /// Cooldown (ops) between drift repartitions.
+    pub cooldown_ops: usize,
+    /// Monitor sampling period (virtual seconds).
+    pub monitor_period_s: f64,
+    pub planner_info: PlannerInfo,
+    /// Use the GRU-style corrector (EWMA fallback when no artifact is
+    /// wired); `false` = offline GBDT only (ablation A1).
+    pub use_corrector: bool,
+    /// Calibration sweep for the profiler (shared across runs via
+    /// [`Engine::with_profiler`] to avoid refitting).
+    pub calib: CalibConfig,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            policy: PolicyKind::AdaOper,
+            objective: Objective::MinEdp,
+            condition: ConditionKind::Moderate,
+            duration_s: 10.0,
+            seed: 1,
+            window: 8,
+            cooldown_ops: 12,
+            monitor_period_s: 0.05,
+            planner_info: PlannerInfo::Profiler,
+            use_corrector: true,
+            calib: CalibConfig::default(),
+        }
+    }
+}
+
+/// Numerics hook: called once per executed operator with the request and
+/// op; the e2e example wires the PJRT runtime in here.
+pub type NumericsHook = Box<dyn FnMut(&Request, &OpNode) -> Result<()>>;
+
+/// Per-request execution state.
+struct Active {
+    req: Request,
+    model: usize, // stream index
+    next_op: usize,
+    data_ready_s: f64,
+    start_s: Option<f64>,
+    energy_j: f64,
+    /// CPU-resident fraction of each op output produced so far.
+    out_cpu: Vec<f64>,
+    prev_placement: Option<Placement>,
+}
+
+/// The serving engine.
+pub struct Engine {
+    pub cfg: EngineConfig,
+    device: Device,
+    profiler: EnergyProfiler,
+    policy: Box<dyn Partitioner + Send + Sync>,
+    controller: RepartitionController,
+    monitor: ResourceMonitor,
+    numerics: Option<NumericsHook>,
+}
+
+impl Engine {
+    /// Build an engine, fitting a fresh profiler from `cfg.calib`.
+    pub fn new(cfg: EngineConfig) -> Engine {
+        let offline = calibrate(&cfg.calib);
+        let profiler = if cfg.use_corrector {
+            EnergyProfiler::with_correctors(offline, || Box::new(EwmaCorrector::default()))
+        } else {
+            EnergyProfiler::offline_only(offline)
+        };
+        Engine::with_profiler(cfg, profiler)
+    }
+
+    /// Build with an existing profiler (avoids refitting the GBDT when
+    /// sweeping configurations) .
+    pub fn with_profiler(cfg: EngineConfig, profiler: EnergyProfiler) -> Engine {
+        let mut device = Device::new(DeviceConfig {
+            seed: cfg.seed ^ 0x5EED,
+            ..DeviceConfig::snapdragon_855()
+        });
+        let cond = WorkloadCondition::by_name(cfg.condition.name()).unwrap();
+        device.apply_condition(&cond.spec);
+        let policy = by_policy(cfg.policy, cfg.objective);
+        let controller = RepartitionController::new(
+            IncrementalRepartitioner::new(
+                DpPartitioner::new(cfg.objective),
+                cfg.window,
+            ),
+            cfg.cooldown_ops,
+        );
+        Engine {
+            cfg,
+            device,
+            profiler,
+            policy,
+            controller,
+            monitor: ResourceMonitor::default(),
+            numerics: None,
+        }
+    }
+
+    /// Replace the profiler's correctors (e.g. wiring real GRU artifacts).
+    pub fn set_correctors<F: FnMut() -> Box<dyn Corrector>>(&mut self, make: F) {
+        let offline = calibrate(&self.cfg.calib);
+        self.profiler = EnergyProfiler::with_correctors(offline, make);
+    }
+
+    /// Install the per-op numerics hook (real HLO execution).
+    pub fn set_numerics_hook(&mut self, hook: NumericsHook) {
+        self.numerics = Some(hook);
+    }
+
+    /// Swap the device's workload condition mid-run-boundary (the
+    /// responsiveness traces drive this between `run` calls).
+    pub fn apply_condition(&mut self, cond: &WorkloadCondition) {
+        self.device.apply_condition(&cond.spec);
+    }
+
+    pub fn device(&self) -> &Device {
+        &self.device
+    }
+
+    pub fn profiler(&self) -> &EnergyProfiler {
+        &self.profiler
+    }
+
+    /// Drift triggers that reached a re-solve (diagnostics).
+    pub fn drift_evaluations(&self) -> usize {
+        self.controller.evaluations()
+    }
+
+    fn plan_for(&mut self, g: &ModelGraph) -> Result<Plan> {
+        let snap = self.device.snapshot();
+        match self.cfg.planner_info {
+            PlannerInfo::Profiler => self.policy.partition(g, &self.profiler, &snap),
+            PlannerInfo::Oracle => self.policy.partition(g, &self.device, &snap),
+        }
+    }
+
+    /// Closed-loop run: `n_requests` back-to-back inferences of one model
+    /// (the next request issues when the previous completes) — the
+    /// measurement style of the paper's Figure 2 (continuous video
+    /// detection), with no queueing by construction. Latency is pure
+    /// service time; static energy amortizes over the busy run.
+    pub fn run_closed_loop(
+        &mut self,
+        spec: &StreamSpec,
+        n_requests: usize,
+    ) -> Result<ServingReport> {
+        let g = spec.model.clone();
+        let mut plan = self.plan_for(&g)?;
+        let mut latencies = LatencyRecorder::new();
+        let mut energy = EnergyAccount::new();
+        let mut cpu_busy_total = 0.0f64;
+        let mut gpu_busy_total = 0.0f64;
+        let mut last_monitor_s = 0.0f64;
+        let t0 = self.device.time_s();
+
+        for _ in 0..n_requests {
+            let arrival = self.device.time_s();
+            let mut out_cpu = vec![INPUT_CPU_FRAC; g.num_ops()];
+            let mut prev: Option<Placement> = None;
+            let mut req_latency = 0.0;
+            for i in 0..g.num_ops() {
+                let op = &g.ops[i];
+                let placement = plan.placements[i];
+                let input_cpu_fracs: Vec<f64> = if op.inputs.is_empty() {
+                    vec![INPUT_CPU_FRAC; op.in_shapes.len()]
+                } else {
+                    op.inputs.iter().map(|&j| out_cpu[j]).collect()
+                };
+                let (new_run_cpu, new_run_gpu) = match prev {
+                    None => (true, true),
+                    Some(p) => (!p.uses(Proc::Cpu), !p.uses(Proc::Gpu)),
+                };
+                let ctx = ExecCtx {
+                    input_cpu_fracs,
+                    new_run_cpu,
+                    new_run_gpu,
+                    concurrent: false,
+                };
+                let snap = self.device.snapshot();
+                let measured = self.device.measure(op, placement, &ctx);
+                self.profiler.observe(op, placement, &ctx, &snap, &measured);
+                energy.add_op(&measured);
+                cpu_busy_total += measured.cpu_busy_s;
+                gpu_busy_total += measured.gpu_busy_s;
+                req_latency += measured.latency_s;
+                out_cpu[i] = placement.frac_on(Proc::Cpu);
+                prev = Some(placement);
+                self.device.advance(
+                    measured.latency_s,
+                    if placement.uses(Proc::Cpu) { 1.0 } else { 0.0 },
+                    if placement.uses(Proc::Gpu) { 1.0 } else { 0.0 },
+                );
+                self.controller.tick();
+
+                // monitor + regime detection
+                if self.device.time_s() - last_monitor_s >= self.cfg.monitor_period_s {
+                    last_monitor_s = self.device.time_s();
+                    self.monitor.sample(self.device.snapshot());
+                    if self.monitor.regime_changed() {
+                        self.profiler.reset_correction();
+                        let snap = self.device.snapshot();
+                        let model = match self.cfg.planner_info {
+                            PlannerInfo::Profiler => &self.profiler as &dyn CostModel,
+                            PlannerInfo::Oracle => &self.device as &dyn CostModel,
+                        };
+                        if let Some((p, dt)) = self.controller.on_regime_change(
+                            &g,
+                            self.policy.as_ref(),
+                            model,
+                            &snap,
+                        ) {
+                            plan = p;
+                            req_latency += dt;
+                            self.device.advance(dt, 1.0, 0.0);
+                        }
+                    }
+                }
+                // drift-triggered incremental repartition (AdaOper only)
+                if matches!(self.cfg.policy, PolicyKind::AdaOper) && self.profiler.drifted() {
+                    let snap = self.device.snapshot();
+                    let model = match self.cfg.planner_info {
+                        PlannerInfo::Profiler => &self.profiler as &dyn CostModel,
+                        PlannerInfo::Oracle => &self.device as &dyn CostModel,
+                    };
+                    if let Some((p, dt)) = self.controller.on_drift(
+                        &g,
+                        &plan,
+                        i + 1,
+                        model,
+                        &snap,
+                        Some(&out_cpu),
+                    ) {
+                        plan = p;
+                        req_latency += dt; // decision runs on the CPU path
+                        self.device.advance(dt, 1.0, 0.0);
+                    }
+                }
+            }
+            let finish = self.device.time_s();
+            latencies.record(req_latency, 0.0, finish - arrival <= spec.slo_s);
+            energy.finish_inference();
+        }
+
+        let wall = (self.device.time_s() - t0).max(1e-9);
+        Ok(ServingReport {
+            policy: self.policy.name().to_string(),
+            condition: self.device.condition_name().to_string(),
+            models: vec![g.name.clone()],
+            duration_s: wall,
+            requests: n_requests,
+            throughput_hz: n_requests as f64 / wall,
+            latency: latencies.summary(),
+            queue: None,
+            miss_rate: latencies.miss_rate(),
+            total_energy_j: energy.total_j(self.device.static_power_w(), wall),
+            j_per_inference: energy.j_per_inference(self.device.static_power_w(), wall),
+            inferences_per_j: energy.inferences_per_j(self.device.static_power_w(), wall),
+            avg_cpu_util: self.device.avg_cpu_util(cpu_busy_total / wall),
+            avg_gpu_util: (gpu_busy_total / wall).min(1.0),
+            repartitions: self.controller.repartitions(),
+            partition_overhead_s: self.controller.mean_decision_s(),
+        })
+    }
+
+    /// Run the engine over `streams` for `cfg.duration_s` of virtual time
+    /// (requests arriving before the horizon are all completed).
+    pub fn run(&mut self, streams: &[StreamSpec]) -> Result<ServingReport> {
+        if streams.is_empty() {
+            bail!("no streams");
+        }
+        let mut rng = Prng::new(self.cfg.seed);
+
+        // --- arrivals
+        let mut requests: Vec<Request> = Vec::new();
+        for s in streams {
+            let mut r = rng.split();
+            for (k, t) in s.arrival.timestamps(self.cfg.duration_s, &mut r).iter().enumerate()
+            {
+                requests.push(Request {
+                    id: k * streams.len() + s.id,
+                    stream: s.id,
+                    arrival_s: *t,
+                    deadline_s: *t + s.slo_s,
+                });
+            }
+        }
+        requests.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
+        let total_requests = requests.len();
+        if total_requests == 0 {
+            bail!("duration too short: no requests generated");
+        }
+
+        // --- initial plans per stream
+        let mut plans: HashMap<usize, Plan> = HashMap::new();
+        for s in streams {
+            let plan = self.plan_for(&s.model)?;
+            plans.insert(s.id, plan);
+        }
+
+        // --- scheduling state
+        let mut avail = [0.0f64; 2]; // per-proc availability time
+        let mut busy_acc = [0.0f64; 2]; // busy seconds since last advance
+        let mut latencies = LatencyRecorder::new();
+        let mut energy = EnergyAccount::new();
+        let mut outcomes: Vec<RequestOutcome> = Vec::new();
+        let mut active: Vec<Active> = Vec::new();
+        let mut next_arrival = 0usize;
+        let mut last_monitor_s = 0.0f64;
+        let mut cpu_busy_total = 0.0f64;
+        let mut gpu_busy_total = 0.0f64;
+
+        loop {
+            // admit arrivals that occurred up to the earliest runnable time
+            while next_arrival < requests.len() && active.is_empty() {
+                let req = requests[next_arrival].clone();
+                next_arrival += 1;
+                let g = &streams[req.stream].model;
+                active.push(Active {
+                    model: req.stream,
+                    next_op: 0,
+                    data_ready_s: req.arrival_s,
+                    start_s: None,
+                    energy_j: 0.0,
+                    out_cpu: vec![INPUT_CPU_FRAC; g.num_ops()],
+                    prev_placement: None,
+                    req,
+                });
+            }
+            if active.is_empty() {
+                break; // all done
+            }
+
+            // pick the request whose next op can start earliest
+            let mut best: Option<(usize, f64)> = None; // (active idx, start)
+            for (ai, a) in active.iter().enumerate() {
+                let g = &streams[a.model].model;
+                let placement = plans[&a.model].placements[a.next_op];
+                let mut start = a.data_ready_s;
+                for p in Proc::ALL {
+                    if placement.uses(p) {
+                        start = start.max(avail[p.index()]);
+                    }
+                }
+                let _ = g;
+                if best.map_or(true, |(_, s)| {
+                    start < s
+                        || (start == s && a.req.arrival_s < active[best.unwrap().0].req.arrival_s)
+                }) {
+                    best = Some((ai, start));
+                }
+            }
+            let (ai, mut start) = best.unwrap();
+
+            // if a queued arrival could begin before `start`, admit it
+            if next_arrival < requests.len() && requests[next_arrival].arrival_s < start {
+                let req = requests[next_arrival].clone();
+                next_arrival += 1;
+                let g = &streams[req.stream].model;
+                active.push(Active {
+                    model: req.stream,
+                    next_op: 0,
+                    data_ready_s: req.arrival_s,
+                    start_s: None,
+                    energy_j: 0.0,
+                    out_cpu: vec![INPUT_CPU_FRAC; g.num_ops()],
+                    prev_placement: None,
+                    req,
+                });
+                continue; // re-evaluate with the newcomer
+            }
+
+            // --- advance virtual time to `start`
+            let now = self.device.time_s();
+            if start > now {
+                let dt = start - now;
+                let u_cpu = (busy_acc[0] / dt).min(1.0);
+                let u_gpu = (busy_acc[1] / dt).min(1.0);
+                busy_acc = [0.0, 0.0];
+                self.device.advance(dt, u_cpu, u_gpu);
+            } else {
+                start = now;
+            }
+
+            // periodic monitor sampling + regime detection
+            if self.device.time_s() - last_monitor_s >= self.cfg.monitor_period_s {
+                last_monitor_s = self.device.time_s();
+                self.monitor.sample(self.device.snapshot());
+                if self.monitor.regime_changed() {
+                    self.profiler.reset_correction();
+                    let snap = self.device.snapshot();
+                    for s in streams {
+                        let model = match self.cfg.planner_info {
+                            PlannerInfo::Profiler => &self.profiler as &dyn CostModel,
+                            PlannerInfo::Oracle => &self.device as &dyn CostModel,
+                        };
+                        if let Some((plan, dt)) = self.controller.on_regime_change(
+                            &s.model,
+                            self.policy.as_ref(),
+                            model,
+                            &snap,
+                        ) {
+                            plans.insert(s.id, plan);
+                            avail[Proc::Cpu.index()] += dt; // decision runs on CPU
+                        }
+                    }
+                }
+            }
+
+            // --- execute the chosen op
+            let a = &mut active[ai];
+            let g = streams[a.model].model.clone();
+            let op = &g.ops[a.next_op];
+            let placement = plans[&a.model].placements[a.next_op];
+            let input_cpu_fracs: Vec<f64> = if op.inputs.is_empty() {
+                vec![INPUT_CPU_FRAC; op.in_shapes.len()]
+            } else {
+                op.inputs.iter().map(|&j| a.out_cpu[j]).collect()
+            };
+            let (new_run_cpu, new_run_gpu) = match a.prev_placement {
+                None => (true, true),
+                Some(p) => (!p.uses(Proc::Cpu), !p.uses(Proc::Gpu)),
+            };
+            let others_running = active.len() > 1;
+            let ctx = ExecCtx {
+                input_cpu_fracs,
+                new_run_cpu,
+                new_run_gpu,
+                concurrent: others_running,
+            };
+            let snap = self.device.snapshot();
+            let measured = self.device.measure(op, placement, &ctx);
+            self.profiler.observe(op, placement, &ctx, &snap, &measured);
+            energy.add_op(&measured);
+            let a = &mut active[ai];
+            a.energy_j += measured.energy_j;
+            if a.start_s.is_none() {
+                a.start_s = Some(start);
+            }
+            a.out_cpu[a.next_op] = placement.frac_on(Proc::Cpu);
+            a.prev_placement = Some(placement);
+            a.data_ready_s = start + measured.latency_s;
+            for p in Proc::ALL {
+                if placement.uses(p) {
+                    avail[p.index()] = start + measured.latency_s;
+                    busy_acc[p.index()] += measured.latency_s;
+                }
+            }
+            cpu_busy_total += measured.cpu_busy_s;
+            gpu_busy_total += measured.gpu_busy_s;
+            if let Some(hook) = &mut self.numerics {
+                hook(&a.req, op)?;
+            }
+            a.next_op += 1;
+            self.controller.tick();
+
+            // --- drift-triggered incremental repartition (AdaOper only)
+            if matches!(self.cfg.policy, PolicyKind::AdaOper) && self.profiler.drifted() {
+                let frontier = active[ai].next_op;
+                let stream_id = active[ai].model;
+                let out_cpu = active[ai].out_cpu.clone();
+                let snap = self.device.snapshot();
+                let model = match self.cfg.planner_info {
+                    PlannerInfo::Profiler => &self.profiler as &dyn CostModel,
+                    PlannerInfo::Oracle => &self.device as &dyn CostModel,
+                };
+                if let Some((plan, dt)) = self.controller.on_drift(
+                    &g,
+                    &plans[&stream_id],
+                    frontier,
+                    model,
+                    &snap,
+                    Some(&out_cpu),
+                ) {
+                    plans.insert(stream_id, plan);
+                    avail[Proc::Cpu.index()] += dt;
+                }
+            }
+
+            // --- completion
+            if active[ai].next_op == g.num_ops() {
+                let a = active.swap_remove(ai);
+                let outcome = RequestOutcome {
+                    start_s: a.start_s.unwrap(),
+                    finish_s: a.data_ready_s,
+                    energy_j: a.energy_j,
+                    request: a.req,
+                };
+                latencies.record(
+                    outcome.latency_s(),
+                    outcome.queue_s(),
+                    outcome.met_deadline(),
+                );
+                energy.finish_inference();
+                outcomes.push(outcome);
+            }
+        }
+
+        // --- report
+        let wall = self.device.time_s().max(self.cfg.duration_s);
+        let report = ServingReport {
+            policy: self.policy.name().to_string(),
+            condition: self.device.condition_name().to_string(),
+            models: streams.iter().map(|s| s.model.name.clone()).collect(),
+            duration_s: wall,
+            requests: outcomes.len(),
+            throughput_hz: outcomes.len() as f64 / wall,
+            latency: latencies.summary(),
+            queue: latencies.queue_summary(),
+            miss_rate: latencies.miss_rate(),
+            total_energy_j: energy.total_j(self.device.static_power_w(), wall),
+            j_per_inference: energy.j_per_inference(self.device.static_power_w(), wall),
+            inferences_per_j: energy.inferences_per_j(self.device.static_power_w(), wall),
+            avg_cpu_util: self.device.avg_cpu_util(cpu_busy_total / wall),
+            avg_gpu_util: (gpu_busy_total / wall).min(1.0),
+            repartitions: self.controller.repartitions(),
+            partition_overhead_s: self.controller.mean_decision_s(),
+        };
+        debug_assert_eq!(outcomes.len(), total_requests);
+        Ok(report)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::zoo;
+    use crate::profiler::gbdt::GbdtParams;
+    use crate::workload::Arrival;
+
+    fn quick_calib() -> CalibConfig {
+        CalibConfig {
+            samples: 1200,
+            seed: 5,
+            gbdt: GbdtParams {
+                trees: 40,
+                ..Default::default()
+            },
+        }
+    }
+
+    fn stream(rate: f64, slo: f64) -> Vec<StreamSpec> {
+        vec![StreamSpec::new(
+            0,
+            zoo::yolov2_tiny(),
+            Arrival::Poisson { hz: rate },
+            slo,
+        )]
+    }
+
+    #[test]
+    fn engine_completes_all_requests() {
+        let mut e = Engine::new(EngineConfig {
+            duration_s: 3.0,
+            calib: quick_calib(),
+            ..Default::default()
+        });
+        let r = e.run(&stream(5.0, 0.5)).unwrap();
+        assert!(r.requests > 5, "only {} requests", r.requests);
+        assert!(r.latency.is_some());
+        assert!(r.j_per_inference > 0.0);
+        assert!(r.throughput_hz > 0.0);
+    }
+
+    #[test]
+    fn concurrent_streams_complete() {
+        let mut e = Engine::new(EngineConfig {
+            duration_s: 2.0,
+            policy: PolicyKind::MaceGpu,
+            calib: quick_calib(),
+            ..Default::default()
+        });
+        let streams = vec![
+            StreamSpec::new(0, zoo::yolov2_tiny(), Arrival::Periodic { hz: 10.0, jitter: 0.0 }, 0.5),
+            StreamSpec::new(1, zoo::mobilenet_v1(), Arrival::Poisson { hz: 8.0 }, 0.5),
+        ];
+        let r = e.run(&streams).unwrap();
+        assert!(r.requests >= 20, "{} requests", r.requests);
+        assert_eq!(r.models.len(), 2);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mk = || {
+            let mut e = Engine::new(EngineConfig {
+                duration_s: 1.5,
+                seed: 42,
+                policy: PolicyKind::MaceGpu,
+                calib: quick_calib(),
+                ..Default::default()
+            });
+            e.run(&stream(8.0, 0.5)).unwrap()
+        };
+        let a = mk();
+        let b = mk();
+        assert_eq!(a.requests, b.requests);
+        assert!((a.total_energy_j - b.total_energy_j).abs() < 1e-9);
+    }
+
+    #[test]
+    fn high_condition_worse_than_moderate() {
+        let run = |cond| {
+            let mut e = Engine::new(EngineConfig {
+                duration_s: 3.0,
+                condition: cond,
+                policy: PolicyKind::MaceGpu,
+                calib: quick_calib(),
+                ..Default::default()
+            });
+            e.run(&stream(5.0, 1.0)).unwrap()
+        };
+        let m = run(ConditionKind::Moderate);
+        let h = run(ConditionKind::High);
+        let lm = m.latency.unwrap().p50;
+        let lh = h.latency.unwrap().p50;
+        assert!(lh > lm, "high p50 {lh} ≤ moderate {lm}");
+    }
+
+    #[test]
+    fn adaoper_repartitions_under_drift() {
+        let mut e = Engine::new(EngineConfig {
+            duration_s: 4.0,
+            policy: PolicyKind::AdaOper,
+            cooldown_ops: 10,
+            calib: quick_calib(),
+            condition: ConditionKind::High,
+            ..Default::default()
+        });
+        let _r = e.run(&stream(6.0, 1.0)).unwrap();
+        // under the bursty high condition the drift trigger must at least
+        // evaluate re-plans in 4 s (adoption is hysteresis-gated)
+        assert!(e.drift_evaluations() > 0, "drift never evaluated a re-plan");
+    }
+
+    #[test]
+    fn numerics_hook_called_per_op() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        use std::sync::Arc;
+        let count = Arc::new(AtomicUsize::new(0));
+        let c2 = count.clone();
+        let mut e = Engine::new(EngineConfig {
+            duration_s: 1.0,
+            policy: PolicyKind::MaceGpu,
+            calib: quick_calib(),
+            ..Default::default()
+        });
+        e.set_numerics_hook(Box::new(move |_req, _op| {
+            c2.fetch_add(1, Ordering::SeqCst);
+            Ok(())
+        }));
+        let r = e.run(&stream(4.0, 1.0)).unwrap();
+        let g = zoo::yolov2_tiny();
+        assert_eq!(count.load(Ordering::SeqCst), r.requests * g.num_ops());
+    }
+}

@@ -1,0 +1,258 @@
+//! Threaded serving mode: one executor thread per processor, fed through
+//! channels by the coordinator thread — the process topology a real
+//! deployment has (MACE/CoDL worker pools), demonstrated with real AOT
+//! numerics when an [`OpExecutor`] factory is installed.
+//!
+//! Timing/energy still come from the simulated device (the substitute for
+//! the phone); the worker threads do the *actual tensor compute* for the
+//! executable model via PJRT. Each worker constructs its own executor
+//! inside the thread (PJRT clients are not assumed `Send`), so the factory
+//! closure crosses the thread boundary, not the client.
+
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::thread;
+
+use anyhow::{anyhow, Result};
+
+use crate::graph::ModelGraph;
+use crate::metrics::{EnergyAccount, LatencyRecorder, ServingReport};
+use crate::partition::plan::{Plan, INPUT_CPU_FRAC};
+use crate::soc::device::{Device, ExecCtx};
+use crate::soc::{Placement, Proc};
+
+/// Executes the numeric work of one operator (e.g. a PJRT HLO block).
+pub trait OpExecutor {
+    /// Run op `op_name` of `model` on `inputs`; returns the output tensor.
+    fn execute(&mut self, model: &str, op_name: &str, inputs: &[Vec<f32>]) -> Result<Vec<f32>>;
+}
+
+/// No-op executor (timing-only liveness).
+pub struct NoopExecutor;
+
+impl OpExecutor for NoopExecutor {
+    fn execute(&mut self, _m: &str, _o: &str, _i: &[Vec<f32>]) -> Result<Vec<f32>> {
+        Ok(Vec::new())
+    }
+}
+
+/// Factory building an executor *inside* the worker thread.
+pub type ExecutorFactory = Box<dyn Fn() -> Box<dyn OpExecutor> + Send + Sync>;
+
+enum WorkerMsg {
+    Run {
+        model: String,
+        op_name: String,
+        inputs: Vec<Vec<f32>>,
+        reply: mpsc::Sender<Result<Vec<f32>>>,
+    },
+    Stop,
+}
+
+/// A live (threaded) serving session over one model.
+pub struct LiveSession;
+
+impl LiveSession {
+    /// Run `n_requests` back-to-back inferences of `g` under `plan`,
+    /// executing real numerics via `factory`-built executors in the
+    /// per-processor worker threads. Returns the serving report plus the
+    /// final output tensor of the last request (for validation).
+    pub fn run(
+        g: &ModelGraph,
+        plan: &Plan,
+        device: &mut Device,
+        factory: ExecutorFactory,
+        n_requests: usize,
+        input: Vec<f32>,
+    ) -> Result<(ServingReport, Vec<f32>)> {
+        let factory = std::sync::Arc::new(factory);
+        // one worker per processor, each owning its own executor
+        let mut workers: HashMap<usize, (mpsc::Sender<WorkerMsg>, thread::JoinHandle<()>)> =
+            HashMap::new();
+        for p in Proc::ALL {
+            let (tx, rx) = mpsc::channel::<WorkerMsg>();
+            let f = factory.clone();
+            let handle = thread::Builder::new()
+                .name(format!("adaoper-exec-{}", p.name()))
+                .spawn(move || {
+                    let mut exec = f();
+                    while let Ok(msg) = rx.recv() {
+                        match msg {
+                            WorkerMsg::Stop => break,
+                            WorkerMsg::Run {
+                                model,
+                                op_name,
+                                inputs,
+                                reply,
+                            } => {
+                                let r = exec.execute(&model, &op_name, &inputs);
+                                let _ = reply.send(r);
+                            }
+                        }
+                    }
+                })
+                .map_err(|e| anyhow!("spawn worker: {e}"))?;
+            workers.insert(p.index(), (tx, handle));
+        }
+
+        let mut latencies = LatencyRecorder::new();
+        let mut energy = EnergyAccount::new();
+        let mut last_output = Vec::new();
+        let t_start = device.time_s();
+
+        for _req in 0..n_requests {
+            let mut outputs: Vec<Vec<f32>> = vec![Vec::new(); g.num_ops()];
+            let mut out_cpu = vec![INPUT_CPU_FRAC; g.num_ops()];
+            let mut prev: Option<Placement> = None;
+            let mut req_latency = 0.0;
+            for (i, op) in g.ops.iter().enumerate() {
+                let placement = plan.placements[i];
+                let input_cpu_fracs: Vec<f64> = if op.inputs.is_empty() {
+                    vec![INPUT_CPU_FRAC; op.in_shapes.len()]
+                } else {
+                    op.inputs.iter().map(|&j| out_cpu[j]).collect()
+                };
+                let (new_run_cpu, new_run_gpu) = match prev {
+                    None => (true, true),
+                    Some(p) => (!p.uses(Proc::Cpu), !p.uses(Proc::Gpu)),
+                };
+                let ctx = ExecCtx {
+                    input_cpu_fracs,
+                    new_run_cpu,
+                    new_run_gpu,
+                    concurrent: false,
+                };
+                // virtual cost from the device model
+                let cost = device.measure(op, placement, &ctx);
+                req_latency += cost.latency_s;
+                energy.add_op(&cost);
+                device.advance(
+                    cost.latency_s,
+                    if placement.uses(Proc::Cpu) { 1.0 } else { 0.0 },
+                    if placement.uses(Proc::Gpu) { 1.0 } else { 0.0 },
+                );
+
+                // real numerics on the owning worker thread (split ops run
+                // on the unit holding the larger share — the numeric result
+                // is identical, the split is a timing construct)
+                let owner = if placement.frac_on(Proc::Cpu) >= 0.5 {
+                    Proc::Cpu
+                } else {
+                    Proc::Gpu
+                };
+                let inputs: Vec<Vec<f32>> = if op.inputs.is_empty() {
+                    vec![input.clone()]
+                } else {
+                    op.inputs.iter().map(|&j| outputs[j].clone()).collect()
+                };
+                let (reply_tx, reply_rx) = mpsc::channel();
+                workers[&owner.index()]
+                    .0
+                    .send(WorkerMsg::Run {
+                        model: g.name.clone(),
+                        op_name: op.name.clone(),
+                        inputs,
+                        reply: reply_tx,
+                    })
+                    .map_err(|_| anyhow!("worker died"))?;
+                outputs[i] = reply_rx.recv().map_err(|_| anyhow!("worker died"))??;
+                out_cpu[i] = placement.frac_on(Proc::Cpu);
+                prev = Some(placement);
+            }
+            latencies.record(req_latency, 0.0, true);
+            energy.finish_inference();
+            if let Some(&out_id) = g.outputs().first() {
+                last_output = outputs[out_id].clone();
+            }
+        }
+
+        for (_, (tx, handle)) in workers {
+            let _ = tx.send(WorkerMsg::Stop);
+            let _ = handle.join();
+        }
+
+        let wall = device.time_s() - t_start;
+        let report = ServingReport {
+            policy: plan.policy.clone(),
+            condition: device.condition_name().to_string(),
+            models: vec![g.name.clone()],
+            duration_s: wall,
+            requests: n_requests,
+            throughput_hz: n_requests as f64 / wall.max(1e-9),
+            latency: latencies.summary(),
+            queue: latencies.queue_summary(),
+            miss_rate: 0.0,
+            total_energy_j: energy.total_j(device.static_power_w(), wall),
+            j_per_inference: energy.j_per_inference(device.static_power_w(), wall),
+            inferences_per_j: energy.inferences_per_j(device.static_power_w(), wall),
+            avg_cpu_util: device.avg_cpu_util(energy.cpu_busy_s() / wall.max(1e-9)),
+            avg_gpu_util: (energy.gpu_busy_s() / wall.max(1e-9)).min(1.0),
+            repartitions: 0,
+            partition_overhead_s: 0.0,
+        };
+        Ok((report, last_output))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::zoo;
+    use crate::soc::device::DeviceConfig;
+    use crate::workload::WorkloadCondition;
+
+    /// Executor that tags outputs so the test can verify data flowed
+    /// through worker threads in topological order.
+    struct CountingExecutor {
+        calls: usize,
+    }
+
+    impl OpExecutor for CountingExecutor {
+        fn execute(&mut self, _m: &str, _o: &str, inputs: &[Vec<f32>]) -> Result<Vec<f32>> {
+            self.calls += 1;
+            let sum: f32 = inputs.iter().flat_map(|v| v.iter()).sum();
+            Ok(vec![sum + 1.0])
+        }
+    }
+
+    #[test]
+    fn live_session_runs_through_worker_threads() {
+        let g = zoo::tiny_exec();
+        let mut d = Device::new(DeviceConfig::snapdragon_855());
+        d.apply_condition(&WorkloadCondition::moderate().spec);
+        let plan = Plan {
+            placements: vec![Placement::GPU; g.num_ops()],
+            predicted: Default::default(),
+            policy: "mace-gpu".into(),
+        };
+        let factory: ExecutorFactory =
+            Box::new(|| Box::new(CountingExecutor { calls: 0 }));
+        let (report, out) =
+            LiveSession::run(&g, &plan, &mut d, factory, 3, vec![1.0, 2.0]).unwrap();
+        assert_eq!(report.requests, 3);
+        assert!(report.throughput_hz > 0.0);
+        // chain of +1's over the sum: output well-defined and non-empty
+        assert_eq!(out.len(), 1);
+        assert!(out[0] >= 1.0);
+    }
+
+    #[test]
+    fn mixed_placement_routes_to_both_workers() {
+        let g = zoo::tiny_exec();
+        let mut d = Device::new(DeviceConfig::snapdragon_855());
+        d.apply_condition(&WorkloadCondition::moderate().spec);
+        let placements: Vec<Placement> = (0..g.num_ops())
+            .map(|i| if i % 2 == 0 { Placement::CPU } else { Placement::GPU })
+            .collect();
+        let plan = Plan {
+            placements,
+            predicted: Default::default(),
+            policy: "alt".into(),
+        };
+        let factory: ExecutorFactory =
+            Box::new(|| Box::new(CountingExecutor { calls: 0 }));
+        let (report, _) =
+            LiveSession::run(&g, &plan, &mut d, factory, 1, vec![0.5]).unwrap();
+        assert_eq!(report.requests, 1);
+    }
+}

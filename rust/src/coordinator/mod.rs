@@ -1,0 +1,22 @@
+//! L3 coordinator: the concurrent serving engine.
+//!
+//! * [`request`] — app streams (one per concurrently-served model) and
+//!   request lifecycle types.
+//! * [`engine`] — the virtual-time engine: a two-resource (CPU/GPU)
+//!   op-level list scheduler that executes partition plans on the
+//!   simulated device, feeds measurements back to the profiler, and
+//!   triggers repartitioning. All benches and figures run through it.
+//! * [`repartition`] — drift/regime-triggered repartition controller
+//!   (incremental window or full re-solve), with decision-time accounting
+//!   charged to the CPU.
+//! * [`live`] — the threaded serving mode: per-processor executor threads
+//!   behind channels, with an optional numerics hook that runs the real
+//!   AOT-compiled HLO blocks per operator (the e2e example wires PJRT in).
+
+pub mod engine;
+pub mod live;
+pub mod repartition;
+pub mod request;
+
+pub use engine::{Engine, EngineConfig};
+pub use request::{Request, StreamSpec};

@@ -1,0 +1,212 @@
+//! Repartition controller: decides *when* to re-plan and *how much* —
+//! incremental windows on energy drift (the paper's fast path), full
+//! re-solves on regime changes (frequency repin / utilization level
+//! shift), with cooldowns and decision-time accounting.
+
+use std::time::Instant;
+
+use crate::graph::ModelGraph;
+use crate::partition::incremental::IncrementalRepartitioner;
+use crate::partition::{Plan, Partitioner};
+use crate::profiler::CostModel;
+use crate::soc::device::Snapshot;
+
+/// Why a repartition happened (statistics/logging).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Trigger {
+    Drift,
+    RegimeChange,
+}
+
+/// Controller state + statistics.
+pub struct RepartitionController {
+    pub incremental: IncrementalRepartitioner,
+    /// Minimum ops executed between drift-triggered repartitions.
+    pub cooldown_ops: usize,
+    /// Minimum predicted relative EDP improvement to adopt a re-plan.
+    pub hysteresis: f64,
+    ops_since_last: usize,
+    evaluations: usize,
+    repartitions: usize,
+    full_solves: usize,
+    decision_time_s: f64,
+}
+
+impl RepartitionController {
+    pub fn new(incremental: IncrementalRepartitioner, cooldown_ops: usize) -> Self {
+        RepartitionController {
+            incremental,
+            cooldown_ops,
+            hysteresis: 0.03,
+            ops_since_last: 0,
+            evaluations: 0,
+            repartitions: 0,
+            full_solves: 0,
+            decision_time_s: 0.0,
+        }
+    }
+
+    /// Note one executed op (cooldown bookkeeping).
+    pub fn tick(&mut self) {
+        self.ops_since_last += 1;
+    }
+
+    /// Drift fast path: windowed re-solve at the execution frontier.
+    /// Returns the patched plan and the wall-clock decision time, or None
+    /// while cooling down or when the re-solve does not beat the current
+    /// plan by at least `hysteresis` (plan-flapping guard: corrections are
+    /// noisy, and oscillating placements pay real transfer costs).
+    pub fn on_drift(
+        &mut self,
+        g: &ModelGraph,
+        plan: &Plan,
+        frontier: usize,
+        model: &dyn CostModel,
+        snap: &Snapshot,
+        out_cpu: Option<&[f64]>,
+    ) -> Option<(Plan, f64)> {
+        if self.ops_since_last < self.cooldown_ops {
+            return None;
+        }
+        self.evaluations += 1;
+        let t0 = Instant::now();
+        let current = self
+            .incremental
+            .remaining_cost(g, plan, frontier, model, snap, out_cpu)
+            .ok()?;
+        let patched = self
+            .incremental
+            .repartition(g, plan, frontier, model, snap, out_cpu)
+            .ok()?;
+        let dt = t0.elapsed().as_secs_f64();
+        self.ops_since_last = 0;
+        self.decision_time_s += dt;
+        let cur_score = current.energy_j * current.latency_s;
+        let new_score = patched.predicted.energy_j * patched.predicted.latency_s;
+        if new_score > cur_score * (1.0 - self.hysteresis) {
+            return None; // not worth switching
+        }
+        self.repartitions += 1;
+        Some((patched, dt))
+    }
+
+    /// Regime change: full re-solve of a stream's plan.
+    pub fn on_regime_change(
+        &mut self,
+        g: &ModelGraph,
+        policy: &dyn Partitioner,
+        model: &dyn CostModel,
+        snap: &Snapshot,
+    ) -> Option<(Plan, f64)> {
+        let t0 = Instant::now();
+        let plan = policy.partition(g, model, snap).ok()?;
+        let dt = t0.elapsed().as_secs_f64();
+        self.full_solves += 1;
+        self.repartitions += 1;
+        self.decision_time_s += dt;
+        self.ops_since_last = 0;
+        Some((plan, dt))
+    }
+
+    pub fn repartitions(&self) -> usize {
+        self.repartitions
+    }
+
+    /// Drift triggers that reached a re-solve (adopted or rejected).
+    pub fn evaluations(&self) -> usize {
+        self.evaluations
+    }
+
+    pub fn full_solves(&self) -> usize {
+        self.full_solves
+    }
+
+    /// Mean decision time per repartition.
+    pub fn mean_decision_s(&self) -> f64 {
+        if self.repartitions == 0 {
+            0.0
+        } else {
+            self.decision_time_s / self.repartitions as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::zoo;
+    use crate::partition::dp::DpPartitioner;
+    use crate::partition::plan::Objective;
+    use crate::soc::device::{Device, DeviceConfig};
+    use crate::soc::Placement;
+    use crate::workload::WorkloadCondition;
+
+    fn dev() -> Device {
+        let mut d = Device::new(DeviceConfig {
+            noise_sigma: 0.0,
+            drift_sigma: 0.0,
+            ..DeviceConfig::snapdragon_855()
+        });
+        d.apply_condition(&WorkloadCondition::moderate().spec);
+        d
+    }
+
+    fn controller(window: usize, cooldown: usize) -> RepartitionController {
+        RepartitionController::new(
+            IncrementalRepartitioner::new(DpPartitioner::new(Objective::MinEdp), window),
+            cooldown,
+        )
+    }
+
+    #[test]
+    fn cooldown_blocks_until_ticks() {
+        let g = zoo::yolov2_tiny();
+        let d = dev();
+        let snap = d.snapshot();
+        // an all-CPU plan is far from optimal → the re-solve clears the
+        // adoption hysteresis
+        let plan = Plan {
+            placements: vec![Placement::CPU; g.num_ops()],
+            predicted: Default::default(),
+            policy: "t".into(),
+        };
+        let mut c = controller(4, 3);
+        assert!(c.on_drift(&g, &plan, 0, &d, &snap, None).is_none());
+        c.tick();
+        c.tick();
+        assert!(c.on_drift(&g, &plan, 0, &d, &snap, None).is_none());
+        c.tick();
+        assert!(c.on_drift(&g, &plan, 0, &d, &snap, None).is_some());
+        assert_eq!(c.repartitions(), 1);
+        // cooldown resets
+        assert!(c.on_drift(&g, &plan, 0, &d, &snap, None).is_none());
+    }
+
+    #[test]
+    fn hysteresis_rejects_marginal_replans() {
+        let g = zoo::yolov2_tiny();
+        let d = dev();
+        let snap = d.snapshot();
+        // start from the solver's own optimum: the re-solve cannot beat it
+        // by the hysteresis margin → no adoption
+        let dp = DpPartitioner::new(Objective::MinEdp);
+        let opt = dp.solve(&g, &d, &snap).unwrap();
+        let mut c = controller(g.num_ops(), 0);
+        assert!(c.on_drift(&g, &opt, 0, &d, &snap, None).is_none());
+        assert_eq!(c.repartitions(), 0);
+    }
+
+    #[test]
+    fn regime_change_full_solve_counts() {
+        let g = zoo::yolov2_tiny();
+        let d = dev();
+        let snap = d.snapshot();
+        let policy = DpPartitioner::new(Objective::MinEdp);
+        let mut c = controller(4, 3);
+        let (plan, dt) = c.on_regime_change(&g, &policy, &d, &snap).unwrap();
+        assert_eq!(plan.placements.len(), g.num_ops());
+        assert!(dt >= 0.0);
+        assert_eq!(c.full_solves(), 1);
+        assert!(c.mean_decision_s() >= 0.0);
+    }
+}

@@ -1,0 +1,82 @@
+//! Request streams and request lifecycle types.
+
+use std::sync::Arc;
+
+use crate::graph::ModelGraph;
+use crate::workload::Arrival;
+
+/// One concurrently-served app: a model plus its arrival process and SLO.
+#[derive(Clone)]
+pub struct StreamSpec {
+    pub id: usize,
+    pub model: Arc<ModelGraph>,
+    pub arrival: Arrival,
+    /// Per-request latency SLO (deadline = arrival + slo).
+    pub slo_s: f64,
+}
+
+impl StreamSpec {
+    pub fn new(id: usize, model: ModelGraph, arrival: Arrival, slo_s: f64) -> Self {
+        StreamSpec {
+            id,
+            model: Arc::new(model),
+            arrival,
+            slo_s,
+        }
+    }
+}
+
+/// One inference request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: usize,
+    pub stream: usize,
+    pub arrival_s: f64,
+    pub deadline_s: f64,
+}
+
+/// Completed-request record.
+#[derive(Debug, Clone)]
+pub struct RequestOutcome {
+    pub request: Request,
+    pub start_s: f64,
+    pub finish_s: f64,
+    pub energy_j: f64,
+}
+
+impl RequestOutcome {
+    pub fn latency_s(&self) -> f64 {
+        self.finish_s - self.request.arrival_s
+    }
+
+    pub fn queue_s(&self) -> f64 {
+        self.start_s - self.request.arrival_s
+    }
+
+    pub fn met_deadline(&self) -> bool {
+        self.finish_s <= self.request.deadline_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn outcome_math() {
+        let o = RequestOutcome {
+            request: Request {
+                id: 0,
+                stream: 0,
+                arrival_s: 1.0,
+                deadline_s: 1.2,
+            },
+            start_s: 1.05,
+            finish_s: 1.15,
+            energy_j: 0.1,
+        };
+        assert!((o.latency_s() - 0.15).abs() < 1e-12);
+        assert!((o.queue_s() - 0.05).abs() < 1e-12);
+        assert!(o.met_deadline());
+    }
+}

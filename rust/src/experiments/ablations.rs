@@ -1,0 +1,498 @@
+//! Ablation experiments A1–A5 (DESIGN.md §7): each design decision the
+//! poster calls out gets a bench that isolates it.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::config::schema::{ConditionKind, PolicyKind};
+use crate::coordinator::{Engine, EngineConfig, StreamSpec};
+use crate::graph::graph::{GraphBuilder, Src};
+use crate::graph::op::{ActKind, OpKind};
+use crate::graph::{zoo, ModelGraph, Shape};
+use crate::partition::baselines::GreedyEnergyPartitioner;
+use crate::partition::codl::CodlPartitioner;
+use crate::partition::dp::DpPartitioner;
+use crate::partition::exhaustive::ExhaustivePartitioner;
+use crate::partition::incremental::IncrementalRepartitioner;
+use crate::partition::plan::{evaluate, Objective, Partitioner, INPUT_CPU_FRAC};
+use crate::profiler::calibrate::{calibrate, CalibConfig};
+use crate::profiler::corrector::{Corrector, EwmaCorrector};
+use crate::profiler::{CostModel, EnergyProfiler};
+use crate::soc::device::{Device, DeviceConfig, ExecCtx};
+use crate::soc::Placement;
+use crate::workload::trace::ConditionTrace;
+use crate::workload::{Arrival, WorkloadCondition};
+
+// ---------------------------------------------------------------------------
+// A1 — profiler accuracy under dynamic conditions
+// ---------------------------------------------------------------------------
+
+/// One predictor arm's accuracy over the drift trace.
+#[derive(Debug, Clone)]
+pub struct ProfilerAccuracyRow {
+    pub arm: String,
+    /// Mean absolute percentage error of per-op energy predictions.
+    pub energy_mape: f64,
+    pub latency_mape: f64,
+    pub observations: usize,
+}
+
+/// A1: drive the device through idle→moderate→high→moderate and compare
+/// predictor arms on per-op energy/latency error. `gru` optionally wires a
+/// corrector factory (the real AOT artifact when present).
+pub fn profiler_accuracy(
+    calib: &CalibConfig,
+    seg_s: f64,
+    seed: u64,
+    gru: Option<Box<dyn FnMut() -> Box<dyn Corrector>>>,
+) -> Result<Vec<ProfilerAccuracyRow>> {
+    let offline = calibrate(calib);
+    let mut arms: Vec<(String, EnergyProfiler)> = vec![
+        (
+            "gbdt-only".into(),
+            EnergyProfiler::offline_only(offline.clone()),
+        ),
+        (
+            "gbdt+ewma".into(),
+            EnergyProfiler::with_correctors(offline.clone(), || {
+                Box::new(EwmaCorrector::default())
+            }),
+        ),
+    ];
+    if let Some(mut make) = gru {
+        arms.push((
+            "gbdt+gru".into(),
+            EnergyProfiler::with_correctors(offline.clone(), &mut *make),
+        ));
+    }
+
+    let trace = ConditionTrace::stairs(seg_s);
+    let g = zoo::yolov2();
+    let mut rows = Vec::new();
+    for (name, mut prof) in arms {
+        let mut dev = Device::new(DeviceConfig {
+            seed,
+            ..DeviceConfig::snapdragon_855()
+        });
+        let mut phase = usize::MAX;
+        let mut abs_e = Vec::new();
+        let mut abs_l = Vec::new();
+        let mut op_i = 0usize;
+        while dev.time_s() < trace.total_duration_s() {
+            // apply the trace's condition when the phase changes
+            let want = trace.at(dev.time_s());
+            let cur = trace
+                .phases
+                .iter()
+                .position(|p| std::ptr::eq(&p.condition, want))
+                .unwrap_or(0);
+            if cur != phase {
+                dev.apply_condition(&want.spec);
+                phase = cur;
+            }
+            let op = &g.ops[op_i % g.num_ops()];
+            op_i += 1;
+            let mut ctx = ExecCtx::fresh(vec![0.0; op.in_shapes.len()]);
+            ctx.new_run_cpu = false;
+            ctx.new_run_gpu = false;
+            let snap = dev.snapshot();
+            let pred = prof.predict(op, Placement::GPU, &ctx, &snap);
+            let truth = dev.measure(op, Placement::GPU, &ctx);
+            abs_e.push(((pred.energy_j - truth.energy_j) / truth.energy_j).abs());
+            abs_l.push(((pred.latency_s - truth.latency_s) / truth.latency_s).abs());
+            prof.observe(op, Placement::GPU, &ctx, &snap, &truth);
+            dev.advance(truth.latency_s, 0.0, 1.0);
+        }
+        rows.push(ProfilerAccuracyRow {
+            arm: name,
+            energy_mape: abs_e.iter().sum::<f64>() / abs_e.len() as f64 * 100.0,
+            latency_mape: abs_l.iter().sum::<f64>() / abs_l.len() as f64 * 100.0,
+            observations: abs_e.len(),
+        });
+    }
+    Ok(rows)
+}
+
+// ---------------------------------------------------------------------------
+// A2 — DP optimality + decision runtime
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct DpComparisonRow {
+    pub case: String,
+    pub score: f64,
+    /// Score relative to the best policy in the case (1.0 = optimal).
+    pub relative: f64,
+    pub solve_us: f64,
+}
+
+/// A small random conv chain for exhaustive-vs-DP checks.
+pub fn random_chain(n: usize, seed: u64) -> ModelGraph {
+    let mut rng = crate::util::Prng::new(seed);
+    let mut b = GraphBuilder::new("chain", Shape::nchw(1, 8, 32, 32));
+    let mut prev = Src::Input;
+    for i in 0..n {
+        let oc = [8usize, 16, 24, 32][rng.below(4)];
+        let k = if rng.chance(0.3) { 1 } else { 3 };
+        let id = b.push(
+            &format!("c{i}"),
+            OpKind::Conv2d {
+                kernel: k,
+                stride: 1,
+                pad: k / 2,
+                out_c: oc,
+                groups: 1,
+                act: ActKind::Relu,
+            },
+            &[prev],
+        );
+        prev = Src::Op(id);
+    }
+    b.build()
+}
+
+/// A2: exhaustive vs DP vs greedy vs CoDL on a small chain (exact check),
+/// plus DP runtime on the full zoo.
+pub fn dp_comparison(seed: u64) -> Result<Vec<DpComparisonRow>> {
+    let mut dev = Device::new(DeviceConfig {
+        noise_sigma: 0.0,
+        drift_sigma: 0.0,
+        ..DeviceConfig::snapdragon_855()
+    });
+    let mut spec = WorkloadCondition::moderate().spec;
+    spec.cpu_bg_sigma = 0.0;
+    spec.cpu_burst = 0.0;
+    spec.gpu_bg_sigma = 0.0;
+    spec.gpu_burst = 0.0;
+    spec.drift_sigma = 0.0;
+    dev.apply_condition(&spec);
+    let snap = dev.snapshot();
+    let obj = Objective::MinEdp;
+    let choices = vec![
+        Placement::CPU,
+        Placement::GPU,
+        Placement::Split { cpu_frac: 0.15 },
+    ];
+
+    let mut rows = Vec::new();
+    let g = random_chain(8, seed);
+
+    let mut run = |name: &str, plan: Result<crate::partition::Plan>, t_us: f64| {
+        if let Ok(plan) = plan {
+            let c = evaluate(&g, &plan.placements, &dev, &snap);
+            rows.push(DpComparisonRow {
+                case: format!("chain8/{name}"),
+                score: obj.score(c.energy_j, c.latency_s),
+                relative: 0.0, // filled below
+                solve_us: t_us,
+            });
+        }
+    };
+
+    let t0 = Instant::now();
+    let ex = ExhaustivePartitioner::new(obj, choices.clone()).partition(&g, &dev, &snap);
+    run("exhaustive", ex, t0.elapsed().as_secs_f64() * 1e6);
+    let t0 = Instant::now();
+    let dp = DpPartitioner::new(obj)
+        .with_choices(choices.clone())
+        .partition(&g, &dev, &snap);
+    run("dp", dp, t0.elapsed().as_secs_f64() * 1e6);
+    let t0 = Instant::now();
+    let gr = GreedyEnergyPartitioner::default().partition(&g, &dev, &snap);
+    run("greedy", gr, t0.elapsed().as_secs_f64() * 1e6);
+    let t0 = Instant::now();
+    let cd = CodlPartitioner::default().partition(&g, &dev, &snap);
+    run("codl", cd, t0.elapsed().as_secs_f64() * 1e6);
+
+    let best = rows
+        .iter()
+        .map(|r| r.score)
+        .fold(f64::INFINITY, f64::min);
+    for r in &mut rows {
+        r.relative = r.score / best;
+    }
+
+    // DP runtime across the zoo + latency-bucket pruning ablation (A6)
+    for name in zoo::names() {
+        let g = zoo::by_name(name).unwrap();
+        for buckets in [4usize, 64, 256] {
+            let dp = DpPartitioner::new(obj).with_buckets(buckets);
+            let t0 = Instant::now();
+            let plan = dp.partition(&g, &dev, &snap)?;
+            let us = t0.elapsed().as_secs_f64() * 1e6;
+            let c = evaluate(&g, &plan.placements, &dev, &snap);
+            rows.push(DpComparisonRow {
+                case: format!("{name}/dp-b{buckets}"),
+                score: obj.score(c.energy_j, c.latency_s),
+                relative: 1.0,
+                solve_us: us,
+            });
+        }
+    }
+    Ok(rows)
+}
+
+// ---------------------------------------------------------------------------
+// A3 — incremental vs full repartitioning
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct IncrementalRow {
+    pub scheme: String,
+    pub decision_us: f64,
+    /// EDP of the repaired plan over the remaining ops, relative to the
+    /// full re-solve (1.0 = matches full quality).
+    pub edp_vs_full: f64,
+}
+
+/// A3: a plan made under moderate goes stale when the device switches to
+/// high; compare full re-solve vs windowed repairs at frontier 10.
+pub fn incremental_vs_full(windows: &[usize]) -> Result<Vec<IncrementalRow>> {
+    let frozen = |cond: WorkloadCondition| {
+        let mut d = Device::new(DeviceConfig {
+            noise_sigma: 0.0,
+            drift_sigma: 0.0,
+            ..DeviceConfig::snapdragon_855()
+        });
+        let mut c = cond.spec;
+        c.cpu_bg_sigma = 0.0;
+        c.cpu_burst = 0.0;
+        c.gpu_bg_sigma = 0.0;
+        c.gpu_burst = 0.0;
+        c.drift_sigma = 0.0;
+        d.apply_condition(&c);
+        d
+    };
+    let g = zoo::yolov2();
+    let frontier = 10usize;
+    let dp = DpPartitioner::new(Objective::MinEdp);
+    let d_mod = frozen(WorkloadCondition::moderate());
+    let stale = dp.solve(&g, &d_mod, &d_mod.snapshot())?;
+    let d_high = frozen(WorkloadCondition::high());
+    let snap = d_high.snapshot();
+
+    // tail-only evaluator (cost from `frontier` on)
+    let tail_cost = |placements: &[Placement]| {
+        let inc = IncrementalRepartitioner::new(dp.clone(), 1);
+        let plan = crate::partition::Plan {
+            placements: placements.to_vec(),
+            predicted: Default::default(),
+            policy: "eval".into(),
+        };
+        inc.remaining_cost(&g, &plan, frontier, &d_high, &snap, None)
+            .unwrap()
+    };
+
+    // full re-solve of everything from the frontier
+    let t0 = Instant::now();
+    let full = dp.solve_range(&g, &d_high, &snap, frontier, g.num_ops(), &stale.placements, None)?;
+    let full_us = t0.elapsed().as_secs_f64() * 1e6;
+    let full_edp = {
+        let c = tail_cost(&full.placements);
+        c.energy_j * c.latency_s
+    };
+
+    let mut rows = vec![IncrementalRow {
+        scheme: "full".into(),
+        decision_us: full_us,
+        edp_vs_full: 1.0,
+    }];
+    let stale_c = tail_cost(&stale.placements);
+    rows.push(IncrementalRow {
+        scheme: "stale (no repair)".into(),
+        decision_us: 0.0,
+        edp_vs_full: stale_c.energy_j * stale_c.latency_s / full_edp,
+    });
+    for &w in windows {
+        let inc = IncrementalRepartitioner::new(dp.clone(), w);
+        let t0 = Instant::now();
+        let patched = inc.repartition(&g, &stale, frontier, &d_high, &snap, None)?;
+        let us = t0.elapsed().as_secs_f64() * 1e6;
+        let c = tail_cost(&patched.placements);
+        rows.push(IncrementalRow {
+            scheme: format!("window-{w}"),
+            decision_us: us,
+            edp_vs_full: c.energy_j * c.latency_s / full_edp,
+        });
+    }
+    Ok(rows)
+}
+
+// ---------------------------------------------------------------------------
+// A4 — responsiveness across a condition switch
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct ResponsivenessRow {
+    pub policy: PolicyKind,
+    /// Mean latency in the 2 s after the moderate→high switch.
+    pub post_switch_ms: f64,
+    /// Steady-state mean latency in high (after adaptation).
+    pub steady_high_ms: f64,
+    /// Adaptation overshoot: post-switch / steady.
+    pub overshoot: f64,
+    pub repartitions: usize,
+}
+
+/// A4: closed-loop serving across a moderate→high switch; how fast does
+/// each policy's latency settle to its steady-state-high level?
+pub fn responsiveness(calib: &CalibConfig, seed: u64) -> Result<Vec<ResponsivenessRow>> {
+    let mut rows = Vec::new();
+    for policy in [PolicyKind::MaceGpu, PolicyKind::Codl, PolicyKind::AdaOper] {
+        let mut engine = Engine::new(EngineConfig {
+            policy,
+            condition: ConditionKind::Moderate,
+            seed,
+            calib: calib.clone(),
+            ..Default::default()
+        });
+        let spec = StreamSpec::new(
+            0,
+            zoo::yolov2(),
+            Arrival::Periodic { hz: 30.0, jitter: 0.0 },
+            0.5,
+        );
+        // phase 1: settle under moderate
+        let _ = engine.run_closed_loop(&spec, 10)?;
+        // switch — the monitor must notice and the controller re-plan
+        engine.apply_condition(&WorkloadCondition::high());
+        let r_post = engine.run_closed_loop(&spec, 8)?;
+        let r_steady = engine.run_closed_loop(&spec, 20)?;
+        let post = r_post.latency.as_ref().map(|l| l.mean).unwrap_or(f64::NAN);
+        let steady = r_steady.latency.as_ref().map(|l| l.mean).unwrap_or(f64::NAN);
+        rows.push(ResponsivenessRow {
+            policy,
+            post_switch_ms: post * 1e3,
+            steady_high_ms: steady * 1e3,
+            overshoot: post / steady,
+            repartitions: r_post.repartitions + r_steady.repartitions,
+        });
+    }
+    Ok(rows)
+}
+
+// ---------------------------------------------------------------------------
+// A5 — concurrency scaling
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct ConcurrencyRow {
+    pub policy: PolicyKind,
+    pub streams: usize,
+    pub throughput_hz: f64,
+    pub p95_ms: f64,
+    pub mj_per_inf: f64,
+    pub miss_rate: f64,
+}
+
+/// A5: 1–4 concurrent app streams (different models), open loop.
+pub fn concurrency_scaling(
+    calib: &CalibConfig,
+    seed: u64,
+    duration_s: f64,
+) -> Result<Vec<ConcurrencyRow>> {
+    let zoo_mix: [&str; 4] = ["yolov2-tiny", "mobilenetv1", "resnet18", "yolov2"];
+    let mut rows = Vec::new();
+    for policy in [PolicyKind::MaceGpu, PolicyKind::Codl, PolicyKind::AdaOper] {
+        for k in 1..=4usize {
+            let mut engine = Engine::new(EngineConfig {
+                policy,
+                condition: ConditionKind::Moderate,
+                duration_s,
+                seed,
+                calib: calib.clone(),
+                ..Default::default()
+            });
+            let streams: Vec<StreamSpec> = (0..k)
+                .map(|i| {
+                    StreamSpec::new(
+                        i,
+                        zoo::by_name(zoo_mix[i]).unwrap(),
+                        Arrival::Poisson { hz: 3.0 },
+                        0.6,
+                    )
+                })
+                .collect();
+            let r = engine.run(&streams)?;
+            rows.push(ConcurrencyRow {
+                policy,
+                streams: k,
+                throughput_hz: r.throughput_hz,
+                p95_ms: r
+                    .latency
+                    .as_ref()
+                    .map(|l| l.p90 * 1e3)
+                    .unwrap_or(f64::NAN),
+                mj_per_inf: r.j_per_inference * 1e3,
+                miss_rate: r.miss_rate,
+            });
+        }
+    }
+    Ok(rows)
+}
+
+// shared: initial residency helper referenced by doc examples
+#[allow(dead_code)]
+fn input_residency() -> f64 {
+    INPUT_CPU_FRAC
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::profiler::gbdt::GbdtParams;
+
+    fn small_calib() -> CalibConfig {
+        CalibConfig {
+            samples: 1500,
+            seed: 3,
+            gbdt: GbdtParams {
+                trees: 50,
+                ..Default::default()
+            },
+        }
+    }
+
+    #[test]
+    fn a1_correction_beats_gbdt_only() {
+        let rows = profiler_accuracy(&small_calib(), 2.0, 11, None).unwrap();
+        let gbdt = rows.iter().find(|r| r.arm == "gbdt-only").unwrap();
+        let ewma = rows.iter().find(|r| r.arm == "gbdt+ewma").unwrap();
+        assert!(gbdt.observations > 50);
+        assert!(
+            ewma.energy_mape < gbdt.energy_mape,
+            "ewma {} vs gbdt {}",
+            ewma.energy_mape,
+            gbdt.energy_mape
+        );
+    }
+
+    #[test]
+    fn a2_dp_matches_exhaustive() {
+        let rows = dp_comparison(5).unwrap();
+        let dp = rows.iter().find(|r| r.case == "chain8/dp").unwrap();
+        let ex = rows.iter().find(|r| r.case == "chain8/exhaustive").unwrap();
+        assert!(
+            dp.score <= ex.score * 1.0001,
+            "dp {} vs exhaustive {}",
+            dp.score,
+            ex.score
+        );
+        // and the DP is orders of magnitude faster
+        assert!(dp.solve_us < ex.solve_us);
+    }
+
+    #[test]
+    fn a3_window_quality_improves_with_size() {
+        let rows = incremental_vs_full(&[4, 16]).unwrap();
+        let stale = rows.iter().find(|r| r.scheme.starts_with("stale")).unwrap();
+        let w16 = rows.iter().find(|r| r.scheme == "window-16").unwrap();
+        // repairing must not be worse than doing nothing
+        assert!(w16.edp_vs_full <= stale.edp_vs_full * 1.0001);
+        // windowed decisions are cheaper than the full solve
+        let full = rows.iter().find(|r| r.scheme == "full").unwrap();
+        let w4 = rows.iter().find(|r| r.scheme == "window-4").unwrap();
+        assert!(w4.decision_us < full.decision_us);
+    }
+}

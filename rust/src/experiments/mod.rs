@@ -1,0 +1,16 @@
+//! Experiment runners — the code that regenerates every figure of the
+//! paper plus this repo's ablations. The CLI (`adaoper fig2`, …), the
+//! examples and the `cargo bench` targets are all thin wrappers over these
+//! functions, so numbers are reproducible from any entry point.
+//!
+//! | id  | runner                          | reproduces                         |
+//! |-----|---------------------------------|------------------------------------|
+//! | Fig2| [`fig2::run`]                   | Figure 2 (latency + energy eff.)   |
+//! | A1  | [`ablations::profiler_accuracy`]| profiler-stage accuracy under drift|
+//! | A2  | [`ablations::dp_comparison`]    | DP optimality + decision runtime   |
+//! | A3  | [`ablations::incremental_vs_full`]| windowed vs full re-solve        |
+//! | A4  | [`ablations::responsiveness`]   | adaptation across condition switch |
+//! | A5  | [`ablations::concurrency_scaling`]| 1–4 concurrent model streams    |
+
+pub mod ablations;
+pub mod fig2;

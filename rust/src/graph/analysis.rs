@@ -1,0 +1,160 @@
+//! Graph analytics consumed by the partitioner and the benches: live-value
+//! frontiers (sizing the DP state space), chain segmentation (CoDL's
+//! grouping granularity), and FLOP/byte distributions.
+
+use super::graph::{ModelGraph, OpId};
+
+/// For every op index i, the set of ops whose outputs are still *live*
+/// (needed by some op ≥ i) just before executing op i, **excluding** the
+/// linear predecessor i−1. These are the extra assignments the frontier DP
+/// must remember. Empty everywhere for pure chains.
+pub fn live_extras(g: &ModelGraph) -> Vec<Vec<OpId>> {
+    let last = g.last_use();
+    let n = g.num_ops();
+    let mut out = vec![Vec::new(); n];
+    for i in 0..n {
+        for j in 0..i {
+            // j is live at i if some consumer of j executes at or after i.
+            if last[j] >= i && j + 1 != i {
+                // exclude the immediate predecessor (tracked by the DP
+                // chain state itself)
+                if g.ops[i].inputs.contains(&j) || last[j] > i {
+                    out[i].push(j);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Maximum number of simultaneously live op outputs across the graph
+/// (the DP's frontier width). Chains → 1.
+pub fn max_frontier(g: &ModelGraph) -> usize {
+    let last = g.last_use();
+    let n = g.num_ops();
+    let mut max_live = 1;
+    for i in 0..n {
+        let live = (0..i).filter(|&j| last[j] >= i).count();
+        max_live = max_live.max(live.max(1));
+    }
+    max_live
+}
+
+/// A maximal straight-line run of ops (no fan-in/fan-out inside). CoDL
+/// groups these into co-execution "chains" to amortize map/unmap overhead.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Segment {
+    pub ops: Vec<OpId>,
+}
+
+/// Split the (topologically ordered) op list into straight-line segments.
+/// A segment breaks after op i when op i has ≠1 consumers or its consumer
+/// is not i+1, and before op i when op i has ≠1 inputs.
+pub fn segments(g: &ModelGraph) -> Vec<Segment> {
+    let mut segs = Vec::new();
+    let mut cur: Vec<OpId> = Vec::new();
+    for i in 0..g.num_ops() {
+        let op = &g.ops[i];
+        let starts_new = op.inputs.len() != 1 || op.inputs[0] + 1 != i;
+        if starts_new && !cur.is_empty() {
+            segs.push(Segment {
+                ops: std::mem::take(&mut cur),
+            });
+        }
+        cur.push(i);
+        let ends = g.consumers[i].len() != 1 || g.consumers[i][0] != i + 1;
+        if ends {
+            segs.push(Segment {
+                ops: std::mem::take(&mut cur),
+            });
+        }
+    }
+    if !cur.is_empty() {
+        segs.push(Segment { ops: cur });
+    }
+    segs
+}
+
+/// FLOP share of the top-k heaviest operators (perf reporting).
+pub fn flop_concentration(g: &ModelGraph, k: usize) -> f64 {
+    let mut fl: Vec<u64> = g.ops.iter().map(|o| o.flops).collect();
+    fl.sort_unstable_by(|a, b| b.cmp(a));
+    let total: u64 = fl.iter().sum();
+    if total == 0 {
+        return 0.0;
+    }
+    fl.iter().take(k).sum::<u64>() as f64 / total as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::zoo;
+
+    #[test]
+    fn chain_has_frontier_one_and_one_segment_per_run() {
+        let g = zoo::yolov2_tiny();
+        assert_eq!(max_frontier(&g), 1);
+        let segs = segments(&g);
+        let total: usize = segs.iter().map(|s| s.ops.len()).sum();
+        assert_eq!(total, g.num_ops());
+        // pure chain → a single maximal segment
+        assert_eq!(segs.len(), 1);
+    }
+
+    #[test]
+    fn yolov2_frontier_two() {
+        // conv13's output stays live from pool5 through the route concat
+        let g = zoo::yolov2();
+        assert_eq!(max_frontier(&g), 2);
+    }
+
+    #[test]
+    fn resnet_frontier_two() {
+        let g = zoo::resnet18();
+        assert_eq!(max_frontier(&g), 2);
+    }
+
+    #[test]
+    fn segments_cover_all_ops_once() {
+        for name in zoo::names() {
+            let g = zoo::by_name(name).unwrap();
+            let segs = segments(&g);
+            let mut seen = vec![false; g.num_ops()];
+            for s in &segs {
+                for &i in &s.ops {
+                    assert!(!seen[i], "{name}: op {i} in two segments");
+                    seen[i] = true;
+                }
+                // segment interior must be straight-line
+                for w in s.ops.windows(2) {
+                    assert_eq!(g.ops[w[1]].inputs, vec![w[0]], "{name}: non-chain interior");
+                }
+            }
+            assert!(seen.iter().all(|&x| x), "{name}: op missing from segments");
+        }
+    }
+
+    #[test]
+    fn live_extras_empty_for_chains() {
+        let g = zoo::yolov2_tiny();
+        assert!(live_extras(&g).iter().all(|v| v.is_empty()));
+    }
+
+    #[test]
+    fn live_extras_nonempty_for_yolov2() {
+        let g = zoo::yolov2();
+        let extras = live_extras(&g);
+        assert!(extras.iter().any(|v| !v.is_empty()));
+    }
+
+    #[test]
+    fn flop_concentration_monotone() {
+        let g = zoo::yolov2();
+        let c1 = flop_concentration(&g, 1);
+        let c5 = flop_concentration(&g, 5);
+        let call = flop_concentration(&g, g.num_ops());
+        assert!(c1 <= c5 && c5 <= call);
+        assert!((call - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,301 @@
+//! Model graph: a DAG of operator nodes in topological order, plus the
+//! builder the zoo uses. The node list is *always* stored topologically
+//! sorted (the builder can only reference existing nodes), which the
+//! partitioner's bottom-up DP relies on.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+use super::op::OpKind;
+use super::tensor::Shape;
+
+/// Index of an operator node within its graph.
+pub type OpId = usize;
+
+/// One operator instance.
+#[derive(Debug, Clone)]
+pub struct OpNode {
+    pub id: OpId,
+    pub name: String,
+    pub kind: OpKind,
+    /// Producer ops (empty → consumes the model input).
+    pub inputs: Vec<OpId>,
+    pub in_shapes: Vec<Shape>,
+    pub out_shape: Shape,
+    pub flops: u64,
+    pub weight_bytes: u64,
+    pub activation_bytes: u64,
+}
+
+impl OpNode {
+    /// Arithmetic intensity: FLOPs per byte of activation traffic.
+    pub fn arithmetic_intensity(&self) -> f64 {
+        if self.activation_bytes == 0 {
+            0.0
+        } else {
+            self.flops as f64 / self.activation_bytes as f64
+        }
+    }
+}
+
+/// A DNN model as a topologically ordered operator DAG.
+#[derive(Debug, Clone)]
+pub struct ModelGraph {
+    pub name: String,
+    pub input_shape: Shape,
+    pub ops: Vec<OpNode>,
+    /// consumers[i] = ops that read op i's output.
+    pub consumers: Vec<Vec<OpId>>,
+}
+
+impl ModelGraph {
+    pub fn num_ops(&self) -> usize {
+        self.ops.len()
+    }
+
+    /// Ids of ops whose output is the model output (no consumers).
+    pub fn outputs(&self) -> Vec<OpId> {
+        (0..self.ops.len())
+            .filter(|&i| self.consumers[i].is_empty())
+            .collect()
+    }
+
+    pub fn total_flops(&self) -> u64 {
+        self.ops.iter().map(|o| o.flops).sum()
+    }
+
+    pub fn total_weight_bytes(&self) -> u64 {
+        self.ops.iter().map(|o| o.weight_bytes).sum()
+    }
+
+    /// Validate topological order and shape consistency.
+    pub fn validate(&self) -> Result<()> {
+        if self.ops.is_empty() {
+            bail!("graph `{}` has no operators", self.name);
+        }
+        for (i, op) in self.ops.iter().enumerate() {
+            if op.id != i {
+                bail!("op {} has id {} (must equal index)", i, op.id);
+            }
+            if op.inputs.len() != op.kind.arity() && !op.inputs.is_empty() {
+                bail!(
+                    "op {} `{}` has {} inputs, kind arity {}",
+                    i,
+                    op.name,
+                    op.inputs.len(),
+                    op.kind.arity()
+                );
+            }
+            for &j in &op.inputs {
+                if j >= i {
+                    bail!("op {} reads op {} — not topologically ordered", i, j);
+                }
+            }
+            let expect = op.kind.out_shape(&op.in_shapes);
+            if expect != op.out_shape {
+                bail!(
+                    "op {} `{}` out shape {} != computed {}",
+                    i,
+                    op.name,
+                    op.out_shape,
+                    expect
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// For each op, the id of the last op that reads its output (used by
+    /// the frontier DP to know when an assignment can be dropped). Output
+    /// ops get `num_ops` (live until the end).
+    pub fn last_use(&self) -> Vec<usize> {
+        let n = self.ops.len();
+        (0..n)
+            .map(|i| self.consumers[i].iter().copied().max().unwrap_or(n))
+            .collect()
+    }
+
+    /// Human-readable per-op table (CLI `zoo` subcommand).
+    pub fn describe(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!(
+            "model {} input {} ops {} GFLOPs {:.2} weights {:.1} MB\n",
+            self.name,
+            self.input_shape,
+            self.ops.len(),
+            self.total_flops() as f64 / 1e9,
+            self.total_weight_bytes() as f64 / 1e6
+        ));
+        for op in &self.ops {
+            s.push_str(&format!(
+                "  [{:>3}] {:<22} {:<16} out {:<16} {:>10.1} MFLOP {:>8.2} MB act\n",
+                op.id,
+                op.name,
+                op.kind.to_string(),
+                op.out_shape.to_string(),
+                op.flops as f64 / 1e6,
+                op.activation_bytes as f64 / 1e6,
+            ));
+        }
+        s
+    }
+}
+
+/// Incremental graph builder. Ops must reference already-built nodes, so
+/// the result is topologically sorted by construction.
+pub struct GraphBuilder {
+    name: String,
+    input_shape: Shape,
+    ops: Vec<OpNode>,
+    names: HashMap<String, OpId>,
+}
+
+/// Source of an op's input: the model input or a previous op.
+#[derive(Debug, Clone, Copy)]
+pub enum Src {
+    Input,
+    Op(OpId),
+}
+
+impl GraphBuilder {
+    pub fn new(name: &str, input_shape: Shape) -> Self {
+        GraphBuilder {
+            name: name.to_string(),
+            input_shape,
+            ops: Vec::new(),
+            names: HashMap::new(),
+        }
+    }
+
+    fn shape_of(&self, src: Src) -> Shape {
+        match src {
+            Src::Input => self.input_shape,
+            Src::Op(id) => self.ops[id].out_shape,
+        }
+    }
+
+    /// Append an operator; returns its id.
+    pub fn push(&mut self, name: &str, kind: OpKind, srcs: &[Src]) -> OpId {
+        assert_eq!(
+            srcs.len(),
+            kind.arity(),
+            "op `{name}` arity mismatch"
+        );
+        let in_shapes: Vec<Shape> = srcs.iter().map(|&s| self.shape_of(s)).collect();
+        let inputs: Vec<OpId> = srcs
+            .iter()
+            .filter_map(|s| match s {
+                Src::Op(id) => Some(*id),
+                Src::Input => None,
+            })
+            .collect();
+        let out_shape = kind.out_shape(&in_shapes);
+        let id = self.ops.len();
+        assert!(
+            self.names.insert(name.to_string(), id).is_none(),
+            "duplicate op name `{name}`"
+        );
+        self.ops.push(OpNode {
+            id,
+            name: name.to_string(),
+            kind,
+            inputs,
+            in_shapes: in_shapes.clone(),
+            out_shape,
+            flops: kind.flops(&in_shapes, out_shape),
+            weight_bytes: kind.weight_bytes(&in_shapes),
+            activation_bytes: kind.activation_bytes(&in_shapes, out_shape),
+        });
+        id
+    }
+
+    /// Finish: compute consumer lists and validate.
+    pub fn build(self) -> ModelGraph {
+        let mut consumers = vec![Vec::new(); self.ops.len()];
+        for op in &self.ops {
+            for &j in &op.inputs {
+                consumers[j].push(op.id);
+            }
+        }
+        let g = ModelGraph {
+            name: self.name,
+            input_shape: self.input_shape,
+            ops: self.ops,
+            consumers,
+        };
+        g.validate().expect("builder produced invalid graph");
+        g
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::op::ActKind;
+
+    fn conv(oc: usize) -> OpKind {
+        OpKind::Conv2d {
+            kernel: 3,
+            stride: 1,
+            pad: 1,
+            out_c: oc,
+            groups: 1,
+            act: ActKind::Leaky,
+        }
+    }
+
+    #[test]
+    fn chain_builds_and_validates() {
+        let mut b = GraphBuilder::new("t", Shape::nchw(1, 3, 32, 32));
+        let c1 = b.push("c1", conv(8), &[Src::Input]);
+        let p1 = b.push("p1", OpKind::MaxPool { kernel: 2, stride: 2 }, &[Src::Op(c1)]);
+        let c2 = b.push("c2", conv(16), &[Src::Op(p1)]);
+        let g = b.build();
+        assert_eq!(g.num_ops(), 3);
+        assert_eq!(g.outputs(), vec![c2]);
+        assert_eq!(g.consumers[c1], vec![p1]);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn dag_with_skip_connection() {
+        let mut b = GraphBuilder::new("skip", Shape::nchw(1, 8, 16, 16));
+        let c1 = b.push("c1", conv(8), &[Src::Input]);
+        let c2 = b.push("c2", conv(8), &[Src::Op(c1)]);
+        let add = b.push("add", OpKind::Add, &[Src::Op(c1), Src::Op(c2)]);
+        let g = b.build();
+        assert_eq!(g.outputs(), vec![add]);
+        // c1 feeds both c2 and add
+        assert_eq!(g.consumers[c1], vec![c2, add]);
+        let lu = g.last_use();
+        assert_eq!(lu[c1], add);
+        assert_eq!(lu[add], g.num_ops());
+    }
+
+    #[test]
+    fn total_flops_sums() {
+        let mut b = GraphBuilder::new("t", Shape::nchw(1, 3, 8, 8));
+        b.push("c1", conv(4), &[Src::Input]);
+        let g = b.build();
+        assert_eq!(g.total_flops(), g.ops[0].flops);
+    }
+
+    #[test]
+    #[should_panic]
+    fn duplicate_name_panics() {
+        let mut b = GraphBuilder::new("t", Shape::nchw(1, 3, 8, 8));
+        b.push("x", conv(4), &[Src::Input]);
+        b.push("x", conv(4), &[Src::Input]);
+    }
+
+    #[test]
+    fn describe_contains_ops() {
+        let mut b = GraphBuilder::new("t", Shape::nchw(1, 3, 8, 8));
+        b.push("c1", conv(4), &[Src::Input]);
+        let g = b.build();
+        let d = g.describe();
+        assert!(d.contains("c1"));
+        assert!(d.contains("model t"));
+    }
+}

@@ -1,0 +1,17 @@
+//! DNN graph intermediate representation.
+//!
+//! The partitioner, profiler and SoC simulator all operate on this IR: a
+//! DAG of operators with NCHW tensor shapes and exact FLOP / byte
+//! analytics. The zoo ([`zoo`]) provides the paper's workload (YOLOv2) and
+//! companions (YOLOv2-tiny, MobileNetV1, ResNet-18) plus the small
+//! executable model whose blocks are AOT-compiled to HLO artifacts.
+
+pub mod analysis;
+pub mod graph;
+pub mod op;
+pub mod tensor;
+pub mod zoo;
+
+pub use graph::{GraphBuilder, ModelGraph, OpId, OpNode};
+pub use op::{ActKind, OpKind};
+pub use tensor::Shape;

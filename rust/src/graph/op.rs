@@ -1,0 +1,352 @@
+//! Operator kinds and their compute / memory cost formulas.
+//!
+//! The cost formulas (FLOPs, weight bytes, activation traffic) are exact
+//! functions of the operator parameters and input shape — they are what the
+//! SoC latency/energy model and the profiler features consume. BatchNorm is
+//! assumed folded into the preceding convolution (standard for mobile
+//! inference engines like MACE/TFLite); a standalone `BatchNorm` kind exists
+//! for un-fused graphs.
+
+use std::fmt;
+
+use super::tensor::Shape;
+
+/// Fused activation functions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ActKind {
+    None,
+    Relu,
+    /// Leaky ReLU (YOLO uses slope 0.1).
+    Leaky,
+    /// Linear output (detection heads).
+    Linear,
+}
+
+/// Operator kind with compile-time parameters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OpKind {
+    /// 2-D convolution (+ folded BN + fused activation).
+    /// `groups == in_c` expresses a depthwise convolution.
+    Conv2d {
+        kernel: usize,
+        stride: usize,
+        pad: usize,
+        out_c: usize,
+        groups: usize,
+        act: ActKind,
+    },
+    MaxPool {
+        kernel: usize,
+        stride: usize,
+    },
+    /// Global average pool to 1×1.
+    AvgPoolGlobal,
+    FullyConnected {
+        out_features: usize,
+    },
+    /// Standalone activation (un-fused graphs only).
+    Activation(ActKind),
+    /// Standalone batch normalization (un-fused graphs only).
+    BatchNorm,
+    /// Elementwise sum of two equal-shape inputs (residual add).
+    Add,
+    /// Channel concatenation of two inputs with equal spatial dims.
+    Concat,
+    /// Space-to-depth (YOLOv2 "reorg"): H,W ↓ stride, C × stride².
+    Reorg {
+        stride: usize,
+    },
+    /// Nearest-neighbour upsample.
+    Upsample {
+        factor: usize,
+    },
+    Softmax,
+}
+
+impl OpKind {
+    /// Short kind label (profiler feature + display).
+    pub fn label(&self) -> &'static str {
+        match self {
+            OpKind::Conv2d { groups, kernel, .. } => {
+                if *groups > 1 {
+                    "dwconv"
+                } else if *kernel == 1 {
+                    "conv1x1"
+                } else {
+                    "conv"
+                }
+            }
+            OpKind::MaxPool { .. } => "maxpool",
+            OpKind::AvgPoolGlobal => "avgpool",
+            OpKind::FullyConnected { .. } => "fc",
+            OpKind::Activation(_) => "act",
+            OpKind::BatchNorm => "bn",
+            OpKind::Add => "add",
+            OpKind::Concat => "concat",
+            OpKind::Reorg { .. } => "reorg",
+            OpKind::Upsample { .. } => "upsample",
+            OpKind::Softmax => "softmax",
+        }
+    }
+
+    /// Stable small integer id of the kind (profiler one-hot feature).
+    pub fn kind_id(&self) -> usize {
+        match self {
+            OpKind::Conv2d { groups, kernel, .. } => {
+                if *groups > 1 {
+                    1
+                } else if *kernel == 1 {
+                    2
+                } else {
+                    0
+                }
+            }
+            OpKind::MaxPool { .. } => 3,
+            OpKind::AvgPoolGlobal => 4,
+            OpKind::FullyConnected { .. } => 5,
+            OpKind::Activation(_) => 6,
+            OpKind::BatchNorm => 7,
+            OpKind::Add => 8,
+            OpKind::Concat => 9,
+            OpKind::Reorg { .. } => 10,
+            OpKind::Upsample { .. } => 11,
+            OpKind::Softmax => 12,
+        }
+    }
+
+    /// Number of distinct `kind_id` values.
+    pub const NUM_KINDS: usize = 13;
+
+    /// Output shape given the input shapes (1 or 2 inputs).
+    pub fn out_shape(&self, inputs: &[Shape]) -> Shape {
+        match *self {
+            OpKind::Conv2d {
+                kernel,
+                stride,
+                pad,
+                out_c,
+                groups,
+                ..
+            } => {
+                let x = inputs[0];
+                assert!(
+                    x.c % groups == 0,
+                    "groups {groups} must divide in_c {}",
+                    x.c
+                );
+                x.conv_out(out_c, kernel, stride, pad)
+            }
+            OpKind::MaxPool { kernel, stride } => inputs[0].pool_out(kernel, stride),
+            OpKind::AvgPoolGlobal => Shape::vec(inputs[0].n, inputs[0].c),
+            OpKind::FullyConnected { out_features } => Shape::vec(inputs[0].n, out_features),
+            OpKind::Activation(_) | OpKind::BatchNorm | OpKind::Softmax => inputs[0],
+            OpKind::Add => {
+                assert_eq!(inputs[0], inputs[1], "Add requires equal shapes");
+                inputs[0]
+            }
+            OpKind::Concat => {
+                let (a, b) = (inputs[0], inputs[1]);
+                assert_eq!((a.n, a.h, a.w), (b.n, b.h, b.w), "Concat spatial mismatch");
+                Shape::nchw(a.n, a.c + b.c, a.h, a.w)
+            }
+            OpKind::Reorg { stride } => {
+                let x = inputs[0];
+                assert!(x.h % stride == 0 && x.w % stride == 0);
+                Shape::nchw(x.n, x.c * stride * stride, x.h / stride, x.w / stride)
+            }
+            OpKind::Upsample { factor } => {
+                let x = inputs[0];
+                Shape::nchw(x.n, x.c, x.h * factor, x.w * factor)
+            }
+        }
+    }
+
+    /// Floating-point operations for this operator (multiply-accumulate
+    /// counted as 2 FLOPs, the convention MACE/CoDL use).
+    pub fn flops(&self, inputs: &[Shape], out: Shape) -> u64 {
+        match *self {
+            OpKind::Conv2d {
+                kernel, groups, ..
+            } => {
+                let in_c = inputs[0].c as u64;
+                let macs = out.elems() * (kernel as u64 * kernel as u64 * in_c / groups as u64);
+                2 * macs + out.elems() // +bias/act
+            }
+            OpKind::MaxPool { kernel, .. } => out.elems() * (kernel as u64 * kernel as u64),
+            OpKind::AvgPoolGlobal => inputs[0].elems(),
+            OpKind::FullyConnected { out_features } => {
+                2 * inputs[0].elems() * out_features as u64 + out_features as u64
+            }
+            OpKind::Activation(_) => out.elems(),
+            OpKind::BatchNorm => 2 * out.elems(),
+            OpKind::Add => out.elems(),
+            OpKind::Concat => 0,
+            OpKind::Reorg { .. } => 0,
+            OpKind::Upsample { .. } => out.elems(),
+            OpKind::Softmax => 5 * out.elems(),
+        }
+    }
+
+    /// Parameter (weight) bytes resident for this operator.
+    pub fn weight_bytes(&self, inputs: &[Shape]) -> u64 {
+        match *self {
+            OpKind::Conv2d {
+                kernel,
+                out_c,
+                groups,
+                ..
+            } => {
+                let in_c = inputs[0].c as u64;
+                let w = kernel as u64 * kernel as u64 * (in_c / groups as u64) * out_c as u64;
+                (w + out_c as u64) * 4
+            }
+            OpKind::FullyConnected { out_features } => {
+                (inputs[0].elems() * out_features as u64 + out_features as u64) * 4
+            }
+            OpKind::BatchNorm => inputs[0].c as u64 * 4 * 4, // scale/shift/mean/var
+            _ => 0,
+        }
+    }
+
+    /// Activation memory traffic: bytes read + bytes written (weights are
+    /// accounted separately — on repeated inference they stay resident).
+    pub fn activation_bytes(&self, inputs: &[Shape], out: Shape) -> u64 {
+        let read: u64 = inputs.iter().map(|s| s.bytes()).sum();
+        read + out.bytes()
+    }
+
+    /// Number of inputs this op consumes (1 or 2).
+    pub fn arity(&self) -> usize {
+        match self {
+            OpKind::Add | OpKind::Concat => 2,
+            _ => 1,
+        }
+    }
+}
+
+impl fmt::Display for OpKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match *self {
+            OpKind::Conv2d {
+                kernel,
+                stride,
+                out_c,
+                groups,
+                ..
+            } => {
+                if groups > 1 {
+                    write!(f, "dwconv{kernel}x{kernel}/{stride}")
+                } else {
+                    write!(f, "conv{kernel}x{kernel}/{stride}x{out_c}")
+                }
+            }
+            OpKind::MaxPool { kernel, stride } => write!(f, "maxpool{kernel}/{stride}"),
+            OpKind::AvgPoolGlobal => write!(f, "avgpool-g"),
+            OpKind::FullyConnected { out_features } => write!(f, "fc{out_features}"),
+            OpKind::Activation(_) => write!(f, "act"),
+            OpKind::BatchNorm => write!(f, "bn"),
+            OpKind::Add => write!(f, "add"),
+            OpKind::Concat => write!(f, "concat"),
+            OpKind::Reorg { stride } => write!(f, "reorg/{stride}"),
+            OpKind::Upsample { factor } => write!(f, "up x{factor}"),
+            OpKind::Softmax => write!(f, "softmax"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn conv(k: usize, s: usize, p: usize, oc: usize) -> OpKind {
+        OpKind::Conv2d {
+            kernel: k,
+            stride: s,
+            pad: p,
+            out_c: oc,
+            groups: 1,
+            act: ActKind::Leaky,
+        }
+    }
+
+    #[test]
+    fn conv_flops_formula() {
+        // 3x3x3→32 over 416² : 2 * 416*416*32 * 9*3 + out
+        let x = Shape::nchw(1, 3, 416, 416);
+        let k = conv(3, 1, 1, 32);
+        let out = k.out_shape(&[x]);
+        let macs = 416u64 * 416 * 32 * 9 * 3;
+        assert_eq!(k.flops(&[x], out), 2 * macs + out.elems());
+    }
+
+    #[test]
+    fn depthwise_flops_divide_by_groups() {
+        let x = Shape::nchw(1, 32, 112, 112);
+        let dw = OpKind::Conv2d {
+            kernel: 3,
+            stride: 1,
+            pad: 1,
+            out_c: 32,
+            groups: 32,
+            act: ActKind::Relu,
+        };
+        let out = dw.out_shape(&[x]);
+        let macs = 112u64 * 112 * 32 * 9; // in_c/groups = 1
+        assert_eq!(dw.flops(&[x], out), 2 * macs + out.elems());
+    }
+
+    #[test]
+    fn conv_weight_bytes() {
+        let x = Shape::nchw(1, 3, 416, 416);
+        let k = conv(3, 1, 1, 32);
+        assert_eq!(k.weight_bytes(&[x]), (9 * 3 * 32 + 32) * 4);
+    }
+
+    #[test]
+    fn reorg_shape() {
+        let x = Shape::nchw(1, 64, 26, 26);
+        let out = OpKind::Reorg { stride: 2 }.out_shape(&[x]);
+        assert_eq!(out, Shape::nchw(1, 256, 13, 13));
+    }
+
+    #[test]
+    fn concat_shape() {
+        let a = Shape::nchw(1, 256, 13, 13);
+        let b = Shape::nchw(1, 1024, 13, 13);
+        assert_eq!(
+            OpKind::Concat.out_shape(&[a, b]),
+            Shape::nchw(1, 1280, 13, 13)
+        );
+    }
+
+    #[test]
+    fn fc_shapes_and_flops() {
+        let x = Shape::vec(1, 512);
+        let fc = OpKind::FullyConnected { out_features: 1000 };
+        let out = fc.out_shape(&[x]);
+        assert_eq!(out, Shape::vec(1, 1000));
+        assert_eq!(fc.flops(&[x], out), 2 * 512 * 1000 + 1000);
+    }
+
+    #[test]
+    fn arity() {
+        assert_eq!(OpKind::Add.arity(), 2);
+        assert_eq!(OpKind::Concat.arity(), 2);
+        assert_eq!(OpKind::Softmax.arity(), 1);
+    }
+
+    #[test]
+    fn kind_ids_distinct_categories() {
+        assert_ne!(conv(3, 1, 1, 8).kind_id(), conv(1, 1, 0, 8).kind_id());
+        let dw = OpKind::Conv2d {
+            kernel: 3,
+            stride: 1,
+            pad: 1,
+            out_c: 8,
+            groups: 8,
+            act: ActKind::Relu,
+        };
+        assert_ne!(dw.kind_id(), conv(3, 1, 1, 8).kind_id());
+        assert!(dw.kind_id() < OpKind::NUM_KINDS);
+    }
+}

@@ -1,0 +1,136 @@
+//! NCHW tensor shapes and size arithmetic.
+
+use std::fmt;
+
+/// Bytes per element (the zoo uses f32 activations; mobile frameworks often
+/// run f16 on GPU — the transfer model accounts for that separately).
+pub const F32_BYTES: u64 = 4;
+
+/// An NCHW activation shape. Fully-connected tensors use `h = w = 1`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Shape {
+    pub n: usize,
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+}
+
+impl Shape {
+    pub const fn nchw(n: usize, c: usize, h: usize, w: usize) -> Shape {
+        Shape { n, c, h, w }
+    }
+
+    /// 1-D feature vector (e.g. FC activations).
+    pub const fn vec(n: usize, c: usize) -> Shape {
+        Shape { n, c, h: 1, w: 1 }
+    }
+
+    pub fn elems(&self) -> u64 {
+        self.n as u64 * self.c as u64 * self.h as u64 * self.w as u64
+    }
+
+    pub fn bytes(&self) -> u64 {
+        self.elems() * F32_BYTES
+    }
+
+    /// Output spatial size of a convolution/pool with `kernel`, `stride`,
+    /// `pad` applied to this shape.
+    pub fn conv_out(&self, out_c: usize, kernel: usize, stride: usize, pad: usize) -> Shape {
+        assert!(stride > 0);
+        assert!(
+            self.h + 2 * pad >= kernel && self.w + 2 * pad >= kernel,
+            "kernel {kernel} larger than padded input {}x{}",
+            self.h + 2 * pad,
+            self.w + 2 * pad
+        );
+        Shape {
+            n: self.n,
+            c: out_c,
+            h: (self.h + 2 * pad - kernel) / stride + 1,
+            w: (self.w + 2 * pad - kernel) / stride + 1,
+        }
+    }
+
+    /// "Same"-padded pooling with ceil semantics (darknet maxpool
+    /// stride-1 keeps the spatial size).
+    pub fn pool_out(&self, kernel: usize, stride: usize) -> Shape {
+        assert!(stride > 0);
+        let _ = kernel; // size preserved via ceil/same-padding semantics
+        if stride == 1 {
+            // darknet pads to keep size for stride-1 pools
+            return Shape { ..*self };
+        }
+        Shape {
+            n: self.n,
+            c: self.c,
+            h: self.h.div_ceil(stride),
+            w: self.w.div_ceil(stride),
+        }
+    }
+}
+
+impl fmt::Display for Shape {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}x{}x{}x{}", self.n, self.c, self.h, self.w)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn elems_and_bytes() {
+        let s = Shape::nchw(1, 3, 416, 416);
+        assert_eq!(s.elems(), 3 * 416 * 416);
+        assert_eq!(s.bytes(), 3 * 416 * 416 * 4);
+    }
+
+    #[test]
+    fn conv_out_same_padding() {
+        let s = Shape::nchw(1, 3, 416, 416);
+        let o = s.conv_out(32, 3, 1, 1);
+        assert_eq!(o, Shape::nchw(1, 32, 416, 416));
+    }
+
+    #[test]
+    fn conv_out_stride2() {
+        let s = Shape::nchw(1, 32, 224, 224);
+        let o = s.conv_out(64, 3, 2, 1);
+        assert_eq!(o, Shape::nchw(1, 64, 112, 112));
+    }
+
+    #[test]
+    fn conv_out_7x7_stride2_pad3() {
+        // ResNet stem: 224 → 112
+        let s = Shape::nchw(1, 3, 224, 224);
+        let o = s.conv_out(64, 7, 2, 3);
+        assert_eq!(o, Shape::nchw(1, 64, 112, 112));
+    }
+
+    #[test]
+    fn pool_halves() {
+        let s = Shape::nchw(1, 16, 416, 416);
+        assert_eq!(s.pool_out(2, 2), Shape::nchw(1, 16, 208, 208));
+    }
+
+    #[test]
+    fn pool_stride1_keeps_size() {
+        let s = Shape::nchw(1, 512, 13, 13);
+        assert_eq!(s.pool_out(2, 1), s);
+    }
+
+    #[test]
+    fn pool_ceil_mode() {
+        // ResNet maxpool 3x3/2 on 112 → 56 (with pad handled as ceil)
+        let s = Shape::nchw(1, 64, 112, 112);
+        assert_eq!(s.pool_out(3, 2).h, 56);
+    }
+
+    #[test]
+    #[should_panic]
+    fn conv_kernel_too_large_panics() {
+        let s = Shape::nchw(1, 3, 2, 2);
+        let _ = s.conv_out(8, 5, 1, 0);
+    }
+}

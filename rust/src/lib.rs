@@ -1,0 +1,52 @@
+//! # AdaOper — energy-efficient, responsive concurrent DNN inference
+//!
+//! Reproduction of *AdaOper: Energy-efficient and Responsive Concurrent DNN
+//! Inference on Mobile Devices* (ACM MobiSys '24) as a three-layer
+//! rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the coordinator: energy-aware operator
+//!   partitioning ([`partition`]), the runtime energy profiler
+//!   ([`profiler`]), and the concurrent serving engine ([`coordinator`]),
+//!   running against a calibrated Snapdragon-855 SoC simulator ([`soc`]).
+//! * **L2 (python/compile/model.py, build time)** — JAX forward functions
+//!   for the executable model blocks and the GRU corrector.
+//! * **L1 (python/compile/kernels/, build time)** — Pallas kernels
+//!   (conv-as-im2col-matmul, GRU cell), lowered with `interpret=True` and
+//!   exported as HLO text consumed by [`runtime`].
+//!
+//! Python never runs on the request path: `make artifacts` AOT-compiles all
+//! HLO once; the rust binary is self-contained afterwards.
+//!
+//! ## Quick tour
+//!
+//! ```no_run
+//! use adaoper::graph::zoo;
+//! use adaoper::partition::{dp::DpPartitioner, Objective, Partitioner};
+//! use adaoper::soc::{Device, DeviceConfig};
+//! use adaoper::workload::WorkloadCondition;
+//!
+//! let model = zoo::yolov2();
+//! let mut device = Device::new(DeviceConfig::snapdragon_855());
+//! device.apply_condition(&WorkloadCondition::high().spec);
+//! // plan against the device oracle (real systems plan via the profiler)
+//! let plan = DpPartitioner::new(Objective::MinEdp)
+//!     .partition(&model, &device, &device.snapshot())
+//!     .unwrap();
+//! println!("predicted energy: {:.1} mJ", plan.predicted.energy_j * 1e3);
+//! ```
+
+pub mod cli;
+pub mod config;
+pub mod experiments;
+pub mod coordinator;
+pub mod graph;
+pub mod metrics;
+pub mod partition;
+pub mod profiler;
+pub mod runtime;
+pub mod soc;
+pub mod util;
+pub mod workload;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,9 @@
+//! `adaoper` binary: the leader entrypoint. See `adaoper help`.
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = adaoper::cli::commands::run(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,108 @@
+//! Energy accounting: dynamic per-op energy plus static power over wall
+//! time, split per processor — the quantities behind "energy per
+//! inference" and "inferences per joule" (the paper's energy-efficiency
+//! metric).
+
+/// Accumulates energy over a serving run.
+#[derive(Debug, Clone, Default)]
+pub struct EnergyAccount {
+    dynamic_j: f64,
+    transfer_j: f64,
+    cpu_busy_s: f64,
+    gpu_busy_s: f64,
+    inferences: usize,
+}
+
+impl EnergyAccount {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add one op execution's measured cost.
+    pub fn add_op(&mut self, cost: &crate::soc::OpCost) {
+        self.dynamic_j += cost.energy_j;
+        self.transfer_j += cost.transfer_j;
+        self.cpu_busy_s += cost.cpu_busy_s;
+        self.gpu_busy_s += cost.gpu_busy_s;
+    }
+
+    pub fn finish_inference(&mut self) {
+        self.inferences += 1;
+    }
+
+    pub fn dynamic_j(&self) -> f64 {
+        self.dynamic_j
+    }
+
+    pub fn transfer_j(&self) -> f64 {
+        self.transfer_j
+    }
+
+    pub fn inferences(&self) -> usize {
+        self.inferences
+    }
+
+    pub fn cpu_busy_s(&self) -> f64 {
+        self.cpu_busy_s
+    }
+
+    pub fn gpu_busy_s(&self) -> f64 {
+        self.gpu_busy_s
+    }
+
+    /// Total energy including static draw over `wall_s`.
+    pub fn total_j(&self, static_power_w: f64, wall_s: f64) -> f64 {
+        self.dynamic_j + static_power_w * wall_s
+    }
+
+    /// Joules per inference (the paper reports this and its inverse).
+    pub fn j_per_inference(&self, static_power_w: f64, wall_s: f64) -> f64 {
+        if self.inferences == 0 {
+            return f64::NAN;
+        }
+        self.total_j(static_power_w, wall_s) / self.inferences as f64
+    }
+
+    /// Inferences per joule — the paper's "energy efficiency".
+    pub fn inferences_per_j(&self, static_power_w: f64, wall_s: f64) -> f64 {
+        let t = self.total_j(static_power_w, wall_s);
+        if t <= 0.0 {
+            return f64::NAN;
+        }
+        self.inferences as f64 / t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::soc::OpCost;
+
+    #[test]
+    fn accounting_adds_up() {
+        let mut a = EnergyAccount::new();
+        for _ in 0..10 {
+            a.add_op(&OpCost {
+                energy_j: 0.01,
+                transfer_j: 0.002,
+                cpu_busy_s: 0.001,
+                gpu_busy_s: 0.004,
+                latency_s: 0.005,
+                transfer_s: 0.0005,
+            });
+        }
+        a.finish_inference();
+        assert!((a.dynamic_j() - 0.1).abs() < 1e-12);
+        assert!((a.transfer_j() - 0.02).abs() < 1e-12);
+        // static 0.25 W over 2 s → 0.5 J
+        assert!((a.total_j(0.25, 2.0) - 0.6).abs() < 1e-12);
+        assert!((a.j_per_inference(0.25, 2.0) - 0.6).abs() < 1e-12);
+        assert!((a.inferences_per_j(0.25, 2.0) - 1.0 / 0.6).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_inferences_is_nan() {
+        let a = EnergyAccount::new();
+        assert!(a.j_per_inference(0.1, 1.0).is_nan());
+    }
+}

@@ -1,0 +1,77 @@
+//! Per-request latency recording with deadline tracking.
+
+use crate::util::stats::Summary;
+
+/// Records end-to-end request latencies and SLO outcomes.
+#[derive(Debug, Clone, Default)]
+pub struct LatencyRecorder {
+    samples_s: Vec<f64>,
+    misses: usize,
+    /// Queueing delay components (time between arrival and start).
+    queue_s: Vec<f64>,
+}
+
+impl LatencyRecorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one request: end-to-end latency, queueing component, and
+    /// whether it met its deadline.
+    pub fn record(&mut self, latency_s: f64, queue_s: f64, met_deadline: bool) {
+        self.samples_s.push(latency_s);
+        self.queue_s.push(queue_s);
+        if !met_deadline {
+            self.misses += 1;
+        }
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples_s.len()
+    }
+
+    pub fn miss_rate(&self) -> f64 {
+        if self.samples_s.is_empty() {
+            0.0
+        } else {
+            self.misses as f64 / self.samples_s.len() as f64
+        }
+    }
+
+    pub fn summary(&self) -> Option<Summary> {
+        Summary::of(&self.samples_s)
+    }
+
+    pub fn queue_summary(&self) -> Option<Summary> {
+        Summary::of(&self.queue_s)
+    }
+
+    pub fn samples(&self) -> &[f64] {
+        &self.samples_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_summarizes() {
+        let mut r = LatencyRecorder::new();
+        for i in 1..=100 {
+            r.record(i as f64 / 1000.0, 0.0, i <= 90);
+        }
+        assert_eq!(r.count(), 100);
+        assert!((r.miss_rate() - 0.10).abs() < 1e-12);
+        let s = r.summary().unwrap();
+        assert!((s.p50 - 0.0505).abs() < 0.001);
+    }
+
+    #[test]
+    fn empty_recorder() {
+        let r = LatencyRecorder::new();
+        assert_eq!(r.count(), 0);
+        assert_eq!(r.miss_rate(), 0.0);
+        assert!(r.summary().is_none());
+    }
+}

@@ -1,0 +1,10 @@
+//! Serving metrics: latency distributions, energy accounting and the
+//! aggregate report the benches and CLI print.
+
+pub mod energy;
+pub mod latency;
+pub mod report;
+
+pub use energy::EnergyAccount;
+pub use latency::LatencyRecorder;
+pub use report::ServingReport;

@@ -1,0 +1,138 @@
+//! Aggregate serving report: one row of the paper's Figure-2-style output.
+
+use crate::util::stats::Summary;
+
+/// Everything a serving run produces, ready to print or compare.
+#[derive(Debug, Clone)]
+pub struct ServingReport {
+    pub policy: String,
+    pub condition: String,
+    pub models: Vec<String>,
+    pub duration_s: f64,
+    pub requests: usize,
+    pub throughput_hz: f64,
+    pub latency: Option<Summary>,
+    pub queue: Option<Summary>,
+    pub miss_rate: f64,
+    pub total_energy_j: f64,
+    pub j_per_inference: f64,
+    pub inferences_per_j: f64,
+    /// Measured average CPU utilization (background + task) — the paper
+    /// quotes this per condition (78.8 % moderate, 91.3 % high).
+    pub avg_cpu_util: f64,
+    pub avg_gpu_util: f64,
+    /// Number of (incremental) repartitions triggered.
+    pub repartitions: usize,
+    /// Mean time spent per partitioning decision.
+    pub partition_overhead_s: f64,
+}
+
+impl ServingReport {
+    /// One-line row (bench tables).
+    pub fn row(&self) -> String {
+        let l = self.latency.as_ref();
+        format!(
+            "{:<14} {:<9} {:>6} req {:>7.2} req/s  p50 {:>7.2} ms  p99 {:>7.2} ms  miss {:>5.1}%  {:>8.2} mJ/inf  {:>6.2} inf/J  cpu {:>5.1}%  repart {:>3}",
+            self.policy,
+            self.condition,
+            self.requests,
+            self.throughput_hz,
+            l.map_or(f64::NAN, |s| s.p50 * 1e3),
+            l.map_or(f64::NAN, |s| s.p99 * 1e3),
+            self.miss_rate * 100.0,
+            self.j_per_inference * 1e3,
+            self.inferences_per_j,
+            self.avg_cpu_util * 100.0,
+            self.repartitions,
+        )
+    }
+
+    /// Multi-line human report (CLI `serve`).
+    pub fn pretty(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!(
+            "policy={} condition={} models={:?} duration={:.1}s\n",
+            self.policy, self.condition, self.models, self.duration_s
+        ));
+        s.push_str(&format!(
+            "  requests           {} ({:.2} req/s)\n",
+            self.requests, self.throughput_hz
+        ));
+        if let Some(l) = &self.latency {
+            s.push_str(&format!(
+                "  latency            mean {:.2} ms  p50 {:.2} ms  p90 {:.2} ms  p99 {:.2} ms\n",
+                l.mean * 1e3,
+                l.p50 * 1e3,
+                l.p90 * 1e3,
+                l.p99 * 1e3
+            ));
+        }
+        if let Some(q) = &self.queue {
+            s.push_str(&format!("  queueing           mean {:.2} ms\n", q.mean * 1e3));
+        }
+        s.push_str(&format!(
+            "  deadline misses    {:.2}%\n",
+            self.miss_rate * 100.0
+        ));
+        s.push_str(&format!(
+            "  energy             total {:.3} J  {:.2} mJ/inf  {:.2} inf/J\n",
+            self.total_energy_j,
+            self.j_per_inference * 1e3,
+            self.inferences_per_j
+        ));
+        s.push_str(&format!(
+            "  utilization        cpu {:.1}%  gpu {:.1}%\n",
+            self.avg_cpu_util * 100.0,
+            self.avg_gpu_util * 100.0
+        ));
+        s.push_str(&format!(
+            "  repartitions       {} (mean decision {:.1} µs)\n",
+            self.repartitions,
+            self.partition_overhead_s * 1e6
+        ));
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report() -> ServingReport {
+        ServingReport {
+            policy: "adaoper".into(),
+            condition: "high".into(),
+            models: vec!["yolov2".into()],
+            duration_s: 10.0,
+            requests: 100,
+            throughput_hz: 10.0,
+            latency: Summary::of(&[0.08, 0.09, 0.1]),
+            queue: Summary::of(&[0.001]),
+            miss_rate: 0.05,
+            total_energy_j: 12.0,
+            j_per_inference: 0.12,
+            inferences_per_j: 8.33,
+            avg_cpu_util: 0.913,
+            avg_gpu_util: 0.6,
+            repartitions: 3,
+            partition_overhead_s: 150e-6,
+        }
+    }
+
+    #[test]
+    fn row_contains_key_fields() {
+        let r = report().row();
+        assert!(r.contains("adaoper"));
+        assert!(r.contains("high"));
+        assert!(r.contains("inf/J"));
+    }
+
+    #[test]
+    fn pretty_contains_sections() {
+        let p = report().pretty();
+        assert!(p.contains("latency"));
+        assert!(p.contains("energy"));
+        assert!(p.contains("repartitions"));
+        assert!(p.contains("91.3%"));
+    }
+}

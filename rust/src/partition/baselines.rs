@@ -1,0 +1,249 @@
+//! Simple comparator policies: MACE-on-GPU, all-CPU, greedy-energy and
+//! random (test fodder).
+
+use anyhow::Result;
+
+use crate::graph::ModelGraph;
+use crate::profiler::CostModel;
+use crate::soc::device::Snapshot;
+use crate::soc::Placement;
+use crate::util::Prng;
+
+use super::plan::{evaluate, CtxWalker, Partitioner, Plan};
+
+/// MACE's GPU runtime: every operator on the GPU (the paper's first
+/// comparator, "MACE on GPU").
+#[derive(Debug, Clone, Default)]
+pub struct MaceGpuPartitioner;
+
+impl Partitioner for MaceGpuPartitioner {
+    fn name(&self) -> &str {
+        "mace-gpu"
+    }
+
+    fn partition(
+        &self,
+        g: &ModelGraph,
+        model: &dyn CostModel,
+        snap: &Snapshot,
+    ) -> Result<Plan> {
+        let placements = vec![Placement::GPU; g.num_ops()];
+        let predicted = evaluate(g, &placements, model, snap);
+        Ok(Plan {
+            placements,
+            predicted,
+            policy: "mace-gpu".into(),
+        })
+    }
+}
+
+/// Everything on the CPU cluster (TFLite-CPU-style floor baseline).
+#[derive(Debug, Clone, Default)]
+pub struct AllCpuPartitioner;
+
+impl Partitioner for AllCpuPartitioner {
+    fn name(&self) -> &str {
+        "all-cpu"
+    }
+
+    fn partition(
+        &self,
+        g: &ModelGraph,
+        model: &dyn CostModel,
+        snap: &Snapshot,
+    ) -> Result<Plan> {
+        let placements = vec![Placement::CPU; g.num_ops()];
+        let predicted = evaluate(g, &placements, model, snap);
+        Ok(Plan {
+            placements,
+            predicted,
+            policy: "all-cpu".into(),
+        })
+    }
+}
+
+/// Greedy per-op energy minimizer (ablation baseline): walks the graph
+/// front to back, picking the placement with the lowest *marginal* energy
+/// given choices already made. No lookahead — the gap to the DP is
+/// exactly what the DP's transfer-aware planning buys.
+#[derive(Debug, Clone)]
+pub struct GreedyEnergyPartitioner {
+    pub choices: Vec<Placement>,
+}
+
+impl Default for GreedyEnergyPartitioner {
+    fn default() -> Self {
+        GreedyEnergyPartitioner {
+            choices: vec![
+                Placement::CPU,
+                Placement::GPU,
+                Placement::Split { cpu_frac: 0.15 },
+                Placement::Split { cpu_frac: 0.25 },
+            ],
+        }
+    }
+}
+
+impl Partitioner for GreedyEnergyPartitioner {
+    fn name(&self) -> &str {
+        "greedy-energy"
+    }
+
+    fn partition(
+        &self,
+        g: &ModelGraph,
+        model: &dyn CostModel,
+        snap: &Snapshot,
+    ) -> Result<Plan> {
+        let mut placements = Vec::with_capacity(g.num_ops());
+        // walker clones per candidate would desync; instead rebuild the
+        // walker prefix each step (n² but n ≤ ~70)
+        for i in 0..g.num_ops() {
+            let mut best: Option<(Placement, f64)> = None;
+            for &cand in &self.choices {
+                let mut w = CtxWalker::new(g);
+                for (j, &p) in placements.iter().enumerate() {
+                    let _ = w.step(j, p);
+                }
+                let ctx = w.step(i, cand);
+                let c = model.predict(&g.ops[i], cand, &ctx, snap);
+                if best.as_ref().map_or(true, |&(_, e)| c.energy_j < e) {
+                    best = Some((cand, c.energy_j));
+                }
+            }
+            let (p, _) = best.unwrap();
+            placements.push(p);
+        }
+        // final pass for the aggregate prediction
+        let predicted = evaluate(g, &placements, model, snap);
+        Ok(Plan {
+            placements,
+            predicted,
+            policy: "greedy-energy".into(),
+        })
+    }
+}
+
+/// Uniformly random placements (property-test fodder; any real policy must
+/// beat it).
+#[derive(Debug, Clone)]
+pub struct RandomPartitioner {
+    pub seed: u64,
+    pub choices: Vec<Placement>,
+}
+
+impl RandomPartitioner {
+    pub fn new(seed: u64) -> Self {
+        RandomPartitioner {
+            seed,
+            choices: vec![
+                Placement::CPU,
+                Placement::GPU,
+                Placement::Split { cpu_frac: 0.2 },
+                Placement::Split { cpu_frac: 0.4 },
+            ],
+        }
+    }
+}
+
+impl Partitioner for RandomPartitioner {
+    fn name(&self) -> &str {
+        "random"
+    }
+
+    fn partition(
+        &self,
+        g: &ModelGraph,
+        model: &dyn CostModel,
+        snap: &Snapshot,
+    ) -> Result<Plan> {
+        let mut rng = Prng::new(self.seed);
+        let placements: Vec<Placement> =
+            (0..g.num_ops()).map(|_| *rng.choose(&self.choices)).collect();
+        let predicted = evaluate(g, &placements, model, snap);
+        Ok(Plan {
+            placements,
+            predicted,
+            policy: "random".into(),
+        })
+    }
+}
+
+/// Instantiate a policy by config name.
+pub fn by_policy(
+    kind: crate::config::schema::PolicyKind,
+    objective: super::plan::Objective,
+) -> Box<dyn Partitioner + Send + Sync> {
+    use crate::config::schema::PolicyKind;
+    match kind {
+        PolicyKind::AdaOper => Box::new(super::dp::DpPartitioner::new(objective)),
+        PolicyKind::Codl => Box::new(super::codl::CodlPartitioner::default()),
+        PolicyKind::MaceGpu => Box::new(MaceGpuPartitioner),
+        PolicyKind::AllCpu => Box::new(AllCpuPartitioner),
+        PolicyKind::GreedyEnergy => Box::new(GreedyEnergyPartitioner::default()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::zoo;
+    use crate::soc::device::{Device, DeviceConfig};
+    use crate::workload::WorkloadCondition;
+
+    fn frozen() -> Device {
+        let mut d = Device::new(DeviceConfig {
+            noise_sigma: 0.0,
+            drift_sigma: 0.0,
+            ..DeviceConfig::snapdragon_855()
+        });
+        let mut c = WorkloadCondition::moderate().spec;
+        c.cpu_bg_sigma = 0.0;
+        c.cpu_burst = 0.0;
+        c.gpu_bg_sigma = 0.0;
+        c.gpu_burst = 0.0;
+        c.drift_sigma = 0.0;
+        d.apply_condition(&c);
+        d
+    }
+
+    #[test]
+    fn mace_gpu_is_uniform() {
+        let g = zoo::yolov2_tiny();
+        let d = frozen();
+        let p = MaceGpuPartitioner.partition(&g, &d, &d.snapshot()).unwrap();
+        assert!(p.placements.iter().all(|&x| x == Placement::GPU));
+        assert!(p.predicted.latency_s > 0.0);
+    }
+
+    #[test]
+    fn greedy_energy_not_worse_than_worst_uniform() {
+        let g = zoo::yolov2_tiny();
+        let d = frozen();
+        let snap = d.snapshot();
+        let greedy = GreedyEnergyPartitioner::default()
+            .partition(&g, &d, &snap)
+            .unwrap();
+        let cpu = AllCpuPartitioner.partition(&g, &d, &snap).unwrap();
+        assert!(greedy.predicted.energy_j <= cpu.predicted.energy_j);
+    }
+
+    #[test]
+    fn random_deterministic_per_seed() {
+        let g = zoo::yolov2_tiny();
+        let d = frozen();
+        let snap = d.snapshot();
+        let a = RandomPartitioner::new(5).partition(&g, &d, &snap).unwrap();
+        let b = RandomPartitioner::new(5).partition(&g, &d, &snap).unwrap();
+        assert_eq!(a.placements, b.placements);
+    }
+
+    #[test]
+    fn by_policy_builds_all() {
+        use crate::config::schema::PolicyKind;
+        for k in PolicyKind::all() {
+            let p = by_policy(k, super::super::plan::Objective::MinEdp);
+            assert!(!p.name().is_empty());
+        }
+    }
+}

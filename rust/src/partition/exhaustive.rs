@@ -1,0 +1,168 @@
+//! Brute-force oracle: enumerate every placement combination and score it
+//! with the shared evaluator. Exponential — usable only for small graphs —
+//! and exists solely to property-test the DP's optimality.
+
+use anyhow::{ensure, Result};
+
+use crate::graph::ModelGraph;
+use crate::profiler::CostModel;
+use crate::soc::device::Snapshot;
+use crate::soc::Placement;
+
+use super::plan::{evaluate, Objective, Partitioner, Plan};
+
+/// Exhaustive-search partitioner (oracle).
+#[derive(Debug, Clone)]
+pub struct ExhaustivePartitioner {
+    pub objective: Objective,
+    pub choices: Vec<Placement>,
+    /// Refuse graphs where `choices^n` exceeds this.
+    pub max_combos: u64,
+}
+
+impl ExhaustivePartitioner {
+    pub fn new(objective: Objective, choices: Vec<Placement>) -> Self {
+        ExhaustivePartitioner {
+            objective,
+            choices,
+            max_combos: 20_000_000,
+        }
+    }
+}
+
+impl Partitioner for ExhaustivePartitioner {
+    fn name(&self) -> &str {
+        "exhaustive"
+    }
+
+    fn partition(
+        &self,
+        g: &ModelGraph,
+        model: &dyn CostModel,
+        snap: &Snapshot,
+    ) -> Result<Plan> {
+        let n = g.num_ops();
+        let k = self.choices.len() as u64;
+        let combos = k.checked_pow(n as u32).unwrap_or(u64::MAX);
+        ensure!(
+            combos <= self.max_combos,
+            "exhaustive search infeasible: {k}^{n} combinations"
+        );
+        let mut placements = vec![self.choices[0]; n];
+        let mut best: Option<(f64, Vec<Placement>, super::plan::PlanCost)> = None;
+        let mut idx = vec![0usize; n];
+        loop {
+            for i in 0..n {
+                placements[i] = self.choices[idx[i]];
+            }
+            let c = evaluate(g, &placements, model, snap);
+            let s = self.objective.score(c.energy_j, c.latency_s);
+            if best.as_ref().map_or(true, |(bs, _, _)| s < *bs) {
+                best = Some((s, placements.clone(), c));
+            }
+            // odometer increment
+            let mut carry = 0;
+            loop {
+                idx[carry] += 1;
+                if idx[carry] < self.choices.len() {
+                    break;
+                }
+                idx[carry] = 0;
+                carry += 1;
+                if carry == n {
+                    let (_, placements, predicted) = best.unwrap();
+                    return Ok(Plan {
+                        placements,
+                        predicted,
+                        policy: "exhaustive".into(),
+                    });
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::graph::{GraphBuilder, Src};
+    use crate::graph::op::{ActKind, OpKind};
+    use crate::graph::Shape;
+    use crate::soc::device::{Device, DeviceConfig};
+    use crate::workload::WorkloadCondition;
+
+    fn tiny_chain(n: usize) -> crate::graph::ModelGraph {
+        let mut b = GraphBuilder::new("chain", Shape::nchw(1, 8, 32, 32));
+        let mut prev = Src::Input;
+        for i in 0..n {
+            let id = b.push(
+                &format!("c{i}"),
+                OpKind::Conv2d {
+                    kernel: 3,
+                    stride: 1,
+                    pad: 1,
+                    out_c: 8 + 8 * (i % 3),
+                    groups: 1,
+                    act: ActKind::Relu,
+                },
+                &[prev],
+            );
+            prev = Src::Op(id);
+        }
+        b.build()
+    }
+
+    fn frozen() -> Device {
+        let mut d = Device::new(DeviceConfig {
+            noise_sigma: 0.0,
+            drift_sigma: 0.0,
+            ..DeviceConfig::snapdragon_855()
+        });
+        let mut c = WorkloadCondition::moderate().spec;
+        c.cpu_bg_sigma = 0.0;
+        c.cpu_burst = 0.0;
+        c.gpu_bg_sigma = 0.0;
+        c.gpu_burst = 0.0;
+        c.drift_sigma = 0.0;
+        d.apply_condition(&c);
+        d
+    }
+
+    #[test]
+    fn finds_known_optimum_on_trivial_instance() {
+        let g = tiny_chain(3);
+        let d = frozen();
+        let snap = d.snapshot();
+        let ex = ExhaustivePartitioner::new(
+            Objective::MinLatency,
+            vec![Placement::CPU, Placement::GPU],
+        );
+        let plan = ex.partition(&g, &d, &snap).unwrap();
+        // verify against manual enumeration of all 8 combos
+        let mut best = f64::INFINITY;
+        for mask in 0..8u32 {
+            let pl: Vec<Placement> = (0..3)
+                .map(|i| {
+                    if mask >> i & 1 == 1 {
+                        Placement::GPU
+                    } else {
+                        Placement::CPU
+                    }
+                })
+                .collect();
+            best = best.min(evaluate(&g, &pl, &d, &snap).latency_s);
+        }
+        assert!((plan.predicted.latency_s - best).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejects_oversized_search() {
+        let g = tiny_chain(40);
+        let d = frozen();
+        let ex = ExhaustivePartitioner::new(
+            Objective::MinEdp,
+            vec![Placement::CPU, Placement::GPU],
+        );
+        assert!(ex.partition(&g, &d, &d.snapshot()).is_err());
+    }
+}

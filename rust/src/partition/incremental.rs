@@ -1,0 +1,201 @@
+//! Incremental (windowed) repartitioning — the paper's fast-adaptation
+//! path: "refining the redistribution of partial operators triggered by
+//! fluctuations in energy consumption, rather than the entire model."
+//!
+//! When the profiler flags drift mid-plan, only a window of `W` operators
+//! starting at the execution frontier is re-solved; everything already
+//! executed is sunk cost and everything far downstream keeps its placement
+//! (it will be revisited when the frontier reaches it). The windowed DP
+//! pins the boundary states, so the patched plan stays consistent
+//! (residency + dispatch runs) with both the executed prefix and the
+//! retained tail.
+
+use anyhow::Result;
+
+use crate::graph::ModelGraph;
+use crate::profiler::CostModel;
+use crate::soc::device::Snapshot;
+
+use super::dp::DpPartitioner;
+use super::plan::Plan;
+
+/// Windowed repartitioner wrapping the DP.
+#[derive(Debug, Clone)]
+pub struct IncrementalRepartitioner {
+    pub dp: DpPartitioner,
+    /// Number of operators re-solved per trigger.
+    pub window: usize,
+}
+
+impl IncrementalRepartitioner {
+    pub fn new(dp: DpPartitioner, window: usize) -> Self {
+        assert!(window >= 1);
+        IncrementalRepartitioner { dp, window }
+    }
+
+    /// Re-solve `[frontier, frontier+window)` of `plan` under the current
+    /// cost model/state. `out_cpu` optionally carries the *actual*
+    /// residency of already-produced outputs (from the executor).
+    pub fn repartition(
+        &self,
+        g: &ModelGraph,
+        plan: &Plan,
+        frontier: usize,
+        model: &dyn CostModel,
+        snap: &Snapshot,
+        out_cpu: Option<&[f64]>,
+    ) -> Result<Plan> {
+        let n = g.num_ops();
+        if frontier >= n {
+            return Ok(plan.clone());
+        }
+        let end = (frontier + self.window).min(n);
+        let sol = self.dp.solve_range(
+            g,
+            model,
+            snap,
+            frontier,
+            end,
+            &plan.placements,
+            out_cpu,
+        )?;
+        Ok(Plan {
+            placements: sol.placements,
+            predicted: sol.cost,
+            policy: plan.policy.clone(),
+        })
+    }
+
+    /// Predicted cost of *keeping* the current plan from `frontier` on
+    /// (the comparison baseline for repartition hysteresis).
+    pub fn remaining_cost(
+        &self,
+        g: &ModelGraph,
+        plan: &Plan,
+        frontier: usize,
+        model: &dyn CostModel,
+        snap: &Snapshot,
+        out_cpu: Option<&[f64]>,
+    ) -> Result<crate::partition::plan::PlanCost> {
+        let sol = self.dp.solve_range(
+            g,
+            model,
+            snap,
+            frontier,
+            frontier, // empty window → pure fixed-tail evaluation
+            &plan.placements,
+            out_cpu,
+        )?;
+        Ok(sol.cost)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::zoo;
+    use crate::partition::plan::{evaluate, Objective};
+    use crate::soc::device::{Device, DeviceConfig};
+    use crate::soc::Placement;
+    use crate::workload::WorkloadCondition;
+
+    fn frozen(cond: WorkloadCondition) -> Device {
+        let mut d = Device::new(DeviceConfig {
+            noise_sigma: 0.0,
+            drift_sigma: 0.0,
+            ..DeviceConfig::snapdragon_855()
+        });
+        let mut c = cond.spec;
+        c.cpu_bg_sigma = 0.0;
+        c.cpu_burst = 0.0;
+        c.gpu_bg_sigma = 0.0;
+        c.gpu_burst = 0.0;
+        c.drift_sigma = 0.0;
+        d.apply_condition(&c);
+        d
+    }
+
+    #[test]
+    fn repartition_improves_stale_plan() {
+        // Plan under moderate, then conditions switch to high: the window
+        // repair at the frontier should not be worse than the stale plan
+        // (as scored from the frontier on).
+        let g = zoo::yolov2();
+        let d_mod = frozen(WorkloadCondition::moderate());
+        let dp = DpPartitioner::new(Objective::MinEdp);
+        let stale = dp.solve(&g, &d_mod, &d_mod.snapshot()).unwrap();
+
+        let d_high = frozen(WorkloadCondition::high());
+        let snap = d_high.snapshot();
+        let inc = IncrementalRepartitioner::new(dp.clone(), 8);
+        let patched = inc
+            .repartition(&g, &stale, 0, &d_high, &snap, None)
+            .unwrap();
+        let stale_cost = evaluate(&g, &stale.placements, &d_high, &snap);
+        let patched_cost = evaluate(&g, &patched.placements, &d_high, &snap);
+        assert!(
+            patched_cost.edp() <= stale_cost.edp() * 1.0001,
+            "patched {patched_cost:?} vs stale {stale_cost:?}"
+        );
+    }
+
+    #[test]
+    fn only_window_changes() {
+        let g = zoo::yolov2();
+        let d = frozen(WorkloadCondition::moderate());
+        let snap = d.snapshot();
+        let plan = Plan {
+            placements: vec![Placement::GPU; g.num_ops()],
+            predicted: Default::default(),
+            policy: "test".into(),
+        };
+        let inc =
+            IncrementalRepartitioner::new(DpPartitioner::new(Objective::MinEdp), 4);
+        let patched = inc.repartition(&g, &plan, 10, &d, &snap, None).unwrap();
+        for i in 0..g.num_ops() {
+            if !(10..14).contains(&i) {
+                assert_eq!(patched.placements[i], plan.placements[i], "op {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn frontier_past_end_is_noop() {
+        let g = zoo::yolov2_tiny();
+        let d = frozen(WorkloadCondition::moderate());
+        let snap = d.snapshot();
+        let plan = Plan {
+            placements: vec![Placement::GPU; g.num_ops()],
+            predicted: Default::default(),
+            policy: "test".into(),
+        };
+        let inc =
+            IncrementalRepartitioner::new(DpPartitioner::new(Objective::MinEdp), 4);
+        let patched = inc
+            .repartition(&g, &plan, g.num_ops(), &d, &snap, None)
+            .unwrap();
+        assert_eq!(patched.placements, plan.placements);
+    }
+
+    #[test]
+    fn window_clamps_at_model_end() {
+        let g = zoo::yolov2_tiny();
+        let d = frozen(WorkloadCondition::high());
+        let snap = d.snapshot();
+        let plan = Plan {
+            placements: vec![Placement::CPU; g.num_ops()],
+            predicted: Default::default(),
+            policy: "test".into(),
+        };
+        let inc =
+            IncrementalRepartitioner::new(DpPartitioner::new(Objective::MinEdp), 100);
+        let patched = inc
+            .repartition(&g, &plan, g.num_ops() - 3, &d, &snap, None)
+            .unwrap();
+        assert_eq!(patched.placements.len(), g.num_ops());
+        // prefix untouched
+        for i in 0..g.num_ops() - 3 {
+            assert_eq!(patched.placements[i], Placement::CPU);
+        }
+    }
+}

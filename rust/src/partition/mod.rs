@@ -1,0 +1,26 @@
+//! Energy-aware operator partitioning (paper §2.2 — the system's core
+//! contribution) plus every comparator the evaluation needs.
+//!
+//! * [`plan`] — partition plans and the shared cost walker/evaluator that
+//!   every policy and the coordinator agree on.
+//! * [`dp`] — AdaOper's partitioner: bottom-up iterative dynamic program
+//!   over the operator DAG frontier with Pareto (energy, latency) states,
+//!   rolling storage (only the previous DP column is kept — the paper's
+//!   space optimization), and latency-bucket pruning.
+//! * [`incremental`] — windowed repartitioning: on energy-drift triggers
+//!   only a bounded window of operators around the execution frontier is
+//!   re-solved (the paper's "redistribution of partial operators").
+//! * [`codl`] — the CoDL baseline: per-operator latency-optimal CPU+GPU
+//!   co-execution with a frequency-aware but burst-blind latency model.
+//! * [`baselines`] — MACE-on-GPU, all-CPU, greedy-energy, random.
+//! * [`exhaustive`] — brute-force oracle for optimality property tests.
+
+pub mod baselines;
+pub mod codl;
+pub mod dp;
+pub mod exhaustive;
+pub mod incremental;
+pub mod plan;
+
+pub use dp::DpPartitioner;
+pub use plan::{evaluate, Objective, Partitioner, Plan, PlanCost};

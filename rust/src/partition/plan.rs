@@ -1,0 +1,278 @@
+//! Partition plans and the shared plan evaluator.
+//!
+//! The evaluator is the single source of truth for "what does executing
+//! this plan cost": the DP, the exhaustive oracle, every baseline and the
+//! coordinator all walk plans through the same context construction
+//! (input residency, dispatch-run boundaries), so their numbers are
+//! directly comparable.
+
+use crate::graph::{ModelGraph, OpId};
+use crate::profiler::CostModel;
+use crate::soc::device::{ExecCtx, OpCost, Snapshot};
+use crate::soc::{Placement, Proc};
+
+/// Optimization objective for planning.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Objective {
+    /// Minimize energy × latency (performance per energy unit — the
+    /// AdaOper default).
+    MinEdp,
+    /// Minimize energy subject to a latency SLO.
+    MinEnergyUnderSlo { slo_s: f64 },
+    /// Minimize latency (what CoDL optimizes).
+    MinLatency,
+}
+
+impl Objective {
+    /// Scalar score (lower = better) of an (energy, latency) point.
+    /// SLO violations get an additive penalty so infeasible plans order
+    /// behind every feasible one but remain comparable among themselves.
+    pub fn score(&self, energy_j: f64, latency_s: f64) -> f64 {
+        match *self {
+            Objective::MinEdp => energy_j * latency_s,
+            Objective::MinEnergyUnderSlo { slo_s } => {
+                if latency_s <= slo_s {
+                    energy_j
+                } else {
+                    energy_j + 1e6 * (latency_s - slo_s)
+                }
+            }
+            Objective::MinLatency => latency_s,
+        }
+    }
+}
+
+/// A complete partition plan for one model.
+#[derive(Debug, Clone)]
+pub struct Plan {
+    /// Placement per operator (indexed by `OpId`).
+    pub placements: Vec<Placement>,
+    /// Planner's own cost prediction.
+    pub predicted: PlanCost,
+    /// Which policy produced it (reporting).
+    pub policy: String,
+}
+
+/// Aggregate cost of a plan (predicted or measured).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PlanCost {
+    pub energy_j: f64,
+    pub latency_s: f64,
+    pub transfer_s: f64,
+    pub transfer_j: f64,
+}
+
+impl PlanCost {
+    pub fn edp(&self) -> f64 {
+        self.energy_j * self.latency_s
+    }
+}
+
+/// A partitioning policy.
+pub trait Partitioner {
+    fn name(&self) -> &str;
+    fn partition(
+        &self,
+        g: &ModelGraph,
+        model: &dyn CostModel,
+        snap: &Snapshot,
+    ) -> anyhow::Result<Plan>;
+}
+
+/// Walks a graph in topo order producing the per-op [`ExecCtx`] implied by
+/// a placement assignment. Used by the evaluator, the DP transitions and
+/// the coordinator's executor so they all agree.
+pub struct CtxWalker<'g> {
+    g: &'g ModelGraph,
+    /// CPU-resident fraction of each op's output (filled as we walk).
+    out_cpu: Vec<f64>,
+    prev_placement: Option<Placement>,
+}
+
+/// Where the model input tensor starts. Camera/decoder buffers are
+/// CPU-visible on phones, so graph inputs are fully CPU-resident.
+pub const INPUT_CPU_FRAC: f64 = 1.0;
+
+impl<'g> CtxWalker<'g> {
+    pub fn new(g: &'g ModelGraph) -> Self {
+        CtxWalker {
+            g,
+            out_cpu: vec![INPUT_CPU_FRAC; g.num_ops()],
+            prev_placement: None,
+        }
+    }
+
+    /// Build the context for op `i` under `placement`, then record its
+    /// residency. Must be called for i = 0, 1, 2, … in order.
+    pub fn step(&mut self, i: OpId, placement: Placement) -> ExecCtx {
+        let op = &self.g.ops[i];
+        let input_cpu_fracs: Vec<f64> = if op.inputs.is_empty() {
+            vec![INPUT_CPU_FRAC; op.in_shapes.len()]
+        } else {
+            op.inputs.iter().map(|&j| self.out_cpu[j]).collect()
+        };
+        let (new_run_cpu, new_run_gpu) = match self.prev_placement {
+            None => (true, true),
+            Some(prev) => (!prev.uses(Proc::Cpu), !prev.uses(Proc::Gpu)),
+        };
+        self.out_cpu[i] = placement.frac_on(Proc::Cpu);
+        self.prev_placement = Some(placement);
+        ExecCtx {
+            input_cpu_fracs,
+            new_run_cpu,
+            new_run_gpu,
+            concurrent: false,
+        }
+    }
+}
+
+/// Evaluate a placement assignment under a cost model. Ops execute
+/// sequentially (single-request inference, the mobile-engine convention);
+/// a `Split` op's two halves run concurrently inside the op.
+pub fn evaluate(
+    g: &ModelGraph,
+    placements: &[Placement],
+    model: &dyn CostModel,
+    snap: &Snapshot,
+) -> PlanCost {
+    assert_eq!(placements.len(), g.num_ops());
+    let mut walker = CtxWalker::new(g);
+    let mut total = PlanCost::default();
+    for (i, op) in g.ops.iter().enumerate() {
+        let ctx = walker.step(i, placements[i]);
+        let c: OpCost = model.predict(op, placements[i], &ctx, snap);
+        total.energy_j += c.energy_j;
+        total.latency_s += c.latency_s;
+        total.transfer_s += c.transfer_s;
+        total.transfer_j += c.transfer_j;
+    }
+    total
+}
+
+/// Helper: uniform single-processor plan.
+pub fn uniform_plan(g: &ModelGraph, p: Placement, policy: &str) -> Plan {
+    Plan {
+        placements: vec![p; g.num_ops()],
+        predicted: PlanCost::default(),
+        policy: policy.to_string(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::zoo;
+    use crate::soc::device::{Device, DeviceConfig};
+    use crate::workload::WorkloadCondition;
+
+    fn dev() -> Device {
+        let mut d = Device::new(DeviceConfig {
+            noise_sigma: 0.0,
+            drift_sigma: 0.0,
+            ..DeviceConfig::snapdragon_855()
+        });
+        let mut c = WorkloadCondition::moderate().spec;
+        c.cpu_bg_sigma = 0.0;
+        c.cpu_burst = 0.0;
+        c.gpu_bg_sigma = 0.0;
+        c.gpu_burst = 0.0;
+        c.drift_sigma = 0.0;
+        d.apply_condition(&c);
+        d
+    }
+
+    #[test]
+    fn objective_scores() {
+        assert_eq!(Objective::MinEdp.score(2.0, 3.0), 6.0);
+        assert_eq!(Objective::MinLatency.score(2.0, 3.0), 3.0);
+        let slo = Objective::MinEnergyUnderSlo { slo_s: 0.1 };
+        assert_eq!(slo.score(2.0, 0.05), 2.0);
+        assert!(slo.score(2.0, 0.2) > 1000.0);
+    }
+
+    #[test]
+    fn all_gpu_beats_all_cpu_on_yolov2() {
+        let g = zoo::yolov2();
+        let d = dev();
+        let snap = d.snapshot();
+        let gpu = evaluate(&g, &vec![Placement::GPU; g.num_ops()], &d, &snap);
+        let cpu = evaluate(&g, &vec![Placement::CPU; g.num_ops()], &d, &snap);
+        assert!(gpu.latency_s < cpu.latency_s);
+        assert!(gpu.energy_j < cpu.energy_j);
+        // magnitudes sane: tens of ms, tens–hundreds of mJ
+        assert!((0.02..0.5).contains(&gpu.latency_s), "{}", gpu.latency_s);
+        assert!((0.01..2.0).contains(&gpu.energy_j), "{}", gpu.energy_j);
+    }
+
+    #[test]
+    fn ping_pong_plan_pays_transfers() {
+        let g = zoo::yolov2_tiny();
+        let d = dev();
+        let snap = d.snapshot();
+        let alternating: Vec<Placement> = (0..g.num_ops())
+            .map(|i| if i % 2 == 0 { Placement::CPU } else { Placement::GPU })
+            .collect();
+        let alt = evaluate(&g, &alternating, &d, &snap);
+        let gpu = evaluate(&g, &vec![Placement::GPU; g.num_ops()], &d, &snap);
+        assert!(alt.transfer_s > gpu.transfer_s);
+        assert!(alt.latency_s > gpu.latency_s);
+    }
+
+    #[test]
+    fn walker_first_op_pays_input_transfer_to_gpu() {
+        let g = zoo::yolov2_tiny();
+        let mut w = CtxWalker::new(&g);
+        let ctx = w.step(0, Placement::GPU);
+        assert_eq!(ctx.input_cpu_fracs, vec![1.0]); // camera buffer on CPU
+        assert!(ctx.new_run_cpu && ctx.new_run_gpu);
+    }
+
+    #[test]
+    fn walker_tracks_runs_and_residency() {
+        let g = zoo::yolov2_tiny();
+        let mut w = CtxWalker::new(&g);
+        let _ = w.step(0, Placement::GPU);
+        let c1 = w.step(1, Placement::GPU);
+        assert!(!c1.new_run_gpu, "second GPU op continues the run");
+        assert!(c1.new_run_cpu);
+        assert_eq!(c1.input_cpu_fracs, vec![0.0]); // op0 output on GPU
+        let c2 = w.step(2, Placement::CPU);
+        assert!(c2.new_run_cpu);
+        assert_eq!(c2.input_cpu_fracs, vec![0.0]);
+    }
+
+    #[test]
+    fn walker_handles_skip_edges() {
+        let g = zoo::yolov2();
+        let mut w = CtxWalker::new(&g);
+        let route_id = g.ops.iter().find(|o| o.name == "route").unwrap().id;
+        let mut route_ctx = None;
+        for i in 0..g.num_ops() {
+            // everything on GPU except the reorg branch on CPU
+            let p = if g.ops[i].name == "reorg" || g.ops[i].name == "conv21" {
+                Placement::CPU
+            } else {
+                Placement::GPU
+            };
+            let ctx = w.step(i, p);
+            if i == route_id {
+                route_ctx = Some(ctx);
+            }
+        }
+        let ctx = route_ctx.unwrap();
+        // route consumes reorg (CPU) and conv20 (GPU)
+        assert_eq!(ctx.input_cpu_fracs, vec![1.0, 0.0]);
+    }
+
+    #[test]
+    fn evaluate_is_deterministic() {
+        let g = zoo::yolov2();
+        let d = dev();
+        let snap = d.snapshot();
+        let p = vec![Placement::GPU; g.num_ops()];
+        let a = evaluate(&g, &p, &d, &snap);
+        let b = evaluate(&g, &p, &d, &snap);
+        assert_eq!(a.energy_j, b.energy_j);
+        assert_eq!(a.latency_s, b.latency_s);
+    }
+}

@@ -1,0 +1,221 @@
+//! Offline calibration: sweep the device across operators × units ×
+//! pinned states, record measured energy/latency, and fit *per-unit*
+//! GBDT pairs (CPU latency/energy, GPU latency/energy).
+//!
+//! Per-unit modeling is the structure both CoDL's predictors and AdaOper's
+//! profiler use: a split placement's cost is *composed* from the unit
+//! models (max of unit times + sync, sum of unit energies) rather than
+//! learned monolithically — far more sample-efficient, and it exposes the
+//! energy/latency tradeoff smoothly across split ratios. Dispatch
+//! overheads are measured separately (they are fixed per-unit constants on
+//! a given engine build) and subtracted from the training targets, so the
+//! GBDTs learn pure compute cost.
+//!
+//! This is the simulator-world equivalent of profiling a phone on a power
+//! bench: drift is disabled (a rig is controlled), measurement noise is
+//! not.
+
+use crate::graph::{zoo, ModelGraph, OpNode};
+use crate::soc::device::{ConditionSpec, Device, DeviceConfig, ExecCtx};
+use crate::soc::latency::ComputeParams;
+use crate::soc::{Placement, Proc};
+use crate::util::Prng;
+
+use super::features;
+use super::gbdt::{Gbdt, GbdtParams};
+
+/// One calibration record (single-unit execution, dispatch removed).
+#[derive(Debug, Clone)]
+pub struct Sample {
+    pub proc: Proc,
+    pub features: Vec<f32>,
+    /// Compute-only energy (J) and latency (s).
+    pub energy_j: f64,
+    pub latency_s: f64,
+}
+
+/// Per-unit fitted models (targets in log space).
+#[derive(Debug, Clone)]
+pub struct UnitModel {
+    pub latency: Gbdt,
+    pub energy: Gbdt,
+}
+
+/// The offline model pair for both units.
+#[derive(Debug, Clone)]
+pub struct OfflineModel {
+    pub cpu: UnitModel,
+    pub gpu: UnitModel,
+}
+
+/// Calibration sweep configuration.
+#[derive(Debug, Clone)]
+pub struct CalibConfig {
+    pub samples: usize,
+    pub seed: u64,
+    pub gbdt: GbdtParams,
+}
+
+impl Default for CalibConfig {
+    fn default() -> Self {
+        CalibConfig {
+            samples: 6000,
+            seed: 42,
+            gbdt: GbdtParams::default(),
+        }
+    }
+}
+
+/// Models whose operators the sweep draws from.
+pub fn calibration_models() -> Vec<ModelGraph> {
+    vec![
+        zoo::yolov2(),
+        zoo::yolov2_tiny(),
+        zoo::mobilenet_v1(),
+        zoo::resnet18(),
+    ]
+}
+
+/// Generate the sweep: each sample pins a fresh device to a random state
+/// and measures one full operator on one unit.
+pub fn generate(cfg: &CalibConfig) -> Vec<Sample> {
+    let models = calibration_models();
+    let ops: Vec<&OpNode> = models.iter().flat_map(|m| m.ops.iter()).collect();
+    let mut rng = Prng::new(cfg.seed);
+    let dev_cfg = DeviceConfig::snapdragon_855();
+    let cpu_freqs: Vec<f64> = dev_cfg.cpu_opps.points.iter().map(|p| p.freq_hz).collect();
+    let gpu_freqs: Vec<f64> = dev_cfg.gpu_opps.points.iter().map(|p| p.freq_hz).collect();
+
+    let mut out = Vec::with_capacity(cfg.samples);
+    while out.len() < cfg.samples {
+        let op = ops[rng.below(ops.len())];
+        let proc = if rng.chance(0.5) { Proc::Cpu } else { Proc::Gpu };
+        let placement = Placement::Single(proc);
+        let spec = ConditionSpec {
+            name: "calib",
+            cpu_freq_hz: Some(*rng.choose(&cpu_freqs)),
+            gpu_freq_hz: Some(*rng.choose(&gpu_freqs)),
+            cpu_bg_mean: rng.range(0.0, 0.7),
+            cpu_bg_sigma: 0.0,
+            cpu_burst: 0.0,
+            gpu_bg_mean: rng.range(0.0, 0.3),
+            gpu_bg_sigma: 0.0,
+            gpu_burst: 0.0,
+            bw_ambient: rng.range(0.75, 1.0),
+            drift_sigma: 0.0,
+        };
+        let mut dev = Device::new(DeviceConfig {
+            seed: rng.next_u64(),
+            ..dev_cfg.clone()
+        });
+        dev.apply_condition(&spec);
+        // co-located inputs, continuing run → measured cost is compute +
+        // dispatch_next; subtract the (known) dispatch constant.
+        let need_cpu = placement.frac_on(Proc::Cpu);
+        let mut ctx = ExecCtx::fresh(vec![need_cpu; op.in_shapes.len()]);
+        ctx.new_run_cpu = false;
+        ctx.new_run_gpu = false;
+        let snap = dev.snapshot();
+        let cost = dev.measure(op, placement, &ctx);
+        let dispatch = ComputeParams::for_proc(proc).dispatch_next;
+        out.push(Sample {
+            proc,
+            features: features::extract(op, placement, &ctx, &snap),
+            energy_j: cost.energy_j.max(1e-12),
+            latency_s: (cost.latency_s - dispatch).max(1e-9),
+        });
+    }
+    out
+}
+
+fn fit_unit(samples: &[Sample], proc: Proc, gbdt: &GbdtParams) -> UnitModel {
+    let rows: Vec<&Sample> = samples.iter().filter(|s| s.proc == proc).collect();
+    assert!(rows.len() > 100, "too few {proc} calibration samples");
+    let x: Vec<Vec<f32>> = rows.iter().map(|s| s.features.clone()).collect();
+    let yl: Vec<f64> = rows.iter().map(|s| s.latency_s.ln()).collect();
+    let ye: Vec<f64> = rows.iter().map(|s| s.energy_j.ln()).collect();
+    UnitModel {
+        latency: Gbdt::fit(&x, &yl, gbdt),
+        energy: Gbdt::fit(&x, &ye, gbdt),
+    }
+}
+
+/// Fit both unit models from a sweep.
+pub fn fit(samples: &[Sample], gbdt: &GbdtParams) -> OfflineModel {
+    OfflineModel {
+        cpu: fit_unit(samples, Proc::Cpu, gbdt),
+        gpu: fit_unit(samples, Proc::Gpu, gbdt),
+    }
+}
+
+/// Convenience: generate + fit.
+pub fn calibrate(cfg: &CalibConfig) -> OfflineModel {
+    let samples = generate(cfg);
+    fit(&samples, &cfg.gbdt)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::mape;
+
+    fn small_cfg() -> CalibConfig {
+        CalibConfig {
+            samples: 1500,
+            seed: 9,
+            gbdt: GbdtParams {
+                trees: 60,
+                ..Default::default()
+            },
+        }
+    }
+
+    #[test]
+    fn sweep_covers_both_units() {
+        let cfg = small_cfg();
+        let s = generate(&cfg);
+        assert_eq!(s.len(), cfg.samples);
+        let n_cpu = s.iter().filter(|x| x.proc == Proc::Cpu).count();
+        assert!(n_cpu > cfg.samples / 3 && n_cpu < 2 * cfg.samples / 3);
+    }
+
+    #[test]
+    fn targets_positive_and_spread() {
+        let s = generate(&small_cfg());
+        assert!(s.iter().all(|x| x.energy_j > 0.0 && x.latency_s > 0.0));
+        let max = s.iter().map(|x| x.energy_j).fold(0.0, f64::max);
+        let min = s.iter().map(|x| x.energy_j).fold(f64::INFINITY, f64::min);
+        assert!(max / min > 100.0, "energy range too narrow: {min}..{max}");
+    }
+
+    #[test]
+    fn fitted_model_accurate_in_sample() {
+        let cfg = small_cfg();
+        let s = generate(&cfg);
+        let m = fit(&s, &cfg.gbdt);
+        let gpu_rows: Vec<&Sample> = s.iter().filter(|x| x.proc == Proc::Gpu).collect();
+        let pred: Vec<f64> = gpu_rows
+            .iter()
+            .map(|x| m.gpu.energy.predict(&x.features).exp())
+            .collect();
+        let truth: Vec<f64> = gpu_rows.iter().map(|x| x.energy_j).collect();
+        let e = mape(&pred, &truth);
+        assert!(e < 20.0, "in-sample gpu energy MAPE {e}%");
+    }
+
+    #[test]
+    fn fitted_model_generalizes() {
+        let cfg = small_cfg();
+        let s = generate(&cfg);
+        let (train, test) = s.split_at(1200);
+        let m = fit(train, &cfg.gbdt);
+        let rows: Vec<&Sample> = test.iter().filter(|x| x.proc == Proc::Cpu).collect();
+        let pred: Vec<f64> = rows
+            .iter()
+            .map(|x| m.cpu.latency.predict(&x.features).exp())
+            .collect();
+        let truth: Vec<f64> = rows.iter().map(|x| x.latency_s).collect();
+        let e = mape(&pred, &truth);
+        assert!(e < 30.0, "held-out cpu latency MAPE {e}%");
+    }
+}

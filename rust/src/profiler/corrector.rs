@@ -1,0 +1,280 @@
+//! Runtime correction of the offline model (paper §2.1's GRU stage).
+//!
+//! The corrector watches the stream of prediction residuals
+//! `r_t = ln(observed / predicted)` and produces a multiplicative factor
+//! applied to the next predictions. Two implementations:
+//!
+//! * [`GruCorrector`] — the paper's design: a GRU (authored in JAX, Pallas
+//!   cell kernel, AOT-compiled to HLO) consumes the last `K` residuals
+//!   plus device-state deltas and emits the predicted next log-residual.
+//!   Inference runs through a boxed callback into the PJRT runtime so this
+//!   module stays independent of `runtime/` (and testable without
+//!   artifacts).
+//! * [`EwmaCorrector`] — artifact-free fallback and ablation baseline:
+//!   exponentially-weighted mean of residuals.
+
+use crate::soc::device::Snapshot;
+use crate::util::stats::Ewma;
+use crate::util::RingBuffer;
+
+/// A runtime residual-driven corrector.
+pub trait Corrector {
+    /// Record one observation: the residual of a prediction and the device
+    /// state it was made under.
+    fn observe(&mut self, log_ratio: f64, snap: &Snapshot);
+    /// Multiplicative correction to apply to the next prediction.
+    fn factor(&self) -> f64;
+    /// Reset state (e.g. after a regime change handled elsewhere).
+    fn reset(&mut self);
+    fn name(&self) -> &'static str;
+}
+
+/// EWMA fallback corrector.
+#[derive(Debug, Clone)]
+pub struct EwmaCorrector {
+    ewma: Ewma,
+    alpha: f64,
+}
+
+impl EwmaCorrector {
+    pub fn new(alpha: f64) -> Self {
+        EwmaCorrector {
+            ewma: Ewma::new(alpha),
+            alpha,
+        }
+    }
+}
+
+impl Default for EwmaCorrector {
+    fn default() -> Self {
+        // slow enough not to chase per-op measurement noise, fast enough
+        // to track burst episodes (~10 ops)
+        EwmaCorrector::new(0.12)
+    }
+}
+
+impl Corrector for EwmaCorrector {
+    fn observe(&mut self, log_ratio: f64, _snap: &Snapshot) {
+        // clamp outliers (a single mis-measured op must not poison the state)
+        self.ewma.push(log_ratio.clamp(-1.0, 1.0));
+    }
+
+    fn factor(&self) -> f64 {
+        self.ewma.value().unwrap_or(0.0).exp()
+    }
+
+    fn reset(&mut self) {
+        self.ewma = Ewma::new(self.alpha);
+    }
+
+    fn name(&self) -> &'static str {
+        "ewma"
+    }
+}
+
+/// Input features per time step fed to the GRU: the residual plus state
+/// context. Must match `python/compile/model.py::GRU_IN_FEATURES`.
+pub const GRU_IN_FEATURES: usize = 4;
+
+/// Build the GRU's per-step input: [log_ratio, cpu_util, gpu_util, temp/100].
+pub fn gru_step_features(log_ratio: f64, snap: &Snapshot) -> [f32; GRU_IN_FEATURES] {
+    [
+        log_ratio.clamp(-1.0, 1.0) as f32,
+        snap.cpu_util as f32,
+        snap.gpu_util as f32,
+        (snap.temp_c / 100.0) as f32,
+    ]
+}
+
+/// GRU inference callback: takes the `[K × GRU_IN_FEATURES]` window
+/// (row-major, oldest first) and returns the predicted next log-residual.
+pub type GruInferFn = Box<dyn FnMut(&[f32]) -> anyhow::Result<f32>>;
+
+/// GRU-based corrector (the paper's). Holds the residual window and defers
+/// the network evaluation to an injected callback (the PJRT runtime wires
+/// the real artifact in; tests inject closures).
+pub struct GruCorrector {
+    window: RingBuffer<[f32; GRU_IN_FEATURES]>,
+    k: usize,
+    infer: GruInferFn,
+    cached: f64,
+    /// Fallback used until the window fills.
+    warmup: EwmaCorrector,
+}
+
+impl GruCorrector {
+    pub fn new(k: usize, infer: GruInferFn) -> Self {
+        GruCorrector {
+            window: RingBuffer::new(k),
+            k,
+            infer,
+            cached: 0.0,
+            warmup: EwmaCorrector::default(),
+        }
+    }
+
+    fn window_flat(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.k * GRU_IN_FEATURES);
+        for row in self.window.iter() {
+            out.extend_from_slice(row);
+        }
+        out
+    }
+}
+
+impl Corrector for GruCorrector {
+    fn observe(&mut self, log_ratio: f64, snap: &Snapshot) {
+        self.warmup.observe(log_ratio, snap);
+        self.window.push(gru_step_features(log_ratio, snap));
+        if self.window.is_full() {
+            let flat = self.window_flat();
+            match (self.infer)(&flat) {
+                Ok(pred) => self.cached = pred.clamp(-1.0, 1.0) as f64,
+                Err(e) => {
+                    crate::log_warn!("gru inference failed ({e}); keeping last correction");
+                }
+            }
+        }
+    }
+
+    fn factor(&self) -> f64 {
+        if self.window.is_full() {
+            self.cached.exp()
+        } else {
+            self.warmup.factor()
+        }
+    }
+
+    fn reset(&mut self) {
+        self.window.clear();
+        self.cached = 0.0;
+        self.warmup.reset();
+    }
+
+    fn name(&self) -> &'static str {
+        "gru"
+    }
+}
+
+/// No-op corrector (GBDT-only ablation arm).
+#[derive(Debug, Clone, Default)]
+pub struct NullCorrector;
+
+impl Corrector for NullCorrector {
+    fn observe(&mut self, _log_ratio: f64, _snap: &Snapshot) {}
+    fn factor(&self) -> f64 {
+        1.0
+    }
+    fn reset(&mut self) {}
+    fn name(&self) -> &'static str {
+        "none"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snap() -> Snapshot {
+        Snapshot {
+            time_s: 0.0,
+            cpu_freq_hz: 1.49e9,
+            gpu_freq_hz: 499e6,
+            cpu_util: 0.3,
+            gpu_util: 0.1,
+            temp_c: 40.0,
+            bw_factor: 0.9,
+        }
+    }
+
+    #[test]
+    fn ewma_tracks_constant_bias() {
+        let mut c = EwmaCorrector::default();
+        for _ in 0..100 {
+            c.observe(0.3, &snap()); // observed 35% above predicted
+        }
+        assert!((c.factor() - 0.3f64.exp()).abs() < 0.01);
+    }
+
+    #[test]
+    fn ewma_neutral_before_data() {
+        let c = EwmaCorrector::default();
+        assert_eq!(c.factor(), 1.0);
+    }
+
+    #[test]
+    fn ewma_clamps_outliers() {
+        let mut c = EwmaCorrector::new(1.0); // full weight on latest
+        c.observe(50.0, &snap());
+        assert!(c.factor() <= 1.0f64.exp() + 1e-9);
+    }
+
+    #[test]
+    fn gru_uses_warmup_until_full() {
+        let mut c = GruCorrector::new(4, Box::new(|_| Ok(0.5)));
+        c.observe(0.2, &snap());
+        c.observe(0.2, &snap());
+        // window not full → warmup EWMA drives the factor
+        assert!(c.factor() < 0.5f64.exp() - 0.1);
+        c.observe(0.2, &snap());
+        c.observe(0.2, &snap());
+        // full → GRU output (0.5) drives it
+        assert!((c.factor() - 0.5f64.exp()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn gru_window_is_fifo_flat() {
+        let seen = std::sync::Arc::new(std::sync::Mutex::new(Vec::new()));
+        let seen2 = seen.clone();
+        let mut c = GruCorrector::new(2, Box::new(move |w| {
+            seen2.lock().unwrap().push(w.to_vec());
+            Ok(0.0)
+        }));
+        for r in [0.1f64, 0.2, 0.3] {
+            c.observe(r, &snap());
+        }
+        let calls = seen.lock().unwrap();
+        // first call after fill: [0.1, 0.2]; second: [0.2, 0.3]
+        assert_eq!(calls.len(), 2);
+        assert!((calls[0][0] - 0.1).abs() < 1e-6);
+        assert!((calls[1][0] - 0.2).abs() < 1e-6);
+        assert!((calls[1][GRU_IN_FEATURES] - 0.3).abs() < 1e-6);
+    }
+
+    #[test]
+    fn gru_inference_error_keeps_last() {
+        let mut fail = false;
+        let mut c = GruCorrector::new(
+            1,
+            Box::new(move |_| {
+                if fail {
+                    anyhow::bail!("dead")
+                } else {
+                    fail = true;
+                    Ok(0.4)
+                }
+            }),
+        );
+        c.observe(0.0, &snap());
+        let f1 = c.factor();
+        c.observe(0.0, &snap()); // inference fails → keep cached
+        assert_eq!(c.factor(), f1);
+    }
+
+    #[test]
+    fn reset_clears_state() {
+        let mut c = GruCorrector::new(2, Box::new(|_| Ok(0.9)));
+        c.observe(0.1, &snap());
+        c.observe(0.1, &snap());
+        assert!(c.factor() > 1.0);
+        c.reset();
+        assert_eq!(c.factor(), 1.0);
+    }
+
+    #[test]
+    fn null_is_identity() {
+        let mut c = NullCorrector;
+        c.observe(5.0, &snap());
+        assert_eq!(c.factor(), 1.0);
+    }
+}

@@ -1,0 +1,162 @@
+//! Feature extraction: (operator, placement, device state) → fixed-length
+//! vector for the GBDT. Feature names are stable and documented; the
+//! calibration sweep and runtime prediction must build identical layouts.
+
+use crate::graph::op::OpKind;
+use crate::graph::OpNode;
+use crate::soc::device::{ExecCtx, Snapshot};
+use crate::soc::{Placement, Proc};
+
+/// Number of scalar features after the kind one-hot.
+const NUM_SCALAR: usize = 14;
+
+/// Total feature dimension.
+pub const DIM: usize = OpKind::NUM_KINDS + NUM_SCALAR;
+
+/// A fixed-length feature vector.
+pub type FeatureVec = Vec<f32>;
+
+/// Human-readable feature names (diagnostics, importance reports).
+pub fn names() -> Vec<String> {
+    let mut n: Vec<String> = (0..OpKind::NUM_KINDS).map(|k| format!("kind_{k}")).collect();
+    n.extend(
+        [
+            "log_flops",
+            "log_act_bytes",
+            "log_weight_bytes",
+            "arith_intensity",
+            "cpu_frac",
+            "is_split",
+            "cpu_freq_ghz",
+            "gpu_freq_ghz",
+            "cpu_util",
+            "gpu_util",
+            "temp_c",
+            "bw_factor",
+            "new_run_cpu",
+            "new_run_gpu",
+        ]
+        .iter()
+        .map(|s| s.to_string()),
+    );
+    n
+}
+
+/// Build the feature vector.
+pub fn extract(
+    op: &OpNode,
+    placement: Placement,
+    ctx: &ExecCtx,
+    snap: &Snapshot,
+) -> FeatureVec {
+    let mut f = vec![0.0f32; DIM];
+    f[op.kind.kind_id()] = 1.0;
+    let mut i = OpKind::NUM_KINDS;
+    let mut push = |f: &mut Vec<f32>, v: f64| {
+        f[i] = v as f32;
+        i += 1;
+    };
+    push(&mut f, (op.flops as f64 + 1.0).ln());
+    push(&mut f, (op.activation_bytes as f64 + 1.0).ln());
+    push(&mut f, (op.weight_bytes as f64 + 1.0).ln());
+    push(&mut f, op.arithmetic_intensity().min(1e4).ln_1p());
+    push(&mut f, placement.frac_on(Proc::Cpu));
+    push(
+        &mut f,
+        if matches!(placement, Placement::Split { .. }) {
+            1.0
+        } else {
+            0.0
+        },
+    );
+    push(&mut f, snap.cpu_freq_hz / 1e9);
+    push(&mut f, snap.gpu_freq_hz / 1e9);
+    push(&mut f, snap.cpu_util);
+    push(&mut f, snap.gpu_util);
+    push(&mut f, snap.temp_c / 100.0);
+    push(&mut f, snap.bw_factor);
+    push(&mut f, if ctx.new_run_cpu { 1.0 } else { 0.0 });
+    push(&mut f, if ctx.new_run_gpu { 1.0 } else { 0.0 });
+    debug_assert_eq!(i, DIM);
+    f
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::zoo;
+    use crate::soc::device::ExecCtx;
+
+    fn snap() -> Snapshot {
+        Snapshot {
+            time_s: 0.0,
+            cpu_freq_hz: 1.49e9,
+            gpu_freq_hz: 499e6,
+            cpu_util: 0.35,
+            gpu_util: 0.08,
+            temp_c: 45.0,
+            bw_factor: 0.92,
+        }
+    }
+
+    #[test]
+    fn dim_matches_names() {
+        assert_eq!(names().len(), DIM);
+    }
+
+    #[test]
+    fn one_hot_set_correctly() {
+        let g = zoo::yolov2();
+        let op = &g.ops[0]; // conv 3×3
+        let f = extract(op, Placement::CPU, &ExecCtx::fresh(vec![1.0]), &snap());
+        let hot: Vec<usize> = (0..OpKind::NUM_KINDS).filter(|&k| f[k] == 1.0).collect();
+        assert_eq!(hot, vec![op.kind.kind_id()]);
+    }
+
+    #[test]
+    fn placement_features() {
+        let g = zoo::yolov2();
+        let op = &g.ops[0];
+        let s = snap();
+        let f_cpu = extract(op, Placement::CPU, &ExecCtx::fresh(vec![1.0]), &s);
+        let f_split = extract(
+            op,
+            Placement::Split { cpu_frac: 0.3 },
+            &ExecCtx::fresh(vec![1.0]),
+            &s,
+        );
+        let base = OpKind::NUM_KINDS;
+        assert_eq!(f_cpu[base + 4], 1.0); // cpu_frac
+        assert_eq!(f_cpu[base + 5], 0.0); // is_split
+        assert!((f_split[base + 4] - 0.3).abs() < 1e-6);
+        assert_eq!(f_split[base + 5], 1.0);
+    }
+
+    #[test]
+    fn snapshot_features_present() {
+        let g = zoo::yolov2();
+        let f = extract(
+            &g.ops[0],
+            Placement::GPU,
+            &ExecCtx::fresh(vec![0.0]),
+            &snap(),
+        );
+        let base = OpKind::NUM_KINDS;
+        assert!((f[base + 6] - 1.49).abs() < 1e-6);
+        assert!((f[base + 7] - 0.499).abs() < 1e-6);
+        assert!((f[base + 8] - 0.35).abs() < 1e-6);
+    }
+
+    #[test]
+    fn flops_feature_is_log() {
+        let g = zoo::yolov2();
+        let f = extract(
+            &g.ops[0],
+            Placement::GPU,
+            &ExecCtx::fresh(vec![0.0]),
+            &snap(),
+        );
+        let expect = (g.ops[0].flops as f64 + 1.0).ln() as f32;
+        assert!((f[OpKind::NUM_KINDS] - expect).abs() < 1e-5);
+    }
+}

@@ -1,0 +1,414 @@
+//! Gradient-boosted regression trees, implemented from scratch (the paper's
+//! offline energy model; no ML crates exist in the offline universe).
+//!
+//! Standard histogram GBDT with squared loss: features are quantile-binned
+//! once (≤64 bins), each boosting round fits a depth-limited tree to the
+//! current residuals using variance-reduction splits over bin histograms,
+//! with shrinkage and per-tree row subsampling.
+
+use crate::util::Prng;
+
+/// Training hyperparameters.
+#[derive(Debug, Clone)]
+pub struct GbdtParams {
+    pub trees: usize,
+    pub max_depth: usize,
+    pub eta: f64,
+    pub subsample: f64,
+    pub min_leaf: usize,
+    pub bins: usize,
+    pub seed: u64,
+}
+
+impl Default for GbdtParams {
+    fn default() -> Self {
+        GbdtParams {
+            trees: 120,
+            max_depth: 5,
+            eta: 0.1,
+            subsample: 0.8,
+            min_leaf: 12,
+            bins: 64,
+            seed: 7,
+        }
+    }
+}
+
+/// One tree node (array-encoded tree).
+#[derive(Debug, Clone)]
+enum Node {
+    Split {
+        feature: usize,
+        /// go left when binned value ≤ bin
+        bin: u8,
+        left: usize,
+        right: usize,
+    },
+    Leaf {
+        value: f64,
+    },
+}
+
+#[derive(Debug, Clone)]
+struct Tree {
+    nodes: Vec<Node>,
+}
+
+impl Tree {
+    fn predict_binned(&self, row: &[u8]) -> f64 {
+        let mut i = 0;
+        loop {
+            match self.nodes[i] {
+                Node::Leaf { value } => return value,
+                Node::Split {
+                    feature,
+                    bin,
+                    left,
+                    right,
+                } => {
+                    i = if row[feature] <= bin { left } else { right };
+                }
+            }
+        }
+    }
+}
+
+/// A fitted gradient-boosted model.
+#[derive(Debug, Clone)]
+pub struct Gbdt {
+    base: f64,
+    eta: f64,
+    trees: Vec<Tree>,
+    /// Per-feature ascending bin upper edges (len ≤ bins−1): value v maps
+    /// to the first bin whose edge ≥ v.
+    edges: Vec<Vec<f32>>,
+}
+
+impl Gbdt {
+    /// Fit on `x` (n rows × d cols, row-major) and targets `y`.
+    pub fn fit(x: &[Vec<f32>], y: &[f64], params: &GbdtParams) -> Gbdt {
+        assert!(!x.is_empty());
+        assert_eq!(x.len(), y.len());
+        let d = x[0].len();
+        let n = x.len();
+        let mut rng = Prng::new(params.seed);
+
+        // --- quantile binning
+        let edges: Vec<Vec<f32>> = (0..d)
+            .map(|j| {
+                let mut col: Vec<f32> = x.iter().map(|r| r[j]).collect();
+                col.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                col.dedup();
+                if col.len() <= params.bins {
+                    // distinct values fit: edges between consecutive values
+                    col.windows(2).map(|w| (w[0] + w[1]) / 2.0).collect()
+                } else {
+                    (1..params.bins)
+                        .map(|k| col[k * col.len() / params.bins])
+                        .collect()
+                }
+            })
+            .collect();
+        let binned: Vec<Vec<u8>> = x
+            .iter()
+            .map(|row| {
+                (0..d)
+                    .map(|j| bin_value(&edges[j], row[j]))
+                    .collect::<Vec<u8>>()
+            })
+            .collect();
+
+        // --- boosting
+        let base = y.iter().sum::<f64>() / n as f64;
+        let mut pred = vec![base; n];
+        let mut trees = Vec::with_capacity(params.trees);
+        for _ in 0..params.trees {
+            let residual: Vec<f64> = (0..n).map(|i| y[i] - pred[i]).collect();
+            let rows: Vec<usize> = if params.subsample < 1.0 {
+                (0..n)
+                    .filter(|_| rng.chance(params.subsample))
+                    .collect()
+            } else {
+                (0..n).collect()
+            };
+            if rows.len() < params.min_leaf * 2 {
+                continue;
+            }
+            let tree = build_tree(&binned, &residual, &rows, &edges, params);
+            for i in 0..n {
+                pred[i] += params.eta * tree.predict_binned(&binned[i]);
+            }
+            trees.push(tree);
+        }
+        Gbdt {
+            base,
+            eta: params.eta,
+            trees,
+            edges,
+        }
+    }
+
+    /// Predict a single row.
+    pub fn predict(&self, row: &[f32]) -> f64 {
+        let binned: Vec<u8> = (0..row.len())
+            .map(|j| bin_value(&self.edges[j], row[j]))
+            .collect();
+        self.base
+            + self.eta
+                * self
+                    .trees
+                    .iter()
+                    .map(|t| t.predict_binned(&binned))
+                    .sum::<f64>()
+    }
+
+    pub fn num_trees(&self) -> usize {
+        self.trees.len()
+    }
+
+    /// Split-count feature importance (diagnostics).
+    pub fn importance(&self, dim: usize) -> Vec<usize> {
+        let mut imp = vec![0usize; dim];
+        for t in &self.trees {
+            for node in &t.nodes {
+                if let Node::Split { feature, .. } = node {
+                    imp[*feature] += 1;
+                }
+            }
+        }
+        imp
+    }
+}
+
+fn bin_value(edges: &[f32], v: f32) -> u8 {
+    // first edge ≥ v  (edges ascending, ≤ 255 edges)
+    match edges.binary_search_by(|e| e.partial_cmp(&v).unwrap()) {
+        Ok(i) => i as u8,
+        Err(i) => i as u8,
+    }
+}
+
+fn build_tree(
+    binned: &[Vec<u8>],
+    target: &[f64],
+    rows: &[usize],
+    edges: &[Vec<f32>],
+    params: &GbdtParams,
+) -> Tree {
+    let mut nodes = Vec::new();
+    // stack of (node index to fill, rows, depth)
+    nodes.push(Node::Leaf { value: 0.0 });
+    let mut stack = vec![(0usize, rows.to_vec(), 0usize)];
+    while let Some((slot, rows, depth)) = stack.pop() {
+        let sum: f64 = rows.iter().map(|&i| target[i]).sum();
+        let mean = sum / rows.len() as f64;
+        if depth >= params.max_depth || rows.len() < params.min_leaf * 2 {
+            nodes[slot] = Node::Leaf { value: mean };
+            continue;
+        }
+        match best_split(binned, target, &rows, edges, params) {
+            None => {
+                nodes[slot] = Node::Leaf { value: mean };
+            }
+            Some((feature, bin)) => {
+                let (lrows, rrows): (Vec<usize>, Vec<usize>) =
+                    rows.iter().partition(|&&i| binned[i][feature] <= bin);
+                if lrows.len() < params.min_leaf || rrows.len() < params.min_leaf {
+                    nodes[slot] = Node::Leaf { value: mean };
+                    continue;
+                }
+                let li = nodes.len();
+                nodes.push(Node::Leaf { value: 0.0 });
+                let ri = nodes.len();
+                nodes.push(Node::Leaf { value: 0.0 });
+                nodes[slot] = Node::Split {
+                    feature,
+                    bin,
+                    left: li,
+                    right: ri,
+                };
+                stack.push((li, lrows, depth + 1));
+                stack.push((ri, rrows, depth + 1));
+            }
+        }
+    }
+    Tree { nodes }
+}
+
+/// Best (feature, bin) by variance reduction, or None if no split helps.
+fn best_split(
+    binned: &[Vec<u8>],
+    target: &[f64],
+    rows: &[usize],
+    edges: &[Vec<f32>],
+    params: &GbdtParams,
+) -> Option<(usize, u8)> {
+    let d = edges.len();
+    let n = rows.len() as f64;
+    let total_sum: f64 = rows.iter().map(|&i| target[i]).sum();
+    let parent_score = total_sum * total_sum / n;
+    let mut best: Option<(usize, u8, f64)> = None;
+
+    // reusable histograms
+    let max_bins = params.bins;
+    let mut hist_sum = vec![0.0f64; max_bins];
+    let mut hist_cnt = vec![0usize; max_bins];
+
+    for j in 0..d {
+        let nbins = edges[j].len() + 1;
+        if nbins < 2 {
+            continue;
+        }
+        hist_sum[..nbins].fill(0.0);
+        hist_cnt[..nbins].fill(0);
+        for &i in rows {
+            let b = binned[i][j] as usize;
+            hist_sum[b] += target[i];
+            hist_cnt[b] += 1;
+        }
+        let mut lsum = 0.0;
+        let mut lcnt = 0usize;
+        for b in 0..nbins - 1 {
+            lsum += hist_sum[b];
+            lcnt += hist_cnt[b];
+            let rcnt = rows.len() - lcnt;
+            if lcnt < params.min_leaf || rcnt < params.min_leaf {
+                continue;
+            }
+            let rsum = total_sum - lsum;
+            let score =
+                lsum * lsum / lcnt as f64 + rsum * rsum / rcnt as f64 - parent_score;
+            if score > best.map_or(1e-12, |(_, _, s)| s) {
+                best = Some((j, b as u8, score));
+            }
+        }
+    }
+    best.map(|(j, b, _)| (j, b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::r2;
+    use crate::util::Prng;
+
+    fn gen_data(
+        n: usize,
+        f: impl Fn(&[f32]) -> f64,
+        noise: f64,
+        seed: u64,
+    ) -> (Vec<Vec<f32>>, Vec<f64>) {
+        let mut rng = Prng::new(seed);
+        let x: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..4).map(|_| rng.f64() as f32).collect())
+            .collect();
+        let y: Vec<f64> = x
+            .iter()
+            .map(|r| f(r) + noise * rng.normal())
+            .collect();
+        (x, y)
+    }
+
+    #[test]
+    fn fits_linear_function() {
+        let (x, y) = gen_data(2000, |r| 3.0 * r[0] as f64 - 2.0 * r[1] as f64, 0.01, 1);
+        let m = Gbdt::fit(&x, &y, &GbdtParams::default());
+        let pred: Vec<f64> = x.iter().map(|r| m.predict(r)).collect();
+        let r = r2(&pred, &y);
+        assert!(r > 0.95, "r2 = {r}");
+    }
+
+    #[test]
+    fn fits_nonlinear_interaction() {
+        let (x, y) = gen_data(
+            3000,
+            |r| (r[0] as f64 * r[1] as f64 * 4.0) + (r[2] as f64).powi(2),
+            0.02,
+            2,
+        );
+        let m = Gbdt::fit(&x, &y, &GbdtParams::default());
+        let pred: Vec<f64> = x.iter().map(|r| m.predict(r)).collect();
+        let r = r2(&pred, &y);
+        assert!(r > 0.9, "r2 = {r}");
+    }
+
+    #[test]
+    fn generalizes_to_held_out() {
+        let (x, y) = gen_data(4000, |r| 2.0 * r[0] as f64 + (r[1] as f64).sqrt(), 0.02, 3);
+        let (xt, yt) = (&x[..3000], &y[..3000]);
+        let (xv, yv) = (&x[3000..], &y[3000..]);
+        let m = Gbdt::fit(xt, yt, &GbdtParams::default());
+        let pred: Vec<f64> = xv.iter().map(|r| m.predict(r)).collect();
+        let r = r2(&pred, yv);
+        assert!(r > 0.9, "held-out r2 = {r}");
+    }
+
+    #[test]
+    fn constant_target_predicts_constant() {
+        let (x, _) = gen_data(500, |_| 0.0, 0.0, 4);
+        let y = vec![5.5; 500];
+        let m = Gbdt::fit(&x, &y, &GbdtParams::default());
+        for r in x.iter().take(20) {
+            assert!((m.predict(r) - 5.5).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (x, y) = gen_data(800, |r| r[0] as f64, 0.05, 5);
+        let a = Gbdt::fit(&x, &y, &GbdtParams::default());
+        let b = Gbdt::fit(&x, &y, &GbdtParams::default());
+        for r in x.iter().take(10) {
+            assert_eq!(a.predict(r), b.predict(r));
+        }
+    }
+
+    #[test]
+    fn importance_identifies_relevant_feature() {
+        let (x, y) = gen_data(2000, |r| 10.0 * r[2] as f64, 0.01, 6);
+        let m = Gbdt::fit(&x, &y, &GbdtParams::default());
+        let imp = m.importance(4);
+        assert!(imp[2] > imp[0] && imp[2] > imp[1] && imp[2] > imp[3], "{imp:?}");
+    }
+
+    #[test]
+    fn more_trees_fit_better() {
+        let (x, y) = gen_data(1500, |r| (6.0 * r[0] as f64).sin(), 0.01, 7);
+        let small = Gbdt::fit(
+            &x,
+            &y,
+            &GbdtParams {
+                trees: 5,
+                ..Default::default()
+            },
+        );
+        let big = Gbdt::fit(
+            &x,
+            &y,
+            &GbdtParams {
+                trees: 150,
+                ..Default::default()
+            },
+        );
+        let mse = |m: &Gbdt| {
+            x.iter()
+                .zip(&y)
+                .map(|(r, t)| (m.predict(r) - t).powi(2))
+                .sum::<f64>()
+                / x.len() as f64
+        };
+        assert!(mse(&big) < mse(&small) * 0.6);
+    }
+
+    #[test]
+    fn handles_constant_features() {
+        let mut rng = Prng::new(8);
+        let x: Vec<Vec<f32>> = (0..500)
+            .map(|_| vec![1.0f32, rng.f64() as f32])
+            .collect();
+        let y: Vec<f64> = x.iter().map(|r| r[1] as f64).collect();
+        let m = Gbdt::fit(&x, &y, &GbdtParams::default());
+        let pred: Vec<f64> = x.iter().map(|r| m.predict(r)).collect();
+        assert!(r2(&pred, &y) > 0.9);
+    }
+}

@@ -1,0 +1,30 @@
+//! Runtime energy profiler (paper §2.1).
+//!
+//! Two-stage estimator, exactly the paper's split:
+//!
+//! * **Offline** — a gradient-boosted-decision-tree regressor ([`gbdt`])
+//!   fit on a calibration sweep ([`calibrate`]) over operators ×
+//!   placements × device states, predicting per-op energy and latency
+//!   from operational features ([`features`]).
+//! * **Runtime** — a resource monitor ([`monitor`]) samples device state,
+//!   and a GRU corrector ([`corrector`]) turns the recent history of
+//!   prediction residuals into a multiplicative correction that tracks
+//!   hidden dynamics (bursts, thermal/contention drift) no static model
+//!   can see. The GRU itself is JAX/Pallas-authored, AOT-compiled, and
+//!   executed through the PJRT runtime; a pure-rust EWMA corrector is the
+//!   artifact-free fallback.
+//!
+//! [`profiler::EnergyProfiler`] composes the two and exposes the
+//! [`CostModel`] trait that planning (the partitioner) consumes.
+
+pub mod calibrate;
+pub mod corrector;
+pub mod features;
+pub mod gbdt;
+pub mod monitor;
+pub mod profiler;
+
+pub use corrector::{Corrector, EwmaCorrector};
+pub use features::FeatureVec;
+pub use gbdt::Gbdt;
+pub use profiler::{CostModel, EnergyProfiler};

@@ -1,0 +1,149 @@
+//! Resource monitor: periodic sampling of the observable device state
+//! (the `/proc/stat` + hwmon analogue), with change detection that flags
+//! condition switches (frequency repinning, utilization level shifts).
+
+use crate::soc::device::Snapshot;
+use crate::util::stats::Ewma;
+use crate::util::RingBuffer;
+
+/// A monitor over observable device state.
+#[derive(Debug, Clone)]
+pub struct ResourceMonitor {
+    history: RingBuffer<Snapshot>,
+    cpu_util_ewma: Ewma,
+    gpu_util_ewma: Ewma,
+    last: Option<Snapshot>,
+    /// Set when the latest sample looks like a regime change.
+    changed: bool,
+    /// Relative frequency change that counts as a switch.
+    freq_eps: f64,
+    /// Absolute smoothed-utilization jump that counts as a switch.
+    util_eps: f64,
+}
+
+impl Default for ResourceMonitor {
+    fn default() -> Self {
+        Self::new(128)
+    }
+}
+
+impl ResourceMonitor {
+    pub fn new(history_len: usize) -> Self {
+        ResourceMonitor {
+            history: RingBuffer::new(history_len),
+            cpu_util_ewma: Ewma::new(0.2),
+            gpu_util_ewma: Ewma::new(0.2),
+            last: None,
+            changed: false,
+            freq_eps: 0.02,
+            util_eps: 0.12,
+        }
+    }
+
+    /// Ingest a new sample.
+    pub fn sample(&mut self, snap: Snapshot) {
+        self.changed = false;
+        if let Some(prev) = self.last {
+            let freq_jump = (snap.cpu_freq_hz / prev.cpu_freq_hz - 1.0).abs() > self.freq_eps
+                || (snap.gpu_freq_hz / prev.gpu_freq_hz - 1.0).abs() > self.freq_eps;
+            let prev_util = self.cpu_util_ewma.value().unwrap_or(snap.cpu_util);
+            let util_jump = (snap.cpu_util - prev_util).abs() > self.util_eps;
+            self.changed = freq_jump || util_jump;
+        }
+        self.cpu_util_ewma.push(snap.cpu_util);
+        self.gpu_util_ewma.push(snap.gpu_util);
+        self.history.push(snap);
+        self.last = Some(snap);
+    }
+
+    /// Latest raw sample.
+    pub fn latest(&self) -> Option<Snapshot> {
+        self.last
+    }
+
+    /// Smoothed CPU utilization.
+    pub fn cpu_util_smooth(&self) -> f64 {
+        self.cpu_util_ewma.value().unwrap_or(0.0)
+    }
+
+    pub fn gpu_util_smooth(&self) -> f64 {
+        self.gpu_util_ewma.value().unwrap_or(0.0)
+    }
+
+    /// Did the most recent sample indicate a regime change?
+    pub fn regime_changed(&self) -> bool {
+        self.changed
+    }
+
+    /// Recent snapshots, oldest → newest.
+    pub fn history(&self) -> Vec<Snapshot> {
+        self.history.to_vec()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snap(cpu_freq: f64, cpu_util: f64) -> Snapshot {
+        Snapshot {
+            time_s: 0.0,
+            cpu_freq_hz: cpu_freq,
+            gpu_freq_hz: 499e6,
+            cpu_util,
+            gpu_util: 0.1,
+            temp_c: 40.0,
+            bw_factor: 0.9,
+        }
+    }
+
+    #[test]
+    fn detects_frequency_repin() {
+        let mut m = ResourceMonitor::default();
+        for _ in 0..10 {
+            m.sample(snap(1.49e9, 0.35));
+        }
+        assert!(!m.regime_changed());
+        m.sample(snap(0.88e9, 0.35));
+        assert!(m.regime_changed());
+    }
+
+    #[test]
+    fn detects_util_level_shift() {
+        let mut m = ResourceMonitor::default();
+        for _ in 0..30 {
+            m.sample(snap(1.49e9, 0.30));
+        }
+        m.sample(snap(1.49e9, 0.65));
+        assert!(m.regime_changed());
+    }
+
+    #[test]
+    fn ignores_small_noise() {
+        let mut m = ResourceMonitor::default();
+        for i in 0..50 {
+            m.sample(snap(1.49e9, 0.35 + 0.02 * ((i % 3) as f64 - 1.0)));
+            if i > 0 {
+                assert!(!m.regime_changed(), "false positive at {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn smoothing_converges() {
+        let mut m = ResourceMonitor::default();
+        for _ in 0..100 {
+            m.sample(snap(1.49e9, 0.4));
+        }
+        assert!((m.cpu_util_smooth() - 0.4).abs() < 1e-6);
+    }
+
+    #[test]
+    fn history_bounded() {
+        let mut m = ResourceMonitor::new(8);
+        for _ in 0..50 {
+            m.sample(snap(1.49e9, 0.3));
+        }
+        assert_eq!(m.history().len(), 8);
+    }
+}

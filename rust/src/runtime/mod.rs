@@ -1,0 +1,17 @@
+//! PJRT runtime: loads the AOT-compiled HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them from the rust hot path —
+//! python is never on the request path.
+//!
+//! * [`registry`] — parses `artifacts/manifest.txt` into an artifact index.
+//! * [`client`] — the `xla` crate wrapper: CPU PJRT client, compile-once
+//!   executable cache, f32 tensor round-trips.
+//! * [`session`] — higher-level handles: the per-op executor the live
+//!   coordinator uses ([`session::ArtifactExecutor`]) and the GRU
+//!   corrector inference function for the profiler.
+
+pub mod client;
+pub mod registry;
+pub mod session;
+
+pub use client::Runtime;
+pub use registry::{ArtifactEntry, Manifest};

@@ -1,0 +1,161 @@
+//! Artifact manifest parsing.
+//!
+//! `aot.py` writes `manifest.txt` with one line per artifact:
+//! `name file in_shape out_shape` (shapes as `1x3x64x64`). The manifest is
+//! the contract between the python build path and the rust runtime.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// One artifact record.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub path: PathBuf,
+    pub in_shape: Vec<usize>,
+    pub out_shape: Vec<usize>,
+}
+
+impl ArtifactEntry {
+    pub fn in_elems(&self) -> usize {
+        self.in_shape.iter().product()
+    }
+    pub fn out_elems(&self) -> usize {
+        self.out_shape.iter().product()
+    }
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    entries: BTreeMap<String, ArtifactEntry>,
+    pub dir: PathBuf,
+}
+
+fn parse_shape(s: &str) -> Result<Vec<usize>> {
+    s.split('x')
+        .map(|p| {
+            p.parse::<usize>()
+                .with_context(|| format!("bad shape component `{p}` in `{s}`"))
+        })
+        .collect()
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.txt`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text (separated out for tests).
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest> {
+        let mut entries = BTreeMap::new();
+        for (ln, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let parts: Vec<&str> = line.split_whitespace().collect();
+            if parts.len() != 4 {
+                bail!("manifest line {}: expected 4 fields, got {}", ln + 1, parts.len());
+            }
+            let entry = ArtifactEntry {
+                name: parts[0].to_string(),
+                path: dir.join(parts[1]),
+                in_shape: parse_shape(parts[2])?,
+                out_shape: parse_shape(parts[3])?,
+            };
+            if entries.insert(entry.name.clone(), entry).is_some() {
+                bail!("manifest line {}: duplicate name {}", ln + 1, parts[0]);
+            }
+        }
+        if entries.is_empty() {
+            bail!("manifest is empty");
+        }
+        Ok(Manifest {
+            entries,
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactEntry> {
+        self.entries.get(name)
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.entries.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// All entries whose name starts with `prefix` (e.g. `tiny-exec/`).
+    pub fn with_prefix(&self, prefix: &str) -> Vec<&ArtifactEntry> {
+        self.entries
+            .values()
+            .filter(|e| e.name.starts_with(prefix))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# name file in_shape out_shape
+tiny-exec/conv1 tiny_exec_conv1.hlo.txt 1x3x64x64 1x8x64x64
+tiny-exec/pool1 tiny_exec_pool1.hlo.txt 1x8x64x64 1x8x32x32
+gru/predict gru.hlo.txt 8x4 1
+";
+
+    #[test]
+    fn parses_entries() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.len(), 3);
+        let c = m.get("tiny-exec/conv1").unwrap();
+        assert_eq!(c.in_shape, vec![1, 3, 64, 64]);
+        assert_eq!(c.out_shape, vec![1, 8, 64, 64]);
+        assert_eq!(c.in_elems(), 3 * 64 * 64);
+        assert!(c.path.ends_with("tiny_exec_conv1.hlo.txt"));
+    }
+
+    #[test]
+    fn prefix_filter() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.with_prefix("tiny-exec/").len(), 2);
+        assert_eq!(m.with_prefix("gru/").len(), 1);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse("a b c", Path::new("/")).is_err());
+        assert!(Manifest::parse("a b 1xq 2", Path::new("/")).is_err());
+        assert!(Manifest::parse("", Path::new("/")).is_err());
+        let dup = "a f 1 1\na f 1 1\n";
+        assert!(Manifest::parse(dup, Path::new("/")).is_err());
+    }
+
+    #[test]
+    fn loads_real_manifest_if_built() {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.txt").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.get("tiny-exec/conv1").is_some());
+        assert!(m.get("gru/predict").is_some());
+        assert!(m.get("tiny-exec/full").is_some());
+    }
+}

@@ -1,0 +1,70 @@
+//! High-level runtime handles wiring artifacts into the coordinator and
+//! profiler:
+//!
+//! * [`ArtifactExecutor`] — implements the live coordinator's
+//!   [`OpExecutor`]: op name → `tiny-exec/<op>` artifact → PJRT execute.
+//! * [`gru_infer_fn`] — wraps `gru/predict` as the profiler's
+//!   [`GruInferFn`] so the GRU corrector runs the real AOT network.
+
+use std::path::Path;
+
+use anyhow::{ensure, Result};
+
+use crate::coordinator::live::OpExecutor;
+use crate::profiler::corrector::{GruInferFn, GRU_IN_FEATURES};
+
+use super::client::Runtime;
+
+/// Per-op PJRT executor over the `tiny-exec/*` artifacts.
+pub struct ArtifactExecutor {
+    rt: Runtime,
+}
+
+impl ArtifactExecutor {
+    pub fn new(artifacts_dir: &Path) -> Result<ArtifactExecutor> {
+        let mut rt = Runtime::new(artifacts_dir)?;
+        rt.load_prefix("tiny-exec/")?; // compile everything up front
+        Ok(ArtifactExecutor { rt })
+    }
+
+    pub fn runtime(&mut self) -> &mut Runtime {
+        &mut self.rt
+    }
+}
+
+impl OpExecutor for ArtifactExecutor {
+    fn execute(&mut self, model: &str, op_name: &str, inputs: &[Vec<f32>]) -> Result<Vec<f32>> {
+        ensure!(
+            inputs.len() == 1,
+            "tiny-exec ops are single-input, got {}",
+            inputs.len()
+        );
+        let name = format!("{model}/{op_name}");
+        self.rt.run_f32(&name, &inputs[0])
+    }
+}
+
+/// Build a [`GruInferFn`] over the `gru/predict` artifact. The returned
+/// closure owns its own runtime (PJRT clients stay on their thread).
+pub fn gru_infer_fn(artifacts_dir: &Path, window_len: usize) -> Result<GruInferFn> {
+    let mut rt = Runtime::new(artifacts_dir)?;
+    rt.load("gru/predict")?;
+    let expect = window_len * GRU_IN_FEATURES;
+    Ok(Box::new(move |window: &[f32]| -> Result<f32> {
+        ensure!(
+            window.len() == expect,
+            "gru window len {} != expected {}",
+            window.len(),
+            expect
+        );
+        let out = rt.run_f32("gru/predict", window)?;
+        ensure!(out.len() == 1, "gru output len {}", out.len());
+        Ok(out[0])
+    }))
+}
+
+#[cfg(test)]
+mod tests {
+    // PJRT-dependent tests live in rust/tests/integration_runtime.rs and
+    // are skipped when artifacts/ has not been built.
+}

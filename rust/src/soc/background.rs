@@ -1,0 +1,211 @@
+//! Stochastic background workload and the hidden drift process.
+//!
+//! Two mechanisms shape dynamic device conditions:
+//!
+//! 1. **Background utilization** — other apps stealing CPU/GPU cycles.
+//!    Modeled as a mean-reverting (Ornstein–Uhlenbeck) base level plus a
+//!    two-state Markov *burst* process (e.g. a sync job waking up). The
+//!    mean level is observable through the resource monitor (like
+//!    `/proc/stat`); the instantaneous burst is only visible after the
+//!    fact, through its effect on op latency/energy.
+//!
+//! 2. **Hidden drift** — a slowly wandering multiplicative factor on true
+//!    energy/latency (thermal/memory-contention effects no static feature
+//!    captures). This is deliberately *not* exposed in [`crate::soc::Snapshot`]:
+//!    static predictors (GBDT) cannot see it, the paper's GRU corrector
+//!    must infer it from recent prediction residuals.
+
+use crate::util::Prng;
+
+/// Ornstein–Uhlenbeck + Markov-burst utilization process.
+#[derive(Debug, Clone)]
+pub struct BackgroundLoad {
+    /// Long-run mean utilization (the workload condition sets this).
+    pub mean: f64,
+    /// OU reversion rate (1/s).
+    pub theta: f64,
+    /// OU noise scale.
+    pub sigma: f64,
+    /// Burst height added on top while bursting.
+    pub burst_height: f64,
+    /// Rate of entering a burst (1/s).
+    pub burst_on_rate: f64,
+    /// Rate of leaving a burst (1/s).
+    pub burst_off_rate: f64,
+    level: f64,
+    bursting: bool,
+}
+
+impl BackgroundLoad {
+    pub fn new(mean: f64, sigma: f64, burst_height: f64) -> Self {
+        BackgroundLoad {
+            mean,
+            theta: 0.8,
+            sigma,
+            burst_height,
+            burst_on_rate: 0.25,
+            burst_off_rate: 1.2,
+            level: mean,
+            bursting: false,
+        }
+    }
+
+    /// Quiet device.
+    pub fn idle() -> Self {
+        BackgroundLoad::new(0.05, 0.02, 0.05)
+    }
+
+    /// Advance by `dt` seconds.
+    pub fn step(&mut self, dt: f64, rng: &mut Prng) {
+        // OU: dX = θ(μ−X)dt + σ√dt · N(0,1)
+        self.level += self.theta * (self.mean - self.level) * dt
+            + self.sigma * dt.sqrt() * rng.normal();
+        self.level = self.level.clamp(0.0, 0.95);
+        // Markov burst switching
+        let p_switch = if self.bursting {
+            1.0 - (-self.burst_off_rate * dt).exp()
+        } else {
+            1.0 - (-self.burst_on_rate * dt).exp()
+        };
+        if rng.chance(p_switch) {
+            self.bursting = !self.bursting;
+        }
+    }
+
+    /// Instantaneous utilization (what actually steals cycles *now*).
+    pub fn instant(&self) -> f64 {
+        (self.level + if self.bursting { self.burst_height } else { 0.0 }).clamp(0.0, 0.95)
+    }
+
+    /// Smoothed utilization (what a /proc/stat-style monitor reports:
+    /// the OU level without the instantaneous burst state).
+    pub fn observable(&self) -> f64 {
+        self.level.clamp(0.0, 0.95)
+    }
+
+    pub fn is_bursting(&self) -> bool {
+        self.bursting
+    }
+
+    /// Re-target the long-run mean (workload condition switch).
+    pub fn set_mean(&mut self, mean: f64) {
+        self.mean = mean.clamp(0.0, 0.95);
+        self.level = self.mean; // snap — condition presets pin the level
+    }
+}
+
+/// Slow multiplicative drift on true cost, hidden from snapshots.
+/// log-factor follows an OU process; factor = exp(x) stays near 1.
+#[derive(Debug, Clone)]
+pub struct HiddenDrift {
+    log_factor: f64,
+    theta: f64,
+    sigma: f64,
+}
+
+impl HiddenDrift {
+    pub fn new(sigma: f64) -> Self {
+        HiddenDrift {
+            log_factor: 0.0,
+            theta: 0.15,
+            sigma,
+        }
+    }
+
+    pub fn step(&mut self, dt: f64, rng: &mut Prng) {
+        self.log_factor += -self.theta * self.log_factor * dt
+            + self.sigma * dt.sqrt() * rng.normal();
+        self.log_factor = self.log_factor.clamp(-0.5, 0.5);
+    }
+
+    /// Current multiplicative factor (≈ 0.6 – 1.65).
+    pub fn factor(&self) -> f64 {
+        self.log_factor.exp()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ou_reverts_to_mean() {
+        let mut bg = BackgroundLoad::new(0.5, 0.05, 0.2);
+        let mut rng = Prng::new(3);
+        let mut sum = 0.0;
+        let n = 20_000;
+        for _ in 0..n {
+            bg.step(0.01, &mut rng);
+            sum += bg.observable();
+        }
+        let avg = sum / n as f64;
+        assert!((avg - 0.5).abs() < 0.05, "avg {avg}");
+    }
+
+    #[test]
+    fn bursts_happen_and_end() {
+        let mut bg = BackgroundLoad::new(0.3, 0.02, 0.3);
+        let mut rng = Prng::new(4);
+        let (mut on, mut off) = (0usize, 0usize);
+        for _ in 0..50_000 {
+            bg.step(0.01, &mut rng);
+            if bg.is_bursting() {
+                on += 1;
+            } else {
+                off += 1;
+            }
+        }
+        assert!(on > 1000, "never bursts");
+        assert!(off > 1000, "always bursts");
+        // expected duty cycle ≈ on_rate/(on_rate+off_rate) ≈ 0.17
+        let duty = on as f64 / (on + off) as f64;
+        assert!((0.05..0.4).contains(&duty), "duty {duty}");
+    }
+
+    #[test]
+    fn instant_geq_observable_during_burst() {
+        let mut bg = BackgroundLoad::new(0.3, 0.0, 0.25);
+        let mut rng = Prng::new(5);
+        for _ in 0..10_000 {
+            bg.step(0.01, &mut rng);
+            if bg.is_bursting() {
+                assert!(bg.instant() >= bg.observable());
+                return;
+            }
+        }
+        panic!("no burst observed");
+    }
+
+    #[test]
+    fn utilization_bounded() {
+        let mut bg = BackgroundLoad::new(0.9, 0.3, 0.5);
+        let mut rng = Prng::new(6);
+        for _ in 0..10_000 {
+            bg.step(0.01, &mut rng);
+            assert!((0.0..=0.95).contains(&bg.instant()));
+        }
+    }
+
+    #[test]
+    fn drift_stays_bounded_and_near_one() {
+        let mut d = HiddenDrift::new(0.08);
+        let mut rng = Prng::new(7);
+        let mut sum = 0.0;
+        let n = 50_000;
+        for _ in 0..n {
+            d.step(0.01, &mut rng);
+            let f = d.factor();
+            assert!((0.5..2.0).contains(&f));
+            sum += f;
+        }
+        let avg = sum / n as f64;
+        assert!((0.85..1.2).contains(&avg), "avg {avg}");
+    }
+
+    #[test]
+    fn set_mean_snaps_level() {
+        let mut bg = BackgroundLoad::new(0.2, 0.02, 0.1);
+        bg.set_mean(0.6);
+        assert!((bg.observable() - 0.6).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,581 @@
+//! The simulated device: SD855 processors + DVFS + thermal + background
+//! dynamics, assembled behind a small API:
+//!
+//! * [`Device::snapshot`] — what a resource monitor can observe
+//!   (frequencies, smoothed utilizations, temperature). Hidden burst/drift
+//!   state is *not* included.
+//! * [`Device::measure`] — ground-truth cost of executing a placement right
+//!   now (includes hidden state + measurement noise): what the executor
+//!   records and the profiler learns from.
+//! * [`Device::expected_cost`] — noise-free cost at the current hidden
+//!   state. Used only by benches as an "oracle profiler" upper bound and by
+//!   tests; planning code must go through the profiler.
+//! * [`Device::advance`] — progress background processes / governor /
+//!   thermal in virtual time.
+//!
+//! Energy accounting: dynamic (switching) energy is attributed per op;
+//! static/leakage power is a device-level term (`static_power_w`) that the
+//! metrics layer multiplies by wall time — standard practice for
+//! energy-per-inference reporting on phones.
+
+use crate::graph::OpNode;
+use crate::util::Prng;
+
+use super::background::{BackgroundLoad, HiddenDrift};
+use super::governor::{Governor, Thermal};
+use super::latency::{activity_factor, compute_time, ComputeParams, UnitCondition};
+use super::opp::OppTable;
+use super::power::PowerParams;
+use super::processor::{Placement, Proc};
+use super::transfer::{boundary_bytes, TransferParams};
+
+/// Full device parameterization (all constants tunable; defaults = SD855).
+#[derive(Debug, Clone)]
+pub struct DeviceConfig {
+    pub cpu_opps: OppTable,
+    pub gpu_opps: OppTable,
+    pub cpu_power: PowerParams,
+    pub gpu_power: PowerParams,
+    pub cpu_compute: ComputeParams,
+    pub gpu_compute: ComputeParams,
+    pub transfer: TransferParams,
+    /// Lognormal σ of measurement/execution noise.
+    pub noise_sigma: f64,
+    /// σ of the hidden drift process (conditions may override).
+    pub drift_sigma: f64,
+    /// Extra throughput loss per unit of background utilization
+    /// (cache/SMT thrashing): eff ×= (1 − thrash · bg).
+    pub thrash: f64,
+    /// Split-op synchronization overhead (two command queues join), s.
+    pub split_sync_s: f64,
+    pub seed: u64,
+}
+
+impl DeviceConfig {
+    pub fn snapdragon_855() -> DeviceConfig {
+        DeviceConfig {
+            cpu_opps: OppTable::sd855_cpu_big(),
+            gpu_opps: OppTable::sd855_gpu(),
+            cpu_power: PowerParams::sd855_cpu(),
+            gpu_power: PowerParams::sd855_gpu(),
+            cpu_compute: ComputeParams::sd855_cpu(),
+            gpu_compute: ComputeParams::sd855_gpu(),
+            transfer: TransferParams::sd855(),
+            noise_sigma: 0.04,
+            drift_sigma: 0.05,
+            thrash: 0.50,
+            split_sync_s: 30e-6,
+            seed: 0xAD40_0E57,
+        }
+    }
+}
+
+/// A workload condition: pinned frequencies + background-load level.
+/// The paper's presets live in [`crate::workload::conditions`].
+#[derive(Debug, Clone)]
+pub struct ConditionSpec {
+    pub name: &'static str,
+    pub cpu_freq_hz: Option<f64>,
+    pub gpu_freq_hz: Option<f64>,
+    pub cpu_bg_mean: f64,
+    pub cpu_bg_sigma: f64,
+    pub cpu_burst: f64,
+    pub gpu_bg_mean: f64,
+    pub gpu_bg_sigma: f64,
+    pub gpu_burst: f64,
+    /// Ambient DRAM-bandwidth contention factor (0,1].
+    pub bw_ambient: f64,
+    pub drift_sigma: f64,
+}
+
+/// Observable device state (what `/proc`-style monitoring exposes).
+#[derive(Debug, Clone, Copy)]
+pub struct Snapshot {
+    pub time_s: f64,
+    pub cpu_freq_hz: f64,
+    pub gpu_freq_hz: f64,
+    /// Smoothed background utilizations (burst state invisible).
+    pub cpu_util: f64,
+    pub gpu_util: f64,
+    pub temp_c: f64,
+    pub bw_factor: f64,
+}
+
+/// Execution context for one op: where its inputs currently live and
+/// whether this op starts a new run on each unit (dispatch amortization).
+#[derive(Debug, Clone)]
+pub struct ExecCtx {
+    /// CPU-visible fraction of each input tensor (parallel to op.in_shapes).
+    pub input_cpu_fracs: Vec<f64>,
+    /// True when the previous op in this unit's queue was not ours
+    /// (pay `dispatch_first` instead of `dispatch_next`).
+    pub new_run_cpu: bool,
+    pub new_run_gpu: bool,
+    /// The *other* unit is concurrently busy with other work (bandwidth
+    /// contention from concurrent streams).
+    pub concurrent: bool,
+}
+
+impl ExecCtx {
+    /// Fresh context: inputs fully resident where `prev_cpu_frac` says,
+    /// starting new runs on both units.
+    pub fn fresh(input_cpu_fracs: Vec<f64>) -> ExecCtx {
+        ExecCtx {
+            input_cpu_fracs,
+            new_run_cpu: true,
+            new_run_gpu: true,
+            concurrent: false,
+        }
+    }
+}
+
+/// Cost of executing one op under a placement.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct OpCost {
+    /// End-to-end latency contribution (includes transfer + sync), s.
+    pub latency_s: f64,
+    /// Dynamic energy attributed to the op (compute + transfer), J.
+    pub energy_j: f64,
+    /// Busy seconds per unit (for utilization accounting).
+    pub cpu_busy_s: f64,
+    pub gpu_busy_s: f64,
+    /// Transfer components (included in the totals above).
+    pub transfer_s: f64,
+    pub transfer_j: f64,
+}
+
+impl OpCost {
+    /// Energy-delay product (the AdaOper DP's default objective).
+    pub fn edp(&self) -> f64 {
+        self.latency_s * self.energy_j
+    }
+}
+
+/// The simulated Snapdragon-855 device.
+pub struct Device {
+    pub cfg: DeviceConfig,
+    cpu_gov: Governor,
+    gpu_gov: Governor,
+    thermal: Thermal,
+    cpu_bg: BackgroundLoad,
+    gpu_bg: BackgroundLoad,
+    drift: HiddenDrift,
+    bw_ambient: f64,
+    rng: Prng,
+    time_s: f64,
+    condition_name: &'static str,
+}
+
+impl Device {
+    pub fn new(cfg: DeviceConfig) -> Device {
+        let rng = Prng::new(cfg.seed);
+        Device {
+            cpu_gov: Governor::new(cfg.cpu_opps.clone()),
+            gpu_gov: Governor::new(cfg.gpu_opps.clone()),
+            thermal: Thermal::sd855(),
+            cpu_bg: BackgroundLoad::idle(),
+            gpu_bg: BackgroundLoad::idle(),
+            drift: HiddenDrift::new(cfg.drift_sigma),
+            bw_ambient: 1.0,
+            rng,
+            time_s: 0.0,
+            condition_name: "idle",
+            cfg,
+        }
+    }
+
+    /// Apply a workload condition (pin frequencies, set background means).
+    pub fn apply_condition(&mut self, c: &ConditionSpec) {
+        match c.cpu_freq_hz {
+            Some(f) => self.cpu_gov.pin(f),
+            None => self.cpu_gov.unpin(),
+        }
+        match c.gpu_freq_hz {
+            Some(f) => self.gpu_gov.pin(f),
+            None => self.gpu_gov.unpin(),
+        }
+        self.cpu_bg = BackgroundLoad::new(c.cpu_bg_mean, c.cpu_bg_sigma, c.cpu_burst);
+        self.gpu_bg = BackgroundLoad::new(c.gpu_bg_mean, c.gpu_bg_sigma, c.gpu_burst);
+        self.bw_ambient = c.bw_ambient;
+        self.drift = HiddenDrift::new(c.drift_sigma);
+        self.condition_name = c.name;
+    }
+
+    pub fn condition_name(&self) -> &'static str {
+        self.condition_name
+    }
+
+    pub fn time_s(&self) -> f64 {
+        self.time_s
+    }
+
+    /// Observable state.
+    pub fn snapshot(&self) -> Snapshot {
+        Snapshot {
+            time_s: self.time_s,
+            cpu_freq_hz: self.cpu_gov.freq_hz(),
+            gpu_freq_hz: self.gpu_gov.freq_hz(),
+            cpu_util: self.cpu_bg.observable(),
+            gpu_util: self.gpu_bg.observable(),
+            temp_c: self.thermal.temp_c(),
+            bw_factor: self.bw_ambient,
+        }
+    }
+
+    /// Static (leakage) power of both units, W — metrics multiply by wall
+    /// time for total-energy reporting.
+    pub fn static_power_w(&self) -> f64 {
+        self.cfg.cpu_power.p_static + self.cfg.gpu_power.p_static
+    }
+
+    /// Advance virtual time: background, drift, governor, thermal.
+    /// `task_util` = fraction of the elapsed interval each unit spent on
+    /// foreground (our) work — the governor responds to total utilization.
+    pub fn advance(&mut self, dt: f64, task_util_cpu: f64, task_util_gpu: f64) {
+        if dt <= 0.0 {
+            return;
+        }
+        self.time_s += dt;
+        self.cpu_bg.step(dt, &mut self.rng);
+        self.gpu_bg.step(dt, &mut self.rng);
+        self.drift.step(dt, &mut self.rng);
+        let cpu_total = (self.cpu_bg.instant() + task_util_cpu).min(1.0);
+        let gpu_total = (self.gpu_bg.instant() + task_util_gpu).min(1.0);
+        let n_cpu = self.cpu_gov.table().points.len();
+        let n_gpu = self.gpu_gov.table().points.len();
+        self.cpu_gov.step(cpu_total, self.thermal.cap_idx(n_cpu));
+        self.gpu_gov.step(gpu_total, self.thermal.cap_idx(n_gpu));
+        // Rough instantaneous power for thermal: static + dynamic scaled
+        // by utilization.
+        let p = self.cfg.cpu_power.total(self.cpu_gov.opp(), cpu_total)
+            + self.cfg.gpu_power.total(self.gpu_gov.opp(), gpu_total);
+        self.thermal.step(dt, p);
+    }
+
+    fn unit_condition(&self, p: Proc, ctx: &ExecCtx, split: bool) -> UnitCondition {
+        let (freq, bg) = match p {
+            Proc::Cpu => (self.cpu_gov.freq_hz(), self.cpu_bg.instant()),
+            Proc::Gpu => (self.gpu_gov.freq_hz(), self.gpu_bg.instant()),
+        };
+        // Bandwidth: ambient contention × concurrent-stream sharing ×
+        // split co-execution sharing.
+        let mut bw = self.bw_ambient;
+        if ctx.concurrent {
+            bw *= 0.85;
+        }
+        if split {
+            bw *= 0.78;
+        }
+        // thrash: background work degrades effective throughput beyond
+        // its cycle share.
+        let bg_eff = (bg + self.cfg.thrash * bg * (1.0 - bg)).min(0.97);
+        UnitCondition {
+            freq_hz: freq,
+            bg_util: bg_eff,
+            bw_factor: bw,
+        }
+    }
+
+    /// Noise-free expected cost at the **current hidden state** — the
+    /// simulator's ground truth "right now". Planning code must use the
+    /// profiler instead; benches use this as the oracle upper bound.
+    pub fn expected_cost(&self, op: &OpNode, placement: Placement, ctx: &ExecCtx) -> OpCost {
+        assert!(placement.is_valid(), "invalid placement {placement:?}");
+        let drift = self.drift.factor();
+
+        // --- transfer: move mismatched input bytes to where they're needed
+        let need_cpu = placement.frac_on(Proc::Cpu);
+        let mut transfer_s = 0.0;
+        let mut transfer_j = 0.0;
+        for (shape, &have_cpu) in op.in_shapes.iter().zip(&ctx.input_cpu_fracs) {
+            let bytes = boundary_bytes(shape.bytes(), have_cpu, need_cpu);
+            transfer_s += self.cfg.transfer.time(bytes);
+            transfer_j += self.cfg.transfer.energy(bytes);
+        }
+
+        // --- compute per unit
+        let split = matches!(placement, Placement::Split { .. });
+        let mut cpu_busy = 0.0;
+        let mut gpu_busy = 0.0;
+        let mut energy = transfer_j;
+
+        for p in Proc::ALL {
+            let frac = placement.frac_on(p);
+            if frac == 0.0 {
+                continue;
+            }
+            let cond = self.unit_condition(p, ctx, split);
+            let (params, power, gov, bg) = match p {
+                Proc::Cpu => (
+                    &self.cfg.cpu_compute,
+                    &self.cfg.cpu_power,
+                    &self.cpu_gov,
+                    self.cpu_bg.instant(),
+                ),
+                Proc::Gpu => (
+                    &self.cfg.gpu_compute,
+                    &self.cfg.gpu_power,
+                    &self.gpu_gov,
+                    self.gpu_bg.instant(),
+                ),
+            };
+            let dispatch = match p {
+                Proc::Cpu if ctx.new_run_cpu => params.dispatch_first,
+                Proc::Cpu => params.dispatch_next,
+                Proc::Gpu if ctx.new_run_gpu => params.dispatch_first,
+                Proc::Gpu => params.dispatch_next,
+            };
+            let t = compute_time(op, p, params, cond, frac) * drift + dispatch;
+            // our switching share of the unit while busy
+            let share = (1.0 - bg).max(0.05);
+            let act = activity_factor(op, p) * share;
+            energy += power.dynamic(gov.opp(), act) * t * drift.sqrt();
+            match p {
+                Proc::Cpu => cpu_busy = t,
+                Proc::Gpu => gpu_busy = t,
+            }
+        }
+
+        let sync = if split { self.cfg.split_sync_s } else { 0.0 };
+        let latency = transfer_s + cpu_busy.max(gpu_busy) + sync;
+        OpCost {
+            latency_s: latency,
+            energy_j: energy,
+            cpu_busy_s: cpu_busy,
+            gpu_busy_s: gpu_busy,
+            transfer_s,
+            transfer_j,
+        }
+    }
+
+    /// Ground-truth *measured* cost: expected cost at the hidden state plus
+    /// lognormal measurement noise. This is what execution observes and
+    /// what the profiler trains/corrects on.
+    pub fn measure(&mut self, op: &OpNode, placement: Placement, ctx: &ExecCtx) -> OpCost {
+        let mut c = self.expected_cost(op, placement, ctx);
+        let s = self.cfg.noise_sigma;
+        let nl = (self.rng.normal() * s).exp();
+        let ne = (self.rng.normal() * s).exp();
+        c.latency_s *= nl;
+        c.cpu_busy_s *= nl;
+        c.gpu_busy_s *= nl;
+        c.energy_j *= ne;
+        c
+    }
+
+    /// Measured average CPU utilization (background + a given foreground
+    /// busy fraction) — lets benches report the paper's "average CPU
+    /// utilization" figure.
+    pub fn avg_cpu_util(&self, task_busy_frac: f64) -> f64 {
+        (self.cpu_bg.observable() + task_busy_frac * (1.0 - self.cpu_bg.observable()))
+            .min(1.0)
+    }
+
+    /// Direct access to the current hidden drift factor — test/bench
+    /// introspection only (not part of the observable API).
+    #[doc(hidden)]
+    pub fn debug_drift_factor(&self) -> f64 {
+        self.drift.factor()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::zoo;
+
+    fn dev() -> Device {
+        Device::new(DeviceConfig::snapdragon_855())
+    }
+
+    fn moderate() -> ConditionSpec {
+        ConditionSpec {
+            name: "moderate",
+            cpu_freq_hz: Some(1.49e9),
+            gpu_freq_hz: Some(499e6),
+            cpu_bg_mean: 0.35,
+            cpu_bg_sigma: 0.03,
+            cpu_burst: 0.10,
+            gpu_bg_mean: 0.08,
+            gpu_bg_sigma: 0.02,
+            gpu_burst: 0.05,
+            bw_ambient: 0.92,
+            drift_sigma: 0.05,
+        }
+    }
+
+    fn ctx1() -> ExecCtx {
+        ExecCtx::fresh(vec![1.0])
+    }
+
+    #[test]
+    fn condition_pins_frequencies() {
+        let mut d = dev();
+        d.apply_condition(&moderate());
+        let s = d.snapshot();
+        assert!((s.cpu_freq_hz - 1.497e9).abs() < 10e6);
+        assert!((s.gpu_freq_hz - 499e6).abs() < 1e6);
+    }
+
+    #[test]
+    fn gpu_faster_and_cheaper_on_heavy_conv() {
+        let mut d = dev();
+        d.apply_condition(&moderate());
+        let g = zoo::yolov2();
+        let op = &g.ops[2]; // conv2 — heavy 3×3
+        let cpu = d.expected_cost(op, Placement::CPU, &ctx1());
+        let mut c = ctx1();
+        c.input_cpu_fracs = vec![0.0];
+        let gpu = d.expected_cost(op, Placement::GPU, &c);
+        assert!(gpu.latency_s < cpu.latency_s, "gpu {gpu:?} cpu {cpu:?}");
+        assert!(gpu.energy_j < cpu.energy_j, "gpu {gpu:?} cpu {cpu:?}");
+    }
+
+    #[test]
+    fn transfer_cost_applies_on_placement_change() {
+        let mut d = dev();
+        d.apply_condition(&moderate());
+        let g = zoo::yolov2();
+        let op = &g.ops[2];
+        // input on GPU, run on CPU → pay transfer
+        let mut c = ctx1();
+        c.input_cpu_fracs = vec![0.0];
+        let cross = d.expected_cost(op, Placement::CPU, &c);
+        let local = d.expected_cost(op, Placement::CPU, &ctx1());
+        assert!(cross.latency_s > local.latency_s);
+        assert!(cross.transfer_s > 0.0 && local.transfer_s == 0.0);
+        assert!(cross.energy_j > local.energy_j);
+    }
+
+    #[test]
+    fn split_balances_latency() {
+        let mut d = dev();
+        d.apply_condition(&moderate());
+        let g = zoo::yolov2();
+        let op = &g.ops[14]; // conv9 512@26 — big
+        let mut c = ctx1();
+        c.input_cpu_fracs = vec![0.0];
+        let gpu = d.expected_cost(op, Placement::GPU, &c);
+        // a near-balanced split should beat pure GPU on latency
+        let mut best = f64::INFINITY;
+        for r in [0.05, 0.08, 0.10, 0.13, 0.16] {
+            let mut cc = c.clone();
+            cc.input_cpu_fracs = vec![r];
+            let s = d.expected_cost(op, Placement::Split { cpu_frac: r }, &cc);
+            best = best.min(s.latency_s);
+        }
+        assert!(best < gpu.latency_s, "split best {best} gpu {}", gpu.latency_s);
+    }
+
+    #[test]
+    fn split_costs_more_energy_than_gpu() {
+        let mut d = dev();
+        d.apply_condition(&moderate());
+        let g = zoo::yolov2();
+        let op = &g.ops[14];
+        let mut c = ctx1();
+        c.input_cpu_fracs = vec![0.0];
+        let gpu = d.expected_cost(op, Placement::GPU, &c);
+        let mut cc = c.clone();
+        cc.input_cpu_fracs = vec![0.1];
+        let split = d.expected_cost(op, Placement::Split { cpu_frac: 0.1 }, &cc);
+        assert!(split.energy_j > gpu.energy_j);
+    }
+
+    #[test]
+    fn measure_is_noisy_but_unbiased_ish() {
+        let mut d = dev();
+        d.apply_condition(&moderate());
+        let g = zoo::yolov2();
+        let op = &g.ops[2];
+        let expect = d.expected_cost(op, Placement::GPU, &ctx1());
+        let n = 300;
+        let mean: f64 = (0..n)
+            .map(|_| d.measure(op, Placement::GPU, &ctx1()).latency_s)
+            .sum::<f64>()
+            / n as f64;
+        assert!((mean / expect.latency_s - 1.0).abs() < 0.05);
+    }
+
+    #[test]
+    fn advance_moves_time_and_keeps_util_near_mean() {
+        let mut d = dev();
+        d.apply_condition(&moderate());
+        for _ in 0..1000 {
+            d.advance(0.01, 0.3, 0.5);
+        }
+        assert!((d.time_s() - 10.0).abs() < 1e-9);
+        let s = d.snapshot();
+        assert!((s.cpu_util - 0.35).abs() < 0.15, "cpu_util {}", s.cpu_util);
+    }
+
+    #[test]
+    fn drift_changes_costs_over_time() {
+        let mut d = dev();
+        let mut spec = moderate();
+        spec.drift_sigma = 0.2;
+        d.apply_condition(&spec);
+        let g = zoo::yolov2();
+        let op = &g.ops[2];
+        let c0 = d.expected_cost(op, Placement::GPU, &ctx1()).latency_s;
+        let mut max_dev: f64 = 0.0;
+        for _ in 0..500 {
+            d.advance(0.05, 0.0, 0.0);
+            let c = d.expected_cost(op, Placement::GPU, &ctx1()).latency_s;
+            max_dev = max_dev.max((c / c0 - 1.0).abs());
+        }
+        assert!(max_dev > 0.05, "drift never moved costs ({max_dev})");
+    }
+
+    #[test]
+    fn dispatch_amortization_rewards_runs() {
+        let mut d = dev();
+        d.apply_condition(&moderate());
+        let g = zoo::yolov2();
+        let op = &g.ops[25]; // small-ish op so dispatch matters
+        let mut first = ctx1();
+        first.input_cpu_fracs = vec![0.0];
+        let mut next = first.clone();
+        next.new_run_gpu = false;
+        let a = d.expected_cost(op, Placement::GPU, &first);
+        let b = d.expected_cost(op, Placement::GPU, &next);
+        assert!(a.latency_s > b.latency_s);
+    }
+
+    #[test]
+    fn high_condition_slows_cpu_more() {
+        let g = zoo::yolov2();
+        let op = &g.ops[2];
+        let mut d1 = dev();
+        d1.apply_condition(&moderate());
+        let mod_cpu = d1.expected_cost(op, Placement::CPU, &ctx1()).latency_s;
+        let mut d2 = dev();
+        let high = ConditionSpec {
+            name: "high",
+            cpu_freq_hz: Some(0.88e9),
+            gpu_freq_hz: Some(427e6),
+            cpu_bg_mean: 0.55,
+            cpu_bg_sigma: 0.05,
+            cpu_burst: 0.25,
+            gpu_bg_mean: 0.12,
+            gpu_bg_sigma: 0.03,
+            gpu_burst: 0.08,
+            bw_ambient: 0.82,
+            drift_sigma: 0.10,
+        };
+        d2.apply_condition(&high);
+        let high_cpu = d2.expected_cost(op, Placement::CPU, &ctx1()).latency_s;
+        let mod_gpu = {
+            let mut c = ctx1();
+            c.input_cpu_fracs = vec![0.0];
+            d1.expected_cost(op, Placement::GPU, &c).latency_s
+        };
+        let high_gpu = {
+            let mut c = ctx1();
+            c.input_cpu_fracs = vec![0.0];
+            d2.expected_cost(op, Placement::GPU, &c).latency_s
+        };
+        // CPU suffers proportionally more than GPU under the high condition
+        assert!(high_cpu / mod_cpu > high_gpu / mod_gpu * 1.3);
+    }
+}

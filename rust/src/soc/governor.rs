@@ -1,0 +1,211 @@
+//! DVFS governor (schedutil-style) and thermal throttling.
+//!
+//! When a workload *condition* pins frequencies (as the paper's experiments
+//! do), the governor is disabled for that unit. In dynamic traces — the
+//! profiler-adaptation ablation — the governor walks the OPP table toward
+//! `util / target_util`, and the thermal model caps the top OPP as the
+//! sustained-power envelope is exceeded.
+
+use crate::util::stats::Ewma;
+
+use super::opp::OppTable;
+
+/// Per-unit governor state.
+#[derive(Debug, Clone)]
+pub struct Governor {
+    table: OppTable,
+    /// Current OPP index.
+    idx: usize,
+    /// Pinned (condition-fixed) OPP index, if any.
+    pinned: Option<usize>,
+    /// schedutil target utilization.
+    target_util: f64,
+    util_ewma: Ewma,
+}
+
+impl Governor {
+    pub fn new(table: OppTable) -> Self {
+        let idx = table.points.len() - 1;
+        Governor {
+            table,
+            idx,
+            pinned: None,
+            target_util: 0.8,
+            util_ewma: Ewma::new(0.3),
+        }
+    }
+
+    /// Pin to the OPP nearest `freq_hz` (workload-condition presets).
+    pub fn pin(&mut self, freq_hz: f64) {
+        let i = self.table.nearest_idx(freq_hz);
+        self.pinned = Some(i);
+        self.idx = i;
+    }
+
+    /// Release the pin (dynamic governor resumes).
+    pub fn unpin(&mut self) {
+        self.pinned = None;
+    }
+
+    pub fn freq_hz(&self) -> f64 {
+        self.table.points[self.idx].freq_hz
+    }
+
+    pub fn volt(&self) -> f64 {
+        self.table.points[self.idx].volt
+    }
+
+    pub fn opp(&self) -> super::opp::Opp {
+        self.table.points[self.idx]
+    }
+
+    /// One governor tick: adjust frequency toward the observed utilization
+    /// (`util` = fraction busy over the last interval), bounded by the
+    /// thermal cap index.
+    pub fn step(&mut self, util: f64, thermal_cap_idx: usize) {
+        if let Some(p) = self.pinned {
+            // Thermal still applies to pinned units (phones do throttle
+            // pinned governors), but condition experiments set caps high.
+            self.idx = p.min(thermal_cap_idx);
+            return;
+        }
+        let u = self.util_ewma.push(util.clamp(0.0, 1.0));
+        // schedutil: f_next = 1.25 · f_cur · u / target
+        let f_want = 1.25 * self.freq_hz() * u / self.target_util;
+        let mut want_idx = self.table.nearest_idx(f_want);
+        // move at most 2 steps per tick (rate limiting)
+        let cur = self.idx as isize;
+        let delta = (want_idx as isize - cur).clamp(-2, 2);
+        want_idx = self.table.clamp_idx(cur + delta);
+        self.idx = want_idx.min(thermal_cap_idx);
+    }
+
+    pub fn table(&self) -> &OppTable {
+        &self.table
+    }
+}
+
+/// Lumped-thermal model: junction temperature follows power with a first-
+/// order RC; above `throttle_start` the allowed top OPP index ramps down.
+#[derive(Debug, Clone)]
+pub struct Thermal {
+    /// Temperature rise per watt at equilibrium (K/W).
+    pub r_th: f64,
+    /// Time constant (s).
+    pub tau: f64,
+    /// Ambient/skin-coupled baseline, °C.
+    pub ambient: f64,
+    /// Throttling begins here, °C.
+    pub throttle_start: f64,
+    /// Full throttle (min OPP) here, °C.
+    pub throttle_end: f64,
+    temp: f64,
+}
+
+impl Thermal {
+    pub fn sd855() -> Thermal {
+        Thermal {
+            r_th: 7.0,
+            tau: 18.0,
+            ambient: 30.0,
+            throttle_start: 62.0,
+            throttle_end: 80.0,
+            temp: 30.0,
+        }
+    }
+
+    /// Advance by `dt` with total SoC power `power_w`.
+    pub fn step(&mut self, dt: f64, power_w: f64) {
+        let target = self.ambient + self.r_th * power_w;
+        let a = 1.0 - (-dt / self.tau).exp();
+        self.temp += (target - self.temp) * a;
+    }
+
+    pub fn temp_c(&self) -> f64 {
+        self.temp
+    }
+
+    /// Top allowed OPP index for a table of `n` OPPs.
+    pub fn cap_idx(&self, n: usize) -> usize {
+        if self.temp <= self.throttle_start {
+            return n - 1;
+        }
+        if self.temp >= self.throttle_end {
+            return 0;
+        }
+        let x = (self.temp - self.throttle_start) / (self.throttle_end - self.throttle_start);
+        (((n - 1) as f64) * (1.0 - x)).round() as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::soc::opp::OppTable;
+
+    #[test]
+    fn pin_fixes_frequency() {
+        let mut g = Governor::new(OppTable::sd855_cpu_big());
+        g.pin(1.49e9);
+        for _ in 0..50 {
+            g.step(1.0, usize::MAX);
+        }
+        assert!((g.freq_hz() - 1.497e9).abs() < 10e6);
+    }
+
+    #[test]
+    fn governor_ramps_up_under_load() {
+        let mut g = Governor::new(OppTable::sd855_cpu_big());
+        g.idx = 0; // start at min
+        let n = g.table.points.len();
+        for _ in 0..50 {
+            g.step(1.0, n - 1);
+        }
+        assert_eq!(g.freq_hz(), g.table.max().freq_hz);
+    }
+
+    #[test]
+    fn governor_settles_down_when_idle() {
+        let mut g = Governor::new(OppTable::sd855_cpu_big());
+        let n = g.table.points.len();
+        for _ in 0..100 {
+            g.step(0.05, n - 1);
+        }
+        assert!(g.freq_hz() <= g.table.points[2].freq_hz);
+    }
+
+    #[test]
+    fn thermal_heats_and_caps() {
+        let mut th = Thermal::sd855();
+        let n = 18;
+        assert_eq!(th.cap_idx(n), n - 1);
+        for _ in 0..600 {
+            th.step(0.1, 6.0); // 6 W sustained → 72 °C equilibrium
+        }
+        assert!(th.temp_c() > 62.0, "temp {}", th.temp_c());
+        assert!(th.cap_idx(n) < n - 1);
+    }
+
+    #[test]
+    fn thermal_cools_back() {
+        let mut th = Thermal::sd855();
+        for _ in 0..600 {
+            th.step(0.1, 6.0);
+        }
+        let hot = th.temp_c();
+        for _ in 0..1200 {
+            th.step(0.1, 0.3);
+        }
+        assert!(th.temp_c() < hot - 10.0);
+    }
+
+    #[test]
+    fn thermal_cap_monotone_in_temp() {
+        let mut th = Thermal::sd855();
+        th.temp = 65.0;
+        let a = th.cap_idx(18);
+        th.temp = 75.0;
+        let b = th.cap_idx(18);
+        assert!(b < a);
+    }
+}

@@ -1,0 +1,244 @@
+//! Roofline operator latency model.
+//!
+//! `t_op = max(flops / eff_throughput, bytes / eff_bandwidth) + dispatch`,
+//! where effective throughput depends on the operating point, the kind of
+//! operator (conv maps well to both units, depthwise conv poorly to the
+//! GPU, elementwise ops are bandwidth-bound everywhere) and how much of the
+//! unit background work has stolen. GPU work additionally pays a per-run
+//! command-queue dispatch overhead — the term that makes fine-grained
+//! CPU↔GPU ping-ponging expensive and op-grouping (CoDL) worthwhile.
+
+use crate::graph::OpNode;
+
+use super::processor::Proc;
+
+/// Per-processor compute/bandwidth capability at a fixed frequency.
+#[derive(Debug, Clone, Copy)]
+pub struct ComputeParams {
+    /// Peak FLOP per cycle across the unit (all cores / ALUs).
+    pub flops_per_cycle: f64,
+    /// Effective DRAM bandwidth the unit can pull alone, bytes/s.
+    pub mem_bw: f64,
+    /// Dispatch overhead for the *first* op of a run on this unit, s.
+    pub dispatch_first: f64,
+    /// Dispatch overhead for subsequent ops in the same run, s.
+    pub dispatch_next: f64,
+}
+
+impl ComputeParams {
+    /// Kryo-485 big cluster: 4 cores × 2×128-bit NEON FMA pipes
+    /// → 4 × 16 = 64 FLOP/cycle. ~14 GB/s streaming alone.
+    pub fn sd855_cpu() -> ComputeParams {
+        ComputeParams {
+            flops_per_cycle: 64.0,
+            mem_bw: 14.0e9,
+            dispatch_first: 25e-6,
+            dispatch_next: 8e-6,
+        }
+    }
+
+    /// Adreno 640: 2 SPs × 2 uSPs × 64 ALUs × 2 (FMA) ≈ 1536 FLOP/cycle
+    /// (954 GFLOPS at 585 MHz wave-peak, ~60% of the marketing number is
+    /// reachable for GEMM-like work — folded into `efficiency`).
+    /// ~22 GB/s streaming alone; OpenCL enqueue+flush ≈ 110 µs.
+    pub fn sd855_gpu() -> ComputeParams {
+        ComputeParams {
+            flops_per_cycle: 1536.0,
+            mem_bw: 22.0e9,
+            dispatch_first: 110e-6,
+            dispatch_next: 18e-6,
+        }
+    }
+
+    pub fn for_proc(p: Proc) -> ComputeParams {
+        match p {
+            Proc::Cpu => ComputeParams::sd855_cpu(),
+            Proc::Gpu => ComputeParams::sd855_gpu(),
+        }
+    }
+}
+
+/// Fraction of peak FLOP/cycle an operator kind actually achieves on a
+/// unit (kernel quality / shape effects, folded constants).
+pub fn efficiency(op: &OpNode, proc: Proc) -> f64 {
+    let k = op.kind.label();
+    match (k, proc) {
+        // dense conv: NEON/winograd kernels do well; Adreno fp32 conv
+        // utilization is notoriously modest (~0.3 of wave peak)
+        ("conv", Proc::Cpu) => 0.60,
+        ("conv", Proc::Gpu) => 0.28,
+        // 1×1 conv = GEMM, slightly lower arithmetic intensity
+        ("conv1x1", Proc::Cpu) => 0.55,
+        ("conv1x1", Proc::Gpu) => 0.26,
+        // depthwise: bandwidth-starved on GPU (CoDL's observation)
+        ("dwconv", Proc::Cpu) => 0.30,
+        ("dwconv", Proc::Gpu) => 0.10,
+        ("fc", Proc::Cpu) => 0.40,
+        ("fc", Proc::Gpu) => 0.30,
+        // everything else is effectively bandwidth-bound; the FLOP term
+        // rarely dominates, but keep sane values
+        (_, Proc::Cpu) => 0.25,
+        (_, Proc::Gpu) => 0.20,
+    }
+}
+
+/// Inputs describing the unit's instantaneous condition.
+#[derive(Debug, Clone, Copy)]
+pub struct UnitCondition {
+    pub freq_hz: f64,
+    /// Fraction of the unit's capacity stolen by background work, [0,1).
+    pub bg_util: f64,
+    /// Bandwidth contention factor, (0,1]: 1 = alone, <1 = sharing DRAM.
+    pub bw_factor: f64,
+}
+
+/// Compute time (seconds, no dispatch) for `frac` of an op on a unit.
+pub fn compute_time(
+    op: &OpNode,
+    proc: Proc,
+    params: &ComputeParams,
+    cond: UnitCondition,
+    frac: f64,
+) -> f64 {
+    debug_assert!((0.0..=1.0).contains(&frac));
+    if frac == 0.0 {
+        return 0.0;
+    }
+    let avail = (1.0 - cond.bg_util).max(0.02);
+    let eff_flops = params.flops_per_cycle * cond.freq_hz * efficiency(op, proc) * avail;
+    let eff_bw = params.mem_bw * cond.bw_factor * avail.max(0.3); // bw less sensitive to cpu load
+    let t_compute = op.flops as f64 * frac / eff_flops;
+    let t_mem = op.activation_bytes as f64 * frac / eff_bw;
+    t_compute.max(t_mem)
+}
+
+/// The activity factor to feed the power model for this op: compute-bound
+/// ops switch the whole datapath; memory-bound ops keep ALUs half idle.
+pub fn activity_factor(op: &OpNode, proc: Proc) -> f64 {
+    match (op.kind.label(), proc) {
+        ("conv" | "conv1x1" | "fc", _) => 1.0,
+        ("dwconv", Proc::Cpu) => 0.8,
+        ("dwconv", Proc::Gpu) => 0.6,
+        _ => 0.5,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::zoo;
+
+    fn nominal(p: Proc) -> UnitCondition {
+        UnitCondition {
+            freq_hz: match p {
+                Proc::Cpu => 2.419e9,
+                Proc::Gpu => 585e6,
+            },
+            bg_util: 0.0,
+            bw_factor: 1.0,
+        }
+    }
+
+    #[test]
+    fn yolov2_gpu_latency_plausible() {
+        // Sum of pure compute times @ 585 MHz should land near published
+        // mobile-GPU YOLOv2 latencies (~60–150 ms on Adreno 640 class).
+        let g = zoo::yolov2();
+        let params = ComputeParams::sd855_gpu();
+        let t: f64 = g
+            .ops
+            .iter()
+            .map(|o| compute_time(o, Proc::Gpu, &params, nominal(Proc::Gpu), 1.0))
+            .sum();
+        assert!((0.04..0.20).contains(&t), "gpu yolov2 {t} s");
+    }
+
+    #[test]
+    fn yolov2_cpu_slower_than_gpu() {
+        let g = zoo::yolov2();
+        let cpu: f64 = g
+            .ops
+            .iter()
+            .map(|o| {
+                compute_time(o, Proc::Cpu, &ComputeParams::sd855_cpu(), nominal(Proc::Cpu), 1.0)
+            })
+            .sum();
+        let gpu: f64 = g
+            .ops
+            .iter()
+            .map(|o| {
+                compute_time(o, Proc::Gpu, &ComputeParams::sd855_gpu(), nominal(Proc::Gpu), 1.0)
+            })
+            .sum();
+        assert!(cpu > 2.0 * gpu, "cpu {cpu} vs gpu {gpu}");
+        assert!(cpu < 20.0 * gpu, "cpu {cpu} vs gpu {gpu}");
+    }
+
+    #[test]
+    fn depthwise_relatively_better_on_cpu() {
+        let g = zoo::mobilenet_v1();
+        let dw = g.ops.iter().find(|o| o.kind.label() == "dwconv").unwrap();
+        let pw = g.ops.iter().find(|o| o.kind.label() == "conv1x1").unwrap();
+        let c = |op, p: Proc| {
+            compute_time(op, p, &ComputeParams::for_proc(p), nominal(p), 1.0)
+        };
+        // GPU speedup on pointwise conv must exceed its speedup on dwconv
+        let speedup_pw = c(pw, Proc::Cpu) / c(pw, Proc::Gpu);
+        let speedup_dw = c(dw, Proc::Cpu) / c(dw, Proc::Gpu);
+        assert!(speedup_pw > speedup_dw);
+    }
+
+    #[test]
+    fn background_load_slows_cpu() {
+        let g = zoo::yolov2();
+        let op = &g.ops[0];
+        let params = ComputeParams::sd855_cpu();
+        let idle = compute_time(op, Proc::Cpu, &params, nominal(Proc::Cpu), 1.0);
+        let loaded = compute_time(
+            op,
+            Proc::Cpu,
+            &params,
+            UnitCondition {
+                bg_util: 0.5,
+                ..nominal(Proc::Cpu)
+            },
+            1.0,
+        );
+        assert!(loaded > 1.8 * idle);
+    }
+
+    #[test]
+    fn frequency_scales_compute_bound_latency() {
+        let g = zoo::yolov2();
+        let op = &g.ops[2]; // conv2: heavy, compute-bound
+        let params = ComputeParams::sd855_cpu();
+        let fast = compute_time(op, Proc::Cpu, &params, nominal(Proc::Cpu), 1.0);
+        let slow = compute_time(
+            op,
+            Proc::Cpu,
+            &params,
+            UnitCondition {
+                freq_hz: 0.883e9,
+                ..nominal(Proc::Cpu)
+            },
+            1.0,
+        );
+        let ratio = slow / fast;
+        assert!((2.4..3.1).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn zero_frac_costs_nothing() {
+        let g = zoo::yolov2();
+        assert_eq!(
+            compute_time(
+                &g.ops[0],
+                Proc::Cpu,
+                &ComputeParams::sd855_cpu(),
+                nominal(Proc::Cpu),
+                0.0
+            ),
+            0.0
+        );
+    }
+}

@@ -1,0 +1,28 @@
+//! Snapdragon-855 SoC simulator.
+//!
+//! This module is the substitute for the paper's physical testbed (Xiaomi 9):
+//! a calibrated analytical model of a mobile heterogeneous SoC — per-cluster
+//! DVFS operating points ([`opp`]), CMOS power ([`power`]), roofline operator
+//! latency ([`latency`]), CPU↔GPU shared-memory transfer costs ([`transfer`]),
+//! stochastic background workload ([`background`]), a schedutil-style
+//! governor with thermal throttling ([`governor`]) — assembled into a
+//! [`Device`] that executes operator placements in virtual time and accounts
+//! energy ([`device`]).
+//!
+//! The coordinator treats [`Device`] as ground truth: the profiler *learns*
+//! its behaviour from observed (features → energy) pairs, never by peeking
+//! at the model internals. A hidden drift process (see [`background`])
+//! deliberately breaks any static model, which is what the paper's GRU-based
+//! runtime corrector exists to track.
+
+pub mod background;
+pub mod device;
+pub mod governor;
+pub mod latency;
+pub mod opp;
+pub mod power;
+pub mod processor;
+pub mod transfer;
+
+pub use device::{Device, DeviceConfig, OpCost, Snapshot};
+pub use processor::{Placement, Proc};

@@ -1,0 +1,159 @@
+//! DVFS operating-performance-point (OPP) tables for the Snapdragon 855.
+//!
+//! Frequencies follow the shipped kernel's cpufreq/devfreq tables (subset);
+//! voltages are a standard near-linear V(f) fit — the *relative* shape of
+//! V(f) is what the energy/frequency tradeoff depends on. The paper pins
+//! the CPU to 1.49 GHz / 0.88 GHz and the GPU to 499 / 427 MHz for its two
+//! workload conditions; both sit on these tables.
+
+/// One operating point.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Opp {
+    pub freq_hz: f64,
+    pub volt: f64,
+}
+
+/// A processor's DVFS table (ascending frequency).
+#[derive(Debug, Clone)]
+pub struct OppTable {
+    pub points: Vec<Opp>,
+}
+
+impl OppTable {
+    pub fn new(points: Vec<Opp>) -> Self {
+        assert!(!points.is_empty());
+        for w in points.windows(2) {
+            assert!(w[0].freq_hz < w[1].freq_hz, "OPPs must ascend");
+            assert!(w[0].volt <= w[1].volt, "voltage must be monotone");
+        }
+        OppTable { points }
+    }
+
+    /// Kryo-485 gold (big) cluster, 710 MHz – 2.42 GHz.
+    /// Voltage ramp 0.57 V → 0.95 V.
+    pub fn sd855_cpu_big() -> OppTable {
+        let freqs_mhz = [
+            710.0, 825.0, 883.0, 940.0, 1056.0, 1171.0, 1286.0, 1401.0, 1497.0, 1612.0,
+            1708.0, 1804.0, 1920.0, 2016.0, 2131.0, 2227.0, 2323.0, 2419.0,
+        ];
+        OppTable::new(
+            freqs_mhz
+                .iter()
+                .map(|&m| Opp {
+                    freq_hz: m * 1e6,
+                    volt: volt_fit(m * 1e6, 710e6, 2419e6, 0.57, 0.95),
+                })
+                .collect(),
+        )
+    }
+
+    /// Adreno-640 GPU, 257 – 675 MHz. Voltage ramp 0.60 V → 0.85 V.
+    pub fn sd855_gpu() -> OppTable {
+        let freqs_mhz = [257.0, 300.0, 342.0, 414.0, 427.0, 499.0, 585.0, 675.0];
+        OppTable::new(
+            freqs_mhz
+                .iter()
+                .map(|&m| Opp {
+                    freq_hz: m * 1e6,
+                    volt: volt_fit(m * 1e6, 257e6, 675e6, 0.60, 0.85),
+                })
+                .collect(),
+        )
+    }
+
+    pub fn min(&self) -> Opp {
+        self.points[0]
+    }
+
+    pub fn max(&self) -> Opp {
+        *self.points.last().unwrap()
+    }
+
+    /// The table index whose frequency is nearest `freq_hz`.
+    pub fn nearest_idx(&self, freq_hz: f64) -> usize {
+        let mut best = 0;
+        let mut err = f64::INFINITY;
+        for (i, p) in self.points.iter().enumerate() {
+            let e = (p.freq_hz - freq_hz).abs();
+            if e < err {
+                err = e;
+                best = i;
+            }
+        }
+        best
+    }
+
+    /// The OPP nearest `freq_hz` (how conditions pin frequencies).
+    pub fn nearest(&self, freq_hz: f64) -> Opp {
+        self.points[self.nearest_idx(freq_hz)]
+    }
+
+    /// Smallest OPP whose frequency ≥ the requested one (governor step-up
+    /// target); saturates at max.
+    pub fn at_least(&self, freq_hz: f64) -> Opp {
+        for p in &self.points {
+            if p.freq_hz >= freq_hz - 1.0 {
+                return *p;
+            }
+        }
+        self.max()
+    }
+
+    /// Clamp an OPP index into the table.
+    pub fn clamp_idx(&self, idx: isize) -> usize {
+        idx.clamp(0, self.points.len() as isize - 1) as usize
+    }
+}
+
+/// Near-linear voltage/frequency fit with a mild superlinear tail (matches
+/// the shape of published SD855 rail data).
+fn volt_fit(f: f64, f_min: f64, f_max: f64, v_min: f64, v_max: f64) -> f64 {
+    let x = ((f - f_min) / (f_max - f_min)).clamp(0.0, 1.0);
+    let shaped = 0.8 * x + 0.2 * x * x; // slight curvature upward
+    v_min + (v_max - v_min) * shaped
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_table_contains_paper_conditions() {
+        let t = OppTable::sd855_cpu_big();
+        // paper: 1.49 GHz (moderate), 0.88 GHz (high)
+        assert!((t.nearest(1.49e9).freq_hz - 1.497e9).abs() < 10e6);
+        assert!((t.nearest(0.88e9).freq_hz - 0.883e9).abs() < 10e6);
+    }
+
+    #[test]
+    fn gpu_table_contains_paper_conditions() {
+        let t = OppTable::sd855_gpu();
+        assert_eq!(t.nearest(499e6).freq_hz, 499e6);
+        assert_eq!(t.nearest(427e6).freq_hz, 427e6);
+    }
+
+    #[test]
+    fn voltage_monotone() {
+        for t in [OppTable::sd855_cpu_big(), OppTable::sd855_gpu()] {
+            for w in t.points.windows(2) {
+                assert!(w[1].volt >= w[0].volt);
+            }
+            assert!(t.min().volt >= 0.5 && t.max().volt <= 1.0);
+        }
+    }
+
+    #[test]
+    fn at_least_steps_up() {
+        let t = OppTable::sd855_gpu();
+        assert_eq!(t.at_least(450e6).freq_hz, 499e6);
+        assert_eq!(t.at_least(10e9).freq_hz, t.max().freq_hz);
+        assert_eq!(t.at_least(0.0).freq_hz, t.min().freq_hz);
+    }
+
+    #[test]
+    fn nearest_idx_endpoints() {
+        let t = OppTable::sd855_cpu_big();
+        assert_eq!(t.nearest_idx(0.0), 0);
+        assert_eq!(t.nearest_idx(1e12), t.points.len() - 1);
+    }
+}

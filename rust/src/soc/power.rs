@@ -1,0 +1,102 @@
+//! CMOS power model: `P = P_static + C_eff · f · V(f)² · activity`.
+//!
+//! Constants are calibrated so absolute draws land in the published range
+//! for an SD855 phone (CPU big cluster ≈ 2.5–3 W flat-out, Adreno 640 ≈
+//! 2–2.5 W), but what the experiments depend on is the *ratio* of CPU to
+//! GPU energy-per-FLOP and its movement with frequency/utilization — the
+//! effect AdaOper exploits.
+
+use super::opp::Opp;
+use super::processor::Proc;
+
+/// Per-processor power parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct PowerParams {
+    /// Effective switched capacitance × activity at full load, in
+    /// farad-equivalents: `P_dyn = c_eff · f · V²` at activity 1.
+    pub c_eff: f64,
+    /// Leakage + always-on rail share attributed to the unit, watts.
+    pub p_static: f64,
+}
+
+impl PowerParams {
+    /// Kryo-485 big cluster (sustained NEON conv load ≈ 2.0 W at fmax —
+    /// the thermally sustainable envelope, not the instantaneous burst
+    /// peak).
+    pub fn sd855_cpu() -> PowerParams {
+        // 2.0 W ≈ c · 2.419e9 · 0.95² + 0.15  →  c ≈ 0.85e-9
+        PowerParams {
+            c_eff: 0.85e-9,
+            p_static: 0.15,
+        }
+    }
+
+    /// Adreno 640 (≈ 2.9 W at 585 MHz under full conv load, including the
+    /// memory-system draw attributed to the GPU rail).
+    pub fn sd855_gpu() -> PowerParams {
+        // 2.9 W ≈ c · 585e6 · 0.7934² + 0.10 → c ≈ 7.6e-9
+        PowerParams {
+            c_eff: 7.6e-9,
+            p_static: 0.10,
+        }
+    }
+
+    pub fn for_proc(p: Proc) -> PowerParams {
+        match p {
+            Proc::Cpu => PowerParams::sd855_cpu(),
+            Proc::Gpu => PowerParams::sd855_gpu(),
+        }
+    }
+
+    /// Dynamic power at an operating point with a given activity factor
+    /// (fraction of the unit's pipelines actually switching).
+    pub fn dynamic(&self, opp: Opp, activity: f64) -> f64 {
+        debug_assert!((0.0..=1.0).contains(&activity));
+        self.c_eff * opp.freq_hz * opp.volt * opp.volt * activity
+    }
+
+    /// Total power at an operating point and activity.
+    pub fn total(&self, opp: Opp, activity: f64) -> f64 {
+        self.p_static + self.dynamic(opp, activity)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::soc::opp::OppTable;
+
+    #[test]
+    fn cpu_peak_power_in_published_range() {
+        let t = OppTable::sd855_cpu_big();
+        let p = PowerParams::sd855_cpu().total(t.max(), 1.0);
+        assert!((1.5..2.5).contains(&p), "cpu peak {p} W");
+    }
+
+    #[test]
+    fn gpu_peak_power_in_published_range() {
+        let t = OppTable::sd855_gpu();
+        let opp585 = t.nearest(585e6);
+        let p = PowerParams::sd855_gpu().total(opp585, 1.0);
+        assert!((2.3..3.3).contains(&p), "gpu peak {p} W");
+    }
+
+    #[test]
+    fn power_grows_superlinearly_with_frequency() {
+        // V rises with f, so P/f must increase with f.
+        let t = OppTable::sd855_cpu_big();
+        let pp = PowerParams::sd855_cpu();
+        let lo = t.nearest(0.883e9);
+        let hi = t.nearest(2.419e9);
+        let eff_lo = pp.dynamic(lo, 1.0) / lo.freq_hz;
+        let eff_hi = pp.dynamic(hi, 1.0) / hi.freq_hz;
+        assert!(eff_hi > eff_lo * 1.3, "no superlinear growth");
+    }
+
+    #[test]
+    fn zero_activity_leaves_static_only() {
+        let t = OppTable::sd855_gpu();
+        let pp = PowerParams::sd855_gpu();
+        assert_eq!(pp.total(t.min(), 0.0), pp.p_static);
+    }
+}

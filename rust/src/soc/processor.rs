@@ -1,0 +1,135 @@
+//! Processor identifiers and operator placements.
+
+use std::fmt;
+
+/// A compute unit of the SoC. The paper (and CoDL) co-execute across the
+/// CPU big cluster and the GPU; the simulator is written so further units
+/// (e.g. an NPU) slot in by extending this enum and the device tables.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Proc {
+    /// Kryo-485 big-core cluster (treated as one schedulable resource, as
+    /// MACE/CoDL do with their CPU thread pool).
+    Cpu,
+    /// Adreno-640 GPU.
+    Gpu,
+}
+
+impl Proc {
+    pub const ALL: [Proc; 2] = [Proc::Cpu, Proc::Gpu];
+
+    pub fn index(self) -> usize {
+        match self {
+            Proc::Cpu => 0,
+            Proc::Gpu => 1,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Proc::Cpu => "cpu",
+            Proc::Gpu => "gpu",
+        }
+    }
+}
+
+impl fmt::Display for Proc {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// How a single operator is placed onto processors.
+///
+/// `Split` is CoDL-style intra-operator co-execution: the output channels
+/// (conv) / rows (FC) are divided, `cpu_frac` of the work on the CPU and
+/// the rest on the GPU, synchronized at the end of the op.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Placement {
+    Single(Proc),
+    Split {
+        /// Fraction of the op's work done on the CPU, in (0, 1).
+        cpu_frac: f64,
+    },
+}
+
+impl Placement {
+    pub const CPU: Placement = Placement::Single(Proc::Cpu);
+    pub const GPU: Placement = Placement::Single(Proc::Gpu);
+
+    /// Fraction of the op's work executed on `p`.
+    pub fn frac_on(&self, p: Proc) -> f64 {
+        match *self {
+            Placement::Single(q) => {
+                if q == p {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+            Placement::Split { cpu_frac } => match p {
+                Proc::Cpu => cpu_frac,
+                Proc::Gpu => 1.0 - cpu_frac,
+            },
+        }
+    }
+
+    /// True when any work lands on `p`.
+    pub fn uses(&self, p: Proc) -> bool {
+        self.frac_on(p) > 0.0
+    }
+
+    /// Canonical short label, e.g. `cpu`, `gpu`, `split(0.30)`.
+    pub fn label(&self) -> String {
+        match *self {
+            Placement::Single(p) => p.name().to_string(),
+            Placement::Split { cpu_frac } => format!("split({cpu_frac:.2})"),
+        }
+    }
+
+    /// Validate invariants (split fraction strictly inside (0,1)).
+    pub fn is_valid(&self) -> bool {
+        match *self {
+            Placement::Single(_) => true,
+            Placement::Split { cpu_frac } => cpu_frac > 0.0 && cpu_frac < 1.0,
+        }
+    }
+}
+
+impl fmt::Display for Placement {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.label())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frac_on_single() {
+        assert_eq!(Placement::CPU.frac_on(Proc::Cpu), 1.0);
+        assert_eq!(Placement::CPU.frac_on(Proc::Gpu), 0.0);
+        assert_eq!(Placement::GPU.frac_on(Proc::Gpu), 1.0);
+    }
+
+    #[test]
+    fn frac_on_split_sums_to_one() {
+        let s = Placement::Split { cpu_frac: 0.3 };
+        assert!((s.frac_on(Proc::Cpu) + s.frac_on(Proc::Gpu) - 1.0).abs() < 1e-12);
+        assert!(s.uses(Proc::Cpu) && s.uses(Proc::Gpu));
+    }
+
+    #[test]
+    fn validity() {
+        assert!(Placement::CPU.is_valid());
+        assert!(Placement::Split { cpu_frac: 0.5 }.is_valid());
+        assert!(!Placement::Split { cpu_frac: 0.0 }.is_valid());
+        assert!(!Placement::Split { cpu_frac: 1.0 }.is_valid());
+    }
+
+    #[test]
+    fn labels() {
+        assert_eq!(Placement::CPU.label(), "cpu");
+        assert_eq!(Placement::Split { cpu_frac: 0.25 }.label(), "split(0.25)");
+    }
+}

@@ -1,0 +1,114 @@
+//! CPU↔GPU data movement cost model.
+//!
+//! Mobile SoCs share one DRAM, so a "transfer" is not a PCIe copy but a
+//! cache-coherency + mapping operation (CoDL builds on ION/SVM zero-copy
+//! buffers): a fixed map/unmap + flush overhead, plus a bytes/bandwidth
+//! term for the cache-line traffic. Both time and energy are modeled.
+
+/// Transfer cost parameters (symmetric unless noted).
+#[derive(Debug, Clone, Copy)]
+pub struct TransferParams {
+    /// Fixed map/unmap + cache-maintenance overhead per movement, s.
+    pub map_overhead_s: f64,
+    /// Effective bytes/s for the coherency traffic.
+    pub bw: f64,
+    /// Energy per byte moved (DRAM round trip ≈ 2 × ~110 pJ/B on LPDDR4X).
+    pub energy_per_byte: f64,
+    /// Fixed energy per map/unmap (driver + cache ops).
+    pub map_energy_j: f64,
+}
+
+impl TransferParams {
+    pub fn sd855() -> TransferParams {
+        TransferParams {
+            map_overhead_s: 80e-6,
+            bw: 11.0e9,
+            energy_per_byte: 0.22e-9,
+            map_energy_j: 0.12e-3,
+        }
+    }
+
+    /// Time to make `bytes` produced on one unit visible to the other.
+    pub fn time(&self, bytes: u64) -> f64 {
+        if bytes == 0 {
+            return 0.0;
+        }
+        self.map_overhead_s + bytes as f64 / self.bw
+    }
+
+    /// Energy for the same movement.
+    pub fn energy(&self, bytes: u64) -> f64 {
+        if bytes == 0 {
+            return 0.0;
+        }
+        self.map_energy_j + bytes as f64 * self.energy_per_byte
+    }
+}
+
+/// Bytes that must move between two consecutive ops given the CPU-side
+/// share of the producer's output (`prev_cpu`) and the CPU-side share the
+/// consumer needs (`next_cpu`), for a tensor of `bytes` total.
+///
+/// Model: the producer leaves `prev_cpu` of the tensor CPU-visible and the
+/// rest GPU-visible (channel split); the consumer needs `next_cpu`
+/// CPU-visible. The mismatch is what crosses the coherency boundary.
+/// Split execution also pays a gather/scatter of the halves at the sync
+/// point, captured by the caller adding the sync bytes.
+pub fn boundary_bytes(bytes: u64, prev_cpu: f64, next_cpu: f64) -> u64 {
+    debug_assert!((0.0..=1.0).contains(&prev_cpu));
+    debug_assert!((0.0..=1.0).contains(&next_cpu));
+    ((next_cpu - prev_cpu).abs() * bytes as f64).round() as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_bytes_is_free() {
+        let t = TransferParams::sd855();
+        assert_eq!(t.time(0), 0.0);
+        assert_eq!(t.energy(0), 0.0);
+    }
+
+    #[test]
+    fn overhead_dominates_small_transfers() {
+        let t = TransferParams::sd855();
+        // 4 KB: bytes term ≈ 0.4 µs ≪ 80 µs map overhead
+        let small = t.time(4096);
+        assert!(small > 0.9 * t.map_overhead_s && small < 1.2 * t.map_overhead_s);
+    }
+
+    #[test]
+    fn bandwidth_dominates_large_transfers() {
+        let t = TransferParams::sd855();
+        // 44 MB ≈ 4 ms ≫ overhead
+        let big = t.time(44_000_000);
+        assert!(big > 10.0 * t.map_overhead_s);
+    }
+
+    #[test]
+    fn boundary_bytes_same_placement_is_zero() {
+        assert_eq!(boundary_bytes(1_000_000, 1.0, 1.0), 0);
+        assert_eq!(boundary_bytes(1_000_000, 0.0, 0.0), 0);
+        assert_eq!(boundary_bytes(1_000_000, 0.3, 0.3), 0);
+    }
+
+    #[test]
+    fn boundary_bytes_full_move() {
+        assert_eq!(boundary_bytes(1_000_000, 1.0, 0.0), 1_000_000);
+        assert_eq!(boundary_bytes(1_000_000, 0.0, 1.0), 1_000_000);
+    }
+
+    #[test]
+    fn boundary_bytes_partial() {
+        assert_eq!(boundary_bytes(1_000_000, 0.25, 0.75), 500_000);
+    }
+
+    #[test]
+    fn energy_scales_with_bytes() {
+        let t = TransferParams::sd855();
+        assert!(t.energy(10_000_000) > 5.0 * t.energy(1_000_000) * 0.5);
+        assert!(t.energy(2_000_000) > t.energy(1_000_000));
+    }
+}

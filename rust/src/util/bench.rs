@@ -1,0 +1,150 @@
+//! Micro bench harness (criterion is not in the offline crate set).
+//! `cargo bench` targets use `harness = false` and drive this directly:
+//! warmup, timed iterations until a wall budget, mean/std/percentiles.
+
+use std::time::{Duration, Instant};
+
+use super::stats::Summary;
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    /// Per-iteration wall time, seconds.
+    pub summary: Summary,
+}
+
+impl BenchResult {
+    pub fn mean_ms(&self) -> f64 {
+        self.summary.mean * 1e3
+    }
+    pub fn mean_us(&self) -> f64 {
+        self.summary.mean * 1e6
+    }
+}
+
+/// Bench runner with a per-case wall-clock budget.
+pub struct Bencher {
+    warmup: Duration,
+    budget: Duration,
+    min_iters: usize,
+    max_iters: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(100),
+            budget: Duration::from_secs(1),
+            min_iters: 10,
+            max_iters: 100_000,
+        }
+    }
+}
+
+impl Bencher {
+    pub fn new(warmup: Duration, budget: Duration) -> Self {
+        Bencher {
+            warmup,
+            budget,
+            ..Bencher::default()
+        }
+    }
+
+    /// Quick settings for cheap statistical smoke runs in tests.
+    pub fn fast() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(5),
+            budget: Duration::from_millis(50),
+            min_iters: 3,
+            max_iters: 10_000,
+        }
+    }
+
+    /// Time `f` repeatedly; returns per-iteration statistics.
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> BenchResult {
+        // Warmup.
+        let w0 = Instant::now();
+        while w0.elapsed() < self.warmup {
+            f();
+        }
+        // Timed.
+        let mut samples = Vec::new();
+        let b0 = Instant::now();
+        while (b0.elapsed() < self.budget || samples.len() < self.min_iters)
+            && samples.len() < self.max_iters
+        {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        BenchResult {
+            name: name.to_string(),
+            iters: samples.len(),
+            summary: Summary::of(&samples).unwrap(),
+        }
+    }
+}
+
+/// Prevent the optimizer from discarding a value (stable-rust black box).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Render a table of bench results with aligned columns.
+pub fn print_table(title: &str, results: &[BenchResult]) {
+    println!("\n== {title} ==");
+    println!(
+        "{:<44} {:>10} {:>12} {:>12} {:>12} {:>12}",
+        "case", "iters", "mean", "p50", "p99", "std"
+    );
+    for r in results {
+        println!(
+            "{:<44} {:>10} {:>12} {:>12} {:>12} {:>12}",
+            r.name,
+            r.iters,
+            fmt_time(r.summary.mean),
+            fmt_time(r.summary.p50),
+            fmt_time(r.summary.p99),
+            fmt_time(r.summary.std),
+        );
+    }
+}
+
+/// Human-readable seconds.
+pub fn fmt_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_and_reports() {
+        let b = Bencher::fast();
+        let r = b.run("noop", || {
+            black_box(1 + 1);
+        });
+        assert!(r.iters >= 3);
+        assert!(r.summary.mean >= 0.0);
+    }
+
+    #[test]
+    fn fmt_time_units() {
+        assert!(fmt_time(2.0).ends_with(" s"));
+        assert!(fmt_time(2e-3).ends_with("ms"));
+        assert!(fmt_time(2e-6).contains("µs"));
+        assert!(fmt_time(2e-9).ends_with("ns"));
+    }
+}

@@ -1,0 +1,14 @@
+//! Utility substrates built in-repo (the offline crate universe has no
+//! `rand`, `serde`, `criterion`, …): PRNG, statistics, ring buffer,
+//! thread pool, logging, and a micro bench harness.
+
+pub mod bench;
+pub mod logger;
+pub mod pool;
+pub mod prng;
+pub mod ring;
+pub mod stats;
+
+pub use prng::Prng;
+pub use ring::RingBuffer;
+pub use stats::Summary;

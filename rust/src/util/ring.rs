@@ -1,0 +1,149 @@
+//! Fixed-capacity ring buffer. Backs the profiler's residual history (the
+//! GRU input window) and the resource monitor's recent-state traces without
+//! allocating on the hot path.
+
+/// Fixed-capacity FIFO ring buffer that overwrites the oldest element once
+/// full. Iteration order is oldest → newest.
+#[derive(Debug, Clone)]
+pub struct RingBuffer<T> {
+    buf: Vec<T>,
+    cap: usize,
+    head: usize, // index of oldest element
+    len: usize,
+}
+
+impl<T: Clone> RingBuffer<T> {
+    /// Create a ring buffer holding at most `cap` elements (`cap > 0`).
+    pub fn new(cap: usize) -> Self {
+        assert!(cap > 0, "ring buffer capacity must be > 0");
+        RingBuffer {
+            buf: Vec::with_capacity(cap),
+            cap,
+            head: 0,
+            len: 0,
+        }
+    }
+
+    /// Append, overwriting the oldest element when full. Returns the evicted
+    /// element, if any.
+    pub fn push(&mut self, value: T) -> Option<T> {
+        if self.len < self.cap {
+            // Still filling: physical index == logical order.
+            let idx = (self.head + self.len) % self.cap;
+            if idx == self.buf.len() {
+                self.buf.push(value);
+            } else {
+                self.buf[idx] = value;
+            }
+            self.len += 1;
+            None
+        } else {
+            let evicted = std::mem::replace(&mut self.buf[self.head], value);
+            self.head = (self.head + 1) % self.cap;
+            Some(evicted)
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.len == self.cap
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Element `i` in logical order (0 = oldest).
+    pub fn get(&self, i: usize) -> Option<&T> {
+        if i >= self.len {
+            None
+        } else {
+            Some(&self.buf[(self.head + i) % self.cap])
+        }
+    }
+
+    /// Newest element.
+    pub fn last(&self) -> Option<&T> {
+        if self.len == 0 {
+            None
+        } else {
+            self.get(self.len - 1)
+        }
+    }
+
+    /// Iterate oldest → newest.
+    pub fn iter(&self) -> impl Iterator<Item = &T> + '_ {
+        (0..self.len).map(move |i| self.get(i).unwrap())
+    }
+
+    /// Copy out into a Vec, oldest → newest.
+    pub fn to_vec(&self) -> Vec<T> {
+        self.iter().cloned().collect()
+    }
+
+    pub fn clear(&mut self) {
+        self.buf.clear();
+        self.head = 0;
+        self.len = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fills_then_wraps() {
+        let mut r = RingBuffer::new(3);
+        assert_eq!(r.push(1), None);
+        assert_eq!(r.push(2), None);
+        assert_eq!(r.push(3), None);
+        assert!(r.is_full());
+        assert_eq!(r.push(4), Some(1));
+        assert_eq!(r.to_vec(), vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn logical_order_preserved_across_many_wraps() {
+        let mut r = RingBuffer::new(4);
+        for i in 0..100 {
+            r.push(i);
+        }
+        assert_eq!(r.to_vec(), vec![96, 97, 98, 99]);
+        assert_eq!(*r.last().unwrap(), 99);
+        assert_eq!(*r.get(0).unwrap(), 96);
+    }
+
+    #[test]
+    fn get_out_of_range_is_none() {
+        let mut r = RingBuffer::new(2);
+        r.push(1);
+        assert!(r.get(1).is_none());
+        assert_eq!(*r.get(0).unwrap(), 1);
+    }
+
+    #[test]
+    fn clear_resets() {
+        let mut r = RingBuffer::new(2);
+        r.push(1);
+        r.push(2);
+        r.push(3);
+        r.clear();
+        assert!(r.is_empty());
+        assert_eq!(r.push(9), None);
+        assert_eq!(r.to_vec(), vec![9]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_capacity_panics() {
+        let _ = RingBuffer::<u8>::new(0);
+    }
+}

@@ -1,0 +1,103 @@
+//! Request arrival processes for the serving experiments: Poisson (open
+//! loop, e.g. voice-assistant queries) and periodic (camera frames).
+
+use crate::util::Prng;
+
+/// An arrival process generating inter-arrival gaps.
+#[derive(Debug, Clone)]
+pub enum Arrival {
+    /// Poisson with mean rate `hz`.
+    Poisson { hz: f64 },
+    /// Strictly periodic at `hz` with optional jitter fraction.
+    Periodic { hz: f64, jitter: f64 },
+}
+
+impl Arrival {
+    pub fn parse(kind: &str, hz: f64) -> Option<Arrival> {
+        match kind {
+            "poisson" => Some(Arrival::Poisson { hz }),
+            "periodic" => Some(Arrival::Periodic { hz, jitter: 0.02 }),
+            _ => None,
+        }
+    }
+
+    /// Next inter-arrival gap in seconds.
+    pub fn next_gap(&self, rng: &mut Prng) -> f64 {
+        match *self {
+            Arrival::Poisson { hz } => rng.exponential(hz),
+            Arrival::Periodic { hz, jitter } => {
+                let base = 1.0 / hz;
+                base * (1.0 + jitter * (rng.f64() * 2.0 - 1.0))
+            }
+        }
+    }
+
+    /// Generate all arrival timestamps within `[0, duration_s)`.
+    pub fn timestamps(&self, duration_s: f64, rng: &mut Prng) -> Vec<f64> {
+        let mut t = 0.0;
+        let mut out = Vec::new();
+        loop {
+            t += self.next_gap(rng);
+            if t >= duration_s {
+                return out;
+            }
+            out.push(t);
+        }
+    }
+
+    pub fn rate_hz(&self) -> f64 {
+        match *self {
+            Arrival::Poisson { hz } | Arrival::Periodic { hz, .. } => hz,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_mean_rate() {
+        let a = Arrival::Poisson { hz: 20.0 };
+        let mut rng = Prng::new(1);
+        let ts = a.timestamps(100.0, &mut rng);
+        let rate = ts.len() as f64 / 100.0;
+        assert!((rate - 20.0).abs() < 1.5, "rate {rate}");
+    }
+
+    #[test]
+    fn periodic_is_regular() {
+        let a = Arrival::Periodic { hz: 30.0, jitter: 0.0 };
+        let mut rng = Prng::new(2);
+        let ts = a.timestamps(1.0, &mut rng);
+        // 1/30, 2/30, …: 29 or 30 points depending on fp accumulation
+        assert!(ts.len() == 29 || ts.len() == 30, "len {}", ts.len());
+        for w in ts.windows(2) {
+            assert!((w[1] - w[0] - 1.0 / 30.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn timestamps_sorted_and_bounded() {
+        let a = Arrival::Poisson { hz: 50.0 };
+        let mut rng = Prng::new(3);
+        let ts = a.timestamps(5.0, &mut rng);
+        for w in ts.windows(2) {
+            assert!(w[0] < w[1]);
+        }
+        assert!(ts.iter().all(|&t| t < 5.0));
+    }
+
+    #[test]
+    fn parse_kinds() {
+        assert!(matches!(
+            Arrival::parse("poisson", 5.0),
+            Some(Arrival::Poisson { .. })
+        ));
+        assert!(matches!(
+            Arrival::parse("periodic", 5.0),
+            Some(Arrival::Periodic { .. })
+        ));
+        assert!(Arrival::parse("burst", 5.0).is_none());
+    }
+}

@@ -1,0 +1,124 @@
+//! The paper's workload-condition presets (§3, Figure 2 setup):
+//!
+//! * **moderate** — CPU pinned 1.49 GHz, GPU 499 MHz, average CPU
+//!   utilization ≈ 78.8 % *measured during serving* (background ≈ 35 % +
+//!   the DL task's own share).
+//! * **high** — CPU pinned 0.88 GHz, GPU 427 MHz, average CPU utilization
+//!   ≈ 91.3 % (background ≈ 55 % with strong bursts).
+//!
+//! Background burstiness rises with the condition level — that is the
+//! dynamic CoDL's offline predictors miss and AdaOper's runtime profiler
+//! tracks (DESIGN.md §5.4).
+
+use crate::soc::device::ConditionSpec;
+
+/// Named condition preset.
+#[derive(Debug, Clone)]
+pub struct WorkloadCondition {
+    pub spec: ConditionSpec,
+}
+
+impl WorkloadCondition {
+    /// Unloaded device, governors free-running.
+    pub fn idle() -> WorkloadCondition {
+        WorkloadCondition {
+            spec: ConditionSpec {
+                name: "idle",
+                cpu_freq_hz: None,
+                gpu_freq_hz: None,
+                cpu_bg_mean: 0.05,
+                cpu_bg_sigma: 0.02,
+                cpu_burst: 0.05,
+                gpu_bg_mean: 0.03,
+                gpu_bg_sigma: 0.01,
+                gpu_burst: 0.03,
+                bw_ambient: 1.0,
+                drift_sigma: 0.03,
+            },
+        }
+    }
+
+    /// Paper's moderate condition.
+    pub fn moderate() -> WorkloadCondition {
+        WorkloadCondition {
+            spec: ConditionSpec {
+                name: "moderate",
+                cpu_freq_hz: Some(1.49e9),
+                gpu_freq_hz: Some(499e6),
+                cpu_bg_mean: 0.35,
+                cpu_bg_sigma: 0.03,
+                cpu_burst: 0.07,
+                gpu_bg_mean: 0.08,
+                gpu_bg_sigma: 0.02,
+                gpu_burst: 0.05,
+                bw_ambient: 0.92,
+                drift_sigma: 0.05,
+            },
+        }
+    }
+
+    /// Paper's high condition.
+    pub fn high() -> WorkloadCondition {
+        WorkloadCondition {
+            spec: ConditionSpec {
+                name: "high",
+                cpu_freq_hz: Some(0.88e9),
+                gpu_freq_hz: Some(427e6),
+                cpu_bg_mean: 0.55,
+                cpu_bg_sigma: 0.06,
+                cpu_burst: 0.16,
+                gpu_bg_mean: 0.12,
+                gpu_bg_sigma: 0.03,
+                gpu_burst: 0.08,
+                bw_ambient: 0.82,
+                drift_sigma: 0.10,
+            },
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<WorkloadCondition> {
+        match name {
+            "idle" => Some(WorkloadCondition::idle()),
+            "moderate" => Some(WorkloadCondition::moderate()),
+            "high" => Some(WorkloadCondition::high()),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.spec.name
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_match_paper_frequencies() {
+        let m = WorkloadCondition::moderate();
+        assert_eq!(m.spec.cpu_freq_hz, Some(1.49e9));
+        assert_eq!(m.spec.gpu_freq_hz, Some(499e6));
+        let h = WorkloadCondition::high();
+        assert_eq!(h.spec.cpu_freq_hz, Some(0.88e9));
+        assert_eq!(h.spec.gpu_freq_hz, Some(427e6));
+    }
+
+    #[test]
+    fn high_is_more_loaded_and_burstier_than_moderate() {
+        let m = WorkloadCondition::moderate().spec;
+        let h = WorkloadCondition::high().spec;
+        assert!(h.cpu_bg_mean > m.cpu_bg_mean);
+        assert!(h.cpu_burst > m.cpu_burst);
+        assert!(h.drift_sigma > m.drift_sigma);
+        assert!(h.bw_ambient < m.bw_ambient);
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        for n in ["idle", "moderate", "high"] {
+            assert_eq!(WorkloadCondition::by_name(n).unwrap().name(), n);
+        }
+        assert!(WorkloadCondition::by_name("extreme").is_none());
+    }
+}

@@ -1,0 +1,10 @@
+//! Workload modeling: the paper's device conditions ([`conditions`]),
+//! request arrival processes ([`arrival`]), and condition-switch traces for
+//! the responsiveness/adaptation experiments ([`trace`]).
+
+pub mod arrival;
+pub mod conditions;
+pub mod trace;
+
+pub use arrival::Arrival;
+pub use conditions::WorkloadCondition;

@@ -1,0 +1,116 @@
+//! Condition-switch traces: timed sequences of workload conditions used by
+//! the adaptation/responsiveness experiments (ablations A1, A3, A4).
+
+use super::conditions::WorkloadCondition;
+
+/// One phase of a trace.
+#[derive(Debug, Clone)]
+pub struct Phase {
+    pub condition: WorkloadCondition,
+    pub duration_s: f64,
+}
+
+/// A piecewise-constant condition trace.
+#[derive(Debug, Clone)]
+pub struct ConditionTrace {
+    pub phases: Vec<Phase>,
+}
+
+impl ConditionTrace {
+    pub fn new(phases: Vec<Phase>) -> Self {
+        assert!(!phases.is_empty());
+        assert!(phases.iter().all(|p| p.duration_s > 0.0));
+        ConditionTrace { phases }
+    }
+
+    /// The paper's implicit scenario: start moderate, degrade to high.
+    pub fn moderate_to_high(seg_s: f64) -> ConditionTrace {
+        ConditionTrace::new(vec![
+            Phase {
+                condition: WorkloadCondition::moderate(),
+                duration_s: seg_s,
+            },
+            Phase {
+                condition: WorkloadCondition::high(),
+                duration_s: seg_s,
+            },
+        ])
+    }
+
+    /// Stress trace: idle → moderate → high → moderate (A1/A4).
+    pub fn stairs(seg_s: f64) -> ConditionTrace {
+        ConditionTrace::new(vec![
+            Phase {
+                condition: WorkloadCondition::idle(),
+                duration_s: seg_s,
+            },
+            Phase {
+                condition: WorkloadCondition::moderate(),
+                duration_s: seg_s,
+            },
+            Phase {
+                condition: WorkloadCondition::high(),
+                duration_s: seg_s,
+            },
+            Phase {
+                condition: WorkloadCondition::moderate(),
+                duration_s: seg_s,
+            },
+        ])
+    }
+
+    pub fn total_duration_s(&self) -> f64 {
+        self.phases.iter().map(|p| p.duration_s).sum()
+    }
+
+    /// Condition active at time `t` (clamps to the last phase).
+    pub fn at(&self, t: f64) -> &WorkloadCondition {
+        let mut acc = 0.0;
+        for p in &self.phases {
+            acc += p.duration_s;
+            if t < acc {
+                return &p.condition;
+            }
+        }
+        &self.phases.last().unwrap().condition
+    }
+
+    /// Times at which the condition changes.
+    pub fn switch_times(&self) -> Vec<f64> {
+        let mut acc = 0.0;
+        let mut out = Vec::new();
+        for p in &self.phases[..self.phases.len() - 1] {
+            acc += p.duration_s;
+            out.push(acc);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn at_selects_phase() {
+        let t = ConditionTrace::stairs(10.0);
+        assert_eq!(t.at(0.0).name(), "idle");
+        assert_eq!(t.at(10.5).name(), "moderate");
+        assert_eq!(t.at(25.0).name(), "high");
+        assert_eq!(t.at(35.0).name(), "moderate");
+        assert_eq!(t.at(999.0).name(), "moderate"); // clamp
+    }
+
+    #[test]
+    fn durations_and_switches() {
+        let t = ConditionTrace::moderate_to_high(5.0);
+        assert_eq!(t.total_duration_s(), 10.0);
+        assert_eq!(t.switch_times(), vec![5.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_trace_panics() {
+        let _ = ConditionTrace::new(vec![]);
+    }
+}

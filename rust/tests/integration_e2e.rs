@@ -1,0 +1,158 @@
+//! End-to-end integration: the full three-layer stack — AOT artifacts
+//! (Pallas → JAX → HLO text) executed through the coordinator's worker
+//! threads while the simulator accounts energy/latency and the AOT GRU
+//! corrector feeds the profiler. Skips gracefully when `make artifacts`
+//! hasn't run.
+
+use std::path::PathBuf;
+
+use adaoper::config::schema::{ConditionKind, PolicyKind};
+use adaoper::coordinator::live::{ExecutorFactory, LiveSession};
+use adaoper::coordinator::{Engine, EngineConfig, StreamSpec};
+use adaoper::graph::zoo;
+use adaoper::partition::dp::DpPartitioner;
+use adaoper::partition::plan::Plan;
+use adaoper::partition::{Objective, Partitioner};
+use adaoper::profiler::calibrate::{calibrate, CalibConfig};
+use adaoper::profiler::corrector::GruCorrector;
+use adaoper::profiler::gbdt::GbdtParams;
+use adaoper::profiler::EnergyProfiler;
+use adaoper::runtime::session::{gru_infer_fn, ArtifactExecutor};
+use adaoper::soc::device::{Device, DeviceConfig};
+use adaoper::soc::Placement;
+use adaoper::workload::{Arrival, WorkloadCondition};
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.txt").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: run `make artifacts` first");
+        None
+    }
+}
+
+fn canonical_input(g: &adaoper::graph::ModelGraph) -> Vec<f32> {
+    let n = g.input_shape.elems() as usize;
+    (0..n).map(|i| ((i % 97) as f32 - 48.0) / 97.0).collect()
+}
+
+#[test]
+fn live_session_with_real_numerics_and_golden_check() {
+    let Some(dir) = artifacts_dir() else { return };
+    let g = zoo::tiny_exec();
+    let mut device = Device::new(DeviceConfig::snapdragon_855());
+    device.apply_condition(&WorkloadCondition::moderate().spec);
+    let snap = device.snapshot();
+    let plan = DpPartitioner::new(Objective::MinEdp)
+        .partition(&g, &device, &snap)
+        .unwrap();
+    let d2 = dir.clone();
+    let factory: ExecutorFactory =
+        Box::new(move || Box::new(ArtifactExecutor::new(&d2).expect("artifacts")));
+    let (report, output) =
+        LiveSession::run(&g, &plan, &mut device, factory, 4, canonical_input(&g)).unwrap();
+    assert_eq!(report.requests, 4);
+    assert!(report.throughput_hz > 0.0);
+
+    // golden values computed by JAX at export time must match
+    let golden = std::fs::read_to_string(dir.join("golden.txt")).unwrap();
+    for line in golden.lines().filter(|l| !l.starts_with('#') && !l.trim().is_empty()) {
+        let mut it = line.split_whitespace();
+        let idx: usize = it.next().unwrap().parse().unwrap();
+        let want: f32 = it.next().unwrap().parse().unwrap();
+        assert!(
+            (output[idx] - want).abs() <= 1e-4 * (1.0 + want.abs()),
+            "golden mismatch at {idx}"
+        );
+    }
+}
+
+#[test]
+fn live_session_output_independent_of_placement() {
+    // numerics must not depend on where the scheduler puts ops
+    let Some(dir) = artifacts_dir() else { return };
+    let g = zoo::tiny_exec();
+    let mut run_with = |placements: Vec<Placement>| {
+        let mut device = Device::new(DeviceConfig::snapdragon_855());
+        device.apply_condition(&WorkloadCondition::moderate().spec);
+        let plan = Plan {
+            placements,
+            predicted: Default::default(),
+            policy: "test".into(),
+        };
+        let d2 = dir.clone();
+        let factory: ExecutorFactory =
+            Box::new(move || Box::new(ArtifactExecutor::new(&d2).expect("artifacts")));
+        LiveSession::run(&g, &plan, &mut device, factory, 1, canonical_input(&g))
+            .unwrap()
+            .1
+    };
+    let gpu = run_with(vec![Placement::GPU; g.num_ops()]);
+    let alt = run_with(
+        (0..g.num_ops())
+            .map(|i| if i % 2 == 0 { Placement::CPU } else { Placement::GPU })
+            .collect(),
+    );
+    assert_eq!(gpu.len(), alt.len());
+    for (a, b) in gpu.iter().zip(&alt) {
+        assert!((a - b).abs() <= 1e-5 * (1.0 + b.abs()));
+    }
+}
+
+#[test]
+fn engine_with_gru_artifact_and_numerics_hook() {
+    // the full loop: virtual-time engine + real GRU corrector + per-op
+    // numerics hook executing the real HLO blocks for tiny-exec requests.
+    let Some(dir) = artifacts_dir() else { return };
+    let calib = CalibConfig {
+        samples: 1800,
+        seed: 23,
+        gbdt: GbdtParams {
+            trees: 50,
+            ..Default::default()
+        },
+    };
+    let offline = calibrate(&calib);
+    let d2 = dir.clone();
+    let profiler = EnergyProfiler::with_correctors(offline, || {
+        let infer = gru_infer_fn(&d2, 8).expect("gru artifact");
+        Box::new(GruCorrector::new(8, infer))
+    });
+    let mut engine = Engine::with_profiler(
+        EngineConfig {
+            policy: PolicyKind::AdaOper,
+            condition: ConditionKind::Moderate,
+            duration_s: 1.5,
+            seed: 23,
+            calib,
+            ..Default::default()
+        },
+        profiler,
+    );
+    // numerics hook: execute the matching artifact per op, carrying tensor
+    // state per request id
+    let mut exec = ArtifactExecutor::new(&dir).unwrap();
+    let g = zoo::tiny_exec();
+    let input = canonical_input(&g);
+    let mut states: std::collections::HashMap<usize, Vec<f32>> = Default::default();
+    let counter = std::rc::Rc::new(std::cell::Cell::new(0usize));
+    let c2 = counter.clone();
+    engine.set_numerics_hook(Box::new(move |req, op| {
+        use adaoper::coordinator::live::OpExecutor;
+        let state = states.entry(req.id).or_insert_with(|| input.clone());
+        *state = exec.execute("tiny-exec", &op.name, &[state.clone()])?;
+        c2.set(c2.get() + 1);
+        Ok(())
+    }));
+    let streams = vec![StreamSpec::new(
+        0,
+        zoo::tiny_exec(),
+        Arrival::Periodic { hz: 10.0, jitter: 0.0 },
+        0.5,
+    )];
+    let r = engine.run(&streams).unwrap();
+    assert!(r.requests > 5);
+    assert_eq!(counter.get(), r.requests * g.num_ops());
+    assert_eq!(engine.profiler().corrector_name(), "gru");
+}

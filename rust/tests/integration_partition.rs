@@ -1,0 +1,129 @@
+//! Integration: profiler-driven planning end to end — calibrate a real
+//! GBDT pair, plan with each policy, and check the plans behave sanely
+//! when evaluated against the ground-truth device.
+
+use adaoper::config::schema::PolicyKind;
+use adaoper::partition::baselines::by_policy;
+use adaoper::partition::plan::{evaluate, Objective};
+use adaoper::profiler::calibrate::{calibrate, CalibConfig};
+use adaoper::profiler::gbdt::GbdtParams;
+use adaoper::profiler::EnergyProfiler;
+use adaoper::graph::zoo;
+use adaoper::soc::device::{Device, DeviceConfig};
+use adaoper::soc::{Placement, Proc};
+use adaoper::workload::WorkloadCondition;
+
+fn frozen(cond: WorkloadCondition) -> Device {
+    let mut d = Device::new(DeviceConfig {
+        noise_sigma: 0.0,
+        drift_sigma: 0.0,
+        ..DeviceConfig::snapdragon_855()
+    });
+    let mut c = cond.spec;
+    c.cpu_bg_sigma = 0.0;
+    c.cpu_burst = 0.0;
+    c.gpu_bg_sigma = 0.0;
+    c.gpu_burst = 0.0;
+    c.drift_sigma = 0.0;
+    d.apply_condition(&c);
+    d
+}
+
+fn quick_profiler() -> EnergyProfiler {
+    // full default budget: the planning-regret and CPU-shedding tests are
+    // calibration-quality-sensitive at the high-condition corner
+    EnergyProfiler::offline_only(calibrate(&CalibConfig {
+        samples: 6000,
+        seed: 42,
+        gbdt: GbdtParams::default(),
+    }))
+}
+
+#[test]
+fn every_policy_produces_valid_plans_for_every_model() {
+    let prof = quick_profiler();
+    let d = frozen(WorkloadCondition::moderate());
+    let snap = d.snapshot();
+    for policy in PolicyKind::all() {
+        let p = by_policy(policy, Objective::MinEdp);
+        for name in zoo::names() {
+            let g = zoo::by_name(name).unwrap();
+            let plan = p.partition(&g, &prof, &snap).unwrap();
+            assert_eq!(plan.placements.len(), g.num_ops(), "{policy:?}/{name}");
+            assert!(
+                plan.placements.iter().all(|pl| pl.is_valid()),
+                "{policy:?}/{name}"
+            );
+            // evaluating against the device never NaNs/zeros
+            let c = evaluate(&g, &plan.placements, &d, &snap);
+            assert!(c.latency_s > 0.0 && c.latency_s.is_finite());
+            assert!(c.energy_j > 0.0 && c.energy_j.is_finite());
+        }
+    }
+}
+
+#[test]
+fn profiler_planned_dp_close_to_oracle_planned_dp() {
+    // The gap between planning with the learned profiler and planning with
+    // ground truth is the profiler's planning regret — it must be small
+    // under calibrated (frozen) conditions.
+    let prof = quick_profiler();
+    let obj = Objective::MinEdp;
+    for cond in [WorkloadCondition::moderate(), WorkloadCondition::high()] {
+        let d = frozen(cond);
+        let snap = d.snapshot();
+        let g = zoo::yolov2();
+        let dp = adaoper::partition::dp::DpPartitioner::new(obj);
+        let plan_prof = dp.solve(&g, &prof, &snap).unwrap();
+        let plan_oracle = dp.solve(&g, &d, &snap).unwrap();
+        let c_prof = evaluate(&g, &plan_prof.placements, &d, &snap);
+        let c_oracle = evaluate(&g, &plan_oracle.placements, &d, &snap);
+        let regret = obj.score(c_prof.energy_j, c_prof.latency_s)
+            / obj.score(c_oracle.energy_j, c_oracle.latency_s);
+        assert!(
+            regret < 1.15,
+            "{}: planning regret {regret:.3} (> 15%)",
+            d.condition_name()
+        );
+    }
+}
+
+#[test]
+fn adaoper_avoids_cpu_under_high_condition() {
+    // the paper's key insight, as a hard test: under the throttled/loaded
+    // high condition the energy-aware plan sheds CPU co-execution relative
+    // to moderate.
+    let prof = quick_profiler();
+    let dp = adaoper::partition::dp::DpPartitioner::new(Objective::MinEdp);
+    let g = zoo::yolov2();
+
+    let cpu_share = |cond: WorkloadCondition| {
+        let d = frozen(cond);
+        let plan = dp.solve(&g, &prof, &d.snapshot()).unwrap();
+        plan.placements
+            .iter()
+            .map(|p| p.frac_on(Proc::Cpu))
+            .sum::<f64>()
+    };
+    let moderate = cpu_share(WorkloadCondition::moderate());
+    let high = cpu_share(WorkloadCondition::high());
+    assert!(
+        high < moderate,
+        "CPU share should drop under high: moderate {moderate:.2} vs high {high:.2}"
+    );
+}
+
+#[test]
+fn codl_beats_gpu_latency_but_not_energy_moderate() {
+    // CoDL's defining behaviour in the evaluation.
+    let d = frozen(WorkloadCondition::moderate());
+    let snap = d.snapshot();
+    let g = zoo::yolov2();
+    let codl = by_policy(PolicyKind::Codl, Objective::MinEdp)
+        .partition(&g, &d, &snap)
+        .unwrap();
+    let c = evaluate(&g, &codl.placements, &d, &snap);
+    let gpu = evaluate(&g, &vec![Placement::GPU; g.num_ops()], &d, &snap);
+    assert!(c.latency_s < gpu.latency_s, "codl no faster than GPU");
+    assert!(c.energy_j > gpu.energy_j, "codl should pay energy for speed");
+}

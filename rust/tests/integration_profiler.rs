@@ -1,0 +1,164 @@
+//! Integration: the full profiler loop (calibrate → predict → observe →
+//! correct → drift-trigger) against the live simulator, including failure
+//! injection on the corrector path.
+
+use adaoper::graph::zoo;
+use adaoper::profiler::calibrate::{calibrate, CalibConfig};
+use adaoper::profiler::corrector::{EwmaCorrector, GruCorrector};
+use adaoper::profiler::monitor::ResourceMonitor;
+use adaoper::profiler::{CostModel, EnergyProfiler};
+use adaoper::profiler::gbdt::GbdtParams;
+use adaoper::soc::device::{Device, DeviceConfig, ExecCtx};
+use adaoper::soc::Placement;
+use adaoper::workload::WorkloadCondition;
+
+fn quick_calib() -> CalibConfig {
+    CalibConfig {
+        samples: 2500,
+        seed: 42,
+        gbdt: GbdtParams {
+            trees: 80,
+            ..Default::default()
+        },
+    }
+}
+
+/// Run ops through a live (bursty, drifting) device and return the mean
+/// absolute relative energy error of the given profiler.
+fn live_error(mut prof: EnergyProfiler, seed: u64) -> f64 {
+    let mut d = Device::new(DeviceConfig {
+        seed,
+        ..DeviceConfig::snapdragon_855()
+    });
+    d.apply_condition(&WorkloadCondition::high().spec);
+    let g = zoo::yolov2();
+    let mut errs = Vec::new();
+    for i in 0..400 {
+        let op = &g.ops[i % g.num_ops()];
+        let mut ctx = ExecCtx::fresh(vec![0.0; op.in_shapes.len()]);
+        ctx.new_run_cpu = false;
+        ctx.new_run_gpu = false;
+        let snap = d.snapshot();
+        let pred = prof.predict(op, Placement::GPU, &ctx, &snap);
+        let truth = d.measure(op, Placement::GPU, &ctx);
+        errs.push(((pred.energy_j - truth.energy_j) / truth.energy_j).abs());
+        prof.observe(op, Placement::GPU, &ctx, &snap, &truth);
+        d.advance(truth.latency_s, 0.0, 1.0);
+    }
+    errs.iter().sum::<f64>() / errs.len() as f64
+}
+
+#[test]
+fn runtime_correction_reduces_live_error() {
+    let offline = calibrate(&quick_calib());
+    let static_err = live_error(EnergyProfiler::offline_only(offline.clone()), 99);
+    let corrected_err = live_error(
+        EnergyProfiler::with_correctors(offline, || Box::new(EwmaCorrector::default())),
+        99,
+    );
+    assert!(
+        corrected_err < static_err,
+        "corrected {corrected_err:.4} ≥ static {static_err:.4}"
+    );
+}
+
+#[test]
+fn gru_corrector_with_failing_backend_degrades_gracefully() {
+    // failure injection: the GRU inference backend dies after 5 calls —
+    // the corrector must keep serving (stale factor) without panicking,
+    // and the profiler must remain usable.
+    let offline = calibrate(&quick_calib());
+    let mut prof = EnergyProfiler::with_correctors(offline, || {
+        let mut calls = 0;
+        Box::new(GruCorrector::new(
+            4,
+            Box::new(move |_w| {
+                calls += 1;
+                if calls > 5 {
+                    anyhow::bail!("backend gone");
+                }
+                Ok(0.1)
+            }),
+        ))
+    });
+    let err = live_error_with(&mut prof, 7);
+    assert!(err.is_finite());
+}
+
+fn live_error_with(prof: &mut EnergyProfiler, seed: u64) -> f64 {
+    let mut d = Device::new(DeviceConfig {
+        seed,
+        ..DeviceConfig::snapdragon_855()
+    });
+    d.apply_condition(&WorkloadCondition::moderate().spec);
+    let g = zoo::yolov2_tiny();
+    let mut errs = Vec::new();
+    for i in 0..120 {
+        let op = &g.ops[i % g.num_ops()];
+        let ctx = ExecCtx::fresh(vec![0.0; op.in_shapes.len()]);
+        let snap = d.snapshot();
+        let pred = prof.predict(op, Placement::GPU, &ctx, &snap);
+        let truth = d.measure(op, Placement::GPU, &ctx);
+        errs.push(((pred.energy_j - truth.energy_j) / truth.energy_j).abs());
+        prof.observe(op, Placement::GPU, &ctx, &snap, &truth);
+        d.advance(truth.latency_s, 0.0, 1.0);
+    }
+    errs.iter().sum::<f64>() / errs.len() as f64
+}
+
+#[test]
+fn monitor_flags_condition_switch_on_live_device() {
+    let mut d = Device::new(DeviceConfig::snapdragon_855());
+    d.apply_condition(&WorkloadCondition::moderate().spec);
+    let mut mon = ResourceMonitor::default();
+    for _ in 0..50 {
+        d.advance(0.05, 0.2, 0.5);
+        mon.sample(d.snapshot());
+    }
+    assert!(!mon.regime_changed());
+    d.apply_condition(&WorkloadCondition::high().spec);
+    d.advance(0.05, 0.2, 0.5);
+    mon.sample(d.snapshot());
+    assert!(mon.regime_changed(), "switch to high not detected");
+}
+
+#[test]
+fn drift_trigger_fires_on_regime_change_without_reset() {
+    // if nobody resets the corrector, a regime change must show up as
+    // drift within a handful of observations
+    let offline = calibrate(&quick_calib());
+    let mut prof =
+        EnergyProfiler::with_correctors(offline, || Box::new(EwmaCorrector::new(0.05)));
+    let g = zoo::yolov2();
+    let mut d = Device::new(DeviceConfig {
+        seed: 3,
+        ..DeviceConfig::snapdragon_855()
+    });
+    d.apply_condition(&WorkloadCondition::moderate().spec);
+    // settle
+    for i in 0..100 {
+        let op = &g.ops[i % g.num_ops()];
+        let ctx = ExecCtx::fresh(vec![0.0; op.in_shapes.len()]);
+        let snap = d.snapshot();
+        let truth = d.measure(op, Placement::GPU, &ctx);
+        prof.observe(op, Placement::GPU, &ctx, &snap, &truth);
+        d.advance(truth.latency_s, 0.0, 1.0);
+    }
+    // regime change: CPU/GPU repinned → GBDT inputs shift but the *frozen*
+    // snapshot we keep feeding makes predictions stale → drift
+    let stale_snap = d.snapshot();
+    d.apply_condition(&WorkloadCondition::high().spec);
+    let mut fired = false;
+    for i in 0..60 {
+        let op = &g.ops[i % g.num_ops()];
+        let ctx = ExecCtx::fresh(vec![0.0; op.in_shapes.len()]);
+        let truth = d.measure(op, Placement::GPU, &ctx);
+        prof.observe(op, Placement::GPU, &ctx, &stale_snap, &truth);
+        d.advance(truth.latency_s, 0.0, 1.0);
+        if prof.drifted() {
+            fired = true;
+            break;
+        }
+    }
+    assert!(fired, "drift never fired after regime change");
+}

@@ -1,0 +1,183 @@
+//! PJRT runtime integration: load the real AOT artifacts, execute them,
+//! and verify numerics against invariants of the exported model. Tests
+//! skip gracefully when `artifacts/` has not been built (`make artifacts`).
+
+use std::path::PathBuf;
+
+use adaoper::coordinator::live::OpExecutor;
+use adaoper::runtime::session::{gru_infer_fn, ArtifactExecutor};
+use adaoper::runtime::{Manifest, Runtime};
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.txt").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: run `make artifacts` first");
+        None
+    }
+}
+
+#[test]
+fn manifest_lists_all_blocks() {
+    let Some(dir) = artifacts_dir() else { return };
+    let m = Manifest::load(&dir).unwrap();
+    for op in ["conv1", "pool1", "conv2", "pool2", "conv3", "pool3", "conv4", "conv5"] {
+        assert!(m.get(&format!("tiny-exec/{op}")).is_some(), "missing {op}");
+    }
+    assert!(m.get("tiny-exec/full").is_some());
+    assert!(m.get("gru/predict").is_some());
+}
+
+#[test]
+fn full_model_executes_and_matches_block_chain() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::new(&dir).unwrap();
+    let n_in = rt.manifest.get("tiny-exec/full").unwrap().in_elems();
+
+    // deterministic pseudo-input
+    let input: Vec<f32> = (0..n_in).map(|i| ((i % 97) as f32 - 48.0) / 97.0).collect();
+
+    let full = rt.run_f32("tiny-exec/full", &input).unwrap();
+    assert!(full.iter().all(|x| x.is_finite()));
+
+    // chain the per-op artifacts: must reproduce the fused model exactly
+    let mut x = input;
+    for op in ["conv1", "pool1", "conv2", "pool2", "conv3", "pool3", "conv4", "conv5"] {
+        x = rt.run_f32(&format!("tiny-exec/{op}"), &x).unwrap();
+    }
+    assert_eq!(x.len(), full.len());
+    for (i, (a, b)) in x.iter().zip(&full).enumerate() {
+        assert!(
+            (a - b).abs() <= 1e-4 * (1.0 + b.abs()),
+            "mismatch at {i}: {a} vs {b}"
+        );
+    }
+}
+
+#[test]
+fn conv_block_output_is_sane() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::new(&dir).unwrap();
+    let e = rt.manifest.get("tiny-exec/conv1").unwrap().clone();
+    let input = vec![0.5f32; e.in_elems()];
+    let out = rt.run_f32("tiny-exec/conv1", &input).unwrap();
+    // random-weight conv of a constant field: finite, both signs present
+    assert!(out.iter().all(|x| x.is_finite()));
+    assert!(out.iter().any(|&x| x > 0.0));
+    assert!(out.iter().any(|&x| x < 0.0));
+}
+
+#[test]
+fn pool_halves_spatial_dims() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::new(&dir).unwrap();
+    let e = rt.manifest.get("tiny-exec/pool1").unwrap().clone();
+    assert_eq!(e.in_shape[2], 2 * e.out_shape[2]);
+    // max pool over a constant field is the constant
+    let input = vec![2.5f32; e.in_elems()];
+    let out = rt.run_f32("tiny-exec/pool1", &input).unwrap();
+    assert!(out.iter().all(|&x| (x - 2.5).abs() < 1e-6));
+}
+
+#[test]
+fn wrong_input_size_rejected() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::new(&dir).unwrap();
+    assert!(rt.run_f32("tiny-exec/conv1", &[1.0, 2.0]).is_err());
+    assert!(rt.run_f32("no-such-artifact", &[1.0]).is_err());
+}
+
+#[test]
+fn artifact_executor_runs_ops() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut ex = ArtifactExecutor::new(&dir).unwrap();
+    let m = Manifest::load(&dir).unwrap();
+    let e = m.get("tiny-exec/conv1").unwrap();
+    let out = ex
+        .execute("tiny-exec", "conv1", &[vec![0.1f32; e.in_elems()]])
+        .unwrap();
+    assert_eq!(out.len(), e.out_elems());
+}
+
+#[test]
+fn gru_artifact_infers() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut f = gru_infer_fn(&dir, 8).unwrap();
+    // constant positive residual window → prediction should move positive
+    let mut window = vec![0.0f32; 8 * 4];
+    for t in 0..8 {
+        window[t * 4] = 0.3; // log-residual feature
+        window[t * 4 + 1] = 0.4; // cpu util
+        window[t * 4 + 2] = 0.1; // gpu util
+        window[t * 4 + 3] = 0.45; // temp
+    }
+    let pred = f(&window).unwrap();
+    assert!(pred.is_finite());
+    assert!(pred > 0.0, "expected positive correction, got {pred}");
+    // zero-residual window → smaller-magnitude prediction
+    let zero = vec![0.0f32; 8 * 4];
+    let p0 = f(&zero).unwrap();
+    assert!(p0.abs() < pred.abs());
+    // rejects bad window sizes
+    assert!(f(&[0.0; 3]).is_err());
+}
+
+#[test]
+fn gru_corrector_with_real_artifact_tracks_bias() {
+    use adaoper::profiler::corrector::{Corrector, GruCorrector};
+    let Some(dir) = artifacts_dir() else { return };
+    let infer = gru_infer_fn(&dir, 8).unwrap();
+    let mut c = GruCorrector::new(8, infer);
+    let snap = adaoper::soc::device::Snapshot {
+        time_s: 0.0,
+        cpu_freq_hz: 1.49e9,
+        gpu_freq_hz: 499e6,
+        cpu_util: 0.4,
+        gpu_util: 0.1,
+        temp_c: 45.0,
+        bw_factor: 0.9,
+    };
+    for _ in 0..20 {
+        c.observe(0.25, &snap);
+    }
+    let f = c.factor();
+    assert!(
+        f > 1.02 && f < 1.6,
+        "correction factor {f} should move toward e^0.25 ≈ 1.28"
+    );
+}
+
+#[test]
+fn cross_language_golden_values_match() {
+    // Replays python's canonical input through the rust-loaded artifacts
+    // and compares against values computed by JAX at export time. This is
+    // the guard that caught the elided-constant corruption bug.
+    let Some(dir) = artifacts_dir() else { return };
+    let golden_path = dir.join("golden.txt");
+    if !golden_path.exists() {
+        eprintln!("skipping: golden.txt not present (older artifacts)");
+        return;
+    }
+    let mut rt = Runtime::new(&dir).unwrap();
+    let n_in = rt.manifest.get("tiny-exec/full").unwrap().in_elems();
+    let input: Vec<f32> = (0..n_in).map(|i| ((i % 97) as f32 - 48.0) / 97.0).collect();
+    let out = rt.run_f32("tiny-exec/full", &input).unwrap();
+    let text = std::fs::read_to_string(&golden_path).unwrap();
+    let mut checked = 0;
+    for line in text.lines() {
+        if line.starts_with('#') || line.trim().is_empty() {
+            continue;
+        }
+        let mut parts = line.split_whitespace();
+        let idx: usize = parts.next().unwrap().parse().unwrap();
+        let want: f32 = parts.next().unwrap().parse().unwrap();
+        let got = out[idx];
+        assert!(
+            (got - want).abs() <= 1e-4 * (1.0 + want.abs()),
+            "golden mismatch at {idx}: rust {got} vs jax {want}"
+        );
+        checked += 1;
+    }
+    assert!(checked >= 32, "golden file too small: {checked}");
+}

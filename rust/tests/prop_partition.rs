@@ -1,0 +1,194 @@
+//! Property tests for the partitioner (in-repo generators — no proptest in
+//! the offline crate set): DP optimality vs the exhaustive oracle on random
+//! chains, plan-evaluator consistency, and incremental-repair invariants.
+
+use adaoper::experiments::ablations::random_chain;
+use adaoper::graph::zoo;
+use adaoper::partition::baselines::RandomPartitioner;
+use adaoper::partition::dp::DpPartitioner;
+use adaoper::partition::exhaustive::ExhaustivePartitioner;
+use adaoper::partition::incremental::IncrementalRepartitioner;
+use adaoper::partition::plan::{evaluate, Objective, Partitioner};
+use adaoper::soc::device::{Device, DeviceConfig};
+use adaoper::soc::Placement;
+use adaoper::util::Prng;
+use adaoper::workload::WorkloadCondition;
+
+fn frozen(cond: WorkloadCondition, seed: u64) -> Device {
+    let mut d = Device::new(DeviceConfig {
+        noise_sigma: 0.0,
+        drift_sigma: 0.0,
+        seed,
+        ..DeviceConfig::snapdragon_855()
+    });
+    let mut c = cond.spec;
+    c.cpu_bg_sigma = 0.0;
+    c.cpu_burst = 0.0;
+    c.gpu_bg_sigma = 0.0;
+    c.gpu_burst = 0.0;
+    c.drift_sigma = 0.0;
+    d.apply_condition(&c);
+    d
+}
+
+/// Property: on random chains the DP matches the exhaustive optimum for
+/// every objective, under both paper conditions.
+#[test]
+fn dp_is_optimal_on_random_chains() {
+    let choices = vec![
+        Placement::CPU,
+        Placement::GPU,
+        Placement::Split { cpu_frac: 0.15 },
+    ];
+    let mut rng = Prng::new(0xFACE);
+    for trial in 0..12 {
+        let n = 4 + rng.below(5); // 4..8 ops → ≤ 3^8 combos
+        let g = random_chain(n, rng.next_u64());
+        let cond = if rng.chance(0.5) {
+            WorkloadCondition::moderate()
+        } else {
+            WorkloadCondition::high()
+        };
+        let d = frozen(cond, rng.next_u64());
+        let snap = d.snapshot();
+        for obj in [
+            Objective::MinEdp,
+            Objective::MinLatency,
+            Objective::MinEnergyUnderSlo { slo_s: 0.05 },
+        ] {
+            let dp = DpPartitioner::new(obj)
+                .with_choices(choices.clone())
+                .partition(&g, &d, &snap)
+                .unwrap();
+            let ex = ExhaustivePartitioner::new(obj, choices.clone())
+                .partition(&g, &d, &snap)
+                .unwrap();
+            let dp_c = evaluate(&g, &dp.placements, &d, &snap);
+            let ex_c = evaluate(&g, &ex.placements, &d, &snap);
+            let dp_s = obj.score(dp_c.energy_j, dp_c.latency_s);
+            let ex_s = obj.score(ex_c.energy_j, ex_c.latency_s);
+            assert!(
+                dp_s <= ex_s * 1.0001,
+                "trial {trial} n={n} {obj:?}: dp {dp_s} > exhaustive {ex_s}"
+            );
+        }
+    }
+}
+
+/// Property: the DP never scores worse than random plans (50 random plans
+/// per graph across the zoo).
+#[test]
+fn dp_beats_random_plans() {
+    let mut rng = Prng::new(7);
+    for name in zoo::names() {
+        let g = zoo::by_name(name).unwrap();
+        let d = frozen(WorkloadCondition::moderate(), 1);
+        let snap = d.snapshot();
+        let obj = Objective::MinEdp;
+        let dp = DpPartitioner::new(obj).partition(&g, &d, &snap).unwrap();
+        let dp_c = evaluate(&g, &dp.placements, &d, &snap);
+        let dp_s = obj.score(dp_c.energy_j, dp_c.latency_s);
+        for _ in 0..50 {
+            let r = RandomPartitioner::new(rng.next_u64())
+                .partition(&g, &d, &snap)
+                .unwrap();
+            let rc = evaluate(&g, &r.placements, &d, &snap);
+            let rs = obj.score(rc.energy_j, rc.latency_s);
+            assert!(
+                dp_s <= rs * 1.0001,
+                "{name}: dp {dp_s} beaten by random {rs}"
+            );
+        }
+    }
+}
+
+/// Property: DP's internal prediction always equals the shared evaluator
+/// (they must walk identical contexts) on random chains and zoo DAGs.
+#[test]
+fn dp_prediction_consistent_with_evaluator() {
+    let mut rng = Prng::new(0xBEEF);
+    let mut graphs: Vec<adaoper::graph::ModelGraph> = (0..6)
+        .map(|_| random_chain(3 + rng.below(8), rng.next_u64()))
+        .collect();
+    graphs.push(zoo::yolov2());
+    graphs.push(zoo::resnet18());
+    for g in &graphs {
+        let d = frozen(WorkloadCondition::high(), 3);
+        let snap = d.snapshot();
+        let plan = DpPartitioner::new(Objective::MinEdp)
+            .partition(g, &d, &snap)
+            .unwrap();
+        let ev = evaluate(g, &plan.placements, &d, &snap);
+        assert!(
+            (plan.predicted.energy_j / ev.energy_j - 1.0).abs() < 1e-9,
+            "{}: energy {} vs {}",
+            g.name,
+            plan.predicted.energy_j,
+            ev.energy_j
+        );
+        assert!((plan.predicted.latency_s / ev.latency_s - 1.0).abs() < 1e-9);
+    }
+}
+
+/// Property: incremental repair at any frontier never changes placements
+/// outside its window and never degrades the plan (as DP-scored).
+#[test]
+fn incremental_repair_is_local_and_monotone() {
+    let g = zoo::yolov2();
+    let d_high = frozen(WorkloadCondition::high(), 5);
+    let snap = d_high.snapshot();
+    let dp = DpPartitioner::new(Objective::MinEdp);
+    // stale plan from moderate
+    let d_mod = frozen(WorkloadCondition::moderate(), 5);
+    let stale = dp.solve(&g, &d_mod, &d_mod.snapshot()).unwrap();
+    let mut rng = Prng::new(21);
+    for _ in 0..10 {
+        let frontier = rng.below(g.num_ops());
+        let w = 1 + rng.below(12);
+        let inc = IncrementalRepartitioner::new(dp.clone(), w);
+        let before = inc
+            .remaining_cost(&g, &stale, frontier, &d_high, &snap, None)
+            .unwrap();
+        let patched = inc
+            .repartition(&g, &stale, frontier, &d_high, &snap, None)
+            .unwrap();
+        for i in 0..g.num_ops() {
+            if !(frontier..frontier + w).contains(&i) {
+                assert_eq!(
+                    patched.placements[i], stale.placements[i],
+                    "op {i} changed outside window [{frontier},{})",
+                    frontier + w
+                );
+            }
+        }
+        let after = inc
+            .remaining_cost(&g, &patched, frontier, &d_high, &snap, None)
+            .unwrap();
+        assert!(
+            after.energy_j * after.latency_s
+                <= before.energy_j * before.latency_s * 1.0001,
+            "repair degraded plan at frontier {frontier} w {w}"
+        );
+    }
+}
+
+/// Property: transfer seconds appear exactly when placement boundaries
+/// cross processors.
+#[test]
+fn transfer_costs_iff_boundaries() {
+    let g = zoo::yolov2_tiny();
+    let d = frozen(WorkloadCondition::moderate(), 9);
+    let snap = d.snapshot();
+    let gpu_cost = evaluate(&g, &vec![Placement::GPU; g.num_ops()], &d, &snap);
+    let cpu_cost = evaluate(&g, &vec![Placement::CPU; g.num_ops()], &d, &snap);
+    // all-GPU pays exactly one input upload (camera buffer is CPU-side),
+    // all-CPU pays none
+    assert!(gpu_cost.transfer_s > 0.0);
+    assert_eq!(cpu_cost.transfer_s, 0.0);
+    // alternating placements pay strictly more transfer
+    let alt: Vec<Placement> = (0..g.num_ops())
+        .map(|i| if i % 2 == 0 { Placement::CPU } else { Placement::GPU })
+        .collect();
+    let alt_cost = evaluate(&g, &alt, &d, &snap);
+    assert!(alt_cost.transfer_s > gpu_cost.transfer_s);
+}

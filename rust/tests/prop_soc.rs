@@ -1,0 +1,179 @@
+//! Property tests on the SoC simulator: cost-model invariants that must
+//! hold for any operator, placement and device state (seeded random
+//! sweeps — the simulator is the experiments' ground truth, so its
+//! monotonicities must be unconditional).
+
+use adaoper::graph::zoo;
+use adaoper::soc::device::{ConditionSpec, Device, DeviceConfig, ExecCtx};
+use adaoper::soc::{Placement, Proc};
+use adaoper::util::Prng;
+
+fn random_spec(rng: &mut Prng) -> ConditionSpec {
+    ConditionSpec {
+        name: "prop",
+        cpu_freq_hz: Some(rng.range(0.7e9, 2.4e9)),
+        gpu_freq_hz: Some(rng.range(257e6, 675e6)),
+        cpu_bg_mean: rng.range(0.0, 0.7),
+        cpu_bg_sigma: 0.0,
+        cpu_burst: 0.0,
+        gpu_bg_mean: rng.range(0.0, 0.3),
+        gpu_bg_sigma: 0.0,
+        gpu_burst: 0.0,
+        bw_ambient: rng.range(0.75, 1.0),
+        drift_sigma: 0.0,
+    }
+}
+
+fn frozen(spec: &ConditionSpec, seed: u64) -> Device {
+    let mut d = Device::new(DeviceConfig {
+        noise_sigma: 0.0,
+        drift_sigma: 0.0,
+        seed,
+        ..DeviceConfig::snapdragon_855()
+    });
+    d.apply_condition(spec);
+    d
+}
+
+fn all_ops() -> Vec<adaoper::graph::OpNode> {
+    let mut out = Vec::new();
+    for name in zoo::names() {
+        out.extend(zoo::by_name(name).unwrap().ops);
+    }
+    out
+}
+
+/// Costs are strictly positive and finite for every op × placement × state.
+#[test]
+fn costs_positive_and_finite_everywhere() {
+    let ops = all_ops();
+    let mut rng = Prng::new(1);
+    for trial in 0..30 {
+        let spec = random_spec(&mut rng);
+        let d = frozen(&spec, trial);
+        let op = &ops[rng.below(ops.len())];
+        for placement in [
+            Placement::CPU,
+            Placement::GPU,
+            Placement::Split { cpu_frac: rng.range(0.05, 0.9) },
+        ] {
+            let ctx = ExecCtx::fresh(vec![
+                placement.frac_on(Proc::Cpu);
+                op.in_shapes.len()
+            ]);
+            let c = d.expected_cost(op, placement, &ctx);
+            assert!(c.latency_s.is_finite() && c.latency_s > 0.0, "{op:?} {placement}");
+            assert!(c.energy_j.is_finite() && c.energy_j > 0.0, "{op:?} {placement}");
+            assert!(c.latency_s < 30.0, "absurd latency {}", c.latency_s);
+        }
+    }
+}
+
+/// Monotonicity: more background CPU load never makes a CPU op faster.
+#[test]
+fn cpu_load_monotone_latency() {
+    let ops = all_ops();
+    let mut rng = Prng::new(2);
+    for trial in 0..25 {
+        let mut spec = random_spec(&mut rng);
+        let op = &ops[rng.below(ops.len())];
+        let ctx = ExecCtx::fresh(vec![1.0; op.in_shapes.len()]);
+        spec.cpu_bg_mean = 0.1;
+        let lo = frozen(&spec, trial).expected_cost(op, Placement::CPU, &ctx);
+        spec.cpu_bg_mean = 0.6;
+        let hi = frozen(&spec, trial).expected_cost(op, Placement::CPU, &ctx);
+        assert!(
+            hi.latency_s >= lo.latency_s * 0.999,
+            "trial {trial}: load sped up {} ({} → {})",
+            op.name,
+            lo.latency_s,
+            hi.latency_s
+        );
+    }
+}
+
+/// Monotonicity: lower frequency never reduces compute-bound latency.
+#[test]
+fn frequency_monotone_latency() {
+    let g = zoo::yolov2();
+    let mut rng = Prng::new(3);
+    for trial in 0..25 {
+        let mut spec = random_spec(&mut rng);
+        let op = &g.ops[2]; // heavy conv (compute-bound everywhere)
+        let ctx = ExecCtx::fresh(vec![0.0; op.in_shapes.len()]);
+        spec.gpu_freq_hz = Some(675e6);
+        let fast = frozen(&spec, trial).expected_cost(op, Placement::GPU, &ctx);
+        spec.gpu_freq_hz = Some(257e6);
+        let slow = frozen(&spec, trial).expected_cost(op, Placement::GPU, &ctx);
+        assert!(slow.latency_s > fast.latency_s, "trial {trial}");
+    }
+}
+
+/// Split latency is bounded below by the slower-unit share and above by
+/// running the whole op on either unit alone (plus overheads).
+#[test]
+fn split_latency_sandwiched() {
+    let ops = all_ops();
+    let mut rng = Prng::new(4);
+    for trial in 0..25 {
+        let spec = random_spec(&mut rng);
+        let d = frozen(&spec, trial);
+        let op = &ops[rng.below(ops.len())];
+        if op.flops < 1_000_000 {
+            continue; // dispatch-dominated ops aren't informative
+        }
+        let r = rng.range(0.1, 0.5);
+        let ctx_split = ExecCtx::fresh(vec![r; op.in_shapes.len()]);
+        let split = d.expected_cost(op, Placement::Split { cpu_frac: r }, &ctx_split);
+        let ctx_cpu = ExecCtx::fresh(vec![1.0; op.in_shapes.len()]);
+        let cpu = d.expected_cost(op, Placement::CPU, &ctx_cpu);
+        // the CPU executes r of the work: the split can't be slower than
+        // CPU alone doing everything (same state, generous 1.05 slack for
+        // contention)
+        assert!(
+            split.latency_s <= cpu.latency_s * 1.05 + 1e-3,
+            "trial {trial} {}: split {} vs cpu {}",
+            op.name,
+            split.latency_s,
+            cpu.latency_s
+        );
+        // and busy times must cover the latency (minus transfer/sync)
+        assert!(split.cpu_busy_s.max(split.gpu_busy_s) <= split.latency_s + 1e-12);
+    }
+}
+
+/// Energy conservation: op energy ≥ transfer energy component, and
+/// measured noise stays within ±5σ of the expectation.
+#[test]
+fn energy_components_consistent() {
+    let ops = all_ops();
+    let mut rng = Prng::new(5);
+    for trial in 0..25 {
+        let spec = random_spec(&mut rng);
+        let mut d = frozen(&spec, trial);
+        let op = &ops[rng.below(ops.len())];
+        let ctx = ExecCtx::fresh(vec![0.0; op.in_shapes.len()]);
+        let e = d.expected_cost(op, Placement::GPU, &ctx);
+        assert!(e.energy_j >= e.transfer_j);
+        assert!(e.latency_s >= e.transfer_s);
+        let m = d.measure(op, Placement::GPU, &ctx);
+        let ratio = (m.energy_j / e.energy_j).ln().abs();
+        assert!(ratio < 5.0 * 0.04 + 0.01, "noise ratio {ratio}");
+    }
+}
+
+/// The governor + thermal loop keeps state in bounds over long traces.
+#[test]
+fn long_advance_keeps_state_bounded() {
+    let mut d = Device::new(DeviceConfig::snapdragon_855());
+    d.apply_condition(&adaoper::workload::WorkloadCondition::high().spec);
+    let mut rng = Prng::new(6);
+    for _ in 0..20_000 {
+        d.advance(0.01, rng.f64(), rng.f64());
+        let s = d.snapshot();
+        assert!((0.0..=1.0).contains(&s.cpu_util));
+        assert!((0.0..=1.0).contains(&s.gpu_util));
+        assert!(s.temp_c > 10.0 && s.temp_c < 120.0, "temp {}", s.temp_c);
+        assert!(s.cpu_freq_hz > 0.0 && s.gpu_freq_hz > 0.0);
+    }
+}
