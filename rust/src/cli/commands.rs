@@ -29,10 +29,14 @@ COMMANDS
   serve                       run the concurrent serving engine
       [--config F] [--models a,b] [--policy P] [--condition C]
       [--rate HZ] [--duration S] [--slo-ms MS] [--seed N]
+      [--plan-cache-cap N] [--plan-cache-freq-bucket-mhz MHZ]
+      [--plan-cache-util-bucket X]
   fig2 [--requests N]         reproduce the paper's Figure 2
   calibrate [--samples N]     run the offline calibration sweep and report
                               held-out accuracy
-  ablation <a1|a2|a3|a4|a5>   run one ablation experiment
+  ablation <a1|..|a5|cache>   run one ablation experiment
+                              (`cache`, alias `a6`: plan-cache hit rate on
+                              the bursty recurring-condition trace)
   help                        this text
 
 COMMON OPTIONS
@@ -169,9 +173,31 @@ fn cmd_serve(args: &Args) -> Result<()> {
     cfg.serve.duration_s = args.f64_or("duration", cfg.serve.duration_s)?;
     cfg.serve.slo_ms = args.f64_or("slo-ms", cfg.serve.slo_ms)?;
     cfg.serve.seed = args.u64_or("seed", cfg.serve.seed)?;
+    cfg.partition.plan_cache_capacity =
+        args.usize_or("plan-cache-cap", cfg.partition.plan_cache_capacity)?;
+    cfg.partition.plan_cache_freq_bucket_mhz = args.f64_or(
+        "plan-cache-freq-bucket-mhz",
+        cfg.partition.plan_cache_freq_bucket_mhz,
+    )?;
+    cfg.partition.plan_cache_util_bucket =
+        args.f64_or("plan-cache-util-bucket", cfg.partition.plan_cache_util_bucket)?;
+    anyhow::ensure!(
+        cfg.partition.plan_cache_freq_bucket_mhz > 0.0
+            && cfg.partition.plan_cache_util_bucket > 0.0,
+        "plan-cache bucket widths must be > 0"
+    );
 
+    // schema validation guarantees `min-edp` or `min-energy-slo`; the SLO
+    // objective constrains against the serving deadline
+    let objective = match cfg.partition.objective.as_str() {
+        "min-energy-slo" => Objective::MinEnergyUnderSlo {
+            slo_s: cfg.serve.slo_ms / 1e3,
+        },
+        _ => Objective::MinEdp,
+    };
     let mut engine = Engine::new(EngineConfig {
         policy: cfg.serve.policy,
+        objective,
         condition: cfg.serve.condition,
         duration_s: cfg.serve.duration_s,
         seed: cfg.serve.seed,
@@ -188,6 +214,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
             },
         },
         use_corrector: cfg.profiler.use_gru,
+        plan_cache: crate::coordinator::PlanCacheConfig {
+            capacity: cfg.partition.plan_cache_capacity,
+            freq_bucket_hz: cfg.partition.plan_cache_freq_bucket_mhz * 1e6,
+            util_bucket: cfg.partition.plan_cache_util_bucket,
+            ..Default::default()
+        },
         ..Default::default()
     });
 
@@ -324,7 +356,32 @@ fn cmd_ablation(args: &Args) -> Result<()> {
                 );
             }
         }
-        other => bail!("unknown ablation `{other}` (a1..a5)"),
+        "cache" | "a6" => {
+            use crate::experiments::cache_scenario;
+            let res = cache_scenario::run(&cache_scenario::CacheScenarioConfig {
+                seed,
+                calib,
+                ..Default::default()
+            })?;
+            let st = res.stats;
+            println!("== plan cache under the bursty recurring-condition trace ==");
+            println!(
+                "requests {}  repartitions {}  mean decision {:.1} µs",
+                res.requests,
+                res.repartitions,
+                res.mean_decision_s * 1e6
+            );
+            println!(
+                "cache: {} hits / {} misses ({:.1}% hit rate), {} evictions, {}/{} entries",
+                st.hits,
+                st.misses,
+                res.hit_rate() * 100.0,
+                st.evictions,
+                st.entries,
+                st.capacity
+            );
+        }
+        other => bail!("unknown ablation `{other}` (a1..a6|cache)"),
     }
     Ok(())
 }

@@ -167,6 +167,12 @@ pub struct PartitionConfig {
     pub latency_buckets: usize,
     /// Incremental repartition window (operators).
     pub window: usize,
+    /// Partition-plan cache capacity (plans); 0 disables the cache.
+    pub plan_cache_capacity: usize,
+    /// Plan-cache condition quantization: frequency bucket width, MHz.
+    pub plan_cache_freq_bucket_mhz: f64,
+    /// Plan-cache condition quantization: utilization bucket width.
+    pub plan_cache_util_bucket: f64,
 }
 
 impl Default for PartitionConfig {
@@ -175,6 +181,9 @@ impl Default for PartitionConfig {
             objective: "min-edp".to_string(),
             latency_buckets: 64,
             window: 8,
+            plan_cache_capacity: 32,
+            plan_cache_freq_bucket_mhz: 50.0,
+            plan_cache_util_bucket: 0.15,
         }
     }
 }
@@ -254,6 +263,28 @@ impl AppConfig {
                 as usize;
         cfg.partition.window =
             v.int_or("partition.window", cfg.partition.window as i64) as usize;
+        let cap = v.int_or(
+            "partition.plan_cache_capacity",
+            cfg.partition.plan_cache_capacity as i64,
+        );
+        if cap < 0 {
+            bail!("partition.plan_cache_capacity must be >= 0 (0 disables the cache)");
+        }
+        cfg.partition.plan_cache_capacity = cap as usize;
+        cfg.partition.plan_cache_freq_bucket_mhz = v.float_or(
+            "partition.plan_cache_freq_bucket_mhz",
+            cfg.partition.plan_cache_freq_bucket_mhz,
+        );
+        cfg.partition.plan_cache_util_bucket = v.float_or(
+            "partition.plan_cache_util_bucket",
+            cfg.partition.plan_cache_util_bucket,
+        );
+        if cfg.partition.plan_cache_freq_bucket_mhz <= 0.0 {
+            bail!("partition.plan_cache_freq_bucket_mhz must be > 0");
+        }
+        if cfg.partition.plan_cache_util_bucket <= 0.0 {
+            bail!("partition.plan_cache_util_bucket must be > 0");
+        }
 
         Ok(cfg)
     }
@@ -304,6 +335,9 @@ mod tests {
             [partition]
             objective = "min-energy-slo"
             window = 4
+            plan_cache_capacity = 8
+            plan_cache_freq_bucket_mhz = 25.0
+            plan_cache_util_bucket = 0.2
             "#,
         )
         .unwrap();
@@ -317,6 +351,29 @@ mod tests {
         assert!(!cfg.profiler.use_gru);
         assert_eq!(cfg.partition.objective, "min-energy-slo");
         assert_eq!(cfg.partition.window, 4);
+        assert_eq!(cfg.partition.plan_cache_capacity, 8);
+        assert_eq!(cfg.partition.plan_cache_freq_bucket_mhz, 25.0);
+        assert_eq!(cfg.partition.plan_cache_util_bucket, 0.2);
+    }
+
+    #[test]
+    fn plan_cache_defaults_and_validation() {
+        let cfg = AppConfig::from_value(&toml::parse("").unwrap()).unwrap();
+        assert_eq!(cfg.partition.plan_cache_capacity, 32);
+        assert_eq!(cfg.partition.plan_cache_freq_bucket_mhz, 50.0);
+        assert_eq!(cfg.partition.plan_cache_util_bucket, 0.15);
+        let bad = toml::parse("[partition]\nplan_cache_util_bucket = 0.0\n").unwrap();
+        assert!(AppConfig::from_value(&bad).is_err());
+        let bad = toml::parse("[partition]\nplan_cache_freq_bucket_mhz = -1.0\n").unwrap();
+        assert!(AppConfig::from_value(&bad).is_err());
+        let bad = toml::parse("[partition]\nplan_cache_capacity = -1\n").unwrap();
+        assert!(AppConfig::from_value(&bad).is_err());
+        // capacity 0 is a legal "disabled" setting
+        let off = toml::parse("[partition]\nplan_cache_capacity = 0\n").unwrap();
+        assert_eq!(
+            AppConfig::from_value(&off).unwrap().partition.plan_cache_capacity,
+            0
+        );
     }
 
     #[test]

@@ -18,7 +18,7 @@ use anyhow::{bail, Result};
 
 use crate::config::schema::{ConditionKind, PolicyKind};
 use crate::graph::{ModelGraph, OpNode};
-use crate::metrics::{EnergyAccount, LatencyRecorder, ServingReport};
+use crate::metrics::{EnergyAccount, LatencyRecorder, PlanCacheStats, ServingReport};
 use crate::partition::baselines::by_policy;
 use crate::partition::dp::DpPartitioner;
 use crate::partition::incremental::IncrementalRepartitioner;
@@ -32,6 +32,7 @@ use crate::soc::{Placement, Proc};
 use crate::util::Prng;
 use crate::workload::WorkloadCondition;
 
+use super::plan_cache::{PlanCache, PlanCacheConfig};
 use super::repartition::RepartitionController;
 use super::request::{Request, RequestOutcome, StreamSpec};
 
@@ -65,6 +66,8 @@ pub struct EngineConfig {
     /// Calibration sweep for the profiler (shared across runs via
     /// [`Engine::with_profiler`] to avoid refitting).
     pub calib: CalibConfig,
+    /// Partition-plan cache sizing/quantization (capacity 0 disables).
+    pub plan_cache: PlanCacheConfig,
 }
 
 impl Default for EngineConfig {
@@ -81,6 +84,7 @@ impl Default for EngineConfig {
             planner_info: PlannerInfo::Profiler,
             use_corrector: true,
             calib: CalibConfig::default(),
+            plan_cache: PlanCacheConfig::default(),
         }
     }
 }
@@ -110,6 +114,7 @@ pub struct Engine {
     policy: Box<dyn Partitioner + Send + Sync>,
     controller: RepartitionController,
     monitor: ResourceMonitor,
+    plan_cache: PlanCache,
     numerics: Option<NumericsHook>,
 }
 
@@ -142,6 +147,7 @@ impl Engine {
             ),
             cfg.cooldown_ops,
         );
+        let plan_cache = PlanCache::new(cfg.plan_cache.clone());
         Engine {
             cfg,
             device,
@@ -149,6 +155,7 @@ impl Engine {
             policy,
             controller,
             monitor: ResourceMonitor::default(),
+            plan_cache,
             numerics: None,
         }
     }
@@ -183,12 +190,27 @@ impl Engine {
         self.controller.evaluations()
     }
 
+    /// Plan-cache counters, `None` when the cache is disabled (capacity 0).
+    pub fn plan_cache_stats(&self) -> Option<PlanCacheStats> {
+        if self.plan_cache.enabled() {
+            Some(self.plan_cache.stats())
+        } else {
+            None
+        }
+    }
+
     fn plan_for(&mut self, g: &ModelGraph) -> Result<Plan> {
         let snap = self.device.snapshot();
-        match self.cfg.planner_info {
+        if let Some(plan) = self.plan_cache.lookup(&g.name, &snap, self.cfg.objective) {
+            return Ok(plan);
+        }
+        let plan = match self.cfg.planner_info {
             PlannerInfo::Profiler => self.policy.partition(g, &self.profiler, &snap),
             PlannerInfo::Oracle => self.policy.partition(g, &self.device, &snap),
-        }
+        }?;
+        self.plan_cache
+            .insert(&g.name, &snap, self.cfg.objective, plan.clone());
+        Ok(plan)
     }
 
     /// Closed-loop run: `n_requests` back-to-back inferences of one model
@@ -265,6 +287,8 @@ impl Engine {
                             self.policy.as_ref(),
                             model,
                             &snap,
+                            self.cfg.objective,
+                            Some(&mut self.plan_cache),
                         ) {
                             plan = p;
                             req_latency += dt;
@@ -316,6 +340,7 @@ impl Engine {
             avg_gpu_util: (gpu_busy_total / wall).min(1.0),
             repartitions: self.controller.repartitions(),
             partition_overhead_s: self.controller.mean_decision_s(),
+            plan_cache: self.plan_cache_stats(),
         })
     }
 
@@ -455,6 +480,8 @@ impl Engine {
                             self.policy.as_ref(),
                             model,
                             &snap,
+                            self.cfg.objective,
+                            Some(&mut self.plan_cache),
                         ) {
                             plans.insert(s.id, plan);
                             avail[Proc::Cpu.index()] += dt; // decision runs on CPU
@@ -571,6 +598,7 @@ impl Engine {
             avg_gpu_util: (gpu_busy_total / wall).min(1.0),
             repartitions: self.controller.repartitions(),
             partition_overhead_s: self.controller.mean_decision_s(),
+            plan_cache: self.plan_cache_stats(),
         };
         debug_assert_eq!(outcomes.len(), total_requests);
         Ok(report)
@@ -686,6 +714,44 @@ mod tests {
         // under the bursty high condition the drift trigger must at least
         // evaluate re-plans in 4 s (adoption is hysteresis-gated)
         assert!(e.drift_evaluations() > 0, "drift never evaluated a re-plan");
+    }
+
+    #[test]
+    fn plan_cache_cold_miss_then_warm_hit() {
+        let mut e = Engine::new(EngineConfig {
+            duration_s: 1.0,
+            policy: PolicyKind::MaceGpu,
+            calib: quick_calib(),
+            ..Default::default()
+        });
+        let spec = StreamSpec::new(0, zoo::yolov2_tiny(), Arrival::Poisson { hz: 5.0 }, 0.5);
+        // zero requests → no virtual time passes, so the second planning
+        // lookup sees the identical snapshot: guaranteed warm hit
+        let r0 = e.run_closed_loop(&spec, 0).unwrap();
+        let s0 = r0.plan_cache.unwrap();
+        assert_eq!((s0.hits, s0.misses), (0, 1), "{s0:?}");
+        let r1 = e.run_closed_loop(&spec, 0).unwrap();
+        let s1 = r1.plan_cache.unwrap();
+        assert_eq!((s1.hits, s1.misses), (1, 1), "{s1:?}");
+        assert_eq!(s1.entries, 1);
+    }
+
+    #[test]
+    fn plan_cache_capacity_zero_reports_none() {
+        use crate::coordinator::plan_cache::PlanCacheConfig;
+        let mut e = Engine::new(EngineConfig {
+            duration_s: 1.0,
+            policy: PolicyKind::MaceGpu,
+            calib: quick_calib(),
+            plan_cache: PlanCacheConfig {
+                capacity: 0,
+                ..Default::default()
+            },
+            ..Default::default()
+        });
+        let spec = StreamSpec::new(0, zoo::yolov2_tiny(), Arrival::Poisson { hz: 5.0 }, 0.5);
+        let r = e.run_closed_loop(&spec, 1).unwrap();
+        assert!(r.plan_cache.is_none());
     }
 
     #[test]

@@ -189,6 +189,7 @@ impl LiveSession {
             avg_gpu_util: (energy.gpu_busy_s() / wall.max(1e-9)).min(1.0),
             repartitions: 0,
             partition_overhead_s: 0.0,
+            plan_cache: None,
         };
         Ok((report, last_output))
     }

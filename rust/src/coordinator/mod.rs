@@ -9,14 +9,19 @@
 //! * [`repartition`] — drift/regime-triggered repartition controller
 //!   (incremental window or full re-solve), with decision-time accounting
 //!   charged to the CPU.
+//! * [`plan_cache`] — LRU partition-plan cache keyed by (model, quantized
+//!   device condition, objective) so repartition events under recurring
+//!   conditions reuse plans instead of re-running the DP.
 //! * [`live`] — the threaded serving mode: per-processor executor threads
 //!   behind channels, with an optional numerics hook that runs the real
 //!   AOT-compiled HLO blocks per operator (the e2e example wires PJRT in).
 
 pub mod engine;
 pub mod live;
+pub mod plan_cache;
 pub mod repartition;
 pub mod request;
 
 pub use engine::{Engine, EngineConfig};
+pub use plan_cache::{PlanCache, PlanCacheConfig};
 pub use request::{Request, StreamSpec};

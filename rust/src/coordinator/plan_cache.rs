@@ -1,0 +1,342 @@
+//! Partition-plan cache: memoizes full DP solves keyed by (model id,
+//! quantized device-condition bucket, objective).
+//!
+//! Per-request planning cost dominates at high request rates: every
+//! repartition trigger re-runs the DP from scratch even when the device has
+//! merely returned to a condition it has been in before (the bursty
+//! background processes of [`crate::soc::background`] revisit the same
+//! regimes constantly). Observable device state is continuous, so exact
+//! snapshots never recur — instead the snapshot is *quantized* into
+//! condition buckets (frequency / utilization / temperature / bandwidth,
+//! widths configurable via [`PlanCacheConfig`]) and plans are reused within
+//! a bucket. The DP re-planned for such a recurring bucket would see nearly
+//! identical inputs and produce a nearly identical plan; the coordinator's
+//! adoption hysteresis already tolerates far larger model error than the
+//! within-bucket variation, so serving quality is unaffected while the
+//! repartition fast path drops from a full DP solve to a hash lookup.
+//!
+//! Eviction is LRU with a fixed capacity; hit/miss/eviction counters are
+//! surfaced through [`crate::metrics::report::PlanCacheStats`] so serving
+//! reports (and the CLI) show the realized hit rate. A capacity of 0
+//! disables the cache entirely (every lookup misses without counting, so
+//! ablations can flip it off without touching call sites).
+
+use std::collections::HashMap;
+
+use crate::metrics::report::PlanCacheStats;
+use crate::partition::plan::{Objective, Plan};
+use crate::soc::device::Snapshot;
+
+/// Cache sizing and condition-quantization knobs.
+#[derive(Debug, Clone)]
+pub struct PlanCacheConfig {
+    /// Maximum number of cached plans (LRU-evicted beyond this); 0 disables.
+    pub capacity: usize,
+    /// Frequency bucket width, Hz (applied to CPU and GPU frequency).
+    pub freq_bucket_hz: f64,
+    /// Utilization bucket width (applied to CPU and GPU utilization).
+    pub util_bucket: f64,
+    /// Temperature bucket width, °C. The default is coarse enough that
+    /// temperature effectively never splits buckets (energy sensitivity to
+    /// temperature is already folded into the throttled frequencies).
+    pub temp_bucket_c: f64,
+    /// Ambient-bandwidth-factor bucket width.
+    pub bw_bucket: f64,
+}
+
+impl Default for PlanCacheConfig {
+    fn default() -> Self {
+        PlanCacheConfig {
+            capacity: 32,
+            freq_bucket_hz: 50e6,
+            util_bucket: 0.15,
+            temp_bucket_c: 100.0,
+            bw_bucket: 0.05,
+        }
+    }
+}
+
+/// Cache key: model identity × quantized condition × objective.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+struct CacheKey {
+    model: String,
+    cpu_freq: i64,
+    gpu_freq: i64,
+    cpu_util: i64,
+    gpu_util: i64,
+    temp: i64,
+    bw: i64,
+    objective: (u8, u64),
+}
+
+/// Stable key for an [`Objective`] (f64 SLOs keyed by their bit pattern).
+fn objective_key(o: Objective) -> (u8, u64) {
+    match o {
+        Objective::MinEdp => (0, 0),
+        Objective::MinLatency => (1, 0),
+        Objective::MinEnergyUnderSlo { slo_s } => (2, slo_s.to_bits()),
+    }
+}
+
+fn bucket(v: f64, width: f64) -> i64 {
+    debug_assert!(width > 0.0, "bucket width must be positive");
+    (v / width).floor() as i64
+}
+
+struct Entry {
+    plan: Plan,
+    last_used: u64,
+}
+
+/// LRU plan cache with hit/miss accounting.
+pub struct PlanCache {
+    cfg: PlanCacheConfig,
+    entries: HashMap<CacheKey, Entry>,
+    tick: u64,
+    hits: usize,
+    misses: usize,
+    evictions: usize,
+}
+
+impl PlanCache {
+    pub fn new(cfg: PlanCacheConfig) -> PlanCache {
+        PlanCache {
+            cfg,
+            entries: HashMap::new(),
+            tick: 0,
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+        }
+    }
+
+    /// True when lookups can ever hit (capacity > 0).
+    pub fn enabled(&self) -> bool {
+        self.cfg.capacity > 0
+    }
+
+    pub fn config(&self) -> &PlanCacheConfig {
+        &self.cfg
+    }
+
+    fn key(&self, model: &str, snap: &Snapshot, objective: Objective) -> CacheKey {
+        CacheKey {
+            model: model.to_string(),
+            cpu_freq: bucket(snap.cpu_freq_hz, self.cfg.freq_bucket_hz),
+            gpu_freq: bucket(snap.gpu_freq_hz, self.cfg.freq_bucket_hz),
+            cpu_util: bucket(snap.cpu_util, self.cfg.util_bucket),
+            gpu_util: bucket(snap.gpu_util, self.cfg.util_bucket),
+            temp: bucket(snap.temp_c, self.cfg.temp_bucket_c),
+            bw: bucket(snap.bw_factor, self.cfg.bw_bucket),
+            objective: objective_key(objective),
+        }
+    }
+
+    /// Look a plan up for (model, quantized condition, objective). Counts a
+    /// hit or a miss; disabled caches return `None` without counting.
+    pub fn lookup(&mut self, model: &str, snap: &Snapshot, objective: Objective) -> Option<Plan> {
+        if !self.enabled() {
+            return None;
+        }
+        let key = self.key(model, snap, objective);
+        self.tick += 1;
+        match self.entries.get_mut(&key) {
+            Some(e) => {
+                e.last_used = self.tick;
+                self.hits += 1;
+                Some(e.plan.clone())
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Insert (or refresh) the plan for (model, quantized condition,
+    /// objective), evicting the least-recently-used entry at capacity.
+    pub fn insert(&mut self, model: &str, snap: &Snapshot, objective: Objective, plan: Plan) {
+        if !self.enabled() {
+            return;
+        }
+        let key = self.key(model, snap, objective);
+        self.tick += 1;
+        if let Some(e) = self.entries.get_mut(&key) {
+            e.plan = plan;
+            e.last_used = self.tick;
+            return;
+        }
+        if self.entries.len() >= self.cfg.capacity {
+            if let Some(victim) = self
+                .entries
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| k.clone())
+            {
+                self.entries.remove(&victim);
+                self.evictions += 1;
+            }
+        }
+        self.entries.insert(
+            key,
+            Entry {
+                plan,
+                last_used: self.tick,
+            },
+        );
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Drop every cached plan (counters are preserved).
+    pub fn clear(&mut self) {
+        self.entries.clear();
+    }
+
+    /// Counter snapshot for the metrics report.
+    pub fn stats(&self) -> PlanCacheStats {
+        PlanCacheStats {
+            hits: self.hits,
+            misses: self.misses,
+            evictions: self.evictions,
+            entries: self.entries.len(),
+            capacity: self.cfg.capacity,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::soc::Placement;
+
+    fn snap(cpu_freq: f64, cpu_util: f64) -> Snapshot {
+        Snapshot {
+            time_s: 0.0,
+            cpu_freq_hz: cpu_freq,
+            gpu_freq_hz: 499e6,
+            cpu_util,
+            gpu_util: 0.08,
+            temp_c: 42.0,
+            bw_factor: 0.92,
+        }
+    }
+
+    fn plan(tag: &str) -> Plan {
+        Plan {
+            placements: vec![Placement::GPU, Placement::CPU],
+            predicted: Default::default(),
+            policy: tag.to_string(),
+        }
+    }
+
+    #[test]
+    fn cold_miss_then_warm_hit() {
+        let mut c = PlanCache::new(PlanCacheConfig::default());
+        let s = snap(1.497e9, 0.35);
+        assert!(c.lookup("yolov2", &s, Objective::MinEdp).is_none());
+        c.insert("yolov2", &s, Objective::MinEdp, plan("a"));
+        let got = c.lookup("yolov2", &s, Objective::MinEdp).unwrap();
+        assert_eq!(got.policy, "a");
+        let st = c.stats();
+        assert_eq!((st.hits, st.misses), (1, 1));
+        assert_eq!(st.entries, 1);
+    }
+
+    #[test]
+    fn nearby_snapshots_share_a_bucket_distant_ones_do_not() {
+        let mut c = PlanCache::new(PlanCacheConfig::default());
+        c.insert("m", &snap(1.497e9, 0.35), Objective::MinEdp, plan("a"));
+        // same OPP, utilization wobble inside one 0.15-wide bucket
+        assert!(c.lookup("m", &snap(1.497e9, 0.38), Objective::MinEdp).is_some());
+        // repinned frequency → different bucket
+        assert!(c.lookup("m", &snap(0.883e9, 0.35), Objective::MinEdp).is_none());
+        // utilization regime shift → different bucket
+        assert!(c.lookup("m", &snap(1.497e9, 0.65), Objective::MinEdp).is_none());
+    }
+
+    #[test]
+    fn keys_distinguish_model_and_objective() {
+        let mut c = PlanCache::new(PlanCacheConfig::default());
+        let s = snap(1.497e9, 0.35);
+        c.insert("a", &s, Objective::MinEdp, plan("a"));
+        assert!(c.lookup("b", &s, Objective::MinEdp).is_none());
+        assert!(c.lookup("a", &s, Objective::MinLatency).is_none());
+        assert!(c
+            .lookup("a", &s, Objective::MinEnergyUnderSlo { slo_s: 0.1 })
+            .is_none());
+        assert!(c.lookup("a", &s, Objective::MinEdp).is_some());
+        // distinct SLOs are distinct keys
+        c.insert("a", &s, Objective::MinEnergyUnderSlo { slo_s: 0.1 }, plan("s1"));
+        assert!(c
+            .lookup("a", &s, Objective::MinEnergyUnderSlo { slo_s: 0.2 })
+            .is_none());
+    }
+
+    #[test]
+    fn lru_eviction_at_capacity() {
+        let mut c = PlanCache::new(PlanCacheConfig {
+            capacity: 2,
+            ..Default::default()
+        });
+        let s1 = snap(0.883e9, 0.1);
+        let s2 = snap(1.497e9, 0.1);
+        let s3 = snap(2.419e9, 0.1);
+        c.insert("m", &s1, Objective::MinEdp, plan("1"));
+        c.insert("m", &s2, Objective::MinEdp, plan("2"));
+        // touch s1 so s2 becomes the LRU victim
+        assert!(c.lookup("m", &s1, Objective::MinEdp).is_some());
+        c.insert("m", &s3, Objective::MinEdp, plan("3"));
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.stats().evictions, 1);
+        assert!(c.lookup("m", &s1, Objective::MinEdp).is_some(), "LRU kept");
+        assert!(c.lookup("m", &s2, Objective::MinEdp).is_none(), "LRU evicted");
+        assert!(c.lookup("m", &s3, Objective::MinEdp).is_some());
+    }
+
+    #[test]
+    fn reinsert_refreshes_in_place() {
+        let mut c = PlanCache::new(PlanCacheConfig {
+            capacity: 2,
+            ..Default::default()
+        });
+        let s = snap(1.497e9, 0.35);
+        c.insert("m", &s, Objective::MinEdp, plan("old"));
+        c.insert("m", &s, Objective::MinEdp, plan("new"));
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.stats().evictions, 0);
+        assert_eq!(c.lookup("m", &s, Objective::MinEdp).unwrap().policy, "new");
+    }
+
+    #[test]
+    fn capacity_zero_disables() {
+        let mut c = PlanCache::new(PlanCacheConfig {
+            capacity: 0,
+            ..Default::default()
+        });
+        let s = snap(1.497e9, 0.35);
+        c.insert("m", &s, Objective::MinEdp, plan("a"));
+        assert!(c.lookup("m", &s, Objective::MinEdp).is_none());
+        let st = c.stats();
+        assert_eq!((st.hits, st.misses, st.entries), (0, 0, 0));
+        assert!(!c.enabled());
+    }
+
+    #[test]
+    fn clear_preserves_counters() {
+        let mut c = PlanCache::new(PlanCacheConfig::default());
+        let s = snap(1.497e9, 0.35);
+        c.insert("m", &s, Objective::MinEdp, plan("a"));
+        let _ = c.lookup("m", &s, Objective::MinEdp);
+        c.clear();
+        assert!(c.is_empty());
+        assert_eq!(c.stats().hits, 1);
+        assert!(c.lookup("m", &s, Objective::MinEdp).is_none());
+    }
+}

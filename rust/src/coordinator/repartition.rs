@@ -7,9 +7,11 @@ use std::time::Instant;
 
 use crate::graph::ModelGraph;
 use crate::partition::incremental::IncrementalRepartitioner;
-use crate::partition::{Plan, Partitioner};
+use crate::partition::{Objective, Plan, Partitioner};
 use crate::profiler::CostModel;
 use crate::soc::device::Snapshot;
+
+use super::plan_cache::PlanCache;
 
 /// Why a repartition happened (statistics/logging).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -90,16 +92,34 @@ impl RepartitionController {
         Some((patched, dt))
     }
 
-    /// Regime change: full re-solve of a stream's plan.
+    /// Regime change: adopt a plan for the stream's new condition. With a
+    /// [`PlanCache`] wired in, a recurring (model, condition-bucket,
+    /// objective) is served from cache — a hash lookup instead of a full DP
+    /// solve; a cold condition falls through to the full re-solve and the
+    /// result is cached for the next recurrence.
     pub fn on_regime_change(
         &mut self,
         g: &ModelGraph,
         policy: &dyn Partitioner,
         model: &dyn CostModel,
         snap: &Snapshot,
+        objective: Objective,
+        mut cache: Option<&mut PlanCache>,
     ) -> Option<(Plan, f64)> {
         let t0 = Instant::now();
+        if let Some(cache) = cache.as_deref_mut() {
+            if let Some(plan) = cache.lookup(&g.name, snap, objective) {
+                let dt = t0.elapsed().as_secs_f64();
+                self.repartitions += 1;
+                self.decision_time_s += dt;
+                self.ops_since_last = 0;
+                return Some((plan, dt));
+            }
+        }
         let plan = policy.partition(g, model, snap).ok()?;
+        if let Some(cache) = cache {
+            cache.insert(&g.name, snap, objective, plan.clone());
+        }
         let dt = t0.elapsed().as_secs_f64();
         self.full_solves += 1;
         self.repartitions += 1;
@@ -203,10 +223,36 @@ mod tests {
         let snap = d.snapshot();
         let policy = DpPartitioner::new(Objective::MinEdp);
         let mut c = controller(4, 3);
-        let (plan, dt) = c.on_regime_change(&g, &policy, &d, &snap).unwrap();
+        let (plan, dt) = c
+            .on_regime_change(&g, &policy, &d, &snap, Objective::MinEdp, None)
+            .unwrap();
         assert_eq!(plan.placements.len(), g.num_ops());
         assert!(dt >= 0.0);
         assert_eq!(c.full_solves(), 1);
         assert!(c.mean_decision_s() >= 0.0);
+    }
+
+    #[test]
+    fn regime_change_reuses_cached_plan_for_recurring_condition() {
+        use crate::coordinator::plan_cache::{PlanCache, PlanCacheConfig};
+        let g = zoo::yolov2_tiny();
+        let d = dev();
+        let snap = d.snapshot();
+        let policy = DpPartitioner::new(Objective::MinEdp);
+        let mut c = controller(4, 0);
+        let mut cache = PlanCache::new(PlanCacheConfig::default());
+        let (first, _) = c
+            .on_regime_change(&g, &policy, &d, &snap, Objective::MinEdp, Some(&mut cache))
+            .unwrap();
+        assert_eq!(c.full_solves(), 1);
+        assert_eq!(cache.stats().misses, 1);
+        // same condition again: served from cache, no second full solve
+        let (second, _) = c
+            .on_regime_change(&g, &policy, &d, &snap, Objective::MinEdp, Some(&mut cache))
+            .unwrap();
+        assert_eq!(c.full_solves(), 1, "cache hit must not re-run the DP");
+        assert_eq!(c.repartitions(), 2);
+        assert_eq!(cache.stats().hits, 1);
+        assert_eq!(first.placements, second.placements);
     }
 }

@@ -11,6 +11,8 @@
 //! | A3  | [`ablations::incremental_vs_full`]| windowed vs full re-solve        |
 //! | A4  | [`ablations::responsiveness`]   | adaptation across condition switch |
 //! | A5  | [`ablations::concurrency_scaling`]| 1–4 concurrent model streams    |
+//! | A6  | [`cache_scenario::run`]         | plan-cache hit rate, bursty trace  |
 
 pub mod ablations;
+pub mod cache_scenario;
 pub mod fig2;

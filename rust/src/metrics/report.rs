@@ -2,6 +2,37 @@
 
 use crate::util::stats::Summary;
 
+/// Counter snapshot of the coordinator's partition-plan cache
+/// ([`crate::coordinator::plan_cache`]): how often planning lookups — both
+/// the initial per-run plan construction and regime-change repartitions —
+/// were served from cache instead of re-running the DP. Lookups therefore
+/// exceed `repartitions` in the same report whenever initial planning went
+/// through the cache.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PlanCacheStats {
+    pub hits: usize,
+    pub misses: usize,
+    pub evictions: usize,
+    /// Plans currently resident.
+    pub entries: usize,
+    pub capacity: usize,
+}
+
+impl PlanCacheStats {
+    pub fn lookups(&self) -> usize {
+        self.hits + self.misses
+    }
+
+    /// Fraction of lookups served from cache (0 when no lookups happened).
+    pub fn hit_rate(&self) -> f64 {
+        if self.lookups() == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.lookups() as f64
+        }
+    }
+}
+
 /// Everything a serving run produces, ready to print or compare.
 #[derive(Debug, Clone)]
 pub struct ServingReport {
@@ -25,13 +56,15 @@ pub struct ServingReport {
     pub repartitions: usize,
     /// Mean time spent per partitioning decision.
     pub partition_overhead_s: f64,
+    /// Partition-plan cache counters (None when the cache is disabled).
+    pub plan_cache: Option<PlanCacheStats>,
 }
 
 impl ServingReport {
     /// One-line row (bench tables).
     pub fn row(&self) -> String {
         let l = self.latency.as_ref();
-        format!(
+        let mut s = format!(
             "{:<14} {:<9} {:>6} req {:>7.2} req/s  p50 {:>7.2} ms  p99 {:>7.2} ms  miss {:>5.1}%  {:>8.2} mJ/inf  {:>6.2} inf/J  cpu {:>5.1}%  repart {:>3}",
             self.policy,
             self.condition,
@@ -44,7 +77,11 @@ impl ServingReport {
             self.inferences_per_j,
             self.avg_cpu_util * 100.0,
             self.repartitions,
-        )
+        );
+        if let Some(pc) = &self.plan_cache {
+            s.push_str(&format!("  cache {}/{}", pc.hits, pc.lookups()));
+        }
+        s
     }
 
     /// Multi-line human report (CLI `serve`).
@@ -90,6 +127,17 @@ impl ServingReport {
             self.repartitions,
             self.partition_overhead_s * 1e6
         ));
+        if let Some(pc) = &self.plan_cache {
+            s.push_str(&format!(
+                "  plan cache         {} hits / {} misses ({:.1}% hit rate, {} evictions, {}/{} entries)\n",
+                pc.hits,
+                pc.misses,
+                pc.hit_rate() * 100.0,
+                pc.evictions,
+                pc.entries,
+                pc.capacity
+            ));
+        }
         s
     }
 }
@@ -116,6 +164,13 @@ mod tests {
             avg_gpu_util: 0.6,
             repartitions: 3,
             partition_overhead_s: 150e-6,
+            plan_cache: Some(PlanCacheStats {
+                hits: 8,
+                misses: 2,
+                evictions: 1,
+                entries: 2,
+                capacity: 32,
+            }),
         }
     }
 
@@ -125,6 +180,7 @@ mod tests {
         assert!(r.contains("adaoper"));
         assert!(r.contains("high"));
         assert!(r.contains("inf/J"));
+        assert!(r.contains("cache 8/10"));
     }
 
     #[test]
@@ -134,5 +190,29 @@ mod tests {
         assert!(p.contains("energy"));
         assert!(p.contains("repartitions"));
         assert!(p.contains("91.3%"));
+        assert!(p.contains("plan cache"));
+        assert!(p.contains("80.0% hit rate"));
+    }
+
+    #[test]
+    fn cache_stats_rates() {
+        let pc = PlanCacheStats {
+            hits: 3,
+            misses: 1,
+            evictions: 0,
+            entries: 4,
+            capacity: 8,
+        };
+        assert_eq!(pc.lookups(), 4);
+        assert!((pc.hit_rate() - 0.75).abs() < 1e-12);
+        assert_eq!(PlanCacheStats::default().hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn no_cache_omits_section() {
+        let mut r = report();
+        r.plan_cache = None;
+        assert!(!r.pretty().contains("plan cache"));
+        assert!(!r.row().contains("cache"));
     }
 }

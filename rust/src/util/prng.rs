@@ -216,6 +216,58 @@ mod tests {
     }
 
     #[test]
+    fn split_is_reproducible_across_identical_roots() {
+        // stream splitting must itself be deterministic: two roots with the
+        // same seed yield children with identical streams
+        let mut r1 = Prng::new(0xABCD);
+        let mut r2 = Prng::new(0xABCD);
+        let mut c1 = r1.split();
+        let mut c2 = r2.split();
+        for _ in 0..256 {
+            assert_eq!(c1.next_u64(), c2.next_u64());
+        }
+    }
+
+    #[test]
+    fn split_child_independent_of_parent_continuation() {
+        // the child stream must not collide with the parent's continuation
+        let mut parent = Prng::new(31);
+        let mut child = parent.split();
+        let overlap = (0..256)
+            .filter(|_| parent.next_u64() == child.next_u64())
+            .count();
+        assert_eq!(overlap, 0);
+    }
+
+    #[test]
+    fn derived_distributions_deterministic_per_seed() {
+        let sample = |seed: u64| -> Vec<f64> {
+            let mut rng = Prng::new(seed);
+            let mut out = Vec::new();
+            for _ in 0..50 {
+                out.push(rng.range(-2.0, 9.0));
+                out.push(rng.normal_with(3.0, 0.5));
+                out.push(rng.exponential(4.0));
+            }
+            out
+        };
+        assert_eq!(sample(77), sample(77));
+        assert_ne!(sample(77), sample(78));
+    }
+
+    #[test]
+    fn choose_covers_all_elements() {
+        let mut rng = Prng::new(37);
+        let xs = [10u32, 20, 30, 40];
+        let mut seen = [false; 4];
+        for _ in 0..500 {
+            let v = *rng.choose(&xs);
+            seen[(v / 10 - 1) as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "{seen:?}");
+    }
+
+    #[test]
     fn int_range_inclusive_bounds() {
         let mut rng = Prng::new(29);
         let (mut saw_lo, mut saw_hi) = (false, false);

@@ -211,6 +211,53 @@ mod tests {
     }
 
     #[test]
+    #[should_panic]
+    fn percentile_empty_panics() {
+        let _ = percentile_sorted(&[], 50.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn percentile_out_of_range_panics() {
+        let _ = percentile(&[1.0, 2.0], 101.0);
+    }
+
+    #[test]
+    fn percentile_duplicate_heavy_input() {
+        // 9 copies of 5.0 and one 1.0: every interior percentile between
+        // the duplicates is the duplicate value itself
+        let xs = [5.0, 5.0, 5.0, 1.0, 5.0, 5.0, 5.0, 5.0, 5.0, 5.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        for p in [20.0, 50.0, 90.0, 99.0, 100.0] {
+            assert_eq!(percentile(&xs, p), 5.0, "p={p}");
+        }
+        // all-equal input: constant at every percentile
+        let flat = [3.0; 7];
+        for p in [0.0, 37.0, 50.0, 99.9, 100.0] {
+            assert_eq!(percentile(&flat, p), 3.0, "p={p}");
+        }
+    }
+
+    #[test]
+    fn summary_single_element() {
+        let s = Summary::of(&[4.25]).unwrap();
+        assert_eq!(s.count, 1);
+        assert_eq!((s.min, s.max), (4.25, 4.25));
+        assert_eq!((s.p50, s.p90, s.p99), (4.25, 4.25, 4.25));
+        assert_eq!(s.mean, 4.25);
+        assert_eq!(s.std, 0.0);
+    }
+
+    #[test]
+    fn summary_duplicate_heavy() {
+        let s = Summary::of(&[2.0, 2.0, 2.0, 2.0, 2.0, 2.0, 2.0, 2.0]).unwrap();
+        assert_eq!(s.count, 8);
+        assert_eq!(s.mean, 2.0);
+        assert_eq!(s.std, 0.0);
+        assert_eq!((s.p50, s.p90, s.p99), (2.0, 2.0, 2.0));
+    }
+
+    #[test]
     fn mape_known_value() {
         // |10-8|/8 + |20-25|/25 = 0.25 + 0.2 → mean 0.225 → 22.5%
         let m = mape(&[10.0, 20.0], &[8.0, 25.0]);

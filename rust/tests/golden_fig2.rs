@@ -1,0 +1,152 @@
+//! Golden snapshot of the Figure-2 reproduction output
+//! (`experiments::fig2::render`) — the rendering layer behind
+//! `cargo bench --bench fig2` / `ADAOPER_BENCH_QUICK=1` and the
+//! `adaoper fig2` CLI. The snapshot pins the full report text (panel
+//! layout, headline-delta derivation, paper-reference values) against a
+//! deterministic synthetic row set, so the reproduction output cannot
+//! silently drift. An opt-in end-to-end variant re-runs the real
+//! quick-config matrix when `ADAOPER_BENCH_QUICK` is set.
+
+use adaoper::config::schema::{ConditionKind, PolicyKind};
+use adaoper::experiments::fig2::{render, run, Fig2Config, Fig2Row};
+use adaoper::metrics::ServingReport;
+use adaoper::profiler::calibrate::CalibConfig;
+use adaoper::profiler::gbdt::GbdtParams;
+use adaoper::util::stats::Summary;
+
+const GOLDEN: &str = include_str!("golden/fig2_render.txt");
+
+fn summary(v: f64) -> Option<Summary> {
+    Some(Summary {
+        count: 40,
+        mean: v,
+        std: 0.0,
+        min: v,
+        max: v,
+        p50: v,
+        p90: v,
+        p99: v,
+    })
+}
+
+fn row(
+    policy: PolicyKind,
+    condition: ConditionKind,
+    lat_mean_s: f64,
+    inf_per_j: f64,
+    cpu_util: f64,
+) -> Fig2Row {
+    Fig2Row {
+        policy,
+        condition,
+        report: ServingReport {
+            policy: policy.name().to_string(),
+            condition: condition.name().to_string(),
+            models: vec!["yolov2".to_string()],
+            duration_s: 10.0,
+            requests: 40,
+            throughput_hz: 4.0,
+            latency: summary(lat_mean_s),
+            queue: None,
+            miss_rate: 0.0,
+            total_energy_j: 10.0,
+            j_per_inference: 1.0 / inf_per_j,
+            inferences_per_j: inf_per_j,
+            avg_cpu_util: cpu_util,
+            avg_gpu_util: 0.5,
+            repartitions: 0,
+            partition_overhead_s: 0.0,
+            plan_cache: None,
+        },
+    }
+}
+
+/// Deterministic synthetic matrix: binary-exact latencies/efficiencies so
+/// every formatted number (including the derived AdaOper-vs-CoDL deltas) is
+/// reproducible bit-for-bit across platforms.
+fn synthetic_rows() -> Vec<Fig2Row> {
+    vec![
+        row(PolicyKind::MaceGpu, ConditionKind::Moderate, 0.25, 3.0, 0.5),
+        row(PolicyKind::MaceGpu, ConditionKind::High, 0.5, 1.5, 0.5),
+        row(PolicyKind::Codl, ConditionKind::Moderate, 0.125, 4.0, 0.5),
+        row(PolicyKind::Codl, ConditionKind::High, 0.25, 2.0, 0.5),
+        row(PolicyKind::AdaOper, ConditionKind::Moderate, 0.0625, 8.0, 0.75),
+        row(PolicyKind::AdaOper, ConditionKind::High, 0.125, 4.0, 0.875),
+    ]
+}
+
+#[test]
+fn render_matches_golden_snapshot() {
+    let got = render(&synthetic_rows());
+    if got != GOLDEN {
+        // line-by-line diff for an actionable failure message
+        for (i, (g, w)) in got.lines().zip(GOLDEN.lines()).enumerate() {
+            assert_eq!(g, w, "first divergence at line {}", i + 1);
+        }
+        assert_eq!(
+            got.lines().count(),
+            GOLDEN.lines().count(),
+            "line counts differ"
+        );
+        panic!("render output differs from golden only in line endings");
+    }
+}
+
+#[test]
+fn golden_snapshot_derivations_are_consistent() {
+    // the deltas in the golden file must equal what the synthetic rows
+    // imply: AdaOper halves CoDL's latency (50.00%) and doubles its
+    // efficiency (100.00%) in both conditions
+    assert!(GOLDEN.contains("adaoper             62.50       125.00"));
+    assert!(GOLDEN.contains("moderate           50.00% ( 3.94%)          100.00% ( 4.06%)"));
+    assert!(GOLDEN.contains("high               50.00% (12.97%)          100.00% (16.88%)"));
+    assert!(GOLDEN.contains("(paper-reported values in parentheses)"));
+}
+
+#[test]
+fn render_of_empty_rows_keeps_headers() {
+    let txt = render(&[]);
+    assert!(txt.contains("panel (a)"));
+    assert!(txt.contains("panel (b)"));
+    assert!(txt.contains("AdaOper vs CoDL"));
+}
+
+/// Opt-in end-to-end run of the real quick-config matrix (the
+/// `ADAOPER_BENCH_QUICK=1` path of `cargo bench --bench fig2`): structural
+/// guards on the live output. Heavy, so it only runs when the env var is
+/// set — exactly like the bench itself.
+#[test]
+fn quick_config_fig2_renders_all_sections_when_requested() {
+    if std::env::var("ADAOPER_BENCH_QUICK").is_err() {
+        eprintln!("skipping: set ADAOPER_BENCH_QUICK=1 to run the live quick-config check");
+        return;
+    }
+    let cfg = Fig2Config {
+        model: "yolov2".into(),
+        n_requests: 15,
+        seed: 7,
+        calib: CalibConfig {
+            samples: 2500,
+            seed: 42,
+            gbdt: GbdtParams {
+                trees: 80,
+                ..Default::default()
+            },
+        },
+    };
+    let rows = run(&cfg).unwrap();
+    assert_eq!(rows.len(), 6);
+    let txt = render(&rows);
+    for needle in [
+        "panel (a)",
+        "panel (b)",
+        "mace-gpu",
+        "codl",
+        "adaoper",
+        "AdaOper vs CoDL",
+        "measured average CPU utilization",
+    ] {
+        assert!(txt.contains(needle), "missing `{needle}` in:\n{txt}");
+    }
+    assert!(!txt.contains("NaN"), "live quick run produced NaN cells:\n{txt}");
+}

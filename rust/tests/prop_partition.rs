@@ -75,6 +75,59 @@ fn dp_is_optimal_on_random_chains() {
     }
 }
 
+/// Property: DP-vs-exhaustive optimality holds for *each* objective family
+/// individually — MinEdp, MinEnergyUnderSlo (a sweep of tight, achievable
+/// and slack SLOs, including infeasible ones where the scoring penalty
+/// decides), and MinLatency — with the Pareto lattice at a resolution high
+/// enough that latency-bucket thinning never discards a point, and with a
+/// denser split-choice grid than the base property uses.
+#[test]
+fn dp_matches_exhaustive_for_every_objective_and_slo() {
+    let choices = vec![
+        Placement::CPU,
+        Placement::GPU,
+        Placement::Split { cpu_frac: 0.15 },
+        Placement::Split { cpu_frac: 0.3 },
+    ];
+    let mut rng = Prng::new(0xD1CE);
+    for trial in 0..5 {
+        let n = 4 + rng.below(3); // 4..6 ops → ≤ 4^6 = 4096 combos
+        let g = random_chain(n, rng.next_u64());
+        let cond = if trial % 2 == 0 {
+            WorkloadCondition::moderate()
+        } else {
+            WorkloadCondition::high()
+        };
+        let d = frozen(cond, rng.next_u64());
+        let snap = d.snapshot();
+        let objectives = [
+            Objective::MinEdp,
+            Objective::MinLatency,
+            Objective::MinEnergyUnderSlo { slo_s: 0.005 }, // likely infeasible
+            Objective::MinEnergyUnderSlo { slo_s: 0.05 },
+            Objective::MinEnergyUnderSlo { slo_s: 0.5 },   // slack
+        ];
+        for obj in objectives {
+            let dp = DpPartitioner::new(obj)
+                .with_choices(choices.clone())
+                .with_buckets(4096) // no thinning → DP is exact on chains
+                .partition(&g, &d, &snap)
+                .unwrap();
+            let ex = ExhaustivePartitioner::new(obj, choices.clone())
+                .partition(&g, &d, &snap)
+                .unwrap();
+            let dp_c = evaluate(&g, &dp.placements, &d, &snap);
+            let ex_c = evaluate(&g, &ex.placements, &d, &snap);
+            let dp_s = obj.score(dp_c.energy_j, dp_c.latency_s);
+            let ex_s = obj.score(ex_c.energy_j, ex_c.latency_s);
+            assert!(
+                dp_s <= ex_s * 1.0001,
+                "trial {trial} n={n} {obj:?}: dp {dp_s} > exhaustive {ex_s}"
+            );
+        }
+    }
+}
+
 /// Property: the DP never scores worse than random plans (50 random plans
 /// per graph across the zoo).
 #[test]
