@@ -1,0 +1,27 @@
+//! Bench A7: scheduler overload sweep — FIFO vs EDF vs slack-reclaiming
+//! EDF on deadline-miss rate and energy as offered load ramps through
+//! saturation; the top load factor also runs drop-late admission.
+
+use adaoper::experiments::scheduler_scenario::{self, SchedulerSweepConfig};
+use adaoper::profiler::calibrate::CalibConfig;
+use adaoper::profiler::gbdt::GbdtParams;
+
+fn main() {
+    let quick = std::env::var("ADAOPER_BENCH_QUICK").is_ok();
+    let calib = CalibConfig {
+        samples: if quick { 2000 } else { 5000 },
+        seed: 7,
+        gbdt: GbdtParams {
+            trees: if quick { 60 } else { 120 },
+            ..Default::default()
+        },
+    };
+    let cfg = SchedulerSweepConfig {
+        calib,
+        duration_s: if quick { 3.0 } else { 5.0 },
+        ..Default::default()
+    };
+    println!("== A7: scheduler overload sweep (heterogeneous SLOs) ==");
+    let res = scheduler_scenario::run(&cfg).unwrap();
+    print!("{}", scheduler_scenario::render(&res));
+}

@@ -7,6 +7,7 @@ use anyhow::{anyhow, bail, Result};
 /// Parsed command line.
 #[derive(Debug, Clone, Default)]
 pub struct Args {
+    /// Positional arguments, in order.
     pub positional: Vec<String>,
     options: BTreeMap<String, String>,
     flags: Vec<String>,
@@ -41,14 +42,17 @@ impl Args {
         Ok(out)
     }
 
+    /// Raw value of `--name`, if present.
     pub fn get(&self, name: &str) -> Option<&str> {
         self.options.get(name).map(|s| s.as_str())
     }
 
+    /// String value of `--name`, or `default`.
     pub fn str_or(&self, name: &str, default: &str) -> String {
         self.get(name).unwrap_or(default).to_string()
     }
 
+    /// Float value of `--name`, or `default`; errors on a non-number.
     pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
         match self.get(name) {
             None => Ok(default),
@@ -58,6 +62,7 @@ impl Args {
         }
     }
 
+    /// Unsigned value of `--name`, or `default`; errors on a non-integer.
     pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
         match self.get(name) {
             None => Ok(default),
@@ -67,6 +72,7 @@ impl Args {
         }
     }
 
+    /// u64 value of `--name`, or `default`; errors on a non-integer.
     pub fn u64_or(&self, name: &str, default: u64) -> Result<u64> {
         match self.get(name) {
             None => Ok(default),
@@ -76,6 +82,7 @@ impl Args {
         }
     }
 
+    /// Whether the boolean flag `--name` was passed.
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }

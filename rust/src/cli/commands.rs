@@ -4,7 +4,8 @@ use std::path::Path;
 
 use anyhow::{bail, Result};
 
-use crate::config::schema::{AppConfig, ConditionKind, PolicyKind};
+use crate::config::schema::{AdmissionKind, AppConfig, ConditionKind, PolicyKind, SchedulerKind};
+use crate::coordinator::scheduler::AdmissionPolicy;
 use crate::coordinator::{Engine, EngineConfig, StreamSpec};
 use crate::experiments::{ablations, fig2};
 use crate::graph::zoo;
@@ -17,6 +18,7 @@ use crate::workload::{Arrival, WorkloadCondition};
 
 use super::args::Args;
 
+/// CLI help text (`adaoper help`).
 pub const USAGE: &str = "\
 adaoper — energy-efficient concurrent DNN inference (AdaOper, MobiSys'24)
 
@@ -29,14 +31,19 @@ COMMANDS
   serve                       run the concurrent serving engine
       [--config F] [--models a,b] [--policy P] [--condition C]
       [--rate HZ] [--duration S] [--slo-ms MS] [--seed N]
+      [--scheduler fifo|edf|slack-reclaim] (default fifo)
+      [--admission admit-all|drop-late|bounded] [--queue-limit N]
       [--plan-cache-cap N] [--plan-cache-freq-bucket-mhz MHZ]
       [--plan-cache-util-bucket X]
   fig2 [--requests N]         reproduce the paper's Figure 2
   calibrate [--samples N]     run the offline calibration sweep and report
                               held-out accuracy
-  ablation <a1|..|a5|cache>   run one ablation experiment
+  ablation <a1|..|a5|cache|scheduler>  run one ablation experiment
                               (`cache`, alias `a6`: plan-cache hit rate on
-                              the bursty recurring-condition trace)
+                              the bursty recurring-condition trace;
+                              `scheduler`, alias `a7`: overload sweep
+                              comparing fifo/edf/slack-reclaim dispatch
+                              [--duration S] [--seed N])
   help                        this text
 
 COMMON OPTIONS
@@ -169,6 +176,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if let Some(c) = args.get("condition") {
         cfg.serve.condition = ConditionKind::parse(c)?;
     }
+    if let Some(s) = args.get("scheduler") {
+        cfg.serve.scheduler = SchedulerKind::parse(s)?;
+    }
+    if let Some(a) = args.get("admission") {
+        cfg.serve.admission = AdmissionKind::parse(a)?;
+    }
+    cfg.serve.queue_limit = args.usize_or("queue-limit", cfg.serve.queue_limit)?;
+    anyhow::ensure!(cfg.serve.queue_limit >= 1, "--queue-limit must be >= 1");
     cfg.serve.rate_hz = args.f64_or("rate", cfg.serve.rate_hz)?;
     cfg.serve.duration_s = args.f64_or("duration", cfg.serve.duration_s)?;
     cfg.serve.slo_ms = args.f64_or("slo-ms", cfg.serve.slo_ms)?;
@@ -214,6 +229,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
             },
         },
         use_corrector: cfg.profiler.use_gru,
+        scheduler: cfg.serve.scheduler,
+        admission: AdmissionPolicy::from_kind(cfg.serve.admission, cfg.serve.queue_limit),
         plan_cache: crate::coordinator::PlanCacheConfig {
             capacity: cfg.partition.plan_cache_capacity,
             freq_bucket_hz: cfg.partition.plan_cache_freq_bucket_mhz * 1e6,
@@ -381,7 +398,19 @@ fn cmd_ablation(args: &Args) -> Result<()> {
                 st.capacity
             );
         }
-        other => bail!("unknown ablation `{other}` (a1..a6|cache)"),
+        "scheduler" | "a7" => {
+            use crate::experiments::scheduler_scenario;
+            let cfg = scheduler_scenario::SchedulerSweepConfig {
+                seed,
+                calib,
+                duration_s: args.f64_or("duration", 4.0)?,
+                ..Default::default()
+            };
+            println!("== scheduler overload sweep (fifo vs edf vs slack-reclaim) ==");
+            let res = scheduler_scenario::run(&cfg)?;
+            print!("{}", scheduler_scenario::render(&res));
+        }
+        other => bail!("unknown ablation `{other}` (a1..a7|cache|scheduler)"),
     }
     Ok(())
 }

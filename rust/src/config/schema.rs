@@ -11,12 +11,16 @@ use super::toml::{self, Value};
 /// Which workload condition preset to start the device in.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ConditionKind {
+    /// Nearly idle device (no foreground contention).
     Idle,
+    /// The paper's moderate background workload (~35 % ambient CPU).
     Moderate,
+    /// The paper's high background workload (bursty, ~55 % ambient CPU).
     High,
 }
 
 impl ConditionKind {
+    /// Parse a CLI/TOML spelling.
     pub fn parse(s: &str) -> Result<Self> {
         Ok(match s {
             "idle" => ConditionKind::Idle,
@@ -25,6 +29,7 @@ impl ConditionKind {
             other => bail!("unknown workload condition `{other}` (idle|moderate|high)"),
         })
     }
+    /// Canonical spelling.
     pub fn name(&self) -> &'static str {
         match self {
             ConditionKind::Idle => "idle",
@@ -50,6 +55,7 @@ pub enum PolicyKind {
 }
 
 impl PolicyKind {
+    /// Parse a CLI/TOML spelling.
     pub fn parse(s: &str) -> Result<Self> {
         Ok(match s {
             "adaoper" => PolicyKind::AdaOper,
@@ -62,6 +68,7 @@ impl PolicyKind {
             ),
         })
     }
+    /// Canonical spelling.
     pub fn name(&self) -> &'static str {
         match self {
             PolicyKind::AdaOper => "adaoper",
@@ -71,6 +78,7 @@ impl PolicyKind {
             PolicyKind::GreedyEnergy => "greedy-energy",
         }
     }
+    /// Every policy, in the order figures/tables print them.
     pub fn all() -> [PolicyKind; 5] {
         [
             PolicyKind::AdaOper,
@@ -78,6 +86,93 @@ impl PolicyKind {
             PolicyKind::MaceGpu,
             PolicyKind::AllCpu,
             PolicyKind::GreedyEnergy,
+        ]
+    }
+}
+
+/// Dispatch-order policy for the serving engine's scheduler
+/// (see [`crate::coordinator::scheduler`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedulerKind {
+    /// Arrival-order dispatch (the historical engine behavior).
+    Fifo,
+    /// Earliest-deadline-first over eligible ops.
+    Edf,
+    /// EDF ordering plus energy-biased placement when a request has
+    /// latency slack relative to its SLO.
+    SlackReclaim,
+}
+
+impl SchedulerKind {
+    /// Parse a CLI/TOML spelling.
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "fifo" => SchedulerKind::Fifo,
+            "edf" => SchedulerKind::Edf,
+            "slack-reclaim" | "slack_reclaim" | "slack" => SchedulerKind::SlackReclaim,
+            other => bail!("unknown scheduler `{other}` (fifo|edf|slack-reclaim)"),
+        })
+    }
+
+    /// Canonical spelling.
+    pub fn name(&self) -> &'static str {
+        match self {
+            SchedulerKind::Fifo => "fifo",
+            SchedulerKind::Edf => "edf",
+            SchedulerKind::SlackReclaim => "slack-reclaim",
+        }
+    }
+
+    /// Every scheduler, in the order ablation tables print them.
+    pub fn all() -> [SchedulerKind; 3] {
+        [
+            SchedulerKind::Fifo,
+            SchedulerKind::Edf,
+            SchedulerKind::SlackReclaim,
+        ]
+    }
+}
+
+/// Admission-control policy selector (see
+/// [`crate::coordinator::scheduler::AdmissionPolicy`] for semantics).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmissionKind {
+    /// Admit every generated request.
+    AdmitAll,
+    /// Shed requests whose deadline is already infeasible under the
+    /// predicted backlog.
+    DropLate,
+    /// Bound admitted-but-unfinished requests per stream
+    /// (`serve.queue_limit`).
+    Bounded,
+}
+
+impl AdmissionKind {
+    /// Parse a CLI/TOML spelling.
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "admit-all" | "admit_all" | "all" => AdmissionKind::AdmitAll,
+            "drop-late" | "drop_late" => AdmissionKind::DropLate,
+            "bounded" => AdmissionKind::Bounded,
+            other => bail!("unknown admission policy `{other}` (admit-all|drop-late|bounded)"),
+        })
+    }
+
+    /// Canonical spelling.
+    pub fn name(&self) -> &'static str {
+        match self {
+            AdmissionKind::AdmitAll => "admit-all",
+            AdmissionKind::DropLate => "drop-late",
+            AdmissionKind::Bounded => "bounded",
+        }
+    }
+
+    /// Every admission policy.
+    pub fn all() -> [AdmissionKind; 3] {
+        [
+            AdmissionKind::AdmitAll,
+            AdmissionKind::DropLate,
+            AdmissionKind::Bounded,
         ]
     }
 }
@@ -100,6 +195,12 @@ pub struct ServeConfig {
     pub policy: PolicyKind,
     /// Initial device condition.
     pub condition: ConditionKind,
+    /// Dispatch-order policy for the engine's scheduler.
+    pub scheduler: SchedulerKind,
+    /// Admission-control policy in front of the queue.
+    pub admission: AdmissionKind,
+    /// Per-stream in-flight request bound (used by `admission = "bounded"`).
+    pub queue_limit: usize,
     /// Random seed for workload + simulator noise.
     pub seed: u64,
     /// Execute real numerics through PJRT artifacts when available.
@@ -116,6 +217,9 @@ impl Default for ServeConfig {
             duration_s: 10.0,
             policy: PolicyKind::AdaOper,
             condition: ConditionKind::Moderate,
+            scheduler: SchedulerKind::Fifo,
+            admission: AdmissionKind::AdmitAll,
+            queue_limit: 32,
             seed: 1,
             execute_artifacts: false,
         }
@@ -191,8 +295,11 @@ impl Default for PartitionConfig {
 /// Top-level application configuration.
 #[derive(Debug, Clone, Default)]
 pub struct AppConfig {
+    /// Serving-engine section (`[serve]`).
     pub serve: ServeConfig,
+    /// Profiler section (`[profiler]`).
     pub profiler: ProfilerConfig,
+    /// Partitioner section (`[partition]`).
     pub partition: PartitionConfig,
     /// Directory holding `*.hlo.txt` artifacts.
     pub artifacts_dir: String,
@@ -222,6 +329,14 @@ impl AppConfig {
         cfg.serve.policy = PolicyKind::parse(&v.str_or("serve.policy", "adaoper"))?;
         cfg.serve.condition =
             ConditionKind::parse(&v.str_or("serve.condition", "moderate"))?;
+        cfg.serve.scheduler = SchedulerKind::parse(&v.str_or("serve.scheduler", "fifo"))?;
+        cfg.serve.admission =
+            AdmissionKind::parse(&v.str_or("serve.admission", "admit-all"))?;
+        let limit = v.int_or("serve.queue_limit", cfg.serve.queue_limit as i64);
+        if limit < 1 {
+            bail!("serve.queue_limit must be >= 1");
+        }
+        cfg.serve.queue_limit = limit as usize;
         cfg.serve.seed = v.int_or("serve.seed", cfg.serve.seed as i64) as u64;
         cfg.serve.execute_artifacts =
             v.bool_or("serve.execute_artifacts", cfg.serve.execute_artifacts);
@@ -311,6 +426,9 @@ mod tests {
         let cfg = AppConfig::from_value(&v).unwrap();
         assert_eq!(cfg.serve.models, vec!["yolov2".to_string()]);
         assert_eq!(cfg.serve.policy, PolicyKind::AdaOper);
+        assert_eq!(cfg.serve.scheduler, SchedulerKind::Fifo);
+        assert_eq!(cfg.serve.admission, AdmissionKind::AdmitAll);
+        assert_eq!(cfg.serve.queue_limit, 32);
         assert_eq!(cfg.profiler.gbdt_trees, 120);
     }
 
@@ -327,6 +445,9 @@ mod tests {
             duration_s = 5.0
             policy = "codl"
             condition = "high"
+            scheduler = "edf"
+            admission = "bounded"
+            queue_limit = 4
             seed = 99
             execute_artifacts = true
             [profiler]
@@ -346,6 +467,9 @@ mod tests {
         assert_eq!(cfg.serve.models.len(), 2);
         assert_eq!(cfg.serve.policy, PolicyKind::Codl);
         assert_eq!(cfg.serve.condition, ConditionKind::High);
+        assert_eq!(cfg.serve.scheduler, SchedulerKind::Edf);
+        assert_eq!(cfg.serve.admission, AdmissionKind::Bounded);
+        assert_eq!(cfg.serve.queue_limit, 4);
         assert!(cfg.serve.execute_artifacts);
         assert_eq!(cfg.profiler.gbdt_trees, 10);
         assert!(!cfg.profiler.use_gru);
@@ -399,5 +523,27 @@ mod tests {
         for p in PolicyKind::all() {
             assert_eq!(PolicyKind::parse(p.name()).unwrap(), p);
         }
+    }
+
+    #[test]
+    fn scheduler_and_admission_roundtrip_names() {
+        for s in SchedulerKind::all() {
+            assert_eq!(SchedulerKind::parse(s.name()).unwrap(), s);
+        }
+        for a in AdmissionKind::all() {
+            assert_eq!(AdmissionKind::parse(a.name()).unwrap(), a);
+        }
+        assert!(SchedulerKind::parse("lifo").is_err());
+        assert!(AdmissionKind::parse("shed-everything").is_err());
+    }
+
+    #[test]
+    fn invalid_scheduler_knobs_rejected() {
+        let v = toml::parse("[serve]\nscheduler = \"sjf\"\n").unwrap();
+        assert!(AppConfig::from_value(&v).is_err());
+        let v = toml::parse("[serve]\nadmission = \"maybe\"\n").unwrap();
+        assert!(AppConfig::from_value(&v).is_err());
+        let v = toml::parse("[serve]\nqueue_limit = 0\n").unwrap();
+        assert!(AppConfig::from_value(&v).is_err());
     }
 }

@@ -17,21 +17,29 @@ use anyhow::{anyhow, bail, Context, Result};
 /// A parsed TOML value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Value {
+    /// A quoted string.
     String(String),
+    /// An integer literal.
     Integer(i64),
+    /// A float literal.
     Float(f64),
+    /// `true` / `false`.
     Bool(bool),
+    /// An inline array `[a, b, c]`.
     Array(Vec<Value>),
+    /// A table (section or inline table).
     Table(BTreeMap<String, Value>),
 }
 
 impl Value {
+    /// The string payload, if this is a [`Value::String`].
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Value::String(s) => Some(s),
             _ => None,
         }
     }
+    /// The integer payload, if this is a [`Value::Integer`].
     pub fn as_int(&self) -> Option<i64> {
         match self {
             Value::Integer(i) => Some(*i),
@@ -46,18 +54,21 @@ impl Value {
             _ => None,
         }
     }
+    /// The boolean payload, if this is a [`Value::Bool`].
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Value::Bool(b) => Some(*b),
             _ => None,
         }
     }
+    /// The element slice, if this is a [`Value::Array`].
     pub fn as_array(&self) -> Option<&[Value]> {
         match self {
             Value::Array(a) => Some(a),
             _ => None,
         }
     }
+    /// The key/value map, if this is a [`Value::Table`].
     pub fn as_table(&self) -> Option<&BTreeMap<String, Value>> {
         match self {
             Value::Table(t) => Some(t),
@@ -78,12 +89,15 @@ impl Value {
     pub fn float_or(&self, path: &str, default: f64) -> f64 {
         self.get(path).and_then(|v| v.as_float()).unwrap_or(default)
     }
+    /// Integer at a dotted path, or `default` when absent/mistyped.
     pub fn int_or(&self, path: &str, default: i64) -> i64 {
         self.get(path).and_then(|v| v.as_int()).unwrap_or(default)
     }
+    /// Boolean at a dotted path, or `default` when absent/mistyped.
     pub fn bool_or(&self, path: &str, default: bool) -> bool {
         self.get(path).and_then(|v| v.as_bool()).unwrap_or(default)
     }
+    /// String at a dotted path, or `default` when absent/mistyped.
     pub fn str_or(&self, path: &str, default: &str) -> String {
         self.get(path)
             .and_then(|v| v.as_str())

@@ -16,9 +16,9 @@ use std::collections::HashMap;
 
 use anyhow::{bail, Result};
 
-use crate::config::schema::{ConditionKind, PolicyKind};
+use crate::config::schema::{ConditionKind, PolicyKind, SchedulerKind};
 use crate::graph::{ModelGraph, OpNode};
-use crate::metrics::{EnergyAccount, LatencyRecorder, PlanCacheStats, ServingReport};
+use crate::metrics::{EnergyAccount, LatencyRecorder, PlanCacheStats, SchedStats, ServingReport};
 use crate::partition::baselines::by_policy;
 use crate::partition::dp::DpPartitioner;
 use crate::partition::incremental::IncrementalRepartitioner;
@@ -35,6 +35,7 @@ use crate::workload::WorkloadCondition;
 use super::plan_cache::{PlanCache, PlanCacheConfig};
 use super::repartition::RepartitionController;
 use super::request::{Request, RequestOutcome, StreamSpec};
+use super::scheduler::{self, AdmissionCtrl, AdmissionPolicy, Candidate};
 
 /// How the planner sees costs.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -48,10 +49,15 @@ pub enum PlannerInfo {
 /// Engine configuration.
 #[derive(Clone)]
 pub struct EngineConfig {
+    /// Partitioning policy (AdaOper or a baseline).
     pub policy: PolicyKind,
+    /// Planning objective for the partitioner.
     pub objective: Objective,
+    /// Initial device workload condition.
     pub condition: ConditionKind,
+    /// Arrival horizon for [`Engine::run`], virtual seconds.
     pub duration_s: f64,
+    /// Seed for the workload and simulator noise.
     pub seed: u64,
     /// Incremental repartition window (ops).
     pub window: usize,
@@ -59,6 +65,7 @@ pub struct EngineConfig {
     pub cooldown_ops: usize,
     /// Monitor sampling period (virtual seconds).
     pub monitor_period_s: f64,
+    /// Whether planning sees profiler predictions or the oracle.
     pub planner_info: PlannerInfo,
     /// Use the GRU-style corrector (EWMA fallback when no artifact is
     /// wired); `false` = offline GBDT only (ablation A1).
@@ -68,6 +75,10 @@ pub struct EngineConfig {
     pub calib: CalibConfig,
     /// Partition-plan cache sizing/quantization (capacity 0 disables).
     pub plan_cache: PlanCacheConfig,
+    /// Dispatch-order policy (see [`super::scheduler`]).
+    pub scheduler: SchedulerKind,
+    /// Admission control in front of the queue.
+    pub admission: AdmissionPolicy,
 }
 
 impl Default for EngineConfig {
@@ -85,6 +96,8 @@ impl Default for EngineConfig {
             use_corrector: true,
             calib: CalibConfig::default(),
             plan_cache: PlanCacheConfig::default(),
+            scheduler: SchedulerKind::Fifo,
+            admission: AdmissionPolicy::AdmitAll,
         }
     }
 }
@@ -106,8 +119,43 @@ struct Active {
     prev_placement: Option<Placement>,
 }
 
+/// Admission decision shared by both admit sites of [`Engine::run`]:
+/// computes the controller's inputs (earliest start, predicted backlog of
+/// admitted work, the request's predicted service time, same-stream
+/// in-flight count) and returns the ready-to-queue state for an admitted
+/// request, or `None` when the request is shed.
+fn try_admit(
+    admission: &mut AdmissionCtrl,
+    req: Request,
+    streams: &[StreamSpec],
+    profiles: &HashMap<usize, Vec<f64>>,
+    active: &[Active],
+    avail: &[f64; 2],
+    now_s: f64,
+) -> Option<Active> {
+    let est_start = req.arrival_s.max(now_s).max(avail[0]).max(avail[1]);
+    let backlog: f64 = active.iter().map(|a| profiles[&a.model][a.next_op]).sum();
+    let service = profiles[&req.stream][0];
+    let in_stream = active.iter().filter(|a| a.req.stream == req.stream).count();
+    if !admission.admit(&req, est_start, backlog, service, in_stream) {
+        return None;
+    }
+    let g = &streams[req.stream].model;
+    Some(Active {
+        model: req.stream,
+        next_op: 0,
+        data_ready_s: req.arrival_s,
+        start_s: None,
+        energy_j: 0.0,
+        out_cpu: vec![INPUT_CPU_FRAC; g.num_ops()],
+        prev_placement: None,
+        req,
+    })
+}
+
 /// The serving engine.
 pub struct Engine {
+    /// The configuration the engine was built with.
     pub cfg: EngineConfig,
     device: Device,
     profiler: EnergyProfiler,
@@ -177,10 +225,12 @@ impl Engine {
         self.device.apply_condition(&cond.spec);
     }
 
+    /// The simulated device (ground truth; benches read utilization off it).
     pub fn device(&self) -> &Device {
         &self.device
     }
 
+    /// The runtime energy profiler the engine feeds with measurements.
     pub fn profiler(&self) -> &EnergyProfiler {
         &self.profiler
     }
@@ -197,6 +247,26 @@ impl Engine {
         } else {
             None
         }
+    }
+
+    /// Suffix sums of the plan's predicted per-op latencies: entry `i` is
+    /// the predicted service time from op `i` (inclusive) to completion,
+    /// entry `num_ops` is 0. The scheduler's slack estimates and the
+    /// admission controller's backlog bound both read these, so they are
+    /// recomputed whenever a stream's plan changes.
+    fn plan_profile(&self, g: &ModelGraph, plan: &Plan) -> Vec<f64> {
+        let snap = self.device.snapshot();
+        let model: &dyn CostModel = match self.cfg.planner_info {
+            PlannerInfo::Profiler => &self.profiler as &dyn CostModel,
+            PlannerInfo::Oracle => &self.device as &dyn CostModel,
+        };
+        let lat =
+            crate::partition::plan::per_op_latencies(g, &plan.placements, model, &snap);
+        let mut suffix = vec![0.0; lat.len() + 1];
+        for i in (0..lat.len()).rev() {
+            suffix[i] = suffix[i + 1] + lat[i];
+        }
+        suffix
     }
 
     fn plan_for(&mut self, g: &ModelGraph) -> Result<Plan> {
@@ -341,6 +411,7 @@ impl Engine {
             repartitions: self.controller.repartitions(),
             partition_overhead_s: self.controller.mean_decision_s(),
             plan_cache: self.plan_cache_stats(),
+            sched: None,
         })
     }
 
@@ -366,20 +437,26 @@ impl Engine {
                 });
             }
         }
-        requests.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
+        // total_cmp: a NaN arrival must not panic the engine mid-run (it
+        // sorts last instead and fails the deadline like any late request)
+        requests.sort_by(|a, b| a.arrival_s.total_cmp(&b.arrival_s));
         let total_requests = requests.len();
         if total_requests == 0 {
             bail!("duration too short: no requests generated");
         }
 
-        // --- initial plans per stream
+        // --- initial plans (and their latency profiles) per stream
         let mut plans: HashMap<usize, Plan> = HashMap::new();
+        let mut profiles: HashMap<usize, Vec<f64>> = HashMap::new();
         for s in streams {
             let plan = self.plan_for(&s.model)?;
+            profiles.insert(s.id, self.plan_profile(&s.model, &plan));
             plans.insert(s.id, plan);
         }
 
         // --- scheduling state
+        let scheduler = scheduler::by_kind(self.cfg.scheduler);
+        let mut admission = AdmissionCtrl::new(self.cfg.admission);
         let mut avail = [0.0f64; 2]; // per-proc availability time
         let mut busy_acc = [0.0f64; 2]; // busy seconds since last advance
         let mut latencies = LatencyRecorder::new();
@@ -396,59 +473,52 @@ impl Engine {
             while next_arrival < requests.len() && active.is_empty() {
                 let req = requests[next_arrival].clone();
                 next_arrival += 1;
-                let g = &streams[req.stream].model;
-                active.push(Active {
-                    model: req.stream,
-                    next_op: 0,
-                    data_ready_s: req.arrival_s,
-                    start_s: None,
-                    energy_j: 0.0,
-                    out_cpu: vec![INPUT_CPU_FRAC; g.num_ops()],
-                    prev_placement: None,
-                    req,
-                });
+                let now = self.device.time_s();
+                if let Some(a) =
+                    try_admit(&mut admission, req, streams, &profiles, &active, &avail, now)
+                {
+                    active.push(a);
+                } // else: shed; try the next queued arrival
             }
             if active.is_empty() {
                 break; // all done
             }
 
-            // pick the request whose next op can start earliest
-            let mut best: Option<(usize, f64)> = None; // (active idx, start)
-            for (ai, a) in active.iter().enumerate() {
-                let g = &streams[a.model].model;
-                let placement = plans[&a.model].placements[a.next_op];
-                let mut start = a.data_ready_s;
-                for p in Proc::ALL {
-                    if placement.uses(p) {
-                        start = start.max(avail[p.index()]);
+            // the dispatch policy picks which request runs its next op
+            let candidates: Vec<Candidate> = active
+                .iter()
+                .enumerate()
+                .map(|(ai, a)| {
+                    let placement = plans[&a.model].placements[a.next_op];
+                    let mut start = a.data_ready_s;
+                    for p in Proc::ALL {
+                        if placement.uses(p) {
+                            start = start.max(avail[p.index()]);
+                        }
                     }
-                }
-                let _ = g;
-                if best.map_or(true, |(_, s)| {
-                    start < s
-                        || (start == s && a.req.arrival_s < active[best.unwrap().0].req.arrival_s)
-                }) {
-                    best = Some((ai, start));
-                }
-            }
-            let (ai, mut start) = best.unwrap();
+                    Candidate {
+                        active_idx: ai,
+                        start_s: start,
+                        arrival_s: a.req.arrival_s,
+                        deadline_s: a.req.deadline_s,
+                        remaining_s: profiles[&a.model][a.next_op],
+                    }
+                })
+                .collect();
+            let chosen = candidates[scheduler.pick(&candidates)];
+            let (ai, mut start) = (chosen.active_idx, chosen.start_s);
 
             // if a queued arrival could begin before `start`, admit it
             if next_arrival < requests.len() && requests[next_arrival].arrival_s < start {
                 let req = requests[next_arrival].clone();
                 next_arrival += 1;
-                let g = &streams[req.stream].model;
-                active.push(Active {
-                    model: req.stream,
-                    next_op: 0,
-                    data_ready_s: req.arrival_s,
-                    start_s: None,
-                    energy_j: 0.0,
-                    out_cpu: vec![INPUT_CPU_FRAC; g.num_ops()],
-                    prev_placement: None,
-                    req,
-                });
-                continue; // re-evaluate with the newcomer
+                let now = self.device.time_s();
+                if let Some(a) =
+                    try_admit(&mut admission, req, streams, &profiles, &active, &avail, now)
+                {
+                    active.push(a);
+                }
+                continue; // re-evaluate (with the newcomer, or the next arrival)
             }
 
             // --- advance virtual time to `start`
@@ -463,7 +533,10 @@ impl Engine {
                 start = now;
             }
 
-            // periodic monitor sampling + regime detection
+            // periodic monitor sampling + regime detection; latency
+            // profiles refresh against the live snapshot every sample so
+            // the scheduler's slack and the admission controller's backlog
+            // estimates track device dynamics (drift, background load)
             if self.device.time_s() - last_monitor_s >= self.cfg.monitor_period_s {
                 last_monitor_s = self.device.time_s();
                 self.monitor.sample(self.device.snapshot());
@@ -488,13 +561,18 @@ impl Engine {
                         }
                     }
                 }
+                // refresh after any regime re-plan so profiles match the
+                // adopted plans and the live snapshot (drift, background)
+                for s in streams {
+                    profiles.insert(s.id, self.plan_profile(&s.model, &plans[&s.id]));
+                }
             }
 
             // --- execute the chosen op
             let a = &mut active[ai];
             let g = streams[a.model].model.clone();
             let op = &g.ops[a.next_op];
-            let placement = plans[&a.model].placements[a.next_op];
+            let planned = plans[&a.model].placements[a.next_op];
             let input_cpu_fracs: Vec<f64> = if op.inputs.is_empty() {
                 vec![INPUT_CPU_FRAC; op.in_shapes.len()]
             } else {
@@ -504,6 +582,9 @@ impl Engine {
                 None => (true, true),
                 Some(p) => (!p.uses(Proc::Cpu), !p.uses(Proc::Gpu)),
             };
+            // slack if the op starts now: time to spare before the deadline
+            // after the predicted remaining work (this op inclusive)
+            let slack_s = a.req.deadline_s - (start + profiles[&a.model][a.next_op]);
             let others_running = active.len() > 1;
             let ctx = ExecCtx {
                 input_cpu_fracs,
@@ -512,6 +593,25 @@ impl Engine {
                 concurrent: others_running,
             };
             let snap = self.device.snapshot();
+            let placement = {
+                let model: &dyn CostModel = match self.cfg.planner_info {
+                    PlannerInfo::Profiler => &self.profiler as &dyn CostModel,
+                    PlannerInfo::Oracle => &self.device as &dyn CostModel,
+                };
+                let wanted = scheduler.place(planned, op, &ctx, &snap, model, slack_s);
+                // `start` was clamped against the *planned* placement's
+                // processors only; an override may not claim a processor
+                // that is still busy at `start` (it would double-book and
+                // rewind `avail`) — fall back to the plan in that case
+                let feasible = Proc::ALL
+                    .iter()
+                    .all(|&p| !wanted.uses(p) || avail[p.index()] <= start);
+                if feasible {
+                    wanted
+                } else {
+                    planned
+                }
+            };
             let measured = self.device.measure(op, placement, &ctx);
             self.profiler.observe(op, placement, &ctx, &snap, &measured);
             energy.add_op(&measured);
@@ -555,6 +655,7 @@ impl Engine {
                     &snap,
                     Some(&out_cpu),
                 ) {
+                    profiles.insert(stream_id, self.plan_profile(&g, &plan));
                     plans.insert(stream_id, plan);
                     avail[Proc::Cpu.index()] += dt;
                 }
@@ -581,6 +682,16 @@ impl Engine {
 
         // --- report
         let wall = self.device.time_s().max(self.cfg.duration_s);
+        let counters = admission.counters();
+        let sched = SchedStats {
+            scheduler: scheduler.name().to_string(),
+            admission: admission.policy().name().to_string(),
+            offered: counters.offered,
+            admitted: counters.admitted,
+            shed_late: counters.shed_late,
+            dropped_capacity: counters.dropped_capacity,
+            deadline_misses: latencies.misses(),
+        };
         let report = ServingReport {
             policy: self.policy.name().to_string(),
             condition: self.device.condition_name().to_string(),
@@ -599,8 +710,13 @@ impl Engine {
             repartitions: self.controller.repartitions(),
             partition_overhead_s: self.controller.mean_decision_s(),
             plan_cache: self.plan_cache_stats(),
+            sched: Some(sched),
         };
-        debug_assert_eq!(outcomes.len(), total_requests);
+        debug_assert_eq!(counters.offered, total_requests);
+        debug_assert_eq!(
+            outcomes.len() + counters.shed_late + counters.dropped_capacity,
+            total_requests
+        );
         Ok(report)
     }
 }
@@ -752,6 +868,61 @@ mod tests {
         let spec = StreamSpec::new(0, zoo::yolov2_tiny(), Arrival::Poisson { hz: 5.0 }, 0.5);
         let r = e.run_closed_loop(&spec, 1).unwrap();
         assert!(r.plan_cache.is_none());
+    }
+
+    #[test]
+    fn default_config_reports_fifo_admit_all() {
+        let mut e = Engine::new(EngineConfig {
+            duration_s: 1.5,
+            policy: PolicyKind::MaceGpu,
+            calib: quick_calib(),
+            ..Default::default()
+        });
+        let r = e.run(&stream(6.0, 0.5)).unwrap();
+        let sc = r.sched.unwrap();
+        assert_eq!(sc.scheduler, "fifo");
+        assert_eq!(sc.admission, "admit-all");
+        assert_eq!(sc.offered, sc.admitted);
+        assert_eq!(sc.shed(), 0);
+        assert_eq!(r.requests, sc.admitted);
+    }
+
+    #[test]
+    fn drop_late_sheds_at_overload_and_accounts() {
+        let mut e = Engine::new(EngineConfig {
+            duration_s: 2.0,
+            policy: PolicyKind::MaceGpu,
+            planner_info: PlannerInfo::Oracle,
+            admission: AdmissionPolicy::DropLate,
+            calib: quick_calib(),
+            ..Default::default()
+        });
+        // far past saturation with a moderate SLO: shedding must kick in
+        let r = e.run(&stream(300.0, 0.3)).unwrap();
+        let sc = r.sched.unwrap();
+        assert_eq!(sc.admission, "drop-late");
+        assert!(sc.shed_late > 0, "{sc:?}");
+        assert_eq!(sc.offered, sc.admitted + sc.shed_late);
+        assert_eq!(r.requests, sc.admitted);
+    }
+
+    #[test]
+    fn bounded_admission_caps_in_flight() {
+        use crate::config::schema::SchedulerKind;
+        let mut e = Engine::new(EngineConfig {
+            duration_s: 2.0,
+            policy: PolicyKind::MaceGpu,
+            scheduler: SchedulerKind::Edf,
+            admission: AdmissionPolicy::Bounded { per_stream: 1 },
+            calib: quick_calib(),
+            ..Default::default()
+        });
+        let r = e.run(&stream(200.0, 0.5)).unwrap();
+        let sc = r.sched.unwrap();
+        assert_eq!(sc.scheduler, "edf");
+        assert!(sc.dropped_capacity > 0, "{sc:?}");
+        assert_eq!(sc.offered, sc.admitted + sc.dropped_capacity);
+        assert_eq!(r.requests, sc.admitted);
     }
 
     #[test]

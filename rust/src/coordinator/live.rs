@@ -190,6 +190,7 @@ impl LiveSession {
             repartitions: 0,
             partition_overhead_s: 0.0,
             plan_cache: None,
+            sched: None,
         };
         Ok((report, last_output))
     }

@@ -9,6 +9,10 @@
 //! * [`repartition`] — drift/regime-triggered repartition controller
 //!   (incremental window or full re-solve), with decision-time accounting
 //!   charged to the CPU.
+//! * [`scheduler`] — pluggable SLO-aware dispatch: the [`Scheduler`] trait
+//!   with FIFO / EDF / slack-reclaiming implementations, plus admission
+//!   control ([`AdmissionPolicy`]) that can shed infeasible requests
+//!   before they enter the queue.
 //! * [`plan_cache`] — LRU partition-plan cache keyed by (model, quantized
 //!   device condition, objective) so repartition events under recurring
 //!   conditions reuse plans instead of re-running the DP.
@@ -21,7 +25,9 @@ pub mod live;
 pub mod plan_cache;
 pub mod repartition;
 pub mod request;
+pub mod scheduler;
 
 pub use engine::{Engine, EngineConfig};
 pub use plan_cache::{PlanCache, PlanCacheConfig};
 pub use request::{Request, StreamSpec};
+pub use scheduler::{AdmissionPolicy, Scheduler};

@@ -99,6 +99,7 @@ pub struct PlanCache {
 }
 
 impl PlanCache {
+    /// Build an empty cache with the given sizing/quantization.
     pub fn new(cfg: PlanCacheConfig) -> PlanCache {
         PlanCache {
             cfg,
@@ -115,6 +116,7 @@ impl PlanCache {
         self.cfg.capacity > 0
     }
 
+    /// The sizing/quantization configuration.
     pub fn config(&self) -> &PlanCacheConfig {
         &self.cfg
     }
@@ -186,10 +188,12 @@ impl PlanCache {
         );
     }
 
+    /// Number of resident plans.
     pub fn len(&self) -> usize {
         self.entries.len()
     }
 
+    /// True when no plans are resident.
     pub fn is_empty(&self) -> bool {
         self.entries.is_empty()
     }

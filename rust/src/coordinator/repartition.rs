@@ -16,12 +16,15 @@ use super::plan_cache::PlanCache;
 /// Why a repartition happened (statistics/logging).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Trigger {
+    /// Sustained profiler-residual drift (incremental window re-solve).
     Drift,
+    /// Frequency repin / utilization level shift (full re-solve).
     RegimeChange,
 }
 
 /// Controller state + statistics.
 pub struct RepartitionController {
+    /// Windowed re-solver used on the drift fast path.
     pub incremental: IncrementalRepartitioner,
     /// Minimum ops executed between drift-triggered repartitions.
     pub cooldown_ops: usize,
@@ -35,6 +38,7 @@ pub struct RepartitionController {
 }
 
 impl RepartitionController {
+    /// Build a controller around an incremental re-solver.
     pub fn new(incremental: IncrementalRepartitioner, cooldown_ops: usize) -> Self {
         RepartitionController {
             incremental,
@@ -128,6 +132,7 @@ impl RepartitionController {
         Some((plan, dt))
     }
 
+    /// Total adopted re-plans (drift + regime, cached or solved).
     pub fn repartitions(&self) -> usize {
         self.repartitions
     }
@@ -137,6 +142,7 @@ impl RepartitionController {
         self.evaluations
     }
 
+    /// Full (non-cached) regime-change solves.
     pub fn full_solves(&self) -> usize {
         self.full_solves
     }

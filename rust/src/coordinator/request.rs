@@ -8,14 +8,18 @@ use crate::workload::Arrival;
 /// One concurrently-served app: a model plus its arrival process and SLO.
 #[derive(Clone)]
 pub struct StreamSpec {
+    /// Stream identifier (index into the engine's stream list).
     pub id: usize,
+    /// The model every request of this stream executes.
     pub model: Arc<ModelGraph>,
+    /// Arrival process generating this stream's requests.
     pub arrival: Arrival,
     /// Per-request latency SLO (deadline = arrival + slo).
     pub slo_s: f64,
 }
 
 impl StreamSpec {
+    /// Build a stream spec, wrapping the model in an [`Arc`].
     pub fn new(id: usize, model: ModelGraph, arrival: Arrival, slo_s: f64) -> Self {
         StreamSpec {
             id,
@@ -29,30 +33,41 @@ impl StreamSpec {
 /// One inference request.
 #[derive(Debug, Clone)]
 pub struct Request {
+    /// Globally unique request id.
     pub id: usize,
+    /// Owning stream id.
     pub stream: usize,
+    /// Arrival time (virtual seconds).
     pub arrival_s: f64,
+    /// Absolute deadline: arrival + the stream's SLO.
     pub deadline_s: f64,
 }
 
 /// Completed-request record.
 #[derive(Debug, Clone)]
 pub struct RequestOutcome {
+    /// The request this outcome belongs to.
     pub request: Request,
+    /// When its first op started executing.
     pub start_s: f64,
+    /// When its last op finished.
     pub finish_s: f64,
+    /// Dynamic energy attributed to its ops, joules.
     pub energy_j: f64,
 }
 
 impl RequestOutcome {
+    /// End-to-end latency: finish minus arrival.
     pub fn latency_s(&self) -> f64 {
         self.finish_s - self.request.arrival_s
     }
 
+    /// Queueing delay: time between arrival and first op start.
     pub fn queue_s(&self) -> f64 {
         self.start_s - self.request.arrival_s
     }
 
+    /// Whether the request finished by its deadline.
     pub fn met_deadline(&self) -> bool {
         self.finish_s <= self.request.deadline_s
     }

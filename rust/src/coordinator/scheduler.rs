@@ -1,0 +1,517 @@
+//! Pluggable SLO-aware dispatch: scheduler policies and admission control.
+//!
+//! The serving engine ([`super::engine`]) used to hard-code its dispatch
+//! rule (earliest-feasible-start, ties by arrival order — plain FIFO) and
+//! admitted every generated request. This module turns both decisions into
+//! swappable policies:
+//!
+//! * [`Scheduler`] — *which* eligible op runs next, and (optionally)
+//!   *where* it runs. Implementations: [`Fifo`] (the historical baseline),
+//!   [`Edf`] (earliest-deadline-first over the requests that could start
+//!   at the earliest feasible time), and [`SlackReclaim`] (EDF ordering
+//!   plus an energy-biased placement override that spends a request's
+//!   latency slack on the lower-energy processor choice — the paper's
+//!   energy/latency decoupling insight applied at dispatch time).
+//! * [`AdmissionCtrl`] — *whether* a freshly arrived request enters the
+//!   queue at all, per an [`AdmissionPolicy`]: admit everything, shed
+//!   requests whose deadline is already infeasible (`drop-late`), or bound
+//!   the number of in-flight requests per stream.
+//!
+//! Adding a policy is two steps: implement [`Scheduler`] (one method,
+//! `pick`; override `place` only if the policy moves ops between
+//! processors), then add a variant to
+//! [`SchedulerKind`](crate::config::schema::SchedulerKind) and map it in
+//! [`by_kind`]. `docs/ARCHITECTURE.md` walks through the full lifecycle.
+
+use crate::config::schema::{AdmissionKind, SchedulerKind};
+use crate::graph::OpNode;
+use crate::profiler::CostModel;
+use crate::soc::device::{ExecCtx, Snapshot};
+use crate::soc::Placement;
+
+use super::request::Request;
+
+/// Tolerance when comparing candidate start times: candidates within this
+/// window of the earliest feasible start are considered simultaneous, so a
+/// deadline-driven policy may prefer any of them without idling a
+/// processor for a measurable amount of time.
+pub const START_EPS_S: f64 = 1e-9;
+
+/// Safety factor applied by [`AdmissionPolicy::DropLate`] on top of its
+/// serialized backlog estimate. Predicted per-op costs assume an
+/// uncontended device (`ExecCtx::concurrent = false`), carry measurement
+/// noise, and chase the hidden drift process only as fast as the engine
+/// refreshes its latency profiles (once per monitor period), so the
+/// realized finish time of an admitted request can exceed the estimate;
+/// inflating the estimate by this fraction keeps the shed decision
+/// conservative (admitted requests should meet their deadlines; see
+/// `rust/tests/scheduler_admission.rs`).
+pub const DROP_LATE_SAFETY: f64 = 0.25;
+
+/// One dispatchable request as the scheduler sees it: the earliest time
+/// its next operator could start, plus the request-level facts
+/// (arrival, deadline, predicted remaining work) policies order by.
+#[derive(Debug, Clone, Copy)]
+pub struct Candidate {
+    /// Index into the engine's active-request list.
+    pub active_idx: usize,
+    /// Earliest feasible start of the request's next op (virtual seconds):
+    /// its input-ready time pushed past the availability of every
+    /// processor the planned placement touches.
+    pub start_s: f64,
+    /// Owning request's arrival time.
+    pub arrival_s: f64,
+    /// Owning request's absolute deadline (arrival + stream SLO).
+    pub deadline_s: f64,
+    /// Predicted remaining service time under the current plan, from the
+    /// next op (inclusive) to the end of the model.
+    pub remaining_s: f64,
+}
+
+impl Candidate {
+    /// Latency slack if the next op starts at `start_s`: time to spare
+    /// before the deadline after the predicted remaining work completes.
+    /// Negative once the request is predicted to miss.
+    pub fn slack_s(&self) -> f64 {
+        self.deadline_s - (self.start_s + self.remaining_s)
+    }
+}
+
+/// A dispatch policy: decides which eligible request runs its next
+/// operator, and optionally overrides the plan's placement for that op.
+pub trait Scheduler: Send {
+    /// Policy name as it appears in reports (`fifo`, `edf`, …).
+    fn name(&self) -> &'static str;
+
+    /// Choose the next candidate to dispatch. `candidates` is non-empty;
+    /// the returned value is an index into `candidates` (not into the
+    /// engine's active list — use [`Candidate::active_idx`] for that).
+    fn pick(&self, candidates: &[Candidate]) -> usize;
+
+    /// Placement override hook, called once per dispatched op with the
+    /// plan's placement and the owning request's current slack. The
+    /// default keeps the plan's choice; [`SlackReclaim`] trades positive
+    /// slack for predicted energy savings here. The engine validates the
+    /// returned placement against processor availability — an override
+    /// that needs a processor still busy at the dispatch time falls back
+    /// to the plan's placement instead of double-booking it.
+    fn place(
+        &self,
+        planned: Placement,
+        _op: &OpNode,
+        _ctx: &ExecCtx,
+        _snap: &Snapshot,
+        _model: &dyn CostModel,
+        _slack_s: f64,
+    ) -> Placement {
+        planned
+    }
+}
+
+/// Arrival-order dispatch — the engine's historical behavior: the
+/// candidate with the earliest feasible start wins, ties broken by
+/// arrival time.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Fifo;
+
+impl Scheduler for Fifo {
+    fn name(&self) -> &'static str {
+        "fifo"
+    }
+
+    fn pick(&self, candidates: &[Candidate]) -> usize {
+        let mut best = 0;
+        for (i, c) in candidates.iter().enumerate().skip(1) {
+            let b = &candidates[best];
+            if c.start_s < b.start_s
+                || (c.start_s == b.start_s && c.arrival_s < b.arrival_s)
+            {
+                best = i;
+            }
+        }
+        best
+    }
+}
+
+/// Non-idling earliest-deadline-first pick: among the candidates that can
+/// start at the earliest feasible time (within [`START_EPS_S`]), choose
+/// the tightest deadline; ties fall back to arrival order. Restricting
+/// the deadline comparison to earliest-start candidates keeps processors
+/// from idling while an urgent request waits on its inputs.
+fn edf_pick(candidates: &[Candidate]) -> usize {
+    let min_start = candidates
+        .iter()
+        .map(|c| c.start_s)
+        .fold(f64::INFINITY, f64::min);
+    let mut best: Option<usize> = None;
+    for (i, c) in candidates.iter().enumerate() {
+        if c.start_s > min_start + START_EPS_S {
+            continue;
+        }
+        let better = match best {
+            None => true,
+            Some(b) => {
+                let bb = &candidates[b];
+                c.deadline_s < bb.deadline_s
+                    || (c.deadline_s == bb.deadline_s && c.arrival_s < bb.arrival_s)
+            }
+        };
+        if better {
+            best = Some(i);
+        }
+    }
+    best.unwrap_or(0)
+}
+
+/// Earliest-deadline-first dispatch over eligible ops, keyed by the owning
+/// request's absolute deadline. Under contention (several requests waiting
+/// on the same processor) the tightest deadline runs first; placement
+/// follows the partition plan unchanged.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Edf;
+
+impl Scheduler for Edf {
+    fn name(&self) -> &'static str {
+        "edf"
+    }
+
+    fn pick(&self, candidates: &[Candidate]) -> usize {
+        edf_pick(candidates)
+    }
+}
+
+/// EDF ordering plus energy slack reclamation: when the owning request has
+/// latency slack relative to its SLO, the op may move from the plan's
+/// placement to a single-processor placement the cost model predicts to be
+/// cheaper in energy, as long as the added latency fits inside a bounded
+/// fraction of the slack. Requests with no slack execute exactly like
+/// [`Edf`], so responsiveness is never traded away — only surplus latency
+/// headroom is converted back into energy savings.
+#[derive(Debug, Clone, Copy)]
+pub struct SlackReclaim {
+    /// Fraction of the current slack a single op may spend on a slower,
+    /// lower-energy placement. Keeping this below 1 leaves headroom for
+    /// later ops of the same request (and for prediction error).
+    pub slack_budget_frac: f64,
+    /// Minimum relative predicted-energy saving that justifies deviating
+    /// from the plan; filters noise-level "wins" that would churn
+    /// placements (and pay real transfer costs) for nothing.
+    pub min_energy_gain: f64,
+}
+
+impl Default for SlackReclaim {
+    fn default() -> Self {
+        SlackReclaim {
+            slack_budget_frac: 0.5,
+            min_energy_gain: 0.02,
+        }
+    }
+}
+
+impl Scheduler for SlackReclaim {
+    fn name(&self) -> &'static str {
+        "slack-reclaim"
+    }
+
+    fn pick(&self, candidates: &[Candidate]) -> usize {
+        edf_pick(candidates)
+    }
+
+    fn place(
+        &self,
+        planned: Placement,
+        op: &OpNode,
+        ctx: &ExecCtx,
+        snap: &Snapshot,
+        model: &dyn CostModel,
+        slack_s: f64,
+    ) -> Placement {
+        if slack_s <= 0.0 {
+            return planned;
+        }
+        let base = model.predict(op, planned, ctx, snap);
+        let budget_s = slack_s * self.slack_budget_frac;
+        let mut best = planned;
+        let mut best_e = base.energy_j * (1.0 - self.min_energy_gain);
+        for alt in [Placement::CPU, Placement::GPU] {
+            if alt == planned {
+                continue;
+            }
+            let c = model.predict(op, alt, ctx, snap);
+            if c.latency_s - base.latency_s <= budget_s && c.energy_j < best_e {
+                best = alt;
+                best_e = c.energy_j;
+            }
+        }
+        best
+    }
+}
+
+/// Build the scheduler implementation for a configured
+/// [`SchedulerKind`].
+pub fn by_kind(kind: SchedulerKind) -> Box<dyn Scheduler + Send + Sync> {
+    match kind {
+        SchedulerKind::Fifo => Box::new(Fifo),
+        SchedulerKind::Edf => Box::new(Edf),
+        SchedulerKind::SlackReclaim => Box::new(SlackReclaim::default()),
+    }
+}
+
+/// Admission policy applied in front of the engine's queue, deciding per
+/// arrival whether the request enters the system at all.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmissionPolicy {
+    /// Admit every generated request (the baseline; queues grow without
+    /// bound past saturation).
+    AdmitAll,
+    /// Shed requests whose deadline is already infeasible: a request is
+    /// rejected when its earliest start plus the predicted backlog of
+    /// admitted work plus its own predicted service time — inflated by
+    /// [`DROP_LATE_SAFETY`] — lands past its deadline. Conservative by
+    /// construction: the backlog estimate serializes work that actually
+    /// overlaps across CPU and GPU.
+    DropLate,
+    /// Bound the number of admitted-but-unfinished requests per stream;
+    /// arrivals beyond the bound are dropped.
+    Bounded {
+        /// Maximum in-flight (queued + executing) requests per stream.
+        per_stream: usize,
+    },
+}
+
+impl AdmissionPolicy {
+    /// Build the policy for a configured [`AdmissionKind`] plus the
+    /// per-stream queue bound (only meaningful for `Bounded`).
+    pub fn from_kind(kind: AdmissionKind, queue_limit: usize) -> AdmissionPolicy {
+        match kind {
+            AdmissionKind::AdmitAll => AdmissionPolicy::AdmitAll,
+            AdmissionKind::DropLate => AdmissionPolicy::DropLate,
+            AdmissionKind::Bounded => AdmissionPolicy::Bounded {
+                per_stream: queue_limit.max(1),
+            },
+        }
+    }
+
+    /// Policy name as it appears in reports.
+    pub fn name(&self) -> &'static str {
+        match self {
+            AdmissionPolicy::AdmitAll => "admit-all",
+            AdmissionPolicy::DropLate => "drop-late",
+            AdmissionPolicy::Bounded { .. } => "bounded",
+        }
+    }
+}
+
+/// Counters the admission controller accumulates over one serving run.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct AdmissionCounters {
+    /// Requests the arrival processes generated.
+    pub offered: usize,
+    /// Requests accepted into the queue.
+    pub admitted: usize,
+    /// Requests shed because their deadline was predicted infeasible.
+    pub shed_late: usize,
+    /// Requests dropped because the per-stream bound was full.
+    pub dropped_capacity: usize,
+}
+
+/// Stateful admission controller: one per serving run, applying an
+/// [`AdmissionPolicy`] and counting outcomes.
+#[derive(Debug, Clone)]
+pub struct AdmissionCtrl {
+    policy: AdmissionPolicy,
+    counters: AdmissionCounters,
+}
+
+impl AdmissionCtrl {
+    /// Create a controller with zeroed counters.
+    pub fn new(policy: AdmissionPolicy) -> AdmissionCtrl {
+        AdmissionCtrl {
+            policy,
+            counters: AdmissionCounters::default(),
+        }
+    }
+
+    /// The policy this controller applies.
+    pub fn policy(&self) -> AdmissionPolicy {
+        self.policy
+    }
+
+    /// Counter snapshot.
+    pub fn counters(&self) -> AdmissionCounters {
+        self.counters
+    }
+
+    /// Decide admission for one arrival. `est_start_s` is the earliest
+    /// time the request's first op could start (arrival pushed past the
+    /// current processor availability), `backlog_s` the predicted
+    /// remaining service time summed over every admitted-but-unfinished
+    /// request, `service_s` the request's own predicted end-to-end service
+    /// time under its stream's current plan, and `in_stream` the number of
+    /// admitted-but-unfinished requests of the same stream.
+    pub fn admit(
+        &mut self,
+        req: &Request,
+        est_start_s: f64,
+        backlog_s: f64,
+        service_s: f64,
+        in_stream: usize,
+    ) -> bool {
+        self.counters.offered += 1;
+        let ok = match self.policy {
+            AdmissionPolicy::AdmitAll => true,
+            AdmissionPolicy::DropLate => {
+                let predicted_finish =
+                    est_start_s + (backlog_s + service_s) * (1.0 + DROP_LATE_SAFETY);
+                if predicted_finish > req.deadline_s {
+                    self.counters.shed_late += 1;
+                    false
+                } else {
+                    true
+                }
+            }
+            AdmissionPolicy::Bounded { per_stream } => {
+                if in_stream >= per_stream {
+                    self.counters.dropped_capacity += 1;
+                    false
+                } else {
+                    true
+                }
+            }
+        };
+        if ok {
+            self.counters.admitted += 1;
+        }
+        ok
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cand(idx: usize, start: f64, arrival: f64, deadline: f64) -> Candidate {
+        Candidate {
+            active_idx: idx,
+            start_s: start,
+            arrival_s: arrival,
+            deadline_s: deadline,
+            remaining_s: 0.05,
+        }
+    }
+
+    fn req(arrival: f64, deadline: f64) -> Request {
+        Request {
+            id: 0,
+            stream: 0,
+            arrival_s: arrival,
+            deadline_s: deadline,
+        }
+    }
+
+    #[test]
+    fn fifo_preserves_arrival_order_under_contention() {
+        // both requests blocked on the same processor → same start
+        let c = vec![cand(0, 1.0, 0.9, 1.2), cand(1, 1.0, 0.2, 5.0)];
+        assert_eq!(Fifo.pick(&c), 1, "earlier arrival wins the tie");
+        // a strictly earlier start always wins regardless of arrival
+        let c = vec![cand(0, 0.5, 0.9, 1.2), cand(1, 1.0, 0.2, 5.0)];
+        assert_eq!(Fifo.pick(&c), 0);
+    }
+
+    #[test]
+    fn edf_picks_tighter_deadline_under_contention() {
+        // same start (contended processor): the later arrival with the
+        // tighter deadline must win under EDF, and lose under FIFO
+        let c = vec![cand(0, 1.0, 0.2, 5.0), cand(1, 1.0, 0.9, 1.2)];
+        assert_eq!(Edf.pick(&c), 1);
+        assert_eq!(Fifo.pick(&c), 0);
+    }
+
+    #[test]
+    fn edf_does_not_idle_for_a_tight_deadline() {
+        // the tight-deadline request cannot start until 2.0; the loose one
+        // can run now — EDF must not hold the processor idle
+        let c = vec![cand(0, 0.5, 0.1, 9.0), cand(1, 2.0, 0.2, 2.5)];
+        assert_eq!(Edf.pick(&c), 0);
+    }
+
+    #[test]
+    fn edf_ties_fall_back_to_arrival() {
+        let c = vec![cand(0, 1.0, 0.4, 2.0), cand(1, 1.0, 0.3, 2.0)];
+        assert_eq!(Edf.pick(&c), 1);
+    }
+
+    #[test]
+    fn slack_reclaim_picks_like_edf() {
+        let c = vec![cand(0, 1.0, 0.2, 5.0), cand(1, 1.0, 0.9, 1.2)];
+        assert_eq!(SlackReclaim::default().pick(&c), Edf.pick(&c));
+    }
+
+    #[test]
+    fn candidate_slack() {
+        let c = cand(0, 1.0, 0.5, 1.2);
+        // deadline 1.2 - (start 1.0 + remaining 0.05)
+        assert!((c.slack_s() - 0.15).abs() < 1e-12);
+    }
+
+    #[test]
+    fn admit_all_admits_everything() {
+        let mut ctrl = AdmissionCtrl::new(AdmissionPolicy::AdmitAll);
+        for i in 0..5 {
+            assert!(ctrl.admit(&req(i as f64, i as f64 + 0.1), i as f64, 10.0, 1.0, i));
+        }
+        let c = ctrl.counters();
+        assert_eq!((c.offered, c.admitted), (5, 5));
+        assert_eq!(c.shed_late + c.dropped_capacity, 0);
+    }
+
+    #[test]
+    fn drop_late_sheds_infeasible_deadlines() {
+        let mut ctrl = AdmissionCtrl::new(AdmissionPolicy::DropLate);
+        // plenty of headroom → admitted
+        assert!(ctrl.admit(&req(0.0, 10.0), 0.0, 0.5, 0.1, 0));
+        // backlog alone already passes the deadline → shed
+        assert!(!ctrl.admit(&req(1.0, 1.2), 1.0, 5.0, 0.1, 1));
+        // the safety inflation matters near the edge:
+        // 1.0 + (0.9 + 0.1) * (1 + DROP_LATE_SAFETY) = 2.25 > 2.1
+        assert!(!ctrl.admit(&req(1.0, 2.1), 1.0, 0.9, 0.1, 1));
+        let c = ctrl.counters();
+        assert_eq!((c.offered, c.admitted, c.shed_late), (3, 1, 2));
+    }
+
+    #[test]
+    fn bounded_enforces_per_stream_limit() {
+        let mut ctrl = AdmissionCtrl::new(AdmissionPolicy::Bounded { per_stream: 2 });
+        assert!(ctrl.admit(&req(0.0, 1.0), 0.0, 0.0, 0.1, 0));
+        assert!(ctrl.admit(&req(0.1, 1.1), 0.1, 0.1, 0.1, 1));
+        assert!(!ctrl.admit(&req(0.2, 1.2), 0.2, 0.2, 0.1, 2));
+        let c = ctrl.counters();
+        assert_eq!((c.admitted, c.dropped_capacity), (2, 1));
+    }
+
+    #[test]
+    fn from_kind_maps_and_clamps() {
+        use crate::config::schema::AdmissionKind;
+        assert_eq!(
+            AdmissionPolicy::from_kind(AdmissionKind::AdmitAll, 0),
+            AdmissionPolicy::AdmitAll
+        );
+        assert_eq!(
+            AdmissionPolicy::from_kind(AdmissionKind::DropLate, 0),
+            AdmissionPolicy::DropLate
+        );
+        assert_eq!(
+            AdmissionPolicy::from_kind(AdmissionKind::Bounded, 0),
+            AdmissionPolicy::Bounded { per_stream: 1 }
+        );
+    }
+
+    #[test]
+    fn by_kind_names_round_trip() {
+        use crate::config::schema::SchedulerKind;
+        for k in SchedulerKind::all() {
+            assert_eq!(by_kind(k).name(), k.name());
+        }
+    }
+}

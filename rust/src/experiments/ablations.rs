@@ -31,10 +31,13 @@ use crate::workload::{Arrival, WorkloadCondition};
 /// One predictor arm's accuracy over the drift trace.
 #[derive(Debug, Clone)]
 pub struct ProfilerAccuracyRow {
+    /// Predictor arm name (`gbdt-only`, `gbdt+ewma`, `gbdt+gru`).
     pub arm: String,
     /// Mean absolute percentage error of per-op energy predictions.
     pub energy_mape: f64,
+    /// Mean absolute percentage error of per-op latency predictions.
     pub latency_mape: f64,
+    /// Observations in the trace.
     pub observations: usize,
 }
 
@@ -118,12 +121,16 @@ pub fn profiler_accuracy(
 // A2 — DP optimality + decision runtime
 // ---------------------------------------------------------------------------
 
+/// One (case, policy) cell of the DP-vs-exhaustive comparison.
 #[derive(Debug, Clone)]
 pub struct DpComparisonRow {
+    /// Case label (`<graph>/<policy>`).
     pub case: String,
+    /// Objective score achieved (lower = better).
     pub score: f64,
     /// Score relative to the best policy in the case (1.0 = optimal).
     pub relative: f64,
+    /// Solve time, microseconds.
     pub solve_us: f64,
 }
 
@@ -237,9 +244,12 @@ pub fn dp_comparison(seed: u64) -> Result<Vec<DpComparisonRow>> {
 // A3 — incremental vs full repartitioning
 // ---------------------------------------------------------------------------
 
+/// One windowed-vs-full repartition scheme's cost/quality point.
 #[derive(Debug, Clone)]
 pub struct IncrementalRow {
+    /// Scheme label (`full` or `window=N`).
     pub scheme: String,
+    /// Decision time, microseconds.
     pub decision_us: f64,
     /// EDP of the repaired plan over the remaining ops, relative to the
     /// full re-solve (1.0 = matches full quality).
@@ -323,8 +333,10 @@ pub fn incremental_vs_full(windows: &[usize]) -> Result<Vec<IncrementalRow>> {
 // A4 — responsiveness across a condition switch
 // ---------------------------------------------------------------------------
 
+/// One policy's adaptation behaviour across the condition switch.
 #[derive(Debug, Clone)]
 pub struct ResponsivenessRow {
+    /// Policy under test.
     pub policy: PolicyKind,
     /// Mean latency in the 2 s after the moderate→high switch.
     pub post_switch_ms: f64,
@@ -332,6 +344,7 @@ pub struct ResponsivenessRow {
     pub steady_high_ms: f64,
     /// Adaptation overshoot: post-switch / steady.
     pub overshoot: f64,
+    /// Repartitions adopted during the run.
     pub repartitions: usize,
 }
 
@@ -376,13 +389,20 @@ pub fn responsiveness(calib: &CalibConfig, seed: u64) -> Result<Vec<Responsivene
 // A5 — concurrency scaling
 // ---------------------------------------------------------------------------
 
+/// One (policy, stream-count) cell of the concurrency scaling sweep.
 #[derive(Debug, Clone)]
 pub struct ConcurrencyRow {
+    /// Policy under test.
     pub policy: PolicyKind,
+    /// Concurrent app streams served.
     pub streams: usize,
+    /// Completed requests per second.
     pub throughput_hz: f64,
+    /// 95th-percentile latency, milliseconds.
     pub p95_ms: f64,
+    /// Energy per inference, millijoules.
     pub mj_per_inf: f64,
+    /// Deadline-miss rate.
     pub miss_rate: f64,
 }
 

@@ -27,8 +27,11 @@ pub struct CacheScenarioConfig {
     pub cycles: usize,
     /// Closed-loop requests per (phase, model).
     pub requests_per_phase: usize,
+    /// Workload/simulator seed.
     pub seed: u64,
+    /// Profiler calibration.
     pub calib: CalibConfig,
+    /// Plan-cache knobs under test.
     pub plan_cache: PlanCacheConfig,
 }
 
@@ -67,6 +70,7 @@ pub struct CacheScenarioResult {
 }
 
 impl CacheScenarioResult {
+    /// Fraction of planning lookups served from cache.
     pub fn hit_rate(&self) -> f64 {
         self.stats.hit_rate()
     }

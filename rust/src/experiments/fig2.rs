@@ -14,17 +14,24 @@ use crate::workload::Arrival;
 /// One cell of the figure.
 #[derive(Debug, Clone)]
 pub struct Fig2Row {
+    /// Policy of this cell.
     pub policy: PolicyKind,
+    /// Condition of this cell.
     pub condition: ConditionKind,
+    /// The closed-loop serving report.
     pub report: ServingReport,
 }
 
 /// Experiment parameters.
 #[derive(Debug, Clone)]
 pub struct Fig2Config {
+    /// Zoo model to serve.
     pub model: String,
+    /// Closed-loop requests per cell.
     pub n_requests: usize,
+    /// Workload/simulator seed.
     pub seed: u64,
+    /// Profiler calibration (fit once, shared).
     pub calib: CalibConfig,
 }
 

@@ -12,7 +12,9 @@
 //! | A4  | [`ablations::responsiveness`]   | adaptation across condition switch |
 //! | A5  | [`ablations::concurrency_scaling`]| 1–4 concurrent model streams    |
 //! | A6  | [`cache_scenario::run`]         | plan-cache hit rate, bursty trace  |
+//! | A7  | [`scheduler_scenario::run`]     | scheduler overload sweep (SLOs)    |
 
 pub mod ablations;
 pub mod cache_scenario;
 pub mod fig2;
+pub mod scheduler_scenario;

@@ -44,6 +44,7 @@ pub fn max_frontier(g: &ModelGraph) -> usize {
 /// groups these into co-execution "chains" to amortize map/unmap overhead.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Segment {
+    /// Member ops, in topological order.
     pub ops: Vec<OpId>,
 }
 

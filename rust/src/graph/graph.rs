@@ -16,15 +16,23 @@ pub type OpId = usize;
 /// One operator instance.
 #[derive(Debug, Clone)]
 pub struct OpNode {
+    /// Topological index in the graph.
     pub id: OpId,
+    /// Unique op name (e.g. `conv3`).
     pub name: String,
+    /// Operator kind with its parameters.
     pub kind: OpKind,
     /// Producer ops (empty → consumes the model input).
     pub inputs: Vec<OpId>,
+    /// Shape of each input tensor (parallel to `inputs`).
     pub in_shapes: Vec<Shape>,
+    /// Output tensor shape.
     pub out_shape: Shape,
+    /// Multiply-accumulate work, FLOPs.
     pub flops: u64,
+    /// Parameter bytes read per execution.
     pub weight_bytes: u64,
+    /// Activation bytes moved per execution.
     pub activation_bytes: u64,
 }
 
@@ -42,14 +50,18 @@ impl OpNode {
 /// A DNN model as a topologically ordered operator DAG.
 #[derive(Debug, Clone)]
 pub struct ModelGraph {
+    /// Model name (zoo key).
     pub name: String,
+    /// Model input tensor shape.
     pub input_shape: Shape,
+    /// Operators in topological order (`ops[i].id == i`).
     pub ops: Vec<OpNode>,
     /// consumers[i] = ops that read op i's output.
     pub consumers: Vec<Vec<OpId>>,
 }
 
 impl ModelGraph {
+    /// Number of operators.
     pub fn num_ops(&self) -> usize {
         self.ops.len()
     }
@@ -61,10 +73,12 @@ impl ModelGraph {
             .collect()
     }
 
+    /// Total FLOPs over all ops.
     pub fn total_flops(&self) -> u64 {
         self.ops.iter().map(|o| o.flops).sum()
     }
 
+    /// Total parameter bytes.
     pub fn total_weight_bytes(&self) -> u64 {
         self.ops.iter().map(|o| o.weight_bytes).sum()
     }
@@ -154,11 +168,14 @@ pub struct GraphBuilder {
 /// Source of an op's input: the model input or a previous op.
 #[derive(Debug, Clone, Copy)]
 pub enum Src {
+    /// The model input tensor.
     Input,
+    /// The output of a previous op.
     Op(OpId),
 }
 
 impl GraphBuilder {
+    /// Start an empty graph for a model.
     pub fn new(name: &str, input_shape: Shape) -> Self {
         GraphBuilder {
             name: name.to_string(),

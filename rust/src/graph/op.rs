@@ -14,7 +14,9 @@ use super::tensor::Shape;
 /// Fused activation functions.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum ActKind {
+    /// No fused activation.
     None,
+    /// Standard ReLU.
     Relu,
     /// Leaky ReLU (YOLO uses slope 0.1).
     Leaky,
@@ -28,20 +30,31 @@ pub enum OpKind {
     /// 2-D convolution (+ folded BN + fused activation).
     /// `groups == in_c` expresses a depthwise convolution.
     Conv2d {
+        /// Square kernel size.
         kernel: usize,
+        /// Stride in both spatial dims.
         stride: usize,
+        /// Symmetric zero padding.
         pad: usize,
+        /// Output channels.
         out_c: usize,
+        /// Channel groups (`groups == in_c` → depthwise).
         groups: usize,
+        /// Fused activation.
         act: ActKind,
     },
+    /// Max pooling.
     MaxPool {
+        /// Square window size.
         kernel: usize,
+        /// Stride in both spatial dims.
         stride: usize,
     },
     /// Global average pool to 1×1.
     AvgPoolGlobal,
+    /// Dense layer.
     FullyConnected {
+        /// Output feature count.
         out_features: usize,
     },
     /// Standalone activation (un-fused graphs only).
@@ -54,12 +67,15 @@ pub enum OpKind {
     Concat,
     /// Space-to-depth (YOLOv2 "reorg"): H,W ↓ stride, C × stride².
     Reorg {
+        /// Spatial downscale factor.
         stride: usize,
     },
     /// Nearest-neighbour upsample.
     Upsample {
+        /// Spatial upscale factor.
         factor: usize,
     },
+    /// Channel softmax (classifier heads).
     Softmax,
 }
 

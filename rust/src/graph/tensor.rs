@@ -9,13 +9,18 @@ pub const F32_BYTES: u64 = 4;
 /// An NCHW activation shape. Fully-connected tensors use `h = w = 1`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct Shape {
+    /// Batch size.
     pub n: usize,
+    /// Channels.
     pub c: usize,
+    /// Height.
     pub h: usize,
+    /// Width.
     pub w: usize,
 }
 
 impl Shape {
+    /// Full NCHW shape.
     pub const fn nchw(n: usize, c: usize, h: usize, w: usize) -> Shape {
         Shape { n, c, h, w }
     }
@@ -25,10 +30,12 @@ impl Shape {
         Shape { n, c, h: 1, w: 1 }
     }
 
+    /// Element count.
     pub fn elems(&self) -> u64 {
         self.n as u64 * self.c as u64 * self.h as u64 * self.w as u64
     }
 
+    /// Size in bytes at f32 precision.
     pub fn bytes(&self) -> u64 {
         self.elems() * F32_BYTES
     }

@@ -17,6 +17,9 @@
 //! Python never runs on the request path: `make artifacts` AOT-compiles all
 //! HLO once; the rust binary is self-contained afterwards.
 //!
+//! A layer-by-layer walk of the request lifecycle lives in
+//! `docs/ARCHITECTURE.md`.
+//!
 //! ## Quick tour
 //!
 //! ```no_run
@@ -34,6 +37,8 @@
 //!     .unwrap();
 //! println!("predicted energy: {:.1} mJ", plan.predicted.energy_j * 1e3);
 //! ```
+
+#![warn(missing_docs)]
 
 pub mod cli;
 pub mod config;

@@ -14,6 +14,7 @@ pub struct EnergyAccount {
 }
 
 impl EnergyAccount {
+    /// Empty account.
     pub fn new() -> Self {
         Self::default()
     }
@@ -26,26 +27,32 @@ impl EnergyAccount {
         self.gpu_busy_s += cost.gpu_busy_s;
     }
 
+    /// Mark one inference complete (for per-inference averages).
     pub fn finish_inference(&mut self) {
         self.inferences += 1;
     }
 
+    /// Accumulated dynamic energy, joules.
     pub fn dynamic_j(&self) -> f64 {
         self.dynamic_j
     }
 
+    /// Transfer share of the dynamic energy, joules.
     pub fn transfer_j(&self) -> f64 {
         self.transfer_j
     }
 
+    /// Completed inferences.
     pub fn inferences(&self) -> usize {
         self.inferences
     }
 
+    /// Accumulated CPU busy time, seconds.
     pub fn cpu_busy_s(&self) -> f64 {
         self.cpu_busy_s
     }
 
+    /// Accumulated GPU busy time, seconds.
     pub fn gpu_busy_s(&self) -> f64 {
         self.gpu_busy_s
     }

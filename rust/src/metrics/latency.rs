@@ -12,6 +12,7 @@ pub struct LatencyRecorder {
 }
 
 impl LatencyRecorder {
+    /// Empty recorder.
     pub fn new() -> Self {
         Self::default()
     }
@@ -26,10 +27,17 @@ impl LatencyRecorder {
         }
     }
 
+    /// Requests recorded.
     pub fn count(&self) -> usize {
         self.samples_s.len()
     }
 
+    /// Number of recorded requests that missed their deadline.
+    pub fn misses(&self) -> usize {
+        self.misses
+    }
+
+    /// Fraction of recorded requests that missed their deadline.
     pub fn miss_rate(&self) -> f64 {
         if self.samples_s.is_empty() {
             0.0
@@ -38,14 +46,17 @@ impl LatencyRecorder {
         }
     }
 
+    /// Latency distribution (None when nothing recorded).
     pub fn summary(&self) -> Option<Summary> {
         Summary::of(&self.samples_s)
     }
 
+    /// Queueing-delay distribution (None when nothing recorded).
     pub fn queue_summary(&self) -> Option<Summary> {
         Summary::of(&self.queue_s)
     }
 
+    /// Raw latency samples, in record order.
     pub fn samples(&self) -> &[f64] {
         &self.samples_s
     }

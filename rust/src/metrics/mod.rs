@@ -7,4 +7,4 @@ pub mod report;
 
 pub use energy::EnergyAccount;
 pub use latency::LatencyRecorder;
-pub use report::{PlanCacheStats, ServingReport};
+pub use report::{PlanCacheStats, SchedStats, ServingReport};

@@ -68,6 +68,7 @@ impl Partitioner for AllCpuPartitioner {
 /// exactly what the DP's transfer-aware planning buys.
 #[derive(Debug, Clone)]
 pub struct GreedyEnergyPartitioner {
+    /// Candidate placements considered per op.
     pub choices: Vec<Placement>,
 }
 
@@ -128,11 +129,14 @@ impl Partitioner for GreedyEnergyPartitioner {
 /// beat it).
 #[derive(Debug, Clone)]
 pub struct RandomPartitioner {
+    /// Seed for the placement draw.
     pub seed: u64,
+    /// Candidate placements drawn from.
     pub choices: Vec<Placement>,
 }
 
 impl RandomPartitioner {
+    /// Build with the default candidate set.
     pub fn new(seed: u64) -> Self {
         RandomPartitioner {
             seed,

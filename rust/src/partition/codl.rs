@@ -115,6 +115,7 @@ impl CodlLatencyModel {
 /// The CoDL partitioner.
 #[derive(Debug, Clone)]
 pub struct CodlPartitioner {
+    /// The lightweight latency model CoDL plans with.
     pub model: CodlLatencyModel,
     /// Minimum relative latency gain for co-execution to be worth it.
     pub min_gain: f64,

@@ -34,12 +34,16 @@ pub const DEFAULT_SPLITS: [f64; 3] = [0.08, 0.15, 0.25];
 /// The AdaOper dynamic-programming partitioner.
 #[derive(Debug, Clone)]
 pub struct DpPartitioner {
+    /// Optimization objective of the solve.
     pub objective: Objective,
+    /// Candidate placements considered per op.
     pub choices: Vec<Placement>,
+    /// Pareto-frontier thinning width per DP state.
     pub latency_buckets: usize,
 }
 
 impl DpPartitioner {
+    /// Build with the default candidate set (CPU, GPU, split grid).
     pub fn new(objective: Objective) -> Self {
         let mut choices = vec![Placement::CPU, Placement::GPU];
         choices.extend(DEFAULT_SPLITS.iter().map(|&r| Placement::Split { cpu_frac: r }));
@@ -57,6 +61,7 @@ impl DpPartitioner {
         self
     }
 
+    /// Override the Pareto-thinning width (accuracy/runtime trade).
     pub fn with_buckets(mut self, buckets: usize) -> Self {
         assert!(buckets >= 2);
         self.latency_buckets = buckets;
@@ -345,6 +350,7 @@ impl DpPartitioner {
 /// Result of a (possibly windowed) DP solve.
 #[derive(Debug, Clone)]
 pub struct RangeSolution {
+    /// Placements for the solved window.
     pub placements: Vec<Placement>,
     /// Cost over `[start, n)` (window + fixed tail), as predicted.
     pub cost: PlanCost,
@@ -356,12 +362,9 @@ fn prune<P: ParetoPoint>(pts: &mut Vec<P>, buckets: usize) {
     if pts.len() <= 1 {
         return;
     }
-    pts.sort_by(|a, b| {
-        a.t()
-            .partial_cmp(&b.t())
-            .unwrap()
-            .then(a.e().partial_cmp(&b.e()).unwrap())
-    });
+    // total_cmp: a NaN cost (e.g. from a degenerate model) must not panic
+    // the solver; NaN points sort last and are pruned as dominated
+    pts.sort_by(|a, b| a.t().total_cmp(&b.t()).then(a.e().total_cmp(&b.e())));
     let mut kept: Vec<P> = Vec::with_capacity(pts.len());
     let mut best_e = f64::INFINITY;
     for p in pts.iter() {

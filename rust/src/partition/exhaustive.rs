@@ -14,13 +14,16 @@ use super::plan::{evaluate, Objective, Partitioner, Plan};
 /// Exhaustive-search partitioner (oracle).
 #[derive(Debug, Clone)]
 pub struct ExhaustivePartitioner {
+    /// Optimization objective of the search.
     pub objective: Objective,
+    /// Candidate placements considered per op.
     pub choices: Vec<Placement>,
     /// Refuse graphs where `choices^n` exceeds this.
     pub max_combos: u64,
 }
 
 impl ExhaustivePartitioner {
+    /// Build with a combo-count guard of 2e7.
     pub fn new(objective: Objective, choices: Vec<Placement>) -> Self {
         ExhaustivePartitioner {
             objective,

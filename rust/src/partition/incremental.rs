@@ -22,12 +22,14 @@ use super::plan::Plan;
 /// Windowed repartitioner wrapping the DP.
 #[derive(Debug, Clone)]
 pub struct IncrementalRepartitioner {
+    /// The DP solver used on each window.
     pub dp: DpPartitioner,
     /// Number of operators re-solved per trigger.
     pub window: usize,
 }
 
 impl IncrementalRepartitioner {
+    /// Wrap a DP solver with a re-solve window of `window` ops.
     pub fn new(dp: DpPartitioner, window: usize) -> Self {
         assert!(window >= 1);
         IncrementalRepartitioner { dp, window }

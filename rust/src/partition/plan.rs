@@ -18,7 +18,10 @@ pub enum Objective {
     /// AdaOper default).
     MinEdp,
     /// Minimize energy subject to a latency SLO.
-    MinEnergyUnderSlo { slo_s: f64 },
+    MinEnergyUnderSlo {
+        /// The latency bound, seconds.
+        slo_s: f64,
+    },
     /// Minimize latency (what CoDL optimizes).
     MinLatency,
 }
@@ -56,13 +59,18 @@ pub struct Plan {
 /// Aggregate cost of a plan (predicted or measured).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct PlanCost {
+    /// Dynamic energy, joules.
     pub energy_j: f64,
+    /// End-to-end latency, seconds.
     pub latency_s: f64,
+    /// Transfer time included in the latency, seconds.
     pub transfer_s: f64,
+    /// Transfer energy included in the energy, joules.
     pub transfer_j: f64,
 }
 
 impl PlanCost {
+    /// Energy-delay product (the AdaOper default score).
     pub fn edp(&self) -> f64 {
         self.energy_j * self.latency_s
     }
@@ -70,7 +78,9 @@ impl PlanCost {
 
 /// A partitioning policy.
 pub trait Partitioner {
+    /// Policy name (reports).
     fn name(&self) -> &str;
+    /// Produce a full plan for `g` under the given cost model and state.
     fn partition(
         &self,
         g: &ModelGraph,
@@ -94,6 +104,7 @@ pub struct CtxWalker<'g> {
 pub const INPUT_CPU_FRAC: f64 = 1.0;
 
 impl<'g> CtxWalker<'g> {
+    /// Start a walk at op 0 with graph inputs CPU-resident.
     pub fn new(g: &'g ModelGraph) -> Self {
         CtxWalker {
             g,
@@ -147,6 +158,28 @@ pub fn evaluate(
         total.transfer_j += c.transfer_j;
     }
     total
+}
+
+/// Predicted latency of each op of a placement assignment, in execution
+/// order, under the same context construction as [`evaluate`]. The
+/// coordinator's scheduler builds per-request slack and backlog estimates
+/// from the suffix sums of this vector.
+pub fn per_op_latencies(
+    g: &ModelGraph,
+    placements: &[Placement],
+    model: &dyn CostModel,
+    snap: &Snapshot,
+) -> Vec<f64> {
+    assert_eq!(placements.len(), g.num_ops());
+    let mut walker = CtxWalker::new(g);
+    g.ops
+        .iter()
+        .enumerate()
+        .map(|(i, op)| {
+            let ctx = walker.step(i, placements[i]);
+            model.predict(op, placements[i], &ctx, snap).latency_s
+        })
+        .collect()
 }
 
 /// Helper: uniform single-processor plan.
@@ -262,6 +295,20 @@ mod tests {
         let ctx = route_ctx.unwrap();
         // route consumes reorg (CPU) and conv20 (GPU)
         assert_eq!(ctx.input_cpu_fracs, vec![1.0, 0.0]);
+    }
+
+    #[test]
+    fn per_op_latencies_sum_matches_evaluate() {
+        let g = zoo::yolov2_tiny();
+        let d = dev();
+        let snap = d.snapshot();
+        let p = vec![Placement::GPU; g.num_ops()];
+        let per = per_op_latencies(&g, &p, &d, &snap);
+        assert_eq!(per.len(), g.num_ops());
+        assert!(per.iter().all(|&l| l > 0.0));
+        let sum: f64 = per.iter().sum();
+        let total = evaluate(&g, &p, &d, &snap);
+        assert!((sum - total.latency_s).abs() < 1e-9);
     }
 
     #[test]

@@ -27,32 +27,42 @@ use super::gbdt::{Gbdt, GbdtParams};
 /// One calibration record (single-unit execution, dispatch removed).
 #[derive(Debug, Clone)]
 pub struct Sample {
+    /// Unit the sample executed on.
     pub proc: Proc,
+    /// Operational feature vector (see [`crate::profiler::features`]).
     pub features: Vec<f32>,
-    /// Compute-only energy (J) and latency (s).
+    /// Compute-only energy, joules.
     pub energy_j: f64,
+    /// Compute-only latency, seconds.
     pub latency_s: f64,
 }
 
 /// Per-unit fitted models (targets in log space).
 #[derive(Debug, Clone)]
 pub struct UnitModel {
+    /// log-latency regressor.
     pub latency: Gbdt,
+    /// log-energy regressor.
     pub energy: Gbdt,
 }
 
 /// The offline model pair for both units.
 #[derive(Debug, Clone)]
 pub struct OfflineModel {
+    /// CPU-cluster models.
     pub cpu: UnitModel,
+    /// GPU models.
     pub gpu: UnitModel,
 }
 
 /// Calibration sweep configuration.
 #[derive(Debug, Clone)]
 pub struct CalibConfig {
+    /// Number of sweep samples to generate.
     pub samples: usize,
+    /// Sweep seed.
     pub seed: u64,
+    /// GBDT training hyperparameters.
     pub gbdt: GbdtParams,
 }
 

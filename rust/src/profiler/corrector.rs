@@ -26,6 +26,7 @@ pub trait Corrector {
     fn factor(&self) -> f64;
     /// Reset state (e.g. after a regime change handled elsewhere).
     fn reset(&mut self);
+    /// Corrector name (reports).
     fn name(&self) -> &'static str;
 }
 
@@ -37,6 +38,7 @@ pub struct EwmaCorrector {
 }
 
 impl EwmaCorrector {
+    /// Build with smoothing factor `alpha` (higher = faster tracking).
     pub fn new(alpha: f64) -> Self {
         EwmaCorrector {
             ewma: Ewma::new(alpha),
@@ -103,6 +105,7 @@ pub struct GruCorrector {
 }
 
 impl GruCorrector {
+    /// Build with residual-window length `k` and an inference closure.
     pub fn new(k: usize, infer: GruInferFn) -> Self {
         GruCorrector {
             window: RingBuffer::new(k),

@@ -11,12 +11,19 @@ use crate::util::Prng;
 /// Training hyperparameters.
 #[derive(Debug, Clone)]
 pub struct GbdtParams {
+    /// Boosting rounds.
     pub trees: usize,
+    /// Maximum tree depth.
     pub max_depth: usize,
+    /// Learning rate (shrinkage).
     pub eta: f64,
+    /// Per-tree row subsample fraction.
     pub subsample: f64,
+    /// Minimum rows per leaf.
     pub min_leaf: usize,
+    /// Quantile-binning resolution per feature.
     pub bins: usize,
+    /// Subsampling seed.
     pub seed: u64,
 }
 
@@ -97,7 +104,7 @@ impl Gbdt {
         let edges: Vec<Vec<f32>> = (0..d)
             .map(|j| {
                 let mut col: Vec<f32> = x.iter().map(|r| r[j]).collect();
-                col.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                col.sort_by(f32::total_cmp); // NaN-safe: sorts last
                 col.dedup();
                 if col.len() <= params.bins {
                     // distinct values fit: edges between consecutive values
@@ -162,6 +169,7 @@ impl Gbdt {
                     .sum::<f64>()
     }
 
+    /// Number of fitted trees.
     pub fn num_trees(&self) -> usize {
         self.trees.len()
     }
@@ -182,7 +190,7 @@ impl Gbdt {
 
 fn bin_value(edges: &[f32], v: f32) -> u8 {
     // first edge ≥ v  (edges ascending, ≤ 255 edges)
-    match edges.binary_search_by(|e| e.partial_cmp(&v).unwrap()) {
+    match edges.binary_search_by(|e| e.total_cmp(&v)) {
         Ok(i) => i as u8,
         Err(i) => i as u8,
     }

@@ -28,6 +28,7 @@ impl Default for ResourceMonitor {
 }
 
 impl ResourceMonitor {
+    /// Build with a bounded snapshot history.
     pub fn new(history_len: usize) -> Self {
         ResourceMonitor {
             history: RingBuffer::new(history_len),
@@ -66,6 +67,7 @@ impl ResourceMonitor {
         self.cpu_util_ewma.value().unwrap_or(0.0)
     }
 
+    /// Smoothed GPU utilization.
     pub fn gpu_util_smooth(&self) -> f64 {
         self.gpu_util_ewma.value().unwrap_or(0.0)
     }

@@ -20,6 +20,8 @@ use super::features;
 /// Anything that can predict the cost of executing an op under a placement
 /// given the observable device state.
 pub trait CostModel {
+    /// Predicted cost of executing `op` under `placement` in context
+    /// `ctx` at observable device state `snap`.
     fn predict(
         &self,
         op: &OpNode,
@@ -360,6 +362,7 @@ impl EnergyProfiler {
         self.observations = 0;
     }
 
+    /// Name of the installed corrector (`ewma`, `gru`, `null`).
     pub fn corrector_name(&self) -> &'static str {
         self.corr[0].energy.name()
     }

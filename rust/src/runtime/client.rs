@@ -36,6 +36,7 @@ mod real {
     /// A compiled artifact ready to execute.
     pub struct Compiled {
         exe: xla::PjRtLoadedExecutable,
+        /// Manifest record this executable was compiled from.
         pub entry: ArtifactEntry,
     }
 
@@ -81,6 +82,7 @@ mod real {
     /// The PJRT runtime: client + manifest + executable cache.
     pub struct Runtime {
         client: xla::PjRtClient,
+        /// The parsed artifact manifest.
         pub manifest: Manifest,
         cache: HashMap<String, Compiled>,
     }
@@ -98,6 +100,7 @@ mod real {
             })
         }
 
+        /// PJRT platform name (e.g. `cpu`).
         pub fn platform(&self) -> String {
             self.client.platform_name()
         }
@@ -166,10 +169,12 @@ mod stub {
 
     /// Stub counterpart of the compiled-artifact handle.
     pub struct Compiled {
+        /// Manifest record this handle refers to.
         pub entry: ArtifactEntry,
     }
 
     impl Compiled {
+        /// Always errors: built without the `pjrt` feature.
         pub fn run_f32(&self, _input: &[f32]) -> Result<Vec<f32>> {
             Err(unavailable(&self.entry.name))
         }
@@ -177,27 +182,33 @@ mod stub {
 
     /// Stub runtime: manifests parse (pure rust), execution errors out.
     pub struct Runtime {
+        /// The parsed artifact manifest.
         pub manifest: Manifest,
     }
 
     impl Runtime {
+        /// Load the manifest from `dir` (no PJRT client in the stub).
         pub fn new(dir: &Path) -> Result<Runtime> {
             let manifest = Manifest::load(dir)?;
             Ok(Runtime { manifest })
         }
 
+        /// Placeholder platform string.
         pub fn platform(&self) -> String {
             "unavailable (built without the `pjrt` feature)".to_string()
         }
 
+        /// Always errors: built without the `pjrt` feature.
         pub fn load(&mut self, name: &str) -> Result<&Compiled> {
             Err(unavailable(name))
         }
 
+        /// Always errors: built without the `pjrt` feature.
         pub fn load_prefix(&mut self, prefix: &str) -> Result<usize> {
             Err(unavailable(prefix))
         }
 
+        /// Always errors: built without the `pjrt` feature.
         pub fn run_f32(&mut self, name: &str, _input: &[f32]) -> Result<Vec<f32>> {
             Err(unavailable(name))
         }

@@ -12,16 +12,22 @@ use anyhow::{bail, Context, Result};
 /// One artifact record.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ArtifactEntry {
+    /// Manifest key (e.g. `tiny-exec/conv0`).
     pub name: String,
+    /// HLO text file, relative to the manifest dir.
     pub path: PathBuf,
+    /// Flat input shape.
     pub in_shape: Vec<usize>,
+    /// Flat output shape.
     pub out_shape: Vec<usize>,
 }
 
 impl ArtifactEntry {
+    /// Input element count.
     pub fn in_elems(&self) -> usize {
         self.in_shape.iter().product()
     }
+    /// Output element count.
     pub fn out_elems(&self) -> usize {
         self.out_shape.iter().product()
     }
@@ -31,6 +37,7 @@ impl ArtifactEntry {
 #[derive(Debug, Clone, Default)]
 pub struct Manifest {
     entries: BTreeMap<String, ArtifactEntry>,
+    /// Directory the manifest was loaded from.
     pub dir: PathBuf,
 }
 
@@ -83,18 +90,22 @@ impl Manifest {
         })
     }
 
+    /// Entry by manifest key.
     pub fn get(&self, name: &str) -> Option<&ArtifactEntry> {
         self.entries.get(name)
     }
 
+    /// All manifest keys, sorted.
     pub fn names(&self) -> Vec<&str> {
         self.entries.keys().map(|s| s.as_str()).collect()
     }
 
+    /// Number of entries.
     pub fn len(&self) -> usize {
         self.entries.len()
     }
 
+    /// True when the manifest has no entries.
     pub fn is_empty(&self) -> bool {
         self.entries.is_empty()
     }

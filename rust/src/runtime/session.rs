@@ -21,12 +21,14 @@ pub struct ArtifactExecutor {
 }
 
 impl ArtifactExecutor {
+    /// Load and compile every `tiny-exec/*` artifact up front.
     pub fn new(artifacts_dir: &Path) -> Result<ArtifactExecutor> {
         let mut rt = Runtime::new(artifacts_dir)?;
         rt.load_prefix("tiny-exec/")?; // compile everything up front
         Ok(ArtifactExecutor { rt })
     }
 
+    /// The underlying PJRT runtime.
     pub fn runtime(&mut self) -> &mut Runtime {
         &mut self.rt
     }

@@ -37,6 +37,7 @@ pub struct BackgroundLoad {
 }
 
 impl BackgroundLoad {
+    /// Build an OU load around `mean` with burst episodes of `burst_height`.
     pub fn new(mean: f64, sigma: f64, burst_height: f64) -> Self {
         BackgroundLoad {
             mean,
@@ -83,6 +84,7 @@ impl BackgroundLoad {
         self.level.clamp(0.0, 0.95)
     }
 
+    /// Whether a burst episode is currently active.
     pub fn is_bursting(&self) -> bool {
         self.bursting
     }
@@ -104,6 +106,7 @@ pub struct HiddenDrift {
 }
 
 impl HiddenDrift {
+    /// Build at factor 1 with the given OU sigma.
     pub fn new(sigma: f64) -> Self {
         HiddenDrift {
             log_factor: 0.0,
@@ -112,6 +115,7 @@ impl HiddenDrift {
         }
     }
 
+    /// Advance the OU log-factor by `dt`.
     pub fn step(&mut self, dt: f64, rng: &mut Prng) {
         self.log_factor += -self.theta * self.log_factor * dt
             + self.sigma * dt.sqrt() * rng.normal();

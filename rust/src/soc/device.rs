@@ -32,12 +32,19 @@ use super::transfer::{boundary_bytes, TransferParams};
 /// Full device parameterization (all constants tunable; defaults = SD855).
 #[derive(Debug, Clone)]
 pub struct DeviceConfig {
+    /// CPU-cluster DVFS operating points.
     pub cpu_opps: OppTable,
+    /// GPU DVFS operating points.
     pub gpu_opps: OppTable,
+    /// CPU CMOS power parameters.
     pub cpu_power: PowerParams,
+    /// GPU CMOS power parameters.
     pub gpu_power: PowerParams,
+    /// CPU roofline latency parameters.
     pub cpu_compute: ComputeParams,
+    /// GPU roofline latency parameters.
     pub gpu_compute: ComputeParams,
+    /// CPU↔GPU shared-memory transfer parameters.
     pub transfer: TransferParams,
     /// Lognormal σ of measurement/execution noise.
     pub noise_sigma: f64,
@@ -48,10 +55,12 @@ pub struct DeviceConfig {
     pub thrash: f64,
     /// Split-op synchronization overhead (two command queues join), s.
     pub split_sync_s: f64,
+    /// Simulator noise seed.
     pub seed: u64,
 }
 
 impl DeviceConfig {
+    /// The calibrated Snapdragon-855 parameterization (Xiaomi 9 class).
     pub fn snapdragon_855() -> DeviceConfig {
         DeviceConfig {
             cpu_opps: OppTable::sd855_cpu_big(),
@@ -74,30 +83,46 @@ impl DeviceConfig {
 /// The paper's presets live in [`crate::workload::conditions`].
 #[derive(Debug, Clone)]
 pub struct ConditionSpec {
+    /// Condition name (reports).
     pub name: &'static str,
+    /// Pinned CPU frequency (None = governor-controlled).
     pub cpu_freq_hz: Option<f64>,
+    /// Pinned GPU frequency (None = governor-controlled).
     pub gpu_freq_hz: Option<f64>,
+    /// Mean background CPU utilization.
     pub cpu_bg_mean: f64,
+    /// OU sigma of the background CPU load.
     pub cpu_bg_sigma: f64,
+    /// CPU burst height (added during burst episodes).
     pub cpu_burst: f64,
+    /// Mean background GPU utilization.
     pub gpu_bg_mean: f64,
+    /// OU sigma of the background GPU load.
     pub gpu_bg_sigma: f64,
+    /// GPU burst height.
     pub gpu_burst: f64,
     /// Ambient DRAM-bandwidth contention factor (0,1].
     pub bw_ambient: f64,
+    /// Hidden-drift sigma while this condition holds.
     pub drift_sigma: f64,
 }
 
 /// Observable device state (what `/proc`-style monitoring exposes).
 #[derive(Debug, Clone, Copy)]
 pub struct Snapshot {
+    /// Virtual time of the sample.
     pub time_s: f64,
+    /// Current CPU-cluster frequency.
     pub cpu_freq_hz: f64,
+    /// Current GPU frequency.
     pub gpu_freq_hz: f64,
-    /// Smoothed background utilizations (burst state invisible).
+    /// Smoothed background CPU utilization (burst state invisible).
     pub cpu_util: f64,
+    /// Smoothed background GPU utilization.
     pub gpu_util: f64,
+    /// Die temperature, °C.
     pub temp_c: f64,
+    /// Effective DRAM-bandwidth factor (0,1].
     pub bw_factor: f64,
 }
 
@@ -110,6 +135,7 @@ pub struct ExecCtx {
     /// True when the previous op in this unit's queue was not ours
     /// (pay `dispatch_first` instead of `dispatch_next`).
     pub new_run_cpu: bool,
+    /// Same as `new_run_cpu`, for the GPU queue.
     pub new_run_gpu: bool,
     /// The *other* unit is concurrently busy with other work (bandwidth
     /// contention from concurrent streams).
@@ -136,11 +162,13 @@ pub struct OpCost {
     pub latency_s: f64,
     /// Dynamic energy attributed to the op (compute + transfer), J.
     pub energy_j: f64,
-    /// Busy seconds per unit (for utilization accounting).
+    /// CPU busy seconds (for utilization accounting).
     pub cpu_busy_s: f64,
+    /// GPU busy seconds.
     pub gpu_busy_s: f64,
-    /// Transfer components (included in the totals above).
+    /// Transfer time included in `latency_s`, s.
     pub transfer_s: f64,
+    /// Transfer energy included in `energy_j`, J.
     pub transfer_j: f64,
 }
 
@@ -153,6 +181,7 @@ impl OpCost {
 
 /// The simulated Snapdragon-855 device.
 pub struct Device {
+    /// The parameterization the device was built with.
     pub cfg: DeviceConfig,
     cpu_gov: Governor,
     gpu_gov: Governor,
@@ -167,6 +196,7 @@ pub struct Device {
 }
 
 impl Device {
+    /// Build a device in the idle condition at time 0.
     pub fn new(cfg: DeviceConfig) -> Device {
         let rng = Prng::new(cfg.seed);
         Device {
@@ -201,10 +231,12 @@ impl Device {
         self.condition_name = c.name;
     }
 
+    /// Name of the currently applied workload condition.
     pub fn condition_name(&self) -> &'static str {
         self.condition_name
     }
 
+    /// Current virtual time, seconds.
     pub fn time_s(&self) -> f64 {
         self.time_s
     }

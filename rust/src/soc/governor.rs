@@ -24,6 +24,7 @@ pub struct Governor {
 }
 
 impl Governor {
+    /// Build at the table's top OPP, unpinned.
     pub fn new(table: OppTable) -> Self {
         let idx = table.points.len() - 1;
         Governor {
@@ -47,14 +48,17 @@ impl Governor {
         self.pinned = None;
     }
 
+    /// Current frequency.
     pub fn freq_hz(&self) -> f64 {
         self.table.points[self.idx].freq_hz
     }
 
+    /// Current voltage.
     pub fn volt(&self) -> f64 {
         self.table.points[self.idx].volt
     }
 
+    /// Current operating point.
     pub fn opp(&self) -> super::opp::Opp {
         self.table.points[self.idx]
     }
@@ -80,6 +84,7 @@ impl Governor {
         self.idx = want_idx.min(thermal_cap_idx);
     }
 
+    /// The DVFS table driven by this governor.
     pub fn table(&self) -> &OppTable {
         &self.table
     }
@@ -103,6 +108,7 @@ pub struct Thermal {
 }
 
 impl Thermal {
+    /// SD855-class thermal constants.
     pub fn sd855() -> Thermal {
         Thermal {
             r_th: 7.0,
@@ -121,6 +127,7 @@ impl Thermal {
         self.temp += (target - self.temp) * a;
     }
 
+    /// Current junction temperature, °C.
     pub fn temp_c(&self) -> f64 {
         self.temp
     }

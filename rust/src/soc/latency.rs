@@ -50,6 +50,7 @@ impl ComputeParams {
         }
     }
 
+    /// The SD855 parameters for `p`.
     pub fn for_proc(p: Proc) -> ComputeParams {
         match p {
             Proc::Cpu => ComputeParams::sd855_cpu(),
@@ -85,6 +86,7 @@ pub fn efficiency(op: &OpNode, proc: Proc) -> f64 {
 /// Inputs describing the unit's instantaneous condition.
 #[derive(Debug, Clone, Copy)]
 pub struct UnitCondition {
+    /// Current clock frequency, Hz.
     pub freq_hz: f64,
     /// Fraction of the unit's capacity stolen by background work, [0,1).
     pub bg_util: f64,

@@ -9,17 +9,21 @@
 /// One operating point.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Opp {
+    /// Clock frequency, Hz.
     pub freq_hz: f64,
+    /// Supply voltage, volts.
     pub volt: f64,
 }
 
 /// A processor's DVFS table (ascending frequency).
 #[derive(Debug, Clone)]
 pub struct OppTable {
+    /// Operating points, ascending in frequency.
     pub points: Vec<Opp>,
 }
 
 impl OppTable {
+    /// Build, asserting frequencies ascend and voltage is monotone.
     pub fn new(points: Vec<Opp>) -> Self {
         assert!(!points.is_empty());
         for w in points.windows(2) {
@@ -61,10 +65,12 @@ impl OppTable {
         )
     }
 
+    /// Lowest operating point.
     pub fn min(&self) -> Opp {
         self.points[0]
     }
 
+    /// Highest operating point.
     pub fn max(&self) -> Opp {
         *self.points.last().unwrap()
     }

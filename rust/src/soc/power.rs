@@ -41,6 +41,7 @@ impl PowerParams {
         }
     }
 
+    /// The SD855 parameters for `p`.
     pub fn for_proc(p: Proc) -> PowerParams {
         match p {
             Proc::Cpu => PowerParams::sd855_cpu(),

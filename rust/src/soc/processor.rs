@@ -15,8 +15,10 @@ pub enum Proc {
 }
 
 impl Proc {
+    /// Both units, in index order.
     pub const ALL: [Proc; 2] = [Proc::Cpu, Proc::Gpu];
 
+    /// Dense index (CPU = 0, GPU = 1) for per-proc arrays.
     pub fn index(self) -> usize {
         match self {
             Proc::Cpu => 0,
@@ -24,6 +26,7 @@ impl Proc {
         }
     }
 
+    /// Lowercase name (reports).
     pub fn name(self) -> &'static str {
         match self {
             Proc::Cpu => "cpu",
@@ -45,6 +48,7 @@ impl fmt::Display for Proc {
 /// the rest on the GPU, synchronized at the end of the op.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum Placement {
+    /// The whole op on one unit.
     Single(Proc),
     Split {
         /// Fraction of the op's work done on the CPU, in (0, 1).
@@ -53,7 +57,9 @@ pub enum Placement {
 }
 
 impl Placement {
+    /// The whole op on the CPU cluster.
     pub const CPU: Placement = Placement::Single(Proc::Cpu);
+    /// The whole op on the GPU.
     pub const GPU: Placement = Placement::Single(Proc::Gpu);
 
     /// Fraction of the op's work executed on `p`.

@@ -19,6 +19,7 @@ pub struct TransferParams {
 }
 
 impl TransferParams {
+    /// SD855-class shared-memory transfer constants.
     pub fn sd855() -> TransferParams {
         TransferParams {
             map_overhead_s: 80e-6,

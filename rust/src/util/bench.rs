@@ -9,16 +9,20 @@ use super::stats::Summary;
 /// Result of one benchmark case.
 #[derive(Debug, Clone)]
 pub struct BenchResult {
+    /// Case name.
     pub name: String,
+    /// Iterations measured.
     pub iters: usize,
     /// Per-iteration wall time, seconds.
     pub summary: Summary,
 }
 
 impl BenchResult {
+    /// Mean per-iteration time, milliseconds.
     pub fn mean_ms(&self) -> f64 {
         self.summary.mean * 1e3
     }
+    /// Mean per-iteration time, microseconds.
     pub fn mean_us(&self) -> f64 {
         self.summary.mean * 1e6
     }
@@ -44,6 +48,7 @@ impl Default for Bencher {
 }
 
 impl Bencher {
+    /// Build with a warmup phase and a per-case measurement budget.
     pub fn new(warmup: Duration, budget: Duration) -> Self {
         Bencher {
             warmup,

@@ -6,13 +6,19 @@ use std::fmt;
 use std::sync::atomic::{AtomicU8, Ordering};
 use std::time::Instant;
 
+/// Log verbosity, ascending.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 #[repr(u8)]
 pub enum Level {
+    /// Unrecoverable problems.
     Error = 0,
+    /// Suspicious but survivable conditions.
     Warn = 1,
+    /// Progress messages (default).
     Info = 2,
+    /// Verbose diagnostics (`--verbose`).
     Debug = 3,
+    /// Firehose.
     Trace = 4,
 }
 
@@ -78,14 +84,19 @@ pub fn log(l: Level, module: &str, args: fmt::Arguments<'_>) {
     eprintln!("[{t:10.4}s {l} {module}] {args}");
 }
 
+/// Log at `error` level with `format!` syntax.
 #[macro_export]
 macro_rules! log_error { ($($a:tt)*) => { $crate::util::logger::log($crate::util::logger::Level::Error, module_path!(), format_args!($($a)*)) } }
+/// Log at `warn` level with `format!` syntax.
 #[macro_export]
 macro_rules! log_warn { ($($a:tt)*) => { $crate::util::logger::log($crate::util::logger::Level::Warn, module_path!(), format_args!($($a)*)) } }
+/// Log at `info` level with `format!` syntax.
 #[macro_export]
 macro_rules! log_info { ($($a:tt)*) => { $crate::util::logger::log($crate::util::logger::Level::Info, module_path!(), format_args!($($a)*)) } }
+/// Log at `debug` level with `format!` syntax.
 #[macro_export]
 macro_rules! log_debug { ($($a:tt)*) => { $crate::util::logger::log($crate::util::logger::Level::Debug, module_path!(), format_args!($($a)*)) } }
+/// Log at `trace` level with `format!` syntax.
 #[macro_export]
 macro_rules! log_trace { ($($a:tt)*) => { $crate::util::logger::log($crate::util::logger::Level::Trace, module_path!(), format_args!($($a)*)) } }
 

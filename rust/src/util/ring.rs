@@ -44,18 +44,22 @@ impl<T: Clone> RingBuffer<T> {
         }
     }
 
+    /// Number of stored elements.
     pub fn len(&self) -> usize {
         self.len
     }
 
+    /// True when nothing is stored.
     pub fn is_empty(&self) -> bool {
         self.len == 0
     }
 
+    /// True when the next push will evict.
     pub fn is_full(&self) -> bool {
         self.len == self.cap
     }
 
+    /// Maximum elements held.
     pub fn capacity(&self) -> usize {
         self.cap
     }
@@ -88,6 +92,7 @@ impl<T: Clone> RingBuffer<T> {
         self.iter().cloned().collect()
     }
 
+    /// Drop all elements.
     pub fn clear(&mut self) {
         self.buf.clear();
         self.head = 0;

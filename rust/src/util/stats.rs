@@ -5,13 +5,21 @@
 /// Summary statistics of a sample.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Summary {
+    /// Sample count.
     pub count: usize,
+    /// Arithmetic mean.
     pub mean: f64,
+    /// Population standard deviation.
     pub std: f64,
+    /// Smallest sample.
     pub min: f64,
+    /// Largest sample.
     pub max: f64,
+    /// Median.
     pub p50: f64,
+    /// 90th percentile.
     pub p90: f64,
+    /// 99th percentile.
     pub p99: f64,
 }
 
@@ -22,7 +30,7 @@ impl Summary {
             return None;
         }
         let mut sorted: Vec<f64> = xs.to_vec();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sorted.sort_by(f64::total_cmp); // NaN-safe: sorts last, never panics
         let mean = sorted.iter().sum::<f64>() / sorted.len() as f64;
         let var = sorted.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
             / sorted.len() as f64;
@@ -56,7 +64,7 @@ pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
 /// Percentile of an unsorted slice (copies + sorts).
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     let mut sorted = xs.to_vec();
-    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    sorted.sort_by(f64::total_cmp); // NaN-safe: sorts last, never panics
     percentile_sorted(&sorted, p)
 }
 
@@ -116,10 +124,12 @@ pub struct Welford {
 }
 
 impl Welford {
+    /// Empty accumulator.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Add one sample.
     pub fn push(&mut self, x: f64) {
         self.n += 1;
         let delta = x - self.mean;
@@ -127,10 +137,12 @@ impl Welford {
         self.m2 += delta * (x - self.mean);
     }
 
+    /// Samples seen.
     pub fn count(&self) -> usize {
         self.n
     }
 
+    /// Running mean (0 before any sample).
     pub fn mean(&self) -> f64 {
         self.mean
     }
@@ -144,6 +156,7 @@ impl Welford {
         }
     }
 
+    /// Population standard deviation.
     pub fn std(&self) -> f64 {
         self.variance().sqrt()
     }
@@ -164,6 +177,7 @@ impl Ewma {
         Ewma { alpha, value: None }
     }
 
+    /// Fold in one observation and return the new average.
     pub fn push(&mut self, x: f64) -> f64 {
         let v = match self.value {
             None => x,
@@ -173,6 +187,7 @@ impl Ewma {
         v
     }
 
+    /// Current average (None before any observation).
     pub fn value(&self) -> Option<f64> {
         self.value
     }
@@ -190,6 +205,17 @@ mod tests {
         assert_eq!(s.min, 1.0);
         assert_eq!(s.max, 5.0);
         assert!((s.p50 - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn nan_input_sorts_last_instead_of_panicking() {
+        // regression: the comparators used `partial_cmp(..).unwrap()`,
+        // which panicked on NaN; total_cmp sorts NaN after every number
+        let p = percentile(&[1.0, f64::NAN, 0.5], 50.0);
+        assert_eq!(p, 1.0);
+        let s = Summary::of(&[0.5, f64::NAN, 1.0]).unwrap();
+        assert_eq!(s.p50, 1.0);
+        assert_eq!(s.min, 0.5);
     }
 
     #[test]

@@ -7,12 +7,21 @@ use crate::util::Prng;
 #[derive(Debug, Clone)]
 pub enum Arrival {
     /// Poisson with mean rate `hz`.
-    Poisson { hz: f64 },
+    Poisson {
+        /// Mean arrival rate, Hz.
+        hz: f64,
+    },
     /// Strictly periodic at `hz` with optional jitter fraction.
-    Periodic { hz: f64, jitter: f64 },
+    Periodic {
+        /// Frame rate, Hz.
+        hz: f64,
+        /// Uniform jitter as a fraction of the period.
+        jitter: f64,
+    },
 }
 
 impl Arrival {
+    /// Parse a process kind (`poisson` | `periodic`) at mean rate `hz`.
     pub fn parse(kind: &str, hz: f64) -> Option<Arrival> {
         match kind {
             "poisson" => Some(Arrival::Poisson { hz }),
@@ -45,6 +54,7 @@ impl Arrival {
         }
     }
 
+    /// Mean arrival rate.
     pub fn rate_hz(&self) -> f64 {
         match *self {
             Arrival::Poisson { hz } | Arrival::Periodic { hz, .. } => hz,

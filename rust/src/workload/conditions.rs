@@ -15,6 +15,7 @@ use crate::soc::device::ConditionSpec;
 /// Named condition preset.
 #[derive(Debug, Clone)]
 pub struct WorkloadCondition {
+    /// The full device-facing condition specification.
     pub spec: ConditionSpec,
 }
 
@@ -76,6 +77,7 @@ impl WorkloadCondition {
         }
     }
 
+    /// Preset by name (`idle` | `moderate` | `high`).
     pub fn by_name(name: &str) -> Option<WorkloadCondition> {
         match name {
             "idle" => Some(WorkloadCondition::idle()),
@@ -85,6 +87,7 @@ impl WorkloadCondition {
         }
     }
 
+    /// Preset name.
     pub fn name(&self) -> &'static str {
         self.spec.name
     }

@@ -6,17 +6,21 @@ use super::conditions::WorkloadCondition;
 /// One phase of a trace.
 #[derive(Debug, Clone)]
 pub struct Phase {
+    /// Condition held during this phase.
     pub condition: WorkloadCondition,
+    /// Phase length, seconds.
     pub duration_s: f64,
 }
 
 /// A piecewise-constant condition trace.
 #[derive(Debug, Clone)]
 pub struct ConditionTrace {
+    /// Phases in play order.
     pub phases: Vec<Phase>,
 }
 
 impl ConditionTrace {
+    /// Build from non-empty phases with positive durations.
     pub fn new(phases: Vec<Phase>) -> Self {
         assert!(!phases.is_empty());
         assert!(phases.iter().all(|p| p.duration_s > 0.0));
@@ -59,6 +63,7 @@ impl ConditionTrace {
         ])
     }
 
+    /// Sum of all phase durations.
     pub fn total_duration_s(&self) -> f64 {
         self.phases.iter().map(|p| p.duration_s).sum()
     }

@@ -57,6 +57,7 @@ fn row(
             repartitions: 0,
             partition_overhead_s: 0.0,
             plan_cache: None,
+            sched: None,
         },
     }
 }
