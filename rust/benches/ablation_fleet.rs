@@ -1,0 +1,34 @@
+//! Bench A8: fleet scale sweep — the sharded fleet simulator at growing
+//! device counts (heterogeneous device-class zoo) under each dispatch
+//! policy, reporting fleet-wide and budget-class tail latency, deadline
+//! misses, and energy per request.
+
+use adaoper::experiments::fleet_scenario::{self, FleetSweepConfig};
+use adaoper::profiler::calibrate::CalibConfig;
+use adaoper::profiler::gbdt::GbdtParams;
+
+fn main() {
+    let quick = std::env::var("ADAOPER_BENCH_QUICK").is_ok();
+    let calib = CalibConfig {
+        samples: if quick { 1500 } else { 4000 },
+        seed: 7,
+        gbdt: GbdtParams {
+            trees: if quick { 40 } else { 100 },
+            ..Default::default()
+        },
+    };
+    let cfg = FleetSweepConfig {
+        device_counts: if quick {
+            vec![10, 50]
+        } else {
+            vec![10, 100, 1000]
+        },
+        duration_s: if quick { 1.0 } else { 1.5 },
+        threads: 8,
+        calib,
+        ..Default::default()
+    };
+    println!("== A8: fleet scale sweep (device zoo × dispatch policy) ==");
+    let rows = fleet_scenario::run(&cfg).unwrap();
+    print!("{}", fleet_scenario::render(&rows));
+}

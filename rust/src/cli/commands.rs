@@ -35,15 +35,21 @@ COMMANDS
       [--admission admit-all|drop-late|bounded] [--queue-limit N]
       [--plan-cache-cap N] [--plan-cache-freq-bucket-mhz MHZ]
       [--plan-cache-util-bucket X]
+  fleet                       simulate a heterogeneous device fleet
+      [--config F] [--devices N] [--threads T] [--seed S] [--duration S]
+      [--scheduler fifo|edf|slack-reclaim] [--policy P] [--quick]
+      [--admission admit-all|drop-late|bounded] [--queue-limit N]
   fig2 [--requests N]         reproduce the paper's Figure 2
   calibrate [--samples N]     run the offline calibration sweep and report
                               held-out accuracy
-  ablation <a1|..|a5|cache|scheduler>  run one ablation experiment
+  ablation <a1|..|a8|cache|scheduler|fleet>  run one ablation experiment
                               (`cache`, alias `a6`: plan-cache hit rate on
                               the bursty recurring-condition trace;
                               `scheduler`, alias `a7`: overload sweep
                               comparing fifo/edf/slack-reclaim dispatch
-                              [--duration S] [--seed N])
+                              [--duration S] [--seed N];
+                              `fleet`, alias `a8`: scale sweep over device
+                              counts × dispatch policy [--threads T])
   help                        this text
 
 COMMON OPTIONS
@@ -82,6 +88,7 @@ pub fn run(argv: &[String]) -> Result<()> {
         "zoo" => cmd_zoo(&args),
         "partition" => cmd_partition(&args),
         "serve" => cmd_serve(&args),
+        "fleet" => cmd_fleet(&args),
         "fig2" => cmd_fig2(&args),
         "calibrate" => cmd_calibrate(&args),
         "ablation" => cmd_ablation(&args),
@@ -259,6 +266,46 @@ fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_fleet(args: &Args) -> Result<()> {
+    let cfg = AppConfig::load(args.get("config").map(Path::new))?;
+    let devices = args.usize_or("devices", cfg.fleet.devices)?;
+    let threads = args.usize_or("threads", cfg.fleet.threads)?;
+    let seed = args.u64_or("seed", cfg.fleet.seed)?;
+    let duration_s = args.f64_or("duration", cfg.fleet.duration_s)?;
+    let scheduler = match args.get("scheduler") {
+        Some(s) => SchedulerKind::parse(s)?,
+        None => cfg.fleet.scheduler,
+    };
+    let admission = match args.get("admission") {
+        Some(a) => AdmissionKind::parse(a)?,
+        None => cfg.fleet.admission,
+    };
+    let queue_limit = args.usize_or("queue-limit", cfg.fleet.queue_limit)?;
+    anyhow::ensure!(queue_limit >= 1, "--queue-limit must be >= 1");
+    let policy = match args.get("policy") {
+        Some(p) => PolicyKind::parse(p)?,
+        None => PolicyKind::AdaOper,
+    };
+    let fcfg = crate::fleet::FleetRunConfig {
+        devices,
+        threads,
+        seed,
+        duration_s,
+        policy,
+        scheduler,
+        admission: AdmissionPolicy::from_kind(admission, queue_limit),
+        calib: calib_of(args)?,
+        ..Default::default()
+    };
+    println!(
+        "simulating {devices} devices (seed {seed}, {duration_s:.1}s horizon; \
+         calibrating per-class profilers) …"
+    );
+    let report = crate::fleet::run_fleet(&fcfg)?;
+    print!("{}", report.render());
+    Ok(())
+}
+
 fn cmd_fig2(args: &Args) -> Result<()> {
     let cfg = fig2::Fig2Config {
         model: args.str_or("model", "yolov2"),
@@ -410,7 +457,20 @@ fn cmd_ablation(args: &Args) -> Result<()> {
             let res = scheduler_scenario::run(&cfg)?;
             print!("{}", scheduler_scenario::render(&res));
         }
-        other => bail!("unknown ablation `{other}` (a1..a7|cache|scheduler)"),
+        "fleet" | "a8" => {
+            use crate::experiments::fleet_scenario;
+            let cfg = fleet_scenario::FleetSweepConfig {
+                seed,
+                calib,
+                threads: args.usize_or("threads", 4)?,
+                duration_s: args.f64_or("duration", 1.5)?,
+                ..Default::default()
+            };
+            println!("== A8: fleet scale sweep (device classes × dispatch policy) ==");
+            let rows = fleet_scenario::run(&cfg)?;
+            print!("{}", fleet_scenario::render(&rows));
+        }
+        other => bail!("unknown ablation `{other}` (a1..a8|cache|scheduler|fleet)"),
     }
     Ok(())
 }

@@ -292,6 +292,40 @@ impl Default for PartitionConfig {
     }
 }
 
+/// Fleet-simulation configuration (`[fleet]`; see [`crate::fleet`]).
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    /// Number of simulated devices.
+    pub devices: usize,
+    /// Worker threads the sharded runner uses (never affects results).
+    pub threads: usize,
+    /// Fleet seed; per-device seeds derive from it via splitmix64.
+    pub seed: u64,
+    /// Arrival horizon per device, virtual seconds.
+    pub duration_s: f64,
+    /// Dispatch policy every device's engine runs.
+    pub scheduler: SchedulerKind,
+    /// Admission-control policy in front of every device's queue.
+    pub admission: AdmissionKind,
+    /// Per-stream in-flight bound used by `admission = "bounded"` (owned
+    /// here, not inherited from `[serve]`).
+    pub queue_limit: usize,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            devices: 50,
+            threads: 4,
+            seed: 7,
+            duration_s: 2.0,
+            scheduler: SchedulerKind::Edf,
+            admission: AdmissionKind::AdmitAll,
+            queue_limit: 32,
+        }
+    }
+}
+
 /// Top-level application configuration.
 #[derive(Debug, Clone, Default)]
 pub struct AppConfig {
@@ -301,6 +335,8 @@ pub struct AppConfig {
     pub profiler: ProfilerConfig,
     /// Partitioner section (`[partition]`).
     pub partition: PartitionConfig,
+    /// Fleet-simulation section (`[fleet]`).
+    pub fleet: FleetConfig,
     /// Directory holding `*.hlo.txt` artifacts.
     pub artifacts_dir: String,
 }
@@ -401,6 +437,31 @@ impl AppConfig {
             bail!("partition.plan_cache_util_bucket must be > 0");
         }
 
+        let devices = v.int_or("fleet.devices", cfg.fleet.devices as i64);
+        if devices < 1 {
+            bail!("fleet.devices must be >= 1");
+        }
+        cfg.fleet.devices = devices as usize;
+        let threads = v.int_or("fleet.threads", cfg.fleet.threads as i64);
+        if !(1..=256).contains(&threads) {
+            bail!("fleet.threads must be in 1..=256");
+        }
+        cfg.fleet.threads = threads as usize;
+        cfg.fleet.seed = v.int_or("fleet.seed", cfg.fleet.seed as i64) as u64;
+        cfg.fleet.duration_s = v.float_or("fleet.duration_s", cfg.fleet.duration_s);
+        if cfg.fleet.duration_s <= 0.0 {
+            bail!("fleet.duration_s must be > 0");
+        }
+        cfg.fleet.scheduler =
+            SchedulerKind::parse(&v.str_or("fleet.scheduler", cfg.fleet.scheduler.name()))?;
+        cfg.fleet.admission =
+            AdmissionKind::parse(&v.str_or("fleet.admission", cfg.fleet.admission.name()))?;
+        let fleet_limit = v.int_or("fleet.queue_limit", cfg.fleet.queue_limit as i64);
+        if fleet_limit < 1 {
+            bail!("fleet.queue_limit must be >= 1");
+        }
+        cfg.fleet.queue_limit = fleet_limit as usize;
+
         Ok(cfg)
     }
 
@@ -430,6 +491,9 @@ mod tests {
         assert_eq!(cfg.serve.admission, AdmissionKind::AdmitAll);
         assert_eq!(cfg.serve.queue_limit, 32);
         assert_eq!(cfg.profiler.gbdt_trees, 120);
+        assert_eq!(cfg.fleet.devices, 50);
+        assert_eq!(cfg.fleet.threads, 4);
+        assert_eq!(cfg.fleet.scheduler, SchedulerKind::Edf);
     }
 
     #[test]
@@ -498,6 +562,34 @@ mod tests {
             AppConfig::from_value(&off).unwrap().partition.plan_cache_capacity,
             0
         );
+    }
+
+    #[test]
+    fn fleet_section_decodes_and_validates() {
+        let v = toml::parse(
+            "[fleet]\ndevices = 200\nthreads = 8\nseed = 42\nduration_s = 1.5\nscheduler = \"fifo\"\nadmission = \"drop-late\"\n",
+        )
+        .unwrap();
+        let cfg = AppConfig::from_value(&v).unwrap();
+        assert_eq!(cfg.fleet.devices, 200);
+        assert_eq!(cfg.fleet.threads, 8);
+        assert_eq!(cfg.fleet.seed, 42);
+        assert_eq!(cfg.fleet.duration_s, 1.5);
+        assert_eq!(cfg.fleet.scheduler, SchedulerKind::Fifo);
+        assert_eq!(cfg.fleet.admission, AdmissionKind::DropLate);
+        assert_eq!(cfg.fleet.queue_limit, 32); // owned default, not [serve]'s
+        for bad in [
+            "[fleet]\ndevices = 0\n",
+            "[fleet]\nthreads = 0\n",
+            "[fleet]\nthreads = 9999\n",
+            "[fleet]\nduration_s = 0.0\n",
+            "[fleet]\nscheduler = \"lifo\"\n",
+            "[fleet]\nadmission = \"maybe\"\n",
+            "[fleet]\nqueue_limit = 0\n",
+        ] {
+            let v = toml::parse(bad).unwrap();
+            assert!(AppConfig::from_value(&v).is_err(), "accepted {bad:?}");
+        }
     }
 
     #[test]

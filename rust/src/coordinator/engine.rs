@@ -18,16 +18,18 @@ use anyhow::{bail, Result};
 
 use crate::config::schema::{ConditionKind, PolicyKind, SchedulerKind};
 use crate::graph::{ModelGraph, OpNode};
-use crate::metrics::{EnergyAccount, LatencyRecorder, PlanCacheStats, SchedStats, ServingReport};
+use crate::metrics::{
+    EnergyAccount, LatencyRecorder, LogHistogram, PlanCacheStats, SchedStats, ServingReport,
+};
 use crate::partition::baselines::by_policy;
 use crate::partition::dp::DpPartitioner;
 use crate::partition::incremental::IncrementalRepartitioner;
 use crate::partition::plan::{Objective, Partitioner, Plan, INPUT_CPU_FRAC};
-use crate::profiler::calibrate::{calibrate, CalibConfig};
+use crate::profiler::calibrate::{calibrate_on, CalibConfig};
 use crate::profiler::corrector::{Corrector, EwmaCorrector};
 use crate::profiler::monitor::ResourceMonitor;
 use crate::profiler::{CostModel, EnergyProfiler};
-use crate::soc::device::{Device, DeviceConfig, ExecCtx};
+use crate::soc::device::{ConditionSpec, Device, DeviceConfig, ExecCtx};
 use crate::soc::{Placement, Proc};
 use crate::util::Prng;
 use crate::workload::WorkloadCondition;
@@ -79,6 +81,16 @@ pub struct EngineConfig {
     pub scheduler: SchedulerKind,
     /// Admission control in front of the queue.
     pub admission: AdmissionPolicy,
+    /// Device parameterization the simulator runs (the fleet layer's
+    /// device-class zoo overrides this; `cfg.seed` still controls noise).
+    pub device_cfg: DeviceConfig,
+    /// Explicit initial condition specification; when set it replaces the
+    /// `condition` preset at construction (fleet runs pass class-scaled
+    /// specs so a budget device never pins a flagship clock).
+    pub condition_spec: Option<ConditionSpec>,
+    /// Label identifying the simulated device in reports (fleet runs);
+    /// `None` keeps single-device report output unchanged.
+    pub device_label: Option<String>,
 }
 
 impl Default for EngineConfig {
@@ -98,6 +110,9 @@ impl Default for EngineConfig {
             plan_cache: PlanCacheConfig::default(),
             scheduler: SchedulerKind::Fifo,
             admission: AdmissionPolicy::AdmitAll,
+            device_cfg: DeviceConfig::snapdragon_855(),
+            condition_spec: None,
+            device_label: None,
         }
     }
 }
@@ -167,9 +182,10 @@ pub struct Engine {
 }
 
 impl Engine {
-    /// Build an engine, fitting a fresh profiler from `cfg.calib`.
+    /// Build an engine, fitting a fresh profiler from `cfg.calib` against
+    /// the device the engine will actually simulate (`cfg.device_cfg`).
     pub fn new(cfg: EngineConfig) -> Engine {
-        let offline = calibrate(&cfg.calib);
+        let offline = calibrate_on(&cfg.calib, &cfg.device_cfg);
         let profiler = if cfg.use_corrector {
             EnergyProfiler::with_correctors(offline, || Box::new(EwmaCorrector::default()))
         } else {
@@ -183,10 +199,12 @@ impl Engine {
     pub fn with_profiler(cfg: EngineConfig, profiler: EnergyProfiler) -> Engine {
         let mut device = Device::new(DeviceConfig {
             seed: cfg.seed ^ 0x5EED,
-            ..DeviceConfig::snapdragon_855()
+            ..cfg.device_cfg.clone()
         });
-        let cond = WorkloadCondition::by_name(cfg.condition.name()).unwrap();
-        device.apply_condition(&cond.spec);
+        let cond_spec = cfg.condition_spec.clone().unwrap_or_else(|| {
+            WorkloadCondition::by_name(cfg.condition.name()).unwrap().spec
+        });
+        device.apply_condition(&cond_spec);
         let policy = by_policy(cfg.policy, cfg.objective);
         let controller = RepartitionController::new(
             IncrementalRepartitioner::new(
@@ -210,7 +228,7 @@ impl Engine {
 
     /// Replace the profiler's correctors (e.g. wiring real GRU artifacts).
     pub fn set_correctors<F: FnMut() -> Box<dyn Corrector>>(&mut self, make: F) {
-        let offline = calibrate(&self.cfg.calib);
+        let offline = calibrate_on(&self.cfg.calib, &self.cfg.device_cfg);
         self.profiler = EnergyProfiler::with_correctors(offline, make);
     }
 
@@ -396,11 +414,13 @@ impl Engine {
         Ok(ServingReport {
             policy: self.policy.name().to_string(),
             condition: self.device.condition_name().to_string(),
+            device: self.cfg.device_label.clone(),
             models: vec![g.name.clone()],
             duration_s: wall,
             requests: n_requests,
             throughput_hz: n_requests as f64 / wall,
             latency: latencies.summary(),
+            latency_hist: Some(LogHistogram::latency_of(latencies.samples())),
             queue: None,
             miss_rate: latencies.miss_rate(),
             total_energy_j: energy.total_j(self.device.static_power_w(), wall),
@@ -695,11 +715,13 @@ impl Engine {
         let report = ServingReport {
             policy: self.policy.name().to_string(),
             condition: self.device.condition_name().to_string(),
+            device: self.cfg.device_label.clone(),
             models: streams.iter().map(|s| s.model.name.clone()).collect(),
             duration_s: wall,
             requests: outcomes.len(),
             throughput_hz: outcomes.len() as f64 / wall,
             latency: latencies.summary(),
+            latency_hist: Some(LogHistogram::latency_of(latencies.samples())),
             queue: latencies.queue_summary(),
             miss_rate: latencies.miss_rate(),
             total_energy_j: energy.total_j(self.device.static_power_w(), wall),

@@ -175,11 +175,15 @@ impl LiveSession {
         let report = ServingReport {
             policy: plan.policy.clone(),
             condition: device.condition_name().to_string(),
+            device: None,
             models: vec![g.name.clone()],
             duration_s: wall,
             requests: n_requests,
             throughput_hz: n_requests as f64 / wall.max(1e-9),
             latency: latencies.summary(),
+            latency_hist: Some(crate::metrics::LogHistogram::latency_of(
+                latencies.samples(),
+            )),
             queue: latencies.queue_summary(),
             miss_rate: 0.0,
             total_energy_j: energy.total_j(device.static_power_w(), wall),

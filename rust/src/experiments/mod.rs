@@ -13,8 +13,10 @@
 //! | A5  | [`ablations::concurrency_scaling`]| 1–4 concurrent model streams    |
 //! | A6  | [`cache_scenario::run`]         | plan-cache hit rate, bursty trace  |
 //! | A7  | [`scheduler_scenario::run`]     | scheduler overload sweep (SLOs)    |
+//! | A8  | [`fleet_scenario::run`]         | fleet scale sweep (device classes) |
 
 pub mod ablations;
 pub mod cache_scenario;
 pub mod fig2;
+pub mod fleet_scenario;
 pub mod scheduler_scenario;

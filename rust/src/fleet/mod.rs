@@ -1,0 +1,24 @@
+//! Fleet-scale serving simulation: evaluate the planner, scheduler, and
+//! plan cache across a *population* of heterogeneous devices instead of a
+//! single Snapdragon 855.
+//!
+//! * [`zoo`] — the device-class zoo (flagship / midrange / budget
+//!   [`crate::soc::device::DeviceConfig`] tiers) and the seeded sampler
+//!   that assigns each simulated device a class, workload condition, and
+//!   stream/SLO profile.
+//! * [`runner`] — the sharded runner: partitions N devices across
+//!   [`crate::util::pool::ThreadPool`] workers (per-device seeds derived
+//!   via splitmix64 from one fleet seed, so results are bit-identical
+//!   regardless of thread count) and merges per-device
+//!   [`crate::metrics::ServingReport`]s into a [`FleetReport`] using the
+//!   mergeable histograms in [`crate::metrics::histogram`].
+//!
+//! Entry points: `adaoper fleet --devices N --threads T --seed S`, the
+//! `[fleet]` config section, and the scale sweep in
+//! [`crate::experiments::fleet_scenario`] (`adaoper ablation fleet`).
+
+pub mod runner;
+pub mod zoo;
+
+pub use runner::{run_fleet, ClassAgg, FleetReport, FleetRunConfig};
+pub use zoo::{device_seed, sample_fleet, DeviceClass, DeviceSpec, FleetMix};

@@ -1,0 +1,437 @@
+//! Device-class zoo: the hardware tiers a production fleet actually spans,
+//! plus the seeded sampler that assigns each simulated device a class, a
+//! workload condition, and a stream/SLO profile.
+//!
+//! Real deployments are not a lab full of Snapdragon 855s: SoC tiers,
+//! thermal envelopes and background-load regimes vary wildly across the
+//! installed base ("Smart at what cost?", Almeida et al.), and the
+//! energy/latency trade-offs the planner exploits invert across hardware
+//! (Liu et al.). Three calibrated tiers cover that spread:
+//!
+//! * **flagship** — the paper's Snapdragon-855 parameterization, verbatim.
+//! * **midrange** — SD7-series class: ~0.8× clocks, half the NEON width,
+//!   a much narrower GPU, slower shared-memory path.
+//! * **budget** — entry class: ~0.6× clocks, quarter-width SIMD, a small
+//!   GPU that barely beats the CPU, contended DRAM.
+//!
+//! Determinism contract: every per-device quantity is derived from the
+//! fleet seed through [`device_seed`] (a `splitmix64` jump to the device's
+//! index), so a fleet sample is reproducible from `(seed, index)` alone,
+//! independent of device count prefixes or runner thread count.
+
+use anyhow::{bail, Result};
+
+use crate::config::schema::ConditionKind;
+use crate::soc::device::{ConditionSpec, DeviceConfig};
+use crate::soc::latency::ComputeParams;
+use crate::soc::opp::{Opp, OppTable};
+use crate::soc::power::PowerParams;
+use crate::soc::transfer::TransferParams;
+use crate::util::prng::{splitmix64, Prng, SPLITMIX64_GAMMA};
+use crate::workload::WorkloadCondition;
+
+/// Hardware tier of a simulated device.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DeviceClass {
+    /// Snapdragon-855 class (the paper's testbed).
+    Flagship,
+    /// SD7-series class: scaled clocks, narrower compute.
+    MidRange,
+    /// Entry class: slow clocks, small GPU, contended memory.
+    Budget,
+}
+
+impl DeviceClass {
+    /// Every class, in the fixed order reports print them.
+    pub fn all() -> [DeviceClass; 3] {
+        [DeviceClass::Flagship, DeviceClass::MidRange, DeviceClass::Budget]
+    }
+
+    /// Canonical spelling.
+    pub fn name(&self) -> &'static str {
+        match self {
+            DeviceClass::Flagship => "flagship",
+            DeviceClass::MidRange => "midrange",
+            DeviceClass::Budget => "budget",
+        }
+    }
+
+    /// Parse a CLI/TOML spelling.
+    pub fn parse(s: &str) -> Result<DeviceClass> {
+        Ok(match s {
+            "flagship" => DeviceClass::Flagship,
+            "midrange" | "mid-range" | "mid" => DeviceClass::MidRange,
+            "budget" => DeviceClass::Budget,
+            other => bail!("unknown device class `{other}` (flagship|midrange|budget)"),
+        })
+    }
+
+    /// Stable index (flagship 0, midrange 1, budget 2) for array-keyed
+    /// per-class state (offline models, aggregates).
+    pub fn index(&self) -> usize {
+        match self {
+            DeviceClass::Flagship => 0,
+            DeviceClass::MidRange => 1,
+            DeviceClass::Budget => 2,
+        }
+    }
+
+    /// CPU frequency scale relative to the flagship OPP table.
+    fn cpu_freq_scale(&self) -> f64 {
+        match self {
+            DeviceClass::Flagship => 1.0,
+            DeviceClass::MidRange => 0.80,
+            DeviceClass::Budget => 0.60,
+        }
+    }
+
+    /// GPU frequency scale relative to the flagship OPP table.
+    fn gpu_freq_scale(&self) -> f64 {
+        match self {
+            DeviceClass::Flagship => 1.0,
+            DeviceClass::MidRange => 0.75,
+            DeviceClass::Budget => 0.55,
+        }
+    }
+
+    /// The class's full device parameterization.
+    pub fn device_config(&self) -> DeviceConfig {
+        let base = DeviceConfig::snapdragon_855();
+        match self {
+            DeviceClass::Flagship => base,
+            DeviceClass::MidRange => DeviceConfig {
+                cpu_opps: scale_opps(&base.cpu_opps, self.cpu_freq_scale()),
+                gpu_opps: scale_opps(&base.gpu_opps, self.gpu_freq_scale()),
+                cpu_power: PowerParams {
+                    c_eff: 0.70e-9,
+                    p_static: 0.12,
+                },
+                gpu_power: PowerParams {
+                    c_eff: 5.5e-9,
+                    p_static: 0.08,
+                },
+                cpu_compute: ComputeParams {
+                    flops_per_cycle: 32.0,
+                    mem_bw: 10.0e9,
+                    dispatch_first: 30e-6,
+                    dispatch_next: 10e-6,
+                },
+                gpu_compute: ComputeParams {
+                    flops_per_cycle: 768.0,
+                    mem_bw: 14.0e9,
+                    dispatch_first: 130e-6,
+                    dispatch_next: 22e-6,
+                },
+                transfer: TransferParams {
+                    map_overhead_s: 100e-6,
+                    bw: 8.0e9,
+                    energy_per_byte: 0.26e-9,
+                    map_energy_j: 0.14e-3,
+                },
+                noise_sigma: 0.05,
+                drift_sigma: 0.06,
+                thrash: 0.55,
+                split_sync_s: 40e-6,
+                seed: 0xAD40_0E58,
+            },
+            DeviceClass::Budget => DeviceConfig {
+                cpu_opps: scale_opps(&base.cpu_opps, self.cpu_freq_scale()),
+                gpu_opps: scale_opps(&base.gpu_opps, self.gpu_freq_scale()),
+                cpu_power: PowerParams {
+                    c_eff: 0.55e-9,
+                    p_static: 0.10,
+                },
+                gpu_power: PowerParams {
+                    c_eff: 3.2e-9,
+                    p_static: 0.07,
+                },
+                cpu_compute: ComputeParams {
+                    flops_per_cycle: 16.0,
+                    mem_bw: 6.5e9,
+                    dispatch_first: 40e-6,
+                    dispatch_next: 14e-6,
+                },
+                gpu_compute: ComputeParams {
+                    flops_per_cycle: 256.0,
+                    mem_bw: 9.0e9,
+                    dispatch_first: 160e-6,
+                    dispatch_next: 30e-6,
+                },
+                transfer: TransferParams {
+                    map_overhead_s: 140e-6,
+                    bw: 5.5e9,
+                    energy_per_byte: 0.30e-9,
+                    map_energy_j: 0.16e-3,
+                },
+                noise_sigma: 0.06,
+                drift_sigma: 0.07,
+                thrash: 0.60,
+                split_sync_s: 50e-6,
+                seed: 0xAD40_0E59,
+            },
+        }
+    }
+
+    /// The paper's condition preset rescaled to this class's OPP tables:
+    /// pinned frequencies scale with the class (a budget phone's "high"
+    /// condition pins a budget clock, not a flagship one); background-load
+    /// statistics are tier-independent.
+    pub fn condition(&self, kind: ConditionKind) -> ConditionSpec {
+        let mut spec = WorkloadCondition::by_name(kind.name())
+            .expect("every ConditionKind has a preset")
+            .spec;
+        spec.cpu_freq_hz = spec.cpu_freq_hz.map(|f| f * self.cpu_freq_scale());
+        spec.gpu_freq_hz = spec.gpu_freq_hz.map(|f| f * self.gpu_freq_scale());
+        spec
+    }
+}
+
+/// Scale an OPP table's frequencies, preserving the voltage ramp (ordering
+/// invariants hold because scaling is monotone).
+fn scale_opps(base: &OppTable, scale: f64) -> OppTable {
+    OppTable::new(
+        base.points
+            .iter()
+            .map(|p| Opp {
+                freq_hz: p.freq_hz * scale,
+                volt: p.volt,
+            })
+            .collect(),
+    )
+}
+
+/// The `index`-th seed of the splitmix64 stream rooted at `fleet_seed` —
+/// an O(1) jump (state advances by the golden gamma per step), so
+/// per-device seeds are independent of how many devices precede them and
+/// of runner thread count.
+pub fn device_seed(fleet_seed: u64, index: u64) -> u64 {
+    let mut state = fleet_seed.wrapping_add(index.wrapping_mul(SPLITMIX64_GAMMA));
+    splitmix64(&mut state)
+}
+
+/// Population mix the sampler draws each device from.
+#[derive(Debug, Clone)]
+pub struct FleetMix {
+    /// Class weights, parallel to [`DeviceClass::all`] (need not sum to 1).
+    pub class_weights: [f64; 3],
+    /// Condition weights for `[idle, moderate, high]`.
+    pub condition_weights: [f64; 3],
+    /// Model-zoo names each device's stream is drawn from uniformly.
+    pub models: Vec<String>,
+    /// Per-stream frame rate, sampled uniformly from this range (Hz).
+    pub rate_hz: (f64, f64),
+    /// Per-request SLO, sampled uniformly from this range (milliseconds).
+    pub slo_ms: (f64, f64),
+}
+
+impl Default for FleetMix {
+    fn default() -> Self {
+        FleetMix {
+            // the installed base skews mid/budget, not flagship
+            class_weights: [0.2, 0.5, 0.3],
+            condition_weights: [0.25, 0.5, 0.25],
+            models: vec!["yolov2_tiny".to_string(), "mobilenetv1".to_string()],
+            rate_hz: (2.0, 6.0),
+            slo_ms: (150.0, 400.0),
+        }
+    }
+}
+
+/// One simulated device, fully specified: everything its engine run needs.
+#[derive(Debug, Clone)]
+pub struct DeviceSpec {
+    /// Position in the fleet (also the seed-derivation index).
+    pub index: usize,
+    /// Hardware tier.
+    pub class: DeviceClass,
+    /// Workload condition the device serves under.
+    pub condition: ConditionKind,
+    /// Model-zoo name of the device's stream.
+    pub model: String,
+    /// Stream frame rate, Hz.
+    pub rate_hz: f64,
+    /// Per-request SLO, seconds.
+    pub slo_s: f64,
+    /// Engine seed (workload arrivals + simulator noise).
+    pub seed: u64,
+}
+
+fn pick_weighted(rng: &mut Prng, weights: &[f64]) -> usize {
+    let total: f64 = weights.iter().sum();
+    assert!(
+        total > 0.0 && weights.iter().all(|w| *w >= 0.0),
+        "sampling weights must be non-negative with a positive sum, got {weights:?}"
+    );
+    let mut x = rng.f64() * total;
+    for (i, w) in weights.iter().enumerate() {
+        x -= w;
+        if x < 0.0 {
+            return i;
+        }
+    }
+    weights.len() - 1
+}
+
+/// Whether a mix is samplable: at least one model, and both weight vectors
+/// non-negative with positive sums. [`sample_fleet`] asserts this; the
+/// runner turns it into a user-facing error first.
+pub fn mix_is_valid(mix: &FleetMix) -> bool {
+    let ok = |w: &[f64]| w.iter().all(|x| *x >= 0.0) && w.iter().sum::<f64>() > 0.0;
+    !mix.models.is_empty() && ok(&mix.class_weights) && ok(&mix.condition_weights)
+}
+
+/// Sample `n` device specs from `mix`, deterministically from `fleet_seed`.
+/// Prefix-stable: device `i` is identical for any fleet size > `i`.
+pub fn sample_fleet(fleet_seed: u64, n: usize, mix: &FleetMix) -> Vec<DeviceSpec> {
+    assert!(mix_is_valid(mix), "invalid fleet mix (models/weights)");
+    let conditions = [ConditionKind::Idle, ConditionKind::Moderate, ConditionKind::High];
+    (0..n)
+        .map(|i| {
+            let mut rng = Prng::new(device_seed(fleet_seed, i as u64));
+            let class = DeviceClass::all()[pick_weighted(&mut rng, &mix.class_weights)];
+            let condition = conditions[pick_weighted(&mut rng, &mix.condition_weights)];
+            let model = rng.choose(&mix.models).clone();
+            let rate_hz = rng.range(mix.rate_hz.0, mix.rate_hz.1);
+            let slo_s = rng.range(mix.slo_ms.0, mix.slo_ms.1) / 1e3;
+            let seed = rng.next_u64();
+            DeviceSpec {
+                index: i,
+                class,
+                condition,
+                model,
+                rate_hz,
+                slo_s,
+                seed,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::zoo as model_zoo;
+    use crate::soc::device::{Device, ExecCtx};
+    use crate::soc::Placement;
+
+    #[test]
+    fn class_roundtrip_and_indices() {
+        for (i, c) in DeviceClass::all().iter().enumerate() {
+            assert_eq!(DeviceClass::parse(c.name()).unwrap(), *c);
+            assert_eq!(c.index(), i);
+        }
+        assert!(DeviceClass::parse("ultra").is_err());
+    }
+
+    #[test]
+    fn device_configs_are_valid_and_ordered() {
+        // OppTable::new asserts ordering invariants at construction
+        let f = DeviceClass::Flagship.device_config();
+        let m = DeviceClass::MidRange.device_config();
+        let b = DeviceClass::Budget.device_config();
+        assert!(f.cpu_opps.max().freq_hz > m.cpu_opps.max().freq_hz);
+        assert!(m.cpu_opps.max().freq_hz > b.cpu_opps.max().freq_hz);
+        assert!(f.cpu_compute.flops_per_cycle > m.cpu_compute.flops_per_cycle);
+        assert!(m.cpu_compute.flops_per_cycle > b.cpu_compute.flops_per_cycle);
+        assert!(f.gpu_compute.flops_per_cycle > b.gpu_compute.flops_per_cycle);
+    }
+
+    #[test]
+    fn conditions_scale_with_class() {
+        let f = DeviceClass::Flagship.condition(ConditionKind::Moderate);
+        let b = DeviceClass::Budget.condition(ConditionKind::Moderate);
+        assert_eq!(f.cpu_freq_hz, Some(1.49e9));
+        assert!(b.cpu_freq_hz.unwrap() < f.cpu_freq_hz.unwrap());
+        assert!(b.gpu_freq_hz.unwrap() < f.gpu_freq_hz.unwrap());
+        // background statistics are tier-independent
+        assert_eq!(f.cpu_bg_mean, b.cpu_bg_mean);
+    }
+
+    #[test]
+    fn budget_slower_than_flagship_on_heavy_conv() {
+        let g = model_zoo::yolov2();
+        let op = &g.ops[2];
+        let run = |class: DeviceClass| {
+            let mut d = Device::new(class.device_config());
+            d.apply_condition(&class.condition(ConditionKind::Moderate));
+            let cpu = d
+                .expected_cost(op, Placement::CPU, &ExecCtx::fresh(vec![1.0]))
+                .latency_s;
+            let gpu = d
+                .expected_cost(op, Placement::GPU, &ExecCtx::fresh(vec![0.0]))
+                .latency_s;
+            (cpu, gpu)
+        };
+        let (fc, fg) = run(DeviceClass::Flagship);
+        let (bc, bg) = run(DeviceClass::Budget);
+        assert!(bc > 2.0 * fc, "budget cpu {bc} vs flagship {fc}");
+        assert!(bg > 2.0 * fg, "budget gpu {bg} vs flagship {fg}");
+    }
+
+    #[test]
+    fn device_seed_is_a_splitmix_jump() {
+        // walking the stream step by step must agree with the O(1) jump
+        let mut state = 42u64;
+        for i in 0..16u64 {
+            let walked = splitmix64(&mut state);
+            assert_eq!(walked, device_seed(42, i), "index {i}");
+        }
+    }
+
+    #[test]
+    fn sampling_is_deterministic_and_prefix_stable() {
+        let mix = FleetMix::default();
+        let a = sample_fleet(7, 50, &mix);
+        let b = sample_fleet(7, 50, &mix);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.seed, y.seed);
+            assert_eq!(x.class, y.class);
+            assert_eq!(x.model, y.model);
+            assert_eq!(x.rate_hz, y.rate_hz);
+        }
+        // prefix stability: the first 20 of 50 equal a 20-device fleet
+        let small = sample_fleet(7, 20, &mix);
+        for (x, y) in small.iter().zip(&a) {
+            assert_eq!(x.seed, y.seed);
+            assert_eq!(x.class, y.class);
+        }
+        // a different seed yields a different fleet
+        let c = sample_fleet(8, 50, &mix);
+        assert!(a.iter().zip(&c).any(|(x, y)| x.seed != y.seed));
+    }
+
+    #[test]
+    fn degenerate_mixes_are_rejected() {
+        assert!(mix_is_valid(&FleetMix::default()));
+        let mut no_models = FleetMix::default();
+        no_models.models.clear();
+        assert!(!mix_is_valid(&no_models));
+        let zero_weights = FleetMix {
+            class_weights: [0.0, 0.0, 0.0],
+            ..FleetMix::default()
+        };
+        assert!(!mix_is_valid(&zero_weights));
+        let negative = FleetMix {
+            condition_weights: [0.5, -0.1, 0.6],
+            ..FleetMix::default()
+        };
+        assert!(!mix_is_valid(&negative));
+    }
+
+    #[test]
+    fn sampled_mix_tracks_weights_and_ranges() {
+        let mix = FleetMix::default();
+        let specs = sample_fleet(123, 3000, &mix);
+        let frac = |class| {
+            specs.iter().filter(|s| s.class == class).count() as f64 / specs.len() as f64
+        };
+        assert!((frac(DeviceClass::Flagship) - 0.2).abs() < 0.05);
+        assert!((frac(DeviceClass::MidRange) - 0.5).abs() < 0.05);
+        assert!((frac(DeviceClass::Budget) - 0.3).abs() < 0.05);
+        for s in &specs {
+            assert!(s.rate_hz >= mix.rate_hz.0 && s.rate_hz < mix.rate_hz.1);
+            assert!(s.slo_s >= mix.slo_ms.0 / 1e3 && s.slo_s < mix.slo_ms.1 / 1e3);
+            assert!(model_zoo::by_name(&s.model).is_some(), "unknown {}", s.model);
+        }
+    }
+}

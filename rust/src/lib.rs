@@ -44,6 +44,7 @@ pub mod cli;
 pub mod config;
 pub mod experiments;
 pub mod coordinator;
+pub mod fleet;
 pub mod graph;
 pub mod metrics;
 pub mod partition;

@@ -1,0 +1,333 @@
+//! Mergeable fixed-boundary log-bucket histogram.
+//!
+//! The fleet layer aggregates per-device latency distributions across
+//! thousands of independent simulations; raw samples would not scale and
+//! per-device [`crate::util::stats::Summary`] percentiles are not
+//! mergeable. This histogram is: bucket boundaries are *fixed* at
+//! construction (`lo · growth^k`), so two histograms built with the same
+//! parameters merge by adding counts, and quantiles of the merge equal the
+//! quantiles of the histogram built from the concatenated samples.
+//!
+//! **Error bound.** Each bucket spans a `growth` ratio and the estimator
+//! returns the geometric midpoint of the bucket holding the requested
+//! order statistic (linearly interpolated between adjacent ranks, the same
+//! convention as [`crate::util::stats::percentile`]), clamped to the exact
+//! recorded min/max. For samples inside `[lo, hi)` the estimate `q̂` of a
+//! true quantile `q` therefore satisfies
+//! `q̂ / q ∈ [1/√growth, √growth]`, i.e. a relative error of at most
+//! `√growth − 1` ([`LogHistogram::rel_error_bound`]). Samples below `lo`
+//! or above `hi` are clamped into the under/overflow buckets and only the
+//! min/max anchors stay exact for them.
+
+/// Fixed-boundary log-bucket histogram with exact merge semantics.
+#[derive(Debug, Clone)]
+pub struct LogHistogram {
+    lo: f64,
+    growth: f64,
+    /// `[underflow, core buckets …, overflow]`.
+    counts: Vec<u64>,
+    total: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl LogHistogram {
+    /// Build a histogram covering `[lo, hi)` with buckets growing by
+    /// `growth` per step. Panics unless `0 < lo < hi` and `growth > 1`.
+    pub fn new(lo: f64, hi: f64, growth: f64) -> LogHistogram {
+        assert!(lo > 0.0 && lo.is_finite(), "lo must be positive");
+        assert!(hi > lo && hi.is_finite(), "hi must exceed lo");
+        assert!(growth > 1.0 && growth.is_finite(), "growth must exceed 1");
+        let core = ((hi / lo).ln() / growth.ln()).ceil() as usize;
+        LogHistogram {
+            lo,
+            growth,
+            counts: vec![0; core + 2],
+            total: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    /// The latency configuration every serving report uses: 1 µs – 10⁴ s
+    /// in 5 % buckets (quantile relative error ≤ √1.05 − 1 ≈ 2.5 %).
+    pub fn latency() -> LogHistogram {
+        LogHistogram::new(1e-6, 1e4, 1.05)
+    }
+
+    /// Build the standard latency histogram from raw samples (seconds).
+    pub fn latency_of(samples: &[f64]) -> LogHistogram {
+        let mut h = LogHistogram::latency();
+        for &x in samples {
+            h.record(x);
+        }
+        h
+    }
+
+    fn core_buckets(&self) -> usize {
+        self.counts.len() - 2
+    }
+
+    fn bucket_idx(&self, x: f64) -> usize {
+        if x < self.lo {
+            return 0;
+        }
+        let k = ((x / self.lo).ln() / self.growth.ln()).floor() as isize;
+        if k < 0 {
+            0
+        } else if k as usize >= self.core_buckets() {
+            self.counts.len() - 1
+        } else {
+            k as usize + 1
+        }
+    }
+
+    /// Record one sample (finite, non-negative).
+    pub fn record(&mut self, x: f64) {
+        debug_assert!(x.is_finite() && x >= 0.0, "histogram sample {x}");
+        let i = self.bucket_idx(x);
+        self.counts[i] += 1;
+        self.total += 1;
+        self.sum += x;
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    /// Samples recorded.
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    /// Whether anything was recorded.
+    pub fn is_empty(&self) -> bool {
+        self.total == 0
+    }
+
+    /// Exact arithmetic mean (`None` when empty).
+    pub fn mean(&self) -> Option<f64> {
+        if self.total == 0 {
+            None
+        } else {
+            Some(self.sum / self.total as f64)
+        }
+    }
+
+    /// Exact smallest recorded sample (`None` when empty).
+    pub fn min(&self) -> Option<f64> {
+        (self.total > 0).then_some(self.min)
+    }
+
+    /// Exact largest recorded sample (`None` when empty).
+    pub fn max(&self) -> Option<f64> {
+        (self.total > 0).then_some(self.max)
+    }
+
+    /// Raw bucket counts (`[underflow, core…, overflow]`) — test
+    /// introspection and exact-merge assertions.
+    pub fn counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    /// Documented quantile relative-error bound: `√growth − 1`.
+    pub fn rel_error_bound(&self) -> f64 {
+        self.growth.sqrt() - 1.0
+    }
+
+    /// Whether two histograms share boundaries (and can merge).
+    pub fn compatible(&self, other: &LogHistogram) -> bool {
+        self.lo == other.lo
+            && self.growth == other.growth
+            && self.counts.len() == other.counts.len()
+    }
+
+    /// Fold `other` into `self`. Quantiles of the result are exactly the
+    /// quantiles of the histogram built from the concatenated samples
+    /// (counts and min/max merge losslessly). Panics on incompatible
+    /// boundaries.
+    pub fn merge(&mut self, other: &LogHistogram) {
+        assert!(
+            self.compatible(other),
+            "merging histograms with different boundaries"
+        );
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    /// Representative value of a bucket: its geometric midpoint, clamped
+    /// to the exact recorded min/max; the under/overflow buckets anchor to
+    /// the exact extremes (callers guarantee non-empty).
+    fn representative(&self, bucket: usize) -> f64 {
+        let v = if bucket == 0 {
+            self.min
+        } else if bucket == self.counts.len() - 1 {
+            self.max
+        } else {
+            self.lo * self.growth.powi(bucket as i32 - 1) * self.growth.sqrt()
+        };
+        v.clamp(self.min, self.max)
+    }
+
+    fn value_at_rank(&self, rank: u64) -> f64 {
+        debug_assert!(rank < self.total);
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if rank < seen {
+                return self.representative(i);
+            }
+        }
+        self.representative(self.counts.len() - 1)
+    }
+
+    /// Quantile estimate for `q ∈ [0, 1]`, `None` when empty. Uses the
+    /// same rank convention as [`crate::util::stats::percentile`]
+    /// (linear interpolation at rank `q · (n − 1)`); see the module docs
+    /// for the relative-error bound.
+    pub fn quantile(&self, q: f64) -> Option<f64> {
+        assert!((0.0..=1.0).contains(&q), "quantile q out of range: {q}");
+        if self.total == 0 {
+            return None;
+        }
+        if self.total == 1 {
+            return Some(self.min);
+        }
+        let rank = q * (self.total - 1) as f64;
+        let lo_r = rank.floor() as u64;
+        let hi_r = rank.ceil() as u64;
+        let frac = rank - lo_r as f64;
+        let a = self.value_at_rank(lo_r);
+        let b = self.value_at_rank(hi_r);
+        Some(a + (b - a) * frac)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::percentile;
+    use crate::util::Prng;
+
+    /// Random positive samples comfortably inside the default range.
+    fn samples(seed: u64, n: usize) -> Vec<f64> {
+        let mut rng = Prng::new(seed);
+        (0..n)
+            .map(|i| {
+                if i % 3 == 0 {
+                    rng.exponential(20.0) + 1e-4
+                } else {
+                    rng.range(1e-4, 5.0)
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn empty_and_single_sample_edges() {
+        let mut h = LogHistogram::latency();
+        assert!(h.is_empty());
+        assert_eq!(h.quantile(0.5), None);
+        assert_eq!(h.mean(), None);
+        h.record(0.0123);
+        for q in [0.0, 0.5, 0.95, 1.0] {
+            assert_eq!(h.quantile(q), Some(0.0123), "q={q}");
+        }
+        assert_eq!(h.count(), 1);
+        assert_eq!((h.min(), h.max()), (Some(0.0123), Some(0.0123)));
+    }
+
+    #[test]
+    fn extremes_clamp_to_exact_min_max() {
+        let mut h = LogHistogram::latency();
+        h.record(0.0); // below lo → underflow bucket
+        h.record(5e4); // above hi → overflow bucket
+        assert_eq!(h.quantile(0.0), Some(0.0));
+        assert_eq!(h.quantile(1.0), Some(5e4));
+    }
+
+    #[test]
+    fn quantiles_within_documented_bound_of_exact_percentile() {
+        for seed in [1u64, 7, 42, 1234] {
+            let xs = samples(seed, 500);
+            let h = LogHistogram::latency_of(&xs);
+            let bound = h.rel_error_bound();
+            for p in [0.0, 5.0, 25.0, 50.0, 90.0, 95.0, 99.0, 100.0] {
+                let exact = percentile(&xs, p);
+                let est = h.quantile(p / 100.0).unwrap();
+                let rel = (est - exact).abs() / exact;
+                assert!(
+                    rel <= bound + 1e-9,
+                    "seed {seed} p{p}: est {est} vs exact {exact} (rel {rel:.4} > {bound:.4})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn merge_quantiles_equal_concatenated_histogram() {
+        for seed in [3u64, 99, 2024] {
+            let xs = samples(seed, 257);
+            let ys = samples(seed ^ 0xDEAD, 83);
+            let mut merged = LogHistogram::latency_of(&xs);
+            merged.merge(&LogHistogram::latency_of(&ys));
+            let concat: Vec<f64> = xs.iter().chain(ys.iter()).copied().collect();
+            let whole = LogHistogram::latency_of(&concat);
+            assert_eq!(merged.counts(), whole.counts());
+            assert_eq!(merged.count(), whole.count());
+            assert_eq!(merged.min(), whole.min());
+            assert_eq!(merged.max(), whole.max());
+            for q in [0.0, 0.1, 0.5, 0.9, 0.95, 0.99, 1.0] {
+                assert_eq!(merged.quantile(q), whole.quantile(q), "seed {seed} q={q}");
+            }
+            let (ma, mb) = (merged.mean().unwrap(), whole.mean().unwrap());
+            assert!((ma - mb).abs() < 1e-12 * mb.abs().max(1.0));
+        }
+    }
+
+    #[test]
+    fn merge_with_empty_is_identity() {
+        let xs = samples(11, 64);
+        let mut h = LogHistogram::latency_of(&xs);
+        let before = h.clone();
+        h.merge(&LogHistogram::latency());
+        assert_eq!(h.counts(), before.counts());
+        assert_eq!(h.quantile(0.5), before.quantile(0.5));
+        // and the mirror: empty absorbing a populated histogram
+        let mut e = LogHistogram::latency();
+        e.merge(&before);
+        assert_eq!(e.quantile(0.95), before.quantile(0.95));
+    }
+
+    #[test]
+    #[should_panic]
+    fn incompatible_merge_panics() {
+        let mut a = LogHistogram::new(1e-6, 1e4, 1.05);
+        let b = LogHistogram::new(1e-6, 1e4, 1.10);
+        a.merge(&b);
+    }
+
+    #[test]
+    fn mean_is_exact() {
+        let xs = [0.25, 0.5, 1.0, 2.0];
+        let h = LogHistogram::latency_of(&xs);
+        assert!((h.mean().unwrap() - 0.9375).abs() < 1e-12);
+    }
+
+    #[test]
+    fn two_sample_interpolation_monotone() {
+        let mut h = LogHistogram::latency();
+        h.record(0.010);
+        h.record(0.100);
+        let q25 = h.quantile(0.25).unwrap();
+        let q75 = h.quantile(0.75).unwrap();
+        assert!(h.quantile(0.0).unwrap() <= q25);
+        assert!(q25 <= q75);
+        assert!(q75 <= h.quantile(1.0).unwrap());
+    }
+}

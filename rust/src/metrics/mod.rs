@@ -1,10 +1,13 @@
-//! Serving metrics: latency distributions, energy accounting and the
-//! aggregate report the benches and CLI print.
+//! Serving metrics: latency distributions, energy accounting, mergeable
+//! histograms for fleet-scale aggregation, and the aggregate report the
+//! benches and CLI print.
 
 pub mod energy;
+pub mod histogram;
 pub mod latency;
 pub mod report;
 
 pub use energy::EnergyAccount;
+pub use histogram::LogHistogram;
 pub use latency::LatencyRecorder;
 pub use report::{PlanCacheStats, SchedStats, ServingReport};

@@ -17,7 +17,6 @@
 
 use crate::graph::{zoo, ModelGraph, OpNode};
 use crate::soc::device::{ConditionSpec, Device, DeviceConfig, ExecCtx};
-use crate::soc::latency::ComputeParams;
 use crate::soc::{Placement, Proc};
 use crate::util::Prng;
 
@@ -86,13 +85,19 @@ pub fn calibration_models() -> Vec<ModelGraph> {
     ]
 }
 
-/// Generate the sweep: each sample pins a fresh device to a random state
-/// and measures one full operator on one unit.
+/// Generate the sweep on the default (Snapdragon-855) device.
 pub fn generate(cfg: &CalibConfig) -> Vec<Sample> {
+    generate_on(cfg, &DeviceConfig::snapdragon_855())
+}
+
+/// Generate the sweep on a specific device parameterization (the fleet
+/// layer calibrates each device class against its own hardware): each
+/// sample pins a fresh device to a random state and measures one full
+/// operator on one unit.
+pub fn generate_on(cfg: &CalibConfig, dev_cfg: &DeviceConfig) -> Vec<Sample> {
     let models = calibration_models();
     let ops: Vec<&OpNode> = models.iter().flat_map(|m| m.ops.iter()).collect();
     let mut rng = Prng::new(cfg.seed);
-    let dev_cfg = DeviceConfig::snapdragon_855();
     let cpu_freqs: Vec<f64> = dev_cfg.cpu_opps.points.iter().map(|p| p.freq_hz).collect();
     let gpu_freqs: Vec<f64> = dev_cfg.gpu_opps.points.iter().map(|p| p.freq_hz).collect();
 
@@ -127,7 +132,10 @@ pub fn generate(cfg: &CalibConfig) -> Vec<Sample> {
         ctx.new_run_gpu = false;
         let snap = dev.snapshot();
         let cost = dev.measure(op, placement, &ctx);
-        let dispatch = ComputeParams::for_proc(proc).dispatch_next;
+        let dispatch = match proc {
+            Proc::Cpu => dev_cfg.cpu_compute.dispatch_next,
+            Proc::Gpu => dev_cfg.gpu_compute.dispatch_next,
+        };
         out.push(Sample {
             proc,
             features: features::extract(op, placement, &ctx, &snap),
@@ -158,9 +166,15 @@ pub fn fit(samples: &[Sample], gbdt: &GbdtParams) -> OfflineModel {
     }
 }
 
-/// Convenience: generate + fit.
+/// Convenience: generate + fit on the default (Snapdragon-855) device.
 pub fn calibrate(cfg: &CalibConfig) -> OfflineModel {
-    let samples = generate(cfg);
+    calibrate_on(cfg, &DeviceConfig::snapdragon_855())
+}
+
+/// Convenience: generate + fit against a specific device parameterization
+/// (per-class fleet calibration).
+pub fn calibrate_on(cfg: &CalibConfig, dev_cfg: &DeviceConfig) -> OfflineModel {
+    let samples = generate_on(cfg, dev_cfg);
     fit(&samples, &cfg.gbdt)
 }
 

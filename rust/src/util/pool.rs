@@ -1,6 +1,15 @@
-//! Minimal thread pool (no tokio in the offline crate set). Used by the
-//! coordinator's per-processor executors and by the calibration sweep.
+//! Minimal thread pool (no tokio in the offline crate set). Its main user
+//! is the fleet runner, which shards per-device simulations across the
+//! workers via [`ThreadPool::map`].
+//!
+//! Panic safety: worker threads survive panicking jobs (the panic is
+//! caught at the job boundary, so the pool never silently loses capacity),
+//! and [`ThreadPool::map`] re-raises a task panic on the calling thread
+//! after draining the batch — a panicking task surfaces instead of hanging
+//! the caller or being silently dropped.
 
+use std::any::Any;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread;
@@ -27,7 +36,11 @@ impl ThreadPool {
                     .spawn(move || loop {
                         let job = { rx.lock().unwrap().recv() };
                         match job {
-                            Ok(job) => job(),
+                            // catch panics so one bad job cannot kill the
+                            // worker and silently shrink the pool
+                            Ok(job) => {
+                                let _ = catch_unwind(AssertUnwindSafe(job));
+                            }
                             Err(_) => break, // sender dropped → shut down
                         }
                     })
@@ -50,7 +63,9 @@ impl ThreadPool {
     }
 
     /// Run `f` over every item, in parallel, returning results in input
-    /// order. Blocks until done.
+    /// order. Blocks until done. If any task panics, the whole batch is
+    /// still drained (workers stay alive) and the first panic payload is
+    /// re-raised on the calling thread.
     pub fn map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
     where
         T: Send + 'static,
@@ -64,15 +79,22 @@ impl ThreadPool {
             let f = Arc::clone(&f);
             let tx = tx.clone();
             self.execute(move || {
-                let r = f(item);
+                let r = catch_unwind(AssertUnwindSafe(|| f(item)));
                 let _ = tx.send((i, r));
             });
         }
         drop(tx);
         let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        let mut panic: Option<Box<dyn Any + Send>> = None;
         for _ in 0..n {
             let (i, r) = rx.recv().expect("pool job completed");
-            out[i] = Some(r);
+            match r {
+                Ok(v) => out[i] = Some(v),
+                Err(p) => panic = panic.or(Some(p)),
+            }
+        }
+        if let Some(p) = panic {
+            resume_unwind(p);
         }
         out.into_iter().map(|r| r.unwrap()).collect()
     }
@@ -123,5 +145,43 @@ mod tests {
         let pool = ThreadPool::new(2);
         pool.execute(|| {});
         drop(pool); // must not hang or panic
+    }
+
+    #[test]
+    fn map_preserves_order_under_uneven_durations() {
+        // later items finish *earlier* (decreasing sleep), so any
+        // completion-order bug would scramble the output
+        let pool = ThreadPool::new(4);
+        let out = pool.map((0..24).collect::<Vec<u64>>(), |x| {
+            std::thread::sleep(std::time::Duration::from_millis((24 - x) % 6));
+            x * 7
+        });
+        assert_eq!(out, (0..24).map(|x| x * 7).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn map_panicking_task_surfaces_and_pool_survives() {
+        let pool = ThreadPool::new(3);
+        // the panic must propagate to the caller (not hang, not vanish) …
+        let res = catch_unwind(AssertUnwindSafe(|| {
+            pool.map(vec![0i64, 1, 2, 3, 4], |x| {
+                if x == 2 {
+                    panic!("task {x} exploded");
+                }
+                x
+            })
+        }));
+        assert!(res.is_err(), "panicking map task was silently dropped");
+        // … and the workers must still be alive afterwards
+        let out = pool.map((0..10).collect::<Vec<i64>>(), |x| x + 1);
+        assert_eq!(out, (1..=10).collect::<Vec<i64>>());
+    }
+
+    #[test]
+    fn execute_panic_does_not_kill_worker() {
+        let pool = ThreadPool::new(1); // single worker: a dead worker hangs map
+        pool.execute(|| panic!("background job exploded"));
+        let out = pool.map(vec![1u32, 2, 3], |x| x * 2);
+        assert_eq!(out, vec![2, 4, 6]);
     }
 }

@@ -10,11 +10,17 @@ pub struct Prng {
     s: [u64; 4],
 }
 
+/// The SplitMix64 increment ("golden gamma"): the amount [`splitmix64`]
+/// advances its state by per step. Exported so stream-jumping code (the
+/// fleet sampler's O(1) per-device seed derivation) stays in lockstep
+/// with the generator by construction.
+pub const SPLITMIX64_GAMMA: u64 = 0x9E37_79B9_7F4A_7C15;
+
 /// SplitMix64 step — used to expand a single seed into xoshiro state and as
 /// a standalone mixing function.
 #[inline]
 pub fn splitmix64(state: &mut u64) -> u64 {
-    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    *state = state.wrapping_add(SPLITMIX64_GAMMA);
     let mut z = *state;
     z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
     z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);

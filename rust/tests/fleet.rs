@@ -1,0 +1,107 @@
+//! Fleet-layer integration: the sharded runner must be bit-identical
+//! across thread counts, and per-class tail latency must track device
+//! capability (budget hardware is slower than flagship hardware).
+
+use std::sync::OnceLock;
+
+use adaoper::fleet::runner::{calibrate_classes, run_fleet_with};
+use adaoper::fleet::{DeviceClass, FleetReport, FleetRunConfig};
+use adaoper::profiler::calibrate::CalibConfig;
+use adaoper::profiler::gbdt::GbdtParams;
+
+fn cfg(threads: usize) -> FleetRunConfig {
+    FleetRunConfig {
+        devices: 200,
+        threads,
+        seed: 42,
+        duration_s: 1.0,
+        calib: CalibConfig {
+            samples: 900,
+            seed: 42,
+            gbdt: GbdtParams {
+                trees: 25,
+                ..Default::default()
+            },
+        },
+        ..Default::default()
+    }
+}
+
+/// The expensive part: calibrate each device class once (the immutable
+/// per-class models the determinism contract shares), then run the same
+/// 200-device fleet single-threaded and with 8 workers.
+fn reports() -> &'static (FleetReport, FleetReport) {
+    static R: OnceLock<(FleetReport, FleetReport)> = OnceLock::new();
+    R.get_or_init(|| {
+        let offline = calibrate_classes(&cfg(1).calib, &DeviceClass::all(), 3);
+        (
+            run_fleet_with(&cfg(1), &offline).unwrap(),
+            run_fleet_with(&cfg(8), &offline).unwrap(),
+        )
+    })
+}
+
+#[test]
+fn fleet_report_bit_identical_across_thread_counts() {
+    let (a, b) = reports();
+    // the rendered FleetReport is byte-identical …
+    assert_eq!(a.render(), b.render());
+    // … and so is the underlying merged state, down to float bits
+    assert_eq!(a.fleet.offered, b.fleet.offered);
+    assert_eq!(a.fleet.completed, b.fleet.completed);
+    assert_eq!(a.fleet.shed, b.fleet.shed);
+    assert_eq!(a.fleet.deadline_misses, b.fleet.deadline_misses);
+    assert_eq!(
+        a.fleet.total_energy_j.to_bits(),
+        b.fleet.total_energy_j.to_bits()
+    );
+    for class in DeviceClass::all() {
+        let (ca, cb) = (a.class(class), b.class(class));
+        assert_eq!(ca.devices, cb.devices, "{}", class.name());
+        assert_eq!(ca.completed, cb.completed, "{}", class.name());
+        assert_eq!(ca.latency.counts(), cb.latency.counts(), "{}", class.name());
+        assert_eq!(
+            ca.total_energy_j.to_bits(),
+            cb.total_energy_j.to_bits(),
+            "{}",
+            class.name()
+        );
+    }
+}
+
+#[test]
+fn fleet_completes_work_across_all_classes() {
+    let (a, _) = reports();
+    assert!(a.fleet.completed > 100, "only {} completed", a.fleet.completed);
+    for class in DeviceClass::all() {
+        let agg = a.class(class);
+        assert!(agg.devices > 0, "sampler starved class {}", class.name());
+        assert!(agg.completed > 0, "class {} completed nothing", class.name());
+    }
+    // every device contributed exactly once
+    let per_class_devices: usize = DeviceClass::all()
+        .iter()
+        .map(|&c| a.class(c).devices)
+        .sum();
+    assert_eq!(per_class_devices, 200);
+    assert_eq!(a.fleet.devices, 200);
+}
+
+#[test]
+fn budget_class_p95_at_least_flagship_p95() {
+    let (a, _) = reports();
+    let flagship = a.class(DeviceClass::Flagship);
+    let budget = a.class(DeviceClass::Budget);
+    let p95_flag = flagship.latency.quantile(0.95).unwrap();
+    let p95_budget = budget.latency.quantile(0.95).unwrap();
+    assert!(
+        p95_budget >= p95_flag,
+        "budget p95 {p95_budget} s < flagship p95 {p95_flag} s"
+    );
+    // the midrange tier sits no faster than flagship either
+    let p95_mid = a.class(DeviceClass::MidRange).latency.quantile(0.95).unwrap();
+    assert!(
+        p95_mid >= p95_flag,
+        "midrange p95 {p95_mid} s < flagship p95 {p95_flag} s"
+    );
+}

@@ -42,11 +42,13 @@ fn row(
         report: ServingReport {
             policy: policy.name().to_string(),
             condition: condition.name().to_string(),
+            device: None,
             models: vec!["yolov2".to_string()],
             duration_s: 10.0,
             requests: 40,
             throughput_hz: 4.0,
             latency: summary(lat_mean_s),
+            latency_hist: None,
             queue: None,
             miss_rate: 0.0,
             total_energy_j: 10.0,
