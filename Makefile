@@ -1,0 +1,34 @@
+# Developer entry points. `make verify` mirrors the tier-1 gate CI runs,
+# so local runs and CI stay in lockstep.
+
+CARGO_DIR := rust
+
+.PHONY: verify build test fmt fmt-check clippy bench-build doc all
+
+# Tier-1 gate: release build + full test suite.
+verify:
+	cd $(CARGO_DIR) && cargo build --release && cargo test -q
+
+build:
+	cd $(CARGO_DIR) && cargo build --release
+
+test:
+	cd $(CARGO_DIR) && cargo test -q
+
+fmt:
+	cd $(CARGO_DIR) && cargo fmt
+
+fmt-check:
+	cd $(CARGO_DIR) && cargo fmt --check
+
+clippy:
+	cd $(CARGO_DIR) && cargo clippy --all-targets -- -D warnings
+
+bench-build:
+	cd $(CARGO_DIR) && cargo bench --no-run
+
+doc:
+	cd $(CARGO_DIR) && RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
+
+# Everything CI checks, in CI order.
+all: verify clippy bench-build doc fmt-check

@@ -1,0 +1,94 @@
+//! Hot-loop throughput of the serving kernel: events per wall-clock
+//! second on a two-stream overload mix (interactive YOLOv2-tiny +
+//! background MobileNetV1, both past saturation so the active list — and
+//! with it the per-dispatch candidate work — stays large).
+//!
+//! This pins the two hot-path fixes from the event-kernel refactor:
+//! the executor borrows the stream's model instead of cloning a handle
+//! per executed op, and the dispatch stage caches per-request
+//! placement/remaining-work lookups between picks instead of rebuilding
+//! the full candidate set from the plan tables on every loop iteration.
+//!
+//! `ADAOPER_BENCH_QUICK=1` shrinks the calibration budget.
+
+use std::time::Instant;
+
+use adaoper::config::schema::{PolicyKind, SchedulerKind};
+use adaoper::coordinator::{Engine, EngineConfig, StreamSpec};
+use adaoper::graph::zoo;
+use adaoper::profiler::calibrate::{calibrate_on, CalibConfig};
+use adaoper::profiler::gbdt::GbdtParams;
+use adaoper::profiler::{EnergyProfiler, EwmaCorrector};
+use adaoper::sim::EventCounters;
+use adaoper::soc::device::DeviceConfig;
+use adaoper::workload::Arrival;
+
+fn main() {
+    let quick = std::env::var("ADAOPER_BENCH_QUICK").is_ok();
+    let calib = CalibConfig {
+        samples: if quick { 1500 } else { 4000 },
+        seed: 7,
+        gbdt: GbdtParams {
+            trees: if quick { 40 } else { 100 },
+            ..Default::default()
+        },
+    };
+    let duration_s = if quick { 1.5 } else { 2.5 };
+    let iters = if quick { 3 } else { 5 };
+
+    println!("== engine_hot_loop: serving-kernel events/sec (2-stream overload) ==");
+    println!("calibrating profiler ({} samples) …", calib.samples);
+    let offline = calibrate_on(&calib, &DeviceConfig::snapdragon_855());
+
+    let streams = vec![
+        StreamSpec::new(0, zoo::yolov2_tiny(), Arrival::Poisson { hz: 120.0 }, 0.5),
+        StreamSpec::new(1, zoo::mobilenet_v1(), Arrival::Poisson { hz: 80.0 }, 0.8),
+    ];
+
+    let mut rates = Vec::new();
+    for i in 0..iters {
+        let profiler = EnergyProfiler::with_correctors(offline.clone(), || {
+            Box::new(EwmaCorrector::default())
+        });
+        let mut engine = Engine::with_profiler(
+            EngineConfig {
+                policy: PolicyKind::MaceGpu,
+                scheduler: SchedulerKind::Edf,
+                duration_s,
+                seed: 7,
+                calib: calib.clone(),
+                ..Default::default()
+            },
+            profiler,
+        );
+        let mut counters = EventCounters::default();
+        let t0 = Instant::now();
+        let report = engine
+            .run_observed(&streams, &mut [&mut counters])
+            .expect("overload run");
+        let wall = t0.elapsed().as_secs_f64();
+        // every kernel event the run delivered: arrivals + dispatches +
+        // completions + monitor ticks + re-plans
+        let events = counters.offered
+            + counters.op_dispatches
+            + counters.op_completes
+            + counters.monitor_ticks
+            + counters.replans;
+        let rate = events as f64 / wall;
+        rates.push(rate);
+        println!(
+            "iter {i}: {events} events in {:.3} s wall -> {:.0} events/s  \
+             ({} requests, {} ops)",
+            wall, rate, report.requests, counters.op_dispatches
+        );
+    }
+    rates.sort_by(|a, b| a.total_cmp(b));
+    let mean = rates.iter().sum::<f64>() / rates.len() as f64;
+    println!(
+        "events/sec: mean {:.0}, min {:.0}, max {:.0} over {} iters",
+        mean,
+        rates.first().copied().unwrap_or(0.0),
+        rates.last().copied().unwrap_or(0.0),
+        rates.len()
+    );
+}

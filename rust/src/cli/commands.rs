@@ -35,6 +35,7 @@ COMMANDS
       [--admission admit-all|drop-late|bounded] [--queue-limit N]
       [--plan-cache-cap N] [--plan-cache-freq-bucket-mhz MHZ]
       [--plan-cache-util-bucket X]
+      [--trace PATH]          write per-request JSONL timelines to PATH
   fleet                       simulate a heterogeneous device fleet
       [--config F] [--devices N] [--threads T] [--seed S] [--duration S]
       [--scheduler fifo|edf|slack-reclaim] [--policy P] [--quick]
@@ -261,7 +262,21 @@ fn cmd_serve(args: &Args) -> Result<()> {
         cfg.serve.policy.name(),
         cfg.serve.condition.name()
     );
-    let report = engine.run(&streams)?;
+    let trace_path = match args.get("trace") {
+        Some(p) => Some(p.to_string()),
+        None if !cfg.serve.trace.is_empty() => Some(cfg.serve.trace.clone()),
+        None => None,
+    };
+    let report = match &trace_path {
+        Some(path) => {
+            let mut trace = crate::metrics::TraceObserver::new();
+            let r = engine.run_observed(&streams, &mut [&mut trace])?;
+            trace.write_to(Path::new(path))?;
+            println!("trace: {} request lines -> {path}", trace.len());
+            r
+        }
+        None => engine.run(&streams)?,
+    };
     print!("{}", report.pretty());
     Ok(())
 }

@@ -205,6 +205,10 @@ pub struct ServeConfig {
     pub seed: u64,
     /// Execute real numerics through PJRT artifacts when available.
     pub execute_artifacts: bool,
+    /// Per-request JSONL trace output path (empty = no trace). The CLI
+    /// `--trace` flag overrides it; see `docs/ARCHITECTURE.md` for the
+    /// line format.
+    pub trace: String,
 }
 
 impl Default for ServeConfig {
@@ -222,6 +226,7 @@ impl Default for ServeConfig {
             queue_limit: 32,
             seed: 1,
             execute_artifacts: false,
+            trace: String::new(),
         }
     }
 }
@@ -376,6 +381,7 @@ impl AppConfig {
         cfg.serve.seed = v.int_or("serve.seed", cfg.serve.seed as i64) as u64;
         cfg.serve.execute_artifacts =
             v.bool_or("serve.execute_artifacts", cfg.serve.execute_artifacts);
+        cfg.serve.trace = v.str_or("serve.trace", &cfg.serve.trace);
         if cfg.serve.rate_hz <= 0.0 {
             bail!("serve.rate_hz must be > 0");
         }
@@ -490,6 +496,7 @@ mod tests {
         assert_eq!(cfg.serve.scheduler, SchedulerKind::Fifo);
         assert_eq!(cfg.serve.admission, AdmissionKind::AdmitAll);
         assert_eq!(cfg.serve.queue_limit, 32);
+        assert_eq!(cfg.serve.trace, "");
         assert_eq!(cfg.profiler.gbdt_trees, 120);
         assert_eq!(cfg.fleet.devices, 50);
         assert_eq!(cfg.fleet.threads, 4);
@@ -514,6 +521,7 @@ mod tests {
             queue_limit = 4
             seed = 99
             execute_artifacts = true
+            trace = "out/trace.jsonl"
             [profiler]
             gbdt_trees = 10
             use_gru = false
@@ -535,6 +543,7 @@ mod tests {
         assert_eq!(cfg.serve.admission, AdmissionKind::Bounded);
         assert_eq!(cfg.serve.queue_limit, 4);
         assert!(cfg.serve.execute_artifacts);
+        assert_eq!(cfg.serve.trace, "out/trace.jsonl");
         assert_eq!(cfg.profiler.gbdt_trees, 10);
         assert!(!cfg.profiler.use_gru);
         assert_eq!(cfg.partition.objective, "min-energy-slo");

@@ -1,5 +1,6 @@
 //! The virtual-time serving engine: a two-resource op-level list scheduler
-//! over the simulated SoC.
+//! over the simulated SoC, expressed as a thin driver over the
+//! discrete-event kernel in [`crate::sim`].
 //!
 //! Multiple app streams issue requests; each request executes its model's
 //! operators in topological order under the stream's current partition
@@ -11,8 +12,12 @@
 //! triggers flow through the [`super::repartition`] controller, and
 //! decision time is charged to the CPU timeline (the partitioner runs on
 //! the phone's CPU in real deployments).
-
-use std::collections::HashMap;
+//!
+//! [`Engine::run`] composes the five [`crate::sim::stages`] — arrival
+//! source, admission, dispatch, execution, monitor — over the event
+//! queue, broadcasting every state change to
+//! [`crate::sim::SimObserver`]s ([`Engine::run_observed`]). Scenarios,
+//! traces, and the fleet layer extend the engine by observing it.
 
 use anyhow::{bail, Result};
 
@@ -28,16 +33,21 @@ use crate::partition::plan::{Objective, Partitioner, Plan, INPUT_CPU_FRAC};
 use crate::profiler::calibrate::{calibrate_on, CalibConfig};
 use crate::profiler::corrector::{Corrector, EwmaCorrector};
 use crate::profiler::monitor::ResourceMonitor;
-use crate::profiler::{CostModel, EnergyProfiler};
+use crate::profiler::EnergyProfiler;
+use crate::sim::event::Event;
+use crate::sim::observer::{emit, emit_done, SimObserver};
+use crate::sim::queue::EventQueue;
+use crate::sim::stages::{
+    cost_model, AdmissionStage, ArrivalSource, DispatchStage, ExecStage, MonitorStage, PlanTable,
+};
 use crate::soc::device::{ConditionSpec, Device, DeviceConfig, ExecCtx};
 use crate::soc::{Placement, Proc};
-use crate::util::Prng;
 use crate::workload::WorkloadCondition;
 
 use super::plan_cache::{PlanCache, PlanCacheConfig};
-use super::repartition::RepartitionController;
+use super::repartition::{RepartitionController, Trigger};
 use super::request::{Request, RequestOutcome, StreamSpec};
-use super::scheduler::{self, AdmissionCtrl, AdmissionPolicy, Candidate};
+use super::scheduler::AdmissionPolicy;
 
 /// How the planner sees costs.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -120,53 +130,6 @@ impl Default for EngineConfig {
 /// Numerics hook: called once per executed operator with the request and
 /// op; the e2e example wires the PJRT runtime in here.
 pub type NumericsHook = Box<dyn FnMut(&Request, &OpNode) -> Result<()>>;
-
-/// Per-request execution state.
-struct Active {
-    req: Request,
-    model: usize, // stream index
-    next_op: usize,
-    data_ready_s: f64,
-    start_s: Option<f64>,
-    energy_j: f64,
-    /// CPU-resident fraction of each op output produced so far.
-    out_cpu: Vec<f64>,
-    prev_placement: Option<Placement>,
-}
-
-/// Admission decision shared by both admit sites of [`Engine::run`]:
-/// computes the controller's inputs (earliest start, predicted backlog of
-/// admitted work, the request's predicted service time, same-stream
-/// in-flight count) and returns the ready-to-queue state for an admitted
-/// request, or `None` when the request is shed.
-fn try_admit(
-    admission: &mut AdmissionCtrl,
-    req: Request,
-    streams: &[StreamSpec],
-    profiles: &HashMap<usize, Vec<f64>>,
-    active: &[Active],
-    avail: &[f64; 2],
-    now_s: f64,
-) -> Option<Active> {
-    let est_start = req.arrival_s.max(now_s).max(avail[0]).max(avail[1]);
-    let backlog: f64 = active.iter().map(|a| profiles[&a.model][a.next_op]).sum();
-    let service = profiles[&req.stream][0];
-    let in_stream = active.iter().filter(|a| a.req.stream == req.stream).count();
-    if !admission.admit(&req, est_start, backlog, service, in_stream) {
-        return None;
-    }
-    let g = &streams[req.stream].model;
-    Some(Active {
-        model: req.stream,
-        next_op: 0,
-        data_ready_s: req.arrival_s,
-        start_s: None,
-        energy_j: 0.0,
-        out_cpu: vec![INPUT_CPU_FRAC; g.num_ops()],
-        prev_placement: None,
-        req,
-    })
-}
 
 /// The serving engine.
 pub struct Engine {
@@ -267,24 +230,12 @@ impl Engine {
         }
     }
 
-    /// Suffix sums of the plan's predicted per-op latencies: entry `i` is
-    /// the predicted service time from op `i` (inclusive) to completion,
-    /// entry `num_ops` is 0. The scheduler's slack estimates and the
-    /// admission controller's backlog bound both read these, so they are
-    /// recomputed whenever a stream's plan changes.
+    /// The latency profile of `plan` (suffix sums of predicted per-op
+    /// latencies) against the live device snapshot.
     fn plan_profile(&self, g: &ModelGraph, plan: &Plan) -> Vec<f64> {
         let snap = self.device.snapshot();
-        let model: &dyn CostModel = match self.cfg.planner_info {
-            PlannerInfo::Profiler => &self.profiler as &dyn CostModel,
-            PlannerInfo::Oracle => &self.device as &dyn CostModel,
-        };
-        let lat =
-            crate::partition::plan::per_op_latencies(g, &plan.placements, model, &snap);
-        let mut suffix = vec![0.0; lat.len() + 1];
-        for i in (0..lat.len()).rev() {
-            suffix[i] = suffix[i + 1] + lat[i];
-        }
-        suffix
+        let model = cost_model(self.cfg.planner_info, &self.profiler, &self.device);
+        PlanTable::profile_of(g, plan, model, &snap)
     }
 
     fn plan_for(&mut self, g: &ModelGraph) -> Result<Plan> {
@@ -301,6 +252,18 @@ impl Engine {
         Ok(plan)
     }
 
+    /// Initial per-stream plans and latency profiles.
+    fn build_plan_table(&mut self, streams: &[StreamSpec]) -> Result<PlanTable> {
+        let mut plans = Vec::with_capacity(streams.len());
+        let mut profiles = Vec::with_capacity(streams.len());
+        for s in streams {
+            let plan = self.plan_for(&s.model)?;
+            profiles.push(self.plan_profile(&s.model, &plan));
+            plans.push(plan);
+        }
+        Ok(PlanTable::new(plans, profiles))
+    }
+
     /// Closed-loop run: `n_requests` back-to-back inferences of one model
     /// (the next request issues when the previous completes) — the
     /// measurement style of the paper's Figure 2 (continuous video
@@ -311,6 +274,17 @@ impl Engine {
         spec: &StreamSpec,
         n_requests: usize,
     ) -> Result<ServingReport> {
+        self.run_closed_loop_observed(spec, n_requests, &mut [])
+    }
+
+    /// [`Engine::run_closed_loop`] with observers receiving the kernel
+    /// events (op dispatch/complete, monitor ticks, re-plans, completions).
+    pub fn run_closed_loop_observed(
+        &mut self,
+        spec: &StreamSpec,
+        n_requests: usize,
+        observers: &mut [&mut dyn SimObserver],
+    ) -> Result<ServingReport> {
         let g = spec.model.clone();
         let mut plan = self.plan_for(&g)?;
         let mut latencies = LatencyRecorder::new();
@@ -320,11 +294,12 @@ impl Engine {
         let mut last_monitor_s = 0.0f64;
         let t0 = self.device.time_s();
 
-        for _ in 0..n_requests {
+        for r in 0..n_requests {
             let arrival = self.device.time_s();
             let mut out_cpu = vec![INPUT_CPU_FRAC; g.num_ops()];
             let mut prev: Option<Placement> = None;
             let mut req_latency = 0.0;
+            let mut req_energy = 0.0;
             for i in 0..g.num_ops() {
                 let op = &g.ops[i];
                 let placement = plan.placements[i];
@@ -344,12 +319,14 @@ impl Engine {
                     concurrent: false,
                 };
                 let snap = self.device.snapshot();
+                let op_start = self.device.time_s();
                 let measured = self.device.measure(op, placement, &ctx);
                 self.profiler.observe(op, placement, &ctx, &snap, &measured);
                 energy.add_op(&measured);
                 cpu_busy_total += measured.cpu_busy_s;
                 gpu_busy_total += measured.gpu_busy_s;
                 req_latency += measured.latency_s;
+                req_energy += measured.energy_j;
                 out_cpu[i] = placement.frac_on(Proc::Cpu);
                 prev = Some(placement);
                 self.device.advance(
@@ -358,39 +335,44 @@ impl Engine {
                     if placement.uses(Proc::Gpu) { 1.0 } else { 0.0 },
                 );
                 self.controller.tick();
+                emit(
+                    observers,
+                    &Event::OpDispatch {
+                        request: r,
+                        stream: spec.id,
+                        op: i,
+                        start_s: op_start,
+                        placement,
+                    },
+                );
+                emit(
+                    observers,
+                    &Event::OpComplete {
+                        request: r,
+                        stream: spec.id,
+                        op: i,
+                        end_s: op_start + measured.latency_s,
+                        latency_s: measured.latency_s,
+                        energy_j: measured.energy_j,
+                    },
+                );
 
                 // monitor + regime detection
                 if self.device.time_s() - last_monitor_s >= self.cfg.monitor_period_s {
                     last_monitor_s = self.device.time_s();
-                    self.monitor.sample(self.device.snapshot());
-                    if self.monitor.regime_changed() {
-                        self.profiler.reset_correction();
-                        let snap = self.device.snapshot();
-                        let model = match self.cfg.planner_info {
-                            PlannerInfo::Profiler => &self.profiler as &dyn CostModel,
-                            PlannerInfo::Oracle => &self.device as &dyn CostModel,
-                        };
-                        if let Some((p, dt)) = self.controller.on_regime_change(
-                            &g,
-                            self.policy.as_ref(),
-                            model,
-                            &snap,
-                            self.cfg.objective,
-                            Some(&mut self.plan_cache),
-                        ) {
-                            plan = p;
-                            req_latency += dt;
-                            self.device.advance(dt, 1.0, 0.0);
-                        }
-                    }
+                    self.monitor_sample_closed_loop(
+                        &g,
+                        spec.id,
+                        &mut plan,
+                        &mut req_latency,
+                        observers,
+                    );
                 }
                 // drift-triggered incremental repartition (AdaOper only)
                 if matches!(self.cfg.policy, PolicyKind::AdaOper) && self.profiler.drifted() {
                     let snap = self.device.snapshot();
-                    let model = match self.cfg.planner_info {
-                        PlannerInfo::Profiler => &self.profiler as &dyn CostModel,
-                        PlannerInfo::Oracle => &self.device as &dyn CostModel,
-                    };
+                    let model =
+                        cost_model(self.cfg.planner_info, &self.profiler, &self.device);
                     if let Some((p, dt)) = self.controller.on_drift(
                         &g,
                         &plan,
@@ -402,12 +384,37 @@ impl Engine {
                         plan = p;
                         req_latency += dt; // decision runs on the CPU path
                         self.device.advance(dt, 1.0, 0.0);
+                        emit(
+                            observers,
+                            &Event::RegimeReplan {
+                                stream: spec.id,
+                                t_s: self.device.time_s(),
+                                trigger: Trigger::Drift,
+                                decision_s: dt,
+                            },
+                        );
                     }
                 }
             }
             let finish = self.device.time_s();
-            latencies.record(req_latency, 0.0, finish - arrival <= spec.slo_s);
+            let met = finish - arrival <= spec.slo_s;
+            latencies.record(req_latency, 0.0, met);
             energy.finish_inference();
+            emit_done(
+                observers,
+                &RequestOutcome {
+                    request: Request {
+                        id: r,
+                        stream: spec.id,
+                        arrival_s: arrival,
+                        deadline_s: arrival + spec.slo_s,
+                    },
+                    start_s: arrival,
+                    finish_s: finish,
+                    energy_j: req_energy,
+                },
+                met,
+            );
         }
 
         let wall = (self.device.time_s() - t0).max(1e-9);
@@ -435,276 +442,225 @@ impl Engine {
         })
     }
 
+    /// Closed-loop monitor sample: regime detection plus re-plan, with the
+    /// virtual decision time charged to the in-flight request's latency.
+    fn monitor_sample_closed_loop(
+        &mut self,
+        g: &ModelGraph,
+        stream: usize,
+        plan: &mut Plan,
+        req_latency: &mut f64,
+        observers: &mut [&mut dyn SimObserver],
+    ) {
+        self.monitor.sample(self.device.snapshot());
+        let regime_changed = self.monitor.regime_changed();
+        emit(
+            observers,
+            &Event::MonitorTick {
+                t_s: self.device.time_s(),
+                regime_changed,
+            },
+        );
+        if !regime_changed {
+            return;
+        }
+        self.profiler.reset_correction();
+        let snap = self.device.snapshot();
+        let model = cost_model(self.cfg.planner_info, &self.profiler, &self.device);
+        if let Some((p, dt)) = self.controller.on_regime_change(
+            g,
+            self.policy.as_ref(),
+            model,
+            &snap,
+            self.cfg.objective,
+            Some(&mut self.plan_cache),
+        ) {
+            *plan = p;
+            *req_latency += dt;
+            self.device.advance(dt, 1.0, 0.0);
+            emit(
+                observers,
+                &Event::RegimeReplan {
+                    stream,
+                    t_s: self.device.time_s(),
+                    trigger: Trigger::RegimeChange,
+                    decision_s: dt,
+                },
+            );
+        }
+    }
+
     /// Run the engine over `streams` for `cfg.duration_s` of virtual time
     /// (requests arriving before the horizon are all completed).
     pub fn run(&mut self, streams: &[StreamSpec]) -> Result<ServingReport> {
+        self.run_observed(streams, &mut [])
+    }
+
+    /// [`Engine::run`], broadcasting every kernel event to `observers`.
+    ///
+    /// This is the thin driver over the [`crate::sim`] stages: seed the
+    /// event queue with arrivals, then loop — admit, pick, advance,
+    /// monitor, execute, drift, complete — with each concern delegated to
+    /// its stage. Stream ids must equal their index in `streams`.
+    pub fn run_observed(
+        &mut self,
+        streams: &[StreamSpec],
+        observers: &mut [&mut dyn SimObserver],
+    ) -> Result<ServingReport> {
         if streams.is_empty() {
             bail!("no streams");
         }
-        let mut rng = Prng::new(self.cfg.seed);
-
-        // --- arrivals
-        let mut requests: Vec<Request> = Vec::new();
-        for s in streams {
-            let mut r = rng.split();
-            for (k, t) in s.arrival.timestamps(self.cfg.duration_s, &mut r).iter().enumerate()
-            {
-                requests.push(Request {
-                    id: k * streams.len() + s.id,
-                    stream: s.id,
-                    arrival_s: *t,
-                    deadline_s: *t + s.slo_s,
-                });
+        for (i, s) in streams.iter().enumerate() {
+            if s.id != i {
+                bail!("stream ids must equal their index (stream {} has id {})", i, s.id);
             }
         }
-        // total_cmp: a NaN arrival must not panic the engine mid-run (it
-        // sorts last instead and fails the deadline like any late request)
-        requests.sort_by(|a, b| a.arrival_s.total_cmp(&b.arrival_s));
-        let total_requests = requests.len();
-        if total_requests == 0 {
-            bail!("duration too short: no requests generated");
-        }
-
-        // --- initial plans (and their latency profiles) per stream
-        let mut plans: HashMap<usize, Plan> = HashMap::new();
-        let mut profiles: HashMap<usize, Vec<f64>> = HashMap::new();
-        for s in streams {
-            let plan = self.plan_for(&s.model)?;
-            profiles.insert(s.id, self.plan_profile(&s.model, &plan));
-            plans.insert(s.id, plan);
-        }
-
-        // --- scheduling state
-        let scheduler = scheduler::by_kind(self.cfg.scheduler);
-        let mut admission = AdmissionCtrl::new(self.cfg.admission);
-        let mut avail = [0.0f64; 2]; // per-proc availability time
-        let mut busy_acc = [0.0f64; 2]; // busy seconds since last advance
-        let mut latencies = LatencyRecorder::new();
-        let mut energy = EnergyAccount::new();
-        let mut outcomes: Vec<RequestOutcome> = Vec::new();
-        let mut active: Vec<Active> = Vec::new();
-        let mut next_arrival = 0usize;
-        let mut last_monitor_s = 0.0f64;
-        let mut cpu_busy_total = 0.0f64;
-        let mut gpu_busy_total = 0.0f64;
+        let mut queue = EventQueue::new();
+        let arrivals =
+            ArrivalSource::seed(&mut queue, streams, self.cfg.duration_s, self.cfg.seed)?;
+        let mut plans = self.build_plan_table(streams)?;
+        let mut admission = AdmissionStage::new(self.cfg.admission);
+        let mut dispatch = DispatchStage::new(self.cfg.scheduler);
+        let mut exec = ExecStage::new();
+        let mut monitor = MonitorStage::new(self.cfg.monitor_period_s);
 
         loop {
-            // admit arrivals that occurred up to the earliest runnable time
-            while next_arrival < requests.len() && active.is_empty() {
-                let req = requests[next_arrival].clone();
-                next_arrival += 1;
-                let now = self.device.time_s();
-                if let Some(a) =
-                    try_admit(&mut admission, req, streams, &profiles, &active, &avail, now)
-                {
-                    active.push(a);
-                } // else: shed; try the next queued arrival
+            // admit arrivals until one is active (shed arrivals pop the next)
+            while !exec.has_active() {
+                match queue.pop() {
+                    Some((_, Event::Arrival { req, .. })) => {
+                        let now = self.device.time_s();
+                        self.admit_one(req, streams, &plans, &mut admission, &mut exec,
+                            &mut dispatch, now, observers);
+                    }
+                    _ => break,
+                }
             }
-            if active.is_empty() {
+            if !exec.has_active() {
                 break; // all done
             }
 
             // the dispatch policy picks which request runs its next op
-            let candidates: Vec<Candidate> = active
-                .iter()
-                .enumerate()
-                .map(|(ai, a)| {
-                    let placement = plans[&a.model].placements[a.next_op];
-                    let mut start = a.data_ready_s;
-                    for p in Proc::ALL {
-                        if placement.uses(p) {
-                            start = start.max(avail[p.index()]);
-                        }
-                    }
-                    Candidate {
-                        active_idx: ai,
-                        start_s: start,
-                        arrival_s: a.req.arrival_s,
-                        deadline_s: a.req.deadline_s,
-                        remaining_s: profiles[&a.model][a.next_op],
-                    }
-                })
-                .collect();
-            let chosen = candidates[scheduler.pick(&candidates)];
-            let (ai, mut start) = (chosen.active_idx, chosen.start_s);
+            let d = dispatch.pick(exec.active(), &plans, exec.avail());
 
-            // if a queued arrival could begin before `start`, admit it
-            if next_arrival < requests.len() && requests[next_arrival].arrival_s < start {
-                let req = requests[next_arrival].clone();
-                next_arrival += 1;
-                let now = self.device.time_s();
-                if let Some(a) =
-                    try_admit(&mut admission, req, streams, &profiles, &active, &avail, now)
-                {
-                    active.push(a);
+            // a strictly earlier queued arrival preempts the decision
+            if queue.peek_arrival_time().is_some_and(|t| t < d.start_s) {
+                if let Some((_, Event::Arrival { req, .. })) = queue.pop() {
+                    let now = self.device.time_s();
+                    self.admit_one(req, streams, &plans, &mut admission, &mut exec,
+                        &mut dispatch, now, observers);
                 }
                 continue; // re-evaluate (with the newcomer, or the next arrival)
             }
 
-            // --- advance virtual time to `start`
-            let now = self.device.time_s();
-            if start > now {
-                let dt = start - now;
-                let u_cpu = (busy_acc[0] / dt).min(1.0);
-                let u_gpu = (busy_acc[1] / dt).min(1.0);
-                busy_acc = [0.0, 0.0];
-                self.device.advance(dt, u_cpu, u_gpu);
-            } else {
-                start = now;
+            // advance virtual time, then deliver a due monitor tick
+            let start_s = exec.advance_to(&mut self.device, d.start_s);
+            if let Some(tick) = monitor.maybe_tick(
+                &mut self.monitor, &self.device, &mut self.profiler, self.policy.as_ref(),
+                &mut self.controller, &mut self.plan_cache, &mut plans, streams,
+                self.cfg.planner_info, self.cfg.objective,
+            ) {
+                emit(observers, &Event::MonitorTick {
+                    t_s: self.device.time_s(), regime_changed: tick.regime_changed,
+                });
+                for (stream, dt) in &tick.replans {
+                    exec.charge_cpu_decision(*dt); // decision runs on CPU
+                    emit(observers, &Event::RegimeReplan {
+                        stream: *stream, t_s: self.device.time_s(),
+                        trigger: Trigger::RegimeChange, decision_s: *dt,
+                    });
+                }
+                dispatch.invalidate_all();
             }
 
-            // periodic monitor sampling + regime detection; latency
-            // profiles refresh against the live snapshot every sample so
-            // the scheduler's slack and the admission controller's backlog
-            // estimates track device dynamics (drift, background load)
-            if self.device.time_s() - last_monitor_s >= self.cfg.monitor_period_s {
-                last_monitor_s = self.device.time_s();
-                self.monitor.sample(self.device.snapshot());
-                if self.monitor.regime_changed() {
-                    self.profiler.reset_correction();
-                    let snap = self.device.snapshot();
-                    for s in streams {
-                        let model = match self.cfg.planner_info {
-                            PlannerInfo::Profiler => &self.profiler as &dyn CostModel,
-                            PlannerInfo::Oracle => &self.device as &dyn CostModel,
-                        };
-                        if let Some((plan, dt)) = self.controller.on_regime_change(
-                            &s.model,
-                            self.policy.as_ref(),
-                            model,
-                            &snap,
-                            self.cfg.objective,
-                            Some(&mut self.plan_cache),
-                        ) {
-                            plans.insert(s.id, plan);
-                            avail[Proc::Cpu.index()] += dt; // decision runs on CPU
-                        }
-                    }
-                }
-                // refresh after any regime re-plan so profiles match the
-                // adopted plans and the live snapshot (drift, background)
-                for s in streams {
-                    profiles.insert(s.id, self.plan_profile(&s.model, &plans[&s.id]));
-                }
-            }
-
-            // --- execute the chosen op
-            let a = &mut active[ai];
-            let g = streams[a.model].model.clone();
-            let op = &g.ops[a.next_op];
-            let planned = plans[&a.model].placements[a.next_op];
-            let input_cpu_fracs: Vec<f64> = if op.inputs.is_empty() {
-                vec![INPUT_CPU_FRAC; op.in_shapes.len()]
-            } else {
-                op.inputs.iter().map(|&j| a.out_cpu[j]).collect()
-            };
-            let (new_run_cpu, new_run_gpu) = match a.prev_placement {
-                None => (true, true),
-                Some(p) => (!p.uses(Proc::Cpu), !p.uses(Proc::Gpu)),
-            };
-            // slack if the op starts now: time to spare before the deadline
-            // after the predicted remaining work (this op inclusive)
-            let slack_s = a.req.deadline_s - (start + profiles[&a.model][a.next_op]);
-            let others_running = active.len() > 1;
-            let ctx = ExecCtx {
-                input_cpu_fracs,
-                new_run_cpu,
-                new_run_gpu,
-                concurrent: others_running,
-            };
-            let snap = self.device.snapshot();
-            let placement = {
-                let model: &dyn CostModel = match self.cfg.planner_info {
-                    PlannerInfo::Profiler => &self.profiler as &dyn CostModel,
-                    PlannerInfo::Oracle => &self.device as &dyn CostModel,
-                };
-                let wanted = scheduler.place(planned, op, &ctx, &snap, model, slack_s);
-                // `start` was clamped against the *planned* placement's
-                // processors only; an override may not claim a processor
-                // that is still busy at `start` (it would double-book and
-                // rewind `avail`) — fall back to the plan in that case
-                let feasible = Proc::ALL
-                    .iter()
-                    .all(|&p| !wanted.uses(p) || avail[p.index()] <= start);
-                if feasible {
-                    wanted
-                } else {
-                    planned
-                }
-            };
-            let measured = self.device.measure(op, placement, &ctx);
-            self.profiler.observe(op, placement, &ctx, &snap, &measured);
-            energy.add_op(&measured);
-            let a = &mut active[ai];
-            a.energy_j += measured.energy_j;
-            if a.start_s.is_none() {
-                a.start_s = Some(start);
-            }
-            a.out_cpu[a.next_op] = placement.frac_on(Proc::Cpu);
-            a.prev_placement = Some(placement);
-            a.data_ready_s = start + measured.latency_s;
-            for p in Proc::ALL {
-                if placement.uses(p) {
-                    avail[p.index()] = start + measured.latency_s;
-                    busy_acc[p.index()] += measured.latency_s;
-                }
-            }
-            cpu_busy_total += measured.cpu_busy_s;
-            gpu_busy_total += measured.gpu_busy_s;
-            if let Some(hook) = &mut self.numerics {
-                hook(&a.req, op)?;
-            }
-            a.next_op += 1;
+            // execute the chosen op and account for it
+            let rec = exec.execute(
+                d.active_idx, start_s, streams, &plans, &mut self.device,
+                &mut self.profiler, dispatch.scheduler(), self.cfg.planner_info,
+                &mut self.numerics,
+            )?;
             self.controller.tick();
+            dispatch.note_op_executed(d.active_idx);
+            emit(observers, &Event::OpDispatch {
+                request: rec.request, stream: rec.stream, op: rec.op,
+                start_s: rec.start_s, placement: rec.placement,
+            });
+            emit(observers, &Event::OpComplete {
+                request: rec.request, stream: rec.stream, op: rec.op,
+                end_s: rec.end_s, latency_s: rec.latency_s, energy_j: rec.energy_j,
+            });
 
-            // --- drift-triggered incremental repartition (AdaOper only)
-            if matches!(self.cfg.policy, PolicyKind::AdaOper) && self.profiler.drifted() {
-                let frontier = active[ai].next_op;
-                let stream_id = active[ai].model;
-                let out_cpu = active[ai].out_cpu.clone();
-                let snap = self.device.snapshot();
-                let model = match self.cfg.planner_info {
-                    PlannerInfo::Profiler => &self.profiler as &dyn CostModel,
-                    PlannerInfo::Oracle => &self.device as &dyn CostModel,
-                };
-                if let Some((plan, dt)) = self.controller.on_drift(
-                    &g,
-                    &plans[&stream_id],
-                    frontier,
-                    model,
-                    &snap,
-                    Some(&out_cpu),
-                ) {
-                    profiles.insert(stream_id, self.plan_profile(&g, &plan));
-                    plans.insert(stream_id, plan);
-                    avail[Proc::Cpu.index()] += dt;
-                }
+            // drift fast path (AdaOper only)
+            if let Some((stream, dt)) = monitor.maybe_drift(
+                d.active_idx, exec.active(), streams, &self.device, &self.profiler,
+                &mut self.controller, &mut plans, self.cfg.policy, self.cfg.planner_info,
+            ) {
+                exec.charge_cpu_decision(dt);
+                dispatch.invalidate_all();
+                emit(observers, &Event::RegimeReplan {
+                    stream, t_s: self.device.time_s(),
+                    trigger: Trigger::Drift, decision_s: dt,
+                });
             }
 
-            // --- completion
-            if active[ai].next_op == g.num_ops() {
-                let a = active.swap_remove(ai);
-                let outcome = RequestOutcome {
-                    start_s: a.start_s.unwrap(),
-                    finish_s: a.data_ready_s,
-                    energy_j: a.energy_j,
-                    request: a.req,
-                };
-                latencies.record(
-                    outcome.latency_s(),
-                    outcome.queue_s(),
-                    outcome.met_deadline(),
-                );
-                energy.finish_inference();
-                outcomes.push(outcome);
+            // completion
+            if let Some(outcome) = exec.complete_if_done(d.active_idx) {
+                dispatch.note_removed(d.active_idx);
+                let met = outcome.met_deadline();
+                emit_done(observers, &outcome, met);
             }
         }
+        Ok(self.assemble_report(streams, &exec, &admission, dispatch.name(), arrivals.total()))
+    }
 
-        // --- report
+    /// One admission: run the controller, activate on success, and
+    /// broadcast the arrival (with its verdict) to observers.
+    #[allow(clippy::too_many_arguments)]
+    fn admit_one(
+        &self,
+        req: Request,
+        streams: &[StreamSpec],
+        plans: &PlanTable,
+        admission: &mut AdmissionStage,
+        exec: &mut ExecStage,
+        dispatch: &mut DispatchStage,
+        now_s: f64,
+        observers: &mut [&mut dyn SimObserver],
+    ) {
+        let ev_req = req.clone();
+        let admitted = match admission.try_admit(
+            req,
+            streams,
+            plans,
+            exec.active(),
+            exec.avail(),
+            now_s,
+        ) {
+            Some(a) => {
+                exec.admit(a);
+                dispatch.note_admitted();
+                true
+            }
+            None => false,
+        };
+        emit(observers, &Event::Arrival { req: ev_req, admitted });
+    }
+
+    /// Fold the stages' final state into the serving report.
+    fn assemble_report(
+        &self,
+        streams: &[StreamSpec],
+        exec: &ExecStage,
+        admission: &AdmissionStage,
+        scheduler_name: &str,
+        total_requests: usize,
+    ) -> ServingReport {
         let wall = self.device.time_s().max(self.cfg.duration_s);
         let counters = admission.counters();
+        let latencies = exec.latencies();
+        let energy = exec.energy();
         let sched = SchedStats {
-            scheduler: scheduler.name().to_string(),
+            scheduler: scheduler_name.to_string(),
             admission: admission.policy().name().to_string(),
             offered: counters.offered,
             admitted: counters.admitted,
@@ -712,14 +668,19 @@ impl Engine {
             dropped_capacity: counters.dropped_capacity,
             deadline_misses: latencies.misses(),
         };
-        let report = ServingReport {
+        debug_assert_eq!(counters.offered, total_requests);
+        debug_assert_eq!(
+            exec.outcomes().len() + counters.shed_late + counters.dropped_capacity,
+            total_requests
+        );
+        ServingReport {
             policy: self.policy.name().to_string(),
             condition: self.device.condition_name().to_string(),
             device: self.cfg.device_label.clone(),
             models: streams.iter().map(|s| s.model.name.clone()).collect(),
             duration_s: wall,
-            requests: outcomes.len(),
-            throughput_hz: outcomes.len() as f64 / wall,
+            requests: exec.outcomes().len(),
+            throughput_hz: exec.outcomes().len() as f64 / wall,
             latency: latencies.summary(),
             latency_hist: Some(LogHistogram::latency_of(latencies.samples())),
             queue: latencies.queue_summary(),
@@ -727,19 +688,13 @@ impl Engine {
             total_energy_j: energy.total_j(self.device.static_power_w(), wall),
             j_per_inference: energy.j_per_inference(self.device.static_power_w(), wall),
             inferences_per_j: energy.inferences_per_j(self.device.static_power_w(), wall),
-            avg_cpu_util: self.device.avg_cpu_util(cpu_busy_total / wall),
-            avg_gpu_util: (gpu_busy_total / wall).min(1.0),
+            avg_cpu_util: self.device.avg_cpu_util(exec.cpu_busy_total() / wall),
+            avg_gpu_util: (exec.gpu_busy_total() / wall).min(1.0),
             repartitions: self.controller.repartitions(),
             partition_overhead_s: self.controller.mean_decision_s(),
             plan_cache: self.plan_cache_stats(),
             sched: Some(sched),
-        };
-        debug_assert_eq!(counters.offered, total_requests);
-        debug_assert_eq!(
-            outcomes.len() + counters.shed_late + counters.dropped_capacity,
-            total_requests
-        );
-        Ok(report)
+        }
     }
 }
 
@@ -748,6 +703,7 @@ mod tests {
     use super::*;
     use crate::graph::zoo;
     use crate::profiler::gbdt::GbdtParams;
+    use crate::sim::EventCounters;
     use crate::workload::Arrival;
 
     fn quick_calib() -> CalibConfig {
@@ -792,8 +748,12 @@ mod tests {
             calib: quick_calib(),
             ..Default::default()
         });
+        let periodic = Arrival::Periodic {
+            hz: 10.0,
+            jitter: 0.0,
+        };
         let streams = vec![
-            StreamSpec::new(0, zoo::yolov2_tiny(), Arrival::Periodic { hz: 10.0, jitter: 0.0 }, 0.5),
+            StreamSpec::new(0, zoo::yolov2_tiny(), periodic, 0.5),
             StreamSpec::new(1, zoo::mobilenet_v1(), Arrival::Poisson { hz: 8.0 }, 0.5),
         ];
         let r = e.run(&streams).unwrap();
@@ -802,7 +762,7 @@ mod tests {
     }
 
     #[test]
-    fn deterministic_given_seed() {
+    fn deterministic_given_seed_bit_identical() {
         let mk = || {
             let mut e = Engine::new(EngineConfig {
                 duration_s: 1.5,
@@ -816,7 +776,51 @@ mod tests {
         let a = mk();
         let b = mk();
         assert_eq!(a.requests, b.requests);
-        assert!((a.total_energy_j - b.total_energy_j).abs() < 1e-9);
+        // decision time is virtualized, so the whole timeline — and the
+        // rendered report row — is reproducible bit for bit
+        assert_eq!(a.row(), b.row());
+        assert_eq!(a.total_energy_j.to_bits(), b.total_energy_j.to_bits());
+    }
+
+    #[test]
+    fn non_contiguous_stream_ids_rejected() {
+        let mut e = Engine::new(EngineConfig {
+            duration_s: 1.0,
+            policy: PolicyKind::MaceGpu,
+            calib: quick_calib(),
+            ..Default::default()
+        });
+        let bad = vec![StreamSpec::new(
+            3,
+            zoo::yolov2_tiny(),
+            Arrival::Poisson { hz: 5.0 },
+            0.5,
+        )];
+        assert!(e.run(&bad).is_err());
+    }
+
+    #[test]
+    fn observers_see_consistent_event_counts() {
+        let mut e = Engine::new(EngineConfig {
+            duration_s: 1.5,
+            policy: PolicyKind::MaceGpu,
+            calib: quick_calib(),
+            ..Default::default()
+        });
+        let mut c = EventCounters::default();
+        let r = e.run_observed(&stream(8.0, 0.5), &mut [&mut c]).unwrap();
+        let sc = r.sched.clone().unwrap();
+        // the observer's tallies and the report's counters are two views
+        // of the same kernel events
+        assert_eq!(c.offered, sc.offered);
+        assert_eq!(c.admitted, sc.admitted);
+        assert_eq!(c.shed, sc.shed());
+        assert_eq!(c.completed, r.requests);
+        assert_eq!(c.deadline_misses, sc.deadline_misses);
+        assert_eq!(c.op_dispatches, c.op_completes);
+        let g = zoo::yolov2_tiny();
+        assert_eq!(c.op_dispatches, r.requests * g.num_ops());
+        assert!(c.monitor_ticks > 0, "no monitor ticks in 1.5 s");
     }
 
     #[test]

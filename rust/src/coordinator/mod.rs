@@ -6,6 +6,9 @@
 //!   op-level list scheduler that executes partition plans on the
 //!   simulated device, feeds measurements back to the profiler, and
 //!   triggers repartitioning. All benches and figures run through it.
+//!   Since the event-kernel refactor it is a thin driver over the
+//!   [`crate::sim`] stages, broadcasting every state change to
+//!   [`crate::sim::SimObserver`]s.
 //! * [`repartition`] — drift/regime-triggered repartition controller
 //!   (incremental window or full re-solve), with decision-time accounting
 //!   charged to the CPU.

@@ -48,6 +48,33 @@ pub const START_EPS_S: f64 = 1e-9;
 /// `rust/tests/scheduler_admission.rs`).
 pub const DROP_LATE_SAFETY: f64 = 0.25;
 
+/// Predicted backlog of admitted work that will still remain when a
+/// request actually arrives.
+///
+/// The admission controller's backlog estimate sums the remaining
+/// predicted service time of every admitted-but-unfinished request *as of
+/// now*. For a request whose `arrival_s` lies in the future (the engine
+/// admits arrivals ahead of the device clock), part of that backlog will
+/// have drained before the request shows up; charging the full backlog
+/// against its deadline spuriously sheds feasible requests. This
+/// discounts the backlog by the work the device can retire between the
+/// moment both processors are free (`max(now, max(avail))` — the same
+/// serialized bound `est_start` uses, so the credit stays conservative)
+/// and the arrival. For a request arriving at or before `now`, or while
+/// any processor is still busy past the arrival, the discount is zero
+/// and the estimate is unchanged — only genuine idle gaps ahead of a
+/// future arrival drain the backlog.
+pub fn remaining_backlog_at(
+    backlog_s: f64,
+    now_s: f64,
+    arrival_s: f64,
+    avail: &[f64; 2],
+) -> f64 {
+    let drain_start = now_s.max(avail[0]).max(avail[1]);
+    let drained = (now_s.max(arrival_s) - drain_start).max(0.0);
+    (backlog_s - drained).max(0.0)
+}
+
 /// One dispatchable request as the scheduler sees it: the earliest time
 /// its next operator could start, plus the request-level facts
 /// (arrival, deadline, predicted remaining work) policies order by.
@@ -488,6 +515,43 @@ mod tests {
         assert!(!ctrl.admit(&req(0.2, 1.2), 0.2, 0.2, 0.1, 2));
         let c = ctrl.counters();
         assert_eq!((c.admitted, c.dropped_capacity), (2, 1));
+    }
+
+    #[test]
+    fn future_arrival_backlog_drains_before_it() {
+        // 0.5 s of backlog at now = 1.0 with both processors free at 1.0;
+        // the request arrives at 10.0 — the backlog is long gone by then
+        let raw = 0.5;
+        let avail = [1.0, 1.0];
+        assert_eq!(remaining_backlog_at(raw, 1.0, 10.0, &avail), 0.0);
+        // partially drained: only 0.2 s fits before a 1.2 s arrival
+        let drained = remaining_backlog_at(raw, 1.0, 1.2, &avail);
+        assert!((drained - 0.3).abs() < 1e-12, "{drained}");
+        // arrival at or before now: estimate unchanged (no time to drain)
+        assert_eq!(remaining_backlog_at(raw, 1.0, 1.0, &avail), raw);
+        assert_eq!(remaining_backlog_at(raw, 1.0, 0.5, &avail), raw);
+        // drain only starts once a processor frees up
+        assert_eq!(remaining_backlog_at(raw, 1.0, 1.2, &[1.2, 1.3]), raw);
+    }
+
+    #[test]
+    fn future_arrival_not_spuriously_shed_regression() {
+        // regression for the drop-late skew: a future-arriving request
+        // whose backlog fully drains before its arrival must be admitted
+        let mut ctrl = AdmissionCtrl::new(AdmissionPolicy::DropLate);
+        let raw_backlog = 0.5;
+        let avail = [1.0, 1.0];
+        let backlog = remaining_backlog_at(raw_backlog, 1.0, 10.0, &avail);
+        let est_start = 10.0; // arrival dominates now and avail
+        assert!(
+            ctrl.admit(&req(10.0, 10.5), est_start, backlog, 0.2, 1),
+            "drained backlog must not shed a feasible future request"
+        );
+        // the pre-fix inputs (undrained backlog) shed the same request:
+        // 10.0 + (0.5 + 0.2) * 1.25 = 10.875 > 10.5
+        assert!(!ctrl.admit(&req(10.0, 10.5), est_start, raw_backlog, 0.2, 1));
+        let c = ctrl.counters();
+        assert_eq!((c.admitted, c.shed_late), (1, 1));
     }
 
     #[test]

@@ -18,6 +18,7 @@ use crate::coordinator::{Engine, EngineConfig, StreamSpec};
 use crate::graph::zoo;
 use crate::metrics::PlanCacheStats;
 use crate::profiler::calibrate::CalibConfig;
+use crate::sim::EventCounters;
 use crate::workload::{Arrival, WorkloadCondition};
 
 /// Scenario parameters.
@@ -93,17 +94,22 @@ pub fn run(cfg: &CacheScenarioConfig) -> Result<CacheScenarioResult> {
     ];
     let conditions = [WorkloadCondition::moderate(), WorkloadCondition::high()];
 
+    // one observer rides every phase: adopted re-plans arrive as
+    // `RegimeReplan` events, so the scenario counts them directly instead
+    // of reading back cumulative report counters
+    let mut counters = EventCounters::default();
     let mut requests = 0;
-    let mut repartitions = 0;
     let mut mean_decision_s = 0.0;
     for _cycle in 0..cfg.cycles {
         for cond in &conditions {
             engine.apply_condition(cond);
             for spec in &specs {
-                let r = engine.run_closed_loop(spec, cfg.requests_per_phase)?;
+                let r = engine.run_closed_loop_observed(
+                    spec,
+                    cfg.requests_per_phase,
+                    &mut [&mut counters],
+                )?;
                 requests += r.requests;
-                // controller statistics are cumulative across runs
-                repartitions = r.repartitions;
                 mean_decision_s = r.partition_overhead_s;
             }
         }
@@ -111,7 +117,7 @@ pub fn run(cfg: &CacheScenarioConfig) -> Result<CacheScenarioResult> {
     Ok(CacheScenarioResult {
         stats: engine.plan_cache_stats().unwrap_or_default(),
         requests,
-        repartitions,
+        repartitions: counters.replans,
         mean_decision_s,
     })
 }

@@ -50,6 +50,7 @@ pub mod metrics;
 pub mod partition;
 pub mod profiler;
 pub mod runtime;
+pub mod sim;
 pub mod soc;
 pub mod util;
 pub mod workload;

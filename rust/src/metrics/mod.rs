@@ -1,13 +1,15 @@
 //! Serving metrics: latency distributions, energy accounting, mergeable
-//! histograms for fleet-scale aggregation, and the aggregate report the
-//! benches and CLI print.
+//! histograms for fleet-scale aggregation, per-request JSONL traces, and
+//! the aggregate report the benches and CLI print.
 
 pub mod energy;
 pub mod histogram;
 pub mod latency;
 pub mod report;
+pub mod trace;
 
 pub use energy::EnergyAccount;
 pub use histogram::LogHistogram;
 pub use latency::LatencyRecorder;
 pub use report::{PlanCacheStats, SchedStats, ServingReport};
+pub use trace::TraceObserver;

@@ -1,0 +1,308 @@
+//! Per-request JSONL timelines, recorded through the simulation kernel's
+//! observer hooks.
+//!
+//! [`TraceObserver`] implements [`SimObserver`] and emits one JSON object
+//! per request, in completion order (shed requests emit at admission):
+//!
+//! ```json
+//! {"id":12,"stream":0,"arrival_s":0.8421,"deadline_s":0.9921,"shed":false,
+//!  "start_s":0.8510,"finish_s":0.9402,"latency_s":0.0981,"queue_s":0.0089,
+//!  "energy_j":0.0214,"met_deadline":true,
+//!  "ops":[{"op":0,"start_s":0.8510,"latency_s":0.0041,"energy_j":0.0011,
+//!          "placement":"gpu"}, ...]}
+//! ```
+//!
+//! Shed requests carry `"shed":true` and omit the execution fields. The
+//! CLI wires this behind `adaoper serve --trace <path>` (or the
+//! `[serve] trace` config key); every line is standalone JSON, so the
+//! file streams into `jq`/pandas without a wrapper.
+
+use std::collections::HashMap;
+use std::fmt::Write as _;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::request::RequestOutcome;
+use crate::sim::event::Event;
+use crate::sim::observer::SimObserver;
+
+/// One executed operator in a request's timeline.
+#[derive(Debug, Clone)]
+struct OpTrace {
+    op: usize,
+    start_s: f64,
+    latency_s: f64,
+    energy_j: f64,
+    placement: String,
+}
+
+/// Accumulating state of an in-flight request.
+#[derive(Debug, Clone)]
+struct ReqTrace {
+    stream: usize,
+    arrival_s: f64,
+    deadline_s: f64,
+    ops: Vec<OpTrace>,
+}
+
+/// [`SimObserver`] that renders per-request JSONL timelines.
+#[derive(Debug, Default)]
+pub struct TraceObserver {
+    pending: HashMap<usize, ReqTrace>,
+    lines: Vec<String>,
+}
+
+/// JSON-safe float: finite values print via `Display`, everything else
+/// becomes `null` (JSON has no NaN/Inf).
+fn json_f64(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x}")
+    } else {
+        "null".to_string()
+    }
+}
+
+/// Escape a string for a JSON literal (quotes, backslashes, control).
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+impl TraceObserver {
+    /// Empty trace.
+    pub fn new() -> TraceObserver {
+        TraceObserver::default()
+    }
+
+    /// Finished JSONL lines, in emission order.
+    pub fn lines(&self) -> &[String] {
+        &self.lines
+    }
+
+    /// Number of finished lines.
+    pub fn len(&self) -> usize {
+        self.lines.len()
+    }
+
+    /// Whether no lines were produced yet.
+    pub fn is_empty(&self) -> bool {
+        self.lines.is_empty()
+    }
+
+    /// The whole trace as one JSONL string (trailing newline included
+    /// when non-empty).
+    pub fn to_jsonl(&self) -> String {
+        if self.lines.is_empty() {
+            String::new()
+        } else {
+            let mut s = self.lines.join("\n");
+            s.push('\n');
+            s
+        }
+    }
+
+    /// Write the trace to `path`.
+    pub fn write_to(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_jsonl())
+            .with_context(|| format!("writing trace to {}", path.display()))
+    }
+}
+
+impl SimObserver for TraceObserver {
+    fn on_event(&mut self, event: &Event) {
+        match event {
+            Event::Arrival { req, admitted } => {
+                if *admitted {
+                    self.pending.insert(
+                        req.id,
+                        ReqTrace {
+                            stream: req.stream,
+                            arrival_s: req.arrival_s,
+                            deadline_s: req.deadline_s,
+                            ops: Vec::new(),
+                        },
+                    );
+                } else {
+                    self.lines.push(format!(
+                        "{{\"id\":{},\"stream\":{},\"arrival_s\":{},\
+                         \"deadline_s\":{},\"shed\":true}}",
+                        req.id,
+                        req.stream,
+                        json_f64(req.arrival_s),
+                        json_f64(req.deadline_s),
+                    ));
+                }
+            }
+            Event::OpDispatch {
+                request,
+                op,
+                start_s,
+                placement,
+                ..
+            } => {
+                if let Some(t) = self.pending.get_mut(request) {
+                    t.ops.push(OpTrace {
+                        op: *op,
+                        start_s: *start_s,
+                        latency_s: 0.0,
+                        energy_j: 0.0,
+                        placement: placement.to_string(),
+                    });
+                }
+            }
+            Event::OpComplete {
+                request,
+                latency_s,
+                energy_j,
+                ..
+            } => {
+                if let Some(t) = self.pending.get_mut(request) {
+                    if let Some(last) = t.ops.last_mut() {
+                        last.latency_s = *latency_s;
+                        last.energy_j = *energy_j;
+                    }
+                }
+            }
+            Event::MonitorTick { .. } | Event::RegimeReplan { .. } => {}
+        }
+    }
+
+    fn on_request_done(&mut self, outcome: &RequestOutcome, met_deadline: bool) {
+        let id = outcome.request.id;
+        let t = self.pending.remove(&id).unwrap_or(ReqTrace {
+            stream: outcome.request.stream,
+            arrival_s: outcome.request.arrival_s,
+            deadline_s: outcome.request.deadline_s,
+            ops: Vec::new(),
+        });
+        let mut ops = String::new();
+        for (i, o) in t.ops.iter().enumerate() {
+            if i > 0 {
+                ops.push(',');
+            }
+            let _ = write!(
+                ops,
+                "{{\"op\":{},\"start_s\":{},\"latency_s\":{},\"energy_j\":{},\
+                 \"placement\":\"{}\"}}",
+                o.op,
+                json_f64(o.start_s),
+                json_f64(o.latency_s),
+                json_f64(o.energy_j),
+                json_escape(&o.placement),
+            );
+        }
+        self.lines.push(format!(
+            "{{\"id\":{},\"stream\":{},\"arrival_s\":{},\"deadline_s\":{},\"shed\":false,\
+             \"start_s\":{},\"finish_s\":{},\"latency_s\":{},\"queue_s\":{},\"energy_j\":{},\
+             \"met_deadline\":{},\"ops\":[{}]}}",
+            id,
+            t.stream,
+            json_f64(t.arrival_s),
+            json_f64(t.deadline_s),
+            json_f64(outcome.start_s),
+            json_f64(outcome.finish_s),
+            json_f64(outcome.latency_s()),
+            json_f64(outcome.queue_s()),
+            json_f64(outcome.energy_j),
+            met_deadline,
+            ops,
+        ));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::Request;
+    use crate::soc::Placement;
+
+    fn req(id: usize, arrival: f64) -> Request {
+        Request {
+            id,
+            stream: 0,
+            arrival_s: arrival,
+            deadline_s: arrival + 0.5,
+        }
+    }
+
+    #[test]
+    fn records_one_line_per_request_in_completion_order() {
+        let mut tr = TraceObserver::new();
+        tr.on_event(&Event::Arrival {
+            req: req(0, 0.0),
+            admitted: true,
+        });
+        tr.on_event(&Event::OpDispatch {
+            request: 0,
+            stream: 0,
+            op: 0,
+            start_s: 0.01,
+            placement: Placement::GPU,
+        });
+        tr.on_event(&Event::OpComplete {
+            request: 0,
+            stream: 0,
+            op: 0,
+            end_s: 0.02,
+            latency_s: 0.01,
+            energy_j: 0.001,
+        });
+        tr.on_request_done(
+            &RequestOutcome {
+                request: req(0, 0.0),
+                start_s: 0.01,
+                finish_s: 0.02,
+                energy_j: 0.001,
+            },
+            true,
+        );
+        assert_eq!(tr.len(), 1);
+        let line = &tr.lines()[0];
+        assert!(line.starts_with('{') && line.ends_with('}'), "{line}");
+        assert!(line.contains("\"id\":0"));
+        assert!(line.contains("\"shed\":false"));
+        assert!(line.contains("\"met_deadline\":true"));
+        assert!(line.contains("\"ops\":[{"));
+        assert!(line.contains("\"placement\":\""));
+        assert!(tr.to_jsonl().ends_with('\n'));
+    }
+
+    #[test]
+    fn shed_requests_emit_immediately() {
+        let mut tr = TraceObserver::new();
+        tr.on_event(&Event::Arrival {
+            req: req(7, 1.25),
+            admitted: false,
+        });
+        assert_eq!(tr.len(), 1);
+        assert!(tr.lines()[0].contains("\"shed\":true"));
+        assert!(tr.lines()[0].contains("\"id\":7"));
+    }
+
+    #[test]
+    fn json_helpers() {
+        assert_eq!(json_f64(1.5), "1.5");
+        assert_eq!(json_f64(f64::NAN), "null");
+        assert_eq!(json_f64(f64::INFINITY), "null");
+        assert_eq!(json_escape("a\"b\\c"), "a\\\"b\\\\c");
+        assert_eq!(json_escape("\n"), "\\u000a");
+    }
+
+    #[test]
+    fn empty_trace_renders_empty() {
+        let tr = TraceObserver::new();
+        assert!(tr.is_empty());
+        assert_eq!(tr.to_jsonl(), "");
+    }
+}

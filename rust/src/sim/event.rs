@@ -1,0 +1,159 @@
+//! Typed simulation events.
+//!
+//! Every state change the serving kernel makes is described by one
+//! [`Event`]: a request arriving (and the admission verdict on it), an
+//! operator being dispatched to processors, an operator completing, the
+//! resource monitor sampling the device, or a re-plan being adopted.
+//! Events are what [`super::queue::EventQueue`] schedules and what
+//! [`super::observer::SimObserver`]s receive — scenarios, traces, and the
+//! fleet layer all consume the kernel through this vocabulary instead of
+//! reaching into engine internals.
+
+use crate::coordinator::repartition::Trigger;
+use crate::coordinator::request::Request;
+use crate::soc::Placement;
+
+/// One simulation event, stamped with virtual-time fields.
+#[derive(Debug, Clone)]
+pub enum Event {
+    /// A request reached the admission controller.
+    Arrival {
+        /// The arriving request.
+        req: Request,
+        /// Whether admission accepted it into the queue (`false` = shed).
+        /// Meaningful only on events *delivered* to observers; arrivals
+        /// still resident in the [`super::queue::EventQueue`] carry
+        /// `false` as a pending verdict — the engine rebuilds the event
+        /// with the real verdict at admission.
+        admitted: bool,
+    },
+    /// One operator of an active request was dispatched to processors.
+    OpDispatch {
+        /// Owning request id.
+        request: usize,
+        /// Owning stream id.
+        stream: usize,
+        /// Operator index within the model.
+        op: usize,
+        /// Virtual time the operator started executing.
+        start_s: f64,
+        /// Placement the operator actually ran with (plan or override).
+        placement: Placement,
+    },
+    /// A dispatched operator finished executing.
+    OpComplete {
+        /// Owning request id.
+        request: usize,
+        /// Owning stream id.
+        stream: usize,
+        /// Operator index within the model.
+        op: usize,
+        /// Virtual time the operator finished.
+        end_s: f64,
+        /// Measured operator latency, seconds.
+        latency_s: f64,
+        /// Measured dynamic energy, joules.
+        energy_j: f64,
+    },
+    /// The resource monitor sampled the device.
+    MonitorTick {
+        /// Virtual time of the sample.
+        t_s: f64,
+        /// Whether the sample flagged a regime change.
+        regime_changed: bool,
+    },
+    /// A re-plan was adopted for one stream.
+    RegimeReplan {
+        /// Stream whose plan changed.
+        stream: usize,
+        /// Virtual time of adoption.
+        t_s: f64,
+        /// What triggered the re-plan (drift fast path or regime change).
+        trigger: Trigger,
+        /// Virtual decision time charged to the CPU timeline, seconds.
+        decision_s: f64,
+    },
+}
+
+/// Discriminant of an [`Event`], for counting and display.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// [`Event::Arrival`].
+    Arrival,
+    /// [`Event::OpDispatch`].
+    OpDispatch,
+    /// [`Event::OpComplete`].
+    OpComplete,
+    /// [`Event::MonitorTick`].
+    MonitorTick,
+    /// [`Event::RegimeReplan`].
+    RegimeReplan,
+}
+
+impl EventKind {
+    /// Stable lower-case name (trace output).
+    pub fn name(&self) -> &'static str {
+        match self {
+            EventKind::Arrival => "arrival",
+            EventKind::OpDispatch => "op_dispatch",
+            EventKind::OpComplete => "op_complete",
+            EventKind::MonitorTick => "monitor_tick",
+            EventKind::RegimeReplan => "regime_replan",
+        }
+    }
+}
+
+impl Event {
+    /// The event's discriminant.
+    pub fn kind(&self) -> EventKind {
+        match self {
+            Event::Arrival { .. } => EventKind::Arrival,
+            Event::OpDispatch { .. } => EventKind::OpDispatch,
+            Event::OpComplete { .. } => EventKind::OpComplete,
+            Event::MonitorTick { .. } => EventKind::MonitorTick,
+            Event::RegimeReplan { .. } => EventKind::RegimeReplan,
+        }
+    }
+
+    /// The virtual time the event describes.
+    pub fn time_s(&self) -> f64 {
+        match self {
+            Event::Arrival { req, .. } => req.arrival_s,
+            Event::OpDispatch { start_s, .. } => *start_s,
+            Event::OpComplete { end_s, .. } => *end_s,
+            Event::MonitorTick { t_s, .. } => *t_s,
+            Event::RegimeReplan { t_s, .. } => *t_s,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: usize, t: f64) -> Request {
+        Request {
+            id,
+            stream: 0,
+            arrival_s: t,
+            deadline_s: t + 0.1,
+        }
+    }
+
+    #[test]
+    fn kinds_and_times() {
+        let ev = Event::Arrival {
+            req: req(3, 1.25),
+            admitted: true,
+        };
+        assert_eq!(ev.kind(), EventKind::Arrival);
+        assert_eq!(ev.time_s(), 1.25);
+        assert_eq!(ev.kind().name(), "arrival");
+        let ev = Event::MonitorTick {
+            t_s: 2.0,
+            regime_changed: false,
+        };
+        assert_eq!(ev.kind(), EventKind::MonitorTick);
+        assert_eq!(ev.time_s(), 2.0);
+    }
+}

@@ -1,0 +1,50 @@
+//! Deterministic discrete-event simulation kernel.
+//!
+//! The serving engine ([`crate::coordinator::engine`]) drives a
+//! two-resource op-level list scheduler over the simulated SoC. This
+//! module is the kernel it composes on:
+//!
+//! * [`event`] — the typed event vocabulary (`Arrival`, `OpDispatch`,
+//!   `OpComplete`, `MonitorTick`, `RegimeReplan`).
+//! * [`queue`] — the `(time, seq)`-keyed [`queue::EventQueue`]:
+//!   NaN-safe ([`f64::total_cmp`]) min-ordering with push-order
+//!   tie-breaking.
+//! * [`observer`] — the [`observer::SimObserver`] hook surface
+//!   (`on_event` / `on_request_done`) plus [`observer::EventCounters`].
+//!   Adding a scenario means adding an observer.
+//! * [`stages`] — the five composable stages `Engine::run` drives:
+//!   arrival source, admission, dispatch, execution, monitor.
+//!
+//! ## Delivery semantics (why this kernel replays the legacy loop)
+//!
+//! The device clock is *piecewise*: it only advances when an op is
+//! dispatched. The kernel therefore schedules the genuinely-future
+//! timeline (arrivals) through the [`queue::EventQueue`] and delivers the
+//! dispatch-coupled events at their causal points:
+//!
+//! * **Arrivals** pop from the queue. While no request is active the next
+//!   arrival pops unconditionally; while a dispatch is pending an arrival
+//!   preempts it only when *strictly* earlier than the dispatch start
+//!   (equal-time arrivals wait — the legacy admission rule).
+//! * **MonitorTick** is due at `last sample + period` but delivered at
+//!   the first dispatch whose time advance reaches the due point:
+//!   sampling mid-idle would read device snapshots the legacy engine
+//!   never took, breaking bit-identical replay.
+//! * **OpDispatch/OpComplete/RegimeReplan** are emitted to observers at
+//!   execution, completion (`start + latency`), and re-plan adoption.
+//!
+//! Golden replay of this contract is pinned by
+//! `rust/tests/golden_determinism.rs`.
+
+pub mod event;
+pub mod observer;
+pub mod queue;
+pub mod stages;
+
+pub use event::{Event, EventKind};
+pub use observer::{EventCounters, SimObserver};
+pub use queue::EventQueue;
+pub use stages::{
+    Active, AdmissionStage, ArrivalSource, Decision, DispatchStage, ExecStage, MonitorStage,
+    PlanTable,
+};

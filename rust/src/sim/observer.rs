@@ -1,0 +1,168 @@
+//! Observer hooks on the simulation kernel.
+//!
+//! A [`SimObserver`] receives every [`Event`] the kernel delivers plus a
+//! per-request completion hook. This is the extension seam the tentpole
+//! refactor introduces: *adding a scenario means adding an observer*.
+//! The trace writer ([`crate::metrics::trace::TraceObserver`]), the fleet
+//! runner's per-device probe, and the experiment sweeps all consume the
+//! engine through this trait instead of poking report internals.
+
+use crate::coordinator::request::RequestOutcome;
+
+use super::event::Event;
+
+/// Receives kernel events during a serving run.
+///
+/// Both hooks have empty defaults so an observer only implements what it
+/// needs. Observers must not assume events arrive in globally sorted
+/// virtual time: the kernel delivers them in *causal* order (a monitor
+/// tick fires at the dispatch that crossed its due time; an op completes
+/// immediately after it dispatches, at `start + latency`).
+pub trait SimObserver {
+    /// Called once per delivered event.
+    fn on_event(&mut self, _event: &Event) {}
+
+    /// Called once per completed request, after its final
+    /// [`Event::OpComplete`].
+    fn on_request_done(&mut self, _outcome: &RequestOutcome, _met_deadline: bool) {}
+}
+
+/// Broadcast one event to every observer.
+pub fn emit(observers: &mut [&mut dyn SimObserver], event: &Event) {
+    for o in observers.iter_mut() {
+        o.on_event(event);
+    }
+}
+
+/// Broadcast one request completion to every observer.
+pub fn emit_done(
+    observers: &mut [&mut dyn SimObserver],
+    outcome: &RequestOutcome,
+    met_deadline: bool,
+) {
+    for o in observers.iter_mut() {
+        o.on_request_done(outcome, met_deadline);
+    }
+}
+
+/// Event tallies — the workhorse observer the experiment sweeps and the
+/// fleet runner build on.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EventCounters {
+    /// Requests that reached admission ([`Event::Arrival`] count).
+    pub offered: usize,
+    /// Arrivals admitted into the queue.
+    pub admitted: usize,
+    /// Arrivals rejected at admission (any reason).
+    pub shed: usize,
+    /// Operators dispatched.
+    pub op_dispatches: usize,
+    /// Operators completed.
+    pub op_completes: usize,
+    /// Monitor samples taken.
+    pub monitor_ticks: usize,
+    /// Monitor samples that flagged a regime change.
+    pub regime_changes: usize,
+    /// Re-plans adopted (drift + regime, cached or solved).
+    pub replans: usize,
+    /// Requests that completed.
+    pub completed: usize,
+    /// Completed requests that missed their deadline.
+    pub deadline_misses: usize,
+}
+
+impl EventCounters {
+    /// Deadline-miss rate over completed requests (0 when none completed).
+    pub fn miss_rate(&self) -> f64 {
+        if self.completed == 0 {
+            0.0
+        } else {
+            self.deadline_misses as f64 / self.completed as f64
+        }
+    }
+}
+
+impl SimObserver for EventCounters {
+    fn on_event(&mut self, event: &Event) {
+        match event {
+            Event::Arrival { admitted, .. } => {
+                self.offered += 1;
+                if *admitted {
+                    self.admitted += 1;
+                } else {
+                    self.shed += 1;
+                }
+            }
+            Event::OpDispatch { .. } => self.op_dispatches += 1,
+            Event::OpComplete { .. } => self.op_completes += 1,
+            Event::MonitorTick { regime_changed, .. } => {
+                self.monitor_ticks += 1;
+                if *regime_changed {
+                    self.regime_changes += 1;
+                }
+            }
+            Event::RegimeReplan { .. } => self.replans += 1,
+        }
+    }
+
+    fn on_request_done(&mut self, _outcome: &RequestOutcome, met_deadline: bool) {
+        self.completed += 1;
+        if !met_deadline {
+            self.deadline_misses += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::Request;
+
+    fn outcome(arrival: f64, finish: f64, deadline: f64) -> RequestOutcome {
+        RequestOutcome {
+            request: Request {
+                id: 0,
+                stream: 0,
+                arrival_s: arrival,
+                deadline_s: deadline,
+            },
+            start_s: arrival,
+            finish_s: finish,
+            energy_j: 0.0,
+        }
+    }
+
+    #[test]
+    fn counters_tally_events() {
+        let mut c = EventCounters::default();
+        c.on_event(&Event::Arrival {
+            req: Request {
+                id: 0,
+                stream: 0,
+                arrival_s: 0.0,
+                deadline_s: 1.0,
+            },
+            admitted: true,
+        });
+        c.on_event(&Event::Arrival {
+            req: Request {
+                id: 1,
+                stream: 0,
+                arrival_s: 0.1,
+                deadline_s: 1.1,
+            },
+            admitted: false,
+        });
+        c.on_event(&Event::MonitorTick {
+            t_s: 0.2,
+            regime_changed: true,
+        });
+        assert_eq!((c.offered, c.admitted, c.shed), (2, 1, 1));
+        assert_eq!((c.monitor_ticks, c.regime_changes), (1, 1));
+        c.on_request_done(&outcome(0.0, 0.5, 1.0), true);
+        c.on_request_done(&outcome(0.1, 2.0, 1.1), false);
+        assert_eq!((c.completed, c.deadline_misses), (2, 1));
+        assert!((c.miss_rate() - 0.5).abs() < 1e-12);
+        assert_eq!(EventCounters::default().miss_rate(), 0.0);
+    }
+}

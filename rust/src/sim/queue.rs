@@ -1,0 +1,228 @@
+//! Deterministic discrete-event queue.
+//!
+//! A min-heap of [`Event`]s keyed by `(time, seq)`: earlier scheduled
+//! times pop first, and events scheduled for the *same* time pop in push
+//! order (`seq` is a monotonically increasing counter). Time comparison
+//! uses [`f64::total_cmp`], so a NaN timestamp cannot panic the kernel —
+//! it sorts after every finite time and drains last, exactly like the
+//! NaN-safe arrival sort the legacy engine used.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use super::event::Event;
+
+/// One scheduled entry: the event plus its `(time, seq)` key.
+#[derive(Debug, Clone)]
+struct Entry {
+    time_s: f64,
+    seq: u64,
+    event: Event,
+}
+
+impl PartialEq for Entry {
+    fn eq(&self, other: &Self) -> bool {
+        self.seq == other.seq
+    }
+}
+
+impl Eq for Entry {}
+
+impl Ord for Entry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // reversed: BinaryHeap is a max-heap, we want the earliest
+        // (time, seq) on top
+        other
+            .time_s
+            .total_cmp(&self.time_s)
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Deterministic `(time, seq)`-ordered event queue.
+#[derive(Debug, Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Entry>,
+    next_seq: u64,
+}
+
+impl EventQueue {
+    /// Empty queue.
+    pub fn new() -> EventQueue {
+        EventQueue::default()
+    }
+
+    /// Schedule `event` at `time_s`. Ties at equal `time_s` pop in push
+    /// order.
+    pub fn push(&mut self, time_s: f64, event: Event) {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.heap.push(Entry { time_s, seq, event });
+    }
+
+    /// Pop the earliest entry as `(time, event)`.
+    pub fn pop(&mut self) -> Option<(f64, Event)> {
+        self.heap.pop().map(|e| (e.time_s, e.event))
+    }
+
+    /// Scheduled time of the earliest entry, if any.
+    pub fn peek_time(&self) -> Option<f64> {
+        self.heap.peek().map(|e| e.time_s)
+    }
+
+    /// Scheduled time of the earliest entry *if* it is an arrival (the
+    /// kernel's preemption rule only looks at arrivals).
+    pub fn peek_arrival_time(&self) -> Option<f64> {
+        match self.heap.peek() {
+            Some(Entry {
+                time_s,
+                event: Event::Arrival { .. },
+                ..
+            }) => Some(*time_s),
+            _ => None,
+        }
+    }
+
+    /// Scheduled entries remaining.
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// Whether no entries remain.
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::Request;
+
+    fn arrival(id: usize, t: f64) -> Event {
+        Event::Arrival {
+            req: Request {
+                id,
+                stream: 0,
+                arrival_s: t,
+                deadline_s: t + 1.0,
+            },
+            admitted: false,
+        }
+    }
+
+    fn pop_id(q: &mut EventQueue) -> usize {
+        match q.pop() {
+            Some((_, Event::Arrival { req, .. })) => req.id,
+            other => panic!("expected arrival, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(3.0, arrival(3, 3.0));
+        q.push(1.0, arrival(1, 1.0));
+        q.push(2.0, arrival(2, 2.0));
+        assert_eq!(q.len(), 3);
+        assert_eq!(pop_id(&mut q), 1);
+        assert_eq!(pop_id(&mut q), 2);
+        assert_eq!(pop_id(&mut q), 3);
+        assert!(q.is_empty());
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn equal_times_tie_break_by_push_order() {
+        let mut q = EventQueue::new();
+        for id in 0..8 {
+            q.push(1.5, arrival(id, 1.5));
+        }
+        for id in 0..8 {
+            assert_eq!(pop_id(&mut q), id, "seq tie-break broke FIFO order");
+        }
+    }
+
+    #[test]
+    fn nan_times_sort_last_without_panicking() {
+        let mut q = EventQueue::new();
+        q.push(f64::NAN, arrival(9, f64::NAN));
+        q.push(1e12, arrival(1, 1e12));
+        q.push(0.0, arrival(0, 0.0));
+        assert_eq!(pop_id(&mut q), 0);
+        assert_eq!(pop_id(&mut q), 1);
+        // the NaN entry drains last instead of poisoning the ordering
+        assert_eq!(pop_id(&mut q), 9);
+    }
+
+    #[test]
+    fn interleaved_push_pop_keeps_order() {
+        let mut q = EventQueue::new();
+        q.push(2.0, arrival(2, 2.0));
+        q.push(1.0, arrival(1, 1.0));
+        assert_eq!(pop_id(&mut q), 1);
+        q.push(0.5, arrival(0, 0.5));
+        assert_eq!(pop_id(&mut q), 0);
+        assert_eq!(pop_id(&mut q), 2);
+    }
+
+    #[test]
+    fn peek_does_not_consume() {
+        let mut q = EventQueue::new();
+        q.push(4.0, arrival(4, 4.0));
+        q.push(2.0, arrival(2, 2.0));
+        assert_eq!(q.peek_time(), Some(2.0));
+        assert_eq!(q.peek_arrival_time(), Some(2.0));
+        assert_eq!(q.len(), 2);
+        assert_eq!(pop_id(&mut q), 2);
+    }
+
+    #[test]
+    fn peek_arrival_ignores_non_arrivals() {
+        let mut q = EventQueue::new();
+        q.push(
+            1.0,
+            Event::MonitorTick {
+                t_s: 1.0,
+                regime_changed: false,
+            },
+        );
+        q.push(2.0, arrival(2, 2.0));
+        assert_eq!(q.peek_time(), Some(1.0));
+        assert_eq!(q.peek_arrival_time(), None, "front is a tick, not an arrival");
+    }
+
+    #[test]
+    fn mixed_event_kinds_share_one_timeline() {
+        let mut q = EventQueue::new();
+        q.push(
+            0.2,
+            Event::MonitorTick {
+                t_s: 0.2,
+                regime_changed: false,
+            },
+        );
+        q.push(0.1, arrival(1, 0.1));
+        q.push(
+            0.3,
+            Event::OpDispatch {
+                request: 1,
+                stream: 0,
+                op: 0,
+                start_s: 0.3,
+                placement: crate::soc::Placement::CPU,
+            },
+        );
+        let kinds: Vec<_> = std::iter::from_fn(|| q.pop())
+            .map(|(_, ev)| ev.kind())
+            .collect();
+        use crate::sim::event::EventKind::*;
+        assert_eq!(kinds, vec![Arrival, MonitorTick, OpDispatch]);
+    }
+}

@@ -1,0 +1,882 @@
+//! The five composable stages the serving engine drives over the event
+//! kernel.
+//!
+//! [`crate::coordinator::engine::Engine::run`] used to be a ~300-line
+//! monolith interleaving arrival generation, admission, dispatch,
+//! virtual-time advance, monitor/regime logic, op execution, and
+//! accounting. Each concern now lives in its own stage with its own
+//! private state; the engine is a thin driver that wires them together
+//! and broadcasts [`super::event::Event`]s to observers:
+//!
+//! * [`ArrivalSource`] — pre-generates every request (stream-split PRNG,
+//!   exactly the legacy sequence) and seeds the [`EventQueue`].
+//! * [`AdmissionStage`] — wraps
+//!   [`crate::coordinator::scheduler::AdmissionCtrl`]; turns an admitted
+//!   arrival into an [`Active`] execution record.
+//! * [`DispatchStage`] — wraps the
+//!   [`crate::coordinator::scheduler::Scheduler`] policy and owns the
+//!   candidate construction, caching per-request placement/remaining-work
+//!   lookups between picks (the legacy loop rebuilt them from scratch on
+//!   every iteration).
+//! * [`ExecStage`] — op execution on the device, energy/latency
+//!   accounting, placement-override feasibility, completion.
+//! * [`MonitorStage`] — periodic monitor sampling, regime-change
+//!   re-planning, latency-profile refresh, and the drift fast path.
+//!
+//! **Replay contract.** For a fixed seed the stages reproduce the legacy
+//! monolith bit for bit (`rust/tests/golden_determinism.rs`): arrival
+//! order (including NaN and equal-time ties), every virtual-time advance,
+//! the dispatch-time-aligned monitor check, and the exact float
+//! expressions for candidate start times, slack, and backlog estimates
+//! were all preserved deliberately. Monitor ticks are due at
+//! `last_sample + period` but *delivered* at the first dispatch whose
+//! advance reaches the due time, because the device clock is piecewise —
+//! it only materializes at dispatch points (sampling mid-idle would read
+//! snapshots the legacy engine never took).
+
+use anyhow::{bail, Result};
+
+use crate::config::schema::{PolicyKind, SchedulerKind};
+use crate::coordinator::engine::{NumericsHook, PlannerInfo};
+use crate::coordinator::plan_cache::PlanCache;
+use crate::coordinator::repartition::RepartitionController;
+use crate::coordinator::request::{Request, RequestOutcome, StreamSpec};
+use crate::coordinator::scheduler::{
+    by_kind, remaining_backlog_at, AdmissionCounters, AdmissionCtrl, AdmissionPolicy, Candidate,
+    Scheduler,
+};
+use crate::graph::ModelGraph;
+use crate::metrics::{EnergyAccount, LatencyRecorder};
+use crate::partition::plan::{per_op_latencies, Plan, INPUT_CPU_FRAC};
+use crate::profiler::monitor::ResourceMonitor;
+use crate::profiler::{CostModel, EnergyProfiler};
+use crate::soc::device::{Device, ExecCtx, Snapshot};
+use crate::soc::{Placement, Proc};
+use crate::util::Prng;
+
+use super::event::Event;
+use super::queue::EventQueue;
+
+/// Select the cost model planning/scheduling sees.
+pub fn cost_model<'a>(
+    info: PlannerInfo,
+    profiler: &'a EnergyProfiler,
+    device: &'a Device,
+) -> &'a dyn CostModel {
+    match info {
+        PlannerInfo::Profiler => profiler as &dyn CostModel,
+        PlannerInfo::Oracle => device as &dyn CostModel,
+    }
+}
+
+/// Per-request execution state (owned by [`ExecStage`]).
+#[derive(Debug, Clone)]
+pub struct Active {
+    /// The admitted request.
+    pub req: Request,
+    /// Owning stream index (equals `req.stream`).
+    pub model: usize,
+    /// Next operator to execute.
+    pub next_op: usize,
+    /// When the next op's inputs are ready (virtual seconds).
+    pub data_ready_s: f64,
+    /// When the first op started (None until dispatched).
+    pub start_s: Option<f64>,
+    /// Dynamic energy attributed so far, joules.
+    pub energy_j: f64,
+    /// CPU-resident fraction of each op output produced so far.
+    pub out_cpu: Vec<f64>,
+    /// Placement of the previously executed op.
+    pub prev_placement: Option<Placement>,
+}
+
+/// Per-stream partition plans plus their latency profiles (suffix sums of
+/// predicted per-op latencies). Shared context the stages read and the
+/// monitor/drift paths refresh — indexed by stream id, which the engine
+/// requires to equal the stream's position.
+pub struct PlanTable {
+    plans: Vec<Plan>,
+    profiles: Vec<Vec<f64>>,
+}
+
+impl PlanTable {
+    /// Build from parallel per-stream vectors.
+    pub fn new(plans: Vec<Plan>, profiles: Vec<Vec<f64>>) -> PlanTable {
+        debug_assert_eq!(plans.len(), profiles.len());
+        PlanTable { plans, profiles }
+    }
+
+    /// The current plan of `stream`.
+    pub fn plan(&self, stream: usize) -> &Plan {
+        &self.plans[stream]
+    }
+
+    /// The current latency profile of `stream`: entry `i` is the predicted
+    /// service time from op `i` (inclusive) to completion; entry
+    /// `num_ops` is 0.
+    pub fn profile(&self, stream: usize) -> &[f64] {
+        &self.profiles[stream]
+    }
+
+    /// Replace the plan of `stream`.
+    pub fn set_plan(&mut self, stream: usize, plan: Plan) {
+        self.plans[stream] = plan;
+    }
+
+    /// Replace the latency profile of `stream`.
+    pub fn set_profile(&mut self, stream: usize, profile: Vec<f64>) {
+        self.profiles[stream] = profile;
+    }
+
+    /// Compute the latency profile of `plan` under `model` at `snap`.
+    pub fn profile_of(
+        g: &ModelGraph,
+        plan: &Plan,
+        model: &dyn CostModel,
+        snap: &Snapshot,
+    ) -> Vec<f64> {
+        let lat = per_op_latencies(g, &plan.placements, model, snap);
+        let mut suffix = vec![0.0; lat.len() + 1];
+        for i in (0..lat.len()).rev() {
+            suffix[i] = suffix[i + 1] + lat[i];
+        }
+        suffix
+    }
+
+    /// Refresh every stream's profile against the live snapshot (monitor
+    /// period boundary — keeps scheduler slack and admission backlog
+    /// estimates tracking device dynamics).
+    pub fn refresh_profiles(
+        &mut self,
+        streams: &[StreamSpec],
+        model: &dyn CostModel,
+        snap: &Snapshot,
+    ) {
+        for s in streams {
+            let profile = Self::profile_of(&s.model, &self.plans[s.id], model, snap);
+            self.profiles[s.id] = profile;
+        }
+    }
+}
+
+/// Pre-generated arrival timeline. Seeds the [`EventQueue`] with one
+/// [`Event::Arrival`] per request, preserving the legacy PRNG sequence
+/// (one [`Prng::split`] per stream, in stream order) and the legacy
+/// ordering (stable sort by arrival time ≡ heap `(time, seq)` order with
+/// stream-major push order).
+pub struct ArrivalSource {
+    total: usize,
+}
+
+impl ArrivalSource {
+    /// Generate all arrivals in `[0, duration_s)` and push them into
+    /// `queue`. Fails when no stream produces a request.
+    pub fn seed(
+        queue: &mut EventQueue,
+        streams: &[StreamSpec],
+        duration_s: f64,
+        seed: u64,
+    ) -> Result<ArrivalSource> {
+        let mut rng = Prng::new(seed);
+        let mut total = 0usize;
+        for s in streams {
+            let mut r = rng.split();
+            for (k, t) in s.arrival.timestamps(duration_s, &mut r).iter().enumerate() {
+                queue.push(
+                    *t,
+                    Event::Arrival {
+                        req: Request {
+                            id: k * streams.len() + s.id,
+                            stream: s.id,
+                            arrival_s: *t,
+                            deadline_s: *t + s.slo_s,
+                        },
+                        admitted: false,
+                    },
+                );
+                total += 1;
+            }
+        }
+        if total == 0 {
+            bail!("duration too short: no requests generated");
+        }
+        Ok(ArrivalSource { total })
+    }
+
+    /// Requests generated across all streams.
+    pub fn total(&self) -> usize {
+        self.total
+    }
+}
+
+/// Admission in front of the queue: wraps [`AdmissionCtrl`], computing
+/// its inputs (earliest start, predicted backlog of admitted work, the
+/// request's predicted service time, same-stream in-flight count) from
+/// the shared plan table and execution state.
+pub struct AdmissionStage {
+    ctrl: AdmissionCtrl,
+}
+
+impl AdmissionStage {
+    /// Build with zeroed counters.
+    pub fn new(policy: AdmissionPolicy) -> AdmissionStage {
+        AdmissionStage {
+            ctrl: AdmissionCtrl::new(policy),
+        }
+    }
+
+    /// Counter snapshot.
+    pub fn counters(&self) -> AdmissionCounters {
+        self.ctrl.counters()
+    }
+
+    /// The applied policy.
+    pub fn policy(&self) -> AdmissionPolicy {
+        self.ctrl.policy()
+    }
+
+    /// Decide admission for one arrival; returns the ready-to-queue state
+    /// for an admitted request, or `None` when it is shed.
+    ///
+    /// The decision is evaluated at the request's *arrival* time, not the
+    /// (possibly earlier) device time: `now.max(req.arrival_s)` anchors
+    /// the earliest-start estimate, and the backlog of admitted work is
+    /// discounted by what the processors can retire before the request
+    /// actually arrives ([`remaining_backlog_at`]) — a future-arriving
+    /// request must not be shed against a backlog that will have drained
+    /// by the time it shows up.
+    pub fn try_admit(
+        &mut self,
+        req: Request,
+        streams: &[StreamSpec],
+        plans: &PlanTable,
+        active: &[Active],
+        avail: &[f64; 2],
+        now_s: f64,
+    ) -> Option<Active> {
+        let now_eff = now_s.max(req.arrival_s);
+        let est_start = now_eff.max(avail[0]).max(avail[1]);
+        let backlog_raw: f64 = active
+            .iter()
+            .map(|a| plans.profile(a.model)[a.next_op])
+            .sum();
+        let backlog = remaining_backlog_at(backlog_raw, now_s, req.arrival_s, avail);
+        let service = plans.profile(req.stream)[0];
+        let in_stream = active.iter().filter(|a| a.req.stream == req.stream).count();
+        if !self.ctrl.admit(&req, est_start, backlog, service, in_stream) {
+            return None;
+        }
+        let g = &streams[req.stream].model;
+        Some(Active {
+            model: req.stream,
+            next_op: 0,
+            data_ready_s: req.arrival_s,
+            start_s: None,
+            energy_j: 0.0,
+            out_cpu: vec![INPUT_CPU_FRAC; g.num_ops()],
+            prev_placement: None,
+            req,
+        })
+    }
+}
+
+/// The dispatch decision: which active request runs its next op, and the
+/// earliest feasible start the pick was made at.
+#[derive(Debug, Clone, Copy)]
+pub struct Decision {
+    /// Index into the execution stage's active list.
+    pub active_idx: usize,
+    /// Earliest feasible start under the planned placement, virtual
+    /// seconds (the execution stage clamps this against the device clock).
+    pub start_s: f64,
+}
+
+/// Cached per-active-request dispatch facts (placement and predicted
+/// remaining work of its next op). `None` = recompute from the plan table
+/// on the next pick.
+#[derive(Debug, Clone, Copy)]
+struct Slot {
+    placement: Placement,
+    remaining_s: f64,
+}
+
+/// Dispatch-order policy over eligible ops: builds one [`Candidate`] per
+/// active request and asks the configured [`Scheduler`] to pick.
+///
+/// Candidate facts that require plan-table lookups are cached per request
+/// in slots and only recomputed when the engine signals that request's
+/// state changed ([`DispatchStage::note_op_executed`]) or the whole table
+/// moved ([`DispatchStage::invalidate_all`]) — the legacy loop paid two
+/// hash lookups per active request per iteration instead.
+pub struct DispatchStage {
+    scheduler: Box<dyn Scheduler + Send + Sync>,
+    slots: Vec<Option<Slot>>,
+    cands: Vec<Candidate>,
+}
+
+impl DispatchStage {
+    /// Build for a configured scheduler kind.
+    pub fn new(kind: SchedulerKind) -> DispatchStage {
+        DispatchStage {
+            scheduler: by_kind(kind),
+            slots: Vec::new(),
+            cands: Vec::new(),
+        }
+    }
+
+    /// The dispatch policy (the execution stage consults its placement
+    /// override hook).
+    pub fn scheduler(&self) -> &dyn Scheduler {
+        self.scheduler.as_ref()
+    }
+
+    /// Policy name as it appears in reports.
+    pub fn name(&self) -> &'static str {
+        self.scheduler.name()
+    }
+
+    /// Pick the next request to run an op for. `active` must be non-empty
+    /// and aligned with the slots this stage was notified about.
+    pub fn pick(&mut self, active: &[Active], plans: &PlanTable, avail: &[f64; 2]) -> Decision {
+        debug_assert_eq!(self.slots.len(), active.len());
+        self.cands.clear();
+        for (ai, a) in active.iter().enumerate() {
+            if self.slots[ai].is_none() {
+                self.slots[ai] = Some(Slot {
+                    placement: plans.plan(a.model).placements[a.next_op],
+                    remaining_s: plans.profile(a.model)[a.next_op],
+                });
+            }
+            let slot = self.slots[ai].expect("slot filled above");
+            let mut start = a.data_ready_s;
+            for p in Proc::ALL {
+                if slot.placement.uses(p) {
+                    start = start.max(avail[p.index()]);
+                }
+            }
+            self.cands.push(Candidate {
+                active_idx: ai,
+                start_s: start,
+                arrival_s: a.req.arrival_s,
+                deadline_s: a.req.deadline_s,
+                remaining_s: slot.remaining_s,
+            });
+        }
+        let chosen = self.cands[self.scheduler.pick(&self.cands)];
+        Decision {
+            active_idx: chosen.active_idx,
+            start_s: chosen.start_s,
+        }
+    }
+
+    /// An active request was admitted (appended to the active list).
+    pub fn note_admitted(&mut self) {
+        self.slots.push(None);
+    }
+
+    /// Request `ai` executed an op (its next-op facts changed).
+    pub fn note_op_executed(&mut self, ai: usize) {
+        self.slots[ai] = None;
+    }
+
+    /// Request `ai` completed and was `swap_remove`d from the active list.
+    pub fn note_removed(&mut self, ai: usize) {
+        self.slots.swap_remove(ai);
+    }
+
+    /// Plans or profiles changed for every stream (regime re-plan, drift
+    /// re-plan, or monitor profile refresh).
+    pub fn invalidate_all(&mut self) {
+        for s in &mut self.slots {
+            *s = None;
+        }
+    }
+}
+
+/// What one executed operator produced (event material for the driver).
+#[derive(Debug, Clone)]
+pub struct OpRecord {
+    /// Owning request id.
+    pub request: usize,
+    /// Owning stream id.
+    pub stream: usize,
+    /// Operator index.
+    pub op: usize,
+    /// Clamped start time the op ran at.
+    pub start_s: f64,
+    /// Completion time (`start + latency`).
+    pub end_s: f64,
+    /// Measured latency, seconds.
+    pub latency_s: f64,
+    /// Measured dynamic energy, joules.
+    pub energy_j: f64,
+    /// Placement the op actually ran with.
+    pub placement: Placement,
+}
+
+/// Op execution and accounting: owns the active list, per-processor
+/// availability/busy accounting, latency/energy recorders, and completed
+/// outcomes.
+#[derive(Default)]
+pub struct ExecStage {
+    active: Vec<Active>,
+    avail: [f64; 2],
+    busy_acc: [f64; 2],
+    latencies: LatencyRecorder,
+    energy: EnergyAccount,
+    outcomes: Vec<RequestOutcome>,
+    cpu_busy_total: f64,
+    gpu_busy_total: f64,
+}
+
+impl ExecStage {
+    /// Empty stage.
+    pub fn new() -> ExecStage {
+        ExecStage::default()
+    }
+
+    /// Whether any admitted request is unfinished.
+    pub fn has_active(&self) -> bool {
+        !self.active.is_empty()
+    }
+
+    /// The admitted-but-unfinished requests.
+    pub fn active(&self) -> &[Active] {
+        &self.active
+    }
+
+    /// Per-processor availability times (when each becomes free).
+    pub fn avail(&self) -> &[f64; 2] {
+        &self.avail
+    }
+
+    /// Enqueue an admitted request.
+    pub fn admit(&mut self, a: Active) {
+        self.active.push(a);
+    }
+
+    /// Charge virtual partitioning-decision time to the CPU timeline (the
+    /// partitioner runs on the phone's CPU in real deployments).
+    pub fn charge_cpu_decision(&mut self, dt_s: f64) {
+        self.avail[Proc::Cpu.index()] += dt_s;
+    }
+
+    /// Advance the device clock to `start_s` (crediting accumulated busy
+    /// time as utilization), or clamp the start to the clock when the
+    /// requested start is already in the past. Returns the effective
+    /// start time.
+    pub fn advance_to(&mut self, device: &mut Device, start_s: f64) -> f64 {
+        let now = device.time_s();
+        if start_s > now {
+            let dt = start_s - now;
+            let u_cpu = (self.busy_acc[0] / dt).min(1.0);
+            let u_gpu = (self.busy_acc[1] / dt).min(1.0);
+            self.busy_acc = [0.0, 0.0];
+            device.advance(dt, u_cpu, u_gpu);
+            start_s
+        } else {
+            now
+        }
+    }
+
+    /// Execute the next op of `active[ai]` at (clamped) `start_s`: run the
+    /// scheduler's placement override through its feasibility check,
+    /// measure on the device, feed the profiler, and account energy and
+    /// busy time.
+    #[allow(clippy::too_many_arguments)]
+    pub fn execute(
+        &mut self,
+        ai: usize,
+        start_s: f64,
+        streams: &[StreamSpec],
+        plans: &PlanTable,
+        device: &mut Device,
+        profiler: &mut EnergyProfiler,
+        scheduler: &dyn Scheduler,
+        info: PlannerInfo,
+        numerics: &mut Option<NumericsHook>,
+    ) -> Result<OpRecord> {
+        let others_running = self.active.len() > 1;
+        let stream = self.active[ai].model;
+        let op_idx = self.active[ai].next_op;
+        let req_id = self.active[ai].req.id;
+        let deadline_s = self.active[ai].req.deadline_s;
+        let g: &ModelGraph = &streams[stream].model;
+        let op = &g.ops[op_idx];
+        let planned = plans.plan(stream).placements[op_idx];
+        let input_cpu_fracs: Vec<f64> = if op.inputs.is_empty() {
+            vec![INPUT_CPU_FRAC; op.in_shapes.len()]
+        } else {
+            let a = &self.active[ai];
+            op.inputs.iter().map(|&j| a.out_cpu[j]).collect()
+        };
+        let (new_run_cpu, new_run_gpu) = match self.active[ai].prev_placement {
+            None => (true, true),
+            Some(p) => (!p.uses(Proc::Cpu), !p.uses(Proc::Gpu)),
+        };
+        // slack if the op starts now: time to spare before the deadline
+        // after the predicted remaining work (this op inclusive)
+        let slack_s = deadline_s - (start_s + plans.profile(stream)[op_idx]);
+        let ctx = ExecCtx {
+            input_cpu_fracs,
+            new_run_cpu,
+            new_run_gpu,
+            concurrent: others_running,
+        };
+        let snap = device.snapshot();
+        let placement = {
+            let model = cost_model(info, profiler, device);
+            let wanted = scheduler.place(planned, op, &ctx, &snap, model, slack_s);
+            // `start_s` was clamped against the *planned* placement's
+            // processors only; an override may not claim a processor that
+            // is still busy at `start_s` (it would double-book and rewind
+            // avail) — fall back to the plan in that case
+            let feasible = Proc::ALL
+                .iter()
+                .all(|&p| !wanted.uses(p) || self.avail[p.index()] <= start_s);
+            if feasible {
+                wanted
+            } else {
+                planned
+            }
+        };
+        let measured = device.measure(op, placement, &ctx);
+        profiler.observe(op, placement, &ctx, &snap, &measured);
+        self.energy.add_op(&measured);
+        {
+            let a = &mut self.active[ai];
+            a.energy_j += measured.energy_j;
+            if a.start_s.is_none() {
+                a.start_s = Some(start_s);
+            }
+            a.out_cpu[op_idx] = placement.frac_on(Proc::Cpu);
+            a.prev_placement = Some(placement);
+            a.data_ready_s = start_s + measured.latency_s;
+        }
+        for p in Proc::ALL {
+            if placement.uses(p) {
+                self.avail[p.index()] = start_s + measured.latency_s;
+                self.busy_acc[p.index()] += measured.latency_s;
+            }
+        }
+        self.cpu_busy_total += measured.cpu_busy_s;
+        self.gpu_busy_total += measured.gpu_busy_s;
+        if let Some(hook) = numerics.as_mut() {
+            hook(&self.active[ai].req, op)?;
+        }
+        self.active[ai].next_op += 1;
+        Ok(OpRecord {
+            request: req_id,
+            stream,
+            op: op_idx,
+            start_s,
+            end_s: start_s + measured.latency_s,
+            latency_s: measured.latency_s,
+            energy_j: measured.energy_j,
+            placement,
+        })
+    }
+
+    /// If `active[ai]` just ran its last op, retire it: record latency and
+    /// deadline outcome, close the energy account, and return the outcome.
+    pub fn complete_if_done(&mut self, ai: usize) -> Option<RequestOutcome> {
+        if self.active[ai].next_op < self.active[ai].out_cpu.len() {
+            return None;
+        }
+        let a = self.active.swap_remove(ai);
+        let outcome = RequestOutcome {
+            start_s: a.start_s.expect("completed request must have started"),
+            finish_s: a.data_ready_s,
+            energy_j: a.energy_j,
+            request: a.req,
+        };
+        self.latencies
+            .record(outcome.latency_s(), outcome.queue_s(), outcome.met_deadline());
+        self.energy.finish_inference();
+        self.outcomes.push(outcome.clone());
+        Some(outcome)
+    }
+
+    /// Latency/deadline recorder (report assembly).
+    pub fn latencies(&self) -> &LatencyRecorder {
+        &self.latencies
+    }
+
+    /// Energy account (report assembly).
+    pub fn energy(&self) -> &EnergyAccount {
+        &self.energy
+    }
+
+    /// Completed-request outcomes, in completion order.
+    pub fn outcomes(&self) -> &[RequestOutcome] {
+        &self.outcomes
+    }
+
+    /// Total CPU busy-seconds measured across executed ops.
+    pub fn cpu_busy_total(&self) -> f64 {
+        self.cpu_busy_total
+    }
+
+    /// Total GPU busy-seconds measured across executed ops.
+    pub fn gpu_busy_total(&self) -> f64 {
+        self.gpu_busy_total
+    }
+}
+
+/// Outcome of a monitor tick.
+pub struct TickOutcome {
+    /// Whether the sample flagged a regime change.
+    pub regime_changed: bool,
+    /// Re-plans adopted this tick: `(stream, virtual decision seconds)`.
+    pub replans: Vec<(usize, f64)>,
+}
+
+/// Monitor-tick bookkeeping, regime-change re-planning, profile refresh,
+/// and the drift fast path.
+///
+/// The [`ResourceMonitor`] itself (the sample history regime detection
+/// compares against) lives on the engine — like the profiler, it is
+/// device-lifetime state that must persist across runs. This stage owns
+/// only the per-run tick schedule.
+pub struct MonitorStage {
+    period_s: f64,
+    last_s: f64,
+}
+
+impl MonitorStage {
+    /// Build with the configured sampling period.
+    pub fn new(period_s: f64) -> MonitorStage {
+        MonitorStage {
+            period_s,
+            last_s: 0.0,
+        }
+    }
+
+    /// Fire the monitor tick if its due time (`last sample + period`) has
+    /// been reached by the device clock. On a regime change every stream
+    /// is re-planned (served from `cache` when the condition recurs);
+    /// profiles always refresh against the live snapshot so scheduler
+    /// slack and admission backlog estimates track device dynamics.
+    #[allow(clippy::too_many_arguments)]
+    pub fn maybe_tick(
+        &mut self,
+        monitor: &mut ResourceMonitor,
+        device: &Device,
+        profiler: &mut EnergyProfiler,
+        policy: &dyn crate::partition::plan::Partitioner,
+        controller: &mut RepartitionController,
+        cache: &mut PlanCache,
+        plans: &mut PlanTable,
+        streams: &[StreamSpec],
+        info: PlannerInfo,
+        objective: crate::partition::plan::Objective,
+    ) -> Option<TickOutcome> {
+        if device.time_s() - self.last_s < self.period_s {
+            return None;
+        }
+        self.last_s = device.time_s();
+        monitor.sample(device.snapshot());
+        let regime_changed = monitor.regime_changed();
+        let mut replans = Vec::new();
+        if regime_changed {
+            profiler.reset_correction();
+            let snap = device.snapshot();
+            for s in streams {
+                let model = cost_model(info, profiler, device);
+                if let Some((plan, dt)) = controller.on_regime_change(
+                    &s.model,
+                    policy,
+                    model,
+                    &snap,
+                    objective,
+                    Some(&mut *cache),
+                ) {
+                    plans.set_plan(s.id, plan);
+                    replans.push((s.id, dt));
+                }
+            }
+        }
+        // refresh after any regime re-plan so profiles match the adopted
+        // plans and the live snapshot (drift, background)
+        let snap = device.snapshot();
+        let model = cost_model(info, profiler, device);
+        plans.refresh_profiles(streams, model, &snap);
+        Some(TickOutcome {
+            regime_changed,
+            replans,
+        })
+    }
+
+    /// Drift fast path (AdaOper only): when the profiler flags sustained
+    /// residual drift, re-solve a window at the execution frontier of the
+    /// request that just ran. Returns `(stream, virtual decision seconds)`
+    /// when a re-plan was adopted.
+    #[allow(clippy::too_many_arguments)]
+    pub fn maybe_drift(
+        &mut self,
+        ai: usize,
+        active: &[Active],
+        streams: &[StreamSpec],
+        device: &Device,
+        profiler: &EnergyProfiler,
+        controller: &mut RepartitionController,
+        plans: &mut PlanTable,
+        policy_kind: PolicyKind,
+        info: PlannerInfo,
+    ) -> Option<(usize, f64)> {
+        if !matches!(policy_kind, PolicyKind::AdaOper) || !profiler.drifted() {
+            return None;
+        }
+        let a = &active[ai];
+        let g: &ModelGraph = &streams[a.model].model;
+        let snap = device.snapshot();
+        let model = cost_model(info, profiler, device);
+        let (plan, dt) =
+            controller.on_drift(g, plans.plan(a.model), a.next_op, model, &snap, Some(&a.out_cpu))?;
+        let profile = PlanTable::profile_of(g, &plan, model, &snap);
+        plans.set_profile(a.model, profile);
+        plans.set_plan(a.model, plan);
+        Some((a.model, dt))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::zoo;
+    use crate::workload::Arrival;
+
+    fn spec_stream() -> Vec<StreamSpec> {
+        vec![StreamSpec::new(
+            0,
+            zoo::yolov2_tiny(),
+            Arrival::Poisson { hz: 5.0 },
+            0.5,
+        )]
+    }
+
+    fn table(profile: Vec<f64>, num_ops: usize) -> PlanTable {
+        let plan = Plan {
+            placements: vec![Placement::GPU; num_ops],
+            predicted: Default::default(),
+            policy: "t".into(),
+        };
+        PlanTable::new(vec![plan], vec![profile])
+    }
+
+    fn active_at(next_op: usize, num_ops: usize) -> Active {
+        Active {
+            req: Request {
+                id: 0,
+                stream: 0,
+                arrival_s: 0.0,
+                deadline_s: 9.9,
+            },
+            model: 0,
+            next_op,
+            data_ready_s: 1.0,
+            start_s: Some(0.5),
+            energy_j: 0.0,
+            out_cpu: vec![INPUT_CPU_FRAC; num_ops],
+            prev_placement: None,
+        }
+    }
+
+    #[test]
+    fn admission_does_not_shed_future_arrival_against_drained_backlog() {
+        let g = zoo::yolov2_tiny();
+        let n = g.num_ops();
+        // active request has 0.5 s of predicted remaining work; a new
+        // request costs 0.2 s end to end
+        let mut profile = vec![0.0; n + 1];
+        profile[0] = 0.2;
+        profile[1] = 0.5;
+        let streams = spec_stream();
+        let plans = table(profile, n);
+        let active = vec![active_at(1, n)];
+        let avail = [1.0, 1.0];
+        let mut adm = AdmissionStage::new(AdmissionPolicy::DropLate);
+
+        // arriving far in the future: today's backlog drains before it,
+        // so the request is feasible and must be admitted (regression for
+        // the drop-late skew that charged undrained backlog)
+        let future = Request {
+            id: 1,
+            stream: 0,
+            arrival_s: 10.0,
+            deadline_s: 10.5,
+        };
+        assert!(
+            adm.try_admit(future, &streams, &plans, &active, &avail, 1.0).is_some(),
+            "future-arriving request spuriously shed"
+        );
+
+        // the same deadline headroom arriving *now* is infeasible: the
+        // backlog has had no time to drain
+        let now = Request {
+            id: 2,
+            stream: 0,
+            arrival_s: 1.0,
+            deadline_s: 1.5,
+        };
+        assert!(adm
+            .try_admit(now, &streams, &plans, &active, &avail, 1.0)
+            .is_none());
+        let c = adm.counters();
+        assert_eq!((c.offered, c.admitted, c.shed_late), (2, 1, 1));
+    }
+
+    #[test]
+    fn arrival_source_seeds_sorted_requests_with_stable_ids() {
+        let mut queue = EventQueue::new();
+        let src = ArrivalSource::seed(&mut queue, &spec_stream(), 4.0, 7).unwrap();
+        assert_eq!(src.total(), queue.len());
+        assert!(src.total() > 0);
+        let mut last = f64::NEG_INFINITY;
+        let mut seen = 0;
+        while let Some((t, ev)) = queue.pop() {
+            let Event::Arrival { req, .. } = ev else {
+                panic!("non-arrival event in seeded queue")
+            };
+            assert!(t >= last, "arrivals out of order: {t} after {last}");
+            assert!((req.deadline_s - (req.arrival_s + 0.5)).abs() < 1e-12);
+            assert_eq!(req.stream, 0);
+            last = t;
+            seen += 1;
+        }
+        assert_eq!(seen, src.total());
+    }
+
+    #[test]
+    fn arrival_source_rejects_empty_horizon() {
+        let mut queue = EventQueue::new();
+        let streams = vec![StreamSpec::new(
+            0,
+            zoo::yolov2_tiny(),
+            Arrival::Periodic { hz: 0.001, jitter: 0.0 },
+            0.5,
+        )];
+        assert!(ArrivalSource::seed(&mut queue, &streams, 0.0001, 7).is_err());
+    }
+
+    #[test]
+    fn dispatch_stage_candidates_track_availability() {
+        let n = zoo::yolov2_tiny().num_ops();
+        let mut profile = vec![0.0; n + 1];
+        profile[0] = 0.3;
+        let plans = table(profile, n);
+        let mut d = DispatchStage::new(SchedulerKind::Fifo);
+        d.note_admitted();
+        let mut a = active_at(0, n);
+        a.data_ready_s = 0.2;
+        let active = vec![a];
+        // GPU busy until 1.5 and the plan places op 0 on the GPU → the
+        // candidate start is pushed to 1.5; CPU availability is ignored
+        let dec = d.pick(&active, &plans, &[9.0, 1.5]);
+        assert_eq!(dec.active_idx, 0);
+        assert_eq!(dec.start_s, 1.5);
+        // slot caches survive a pick but follow availability changes
+        let dec = d.pick(&active, &plans, &[9.0, 2.5]);
+        assert_eq!(dec.start_s, 2.5);
+    }
+}

@@ -1,0 +1,166 @@
+//! Golden replay suite for the event-kernel refactor.
+//!
+//! The engine's `run` was re-expressed as five composable stages over the
+//! discrete-event kernel (`rust/src/sim/`). Its correctness gate is
+//! *bit-identical replay*: for fixed seeds, `ServingReport::row()` must
+//! be byte-for-byte reproducible — across repeated runs (every virtual
+//! time advance, PRNG split, and monitor-ordering decision is
+//! deterministic, now that partitioning-decision time is virtualized) and
+//! against the committed snapshot, across every scheduler × admission
+//! combination plus the AdaOper drift path.
+//!
+//! Snapshot workflow: `tests/golden/serving_rows.txt` is compared when
+//! present; when absent (first run on a fresh checkout) or when
+//! `ADAOPER_UPDATE_GOLDEN=1` is set, the suite writes it from the current
+//! engine and passes — commit the regenerated file with any intentional
+//! behavior change.
+
+use std::path::PathBuf;
+use std::sync::OnceLock;
+
+use adaoper::config::schema::{PolicyKind, SchedulerKind};
+use adaoper::coordinator::{AdmissionPolicy, Engine, EngineConfig, StreamSpec};
+use adaoper::graph::zoo;
+use adaoper::profiler::calibrate::{calibrate_on, CalibConfig, OfflineModel};
+use adaoper::profiler::gbdt::GbdtParams;
+use adaoper::profiler::{EnergyProfiler, EwmaCorrector};
+use adaoper::soc::device::DeviceConfig;
+use adaoper::workload::Arrival;
+
+const SEED: u64 = 17;
+
+fn calib() -> CalibConfig {
+    CalibConfig {
+        samples: 1200,
+        seed: 5,
+        gbdt: GbdtParams {
+            trees: 40,
+            ..Default::default()
+        },
+    }
+}
+
+/// One shared offline model: the GBDT fit is deterministic but expensive,
+/// and sharing it is exactly what `Engine::with_profiler` exists for.
+fn offline() -> &'static OfflineModel {
+    static OFF: OnceLock<OfflineModel> = OnceLock::new();
+    OFF.get_or_init(|| calibrate_on(&calib(), &DeviceConfig::snapdragon_855()))
+}
+
+fn streams() -> Vec<StreamSpec> {
+    vec![
+        StreamSpec::new(0, zoo::yolov2_tiny(), Arrival::Poisson { hz: 30.0 }, 0.25),
+        StreamSpec::new(1, zoo::mobilenet_v1(), Arrival::Poisson { hz: 20.0 }, 0.4),
+    ]
+}
+
+fn run_cell(policy: PolicyKind, scheduler: SchedulerKind, admission: AdmissionPolicy) -> String {
+    let profiler = EnergyProfiler::with_correctors(offline().clone(), || {
+        Box::new(EwmaCorrector::default())
+    });
+    let mut engine = Engine::with_profiler(
+        EngineConfig {
+            policy,
+            scheduler,
+            admission,
+            duration_s: 1.2,
+            seed: SEED,
+            calib: calib(),
+            ..Default::default()
+        },
+        profiler,
+    );
+    engine.run(&streams()).unwrap().row()
+}
+
+/// The full matrix: every scheduler × admit-all/drop-late under the
+/// MaceGpu baseline (regime path only), plus two AdaOper cells that
+/// exercise the drift fast path.
+fn cells() -> Vec<(String, PolicyKind, SchedulerKind, AdmissionPolicy)> {
+    let mut out = Vec::new();
+    for sched in SchedulerKind::all() {
+        for (name, adm) in [
+            ("admit-all", AdmissionPolicy::AdmitAll),
+            ("drop-late", AdmissionPolicy::DropLate),
+        ] {
+            out.push((
+                format!("mace-gpu/{}/{}", sched.name(), name),
+                PolicyKind::MaceGpu,
+                sched,
+                adm,
+            ));
+        }
+    }
+    out.push((
+        "adaoper/fifo/admit-all".to_string(),
+        PolicyKind::AdaOper,
+        SchedulerKind::Fifo,
+        AdmissionPolicy::AdmitAll,
+    ));
+    out.push((
+        "adaoper/edf/drop-late".to_string(),
+        PolicyKind::AdaOper,
+        SchedulerKind::Edf,
+        AdmissionPolicy::DropLate,
+    ));
+    out
+}
+
+fn render_all() -> String {
+    let mut s = String::new();
+    for (label, policy, sched, adm) in cells() {
+        s.push_str(&label);
+        s.push_str(": ");
+        s.push_str(&run_cell(policy, sched, adm));
+        s.push('\n');
+    }
+    s
+}
+
+fn golden_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests")
+        .join("golden")
+        .join("serving_rows.txt")
+}
+
+#[test]
+fn repeated_runs_are_byte_identical() {
+    // two fresh engines per cell (shared immutable offline model): the
+    // report row, including every formatted float, must match exactly
+    for (label, policy, sched, adm) in cells() {
+        let a = run_cell(policy, sched, adm);
+        let b = run_cell(policy, sched, adm);
+        assert_eq!(a, b, "cell {label} is not deterministic");
+    }
+}
+
+#[test]
+fn rows_match_golden_snapshot() {
+    let got = render_all();
+    let path = golden_path();
+    let update = std::env::var("ADAOPER_UPDATE_GOLDEN").is_ok();
+    if update || !path.exists() {
+        std::fs::write(&path, &got).expect("write golden snapshot");
+        eprintln!(
+            "golden snapshot {} {} — commit it",
+            path.display(),
+            if update { "updated" } else { "bootstrapped" }
+        );
+        return;
+    }
+    let want = std::fs::read_to_string(&path).expect("read golden snapshot");
+    if got != want {
+        for (i, (g, w)) in got.lines().zip(want.lines()).enumerate() {
+            assert_eq!(
+                g,
+                w,
+                "first divergence at line {} (set ADAOPER_UPDATE_GOLDEN=1 to re-capture \
+                 after an intentional behavior change)",
+                i + 1
+            );
+        }
+        assert_eq!(got.lines().count(), want.lines().count(), "line counts differ");
+        panic!("golden rows differ only in line endings");
+    }
+}
