@@ -3,7 +3,7 @@
 
 CARGO_DIR := rust
 
-.PHONY: verify build test fmt fmt-check clippy bench-build doc all
+.PHONY: verify build test fmt fmt-check clippy bench-build doc smoke all
 
 # Tier-1 gate: release build + full test suite.
 verify:
@@ -30,5 +30,14 @@ bench-build:
 doc:
 	cd $(CARGO_DIR) && RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 
+# Run every scenario ablation end to end at a small budget, so the
+# scenario binaries (`adaoper ablation …`) cannot silently rot. CI runs
+# this after the tier-1 gate.
+smoke:
+	cd $(CARGO_DIR) && cargo run --release -- ablation cache --quick
+	cd $(CARGO_DIR) && cargo run --release -- ablation scheduler --quick --duration 2.0
+	cd $(CARGO_DIR) && cargo run --release -- ablation fleet --quick
+	cd $(CARGO_DIR) && cargo run --release -- ablation batching --quick --duration 2.0
+
 # Everything CI checks, in CI order.
-all: verify clippy bench-build doc fmt-check
+all: verify smoke clippy bench-build doc fmt-check

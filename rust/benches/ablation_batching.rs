@@ -1,0 +1,27 @@
+//! Bench A9: batching sweep — energy-per-request and p95 latency vs batch
+//! cap (none vs fixed vs deadline-aware slack formation) as bursty MMPP
+//! load ramps through saturation.
+
+use adaoper::experiments::batching_scenario::{self, BatchingSweepConfig};
+use adaoper::profiler::calibrate::CalibConfig;
+use adaoper::profiler::gbdt::GbdtParams;
+
+fn main() {
+    let quick = std::env::var("ADAOPER_BENCH_QUICK").is_ok();
+    let calib = CalibConfig {
+        samples: if quick { 2000 } else { 5000 },
+        seed: 7,
+        gbdt: GbdtParams {
+            trees: if quick { 60 } else { 120 },
+            ..Default::default()
+        },
+    };
+    let cfg = BatchingSweepConfig {
+        calib,
+        duration_s: if quick { 3.0 } else { 5.0 },
+        ..Default::default()
+    };
+    println!("== A9: batching sweep (bursty MMPP arrivals) ==");
+    let res = batching_scenario::run(&cfg).unwrap();
+    print!("{}", batching_scenario::render(&res));
+}

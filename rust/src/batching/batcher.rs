@@ -1,0 +1,322 @@
+//! Batch formation over the engine's active list.
+//!
+//! The [`Batcher`] is per-run state the engine consults on every dispatch
+//! decision when batching is enabled:
+//!
+//! 1. [`Batcher::form`] collects the co-dispatchable members of the picked
+//!    request's frontier — same stream, same next op, inputs ready by the
+//!    dispatch time — oldest first, capped at the policy's batch size.
+//! 2. [`Batcher::decide`] asks the [`BatchPolicy`]: dispatch a (possibly
+//!    trimmed) prefix now, or hold the frontier open. A held frontier is
+//!    recorded in the hold table; [`Batcher::floor`] exposes its release
+//!    time so [`crate::sim::stages::DispatchStage::pick_floored`] floors
+//!    those candidates' earliest start — other streams keep dispatching in
+//!    the meantime, and new same-stream arrivals admitted before the
+//!    release join the batch.
+//! 3. On close the batcher records the realized batch size and formation
+//!    wait into the histograms that surface as
+//!    [`crate::metrics::report::BatchStats`].
+//!
+//! Determinism: the hold table is only ever addressed by exact
+//! `(stream, op)` key (never iterated), and member order is a total order
+//! on `(arrival, request id)` — batched runs replay bit for bit under a
+//! fixed seed exactly like unbatched ones.
+
+use std::collections::HashMap;
+
+use crate::metrics::histogram::LogHistogram;
+use crate::metrics::report::BatchStats;
+use crate::sim::stages::Active;
+
+use super::policy::{by_kind, BatchDecision, BatchPolicy, BatchView};
+use super::BatchConfig;
+
+/// A forming batch: the frontier identity plus its dispatchable members.
+#[derive(Debug, Clone)]
+pub struct FormedBatch {
+    /// Owning stream of every member.
+    pub stream: usize,
+    /// Frontier operator index (members' `next_op`).
+    pub op: usize,
+    /// Active-list indices of the members, oldest arrival first. Non-empty;
+    /// after a [`BatchDecision::Dispatch`] verdict this is the exact set to
+    /// execute together.
+    pub members: Vec<usize>,
+    /// When the frontier first became dispatchable, virtual seconds.
+    pub formed_at_s: f64,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Hold {
+    formed_at_s: f64,
+    until_s: f64,
+}
+
+/// Per-run batch-formation state: policy, hold table, statistics.
+pub struct Batcher {
+    policy: Box<dyn BatchPolicy + Send + Sync>,
+    holds: HashMap<(usize, usize), Hold>,
+    formed: usize,
+    batched_dispatches: usize,
+    batched_requests: usize,
+    max_size: usize,
+    size_hist: LogHistogram,
+    wait_hist: LogHistogram,
+}
+
+impl Batcher {
+    /// Build from the run's batch configuration; `None` when the
+    /// configured policy is `none` (the engine then runs the legacy
+    /// single-dispatch path untouched).
+    pub fn from_config(cfg: &BatchConfig) -> Option<Batcher> {
+        by_kind(cfg.policy, cfg.max.max(1), cfg.wait_s.max(0.0)).map(|policy| Batcher {
+            policy,
+            holds: HashMap::new(),
+            formed: 0,
+            batched_dispatches: 0,
+            batched_requests: 0,
+            max_size: 0,
+            size_hist: LogHistogram::batch_sizes(),
+            wait_hist: LogHistogram::latency(),
+        })
+    }
+
+    /// The active policy's name (reports).
+    pub fn policy_name(&self) -> &'static str {
+        self.policy.name()
+    }
+
+    /// Earliest-start floor of a held frontier, if any — candidates of a
+    /// frontier being held open may not dispatch before its release time.
+    pub fn floor(&self, stream: usize, op: usize) -> Option<f64> {
+        self.holds.get(&(stream, op)).map(|h| h.until_s)
+    }
+
+    /// Collect the co-dispatchable members of `picked`'s frontier at
+    /// `start_s`: same stream, same next op, inputs ready. Oldest arrival
+    /// first, capped at the policy's batch size (`picked` may be trimmed
+    /// away when older members fill the cap — the frontier, not the pick,
+    /// dispatches).
+    pub fn form(&self, picked: usize, start_s: f64, active: &[Active]) -> FormedBatch {
+        let stream = active[picked].model;
+        let op = active[picked].next_op;
+        let mut members: Vec<usize> = active
+            .iter()
+            .enumerate()
+            .filter(|(_, a)| a.model == stream && a.next_op == op && a.data_ready_s <= start_s)
+            .map(|(i, _)| i)
+            .collect();
+        if members.len() > 1 {
+            // unstable sort is deterministic here: (arrival, id) is a
+            // total order with unique ids
+            members.sort_unstable_by(|&x, &y| {
+                active[x]
+                    .req
+                    .arrival_s
+                    .total_cmp(&active[y].req.arrival_s)
+                    .then(active[x].req.id.cmp(&active[y].req.id))
+            });
+        }
+        members.truncate(self.policy.max_batch());
+        let formed_at_s = self
+            .holds
+            .get(&(stream, op))
+            .map(|h| h.formed_at_s)
+            .unwrap_or(start_s);
+        FormedBatch {
+            stream,
+            op,
+            members,
+            formed_at_s,
+        }
+    }
+
+    /// Ask the policy about `batch` at dispatch time `now_s`. Returns
+    /// `true` when the batch closes — `batch.members` is then truncated to
+    /// the dispatched size and the close is recorded; `false` records a
+    /// hold (the frontier's candidates are floored to the release time).
+    ///
+    /// `remaining_s` is the single-request predicted remaining service
+    /// time from the frontier op (plan latency profile); `min_deadline_s`
+    /// the tightest member deadline.
+    pub fn decide(
+        &mut self,
+        batch: &mut FormedBatch,
+        now_s: f64,
+        remaining_s: f64,
+        min_deadline_s: f64,
+    ) -> bool {
+        let view = BatchView {
+            op: batch.op,
+            size: batch.members.len(),
+            now_s,
+            formed_at_s: batch.formed_at_s,
+            min_deadline_s,
+            remaining_s,
+        };
+        match self.policy.decide(&view) {
+            BatchDecision::Hold { until_s } if until_s > now_s => {
+                self.holds.insert(
+                    (batch.stream, batch.op),
+                    Hold {
+                        formed_at_s: batch.formed_at_s,
+                        until_s,
+                    },
+                );
+                false
+            }
+            BatchDecision::Hold { .. } => {
+                // degenerate hold (release already reached): close as-is
+                self.close(batch, now_s);
+                true
+            }
+            BatchDecision::Dispatch { size } => {
+                batch.members.truncate(size.max(1));
+                self.close(batch, now_s);
+                true
+            }
+        }
+    }
+
+    /// Formation wait of a closing batch at `now_s`, seconds.
+    pub fn wait_of(&self, batch: &FormedBatch, now_s: f64) -> f64 {
+        (now_s - batch.formed_at_s).max(0.0)
+    }
+
+    fn close(&mut self, batch: &FormedBatch, now_s: f64) {
+        self.holds.remove(&(batch.stream, batch.op));
+        let size = batch.members.len();
+        self.max_size = self.max_size.max(size);
+        if batch.op == 0 {
+            // formation statistics are per batch, recorded once where
+            // batches form; later ops re-dispatch the same batch
+            self.formed += 1;
+            self.size_hist.record(size as f64);
+            self.wait_hist.record(self.wait_of(batch, now_s));
+        }
+        if size > 1 {
+            self.batched_dispatches += 1;
+            self.batched_requests += size;
+        }
+    }
+
+    /// Statistics snapshot for the serving report.
+    pub fn stats(&self) -> BatchStats {
+        BatchStats {
+            policy: self.policy.name().to_string(),
+            formed: self.formed,
+            batched_dispatches: self.batched_dispatches,
+            batched_requests: self.batched_requests,
+            max_size: self.max_size,
+            size_hist: self.size_hist.clone(),
+            wait_hist: self.wait_hist.clone(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::schema::BatchPolicyKind;
+    use crate::coordinator::request::Request;
+    use crate::partition::plan::INPUT_CPU_FRAC;
+
+    fn cfg(policy: BatchPolicyKind) -> BatchConfig {
+        // binary-exact wait: `formed_at + wait` equals the literals below
+        BatchConfig {
+            policy,
+            max: 3,
+            wait_s: 0.5,
+        }
+    }
+
+    fn active(id: usize, stream: usize, op: usize, ready: f64, deadline: f64) -> Active {
+        Active {
+            req: Request {
+                id,
+                stream,
+                arrival_s: ready,
+                deadline_s: deadline,
+            },
+            model: stream,
+            next_op: op,
+            data_ready_s: ready,
+            start_s: None,
+            energy_j: 0.0,
+            out_cpu: vec![INPUT_CPU_FRAC; 4],
+            prev_placement: None,
+        }
+    }
+
+    #[test]
+    fn none_policy_builds_no_batcher() {
+        assert!(Batcher::from_config(&cfg(BatchPolicyKind::None)).is_none());
+        assert!(Batcher::from_config(&cfg(BatchPolicyKind::Fixed)).is_some());
+    }
+
+    #[test]
+    fn form_collects_frontier_oldest_first_capped() {
+        let b = Batcher::from_config(&cfg(BatchPolicyKind::Fixed)).unwrap();
+        let actives = vec![
+            active(4, 0, 0, 0.40, 9.0),
+            active(1, 0, 0, 0.10, 9.0),
+            active(2, 1, 0, 0.05, 9.0), // other stream: excluded
+            active(3, 0, 1, 0.05, 9.0), // other op: excluded
+            active(5, 0, 0, 0.90, 9.0), // not ready by 0.5: excluded
+            active(0, 0, 0, 0.02, 9.0),
+        ];
+        let f = b.form(0, 0.5, &actives);
+        assert_eq!((f.stream, f.op), (0, 0));
+        // oldest three of {id0@0.02, id1@0.10, id4@0.40} fill the cap of 3
+        assert_eq!(f.members, vec![5, 1, 0]);
+        assert_eq!(f.formed_at_s, 0.5);
+    }
+
+    #[test]
+    fn hold_floors_frontier_then_close_clears() {
+        let mut b = Batcher::from_config(&cfg(BatchPolicyKind::Fixed)).unwrap();
+        let actives = vec![active(0, 0, 0, 0.0, 9.0), active(1, 0, 0, 0.0, 9.0)];
+        let mut f = b.form(0, 1.0, &actives);
+        // size 2 < cap 3, inside wait → hold until 1.5
+        assert!(!b.decide(&mut f, 1.0, 0.05, 9.0));
+        assert_eq!(b.floor(0, 0), Some(1.5));
+        assert_eq!(b.floor(0, 1), None);
+        // re-form at the release: formed_at survives the hold
+        let mut f2 = b.form(0, 1.5, &actives);
+        assert_eq!(f2.formed_at_s, 1.0);
+        assert!(b.decide(&mut f2, 1.5, 0.05, 9.0), "timeout must close");
+        assert_eq!(b.floor(0, 0), None);
+        let st = b.stats();
+        assert_eq!((st.formed, st.batched_dispatches, st.batched_requests), (1, 1, 2));
+        assert_eq!(st.max_size, 2);
+        assert_eq!(st.size_hist.count(), 1);
+        // wait recorded ≈ 0.5 s (inside the log-bucket error bound)
+        let w = st.wait_hist.quantile(0.5).unwrap();
+        assert!((w - 0.5).abs() / 0.5 < 0.1, "wait {w}");
+    }
+
+    #[test]
+    fn full_batch_closes_immediately_and_counts() {
+        let mut b = Batcher::from_config(&cfg(BatchPolicyKind::Fixed)).unwrap();
+        let actives: Vec<Active> =
+            (0..4).map(|i| active(i, 0, 0, 0.0, 9.0)).collect();
+        let mut f = b.form(0, 1.0, &actives);
+        assert_eq!(f.members.len(), 3, "capped at max");
+        assert!(b.decide(&mut f, 1.0, 0.05, 9.0));
+        assert_eq!(b.stats().batched_requests, 3);
+    }
+
+    #[test]
+    fn mid_flight_frontier_never_holds() {
+        let mut b = Batcher::from_config(&cfg(BatchPolicyKind::Slack)).unwrap();
+        let actives = vec![active(0, 0, 2, 0.0, 9.0), active(1, 0, 2, 0.0, 9.0)];
+        let mut f = b.form(0, 1.0, &actives);
+        assert_eq!(f.op, 2);
+        assert!(b.decide(&mut f, 1.0, 0.05, 9.0), "op>0 must dispatch");
+        assert_eq!(f.members.len(), 2);
+        // mid-flight closes keep batching counters but not formation stats
+        let st = b.stats();
+        assert_eq!(st.formed, 0);
+        assert_eq!(st.batched_dispatches, 1);
+    }
+}

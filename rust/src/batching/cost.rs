@@ -1,0 +1,221 @@
+//! The batch-aware cost model: analytic scaling between single-request and
+//! batched operator costs, plus the [`BatchedCostModel`] adapter that lets
+//! planning price a batch of B requests instead of B independent requests.
+//!
+//! The scaling mirrors the SoC ground truth
+//! ([`crate::soc::device::Device::expected_cost_batch`]): transfer moves
+//! every member's activations (× B), per-unit busy time grows by
+//! [`crate::soc::latency::batch_compute_scale`] (sub-linear on the GPU,
+//! near-linear on the CPU, with an over-batching penalty past the knee),
+//! and cross-unit synchronization is paid once. Because an
+//! [`OpCost`] folds dispatch overhead into the unit busy times, the
+//! forward/inverse maps here treat dispatch as amortizing at the unit's
+//! batch exponent — a deliberate, slightly conservative approximation of
+//! the device's pay-once dispatch accounting.
+
+use crate::graph::OpNode;
+use crate::profiler::CostModel;
+use crate::soc::device::{ExecCtx, OpCost, Snapshot};
+use crate::soc::latency::batch_compute_scale;
+use crate::soc::{Placement, Proc};
+
+/// Scale a single-request operator cost to a batch of `batch` requests
+/// dispatched together. Identity for `batch <= 1`.
+///
+/// Guarantees (property-tested in `rust/tests/batching.rs`): batched
+/// latency is non-decreasing in the batch size, and per-request energy
+/// (`energy_j / batch`) is non-increasing up to the unit's amortization
+/// knee ([`crate::soc::latency::BatchScaling::knee`]).
+pub fn scale_op_cost(c: &OpCost, batch: usize) -> OpCost {
+    if batch <= 1 {
+        return *c;
+    }
+    let b = batch as f64;
+    let cpu_busy = c.cpu_busy_s * batch_compute_scale(Proc::Cpu, batch);
+    let gpu_busy = c.gpu_busy_s * batch_compute_scale(Proc::Gpu, batch);
+    let transfer_s = c.transfer_s * b;
+    let transfer_j = c.transfer_j * b;
+    // cross-unit sync (split join) is whatever latency the busy/transfer
+    // terms do not explain — paid once per batch
+    let sync = (c.latency_s - c.transfer_s - c.cpu_busy_s.max(c.gpu_busy_s)).max(0.0);
+    let busy = c.cpu_busy_s + c.gpu_busy_s;
+    let compute_j = (c.energy_j - c.transfer_j).max(0.0);
+    let energy_j = transfer_j
+        + if busy > 0.0 {
+            // dynamic power is busy-time-proportional at a fixed activity
+            compute_j * ((cpu_busy + gpu_busy) / busy)
+        } else {
+            compute_j * b
+        };
+    OpCost {
+        latency_s: transfer_s + cpu_busy.max(gpu_busy) + sync,
+        energy_j,
+        cpu_busy_s: cpu_busy,
+        gpu_busy_s: gpu_busy,
+        transfer_s,
+        transfer_j,
+    }
+}
+
+/// Inverse of [`scale_op_cost`]: recover an (approximate) single-request
+/// cost from a batched measurement. The execution stage feeds this to the
+/// profiler so batched dispatches still train the drift corrector on
+/// per-request residuals instead of starving it (or poisoning it with
+/// B-times-larger observations).
+pub fn debatch_op_cost(c: &OpCost, batch: usize) -> OpCost {
+    if batch <= 1 {
+        return *c;
+    }
+    let b = batch as f64;
+    let cpu_busy = c.cpu_busy_s / batch_compute_scale(Proc::Cpu, batch);
+    let gpu_busy = c.gpu_busy_s / batch_compute_scale(Proc::Gpu, batch);
+    let transfer_s = c.transfer_s / b;
+    let transfer_j = c.transfer_j / b;
+    let sync = (c.latency_s - c.transfer_s - c.cpu_busy_s.max(c.gpu_busy_s)).max(0.0);
+    let busy = c.cpu_busy_s + c.gpu_busy_s;
+    let compute_j = (c.energy_j - c.transfer_j).max(0.0);
+    let energy_j = transfer_j
+        + if busy > 0.0 {
+            compute_j * ((cpu_busy + gpu_busy) / busy)
+        } else {
+            compute_j / b
+        };
+    OpCost {
+        latency_s: transfer_s + cpu_busy.max(gpu_busy) + sync,
+        energy_j,
+        cpu_busy_s: cpu_busy,
+        gpu_busy_s: gpu_busy,
+        transfer_s,
+        transfer_j,
+    }
+}
+
+/// Per-request view of a full-batch cost, the quantity planning objectives
+/// score: every member experiences the *whole* batched latency (members
+/// complete together), while energy amortizes across the batch.
+pub fn per_request_cost(c: &OpCost, batch: usize) -> OpCost {
+    if batch <= 1 {
+        return *c;
+    }
+    let b = batch as f64;
+    OpCost {
+        latency_s: c.latency_s,
+        energy_j: c.energy_j / b,
+        cpu_busy_s: c.cpu_busy_s,
+        gpu_busy_s: c.gpu_busy_s,
+        transfer_s: c.transfer_s,
+        transfer_j: c.transfer_j / b,
+    }
+}
+
+/// Adapter that re-prices an inner [`CostModel`] at a fixed batch size:
+/// `predict` returns the per-request cost of a batch-of-B dispatch
+/// (full batched latency, amortized energy). Wrapping the planner's cost
+/// model with this is what makes the DP place ops the way batched
+/// execution will actually pay for them — fixed dispatch and transfer
+/// setup amortize, so the GPU's high launch cost stops scaring the
+/// planner off at high request rates.
+pub struct BatchedCostModel<'a> {
+    inner: &'a dyn CostModel,
+    batch: usize,
+}
+
+impl<'a> BatchedCostModel<'a> {
+    /// Wrap `inner`, pricing every op at a batch of `batch`.
+    pub fn new(inner: &'a dyn CostModel, batch: usize) -> BatchedCostModel<'a> {
+        BatchedCostModel {
+            inner,
+            batch: batch.max(1),
+        }
+    }
+
+    /// The batch size this adapter prices at.
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+}
+
+impl CostModel for BatchedCostModel<'_> {
+    fn predict(
+        &self,
+        op: &OpNode,
+        placement: Placement,
+        ctx: &ExecCtx,
+        snap: &Snapshot,
+    ) -> OpCost {
+        let full = self.inner.predict_batch(op, placement, ctx, snap, self.batch);
+        per_request_cost(&full, self.batch)
+    }
+
+    fn predict_batch(
+        &self,
+        op: &OpNode,
+        placement: Placement,
+        ctx: &ExecCtx,
+        snap: &Snapshot,
+        batch: usize,
+    ) -> OpCost {
+        // explicit batch queries bypass the adapter's fixed size
+        self.inner.predict_batch(op, placement, ctx, snap, batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cost() -> OpCost {
+        OpCost {
+            latency_s: 1.3e-3,
+            energy_j: 2.0e-3,
+            cpu_busy_s: 0.0,
+            gpu_busy_s: 1.0e-3,
+            transfer_s: 0.3e-3,
+            transfer_j: 0.2e-3,
+        }
+    }
+
+    #[test]
+    fn scale_identity_at_one_and_roundtrips() {
+        let c = cost();
+        let s1 = scale_op_cost(&c, 1);
+        assert_eq!(s1.latency_s.to_bits(), c.latency_s.to_bits());
+        for b in [2usize, 4, 8] {
+            let s = scale_op_cost(&c, b);
+            let back = debatch_op_cost(&s, b);
+            assert!(
+                (back.latency_s - c.latency_s).abs() < 1e-12,
+                "b={b}: {} vs {}",
+                back.latency_s,
+                c.latency_s
+            );
+            assert!((back.energy_j - c.energy_j).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn batched_latency_grows_but_per_request_energy_falls() {
+        let c = cost();
+        let mut prev_lat = c.latency_s;
+        let mut prev_e = c.energy_j;
+        for b in 2..=8 {
+            let s = scale_op_cost(&c, b);
+            assert!(s.latency_s > prev_lat, "b={b}");
+            let per_req = s.energy_j / b as f64;
+            assert!(per_req < prev_e, "b={b}: {per_req} !< {prev_e}");
+            prev_lat = s.latency_s;
+            prev_e = per_req;
+        }
+    }
+
+    #[test]
+    fn per_request_keeps_latency_amortizes_energy() {
+        let c = cost();
+        let batched = scale_op_cost(&c, 4);
+        let pr = per_request_cost(&batched, 4);
+        assert_eq!(pr.latency_s.to_bits(), batched.latency_s.to_bits());
+        assert!((pr.energy_j - batched.energy_j / 4.0).abs() < 1e-18);
+        let id = per_request_cost(&c, 1);
+        assert_eq!(id.energy_j.to_bits(), c.energy_j.to_bits());
+    }
+}

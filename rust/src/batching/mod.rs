@@ -1,0 +1,123 @@
+//! Deadline-aware dynamic batching: the subsystem between admission and
+//! dispatch.
+//!
+//! AdaOper's core observation is that fixed per-dispatch costs (kernel
+//! launch, CPU↔GPU transfer setup, DVFS ramp) dominate small concurrent
+//! requests. Batching is the same lever pointed at *co-resident* requests:
+//! grouping B same-stream requests at the same operator frontier into one
+//! dispatch amortizes those fixed costs per request (the energy win) while
+//! delaying the earliest member of the batch (the responsiveness risk).
+//! This module makes that trade-off explicit and policy-controlled:
+//!
+//! * [`policy`] — the [`policy::BatchPolicy`] trait and its
+//!   implementations: `fixed` (close at size K or after a wait timeout) and
+//!   `slack` (deadline-aware: hold a forming batch only while every
+//!   member's SLO slack — computed from the per-stream plan latency
+//!   profiles — exceeds the predicted batched service time, so batching
+//!   never manufactures deadline misses). `none` disables the subsystem
+//!   entirely: the engine runs the legacy single-dispatch path, bit for
+//!   bit.
+//! * [`batcher`] — [`batcher::Batcher`]: batch formation over the active
+//!   list, hold bookkeeping (a held frontier floors its candidates'
+//!   earliest start, so other streams run in the meantime), and the
+//!   per-run batch statistics that surface in
+//!   [`crate::metrics::report::BatchStats`].
+//! * [`cost`] — the batch-aware cost model: analytic scaling of a
+//!   single-request [`crate::soc::device::OpCost`] to a batch of B
+//!   (sub-linear compute growth on the GPU, near-linear on the CPU,
+//!   transfer per member, fixed dispatch once), the inverse used to feed
+//!   the profiler per-request observations from batched measurements, and
+//!   the [`cost::BatchedCostModel`] adapter that lets the DP partitioner
+//!   and the `slack-reclaim` scheduler price a batch of B requests instead
+//!   of B independent requests.
+//!
+//! Ground truth lives in the SoC layer
+//! ([`crate::soc::device::Device::measure_batch`],
+//! [`crate::soc::latency::batch_compute_scale`],
+//! [`crate::soc::power::batched_activity`]); the engine wires formation
+//! into [`crate::sim::stages::DispatchStage`] and batched execution into
+//! [`crate::sim::stages::ExecStage`], and every close is broadcast as a
+//! [`crate::sim::event::Event::BatchClose`]. Knobs:
+//! `adaoper serve --batch-policy/--batch-max/--batch-wait-ms`, the
+//! `[serve]` config keys of the same names, and the
+//! `adaoper ablation batching` sweep.
+
+pub mod batcher;
+pub mod cost;
+pub mod policy;
+
+pub use batcher::{Batcher, FormedBatch};
+pub use cost::BatchedCostModel;
+pub use policy::{BatchDecision, BatchPolicy, BatchView};
+
+use crate::config::schema::BatchPolicyKind;
+
+/// Batching configuration of one serving run.
+#[derive(Debug, Clone)]
+pub struct BatchConfig {
+    /// Which formation policy runs (`none` = legacy single dispatch).
+    pub policy: BatchPolicyKind,
+    /// Maximum requests per batch.
+    pub max: usize,
+    /// Formation wait cap, seconds: a forming batch never holds longer
+    /// than this past the moment it first became dispatchable.
+    pub wait_s: f64,
+}
+
+impl Default for BatchConfig {
+    fn default() -> Self {
+        BatchConfig {
+            policy: BatchPolicyKind::None,
+            max: 4,
+            wait_s: 4e-3,
+        }
+    }
+}
+
+impl BatchConfig {
+    /// The batch size planning prices ops at: 1 with batching disabled
+    /// (the legacy plan-cache key), the configured cap otherwise — the DP
+    /// then amortizes fixed dispatch/transfer costs the way execution
+    /// will, and the plan cache keys the resulting plans under a batch
+    /// bucket so batched and unbatched plans never alias.
+    pub fn plan_hint(&self) -> usize {
+        match self.policy {
+            BatchPolicyKind::None => 1,
+            _ => self.max.max(1),
+        }
+    }
+
+    /// Whether the batching subsystem is engaged at all.
+    pub fn enabled(&self) -> bool {
+        self.policy != BatchPolicyKind::None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_disabled_with_hint_one() {
+        let c = BatchConfig::default();
+        assert!(!c.enabled());
+        assert_eq!(c.plan_hint(), 1);
+    }
+
+    #[test]
+    fn enabled_policies_hint_their_cap() {
+        let c = BatchConfig {
+            policy: BatchPolicyKind::Slack,
+            max: 6,
+            wait_s: 2e-3,
+        };
+        assert!(c.enabled());
+        assert_eq!(c.plan_hint(), 6);
+        let c = BatchConfig {
+            policy: BatchPolicyKind::Fixed,
+            max: 0,
+            wait_s: 0.0,
+        };
+        assert_eq!(c.plan_hint(), 1, "zero cap clamps to 1");
+    }
+}

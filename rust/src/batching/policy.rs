@@ -1,0 +1,306 @@
+//! Batch-formation policies: when does a forming batch close?
+//!
+//! A policy sees one [`BatchView`] per dispatch decision — the frontier's
+//! op index, current size, how long the batch has been dispatchable, the
+//! tightest member deadline, and the single-request predicted remaining
+//! service time from the per-stream plan latency profile — and returns a
+//! [`BatchDecision`]: dispatch some prefix of the members now, or hold
+//! until a future close time. Holding floors the frontier's earliest
+//! start, so other streams keep running in the meantime; the engine
+//! re-asks the policy whenever the frontier wins dispatch again (new
+//! members may have joined).
+
+use crate::config::schema::BatchPolicyKind;
+use crate::soc::latency::batch_compute_scale;
+use crate::soc::Proc;
+
+/// Predicted latency multiplier of a batch of `batch` under the `slack`
+/// policy's conservative planning model (`1.0` for `batch <= 1`).
+///
+/// Uses the **CPU's** calibrated batch-compute scale
+/// ([`crate::soc::latency::BatchScaling`]): the CPU curve dominates the
+/// GPU's for every batch size (larger exponent, earlier knee, steeper
+/// over-batching penalty), so the factor is a ground-truth upper bound on
+/// batched compute growth for any single-unit placement — which is what
+/// lets the slack policy promise it never holds or sizes a batch past
+/// real deadline headroom, even on CPU-resident plans.
+pub fn slack_latency_factor(batch: usize) -> f64 {
+    batch_compute_scale(Proc::Cpu, batch)
+}
+
+/// What a policy sees when asked about a forming batch.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchView {
+    /// Operator index of the frontier (0 = formation point; new arrivals
+    /// can only join at op 0, so policies only hold there).
+    pub op: usize,
+    /// Members currently dispatchable at the frontier.
+    pub size: usize,
+    /// The dispatch time under consideration, virtual seconds.
+    pub now_s: f64,
+    /// When the frontier first became dispatchable (oldest member ready).
+    pub formed_at_s: f64,
+    /// Tightest absolute deadline among the members.
+    pub min_deadline_s: f64,
+    /// Single-request predicted remaining service time from this op
+    /// (inclusive) to completion, from the stream's plan latency profile.
+    pub remaining_s: f64,
+}
+
+/// A policy's verdict on a forming batch.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum BatchDecision {
+    /// Close now and dispatch the oldest `size` members (the rest stay
+    /// queued and form the next batch).
+    Dispatch {
+        /// How many members to dispatch (≥ 1).
+        size: usize,
+    },
+    /// Keep the frontier open until `until_s` (exclusive): its candidates'
+    /// earliest start is floored there so later arrivals can join.
+    Hold {
+        /// Virtual time at which the batch must close.
+        until_s: f64,
+    },
+}
+
+/// A batch-formation policy. Implementations must guarantee progress: a
+/// `Hold` with `until_s <= now_s` is treated as `Dispatch` by the caller,
+/// and any view with `now_s` at or past the policy's own close time must
+/// yield `Dispatch`.
+pub trait BatchPolicy: Send + Sync {
+    /// Policy name as it appears in reports (`fixed`, `slack`).
+    fn name(&self) -> &'static str;
+
+    /// Maximum requests per batch.
+    fn max_batch(&self) -> usize;
+
+    /// Decide whether the forming batch closes now.
+    fn decide(&self, v: &BatchView) -> BatchDecision;
+}
+
+/// Close at size K or after the wait cap — the classic dynamic-batching
+/// baseline (deadline-blind: a tight request can be held the full wait).
+#[derive(Debug, Clone, Copy)]
+pub struct FixedPolicy {
+    /// Batch-size cap.
+    pub max: usize,
+    /// Wait cap, seconds.
+    pub wait_s: f64,
+}
+
+impl BatchPolicy for FixedPolicy {
+    fn name(&self) -> &'static str {
+        "fixed"
+    }
+
+    fn max_batch(&self) -> usize {
+        self.max.max(1)
+    }
+
+    fn decide(&self, v: &BatchView) -> BatchDecision {
+        if v.op != 0 || v.size >= self.max_batch() {
+            return BatchDecision::Dispatch { size: v.size };
+        }
+        let close_at = v.formed_at_s + self.wait_s;
+        if v.now_s >= close_at {
+            BatchDecision::Dispatch { size: v.size }
+        } else {
+            BatchDecision::Hold { until_s: close_at }
+        }
+    }
+}
+
+/// Deadline-aware formation: hold a forming batch only while every member's
+/// SLO slack exceeds the predicted batched service time, and trim the batch
+/// so dispatching it never pushes a member past a deadline it would have
+/// met unbatched.
+///
+/// Two rules, both driven by the plan latency profile:
+///
+/// * **Trim.** The dispatched size is the largest `B` whose predicted
+///   batched remaining time (`remaining ×` [`slack_latency_factor`]`(B)`)
+///   still meets
+///   the tightest member deadline. Trimming keeps the *oldest* members,
+///   which within one stream are also the tightest-deadline ones (a
+///   stream has a single SLO, so deadlines are arrival-ordered) — the
+///   member the trim was computed for is never the one trimmed away. A
+///   member that is already predicted late
+///   *unbatched* cannot be made worse by batching, so a doomed frontier
+///   batches at full size (maximizing drain rate under overload — exactly
+///   when batching's energy win is largest).
+/// * **Hold.** The frontier stays open only until
+///   `min(formed_at + wait, t_safe)`, where `t_safe` is the latest close
+///   time at which a batch one larger than the current one would still
+///   meet the tightest deadline. Holding therefore never converts a
+///   predicted-feasible request into a predicted miss.
+#[derive(Debug, Clone, Copy)]
+pub struct SlackPolicy {
+    /// Batch-size cap.
+    pub max: usize,
+    /// Wait cap, seconds.
+    pub wait_s: f64,
+}
+
+impl SlackPolicy {
+    /// Largest batch size (≤ `v.size`) the tightest member can absorb.
+    fn safe_size(&self, v: &BatchView) -> usize {
+        let budget = v.min_deadline_s - v.now_s;
+        if budget <= v.remaining_s {
+            // already predicted late unbatched: batching cannot manufacture
+            // the miss, and draining faster helps everyone behind
+            return v.size;
+        }
+        let mut best = 1;
+        for b in 2..=v.size {
+            if v.remaining_s * slack_latency_factor(b) <= budget {
+                best = b;
+            } else {
+                break;
+            }
+        }
+        best
+    }
+}
+
+impl BatchPolicy for SlackPolicy {
+    fn name(&self) -> &'static str {
+        "slack"
+    }
+
+    fn max_batch(&self) -> usize {
+        self.max.max(1)
+    }
+
+    fn decide(&self, v: &BatchView) -> BatchDecision {
+        if v.op != 0 {
+            // mid-flight batches stay intact: formation happens at op 0
+            return BatchDecision::Dispatch { size: v.size };
+        }
+        let size = self.safe_size(v);
+        if size < v.size || size >= self.max_batch() {
+            // trimmed (waiting longer only erodes slack further) or full
+            return BatchDecision::Dispatch { size };
+        }
+        let t_safe = v.min_deadline_s - v.remaining_s * slack_latency_factor(v.size + 1);
+        let close_at = (v.formed_at_s + self.wait_s).min(t_safe);
+        if v.now_s >= close_at {
+            BatchDecision::Dispatch { size }
+        } else {
+            BatchDecision::Hold { until_s: close_at }
+        }
+    }
+}
+
+/// Build the policy for a configured [`BatchPolicyKind`]; `None` disables
+/// batching (no policy object — the engine runs the legacy path).
+pub fn by_kind(
+    kind: BatchPolicyKind,
+    max: usize,
+    wait_s: f64,
+) -> Option<Box<dyn BatchPolicy + Send + Sync>> {
+    match kind {
+        BatchPolicyKind::None => None,
+        BatchPolicyKind::Fixed => Some(Box::new(FixedPolicy { max, wait_s })),
+        BatchPolicyKind::Slack => Some(Box::new(SlackPolicy { max, wait_s })),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn view(op: usize, size: usize, now: f64, formed: f64, deadline: f64, rem: f64) -> BatchView {
+        BatchView {
+            op,
+            size,
+            now_s: now,
+            formed_at_s: formed,
+            min_deadline_s: deadline,
+            remaining_s: rem,
+        }
+    }
+
+    #[test]
+    fn fixed_closes_at_cap_or_timeout() {
+        // binary-exact wait so `formed_at + wait` equals the literal below
+        let p = FixedPolicy { max: 4, wait_s: 0.5 };
+        // below cap, inside the wait window → hold until the timeout
+        assert_eq!(
+            p.decide(&view(0, 2, 1.0, 1.0, 9.0, 0.05)),
+            BatchDecision::Hold { until_s: 1.5 }
+        );
+        // at cap → dispatch everything
+        assert_eq!(
+            p.decide(&view(0, 4, 1.0, 1.0, 9.0, 0.05)),
+            BatchDecision::Dispatch { size: 4 }
+        );
+        // timeout reached → dispatch what formed
+        assert_eq!(
+            p.decide(&view(0, 2, 1.5, 1.0, 9.0, 0.05)),
+            BatchDecision::Dispatch { size: 2 }
+        );
+        // mid-flight ops never hold
+        assert_eq!(
+            p.decide(&view(3, 2, 1.0, 1.0, 9.0, 0.05)),
+            BatchDecision::Dispatch { size: 2 }
+        );
+    }
+
+    #[test]
+    fn slack_holds_only_inside_deadline_headroom() {
+        let p = SlackPolicy { max: 8, wait_s: 1.0 };
+        // generous deadline: hold, but capped by t_safe, not the wait
+        let v = view(0, 2, 1.0, 1.0, 1.5, 0.1);
+        match p.decide(&v) {
+            BatchDecision::Hold { until_s } => {
+                let t_safe = 1.5 - 0.1 * slack_latency_factor(3);
+                assert!((until_s - t_safe).abs() < 1e-12, "{until_s} vs {t_safe}");
+                assert!(until_s > v.now_s);
+            }
+            d => panic!("expected hold, got {d:?}"),
+        }
+        // no headroom for even the current batch: trim to a safe size now
+        let tight = view(0, 4, 1.0, 1.0, 1.14, 0.1);
+        match p.decide(&tight) {
+            BatchDecision::Dispatch { size } => {
+                assert!(size < 4, "tight deadline must trim, got {size}");
+                assert!(size >= 1);
+            }
+            d => panic!("expected dispatch, got {d:?}"),
+        }
+    }
+
+    #[test]
+    fn slack_batches_doomed_frontiers_at_full_size() {
+        let p = SlackPolicy { max: 8, wait_s: 1.0 };
+        // deadline already blown unbatched → full batch, no hold
+        let v = view(0, 5, 2.0, 1.9, 2.05, 0.1);
+        assert_eq!(p.decide(&v), BatchDecision::Dispatch { size: 5 });
+    }
+
+    #[test]
+    fn slack_factor_monotone_identity_and_dominates_both_units() {
+        use crate::soc::latency::batch_compute_scale;
+        use crate::soc::Proc;
+        assert_eq!(slack_latency_factor(0), 1.0);
+        assert_eq!(slack_latency_factor(1), 1.0);
+        let mut prev = 1.0;
+        for b in 2..=16 {
+            let f = slack_latency_factor(b);
+            assert!(f > prev, "batch {b}: {f} !> {prev}");
+            // upper-bounds the ground-truth growth of either unit, so the
+            // policy's safety predicate is conservative everywhere
+            assert!(f >= batch_compute_scale(Proc::Gpu, b));
+            assert!(f >= batch_compute_scale(Proc::Cpu, b));
+            prev = f;
+        }
+    }
+
+    #[test]
+    fn by_kind_maps() {
+        assert!(by_kind(BatchPolicyKind::None, 4, 0.01).is_none());
+        assert_eq!(by_kind(BatchPolicyKind::Fixed, 4, 0.01).unwrap().name(), "fixed");
+        assert_eq!(by_kind(BatchPolicyKind::Slack, 4, 0.01).unwrap().name(), "slack");
+    }
+}

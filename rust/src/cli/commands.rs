@@ -4,7 +4,10 @@ use std::path::Path;
 
 use anyhow::{bail, Result};
 
-use crate::config::schema::{AdmissionKind, AppConfig, ConditionKind, PolicyKind, SchedulerKind};
+use crate::batching::BatchConfig;
+use crate::config::schema::{
+    AdmissionKind, AppConfig, BatchPolicyKind, ConditionKind, PolicyKind, SchedulerKind,
+};
 use crate::coordinator::scheduler::AdmissionPolicy;
 use crate::coordinator::{Engine, EngineConfig, StreamSpec};
 use crate::experiments::{ablations, fig2};
@@ -31,8 +34,11 @@ COMMANDS
   serve                       run the concurrent serving engine
       [--config F] [--models a,b] [--policy P] [--condition C]
       [--rate HZ] [--duration S] [--slo-ms MS] [--seed N]
+      [--arrival poisson|periodic|mmpp] [--arrival-jitter X]
       [--scheduler fifo|edf|slack-reclaim] (default fifo)
       [--admission admit-all|drop-late|bounded] [--queue-limit N]
+      [--batch-policy none|fixed|slack] [--batch-max N]
+      [--batch-wait-ms MS]    dynamic batching (default none = off)
       [--plan-cache-cap N] [--plan-cache-freq-bucket-mhz MHZ]
       [--plan-cache-util-bucket X]
       [--trace PATH]          write per-request JSONL timelines to PATH
@@ -40,17 +46,21 @@ COMMANDS
       [--config F] [--devices N] [--threads T] [--seed S] [--duration S]
       [--scheduler fifo|edf|slack-reclaim] [--policy P] [--quick]
       [--admission admit-all|drop-late|bounded] [--queue-limit N]
+      [--batch-policy none|fixed|slack] [--batch-max N] [--batch-wait-ms MS]
   fig2 [--requests N]         reproduce the paper's Figure 2
   calibrate [--samples N]     run the offline calibration sweep and report
                               held-out accuracy
-  ablation <a1|..|a8|cache|scheduler|fleet>  run one ablation experiment
+  ablation <a1|..|a9|cache|scheduler|fleet|batching>  run one ablation
                               (`cache`, alias `a6`: plan-cache hit rate on
                               the bursty recurring-condition trace;
                               `scheduler`, alias `a7`: overload sweep
                               comparing fifo/edf/slack-reclaim dispatch
                               [--duration S] [--seed N];
                               `fleet`, alias `a8`: scale sweep over device
-                              counts × dispatch policy [--threads T])
+                              counts × dispatch policy [--threads T];
+                              `batching`, alias `a9`: energy-per-request
+                              and p95 vs batch cap across load levels on
+                              bursty MMPP arrivals [--duration S] [--seed N])
   help                        this text
 
 COMMON OPTIONS
@@ -192,6 +202,21 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     cfg.serve.queue_limit = args.usize_or("queue-limit", cfg.serve.queue_limit)?;
     anyhow::ensure!(cfg.serve.queue_limit >= 1, "--queue-limit must be >= 1");
+    if let Some(b) = args.get("batch-policy") {
+        cfg.serve.batch_policy = BatchPolicyKind::parse(b)?;
+    }
+    cfg.serve.batch_max = args.usize_or("batch-max", cfg.serve.batch_max)?;
+    anyhow::ensure!(cfg.serve.batch_max >= 1, "--batch-max must be >= 1");
+    cfg.serve.batch_wait_ms = args.f64_or("batch-wait-ms", cfg.serve.batch_wait_ms)?;
+    anyhow::ensure!(cfg.serve.batch_wait_ms >= 0.0, "--batch-wait-ms must be >= 0");
+    if let Some(a) = args.get("arrival") {
+        cfg.serve.arrival = a.to_string();
+    }
+    cfg.serve.arrival_jitter = args.f64_or("arrival-jitter", cfg.serve.arrival_jitter)?;
+    anyhow::ensure!(
+        (0.0..=1.0).contains(&cfg.serve.arrival_jitter),
+        "--arrival-jitter must be in [0, 1]"
+    );
     cfg.serve.rate_hz = args.f64_or("rate", cfg.serve.rate_hz)?;
     cfg.serve.duration_s = args.f64_or("duration", cfg.serve.duration_s)?;
     cfg.serve.slo_ms = args.f64_or("slo-ms", cfg.serve.slo_ms)?;
@@ -239,6 +264,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
         use_corrector: cfg.profiler.use_gru,
         scheduler: cfg.serve.scheduler,
         admission: AdmissionPolicy::from_kind(cfg.serve.admission, cfg.serve.queue_limit),
+        batching: BatchConfig {
+            policy: cfg.serve.batch_policy,
+            max: cfg.serve.batch_max,
+            wait_s: cfg.serve.batch_wait_ms / 1e3,
+        },
         plan_cache: crate::coordinator::PlanCacheConfig {
             capacity: cfg.partition.plan_cache_capacity,
             freq_bucket_hz: cfg.partition.plan_cache_freq_bucket_mhz * 1e6,
@@ -251,8 +281,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let mut streams = Vec::new();
     for (i, m) in cfg.serve.models.iter().enumerate() {
         let g = zoo::by_name(m).ok_or_else(|| anyhow::anyhow!("unknown model {m}"))?;
-        let arrival = Arrival::parse(&cfg.serve.arrival, cfg.serve.rate_hz)
-            .ok_or_else(|| anyhow::anyhow!("unknown arrival {}", cfg.serve.arrival))?;
+        let arrival =
+            Arrival::parse(&cfg.serve.arrival, cfg.serve.rate_hz, cfg.serve.arrival_jitter)
+                .ok_or_else(|| anyhow::anyhow!("unknown arrival {}", cfg.serve.arrival))?;
         streams.push(StreamSpec::new(i, g, arrival, cfg.serve.slo_ms / 1e3));
     }
     println!(
@@ -301,6 +332,14 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         Some(p) => PolicyKind::parse(p)?,
         None => PolicyKind::AdaOper,
     };
+    let batch_policy = match args.get("batch-policy") {
+        Some(b) => BatchPolicyKind::parse(b)?,
+        None => cfg.fleet.batch_policy,
+    };
+    let batch_max = args.usize_or("batch-max", cfg.fleet.batch_max)?;
+    anyhow::ensure!(batch_max >= 1, "--batch-max must be >= 1");
+    let batch_wait_ms = args.f64_or("batch-wait-ms", cfg.fleet.batch_wait_ms)?;
+    anyhow::ensure!(batch_wait_ms >= 0.0, "--batch-wait-ms must be >= 0");
     let fcfg = crate::fleet::FleetRunConfig {
         devices,
         threads,
@@ -309,6 +348,11 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         policy,
         scheduler,
         admission: AdmissionPolicy::from_kind(admission, queue_limit),
+        batching: BatchConfig {
+            policy: batch_policy,
+            max: batch_max,
+            wait_s: batch_wait_ms / 1e3,
+        },
         calib: calib_of(args)?,
         ..Default::default()
     };
@@ -485,7 +529,19 @@ fn cmd_ablation(args: &Args) -> Result<()> {
             let rows = fleet_scenario::run(&cfg)?;
             print!("{}", fleet_scenario::render(&rows));
         }
-        other => bail!("unknown ablation `{other}` (a1..a8|cache|scheduler|fleet)"),
+        "batching" | "a9" => {
+            use crate::experiments::batching_scenario;
+            let cfg = batching_scenario::BatchingSweepConfig {
+                seed,
+                calib,
+                duration_s: args.f64_or("duration", 4.0)?,
+                ..Default::default()
+            };
+            println!("== A9: batching sweep (energy & p95 vs batch cap, bursty load) ==");
+            let res = batching_scenario::run(&cfg)?;
+            print!("{}", batching_scenario::render(&res));
+        }
+        other => bail!("unknown ablation `{other}` (a1..a9|cache|scheduler|fleet|batching)"),
     }
     Ok(())
 }

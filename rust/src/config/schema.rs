@@ -177,6 +177,51 @@ impl AdmissionKind {
     }
 }
 
+/// Batch-formation policy selector (see [`crate::batching`] for the
+/// subsystem and `crate::batching::policy` for semantics).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BatchPolicyKind {
+    /// Batching disabled: the engine runs the legacy single-dispatch path
+    /// bit for bit (the default).
+    None,
+    /// Close a forming batch at size K or after the wait cap
+    /// (deadline-blind baseline).
+    Fixed,
+    /// Deadline-aware formation: hold only while every member's SLO slack
+    /// exceeds the predicted batched service time.
+    Slack,
+}
+
+impl BatchPolicyKind {
+    /// Parse a CLI/TOML spelling.
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "none" | "off" => BatchPolicyKind::None,
+            "fixed" => BatchPolicyKind::Fixed,
+            "slack" => BatchPolicyKind::Slack,
+            other => bail!("unknown batch policy `{other}` (none|fixed|slack)"),
+        })
+    }
+
+    /// Canonical spelling.
+    pub fn name(&self) -> &'static str {
+        match self {
+            BatchPolicyKind::None => "none",
+            BatchPolicyKind::Fixed => "fixed",
+            BatchPolicyKind::Slack => "slack",
+        }
+    }
+
+    /// Every batch policy, in the order ablation tables print them.
+    pub fn all() -> [BatchPolicyKind; 3] {
+        [
+            BatchPolicyKind::None,
+            BatchPolicyKind::Fixed,
+            BatchPolicyKind::Slack,
+        ]
+    }
+}
+
 /// Serving-engine configuration.
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
@@ -185,8 +230,11 @@ pub struct ServeConfig {
     /// Mean request rate per stream (Hz) for Poisson arrivals; periodic
     /// streams use it as the frame rate.
     pub rate_hz: f64,
-    /// `poisson` or `periodic` arrivals.
+    /// `poisson`, `periodic`, or `mmpp` (two-state bursty) arrivals.
     pub arrival: String,
+    /// Uniform jitter on periodic arrivals, as a fraction of the period
+    /// (ignored by the other arrival kinds).
+    pub arrival_jitter: f64,
     /// Per-request latency SLO in milliseconds.
     pub slo_ms: f64,
     /// Total simulated duration in seconds.
@@ -201,6 +249,13 @@ pub struct ServeConfig {
     pub admission: AdmissionKind,
     /// Per-stream in-flight request bound (used by `admission = "bounded"`).
     pub queue_limit: usize,
+    /// Batch-formation policy between admission and dispatch
+    /// (see [`crate::batching`]).
+    pub batch_policy: BatchPolicyKind,
+    /// Maximum requests per batch.
+    pub batch_max: usize,
+    /// Batch formation wait cap, milliseconds.
+    pub batch_wait_ms: f64,
     /// Random seed for workload + simulator noise.
     pub seed: u64,
     /// Execute real numerics through PJRT artifacts when available.
@@ -217,6 +272,7 @@ impl Default for ServeConfig {
             models: vec!["yolov2".to_string()],
             rate_hz: 10.0,
             arrival: "poisson".to_string(),
+            arrival_jitter: 0.02,
             slo_ms: 150.0,
             duration_s: 10.0,
             policy: PolicyKind::AdaOper,
@@ -224,6 +280,9 @@ impl Default for ServeConfig {
             scheduler: SchedulerKind::Fifo,
             admission: AdmissionKind::AdmitAll,
             queue_limit: 32,
+            batch_policy: BatchPolicyKind::None,
+            batch_max: 4,
+            batch_wait_ms: 4.0,
             seed: 1,
             execute_artifacts: false,
             trace: String::new(),
@@ -315,6 +374,12 @@ pub struct FleetConfig {
     /// Per-stream in-flight bound used by `admission = "bounded"` (owned
     /// here, not inherited from `[serve]`).
     pub queue_limit: usize,
+    /// Batch-formation policy every device's engine runs.
+    pub batch_policy: BatchPolicyKind,
+    /// Maximum requests per batch (fleet-wide).
+    pub batch_max: usize,
+    /// Batch formation wait cap, milliseconds (fleet-wide).
+    pub batch_wait_ms: f64,
 }
 
 impl Default for FleetConfig {
@@ -327,6 +392,9 @@ impl Default for FleetConfig {
             scheduler: SchedulerKind::Edf,
             admission: AdmissionKind::AdmitAll,
             queue_limit: 32,
+            batch_policy: BatchPolicyKind::None,
+            batch_max: 4,
+            batch_wait_ms: 4.0,
         }
     }
 }
@@ -365,6 +433,11 @@ impl AppConfig {
         }
         cfg.serve.rate_hz = v.float_or("serve.rate_hz", cfg.serve.rate_hz);
         cfg.serve.arrival = v.str_or("serve.arrival", &cfg.serve.arrival);
+        cfg.serve.arrival_jitter =
+            v.float_or("serve.arrival_jitter", cfg.serve.arrival_jitter);
+        if !(0.0..=1.0).contains(&cfg.serve.arrival_jitter) {
+            bail!("serve.arrival_jitter must be in [0, 1]");
+        }
         cfg.serve.slo_ms = v.float_or("serve.slo_ms", cfg.serve.slo_ms);
         cfg.serve.duration_s = v.float_or("serve.duration_s", cfg.serve.duration_s);
         cfg.serve.policy = PolicyKind::parse(&v.str_or("serve.policy", "adaoper"))?;
@@ -378,6 +451,18 @@ impl AppConfig {
             bail!("serve.queue_limit must be >= 1");
         }
         cfg.serve.queue_limit = limit as usize;
+        cfg.serve.batch_policy =
+            BatchPolicyKind::parse(&v.str_or("serve.batch_policy", "none"))?;
+        let batch_max = v.int_or("serve.batch_max", cfg.serve.batch_max as i64);
+        if batch_max < 1 {
+            bail!("serve.batch_max must be >= 1");
+        }
+        cfg.serve.batch_max = batch_max as usize;
+        cfg.serve.batch_wait_ms =
+            v.float_or("serve.batch_wait_ms", cfg.serve.batch_wait_ms);
+        if cfg.serve.batch_wait_ms < 0.0 {
+            bail!("serve.batch_wait_ms must be >= 0");
+        }
         cfg.serve.seed = v.int_or("serve.seed", cfg.serve.seed as i64) as u64;
         cfg.serve.execute_artifacts =
             v.bool_or("serve.execute_artifacts", cfg.serve.execute_artifacts);
@@ -467,6 +552,18 @@ impl AppConfig {
             bail!("fleet.queue_limit must be >= 1");
         }
         cfg.fleet.queue_limit = fleet_limit as usize;
+        cfg.fleet.batch_policy =
+            BatchPolicyKind::parse(&v.str_or("fleet.batch_policy", "none"))?;
+        let fleet_batch_max = v.int_or("fleet.batch_max", cfg.fleet.batch_max as i64);
+        if fleet_batch_max < 1 {
+            bail!("fleet.batch_max must be >= 1");
+        }
+        cfg.fleet.batch_max = fleet_batch_max as usize;
+        cfg.fleet.batch_wait_ms =
+            v.float_or("fleet.batch_wait_ms", cfg.fleet.batch_wait_ms);
+        if cfg.fleet.batch_wait_ms < 0.0 {
+            bail!("fleet.batch_wait_ms must be >= 0");
+        }
 
         Ok(cfg)
     }
@@ -496,6 +593,10 @@ mod tests {
         assert_eq!(cfg.serve.scheduler, SchedulerKind::Fifo);
         assert_eq!(cfg.serve.admission, AdmissionKind::AdmitAll);
         assert_eq!(cfg.serve.queue_limit, 32);
+        assert_eq!(cfg.serve.batch_policy, BatchPolicyKind::None);
+        assert_eq!(cfg.serve.batch_max, 4);
+        assert_eq!(cfg.serve.batch_wait_ms, 4.0);
+        assert_eq!(cfg.serve.arrival_jitter, 0.02);
         assert_eq!(cfg.serve.trace, "");
         assert_eq!(cfg.profiler.gbdt_trees, 120);
         assert_eq!(cfg.fleet.devices, 50);
@@ -646,5 +747,41 @@ mod tests {
         assert!(AppConfig::from_value(&v).is_err());
         let v = toml::parse("[serve]\nqueue_limit = 0\n").unwrap();
         assert!(AppConfig::from_value(&v).is_err());
+    }
+
+    #[test]
+    fn batching_knobs_decode_and_validate() {
+        let v = toml::parse(
+            "[serve]\nbatch_policy = \"slack\"\nbatch_max = 8\nbatch_wait_ms = 2.5\n\
+             arrival_jitter = 0.1\n[fleet]\nbatch_policy = \"fixed\"\nbatch_max = 2\n",
+        )
+        .unwrap();
+        let cfg = AppConfig::from_value(&v).unwrap();
+        assert_eq!(cfg.serve.batch_policy, BatchPolicyKind::Slack);
+        assert_eq!(cfg.serve.batch_max, 8);
+        assert_eq!(cfg.serve.batch_wait_ms, 2.5);
+        assert_eq!(cfg.serve.arrival_jitter, 0.1);
+        assert_eq!(cfg.fleet.batch_policy, BatchPolicyKind::Fixed);
+        assert_eq!(cfg.fleet.batch_max, 2);
+        assert_eq!(cfg.fleet.batch_wait_ms, 4.0);
+        for bad in [
+            "[serve]\nbatch_policy = \"auto\"\n",
+            "[serve]\nbatch_max = 0\n",
+            "[serve]\nbatch_wait_ms = -1.0\n",
+            "[serve]\narrival_jitter = 1.5\n",
+            "[fleet]\nbatch_max = 0\n",
+            "[fleet]\nbatch_wait_ms = -0.5\n",
+        ] {
+            let v = toml::parse(bad).unwrap();
+            assert!(AppConfig::from_value(&v).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn batch_policy_roundtrip_names() {
+        for p in BatchPolicyKind::all() {
+            assert_eq!(BatchPolicyKind::parse(p.name()).unwrap(), p);
+        }
+        assert!(BatchPolicyKind::parse("adaptive").is_err());
     }
 }

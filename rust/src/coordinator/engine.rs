@@ -21,6 +21,7 @@
 
 use anyhow::{bail, Result};
 
+use crate::batching::{BatchConfig, Batcher, BatchedCostModel};
 use crate::config::schema::{ConditionKind, PolicyKind, SchedulerKind};
 use crate::graph::{ModelGraph, OpNode};
 use crate::metrics::{
@@ -101,6 +102,10 @@ pub struct EngineConfig {
     /// Label identifying the simulated device in reports (fleet runs);
     /// `None` keeps single-device report output unchanged.
     pub device_label: Option<String>,
+    /// Dynamic-batching subsystem configuration (see [`crate::batching`]).
+    /// The default (`none`) runs the legacy single-dispatch path bit for
+    /// bit.
+    pub batching: BatchConfig,
 }
 
 impl Default for EngineConfig {
@@ -123,6 +128,7 @@ impl Default for EngineConfig {
             device_cfg: DeviceConfig::snapdragon_855(),
             condition_spec: None,
             device_label: None,
+            batching: BatchConfig::default(),
         }
     }
 }
@@ -240,15 +246,25 @@ impl Engine {
 
     fn plan_for(&mut self, g: &ModelGraph) -> Result<Plan> {
         let snap = self.device.snapshot();
-        if let Some(plan) = self.plan_cache.lookup(&g.name, &snap, self.cfg.objective) {
+        let hint = self.cfg.batching.plan_hint();
+        if let Some(plan) = self.plan_cache.lookup(&g.name, &snap, self.cfg.objective, hint) {
             return Ok(plan);
         }
-        let plan = match self.cfg.planner_info {
-            PlannerInfo::Profiler => self.policy.partition(g, &self.profiler, &snap),
-            PlannerInfo::Oracle => self.policy.partition(g, &self.device, &snap),
-        }?;
+        let plan = {
+            // with batching enabled, the DP prices a batch of `hint`
+            // requests (amortized dispatch/transfer), not one request
+            let base = cost_model(self.cfg.planner_info, &self.profiler, &self.device);
+            let batched;
+            let model: &dyn crate::profiler::CostModel = if hint > 1 {
+                batched = BatchedCostModel::new(base, hint);
+                &batched
+            } else {
+                base
+            };
+            self.policy.partition(g, model, &snap)?
+        };
         self.plan_cache
-            .insert(&g.name, &snap, self.cfg.objective, plan.clone());
+            .insert(&g.name, &snap, self.cfg.objective, hint, plan.clone());
         Ok(plan)
     }
 
@@ -439,6 +455,7 @@ impl Engine {
             partition_overhead_s: self.controller.mean_decision_s(),
             plan_cache: self.plan_cache_stats(),
             sched: None,
+            batch: None,
         })
     }
 
@@ -466,13 +483,25 @@ impl Engine {
         }
         self.profiler.reset_correction();
         let snap = self.device.snapshot();
+        let hint = self.cfg.batching.plan_hint();
         let model = cost_model(self.cfg.planner_info, &self.profiler, &self.device);
+        // price the re-plan at the same batch size its cache bucket is
+        // keyed under (see plan_for) — caching a single-request-priced
+        // plan under a batched bucket would alias the key space
+        let batched;
+        let planning: &dyn crate::profiler::CostModel = if hint > 1 {
+            batched = BatchedCostModel::new(model, hint);
+            &batched
+        } else {
+            model
+        };
         if let Some((p, dt)) = self.controller.on_regime_change(
             g,
             self.policy.as_ref(),
-            model,
+            planning,
             &snap,
             self.cfg.objective,
+            hint,
             Some(&mut self.plan_cache),
         ) {
             *plan = p;
@@ -523,6 +552,10 @@ impl Engine {
         let mut dispatch = DispatchStage::new(self.cfg.scheduler);
         let mut exec = ExecStage::new();
         let mut monitor = MonitorStage::new(self.cfg.monitor_period_s);
+        // `None` with batching disabled: the legacy single-dispatch path
+        // below then runs statement-for-statement unchanged
+        let mut batcher = Batcher::from_config(&self.cfg.batching);
+        let batch_hint = self.cfg.batching.plan_hint();
 
         loop {
             // admit arrivals until one is active (shed arrivals pop the next)
@@ -541,7 +574,11 @@ impl Engine {
             }
 
             // the dispatch policy picks which request runs its next op
-            let d = dispatch.pick(exec.active(), &plans, exec.avail());
+            // (held batch frontiers floor their candidates' start)
+            let d = match batcher.as_ref() {
+                Some(b) => dispatch.pick_floored(exec.active(), &plans, exec.avail(), b),
+                None => dispatch.pick(exec.active(), &plans, exec.avail()),
+            };
 
             // a strictly earlier queued arrival preempts the decision
             if queue.peek_arrival_time().is_some_and(|t| t < d.start_s) {
@@ -553,12 +590,31 @@ impl Engine {
                 continue; // re-evaluate (with the newcomer, or the next arrival)
             }
 
+            // batch formation: collect the picked frontier's co-dispatchable
+            // members and ask the policy to close or hold
+            let batch = match batcher.as_mut() {
+                Some(b) => {
+                    let mut formed = b.form(d.active_idx, d.start_s, exec.active());
+                    let remaining = plans.profile(formed.stream)[formed.op];
+                    let min_deadline = formed
+                        .members
+                        .iter()
+                        .map(|&ai| exec.active()[ai].req.deadline_s)
+                        .fold(f64::INFINITY, f64::min);
+                    if !b.decide(&mut formed, d.start_s, remaining, min_deadline) {
+                        continue; // frontier held open; its start is floored
+                    }
+                    Some(formed)
+                }
+                None => None,
+            };
+
             // advance virtual time, then deliver a due monitor tick
             let start_s = exec.advance_to(&mut self.device, d.start_s);
             if let Some(tick) = monitor.maybe_tick(
                 &mut self.monitor, &self.device, &mut self.profiler, self.policy.as_ref(),
                 &mut self.controller, &mut self.plan_cache, &mut plans, streams,
-                self.cfg.planner_info, self.cfg.objective,
+                self.cfg.planner_info, self.cfg.objective, batch_hint,
             ) {
                 emit(observers, &Event::MonitorTick {
                     t_s: self.device.time_s(), regime_changed: tick.regime_changed,
@@ -571,6 +627,72 @@ impl Engine {
                     });
                 }
                 dispatch.invalidate_all();
+            }
+
+            if let Some(formed) = batch {
+                // batched dispatch: one measurement for every member
+                let recs = exec.execute_batch(
+                    &formed.members, start_s, streams, &plans, &mut self.device,
+                    &mut self.profiler, dispatch.scheduler(), self.cfg.planner_info,
+                    &mut self.numerics,
+                )?;
+                for _ in &recs {
+                    self.controller.tick();
+                }
+                for &ai in &formed.members {
+                    dispatch.note_op_executed(ai);
+                }
+                for rec in &recs {
+                    emit(observers, &Event::OpDispatch {
+                        request: rec.request, stream: rec.stream, op: rec.op,
+                        start_s: rec.start_s, placement: rec.placement,
+                    });
+                    emit(observers, &Event::OpComplete {
+                        request: rec.request, stream: rec.stream, op: rec.op,
+                        end_s: rec.end_s, latency_s: rec.latency_s, energy_j: rec.energy_j,
+                    });
+                }
+                // formation wait is measured at the *decision* time: the
+                // clamped execution start can sit far past d.start_s when
+                // another stream advanced the device clock, and that gap
+                // is resource wait, not batch-hold wait
+                let wait_s = (d.start_s - formed.formed_at_s).max(0.0);
+                if recs.len() > 1 || wait_s > 0.0 {
+                    emit(observers, &Event::BatchClose {
+                        stream: formed.stream, op: formed.op, t_s: start_s,
+                        size: recs.len(), wait_s,
+                    });
+                    crate::sim::observer::emit_batch(
+                        observers, formed.stream, formed.op, recs.len(), wait_s,
+                    );
+                }
+
+                // drift fast path (AdaOper only), anchored at the batch lead
+                if let Some((stream, dt)) = monitor.maybe_drift(
+                    formed.members[0], exec.active(), streams, &self.device,
+                    &self.profiler, &mut self.controller, &mut plans, self.cfg.policy,
+                    self.cfg.planner_info, batch_hint,
+                ) {
+                    exec.charge_cpu_decision(dt);
+                    dispatch.invalidate_all();
+                    emit(observers, &Event::RegimeReplan {
+                        stream, t_s: self.device.time_s(),
+                        trigger: Trigger::Drift, decision_s: dt,
+                    });
+                }
+
+                // completions in descending index order: swap_remove moves
+                // the tail, so lower member indices stay valid
+                let mut done = formed.members.clone();
+                done.sort_unstable_by(|a, b| b.cmp(a));
+                for ai in done {
+                    if let Some(outcome) = exec.complete_if_done(ai) {
+                        dispatch.note_removed(ai);
+                        let met = outcome.met_deadline();
+                        emit_done(observers, &outcome, met);
+                    }
+                }
+                continue;
             }
 
             // execute the chosen op and account for it
@@ -594,6 +716,7 @@ impl Engine {
             if let Some((stream, dt)) = monitor.maybe_drift(
                 d.active_idx, exec.active(), streams, &self.device, &self.profiler,
                 &mut self.controller, &mut plans, self.cfg.policy, self.cfg.planner_info,
+                batch_hint,
             ) {
                 exec.charge_cpu_decision(dt);
                 dispatch.invalidate_all();
@@ -610,7 +733,10 @@ impl Engine {
                 emit_done(observers, &outcome, met);
             }
         }
-        Ok(self.assemble_report(streams, &exec, &admission, dispatch.name(), arrivals.total()))
+        let batch_stats = batcher.as_ref().map(|b| b.stats());
+        Ok(self.assemble_report(
+            streams, &exec, &admission, dispatch.name(), arrivals.total(), batch_stats,
+        ))
     }
 
     /// One admission: run the controller, activate on success, and
@@ -654,6 +780,7 @@ impl Engine {
         admission: &AdmissionStage,
         scheduler_name: &str,
         total_requests: usize,
+        batch: Option<crate::metrics::BatchStats>,
     ) -> ServingReport {
         let wall = self.device.time_s().max(self.cfg.duration_s);
         let counters = admission.counters();
@@ -694,6 +821,7 @@ impl Engine {
             partition_overhead_s: self.controller.mean_decision_s(),
             plan_cache: self.plan_cache_stats(),
             sched: Some(sched),
+            batch,
         }
     }
 }
@@ -949,6 +1077,42 @@ mod tests {
         assert!(sc.dropped_capacity > 0, "{sc:?}");
         assert_eq!(sc.offered, sc.admitted + sc.dropped_capacity);
         assert_eq!(r.requests, sc.admitted);
+    }
+
+    #[test]
+    fn batched_run_completes_everything_and_reports_stats() {
+        use crate::config::schema::BatchPolicyKind;
+        let mut e = Engine::new(EngineConfig {
+            duration_s: 2.0,
+            policy: PolicyKind::MaceGpu,
+            scheduler: SchedulerKind::Edf,
+            calib: quick_calib(),
+            batching: BatchConfig {
+                policy: BatchPolicyKind::Fixed,
+                max: 4,
+                wait_s: 4e-3,
+            },
+            ..Default::default()
+        });
+        let mut c = EventCounters::default();
+        // past saturation: queues form, so same-stream frontiers co-reside
+        let r = e.run_observed(&stream(60.0, 1.5), &mut [&mut c]).unwrap();
+        let b = r.batch.clone().expect("batching run must report stats");
+        assert_eq!(b.policy, "fixed");
+        assert!(b.formed > 0, "{b:?}");
+        assert!(b.batched_dispatches > 0, "overload formed no batches: {b:?}");
+        assert!(b.max_size >= 2 && b.max_size <= 4, "{b:?}");
+        // every admitted request still completes, and the per-member event
+        // stream keeps the op-count invariant intact
+        let sc = r.sched.clone().unwrap();
+        assert_eq!(r.requests, sc.admitted);
+        assert_eq!(c.op_dispatches, c.op_completes);
+        let g = zoo::yolov2_tiny();
+        assert_eq!(c.op_dispatches, r.requests * g.num_ops());
+        // observer tallies and report stats are two views of the same
+        // batched dispatches (singleton closes are excluded from both)
+        assert_eq!(c.batch_closes, b.batched_dispatches, "{c:?} vs {b:?}");
+        assert_eq!(c.batched_requests, b.batched_requests);
     }
 
     #[test]

@@ -195,6 +195,7 @@ impl LiveSession {
             partition_overhead_s: 0.0,
             plan_cache: None,
             sched: None,
+            batch: None,
         };
         Ok((report, last_output))
     }

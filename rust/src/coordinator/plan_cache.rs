@@ -1,5 +1,5 @@
 //! Partition-plan cache: memoizes full DP solves keyed by (model id,
-//! quantized device-condition bucket, objective).
+//! quantized device-condition bucket, objective, quantized batch size).
 //!
 //! Per-request planning cost dominates at high request rates: every
 //! repartition trigger re-runs the DP from scratch even when the device has
@@ -56,7 +56,8 @@ impl Default for PlanCacheConfig {
     }
 }
 
-/// Cache key: model identity × quantized condition × objective.
+/// Cache key: model identity × quantized condition × objective × quantized
+/// batch size.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 struct CacheKey {
     model: String,
@@ -67,6 +68,16 @@ struct CacheKey {
     temp: i64,
     bw: i64,
     objective: (u8, u64),
+    batch: u32,
+}
+
+/// Quantized batch-size dimension of the cache key: log₂ buckets
+/// (1 → 1, 2 → 2, 3–4 → 3, 5–8 → 4, …). Plans priced for nearby batch
+/// sizes are interchangeable (the batch-aware cost model is smooth in B),
+/// while batched and unbatched plans never alias — an unbatched run keeps
+/// exactly the legacy key space.
+pub fn batch_bucket(batch: usize) -> u32 {
+    usize::BITS - batch.max(1).leading_zeros()
 }
 
 /// Stable key for an [`Objective`] (f64 SLOs keyed by their bit pattern).
@@ -121,7 +132,13 @@ impl PlanCache {
         &self.cfg
     }
 
-    fn key(&self, model: &str, snap: &Snapshot, objective: Objective) -> CacheKey {
+    fn key(
+        &self,
+        model: &str,
+        snap: &Snapshot,
+        objective: Objective,
+        batch: usize,
+    ) -> CacheKey {
         CacheKey {
             model: model.to_string(),
             cpu_freq: bucket(snap.cpu_freq_hz, self.cfg.freq_bucket_hz),
@@ -131,16 +148,25 @@ impl PlanCache {
             temp: bucket(snap.temp_c, self.cfg.temp_bucket_c),
             bw: bucket(snap.bw_factor, self.cfg.bw_bucket),
             objective: objective_key(objective),
+            batch: batch_bucket(batch),
         }
     }
 
-    /// Look a plan up for (model, quantized condition, objective). Counts a
-    /// hit or a miss; disabled caches return `None` without counting.
-    pub fn lookup(&mut self, model: &str, snap: &Snapshot, objective: Objective) -> Option<Plan> {
+    /// Look a plan up for (model, quantized condition, objective, batch
+    /// bucket). `batch` is the size planning priced ops at (1 on the
+    /// unbatched path). Counts a hit or a miss; disabled caches return
+    /// `None` without counting.
+    pub fn lookup(
+        &mut self,
+        model: &str,
+        snap: &Snapshot,
+        objective: Objective,
+        batch: usize,
+    ) -> Option<Plan> {
         if !self.enabled() {
             return None;
         }
-        let key = self.key(model, snap, objective);
+        let key = self.key(model, snap, objective, batch);
         self.tick += 1;
         match self.entries.get_mut(&key) {
             Some(e) => {
@@ -156,12 +182,20 @@ impl PlanCache {
     }
 
     /// Insert (or refresh) the plan for (model, quantized condition,
-    /// objective), evicting the least-recently-used entry at capacity.
-    pub fn insert(&mut self, model: &str, snap: &Snapshot, objective: Objective, plan: Plan) {
+    /// objective, batch bucket), evicting the least-recently-used entry at
+    /// capacity.
+    pub fn insert(
+        &mut self,
+        model: &str,
+        snap: &Snapshot,
+        objective: Objective,
+        batch: usize,
+        plan: Plan,
+    ) {
         if !self.enabled() {
             return;
         }
-        let key = self.key(model, snap, objective);
+        let key = self.key(model, snap, objective, batch);
         self.tick += 1;
         if let Some(e) = self.entries.get_mut(&key) {
             e.plan = plan;
@@ -244,9 +278,9 @@ mod tests {
     fn cold_miss_then_warm_hit() {
         let mut c = PlanCache::new(PlanCacheConfig::default());
         let s = snap(1.497e9, 0.35);
-        assert!(c.lookup("yolov2", &s, Objective::MinEdp).is_none());
-        c.insert("yolov2", &s, Objective::MinEdp, plan("a"));
-        let got = c.lookup("yolov2", &s, Objective::MinEdp).unwrap();
+        assert!(c.lookup("yolov2", &s, Objective::MinEdp, 1).is_none());
+        c.insert("yolov2", &s, Objective::MinEdp, 1, plan("a"));
+        let got = c.lookup("yolov2", &s, Objective::MinEdp, 1).unwrap();
         assert_eq!(got.policy, "a");
         let st = c.stats();
         assert_eq!((st.hits, st.misses), (1, 1));
@@ -256,31 +290,58 @@ mod tests {
     #[test]
     fn nearby_snapshots_share_a_bucket_distant_ones_do_not() {
         let mut c = PlanCache::new(PlanCacheConfig::default());
-        c.insert("m", &snap(1.497e9, 0.35), Objective::MinEdp, plan("a"));
+        c.insert("m", &snap(1.497e9, 0.35), Objective::MinEdp, 1, plan("a"));
         // same OPP, utilization wobble inside one 0.15-wide bucket
-        assert!(c.lookup("m", &snap(1.497e9, 0.38), Objective::MinEdp).is_some());
+        assert!(c.lookup("m", &snap(1.497e9, 0.38), Objective::MinEdp, 1).is_some());
         // repinned frequency → different bucket
-        assert!(c.lookup("m", &snap(0.883e9, 0.35), Objective::MinEdp).is_none());
+        assert!(c.lookup("m", &snap(0.883e9, 0.35), Objective::MinEdp, 1).is_none());
         // utilization regime shift → different bucket
-        assert!(c.lookup("m", &snap(1.497e9, 0.65), Objective::MinEdp).is_none());
+        assert!(c.lookup("m", &snap(1.497e9, 0.65), Objective::MinEdp, 1).is_none());
     }
 
     #[test]
     fn keys_distinguish_model_and_objective() {
         let mut c = PlanCache::new(PlanCacheConfig::default());
         let s = snap(1.497e9, 0.35);
-        c.insert("a", &s, Objective::MinEdp, plan("a"));
-        assert!(c.lookup("b", &s, Objective::MinEdp).is_none());
-        assert!(c.lookup("a", &s, Objective::MinLatency).is_none());
+        c.insert("a", &s, Objective::MinEdp, 1, plan("a"));
+        assert!(c.lookup("b", &s, Objective::MinEdp, 1).is_none());
+        assert!(c.lookup("a", &s, Objective::MinLatency, 1).is_none());
         assert!(c
-            .lookup("a", &s, Objective::MinEnergyUnderSlo { slo_s: 0.1 })
+            .lookup("a", &s, Objective::MinEnergyUnderSlo { slo_s: 0.1 }, 1)
             .is_none());
-        assert!(c.lookup("a", &s, Objective::MinEdp).is_some());
+        assert!(c.lookup("a", &s, Objective::MinEdp, 1).is_some());
         // distinct SLOs are distinct keys
-        c.insert("a", &s, Objective::MinEnergyUnderSlo { slo_s: 0.1 }, plan("s1"));
+        c.insert("a", &s, Objective::MinEnergyUnderSlo { slo_s: 0.1 }, 1, plan("s1"));
         assert!(c
-            .lookup("a", &s, Objective::MinEnergyUnderSlo { slo_s: 0.2 })
+            .lookup("a", &s, Objective::MinEnergyUnderSlo { slo_s: 0.2 }, 1)
             .is_none());
+    }
+
+    #[test]
+    fn batch_buckets_are_log2_and_key_the_cache() {
+        assert_eq!(batch_bucket(0), 1);
+        assert_eq!(batch_bucket(1), 1);
+        assert_eq!(batch_bucket(2), 2);
+        assert_eq!(batch_bucket(3), 3);
+        assert_eq!(batch_bucket(4), 3);
+        assert_eq!(batch_bucket(5), 4);
+        assert_eq!(batch_bucket(8), 4);
+        assert_eq!(batch_bucket(9), 5);
+
+        let mut c = PlanCache::new(PlanCacheConfig::default());
+        let s = snap(1.497e9, 0.35);
+        c.insert("m", &s, Objective::MinEdp, 1, plan("unbatched"));
+        // a batched lookup must not alias the unbatched plan …
+        assert!(c.lookup("m", &s, Objective::MinEdp, 4).is_none());
+        c.insert("m", &s, Objective::MinEdp, 4, plan("b4"));
+        // … sizes inside one log₂ bucket share a plan …
+        assert_eq!(c.lookup("m", &s, Objective::MinEdp, 3).unwrap().policy, "b4");
+        // … and the unbatched entry is untouched
+        assert_eq!(
+            c.lookup("m", &s, Objective::MinEdp, 1).unwrap().policy,
+            "unbatched"
+        );
+        assert!(c.lookup("m", &s, Objective::MinEdp, 8).is_none());
     }
 
     #[test]
@@ -292,16 +353,16 @@ mod tests {
         let s1 = snap(0.883e9, 0.1);
         let s2 = snap(1.497e9, 0.1);
         let s3 = snap(2.419e9, 0.1);
-        c.insert("m", &s1, Objective::MinEdp, plan("1"));
-        c.insert("m", &s2, Objective::MinEdp, plan("2"));
+        c.insert("m", &s1, Objective::MinEdp, 1, plan("1"));
+        c.insert("m", &s2, Objective::MinEdp, 1, plan("2"));
         // touch s1 so s2 becomes the LRU victim
-        assert!(c.lookup("m", &s1, Objective::MinEdp).is_some());
-        c.insert("m", &s3, Objective::MinEdp, plan("3"));
+        assert!(c.lookup("m", &s1, Objective::MinEdp, 1).is_some());
+        c.insert("m", &s3, Objective::MinEdp, 1, plan("3"));
         assert_eq!(c.len(), 2);
         assert_eq!(c.stats().evictions, 1);
-        assert!(c.lookup("m", &s1, Objective::MinEdp).is_some(), "LRU kept");
-        assert!(c.lookup("m", &s2, Objective::MinEdp).is_none(), "LRU evicted");
-        assert!(c.lookup("m", &s3, Objective::MinEdp).is_some());
+        assert!(c.lookup("m", &s1, Objective::MinEdp, 1).is_some(), "LRU kept");
+        assert!(c.lookup("m", &s2, Objective::MinEdp, 1).is_none(), "LRU evicted");
+        assert!(c.lookup("m", &s3, Objective::MinEdp, 1).is_some());
     }
 
     #[test]
@@ -311,11 +372,11 @@ mod tests {
             ..Default::default()
         });
         let s = snap(1.497e9, 0.35);
-        c.insert("m", &s, Objective::MinEdp, plan("old"));
-        c.insert("m", &s, Objective::MinEdp, plan("new"));
+        c.insert("m", &s, Objective::MinEdp, 1, plan("old"));
+        c.insert("m", &s, Objective::MinEdp, 1, plan("new"));
         assert_eq!(c.len(), 1);
         assert_eq!(c.stats().evictions, 0);
-        assert_eq!(c.lookup("m", &s, Objective::MinEdp).unwrap().policy, "new");
+        assert_eq!(c.lookup("m", &s, Objective::MinEdp, 1).unwrap().policy, "new");
     }
 
     #[test]
@@ -325,8 +386,8 @@ mod tests {
             ..Default::default()
         });
         let s = snap(1.497e9, 0.35);
-        c.insert("m", &s, Objective::MinEdp, plan("a"));
-        assert!(c.lookup("m", &s, Objective::MinEdp).is_none());
+        c.insert("m", &s, Objective::MinEdp, 1, plan("a"));
+        assert!(c.lookup("m", &s, Objective::MinEdp, 1).is_none());
         let st = c.stats();
         assert_eq!((st.hits, st.misses, st.entries), (0, 0, 0));
         assert!(!c.enabled());
@@ -336,11 +397,11 @@ mod tests {
     fn clear_preserves_counters() {
         let mut c = PlanCache::new(PlanCacheConfig::default());
         let s = snap(1.497e9, 0.35);
-        c.insert("m", &s, Objective::MinEdp, plan("a"));
-        let _ = c.lookup("m", &s, Objective::MinEdp);
+        c.insert("m", &s, Objective::MinEdp, 1, plan("a"));
+        let _ = c.lookup("m", &s, Objective::MinEdp, 1);
         c.clear();
         assert!(c.is_empty());
         assert_eq!(c.stats().hits, 1);
-        assert!(c.lookup("m", &s, Objective::MinEdp).is_none());
+        assert!(c.lookup("m", &s, Objective::MinEdp, 1).is_none());
     }
 }

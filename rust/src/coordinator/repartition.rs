@@ -124,6 +124,10 @@ impl RepartitionController {
     /// the deterministic virtual decision cost ([`VIRTUAL_CACHE_HIT_S`]
     /// for a cache hit, model size × [`VIRTUAL_SOLVE_S_PER_OP`] for a full
     /// solve) to charge to the CPU timeline.
+    /// `batch_hint` is the batch size planning prices ops at (1 on the
+    /// unbatched path); it selects the plan-cache batch bucket so batched
+    /// and unbatched plans never alias.
+    #[allow(clippy::too_many_arguments)]
     pub fn on_regime_change(
         &mut self,
         g: &ModelGraph,
@@ -131,11 +135,12 @@ impl RepartitionController {
         model: &dyn CostModel,
         snap: &Snapshot,
         objective: Objective,
+        batch_hint: usize,
         mut cache: Option<&mut PlanCache>,
     ) -> Option<(Plan, f64)> {
         let t0 = Instant::now();
         if let Some(cache) = cache.as_deref_mut() {
-            if let Some(plan) = cache.lookup(&g.name, snap, objective) {
+            if let Some(plan) = cache.lookup(&g.name, snap, objective, batch_hint) {
                 self.repartitions += 1;
                 self.decision_time_s += t0.elapsed().as_secs_f64();
                 self.ops_since_last = 0;
@@ -144,7 +149,7 @@ impl RepartitionController {
         }
         let plan = policy.partition(g, model, snap).ok()?;
         if let Some(cache) = cache {
-            cache.insert(&g.name, snap, objective, plan.clone());
+            cache.insert(&g.name, snap, objective, batch_hint, plan.clone());
         }
         self.full_solves += 1;
         self.repartitions += 1;
@@ -251,7 +256,7 @@ mod tests {
         let policy = DpPartitioner::new(Objective::MinEdp);
         let mut c = controller(4, 3);
         let (plan, dt) = c
-            .on_regime_change(&g, &policy, &d, &snap, Objective::MinEdp, None)
+            .on_regime_change(&g, &policy, &d, &snap, Objective::MinEdp, 1, None)
             .unwrap();
         assert_eq!(plan.placements.len(), g.num_ops());
         // virtual decision cost is deterministic: per-op constant × model
@@ -270,13 +275,13 @@ mod tests {
         let mut c = controller(4, 0);
         let mut cache = PlanCache::new(PlanCacheConfig::default());
         let (first, _) = c
-            .on_regime_change(&g, &policy, &d, &snap, Objective::MinEdp, Some(&mut cache))
+            .on_regime_change(&g, &policy, &d, &snap, Objective::MinEdp, 1, Some(&mut cache))
             .unwrap();
         assert_eq!(c.full_solves(), 1);
         assert_eq!(cache.stats().misses, 1);
         // same condition again: served from cache, no second full solve
         let (second, dt2) = c
-            .on_regime_change(&g, &policy, &d, &snap, Objective::MinEdp, Some(&mut cache))
+            .on_regime_change(&g, &policy, &d, &snap, Objective::MinEdp, 1, Some(&mut cache))
             .unwrap();
         assert_eq!(c.full_solves(), 1, "cache hit must not re-run the DP");
         assert_eq!(dt2, VIRTUAL_CACHE_HIT_S, "cache hits charge the hit cost");

@@ -14,8 +14,10 @@
 //! | A6  | [`cache_scenario::run`]         | plan-cache hit rate, bursty trace  |
 //! | A7  | [`scheduler_scenario::run`]     | scheduler overload sweep (SLOs)    |
 //! | A8  | [`fleet_scenario::run`]         | fleet scale sweep (device classes) |
+//! | A9  | [`batching_scenario::run`]      | batching sweep (energy vs batch cap)|
 
 pub mod ablations;
+pub mod batching_scenario;
 pub mod cache_scenario;
 pub mod fig2;
 pub mod fleet_scenario;

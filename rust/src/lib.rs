@@ -40,6 +40,7 @@
 
 #![warn(missing_docs)]
 
+pub mod batching;
 pub mod cli;
 pub mod config;
 pub mod experiments;

@@ -66,6 +66,13 @@ impl LogHistogram {
         h
     }
 
+    /// The batch-size configuration every serving report uses: 1 – 4096
+    /// in ~25 % buckets (sizes are small integers, so the mean stays exact
+    /// via the sum and the quantiles land within one size step).
+    pub fn batch_sizes() -> LogHistogram {
+        LogHistogram::new(1.0, 4096.0, 1.25)
+    }
+
     fn core_buckets(&self) -> usize {
         self.counts.len() - 2
     }

@@ -11,5 +11,5 @@ pub mod trace;
 pub use energy::EnergyAccount;
 pub use histogram::LogHistogram;
 pub use latency::LatencyRecorder;
-pub use report::{PlanCacheStats, SchedStats, ServingReport};
+pub use report::{BatchStats, PlanCacheStats, SchedStats, ServingReport};
 pub use trace::TraceObserver;

@@ -12,8 +12,16 @@
 //!          "placement":"gpu"}, ...]}
 //! ```
 //!
-//! Shed requests carry `"shed":true` and omit the execution fields. The
-//! CLI wires this behind `adaoper serve --trace <path>` (or the
+//! Shed requests carry `"shed":true` and omit the execution fields. When
+//! dynamic batching is enabled, every batch close additionally emits a
+//! standalone event line (interleaved with request lines in close order):
+//!
+//! ```json
+//! {"event":"batch_close","stream":0,"op":0,"t_s":1.2345,"size":4,
+//!  "wait_s":0.0031}
+//! ```
+//!
+//! The CLI wires this behind `adaoper serve --trace <path>` (or the
 //! `[serve] trace` config key); every line is standalone JSON, so the
 //! file streams into `jq`/pandas without a wrapper.
 
@@ -174,6 +182,23 @@ impl SimObserver for TraceObserver {
                     }
                 }
             }
+            Event::BatchClose {
+                stream,
+                op,
+                t_s,
+                size,
+                wait_s,
+            } => {
+                self.lines.push(format!(
+                    "{{\"event\":\"batch_close\",\"stream\":{},\"op\":{},\"t_s\":{},\
+                     \"size\":{},\"wait_s\":{}}}",
+                    stream,
+                    op,
+                    json_f64(*t_s),
+                    size,
+                    json_f64(*wait_s),
+                ));
+            }
             Event::MonitorTick { .. } | Event::RegimeReplan { .. } => {}
         }
     }
@@ -288,6 +313,24 @@ mod tests {
         assert_eq!(tr.len(), 1);
         assert!(tr.lines()[0].contains("\"shed\":true"));
         assert!(tr.lines()[0].contains("\"id\":7"));
+    }
+
+    #[test]
+    fn batch_close_emits_standalone_event_line() {
+        let mut tr = TraceObserver::new();
+        tr.on_event(&Event::BatchClose {
+            stream: 1,
+            op: 0,
+            t_s: 2.5,
+            size: 4,
+            wait_s: 0.003,
+        });
+        assert_eq!(tr.len(), 1);
+        let line = &tr.lines()[0];
+        assert!(line.starts_with('{') && line.ends_with('}'), "{line}");
+        assert!(line.contains("\"event\":\"batch_close\""));
+        assert!(line.contains("\"size\":4"));
+        assert!(line.contains("\"wait_s\":0.003"));
     }
 
     #[test]

@@ -160,6 +160,35 @@ pub fn evaluate(
     total
 }
 
+/// Evaluate a placement assignment for a *batch* of `batch` co-dispatched
+/// requests: every op is priced through
+/// [`crate::profiler::CostModel::predict_batch`] (transfer per member,
+/// sub-linear compute growth, dispatch paid once), summed over the model.
+/// The returned cost is the **full batch's** cost — divide `energy_j` by
+/// `batch` for the per-request amortized figure; `latency_s` is what every
+/// member experiences (batched requests complete together). With
+/// `batch <= 1` this equals [`evaluate`].
+pub fn evaluate_batched(
+    g: &ModelGraph,
+    placements: &[Placement],
+    model: &dyn CostModel,
+    snap: &Snapshot,
+    batch: usize,
+) -> PlanCost {
+    assert_eq!(placements.len(), g.num_ops());
+    let mut walker = CtxWalker::new(g);
+    let mut total = PlanCost::default();
+    for (i, op) in g.ops.iter().enumerate() {
+        let ctx = walker.step(i, placements[i]);
+        let c: OpCost = model.predict_batch(op, placements[i], &ctx, snap, batch.max(1));
+        total.energy_j += c.energy_j;
+        total.latency_s += c.latency_s;
+        total.transfer_s += c.transfer_s;
+        total.transfer_j += c.transfer_j;
+    }
+    total
+}
+
 /// Predicted latency of each op of a placement assignment, in execution
 /// order, under the same context construction as [`evaluate`]. The
 /// coordinator's scheduler builds per-request slack and backlog estimates
@@ -295,6 +324,22 @@ mod tests {
         let ctx = route_ctx.unwrap();
         // route consumes reorg (CPU) and conv20 (GPU)
         assert_eq!(ctx.input_cpu_fracs, vec![1.0, 0.0]);
+    }
+
+    #[test]
+    fn evaluate_batched_amortizes_but_grows_latency() {
+        let g = zoo::yolov2_tiny();
+        let d = dev();
+        let snap = d.snapshot();
+        let p = vec![Placement::GPU; g.num_ops()];
+        let one = evaluate_batched(&g, &p, &d, &snap, 1);
+        let base = evaluate(&g, &p, &d, &snap);
+        assert_eq!(one.latency_s.to_bits(), base.latency_s.to_bits());
+        assert_eq!(one.energy_j.to_bits(), base.energy_j.to_bits());
+        let four = evaluate_batched(&g, &p, &d, &snap, 4);
+        assert!(four.latency_s > base.latency_s);
+        assert!(four.latency_s < 4.0 * base.latency_s);
+        assert!(four.energy_j / 4.0 < base.energy_j, "no amortization");
     }
 
     #[test]

@@ -29,6 +29,23 @@ pub trait CostModel {
         ctx: &ExecCtx,
         snap: &Snapshot,
     ) -> OpCost;
+
+    /// Predicted cost of executing `op` once for a *batch* of `batch`
+    /// co-dispatched requests (the full batch's cost, not per request).
+    /// The default applies the analytic batch scaling
+    /// ([`crate::batching::cost::scale_op_cost`]) to the single-request
+    /// prediction; the device oracle overrides it with the exact batched
+    /// ground truth.
+    fn predict_batch(
+        &self,
+        op: &OpNode,
+        placement: Placement,
+        ctx: &ExecCtx,
+        snap: &Snapshot,
+        batch: usize,
+    ) -> OpCost {
+        crate::batching::cost::scale_op_cost(&self.predict(op, placement, ctx, snap), batch)
+    }
 }
 
 /// Oracle cost model: the device itself (planning with ground truth).
@@ -42,6 +59,17 @@ impl CostModel for Device {
         _snap: &Snapshot,
     ) -> OpCost {
         self.expected_cost(op, placement, ctx)
+    }
+
+    fn predict_batch(
+        &self,
+        op: &OpNode,
+        placement: Placement,
+        ctx: &ExecCtx,
+        _snap: &Snapshot,
+        batch: usize,
+    ) -> OpCost {
+        self.expected_cost_batch(op, placement, ctx, batch)
     }
 }
 

@@ -73,6 +73,23 @@ pub enum Event {
         /// Virtual decision time charged to the CPU timeline, seconds.
         decision_s: f64,
     },
+    /// A forming batch closed and dispatched (see [`crate::batching`]).
+    /// Emitted for every batched dispatch (size > 1) and for held-then-
+    /// closed singletons (wait > 0); plain unbatched dispatches stay
+    /// silent so non-batching runs see an unchanged event stream.
+    BatchClose {
+        /// Owning stream of every member.
+        stream: usize,
+        /// Frontier operator index the batch dispatched.
+        op: usize,
+        /// Virtual time the batch closed (its dispatch start).
+        t_s: f64,
+        /// Requests dispatched together.
+        size: usize,
+        /// Formation wait: close time minus the moment the frontier first
+        /// became dispatchable, seconds.
+        wait_s: f64,
+    },
 }
 
 /// Discriminant of an [`Event`], for counting and display.
@@ -88,6 +105,8 @@ pub enum EventKind {
     MonitorTick,
     /// [`Event::RegimeReplan`].
     RegimeReplan,
+    /// [`Event::BatchClose`].
+    BatchClose,
 }
 
 impl EventKind {
@@ -99,6 +118,7 @@ impl EventKind {
             EventKind::OpComplete => "op_complete",
             EventKind::MonitorTick => "monitor_tick",
             EventKind::RegimeReplan => "regime_replan",
+            EventKind::BatchClose => "batch_close",
         }
     }
 }
@@ -112,6 +132,7 @@ impl Event {
             Event::OpComplete { .. } => EventKind::OpComplete,
             Event::MonitorTick { .. } => EventKind::MonitorTick,
             Event::RegimeReplan { .. } => EventKind::RegimeReplan,
+            Event::BatchClose { .. } => EventKind::BatchClose,
         }
     }
 
@@ -123,6 +144,7 @@ impl Event {
             Event::OpComplete { end_s, .. } => *end_s,
             Event::MonitorTick { t_s, .. } => *t_s,
             Event::RegimeReplan { t_s, .. } => *t_s,
+            Event::BatchClose { t_s, .. } => *t_s,
         }
     }
 }
@@ -155,5 +177,15 @@ mod tests {
         };
         assert_eq!(ev.kind(), EventKind::MonitorTick);
         assert_eq!(ev.time_s(), 2.0);
+        let ev = Event::BatchClose {
+            stream: 0,
+            op: 0,
+            t_s: 3.5,
+            size: 4,
+            wait_s: 0.002,
+        };
+        assert_eq!(ev.kind(), EventKind::BatchClose);
+        assert_eq!(ev.time_s(), 3.5);
+        assert_eq!(ev.kind().name(), "batch_close");
     }
 }

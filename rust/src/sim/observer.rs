@@ -25,6 +25,12 @@ pub trait SimObserver {
     /// Called once per completed request, after its final
     /// [`Event::OpComplete`].
     fn on_request_done(&mut self, _outcome: &RequestOutcome, _met_deadline: bool) {}
+
+    /// Called once per batch close alongside the corresponding
+    /// [`Event::BatchClose`] — a typed convenience hook so batching
+    /// scenarios need not destructure the event. Never called on runs with
+    /// batching disabled.
+    fn on_batch(&mut self, _stream: usize, _op: usize, _size: usize, _wait_s: f64) {}
 }
 
 /// Broadcast one event to every observer.
@@ -42,6 +48,20 @@ pub fn emit_done(
 ) {
     for o in observers.iter_mut() {
         o.on_request_done(outcome, met_deadline);
+    }
+}
+
+/// Broadcast one batch close to every observer (the typed hook; the
+/// engine additionally emits the matching [`Event::BatchClose`]).
+pub fn emit_batch(
+    observers: &mut [&mut dyn SimObserver],
+    stream: usize,
+    op: usize,
+    size: usize,
+    wait_s: f64,
+) {
+    for o in observers.iter_mut() {
+        o.on_batch(stream, op, size, wait_s);
     }
 }
 
@@ -69,6 +89,13 @@ pub struct EventCounters {
     pub completed: usize,
     /// Completed requests that missed their deadline.
     pub deadline_misses: usize,
+    /// Batched dispatches observed: [`Event::BatchClose`] events with
+    /// more than one member (held-then-closed singletons are excluded, so
+    /// these tallies match `BatchStats::batched_dispatches` and the fleet
+    /// merge stays consistent across aggregation paths).
+    pub batch_closes: usize,
+    /// Requests dispatched inside those batched dispatches.
+    pub batched_requests: usize,
 }
 
 impl EventCounters {
@@ -102,6 +129,12 @@ impl SimObserver for EventCounters {
                 }
             }
             Event::RegimeReplan { .. } => self.replans += 1,
+            Event::BatchClose { size, .. } => {
+                if *size > 1 {
+                    self.batch_closes += 1;
+                    self.batched_requests += size;
+                }
+            }
         }
     }
 
@@ -157,8 +190,24 @@ mod tests {
             t_s: 0.2,
             regime_changed: true,
         });
+        c.on_event(&Event::BatchClose {
+            stream: 0,
+            op: 0,
+            t_s: 0.3,
+            size: 3,
+            wait_s: 0.001,
+        });
+        // a held-then-closed singleton must not count as a batched dispatch
+        c.on_event(&Event::BatchClose {
+            stream: 0,
+            op: 0,
+            t_s: 0.4,
+            size: 1,
+            wait_s: 0.004,
+        });
         assert_eq!((c.offered, c.admitted, c.shed), (2, 1, 1));
         assert_eq!((c.monitor_ticks, c.regime_changes), (1, 1));
+        assert_eq!((c.batch_closes, c.batched_requests), (1, 3));
         c.on_request_done(&outcome(0.0, 0.5, 1.0), true);
         c.on_request_done(&outcome(0.1, 2.0, 1.1), false);
         assert_eq!((c.completed, c.deadline_misses), (2, 1));

@@ -338,6 +338,33 @@ impl DispatchStage {
     /// Pick the next request to run an op for. `active` must be non-empty
     /// and aligned with the slots this stage was notified about.
     pub fn pick(&mut self, active: &[Active], plans: &PlanTable, avail: &[f64; 2]) -> Decision {
+        self.pick_impl(active, plans, avail, None)
+    }
+
+    /// [`DispatchStage::pick`] with batch-hold floors applied: a candidate
+    /// whose `(stream, op)` frontier is being held open by the
+    /// [`crate::batching::Batcher`] may not start before the hold's
+    /// release time — other streams' candidates keep their natural start
+    /// and win dispatch in the meantime, and arrivals admitted before the
+    /// release can still join the held batch. With no holds recorded this
+    /// is identical to `pick` (the unbatched engine never calls it).
+    pub fn pick_floored(
+        &mut self,
+        active: &[Active],
+        plans: &PlanTable,
+        avail: &[f64; 2],
+        batcher: &crate::batching::Batcher,
+    ) -> Decision {
+        self.pick_impl(active, plans, avail, Some(batcher))
+    }
+
+    fn pick_impl(
+        &mut self,
+        active: &[Active],
+        plans: &PlanTable,
+        avail: &[f64; 2],
+        batcher: Option<&crate::batching::Batcher>,
+    ) -> Decision {
         debug_assert_eq!(self.slots.len(), active.len());
         self.cands.clear();
         for (ai, a) in active.iter().enumerate() {
@@ -353,6 +380,9 @@ impl DispatchStage {
                 if slot.placement.uses(p) {
                     start = start.max(avail[p.index()]);
                 }
+            }
+            if let Some(release) = batcher.and_then(|b| b.floor(a.model, a.next_op)) {
+                start = start.max(release);
             }
             self.cands.push(Candidate {
                 active_idx: ai,
@@ -577,6 +607,137 @@ impl ExecStage {
         })
     }
 
+    /// Execute the next op of every request in `members` as **one batched
+    /// dispatch** at (clamped) `start_s` (see [`crate::batching`]). All
+    /// members must belong to the same stream and sit at the same op
+    /// frontier with inputs ready by `start_s`; a single-member batch is
+    /// exactly [`ExecStage::execute`].
+    ///
+    /// The device measures the batch once
+    /// ([`crate::soc::device::Device::measure_batch`]: transfer per member,
+    /// sub-linear compute growth, dispatch paid once); every member
+    /// advances to the same completion time (batched requests finish
+    /// together — the responsiveness cost the batch policy weighed), the
+    /// batch's energy is attributed in equal per-member shares, and the
+    /// profiler is fed a de-batched per-request estimate
+    /// ([`crate::batching::cost::debatch_op_cost`]) so the drift corrector
+    /// keeps learning single-request residuals. Returns one [`OpRecord`]
+    /// per member, in member order.
+    #[allow(clippy::too_many_arguments)]
+    pub fn execute_batch(
+        &mut self,
+        members: &[usize],
+        start_s: f64,
+        streams: &[StreamSpec],
+        plans: &PlanTable,
+        device: &mut Device,
+        profiler: &mut EnergyProfiler,
+        scheduler: &dyn Scheduler,
+        info: PlannerInfo,
+        numerics: &mut Option<NumericsHook>,
+    ) -> Result<Vec<OpRecord>> {
+        assert!(!members.is_empty(), "empty batch");
+        if members.len() == 1 {
+            return Ok(vec![self.execute(
+                members[0], start_s, streams, plans, device, profiler, scheduler, info,
+                numerics,
+            )?]);
+        }
+        let batch = members.len();
+        let stream = self.active[members[0]].model;
+        let op_idx = self.active[members[0]].next_op;
+        debug_assert!(members
+            .iter()
+            .all(|&ai| self.active[ai].model == stream && self.active[ai].next_op == op_idx));
+        let others_running = self.active.len() > batch;
+        let g: &ModelGraph = &streams[stream].model;
+        let op = &g.ops[op_idx];
+        let planned = plans.plan(stream).placements[op_idx];
+        // the lead (oldest) member's residency and run-continuation flags
+        // stand in for the batch: members move in lockstep under the same
+        // plan, so their residencies agree except after per-member
+        // placement overrides, which the batch path never takes apart
+        let lead = &self.active[members[0]];
+        let input_cpu_fracs: Vec<f64> = if op.inputs.is_empty() {
+            vec![INPUT_CPU_FRAC; op.in_shapes.len()]
+        } else {
+            op.inputs.iter().map(|&j| lead.out_cpu[j]).collect()
+        };
+        let (new_run_cpu, new_run_gpu) = match lead.prev_placement {
+            None => (true, true),
+            Some(p) => (!p.uses(Proc::Cpu), !p.uses(Proc::Gpu)),
+        };
+        // the tightest member's slack governs the energy-placement override
+        let slack_s = members
+            .iter()
+            .map(|&ai| self.active[ai].req.deadline_s)
+            .fold(f64::INFINITY, f64::min)
+            - (start_s + plans.profile(stream)[op_idx]);
+        let ctx = ExecCtx {
+            input_cpu_fracs,
+            new_run_cpu,
+            new_run_gpu,
+            concurrent: others_running,
+        };
+        let snap = device.snapshot();
+        let placement = {
+            let model = cost_model(info, profiler, device);
+            let wanted = scheduler.place(planned, op, &ctx, &snap, model, slack_s);
+            let feasible = Proc::ALL
+                .iter()
+                .all(|&p| !wanted.uses(p) || self.avail[p.index()] <= start_s);
+            if feasible {
+                wanted
+            } else {
+                planned
+            }
+        };
+        let measured = device.measure_batch(op, placement, &ctx, batch);
+        let per_request = crate::batching::cost::debatch_op_cost(&measured, batch);
+        profiler.observe(op, placement, &ctx, &snap, &per_request);
+        self.energy.add_op(&measured);
+        let end_s = start_s + measured.latency_s;
+        let share_j = measured.energy_j / batch as f64;
+        let mut records = Vec::with_capacity(batch);
+        for &ai in members {
+            let a = &mut self.active[ai];
+            a.energy_j += share_j;
+            if a.start_s.is_none() {
+                a.start_s = Some(start_s);
+            }
+            a.out_cpu[op_idx] = placement.frac_on(Proc::Cpu);
+            a.prev_placement = Some(placement);
+            a.data_ready_s = end_s;
+            records.push(OpRecord {
+                request: a.req.id,
+                stream,
+                op: op_idx,
+                start_s,
+                end_s,
+                latency_s: measured.latency_s,
+                energy_j: share_j,
+                placement,
+            });
+        }
+        for p in Proc::ALL {
+            if placement.uses(p) {
+                self.avail[p.index()] = end_s;
+                self.busy_acc[p.index()] += measured.latency_s;
+            }
+        }
+        self.cpu_busy_total += measured.cpu_busy_s;
+        self.gpu_busy_total += measured.gpu_busy_s;
+        if let Some(hook) = numerics.as_mut() {
+            for &ai in members {
+                hook(&self.active[ai].req, op)?;
+            }
+        }
+        for &ai in members {
+            self.active[ai].next_op += 1;
+        }
+        Ok(records)
+    }
+
     /// If `active[ai]` just ran its last op, retire it: record latency and
     /// deadline outcome, close the energy account, and return the outcome.
     pub fn complete_if_done(&mut self, ai: usize) -> Option<RequestOutcome> {
@@ -657,6 +818,12 @@ impl MonitorStage {
     /// is re-planned (served from `cache` when the condition recurs);
     /// profiles always refresh against the live snapshot so scheduler
     /// slack and admission backlog estimates track device dynamics.
+    /// `batch_hint` is the batch size planning prices ops at (1 without
+    /// batching): regime re-plans run through a
+    /// [`crate::batching::BatchedCostModel`] wrapper and key the plan
+    /// cache under the matching batch bucket, while the latency-profile
+    /// refresh below stays single-request (the batch policy scales
+    /// profiles itself when predicting batched service times).
     #[allow(clippy::too_many_arguments)]
     pub fn maybe_tick(
         &mut self,
@@ -670,6 +837,7 @@ impl MonitorStage {
         streams: &[StreamSpec],
         info: PlannerInfo,
         objective: crate::partition::plan::Objective,
+        batch_hint: usize,
     ) -> Option<TickOutcome> {
         if device.time_s() - self.last_s < self.period_s {
             return None;
@@ -683,12 +851,20 @@ impl MonitorStage {
             let snap = device.snapshot();
             for s in streams {
                 let model = cost_model(info, profiler, device);
+                let batched;
+                let planning: &dyn CostModel = if batch_hint > 1 {
+                    batched = crate::batching::BatchedCostModel::new(model, batch_hint);
+                    &batched
+                } else {
+                    model
+                };
                 if let Some((plan, dt)) = controller.on_regime_change(
                     &s.model,
                     policy,
-                    model,
+                    planning,
                     &snap,
                     objective,
+                    batch_hint,
                     Some(&mut *cache),
                 ) {
                     plans.set_plan(s.id, plan);
@@ -723,6 +899,7 @@ impl MonitorStage {
         plans: &mut PlanTable,
         policy_kind: PolicyKind,
         info: PlannerInfo,
+        batch_hint: usize,
     ) -> Option<(usize, f64)> {
         if !matches!(policy_kind, PolicyKind::AdaOper) || !profiler.drifted() {
             return None;
@@ -731,8 +908,21 @@ impl MonitorStage {
         let g: &ModelGraph = &streams[a.model].model;
         let snap = device.snapshot();
         let model = cost_model(info, profiler, device);
-        let (plan, dt) =
-            controller.on_drift(g, plans.plan(a.model), a.next_op, model, &snap, Some(&a.out_cpu))?;
+        let batched;
+        let planning: &dyn CostModel = if batch_hint > 1 {
+            batched = crate::batching::BatchedCostModel::new(model, batch_hint);
+            &batched
+        } else {
+            model
+        };
+        let (plan, dt) = controller.on_drift(
+            g,
+            plans.plan(a.model),
+            a.next_op,
+            planning,
+            &snap,
+            Some(&a.out_cpu),
+        )?;
         let profile = PlanTable::profile_of(g, &plan, model, &snap);
         plans.set_profile(a.model, profile);
         plans.set_plan(a.model, plan);

@@ -23,9 +23,11 @@ use crate::util::Prng;
 
 use super::background::{BackgroundLoad, HiddenDrift};
 use super::governor::{Governor, Thermal};
-use super::latency::{activity_factor, compute_time, ComputeParams, UnitCondition};
+use super::latency::{
+    activity_factor, batch_compute_scale, compute_time, ComputeParams, UnitCondition,
+};
 use super::opp::OppTable;
-use super::power::PowerParams;
+use super::power::{batched_activity, PowerParams};
 use super::processor::{Placement, Proc};
 use super::transfer::{boundary_bytes, TransferParams};
 
@@ -312,20 +314,42 @@ impl Device {
     /// simulator's ground truth "right now". Planning code must use the
     /// profiler instead; benches use this as the oracle upper bound.
     pub fn expected_cost(&self, op: &OpNode, placement: Placement, ctx: &ExecCtx) -> OpCost {
+        // the batch generalization at batch = 1: every batch term is an
+        // exact identity there (scale 1.0, activity untouched, bytes × 1),
+        // so this is bit-identical to the historical single-request body
+        self.expected_cost_batch(op, placement, ctx, 1)
+    }
+
+    /// Noise-free expected cost of executing one operator for a *batch* of
+    /// `batch` co-dispatched requests in a single dispatch. Transfer moves
+    /// every member's activations (bytes × batch); per-unit compute grows
+    /// sub-linearly ([`super::latency::batch_compute_scale`]) while the
+    /// dispatch overhead is paid **once** per batch — the fixed-cost
+    /// amortization the batching subsystem exists for; switching activity
+    /// rises with batch depth ([`super::power::batched_activity`]). At
+    /// `batch <= 1` every batch term is an exact identity, so this *is*
+    /// [`Device::expected_cost`], bit for bit.
+    pub fn expected_cost_batch(
+        &self,
+        op: &OpNode,
+        placement: Placement,
+        ctx: &ExecCtx,
+        batch: usize,
+    ) -> OpCost {
         assert!(placement.is_valid(), "invalid placement {placement:?}");
         let drift = self.drift.factor();
 
-        // --- transfer: move mismatched input bytes to where they're needed
+        // --- transfer: every member moves its own mismatched input bytes
         let need_cpu = placement.frac_on(Proc::Cpu);
         let mut transfer_s = 0.0;
         let mut transfer_j = 0.0;
         for (shape, &have_cpu) in op.in_shapes.iter().zip(&ctx.input_cpu_fracs) {
-            let bytes = boundary_bytes(shape.bytes(), have_cpu, need_cpu);
+            let bytes = boundary_bytes(shape.bytes(), have_cpu, need_cpu) * batch as u64;
             transfer_s += self.cfg.transfer.time(bytes);
             transfer_j += self.cfg.transfer.energy(bytes);
         }
 
-        // --- compute per unit
+        // --- compute per unit: sub-linear growth, dispatch paid once
         let split = matches!(placement, Placement::Split { .. });
         let mut cpu_busy = 0.0;
         let mut gpu_busy = 0.0;
@@ -357,10 +381,10 @@ impl Device {
                 Proc::Gpu if ctx.new_run_gpu => params.dispatch_first,
                 Proc::Gpu => params.dispatch_next,
             };
-            let t = compute_time(op, p, params, cond, frac) * drift + dispatch;
-            // our switching share of the unit while busy
+            let scale = batch_compute_scale(p, batch);
+            let t = compute_time(op, p, params, cond, frac) * scale * drift + dispatch;
             let share = (1.0 - bg).max(0.05);
-            let act = activity_factor(op, p) * share;
+            let act = batched_activity(activity_factor(op, p) * share, batch);
             energy += power.dynamic(gov.opp(), act) * t * drift.sqrt();
             match p {
                 Proc::Cpu => cpu_busy = t,
@@ -384,7 +408,22 @@ impl Device {
     /// lognormal measurement noise. This is what execution observes and
     /// what the profiler trains/corrects on.
     pub fn measure(&mut self, op: &OpNode, placement: Placement, ctx: &ExecCtx) -> OpCost {
-        let mut c = self.expected_cost(op, placement, ctx);
+        self.measure_batch(op, placement, ctx, 1)
+    }
+
+    /// [`Device::measure`] for a batched dispatch: the batched expected
+    /// cost plus the same lognormal measurement noise (two normal draws,
+    /// exactly like the unbatched path, so replacing single dispatches with
+    /// batches perturbs no other stream of simulator randomness). At
+    /// `batch <= 1` this *is* [`Device::measure`], bit for bit.
+    pub fn measure_batch(
+        &mut self,
+        op: &OpNode,
+        placement: Placement,
+        ctx: &ExecCtx,
+        batch: usize,
+    ) -> OpCost {
+        let mut c = self.expected_cost_batch(op, placement, ctx, batch);
         let s = self.cfg.noise_sigma;
         let nl = (self.rng.normal() * s).exp();
         let ne = (self.rng.normal() * s).exp();
@@ -557,6 +596,49 @@ mod tests {
             max_dev = max_dev.max((c / c0 - 1.0).abs());
         }
         assert!(max_dev > 0.05, "drift never moved costs ({max_dev})");
+    }
+
+    #[test]
+    fn batch_of_one_is_bitwise_identical_to_unbatched() {
+        let mut d = dev();
+        d.apply_condition(&moderate());
+        let g = zoo::yolov2();
+        let op = &g.ops[2];
+        let a = d.expected_cost(op, Placement::GPU, &ctx1());
+        let b = d.expected_cost_batch(op, Placement::GPU, &ctx1(), 1);
+        assert_eq!(a.latency_s.to_bits(), b.latency_s.to_bits());
+        assert_eq!(a.energy_j.to_bits(), b.energy_j.to_bits());
+        // measure consumes the same two noise draws either way
+        let mut d1 = dev();
+        let mut d2 = dev();
+        d1.apply_condition(&moderate());
+        d2.apply_condition(&moderate());
+        let m1 = d1.measure(op, Placement::GPU, &ctx1());
+        let m2 = d2.measure_batch(op, Placement::GPU, &ctx1(), 1);
+        assert_eq!(m1.latency_s.to_bits(), m2.latency_s.to_bits());
+        assert_eq!(m1.energy_j.to_bits(), m2.energy_j.to_bits());
+    }
+
+    #[test]
+    fn batched_dispatch_amortizes_per_request_cost() {
+        let mut d = dev();
+        d.apply_condition(&moderate());
+        let g = zoo::yolov2_tiny();
+        let op = &g.ops[2];
+        let mut c = ctx1();
+        c.input_cpu_fracs = vec![0.0];
+        let single = d.expected_cost_batch(op, Placement::GPU, &c, 1);
+        let batch4 = d.expected_cost_batch(op, Placement::GPU, &c, 4);
+        // a batch of 4 runs longer than one request but far shorter than 4
+        assert!(batch4.latency_s > single.latency_s);
+        assert!(batch4.latency_s < 4.0 * single.latency_s);
+        // per-request energy falls: fixed costs amortize, compute sub-linear
+        assert!(
+            batch4.energy_j / 4.0 < single.energy_j,
+            "per-req {} !< {}",
+            batch4.energy_j / 4.0,
+            single.energy_j
+        );
     }
 
     #[test]

@@ -114,6 +114,59 @@ pub fn compute_time(
     t_compute.max(t_mem)
 }
 
+/// Per-processor batch-scaling parameters for co-dispatched request
+/// batches (see `crate::batching`): executing the same operator for `B`
+/// requests in one dispatch grows compute time as `B^alpha` (sub-linear —
+/// weight reuse and fuller pipelines amortize per-request overheads) until
+/// the `knee`, past which every extra request adds `overload` of relative
+/// slowdown (working sets spill the caches and the units saturate DRAM).
+/// Dispatch overhead is *not* scaled: a batch pays it once, which is the
+/// fixed-cost amortization batching exists for.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchScaling {
+    /// Sub-linear compute-growth exponent (`t_B = t_1 · B^alpha`).
+    pub alpha: f64,
+    /// Batch size past which per-request efficiency stops improving.
+    pub knee: usize,
+    /// Relative slowdown per request beyond the knee.
+    pub overload: f64,
+}
+
+impl BatchScaling {
+    /// The unit's batch-scaling parameters. The GPU batches well (deep
+    /// pipelines, weight reuse across the batch); the CPU is near-linear
+    /// (NEON lanes are already saturated by a single request) and its
+    /// caches spill earlier.
+    pub fn for_proc(p: Proc) -> BatchScaling {
+        match p {
+            Proc::Cpu => BatchScaling {
+                alpha: 0.96,
+                knee: 4,
+                overload: 0.06,
+            },
+            Proc::Gpu => BatchScaling {
+                alpha: 0.72,
+                knee: 8,
+                overload: 0.04,
+            },
+        }
+    }
+}
+
+/// Multiplier on single-request *compute* time for a batch of `batch`
+/// requests on `proc` (dispatch overhead excluded — it is paid once per
+/// batch). `1.0` exactly for `batch <= 1`; strictly increasing in the
+/// batch size.
+pub fn batch_compute_scale(proc: Proc, batch: usize) -> f64 {
+    if batch <= 1 {
+        return 1.0;
+    }
+    let s = BatchScaling::for_proc(proc);
+    let base = (batch as f64).powf(s.alpha);
+    let over = batch.saturating_sub(s.knee) as f64;
+    base * (1.0 + s.overload * over)
+}
+
 /// The activity factor to feed the power model for this op: compute-bound
 /// ops switch the whole datapath; memory-bound ops keep ALUs half idle.
 pub fn activity_factor(op: &OpNode, proc: Proc) -> f64 {
@@ -227,6 +280,31 @@ mod tests {
         );
         let ratio = slow / fast;
         assert!((2.4..3.1).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn batch_scale_is_identity_at_one_and_monotone() {
+        for p in [Proc::Cpu, Proc::Gpu] {
+            assert_eq!(batch_compute_scale(p, 0), 1.0);
+            assert_eq!(batch_compute_scale(p, 1), 1.0);
+            let mut prev = 1.0;
+            for b in 2..=32 {
+                let s = batch_compute_scale(p, b);
+                assert!(s > prev, "{p:?} batch {b}: {s} !> {prev}");
+                assert!(s < b as f64 * 1.6, "{p:?} batch {b} scale {s} implausible");
+                prev = s;
+            }
+        }
+    }
+
+    #[test]
+    fn gpu_amortizes_batches_better_than_cpu() {
+        // per-request compute time = scale / B must shrink faster on GPU
+        for b in [2usize, 4, 8] {
+            let cpu = batch_compute_scale(Proc::Cpu, b) / b as f64;
+            let gpu = batch_compute_scale(Proc::Gpu, b) / b as f64;
+            assert!(gpu < cpu, "batch {b}: gpu {gpu} !< cpu {cpu}");
+        }
     }
 
     #[test]

@@ -62,6 +62,24 @@ impl PowerParams {
     }
 }
 
+/// Activity factor under a batched dispatch: co-dispatched requests keep
+/// the datapath fuller (back-to-back work hides issue bubbles), raising
+/// the switching activity logarithmically with the batch size, capped at
+/// full activity. Identity for `batch <= 1` (the unbatched path is
+/// untouched bit for bit).
+///
+/// The 3 %-per-`ln B` coefficient is deliberately below the CPU's
+/// `1 − alpha` batch-amortization margin
+/// ([`super::latency::BatchScaling`], α = 0.96), so per-request energy
+/// stays non-increasing up to the amortization knee on *both* units —
+/// the invariant the batching property tests pin.
+pub fn batched_activity(activity: f64, batch: usize) -> f64 {
+    if batch <= 1 {
+        return activity;
+    }
+    (activity * (1.0 + 0.03 * (batch as f64).ln())).min(1.0)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -92,6 +110,16 @@ mod tests {
         let eff_lo = pp.dynamic(lo, 1.0) / lo.freq_hz;
         let eff_hi = pp.dynamic(hi, 1.0) / hi.freq_hz;
         assert!(eff_hi > eff_lo * 1.3, "no superlinear growth");
+    }
+
+    #[test]
+    fn batched_activity_identity_at_one_and_capped() {
+        assert_eq!(batched_activity(0.7, 0), 0.7);
+        assert_eq!(batched_activity(0.7, 1), 0.7);
+        let a2 = batched_activity(0.7, 2);
+        let a8 = batched_activity(0.7, 8);
+        assert!(a2 > 0.7 && a8 > a2, "{a2} {a8}");
+        assert!(batched_activity(0.99, 64) <= 1.0);
     }
 
     #[test]

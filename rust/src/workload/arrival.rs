@@ -1,5 +1,8 @@
 //! Request arrival processes for the serving experiments: Poisson (open
-//! loop, e.g. voice-assistant queries) and periodic (camera frames).
+//! loop, e.g. voice-assistant queries), periodic (camera frames), and a
+//! two-state MMPP (Markov-modulated Poisson process) for bursty traffic —
+//! the arrival shape dynamic batching exists for, since bursts create the
+//! co-resident same-stream requests a batch amortizes over.
 
 use crate::util::Prng;
 
@@ -18,19 +21,49 @@ pub enum Arrival {
         /// Uniform jitter as a fraction of the period.
         jitter: f64,
     },
+    /// Two-state Markov-modulated Poisson process: Poisson arrivals whose
+    /// rate switches between a calm and a burst level, with exponentially
+    /// distributed dwell times per state. The stationary mean rate is
+    /// `(dwell_low · hz_low + dwell_high · hz_high) / (dwell_low + dwell_high)`.
+    Mmpp {
+        /// Arrival rate in the calm state, Hz.
+        hz_low: f64,
+        /// Arrival rate in the burst state, Hz.
+        hz_high: f64,
+        /// Mean dwell time in the calm state, seconds.
+        dwell_low_s: f64,
+        /// Mean dwell time in the burst state, seconds.
+        dwell_high_s: f64,
+    },
 }
 
 impl Arrival {
-    /// Parse a process kind (`poisson` | `periodic`) at mean rate `hz`.
-    pub fn parse(kind: &str, hz: f64) -> Option<Arrival> {
+    /// Parse a process kind (`poisson` | `periodic` | `mmpp`) at mean rate
+    /// `hz`. `jitter` applies to periodic arrivals only (fraction of the
+    /// period; the historical hard-coded value was 0.02). `mmpp` derives a
+    /// canonical bursty shape with stationary mean `hz`: a calm state at
+    /// `hz / 2` (mean dwell 2 s) and a burst state at `3 · hz` (mean dwell
+    /// 0.5 s), so 20 % of the time carries 60 % of the traffic.
+    pub fn parse(kind: &str, hz: f64, jitter: f64) -> Option<Arrival> {
         match kind {
             "poisson" => Some(Arrival::Poisson { hz }),
-            "periodic" => Some(Arrival::Periodic { hz, jitter: 0.02 }),
+            "periodic" => Some(Arrival::Periodic { hz, jitter }),
+            "mmpp" => Some(Arrival::Mmpp {
+                hz_low: 0.5 * hz,
+                hz_high: 3.0 * hz,
+                dwell_low_s: 2.0,
+                dwell_high_s: 0.5,
+            }),
             _ => None,
         }
     }
 
-    /// Next inter-arrival gap in seconds.
+    /// Next inter-arrival gap in seconds. For [`Arrival::Mmpp`] — which is
+    /// stateful over a timeline — this draws the modulating state as seen
+    /// *by an arrival* (states weighted by the arrivals they carry,
+    /// `dwell × rate`, not by wall time), so the mean gap is exactly
+    /// `1 / rate_hz()`; [`Arrival::timestamps`] runs the exact state
+    /// machine instead.
     pub fn next_gap(&self, rng: &mut Prng) -> f64 {
         match *self {
             Arrival::Poisson { hz } => rng.exponential(hz),
@@ -38,11 +71,34 @@ impl Arrival {
                 let base = 1.0 / hz;
                 base * (1.0 + jitter * (rng.f64() * 2.0 - 1.0))
             }
+            Arrival::Mmpp {
+                hz_low,
+                hz_high,
+                dwell_low_s,
+                dwell_high_s,
+            } => {
+                let w_high = dwell_high_s * hz_high;
+                let w_low = dwell_low_s * hz_low;
+                let p_high = w_high / (w_low + w_high).max(1e-12);
+                let rate = if rng.f64() < p_high { hz_high } else { hz_low };
+                rng.exponential(rate)
+            }
         }
     }
 
     /// Generate all arrival timestamps within `[0, duration_s)`.
     pub fn timestamps(&self, duration_s: f64, rng: &mut Prng) -> Vec<f64> {
+        if let Arrival::Mmpp {
+            hz_low,
+            hz_high,
+            dwell_low_s,
+            dwell_high_s,
+        } = *self
+        {
+            return mmpp_timestamps(
+                duration_s, hz_low, hz_high, dwell_low_s, dwell_high_s, rng,
+            );
+        }
         let mut t = 0.0;
         let mut out = Vec::new();
         loop {
@@ -54,12 +110,56 @@ impl Arrival {
         }
     }
 
-    /// Mean arrival rate.
+    /// Mean arrival rate (stationary mean for [`Arrival::Mmpp`]).
     pub fn rate_hz(&self) -> f64 {
         match *self {
             Arrival::Poisson { hz } | Arrival::Periodic { hz, .. } => hz,
+            Arrival::Mmpp {
+                hz_low,
+                hz_high,
+                dwell_low_s,
+                dwell_high_s,
+            } => {
+                (dwell_low_s * hz_low + dwell_high_s * hz_high)
+                    / (dwell_low_s + dwell_high_s)
+            }
         }
     }
+}
+
+/// The MMPP state machine: alternate calm/burst episodes with exponential
+/// dwell times, drawing Poisson gaps at the active state's rate. A gap
+/// crossing the episode boundary is discarded and redrawn from the
+/// boundary at the new rate — exact for exponential gaps (memorylessness).
+fn mmpp_timestamps(
+    duration_s: f64,
+    hz_low: f64,
+    hz_high: f64,
+    dwell_low_s: f64,
+    dwell_high_s: f64,
+    rng: &mut Prng,
+) -> Vec<f64> {
+    let mut out = Vec::new();
+    let mut t = 0.0;
+    let mut high = false; // episodes start calm
+    let mut state_end = rng.exponential(1.0 / dwell_low_s.max(1e-9));
+    while t < duration_s {
+        let rate = if high { hz_high } else { hz_low };
+        let gap = rng.exponential(rate.max(1e-9));
+        if t + gap < state_end {
+            t += gap;
+            if t >= duration_s {
+                break;
+            }
+            out.push(t);
+        } else {
+            t = state_end;
+            high = !high;
+            let dwell = if high { dwell_high_s } else { dwell_low_s };
+            state_end = t + rng.exponential(1.0 / dwell.max(1e-9));
+        }
+    }
+    out
 }
 
 #[cfg(test)]
@@ -101,13 +201,91 @@ mod tests {
     #[test]
     fn parse_kinds() {
         assert!(matches!(
-            Arrival::parse("poisson", 5.0),
+            Arrival::parse("poisson", 5.0, 0.02),
             Some(Arrival::Poisson { .. })
         ));
         assert!(matches!(
-            Arrival::parse("periodic", 5.0),
+            Arrival::parse("periodic", 5.0, 0.02),
             Some(Arrival::Periodic { .. })
         ));
-        assert!(Arrival::parse("burst", 5.0).is_none());
+        assert!(matches!(
+            Arrival::parse("mmpp", 5.0, 0.02),
+            Some(Arrival::Mmpp { .. })
+        ));
+        assert!(Arrival::parse("burst", 5.0, 0.02).is_none());
+    }
+
+    #[test]
+    fn parse_passes_jitter_through() {
+        match Arrival::parse("periodic", 5.0, 0.25) {
+            Some(Arrival::Periodic { jitter, .. }) => assert_eq!(jitter, 0.25),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn mmpp_stationary_mean_matches_requested_rate() {
+        let a = Arrival::parse("mmpp", 20.0, 0.0).unwrap();
+        assert!((a.rate_hz() - 20.0).abs() < 1e-9, "mean {}", a.rate_hz());
+        // empirical mean over a long horizon tracks the stationary rate
+        // (wide tolerance: burstiness inflates the count variance well
+        // past Poisson's)
+        let mut rng = Prng::new(7);
+        let ts = a.timestamps(600.0, &mut rng);
+        let rate = ts.len() as f64 / 600.0;
+        assert!((rate - 20.0).abs() < 3.0, "empirical rate {rate}");
+    }
+
+    #[test]
+    fn mmpp_next_gap_mean_matches_rate() {
+        // arrival-weighted state mixing: the mean stateless gap must equal
+        // 1 / stationary rate (time-weighted mixing would be 40% short)
+        let a = Arrival::parse("mmpp", 20.0, 0.0).unwrap();
+        let mut rng = Prng::new(5);
+        let n = 20000;
+        let mean: f64 = (0..n).map(|_| a.next_gap(&mut rng)).sum::<f64>() / n as f64;
+        assert!((mean * 20.0 - 1.0).abs() < 0.05, "mean gap {mean}");
+    }
+
+    #[test]
+    fn mmpp_is_burstier_than_poisson() {
+        // index of dispersion of counts in 1 s windows: 1 for Poisson, far
+        // above 1 for a rate-modulated process
+        let dispersion = |ts: &[f64], horizon: f64| {
+            let n = horizon as usize;
+            let mut counts = vec![0f64; n];
+            for &t in ts {
+                counts[(t as usize).min(n - 1)] += 1.0;
+            }
+            let mean = counts.iter().sum::<f64>() / n as f64;
+            let var = counts.iter().map(|c| (c - mean) * (c - mean)).sum::<f64>()
+                / n as f64;
+            var / mean
+        };
+        let mut rng = Prng::new(11);
+        let mmpp = Arrival::parse("mmpp", 20.0, 0.0)
+            .unwrap()
+            .timestamps(200.0, &mut rng);
+        let mut rng = Prng::new(11);
+        let poisson = Arrival::Poisson { hz: 20.0 }.timestamps(200.0, &mut rng);
+        let d_mmpp = dispersion(&mmpp, 200.0);
+        let d_poisson = dispersion(&poisson, 200.0);
+        assert!(d_poisson < 1.6, "poisson dispersion {d_poisson}");
+        assert!(
+            d_mmpp > d_poisson * 1.5,
+            "mmpp dispersion {d_mmpp} not bursty vs poisson {d_poisson}"
+        );
+    }
+
+    #[test]
+    fn mmpp_timestamps_sorted_and_bounded() {
+        let a = Arrival::parse("mmpp", 40.0, 0.0).unwrap();
+        let mut rng = Prng::new(13);
+        let ts = a.timestamps(10.0, &mut rng);
+        assert!(!ts.is_empty());
+        for w in ts.windows(2) {
+            assert!(w[0] < w[1], "{} !< {}", w[0], w[1]);
+        }
+        assert!(ts.iter().all(|&t| t < 10.0));
     }
 }

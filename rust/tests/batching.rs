@@ -1,0 +1,232 @@
+//! Batching subsystem tests: cost-model monotonicity properties, the
+//! slack policy's no-manufactured-misses regression against the unbatched
+//! oracle, and plan-cache behavior under the batch-bucketed key.
+
+use std::collections::BTreeSet;
+
+use adaoper::batching::cost::scale_op_cost;
+use adaoper::batching::BatchConfig;
+use adaoper::config::schema::{BatchPolicyKind, PolicyKind, SchedulerKind};
+use adaoper::coordinator::request::RequestOutcome;
+use adaoper::coordinator::{Engine, EngineConfig, StreamSpec};
+use adaoper::graph::zoo;
+use adaoper::profiler::calibrate::CalibConfig;
+use adaoper::profiler::gbdt::GbdtParams;
+use adaoper::sim::SimObserver;
+use adaoper::soc::device::{Device, DeviceConfig, ExecCtx};
+use adaoper::soc::latency::BatchScaling;
+use adaoper::soc::{Placement, Proc};
+use adaoper::workload::{Arrival, WorkloadCondition};
+
+fn frozen_device() -> Device {
+    let mut d = Device::new(DeviceConfig {
+        noise_sigma: 0.0,
+        drift_sigma: 0.0,
+        ..DeviceConfig::snapdragon_855()
+    });
+    let mut c = WorkloadCondition::moderate().spec;
+    c.cpu_bg_sigma = 0.0;
+    c.cpu_burst = 0.0;
+    c.gpu_bg_sigma = 0.0;
+    c.gpu_burst = 0.0;
+    c.drift_sigma = 0.0;
+    d.apply_condition(&c);
+    d
+}
+
+/// Property: ground-truth batched latency is non-decreasing in the batch
+/// size, and per-request energy is non-increasing up to the unit's
+/// amortization knee — on every op of the zoo model, both placements.
+#[test]
+fn batch_cost_model_monotone_on_ground_truth() {
+    let d = frozen_device();
+    let g = zoo::yolov2_tiny();
+    for (placement, proc) in [(Placement::CPU, Proc::Cpu), (Placement::GPU, Proc::Gpu)] {
+        let knee = BatchScaling::for_proc(proc).knee;
+        for op in &g.ops {
+            let ctx = ExecCtx::fresh(vec![placement.frac_on(Proc::Cpu); op.in_shapes.len()]);
+            let mut prev_latency = 0.0;
+            let mut prev_per_req_e = f64::INFINITY;
+            for b in 1..=16usize {
+                let c = d.expected_cost_batch(op, placement, &ctx, b);
+                assert!(
+                    c.latency_s >= prev_latency,
+                    "op {} {placement:?} batch {b}: latency {} < {}",
+                    op.name,
+                    c.latency_s,
+                    prev_latency
+                );
+                let per_req = c.energy_j / b as f64;
+                if b <= knee {
+                    assert!(
+                        per_req <= prev_per_req_e * (1.0 + 1e-12),
+                        "op {} {placement:?} batch {b}: per-req energy {} > {}",
+                        op.name,
+                        per_req,
+                        prev_per_req_e
+                    );
+                }
+                prev_latency = c.latency_s;
+                prev_per_req_e = per_req;
+            }
+        }
+    }
+}
+
+/// The analytic cost-model scaling mirrors the same properties (it is what
+/// the DP and the slack policy plan with).
+#[test]
+fn batch_cost_model_monotone_on_analytic_scaling() {
+    let d = frozen_device();
+    let g = zoo::yolov2_tiny();
+    for placement in [Placement::CPU, Placement::GPU] {
+        for op in &g.ops {
+            let ctx = ExecCtx::fresh(vec![placement.frac_on(Proc::Cpu); op.in_shapes.len()]);
+            let single = d.expected_cost(op, placement, &ctx);
+            let mut prev_latency = 0.0;
+            let mut prev_per_req_e = f64::INFINITY;
+            for b in 1..=4usize {
+                let c = scale_op_cost(&single, b);
+                assert!(c.latency_s >= prev_latency, "op {} batch {b}", op.name);
+                let per_req = c.energy_j / b as f64;
+                assert!(
+                    per_req <= prev_per_req_e * (1.0 + 1e-12),
+                    "op {} batch {b}: {} > {}",
+                    op.name,
+                    per_req,
+                    prev_per_req_e
+                );
+                prev_latency = c.latency_s;
+                prev_per_req_e = per_req;
+            }
+        }
+    }
+}
+
+/// Records every request's deadline outcome by id.
+#[derive(Default)]
+struct MissSet {
+    misses: BTreeSet<usize>,
+    completed: usize,
+}
+
+impl SimObserver for MissSet {
+    fn on_request_done(&mut self, outcome: &RequestOutcome, met_deadline: bool) {
+        self.completed += 1;
+        if !met_deadline {
+            self.misses.insert(outcome.request.id);
+        }
+    }
+}
+
+fn quick_calib(seed: u64) -> CalibConfig {
+    CalibConfig {
+        samples: 1200,
+        seed,
+        gbdt: GbdtParams {
+            trees: 40,
+            ..Default::default()
+        },
+    }
+}
+
+fn bursty_run(batching: BatchConfig) -> (MissSet, adaoper::metrics::ServingReport) {
+    let mut engine = Engine::new(EngineConfig {
+        policy: PolicyKind::MaceGpu,
+        scheduler: SchedulerKind::Edf,
+        duration_s: 4.0,
+        seed: 23,
+        calib: quick_calib(23),
+        batching,
+        ..Default::default()
+    });
+    // bursty but sub-saturation on average, with a generous SLO: bursts
+    // create the co-residency batches need, while the unbatched oracle
+    // comfortably meets every deadline — so any slack-run miss would be a
+    // manufactured one
+    let stream = StreamSpec::new(
+        0,
+        zoo::yolov2_tiny(),
+        Arrival::parse("mmpp", 20.0, 0.0).expect("mmpp parses"),
+        1.5,
+    );
+    let mut probe = MissSet::default();
+    let report = engine.run_observed(&[stream], &mut [&mut probe]).unwrap();
+    (probe, report)
+}
+
+/// Regression: the slack policy must not miss a deadline the unbatched
+/// oracle meets — batching is only allowed to spend measured headroom (or
+/// to group requests that were already predicted late).
+#[test]
+fn slack_policy_never_manufactures_misses() {
+    let (none_probe, none_report) = bursty_run(BatchConfig::default());
+    let (slack_probe, slack_report) = bursty_run(BatchConfig {
+        policy: BatchPolicyKind::Slack,
+        max: 4,
+        wait_s: 4e-3,
+    });
+    // paired seeds: same offered population, everything admitted+completed
+    assert_eq!(none_probe.completed, slack_probe.completed);
+    assert!(none_report.batch.is_none());
+    let b = slack_report.batch.expect("slack run reports batch stats");
+    assert!(
+        b.batched_dispatches > 0,
+        "bursty mix formed no batches: {b:?}"
+    );
+    let manufactured: Vec<usize> = slack_probe
+        .misses
+        .difference(&none_probe.misses)
+        .copied()
+        .collect();
+    assert!(
+        manufactured.is_empty(),
+        "slack batching manufactured misses for requests {manufactured:?} \
+         (none missed {:?})",
+        none_probe.misses
+    );
+}
+
+/// The plan cache keyed on (model × condition × objective × batch bucket)
+/// serves recurring regimes from cache in batched runs too.
+#[test]
+fn batched_plan_cache_hits_across_regime_changes() {
+    let mut engine = Engine::new(EngineConfig {
+        policy: PolicyKind::AdaOper,
+        scheduler: SchedulerKind::Edf,
+        duration_s: 0.6,
+        seed: 31,
+        calib: quick_calib(31),
+        batching: BatchConfig {
+            policy: BatchPolicyKind::Slack,
+            max: 4,
+            wait_s: 4e-3,
+        },
+        // coarse utilization quantization: the OU background wobble must
+        // not split a recurring condition across buckets (the same choice
+        // the cache scenario documents)
+        plan_cache: adaoper::coordinator::PlanCacheConfig {
+            util_bucket: 0.5,
+            ..Default::default()
+        },
+        ..Default::default()
+    });
+    let stream = || {
+        vec![StreamSpec::new(
+            0,
+            zoo::yolov2_tiny(),
+            Arrival::Poisson { hz: 20.0 },
+            0.8,
+        )]
+    };
+    // moderate → high → moderate: the third run's initial planning must
+    // find the moderate-bucket plan (keyed under batch bucket 3 = cap 4)
+    engine.run(&stream()).unwrap();
+    engine.apply_condition(&WorkloadCondition::high());
+    engine.run(&stream()).unwrap();
+    engine.apply_condition(&WorkloadCondition::moderate());
+    let r = engine.run(&stream()).unwrap();
+    let pc = r.plan_cache.expect("plan cache enabled by default");
+    assert!(pc.hits >= 1, "no cache hits across recurring regimes: {pc:?}");
+    assert!(pc.misses >= 2, "expected cold misses per condition: {pc:?}");
+}

@@ -18,7 +18,8 @@
 use std::path::PathBuf;
 use std::sync::OnceLock;
 
-use adaoper::config::schema::{PolicyKind, SchedulerKind};
+use adaoper::batching::BatchConfig;
+use adaoper::config::schema::{BatchPolicyKind, PolicyKind, SchedulerKind};
 use adaoper::coordinator::{AdmissionPolicy, Engine, EngineConfig, StreamSpec};
 use adaoper::graph::zoo;
 use adaoper::profiler::calibrate::{calibrate_on, CalibConfig, OfflineModel};
@@ -55,6 +56,15 @@ fn streams() -> Vec<StreamSpec> {
 }
 
 fn run_cell(policy: PolicyKind, scheduler: SchedulerKind, admission: AdmissionPolicy) -> String {
+    run_cell_batched(policy, scheduler, admission, BatchConfig::default())
+}
+
+fn run_cell_batched(
+    policy: PolicyKind,
+    scheduler: SchedulerKind,
+    admission: AdmissionPolicy,
+    batching: BatchConfig,
+) -> String {
     let profiler = EnergyProfiler::with_correctors(offline().clone(), || {
         Box::new(EwmaCorrector::default())
     });
@@ -63,6 +73,7 @@ fn run_cell(policy: PolicyKind, scheduler: SchedulerKind, admission: AdmissionPo
             policy,
             scheduler,
             admission,
+            batching,
             duration_s: 1.2,
             seed: SEED,
             calib: calib(),
@@ -139,9 +150,13 @@ fn repeated_runs_are_byte_identical() {
 fn rows_match_golden_snapshot() {
     let got = render_all();
     let path = golden_path();
+    compare_or_bootstrap(&got, &path);
+}
+
+fn compare_or_bootstrap(got: &str, path: &PathBuf) {
     let update = std::env::var("ADAOPER_UPDATE_GOLDEN").is_ok();
     if update || !path.exists() {
-        std::fs::write(&path, &got).expect("write golden snapshot");
+        std::fs::write(path, got).expect("write golden snapshot");
         eprintln!(
             "golden snapshot {} {} — commit it",
             path.display(),
@@ -149,7 +164,7 @@ fn rows_match_golden_snapshot() {
         );
         return;
     }
-    let want = std::fs::read_to_string(&path).expect("read golden snapshot");
+    let want = std::fs::read_to_string(path).expect("read golden snapshot");
     if got != want {
         for (i, (g, w)) in got.lines().zip(want.lines()).enumerate() {
             assert_eq!(
@@ -163,4 +178,89 @@ fn rows_match_golden_snapshot() {
         assert_eq!(got.lines().count(), want.lines().count(), "line counts differ");
         panic!("golden rows differ only in line endings");
     }
+}
+
+/// The batching cells: fixed + slack formation riding the AdaOper drift
+/// trace (the EDF/drop-late cell that exercises the drift fast path).
+/// Snapshotted separately from the main matrix so the pre-batching rows
+/// stay byte-identical to their own golden file.
+fn batching_cells() -> Vec<(String, BatchConfig)> {
+    let mk = |policy, max| BatchConfig {
+        policy,
+        max,
+        wait_s: 4e-3,
+    };
+    vec![
+        (
+            "adaoper/edf/drop-late/batch-fixed4".to_string(),
+            mk(BatchPolicyKind::Fixed, 4),
+        ),
+        (
+            "adaoper/edf/drop-late/batch-slack4".to_string(),
+            mk(BatchPolicyKind::Slack, 4),
+        ),
+    ]
+}
+
+fn render_batching() -> String {
+    let mut s = String::new();
+    for (label, batching) in batching_cells() {
+        s.push_str(&label);
+        s.push_str(": ");
+        s.push_str(&run_cell_batched(
+            PolicyKind::AdaOper,
+            SchedulerKind::Edf,
+            AdmissionPolicy::DropLate,
+            batching,
+        ));
+        s.push('\n');
+    }
+    s
+}
+
+#[test]
+fn batching_cells_are_deterministic_and_match_snapshot() {
+    for (label, batching) in batching_cells() {
+        let a = run_cell_batched(
+            PolicyKind::AdaOper,
+            SchedulerKind::Edf,
+            AdmissionPolicy::DropLate,
+            batching.clone(),
+        );
+        let b = run_cell_batched(
+            PolicyKind::AdaOper,
+            SchedulerKind::Edf,
+            AdmissionPolicy::DropLate,
+            batching,
+        );
+        assert_eq!(a, b, "batching cell {label} is not deterministic");
+        assert!(a.contains("batch"), "cell {label} reported no batching: {a}");
+    }
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests")
+        .join("golden")
+        .join("batching_rows.txt");
+    compare_or_bootstrap(&render_batching(), &path);
+}
+
+#[test]
+fn explicit_none_batching_matches_legacy_rows() {
+    // an explicit `none` batch policy must leave every report row exactly
+    // as the default (batching-free) engine renders it
+    let legacy = run_cell(
+        PolicyKind::MaceGpu,
+        SchedulerKind::Edf,
+        AdmissionPolicy::DropLate,
+    );
+    let none = run_cell_batched(
+        PolicyKind::MaceGpu,
+        SchedulerKind::Edf,
+        AdmissionPolicy::DropLate,
+        BatchConfig {
+            policy: BatchPolicyKind::None,
+            max: 16,
+            wait_s: 0.5,
+        },
+    );
+    assert_eq!(legacy, none, "batch-policy none must be byte-identical");
 }

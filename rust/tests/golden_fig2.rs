@@ -60,6 +60,7 @@ fn row(
             partition_overhead_s: 0.0,
             plan_cache: None,
             sched: None,
+            batch: None,
         },
     }
 }

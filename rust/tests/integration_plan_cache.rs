@@ -39,12 +39,12 @@ fn cold_miss_warm_hit_and_byte_identical_plan_on_frozen_device() {
     let mut cache = PlanCache::new(PlanCacheConfig::default());
 
     // cold miss
-    assert!(cache.lookup(&g.name, &snap, Objective::MinEdp).is_none());
+    assert!(cache.lookup(&g.name, &snap, Objective::MinEdp, 1).is_none());
     let solved = dp.solve(&g, &d, &snap).unwrap();
-    cache.insert(&g.name, &snap, Objective::MinEdp, solved.clone());
+    cache.insert(&g.name, &snap, Objective::MinEdp, 1, solved.clone());
 
     // warm hit on the repeated condition
-    let cached = cache.lookup(&g.name, &snap, Objective::MinEdp).unwrap();
+    let cached = cache.lookup(&g.name, &snap, Objective::MinEdp, 1).unwrap();
     assert_eq!(cached.placements, solved.placements);
 
     // the device is frozen, so a fresh DP solve is bit-for-bit reproducible
@@ -85,23 +85,23 @@ fn lru_eviction_across_real_conditions_at_capacity() {
         let d = frozen(cond.clone(), 1);
         let snap = d.snapshot();
         assert!(
-            cache.lookup(&g.name, &snap, Objective::MinEdp).is_none(),
+            cache.lookup(&g.name, &snap, Objective::MinEdp, 1).is_none(),
             "{}: unexpected warm entry",
             cond.name()
         );
         let plan = dp.solve(&g, &d, &snap).unwrap();
-        cache.insert(&g.name, &snap, Objective::MinEdp, plan);
+        cache.insert(&g.name, &snap, Objective::MinEdp, 1, plan);
     }
     let st = cache.stats();
     assert_eq!(st.entries, 2, "{st:?}");
     assert_eq!(st.evictions, 1, "{st:?}");
     // the oldest condition (moderate) was evicted, the two recent ones hit
     let d = frozen(WorkloadCondition::moderate(), 1);
-    assert!(cache.lookup(&g.name, &d.snapshot(), Objective::MinEdp).is_none());
+    assert!(cache.lookup(&g.name, &d.snapshot(), Objective::MinEdp, 1).is_none());
     let d = frozen(WorkloadCondition::high(), 1);
-    assert!(cache.lookup(&g.name, &d.snapshot(), Objective::MinEdp).is_some());
+    assert!(cache.lookup(&g.name, &d.snapshot(), Objective::MinEdp, 1).is_some());
     let d = frozen(WorkloadCondition::idle(), 1);
-    assert!(cache.lookup(&g.name, &d.snapshot(), Objective::MinEdp).is_some());
+    assert!(cache.lookup(&g.name, &d.snapshot(), Objective::MinEdp, 1).is_some());
 }
 
 #[test]
