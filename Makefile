@@ -3,7 +3,7 @@
 
 CARGO_DIR := rust
 
-.PHONY: verify build test fmt fmt-check clippy bench-build doc smoke all
+.PHONY: verify build test fmt fmt-check clippy bench-build doc smoke scenarios all
 
 # Tier-1 gate: release build + full test suite.
 verify:
@@ -39,5 +39,11 @@ smoke:
 	cd $(CARGO_DIR) && cargo run --release -- ablation fleet --quick
 	cd $(CARGO_DIR) && cargo run --release -- ablation batching --quick --duration 2.0
 
+# Run every declarative scenario spec under scenarios/ and enforce its
+# [expect] metric bounds (non-zero exit on any violation). CI runs this
+# after `make smoke`.
+scenarios:
+	cd $(CARGO_DIR) && cargo run --release -- scenario run ../scenarios
+
 # Everything CI checks, in CI order.
-all: verify smoke clippy bench-build doc fmt-check
+all: verify smoke scenarios clippy bench-build doc fmt-check

@@ -47,6 +47,13 @@ COMMANDS
       [--scheduler fifo|edf|slack-reclaim] [--policy P] [--quick]
       [--admission admit-all|drop-late|bounded] [--queue-limit N]
       [--batch-policy none|fixed|slack] [--batch-max N] [--batch-wait-ms MS]
+  scenario run <spec|dir>     execute a scenario spec (or every *.toml in
+                              a directory) and evaluate its [expect]
+                              metric bounds; non-zero exit on violation
+  scenario check <spec>       parse + validate a spec without running it
+  replay <trace.jsonl>        re-run a recorded serve trace through the
+                              sim kernel and verify the replayed report
+                              row matches the recorded one byte for byte
   fig2 [--requests N]         reproduce the paper's Figure 2
   calibrate [--samples N]     run the offline calibration sweep and report
                               held-out accuracy
@@ -100,6 +107,8 @@ pub fn run(argv: &[String]) -> Result<()> {
         "partition" => cmd_partition(&args),
         "serve" => cmd_serve(&args),
         "fleet" => cmd_fleet(&args),
+        "scenario" => cmd_scenario(&args),
+        "replay" => cmd_replay(&args),
         "fig2" => cmd_fig2(&args),
         "calibrate" => cmd_calibrate(&args),
         "ablation" => cmd_ablation(&args),
@@ -243,7 +252,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         },
         _ => Objective::MinEdp,
     };
-    let mut engine = Engine::new(EngineConfig {
+    let ecfg = EngineConfig {
         policy: cfg.serve.policy,
         objective,
         condition: cfg.serve.condition,
@@ -276,7 +285,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
             ..Default::default()
         },
         ..Default::default()
-    });
+    };
+    let mut engine = Engine::new(ecfg.clone());
 
     let mut streams = Vec::new();
     for (i, m) in cfg.serve.models.iter().enumerate() {
@@ -300,16 +310,84 @@ fn cmd_serve(args: &Args) -> Result<()> {
     };
     let report = match &trace_path {
         Some(path) => {
-            let mut trace = crate::metrics::TraceObserver::new();
+            // with_meta stamps a trace_header (full run config) so the
+            // trace is replayable via `adaoper replay`; the report row
+            // trailer gives replay a byte-identity target.
+            let meta = crate::metrics::TraceMeta::of(&ecfg, &streams);
+            let mut trace = crate::metrics::TraceObserver::with_meta(meta);
             let r = engine.run_observed(&streams, &mut [&mut trace])?;
+            trace.push_report_row(&r.row());
             trace.write_to(Path::new(path))?;
-            println!("trace: {} request lines -> {path}", trace.len());
+            println!("trace: {} lines (header + requests + report) -> {path}", trace.len());
             r
         }
         None => engine.run(&streams)?,
     };
     print!("{}", report.pretty());
     Ok(())
+}
+
+fn cmd_scenario(args: &Args) -> Result<()> {
+    let sub = args.positional.get(1).map(String::as_str).unwrap_or("");
+    let target = args.positional.get(2).map(Path::new);
+    match (sub, target) {
+        ("check", Some(path)) => {
+            let spec = crate::scenario::parse_spec_file(path)?;
+            println!(
+                "ok: scenario `{}` is valid ({} stream(s), {} [expect] bound(s))",
+                spec.name,
+                spec.stream_names.len(),
+                spec.expect.len()
+            );
+            Ok(())
+        }
+        ("run", Some(path)) => {
+            let files = if path.is_dir() {
+                crate::scenario::runner::spec_files(path)?
+            } else {
+                vec![path.to_path_buf()]
+            };
+            anyhow::ensure!(!files.is_empty(), "no *.toml specs under {}", path.display());
+            let mut failed = 0usize;
+            for f in &files {
+                let outcome = crate::scenario::run_path(f)?;
+                print!("{}", outcome.render());
+                if !outcome.passed() {
+                    failed += 1;
+                }
+            }
+            if failed > 0 {
+                bail!("{failed}/{} scenario(s) failed their [expect] bounds", files.len());
+            }
+            println!("{} scenario(s) passed", files.len());
+            Ok(())
+        }
+        _ => bail!("usage: adaoper scenario <run|check> <spec.toml|dir>"),
+    }
+}
+
+fn cmd_replay(args: &Args) -> Result<()> {
+    let Some(target) = args.positional.get(1) else {
+        bail!("usage: adaoper replay <trace.jsonl>");
+    };
+    let outcome = crate::scenario::replay_path(Path::new(target))?;
+    println!("replayed {} recorded arrival(s)", outcome.arrivals);
+    println!("{}", outcome.row);
+    match outcome.matches() {
+        None => {
+            println!("trace carries no recorded report row; nothing to compare");
+            Ok(())
+        }
+        Some(true) => {
+            println!("MATCH: replayed report row equals the recorded one");
+            Ok(())
+        }
+        Some(false) => bail!(
+            "replay MISMATCH\n  recorded: {}\n  replayed: {}",
+            outcome.recorded_row.as_deref().unwrap_or(""),
+            outcome.row
+        ),
+    }
 }
 
 fn cmd_fleet(args: &Args) -> Result<()> {

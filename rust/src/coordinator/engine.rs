@@ -106,6 +106,13 @@ pub struct EngineConfig {
     /// The default (`none`) runs the legacy single-dispatch path bit for
     /// bit.
     pub batching: BatchConfig,
+    /// Mid-run condition switches: `(at_s, condition)` boundaries, sorted
+    /// by time. When the virtual clock crosses a boundary the device
+    /// adopts that condition preset (a thermal event, a background-load
+    /// step). Empty (the default) leaves the legacy single-condition run
+    /// byte-identical. The scenario layer lowers `[timeline.*]` tables
+    /// into this field.
+    pub condition_timeline: Vec<(f64, ConditionKind)>,
 }
 
 impl Default for EngineConfig {
@@ -129,6 +136,7 @@ impl Default for EngineConfig {
             condition_spec: None,
             device_label: None,
             batching: BatchConfig::default(),
+            condition_timeline: Vec::new(),
         }
     }
 }
@@ -536,6 +544,46 @@ impl Engine {
         streams: &[StreamSpec],
         observers: &mut [&mut dyn SimObserver],
     ) -> Result<ServingReport> {
+        Self::check_streams(streams)?;
+        let mut queue = EventQueue::new();
+        let arrivals =
+            ArrivalSource::seed(&mut queue, streams, self.cfg.duration_s, self.cfg.seed)?;
+        self.run_events(streams, queue, arrivals.total(), observers)
+    }
+
+    /// Re-run a *recorded* arrival population through the kernel: the
+    /// replay path behind `adaoper replay`. Arrivals (admitted and shed
+    /// alike — admission re-decides) are pushed into the event queue in
+    /// stream-major chronological order, exactly as
+    /// [`ArrivalSource::seed`] would have produced them; everything else
+    /// (device noise, planning, dispatch) re-derives deterministically
+    /// from `cfg.seed`, so a faithful reconstruction reproduces the
+    /// original [`ServingReport::row`] byte for byte.
+    pub fn run_replay(
+        &mut self,
+        streams: &[StreamSpec],
+        arrivals: &[Request],
+        observers: &mut [&mut dyn SimObserver],
+    ) -> Result<ServingReport> {
+        Self::check_streams(streams)?;
+        for a in arrivals {
+            if a.stream >= streams.len() {
+                bail!(
+                    "recorded request {} references stream {} but only {} streams are declared",
+                    a.id,
+                    a.stream,
+                    streams.len()
+                );
+            }
+        }
+        let mut sorted = arrivals.to_vec();
+        sorted.sort_by(|a, b| (a.stream, a.id).cmp(&(b.stream, b.id)));
+        let mut queue = EventQueue::new();
+        let source = ArrivalSource::seed_recorded(&mut queue, &sorted)?;
+        self.run_events(streams, queue, source.total(), observers)
+    }
+
+    fn check_streams(streams: &[StreamSpec]) -> Result<()> {
         if streams.is_empty() {
             bail!("no streams");
         }
@@ -544,9 +592,20 @@ impl Engine {
                 bail!("stream ids must equal their index (stream {} has id {})", i, s.id);
             }
         }
-        let mut queue = EventQueue::new();
-        let arrivals =
-            ArrivalSource::seed(&mut queue, streams, self.cfg.duration_s, self.cfg.seed)?;
+        Ok(())
+    }
+
+    /// The shared event loop behind [`Engine::run_observed`] and
+    /// [`Engine::run_replay`]: the queue is already seeded with arrivals
+    /// (`total` of them); admit, pick, advance, monitor, execute, drift,
+    /// complete until the queue and the active set drain.
+    fn run_events(
+        &mut self,
+        streams: &[StreamSpec],
+        mut queue: EventQueue,
+        total: usize,
+        observers: &mut [&mut dyn SimObserver],
+    ) -> Result<ServingReport> {
         let mut plans = self.build_plan_table(streams)?;
         let mut admission = AdmissionStage::new(self.cfg.admission);
         let mut dispatch = DispatchStage::new(self.cfg.scheduler);
@@ -556,8 +615,23 @@ impl Engine {
         // below then runs statement-for-statement unchanged
         let mut batcher = Batcher::from_config(&self.cfg.batching);
         let batch_hint = self.cfg.batching.plan_hint();
+        let timeline = self.cfg.condition_timeline.clone();
+        let mut next_boundary = 0usize;
 
         loop {
+            // adopt any condition boundary the virtual clock has crossed
+            // (a thermal event or background-load step from the scenario
+            // timeline); cached dispatch candidates are priced against the
+            // old condition, so invalidate them
+            while next_boundary < timeline.len()
+                && self.device.time_s() >= timeline[next_boundary].0
+            {
+                let (_, kind) = timeline[next_boundary];
+                self.device
+                    .apply_condition(&WorkloadCondition::by_name(kind.name()).unwrap().spec);
+                dispatch.invalidate_all();
+                next_boundary += 1;
+            }
             // admit arrivals until one is active (shed arrivals pop the next)
             while !exec.has_active() {
                 match queue.pop() {
@@ -735,7 +809,7 @@ impl Engine {
         }
         let batch_stats = batcher.as_ref().map(|b| b.stats());
         Ok(self.assemble_report(
-            streams, &exec, &admission, dispatch.name(), arrivals.total(), batch_stats,
+            streams, &exec, &admission, dispatch.name(), total, batch_stats,
         ))
     }
 

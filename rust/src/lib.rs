@@ -51,6 +51,7 @@ pub mod metrics;
 pub mod partition;
 pub mod profiler;
 pub mod runtime;
+pub mod scenario;
 pub mod sim;
 pub mod soc;
 pub mod util;

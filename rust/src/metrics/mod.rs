@@ -12,4 +12,4 @@ pub use energy::EnergyAccount;
 pub use histogram::LogHistogram;
 pub use latency::LatencyRecorder;
 pub use report::{BatchStats, PlanCacheStats, SchedStats, ServingReport};
-pub use trace::TraceObserver;
+pub use trace::{TraceMeta, TraceObserver};

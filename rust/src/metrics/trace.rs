@@ -21,6 +21,15 @@
 //!  "wait_s":0.0031}
 //! ```
 //!
+//! A trace built with [`TraceObserver::with_meta`] additionally opens
+//! with a `{"event":"trace_header",...}` line capturing the full run
+//! configuration (seed, policies, calibration, streams, condition
+//! timeline), stamps every request line with `"seed"` and the condition
+//! `"regime"` in force at its arrival, and can close with a
+//! `{"event":"report","row":...}` trailer — together these make the file
+//! self-contained for `adaoper replay`. [`TraceObserver::new`] keeps the
+//! legacy headerless format byte-identical.
+//!
 //! The CLI wires this behind `adaoper serve --trace <path>` (or the
 //! `[serve] trace` config key); every line is standalone JSON, so the
 //! file streams into `jq`/pandas without a wrapper.
@@ -31,9 +40,12 @@ use std::path::Path;
 
 use anyhow::{Context, Result};
 
-use crate::coordinator::request::RequestOutcome;
+use crate::coordinator::engine::EngineConfig;
+use crate::coordinator::request::{RequestOutcome, StreamSpec};
+use crate::partition::plan::Objective;
 use crate::sim::event::Event;
 use crate::sim::observer::SimObserver;
+use crate::workload::Arrival;
 
 /// One executed operator in a request's timeline.
 #[derive(Debug, Clone)]
@@ -59,6 +71,7 @@ struct ReqTrace {
 pub struct TraceObserver {
     pending: HashMap<usize, ReqTrace>,
     lines: Vec<String>,
+    meta: Option<TraceMeta>,
 }
 
 /// JSON-safe float: finite values print via `Display`, everything else
@@ -87,10 +100,216 @@ fn json_escape(s: &str) -> String {
     out
 }
 
+/// Run-level metadata carried in a trace's header line: everything
+/// `adaoper replay` needs to reconstruct the recording engine — the full
+/// [`EngineConfig`] plus the model/arrival/SLO of each stream. Captured
+/// with [`TraceMeta::of`] and serialized as the first JSONL line
+/// (`"event":"trace_header"`) by [`TraceObserver::with_meta`].
+///
+/// The device parameterization is assumed to be the default
+/// (Snapdragon 855); traces recorded against fleet device classes are
+/// not replayable through the CLI path.
+#[derive(Debug, Clone)]
+pub struct TraceMeta {
+    /// The engine configuration of the recording run.
+    pub cfg: EngineConfig,
+    /// Per-stream `(model name, arrival process, slo_s)` in stream order.
+    pub streams: Vec<(String, Arrival, f64)>,
+}
+
+/// Render an [`Objective`] as the string the trace header (and the
+/// scenario spec) uses: `min-edp` | `min-latency` |
+/// `min-energy-slo:<slo_s>`.
+pub fn objective_str(o: &Objective) -> String {
+    match o {
+        Objective::MinEdp => "min-edp".to_string(),
+        Objective::MinLatency => "min-latency".to_string(),
+        Objective::MinEnergyUnderSlo { slo_s } => format!("min-energy-slo:{slo_s}"),
+    }
+}
+
+/// Render an [`Arrival`] as a JSON object carrying its exact parameters
+/// (MMPP keeps all four, not just the stationary mean, so replay
+/// reconstructs non-canonical shapes too).
+fn arrival_json(a: &Arrival) -> String {
+    match a {
+        Arrival::Poisson { hz } => {
+            format!("{{\"kind\":\"poisson\",\"hz\":{}}}", json_f64(*hz))
+        }
+        Arrival::Periodic { hz, jitter } => format!(
+            "{{\"kind\":\"periodic\",\"hz\":{},\"jitter\":{}}}",
+            json_f64(*hz),
+            json_f64(*jitter)
+        ),
+        Arrival::Mmpp {
+            hz_low,
+            hz_high,
+            dwell_low_s,
+            dwell_high_s,
+        } => format!(
+            "{{\"kind\":\"mmpp\",\"hz_low\":{},\"hz_high\":{},\
+             \"dwell_low_s\":{},\"dwell_high_s\":{}}}",
+            json_f64(*hz_low),
+            json_f64(*hz_high),
+            json_f64(*dwell_low_s),
+            json_f64(*dwell_high_s)
+        ),
+    }
+}
+
+impl TraceMeta {
+    /// Capture the metadata of a run about to execute under `cfg` over
+    /// `streams`.
+    pub fn of(cfg: &EngineConfig, streams: &[StreamSpec]) -> TraceMeta {
+        TraceMeta {
+            cfg: cfg.clone(),
+            streams: streams
+                .iter()
+                .map(|s| (s.model.name.clone(), s.arrival.clone(), s.slo_s))
+                .collect(),
+        }
+    }
+
+    /// The condition-regime name in force at virtual time `t`: the
+    /// initial condition, overridden by the last timeline boundary at or
+    /// before `t`.
+    pub fn regime_at(&self, t: f64) -> &'static str {
+        let mut name = self.cfg.condition.name();
+        for (at_s, kind) in &self.cfg.condition_timeline {
+            if *at_s <= t {
+                name = kind.name();
+            } else {
+                break;
+            }
+        }
+        name
+    }
+
+    /// The JSON header line (no trailing newline).
+    pub fn header_line(&self) -> String {
+        let queue_limit = match self.cfg.admission {
+            crate::coordinator::AdmissionPolicy::Bounded { per_stream } => per_stream,
+            _ => 0,
+        };
+        let mut streams = String::new();
+        for (i, (model, arrival, slo_s)) in self.streams.iter().enumerate() {
+            if i > 0 {
+                streams.push(',');
+            }
+            let _ = write!(
+                streams,
+                "{{\"id\":{},\"model\":\"{}\",\"slo_s\":{},\"arrival\":{}}}",
+                i,
+                json_escape(model),
+                json_f64(*slo_s),
+                arrival_json(arrival),
+            );
+        }
+        let mut timeline = String::new();
+        for (i, (at_s, kind)) in self.cfg.condition_timeline.iter().enumerate() {
+            if i > 0 {
+                timeline.push(',');
+            }
+            let _ = write!(
+                timeline,
+                "{{\"at_s\":{},\"condition\":\"{}\"}}",
+                json_f64(*at_s),
+                kind.name(),
+            );
+        }
+        let g = &self.cfg.calib.gbdt;
+        let pc = &self.cfg.plan_cache;
+        format!(
+            "{{\"event\":\"trace_header\",\"version\":1,\
+             \"seed\":{},\"duration_s\":{},\
+             \"policy\":\"{}\",\"objective\":\"{}\",\"condition\":\"{}\",\
+             \"scheduler\":\"{}\",\"admission\":\"{}\",\"queue_limit\":{},\
+             \"batch_policy\":\"{}\",\"batch_max\":{},\"batch_wait_s\":{},\
+             \"window\":{},\"cooldown_ops\":{},\"monitor_period_s\":{},\
+             \"planner_info\":\"{}\",\"use_corrector\":{},\
+             \"calib\":{{\"samples\":{},\"seed\":{},\"trees\":{},\"max_depth\":{},\
+             \"eta\":{},\"subsample\":{},\"min_leaf\":{},\"bins\":{},\"gbdt_seed\":{}}},\
+             \"plan_cache\":{{\"capacity\":{},\"freq_bucket_hz\":{},\"util_bucket\":{},\
+             \"temp_bucket_c\":{},\"bw_bucket\":{}}},\
+             \"streams\":[{}],\"timeline\":[{}]}}",
+            self.cfg.seed,
+            json_f64(self.cfg.duration_s),
+            self.cfg.policy.name(),
+            objective_str(&self.cfg.objective),
+            self.cfg.condition.name(),
+            self.cfg.scheduler.name(),
+            self.cfg.admission.name(),
+            queue_limit,
+            self.cfg.batching.policy.name(),
+            self.cfg.batching.max,
+            json_f64(self.cfg.batching.wait_s),
+            self.cfg.window,
+            self.cfg.cooldown_ops,
+            json_f64(self.cfg.monitor_period_s),
+            match self.cfg.planner_info {
+                crate::coordinator::engine::PlannerInfo::Profiler => "profiler",
+                crate::coordinator::engine::PlannerInfo::Oracle => "oracle",
+            },
+            self.cfg.use_corrector,
+            self.cfg.calib.samples,
+            self.cfg.calib.seed,
+            g.trees,
+            g.max_depth,
+            json_f64(g.eta),
+            json_f64(g.subsample),
+            g.min_leaf,
+            g.bins,
+            g.seed,
+            pc.capacity,
+            json_f64(pc.freq_bucket_hz),
+            json_f64(pc.util_bucket),
+            json_f64(pc.temp_bucket_c),
+            json_f64(pc.bw_bucket),
+            streams,
+            timeline,
+        )
+    }
+}
+
 impl TraceObserver {
     /// Empty trace.
     pub fn new() -> TraceObserver {
         TraceObserver::default()
+    }
+
+    /// Trace that opens with a `trace_header` line built from `meta` and
+    /// stamps every request line with the run seed and the condition
+    /// regime in force at its arrival — the fields replay needs without
+    /// reaching into engine internals.
+    pub fn with_meta(meta: TraceMeta) -> TraceObserver {
+        TraceObserver {
+            pending: HashMap::new(),
+            lines: vec![meta.header_line()],
+            meta: Some(meta),
+        }
+    }
+
+    /// Append a `{"event":"report","row":...}` trailer carrying the
+    /// finished run's [`ServingReport::row`](crate::metrics::ServingReport::row)
+    /// so replay can assert byte-identity against the recorded report.
+    pub fn push_report_row(&mut self, row: &str) {
+        self.lines.push(format!(
+            "{{\"event\":\"report\",\"row\":\"{}\"}}",
+            json_escape(row)
+        ));
+    }
+
+    /// `,"seed":…,"regime":…` suffix for a request line, empty without
+    /// metadata (legacy traces stay byte-identical).
+    fn req_extra(&self, arrival_s: f64) -> String {
+        match &self.meta {
+            Some(m) => format!(
+                ",\"seed\":{},\"regime\":\"{}\"",
+                m.cfg.seed,
+                m.regime_at(arrival_s)
+            ),
+            None => String::new(),
+        }
     }
 
     /// Finished JSONL lines, in emission order.
@@ -142,13 +361,15 @@ impl SimObserver for TraceObserver {
                         },
                     );
                 } else {
+                    let extra = self.req_extra(req.arrival_s);
                     self.lines.push(format!(
                         "{{\"id\":{},\"stream\":{},\"arrival_s\":{},\
-                         \"deadline_s\":{},\"shed\":true}}",
+                         \"deadline_s\":{},\"shed\":true{}}}",
                         req.id,
                         req.stream,
                         json_f64(req.arrival_s),
                         json_f64(req.deadline_s),
+                        extra,
                     ));
                 }
             }
@@ -227,10 +448,11 @@ impl SimObserver for TraceObserver {
                 json_escape(&o.placement),
             );
         }
+        let extra = self.req_extra(t.arrival_s);
         self.lines.push(format!(
             "{{\"id\":{},\"stream\":{},\"arrival_s\":{},\"deadline_s\":{},\"shed\":false,\
              \"start_s\":{},\"finish_s\":{},\"latency_s\":{},\"queue_s\":{},\"energy_j\":{},\
-             \"met_deadline\":{},\"ops\":[{}]}}",
+             \"met_deadline\":{}{},\"ops\":[{}]}}",
             id,
             t.stream,
             json_f64(t.arrival_s),
@@ -241,6 +463,7 @@ impl SimObserver for TraceObserver {
             json_f64(outcome.queue_s()),
             json_f64(outcome.energy_j),
             met_deadline,
+            extra,
             ops,
         ));
     }
@@ -347,5 +570,73 @@ mod tests {
         let tr = TraceObserver::new();
         assert!(tr.is_empty());
         assert_eq!(tr.to_jsonl(), "");
+    }
+
+    #[test]
+    fn meta_header_carries_run_config_and_stamps_request_lines() {
+        use crate::config::schema::ConditionKind;
+        use crate::coordinator::EngineConfig;
+        use crate::workload::Arrival;
+
+        let cfg = EngineConfig {
+            seed: 17,
+            duration_s: 1.2,
+            condition_timeline: vec![(0.5, ConditionKind::High)],
+            ..Default::default()
+        };
+        let meta = TraceMeta {
+            cfg,
+            streams: vec![("yolov2-tiny".to_string(), Arrival::Poisson { hz: 30.0 }, 0.25)],
+        };
+        assert_eq!(meta.regime_at(0.0), "moderate");
+        assert_eq!(meta.regime_at(0.5), "high");
+
+        let mut tr = TraceObserver::with_meta(meta);
+        assert_eq!(tr.len(), 1, "header line present");
+        let header = &tr.lines()[0];
+        assert!(header.contains("\"event\":\"trace_header\""), "{header}");
+        assert!(header.contains("\"seed\":17"));
+        assert!(header.contains("\"model\":\"yolov2-tiny\""));
+        assert!(header.contains("\"kind\":\"poisson\""));
+        assert!(header.contains("\"at_s\":0.5"));
+
+        // shed before the boundary: moderate regime stamped
+        tr.on_event(&Event::Arrival {
+            req: req(3, 0.1),
+            admitted: false,
+        });
+        assert!(tr.lines()[1].contains("\"seed\":17"));
+        assert!(tr.lines()[1].contains("\"regime\":\"moderate\""));
+
+        // completed after the boundary: high regime stamped
+        tr.on_event(&Event::Arrival {
+            req: req(4, 0.9),
+            admitted: true,
+        });
+        tr.on_request_done(
+            &RequestOutcome {
+                request: req(4, 0.9),
+                start_s: 0.91,
+                finish_s: 0.95,
+                energy_j: 0.001,
+            },
+            true,
+        );
+        assert!(tr.lines()[2].contains("\"regime\":\"high\""));
+
+        tr.push_report_row("row text");
+        assert!(tr.lines()[3].contains("\"event\":\"report\""));
+        assert!(tr.lines()[3].contains("\"row\":\"row text\""));
+    }
+
+    #[test]
+    fn headerless_trace_format_is_unchanged() {
+        let mut tr = TraceObserver::new();
+        tr.on_event(&Event::Arrival {
+            req: req(7, 1.25),
+            admitted: false,
+        });
+        assert!(!tr.lines()[0].contains("\"seed\""));
+        assert!(!tr.lines()[0].contains("\"regime\""));
     }
 }

@@ -1,0 +1,160 @@
+//! Span-carrying diagnostics for scenario specs.
+//!
+//! Every decode/validate failure names the offending section and key and,
+//! when the key can be located in the source text, its 1-based line
+//! number — so `adaoper scenario run broken.toml` prints
+//! `scenario spec error at line 14: [stream.cam] rate_hz: must be > 0`
+//! instead of a bare panic or a context-free message.
+
+use std::fmt;
+
+/// One diagnostic: where in the spec, and what is wrong.
+#[derive(Debug, Clone)]
+pub struct Diag {
+    /// Section path (`scenario`, `stream.cam`, `expect`, …); empty for
+    /// file-level problems.
+    pub section: String,
+    /// Offending key inside the section, when one is identifiable.
+    pub key: Option<String>,
+    /// 1-based line in the source text, when the span could be resolved.
+    pub line: Option<usize>,
+    /// Human-readable description of the problem.
+    pub msg: String,
+}
+
+impl fmt::Display for Diag {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "scenario spec error")?;
+        if let Some(line) = self.line {
+            write!(f, " at line {line}")?;
+        }
+        write!(f, ": ")?;
+        if !self.section.is_empty() {
+            write!(f, "[{}]", self.section)?;
+        }
+        if let Some(key) = &self.key {
+            if self.section.is_empty() {
+                write!(f, "{key}")?;
+            } else {
+                write!(f, " {key}")?;
+            }
+        }
+        if !self.section.is_empty() || self.key.is_some() {
+            write!(f, ": ")?;
+        }
+        write!(f, "{}", self.msg)
+    }
+}
+
+/// Build a diagnostic [`anyhow::Error`], resolving the span by scanning
+/// `src` for the section header / key assignment.
+pub fn spec_err(
+    src: &str,
+    section: &str,
+    key: Option<&str>,
+    msg: impl fmt::Display,
+) -> anyhow::Error {
+    let diag = Diag {
+        section: section.to_string(),
+        key: key.map(str::to_string),
+        line: find_line(src, section, key),
+        msg: msg.to_string(),
+    };
+    anyhow::anyhow!("{diag}")
+}
+
+/// Locate `key` inside `[section]` (or the section header itself when
+/// `key` is `None`) in the TOML source. Returns a 1-based line number, or
+/// `None` when the item does not literally appear (e.g. a *missing*
+/// required key).
+pub fn find_line(src: &str, section: &str, key: Option<&str>) -> Option<usize> {
+    let mut current = String::new();
+    for (i, raw) in src.lines().enumerate() {
+        let line = strip_comment(raw).trim().to_string();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            if let Some(inner) = rest.strip_suffix(']') {
+                current = inner.trim().to_string();
+                if key.is_none() && current == section {
+                    return Some(i + 1);
+                }
+            }
+            continue;
+        }
+        if let Some(k) = key {
+            if current == section && key_of(&line) == Some(k) {
+                return Some(i + 1);
+            }
+        }
+    }
+    None
+}
+
+/// The bare key of a `key = value` line (quoted keys unsupported here —
+/// the spec grammar only uses bare keys).
+fn key_of(line: &str) -> Option<&str> {
+    let eq = line.find('=')?;
+    Some(line[..eq].trim())
+}
+
+/// `#` starts a comment unless inside a basic string (same rule as the
+/// TOML parser).
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    let mut escaped = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '\\' if in_str => escaped = !escaped,
+            '"' if !escaped => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => escaped = false,
+        }
+    }
+    line
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SRC: &str = "\
+# header comment
+[scenario]
+name = \"x\"
+duration_s = 2.0
+
+[stream.cam]
+model = \"yolov2-tiny\"
+rate_hz = 30.0
+";
+
+    #[test]
+    fn finds_keys_and_sections() {
+        assert_eq!(find_line(SRC, "scenario", None), Some(2));
+        assert_eq!(find_line(SRC, "scenario", Some("duration_s")), Some(4));
+        assert_eq!(find_line(SRC, "stream.cam", None), Some(6));
+        assert_eq!(find_line(SRC, "stream.cam", Some("rate_hz")), Some(8));
+        assert_eq!(find_line(SRC, "stream.cam", Some("missing")), None);
+        assert_eq!(find_line(SRC, "nope", None), None);
+    }
+
+    #[test]
+    fn display_names_section_key_and_line() {
+        let e = spec_err(SRC, "stream.cam", Some("rate_hz"), "must be > 0");
+        let s = e.to_string();
+        assert!(s.contains("line 8"), "{s}");
+        assert!(s.contains("[stream.cam]"), "{s}");
+        assert!(s.contains("rate_hz"), "{s}");
+        assert!(s.contains("must be > 0"), "{s}");
+    }
+
+    #[test]
+    fn missing_key_still_names_it() {
+        let e = spec_err(SRC, "scenario", Some("name_missing"), "required key is absent");
+        let s = e.to_string();
+        assert!(!s.contains("line"), "{s}");
+        assert!(s.contains("name_missing"), "{s}");
+    }
+}

@@ -1,0 +1,269 @@
+//! `[expect]` metric assertions: bounds a scenario's report must satisfy.
+//!
+//! A spec declares bounds (`p95_ms_max = 400`, `miss_pct_max = 10`, …);
+//! after the run, [`evaluate`] checks each bound against a [`Metrics`]
+//! view extracted from the [`ServingReport`] (or fleet aggregate) and
+//! returns per-bound pass/fail results — this is what turns any scenario
+//! file into a regression test.
+
+use crate::fleet::FleetReport;
+use crate::metrics::ServingReport;
+
+/// The metric a bound constrains, and its direction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExpectKey {
+    /// Median latency upper bound, milliseconds.
+    P50MsMax,
+    /// 95th-percentile latency upper bound, milliseconds.
+    P95MsMax,
+    /// 99th-percentile latency upper bound, milliseconds.
+    P99MsMax,
+    /// Deadline-miss percentage upper bound.
+    MissPctMax,
+    /// Energy-per-request upper bound, millijoules.
+    MjPerReqMax,
+    /// Completed-throughput lower bound, Hz.
+    ThroughputHzMin,
+    /// Plan-cache hit-rate lower bound, percent.
+    CacheHitPctMin,
+    /// Mean formed-batch-size lower bound.
+    MeanBatchMin,
+    /// Completed-request-count lower bound.
+    RequestsMin,
+    /// Shed-request-count upper bound (admission drops).
+    ShedMax,
+}
+
+impl ExpectKey {
+    /// Parse a spec key (`p95_ms_max`, …).
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "p50_ms_max" => ExpectKey::P50MsMax,
+            "p95_ms_max" => ExpectKey::P95MsMax,
+            "p99_ms_max" => ExpectKey::P99MsMax,
+            "miss_pct_max" => ExpectKey::MissPctMax,
+            "mj_per_req_max" => ExpectKey::MjPerReqMax,
+            "throughput_hz_min" => ExpectKey::ThroughputHzMin,
+            "cache_hit_pct_min" => ExpectKey::CacheHitPctMin,
+            "mean_batch_min" => ExpectKey::MeanBatchMin,
+            "requests_min" => ExpectKey::RequestsMin,
+            "shed_max" => ExpectKey::ShedMax,
+            _ => return None,
+        })
+    }
+
+    /// Canonical spec spelling.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ExpectKey::P50MsMax => "p50_ms_max",
+            ExpectKey::P95MsMax => "p95_ms_max",
+            ExpectKey::P99MsMax => "p99_ms_max",
+            ExpectKey::MissPctMax => "miss_pct_max",
+            ExpectKey::MjPerReqMax => "mj_per_req_max",
+            ExpectKey::ThroughputHzMin => "throughput_hz_min",
+            ExpectKey::CacheHitPctMin => "cache_hit_pct_min",
+            ExpectKey::MeanBatchMin => "mean_batch_min",
+            ExpectKey::RequestsMin => "requests_min",
+            ExpectKey::ShedMax => "shed_max",
+        }
+    }
+
+    /// Every key, for error messages and docs.
+    pub fn all() -> [ExpectKey; 10] {
+        [
+            ExpectKey::P50MsMax,
+            ExpectKey::P95MsMax,
+            ExpectKey::P99MsMax,
+            ExpectKey::MissPctMax,
+            ExpectKey::MjPerReqMax,
+            ExpectKey::ThroughputHzMin,
+            ExpectKey::CacheHitPctMin,
+            ExpectKey::MeanBatchMin,
+            ExpectKey::RequestsMin,
+            ExpectKey::ShedMax,
+        ]
+    }
+
+    /// True for `*_min` keys (bound is a floor, not a ceiling).
+    pub fn is_lower_bound(&self) -> bool {
+        matches!(
+            self,
+            ExpectKey::ThroughputHzMin
+                | ExpectKey::CacheHitPctMin
+                | ExpectKey::MeanBatchMin
+                | ExpectKey::RequestsMin
+        )
+    }
+
+    /// Keys the fleet aggregate can satisfy (per-class histograms carry
+    /// latency/energy/miss but no plan-cache, batch, or shed detail).
+    pub fn fleet_supported(&self) -> bool {
+        matches!(
+            self,
+            ExpectKey::P50MsMax
+                | ExpectKey::P95MsMax
+                | ExpectKey::P99MsMax
+                | ExpectKey::MissPctMax
+                | ExpectKey::MjPerReqMax
+                | ExpectKey::RequestsMin
+                | ExpectKey::ShedMax
+        )
+    }
+}
+
+/// One bound from an `[expect]` section.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ExpectBound {
+    /// Which metric, and whether the bound is a floor or ceiling.
+    pub key: ExpectKey,
+    /// The bound value, in the key's unit.
+    pub bound: f64,
+}
+
+/// The outcome of checking one bound.
+#[derive(Debug, Clone)]
+pub struct CheckResult {
+    /// Spec spelling of the bound key.
+    pub key: &'static str,
+    /// The declared bound.
+    pub bound: f64,
+    /// The observed value (NaN when the report lacks the metric).
+    pub actual: f64,
+    /// Whether the bound held.
+    pub pass: bool,
+}
+
+impl CheckResult {
+    /// One rendered line: `ok  p95_ms_max: 312.40 <= 400`.
+    pub fn render(&self) -> String {
+        let mark = if self.pass { "ok  " } else { "FAIL" };
+        format!("{mark} {}: actual {:.4} vs bound {}", self.key, self.actual, self.bound)
+    }
+}
+
+/// Uniform metric view over single-engine and fleet reports. `None`
+/// means the underlying report does not carry that metric.
+#[derive(Debug, Clone, Default)]
+pub struct Metrics {
+    /// Median latency, ms.
+    pub p50_ms: Option<f64>,
+    /// 95th-percentile latency, ms.
+    pub p95_ms: Option<f64>,
+    /// 99th-percentile latency, ms.
+    pub p99_ms: Option<f64>,
+    /// Deadline-miss percentage.
+    pub miss_pct: Option<f64>,
+    /// Energy per completed request, millijoules.
+    pub mj_per_req: Option<f64>,
+    /// Completed throughput, Hz.
+    pub throughput_hz: Option<f64>,
+    /// Plan-cache hit rate, percent.
+    pub cache_hit_pct: Option<f64>,
+    /// Mean formed batch size.
+    pub mean_batch: Option<f64>,
+    /// Completed request count.
+    pub requests: Option<f64>,
+    /// Requests shed by admission.
+    pub shed: Option<f64>,
+}
+
+impl Metrics {
+    /// Extract the view from a single-engine [`ServingReport`].
+    pub fn of_report(r: &ServingReport) -> Metrics {
+        Metrics {
+            p50_ms: r.latency.as_ref().map(|l| l.p50 * 1e3),
+            p95_ms: r.latency_hist.as_ref().and_then(|h| h.quantile(0.95)).map(|v| v * 1e3),
+            p99_ms: r.latency.as_ref().map(|l| l.p99 * 1e3),
+            miss_pct: Some(r.miss_rate * 100.0),
+            mj_per_req: Some(r.j_per_inference * 1e3),
+            throughput_hz: Some(r.throughput_hz),
+            cache_hit_pct: r.plan_cache.as_ref().map(|c| c.hit_rate() * 100.0),
+            mean_batch: r.batch.as_ref().map(|b| b.mean_size()),
+            requests: Some(r.requests as f64),
+            shed: r.sched.as_ref().map(|s| s.shed() as f64),
+        }
+    }
+
+    /// Extract the view from a fleet-wide aggregate. `latency_ms` codes
+    /// "no samples" as NaN, which correctly fails any latency bound.
+    pub fn of_fleet(r: &FleetReport) -> Metrics {
+        let agg = &r.fleet;
+        Metrics {
+            p50_ms: Some(agg.latency_ms(0.50)),
+            p95_ms: Some(agg.latency_ms(0.95)),
+            p99_ms: Some(agg.latency_ms(0.99)),
+            miss_pct: Some(agg.miss_rate() * 100.0),
+            mj_per_req: Some(agg.j_per_request() * 1e3),
+            requests: Some(agg.completed as f64),
+            shed: Some(agg.shed as f64),
+            ..Metrics::default()
+        }
+    }
+
+    fn value(&self, key: ExpectKey) -> Option<f64> {
+        match key {
+            ExpectKey::P50MsMax => self.p50_ms,
+            ExpectKey::P95MsMax => self.p95_ms,
+            ExpectKey::P99MsMax => self.p99_ms,
+            ExpectKey::MissPctMax => self.miss_pct,
+            ExpectKey::MjPerReqMax => self.mj_per_req,
+            ExpectKey::ThroughputHzMin => self.throughput_hz,
+            ExpectKey::CacheHitPctMin => self.cache_hit_pct,
+            ExpectKey::MeanBatchMin => self.mean_batch,
+            ExpectKey::RequestsMin => self.requests,
+            ExpectKey::ShedMax => self.shed,
+        }
+    }
+}
+
+/// Check every bound against the metric view. A bound whose metric the
+/// report lacks fails with `actual = NaN` — a spec asserting on a metric
+/// the run never produced is a spec bug worth surfacing, not a pass.
+pub fn evaluate(m: &Metrics, bounds: &[ExpectBound]) -> Vec<CheckResult> {
+    bounds
+        .iter()
+        .map(|b| match m.value(b.key) {
+            None => CheckResult { key: b.key.name(), bound: b.bound, actual: f64::NAN, pass: false },
+            Some(actual) => {
+                let pass = if b.key.is_lower_bound() { actual >= b.bound } else { actual <= b.bound };
+                CheckResult { key: b.key.name(), bound: b.bound, actual, pass }
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_and_name_round_trip() {
+        for key in ExpectKey::all() {
+            assert_eq!(ExpectKey::parse(key.name()), Some(key));
+        }
+        assert_eq!(ExpectKey::parse("bogus"), None);
+    }
+
+    #[test]
+    fn bounds_respect_direction() {
+        let m = Metrics { p95_ms: Some(300.0), requests: Some(50.0), ..Metrics::default() };
+        let checks = evaluate(
+            &m,
+            &[
+                ExpectBound { key: ExpectKey::P95MsMax, bound: 400.0 },
+                ExpectBound { key: ExpectKey::P95MsMax, bound: 200.0 },
+                ExpectBound { key: ExpectKey::RequestsMin, bound: 10.0 },
+                ExpectBound { key: ExpectKey::RequestsMin, bound: 100.0 },
+            ],
+        );
+        assert_eq!(checks.iter().map(|c| c.pass).collect::<Vec<_>>(), [true, false, true, false]);
+    }
+
+    #[test]
+    fn missing_metric_fails_loudly() {
+        let m = Metrics::default();
+        let checks = evaluate(&m, &[ExpectBound { key: ExpectKey::CacheHitPctMin, bound: 1.0 }]);
+        assert!(!checks[0].pass);
+        assert!(checks[0].actual.is_nan());
+    }
+}

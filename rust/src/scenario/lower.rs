@@ -1,0 +1,125 @@
+//! Lower a validated [`ScenarioSpec`] into executable engine state.
+//!
+//! Lowering is deliberately mechanical: every run-relevant knob in the
+//! spec maps onto exactly one field of [`EngineConfig`] /
+//! [`FleetRunConfig`], so a spec pins a run as completely as hand-written
+//! code does. [`fingerprint`] renders the lowered config through
+//! [`TraceMeta::header_line`] — the same line a recorded trace starts
+//! with — giving a cheap equality witness for the round-trip tests
+//! (`EngineConfig` intentionally has no `PartialEq`).
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::engine::EngineConfig;
+use crate::coordinator::{AdmissionPolicy, StreamSpec};
+use crate::fleet::FleetRunConfig;
+use crate::metrics::TraceMeta;
+use crate::partition::plan::Objective;
+use crate::scenario::expect::ExpectBound;
+use crate::scenario::spec::{ObjectiveDef, ScenarioSpec};
+use crate::workload::Arrival;
+
+/// A spec lowered to runnable form.
+#[derive(Debug, Clone)]
+pub struct Lowered {
+    /// Scenario name, for run output.
+    pub name: String,
+    /// Single-engine configuration (authoritative even in fleet mode for
+    /// the shared knobs: seed, duration, policy, scheduler, …).
+    pub cfg: EngineConfig,
+    /// Streams in `[scenario].streams` order (ids 0..n); empty in fleet
+    /// mode.
+    pub streams: Vec<StreamSpec>,
+    /// Metric assertions to evaluate after the run.
+    pub expect: Vec<ExpectBound>,
+    /// Present when the spec carries a `[fleet]` section.
+    pub fleet: Option<FleetRunConfig>,
+}
+
+/// Lower a spec. Assumes [`validate`](crate::scenario::validate::validate)
+/// already passed; residual impossibilities (unknown model despite
+/// validation) still error rather than panic.
+pub fn lower(spec: &ScenarioSpec) -> Result<Lowered> {
+    let mut cfg = EngineConfig {
+        policy: spec.policy,
+        objective: objective(&spec.objective),
+        condition: spec.condition,
+        duration_s: spec.duration_s,
+        seed: spec.seed,
+        scheduler: spec.scheduler,
+        admission: AdmissionPolicy::from_kind(spec.admission, spec.queue_limit.unwrap_or(0)),
+        ..EngineConfig::default()
+    };
+    cfg.calib.samples = spec.calib.samples;
+    cfg.calib.seed = spec.calib.seed;
+    cfg.calib.gbdt.trees = spec.calib.trees;
+    cfg.batching.policy = spec.batching.policy;
+    cfg.batching.max = spec.batching.max;
+    cfg.batching.wait_s = spec.batching.wait_ms / 1e3;
+    cfg.plan_cache.capacity = spec.plan_cache.capacity;
+    cfg.plan_cache.util_bucket = spec.plan_cache.util_bucket;
+    cfg.plan_cache.freq_bucket_hz = spec.plan_cache.freq_bucket_mhz * 1e6;
+
+    let mut timeline: Vec<_> = spec.timeline.iter().map(|t| (t.at_s, t.condition)).collect();
+    timeline.sort_by(|a, b| a.0.total_cmp(&b.0));
+    cfg.condition_timeline = timeline;
+
+    let mut streams = Vec::new();
+    for (id, name) in spec.stream_names.iter().enumerate() {
+        let Some(def) = spec.streams.iter().find(|s| &s.name == name) else {
+            bail!("stream `{name}` has no [stream.{name}] section (spec not validated?)");
+        };
+        let Some(model) = crate::graph::zoo::by_name(&def.model) else {
+            bail!("[stream.{name}] model `{}` is not in the zoo (spec not validated?)", def.model);
+        };
+        let Some(arrival) = Arrival::parse(&def.arrival, def.rate_hz, def.jitter.unwrap_or(0.0))
+        else {
+            bail!(
+                "[stream.{name}] arrival `{}` is not a known kind (spec not validated?)",
+                def.arrival
+            );
+        };
+        streams.push(StreamSpec::new(id, model, arrival, def.slo_ms / 1e3));
+    }
+
+    let fleet = spec.fleet.as_ref().map(|f| FleetRunConfig {
+        devices: f.devices,
+        threads: f.threads,
+        seed: spec.seed,
+        duration_s: spec.duration_s,
+        policy: spec.policy,
+        scheduler: spec.scheduler,
+        admission: cfg.admission,
+        batching: cfg.batching.clone(),
+        calib: cfg.calib.clone(),
+        ..FleetRunConfig::default()
+    });
+
+    Ok(Lowered { name: spec.name.clone(), cfg, streams, expect: spec.expect.clone(), fleet })
+}
+
+fn objective(def: &ObjectiveDef) -> Objective {
+    match def {
+        ObjectiveDef::MinEdp => Objective::MinEdp,
+        ObjectiveDef::MinLatency => Objective::MinLatency,
+        ObjectiveDef::MinEnergySlo { slo_ms } => {
+            Objective::MinEnergyUnderSlo { slo_s: slo_ms / 1e3 }
+        }
+    }
+}
+
+/// A deterministic one-line digest of everything lowering produced: the
+/// trace header of the lowered config plus the lowered stream set. Two
+/// `Lowered` values with equal fingerprints run identically.
+pub fn fingerprint(l: &Lowered) -> String {
+    let meta = TraceMeta::of(&l.cfg, &l.streams);
+    match &l.fleet {
+        None => meta.header_line(),
+        Some(f) => format!(
+            "{} fleet(devices={},threads={})",
+            meta.header_line(),
+            f.devices,
+            f.threads
+        ),
+    }
+}

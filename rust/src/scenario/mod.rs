@@ -1,0 +1,75 @@
+//! Declarative scenario specs and trace replay: any serving setup — and
+//! any recorded trace — becomes a regression test.
+//!
+//! The layer has two entry points:
+//!
+//! * **Specs** (`adaoper scenario run x.toml`): a TOML file declares the
+//!   full run — policy/scheduler/admission, per-stream arrival processes
+//!   and SLOs, a condition timeline (thermal/background-load regime
+//!   changes mid-run), calibration/batching/plan-cache knobs, optionally
+//!   a `[fleet]` section — plus `[expect]` metric bounds (p95, miss
+//!   rate, mJ/req, cache hit rate, …) that turn the run into a pass/fail
+//!   check. The pipeline is layered parse ([`crate::config::toml`]) →
+//!   decode ([`spec`]) → validate ([`validate`]) → lower ([`lower`]) →
+//!   run ([`runner`]); inconsistent specs are rejected with
+//!   span-carrying diagnostics ([`diag`]), never panics.
+//!
+//! * **Replay** (`adaoper replay trace.jsonl`): a JSONL trace recorded
+//!   by [`crate::metrics::TraceObserver::with_meta`] opens with a header
+//!   carrying the recording run's full config; [`replay`] reconstructs
+//!   it, feeds the recorded arrivals back through the sim kernel
+//!   ([`crate::coordinator::Engine::run_replay`]), and checks the
+//!   replayed report row against the recorded one byte for byte.
+//!
+//! A minimal spec:
+//!
+//! ```toml
+//! [scenario]
+//! name = "edf-under-load"
+//! duration_s = 2.0
+//! seed = 17
+//! scheduler = "edf"
+//! streams = ["cam"]
+//!
+//! [stream.cam]
+//! model = "yolov2-tiny"
+//! arrival = "poisson"
+//! rate_hz = 30.0
+//! slo_ms = 250.0
+//!
+//! [expect]
+//! requests_min = 1
+//! miss_pct_max = 100.0
+//! ```
+
+pub mod diag;
+pub mod expect;
+pub mod lower;
+pub mod replay;
+pub mod runner;
+pub mod spec;
+pub mod validate;
+
+pub use diag::Diag;
+pub use expect::{CheckResult, ExpectBound, ExpectKey, Metrics};
+pub use lower::{fingerprint, lower, Lowered};
+pub use replay::{replay_path, replay_str, ReplayOutcome};
+pub use runner::{run_path, run_str, ScenarioOutcome};
+pub use spec::ScenarioSpec;
+
+use anyhow::Result;
+
+/// Decode and validate a scenario spec from TOML source: the one-call
+/// front door (`decode` + `validate`).
+pub fn parse_spec(src: &str) -> Result<ScenarioSpec> {
+    let spec = spec::decode(src)?;
+    validate::validate(&spec, src)?;
+    Ok(spec)
+}
+
+/// [`parse_spec`] for a file on disk.
+pub fn parse_spec_file(path: &std::path::Path) -> Result<ScenarioSpec> {
+    let src = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("reading scenario spec {}: {e}", path.display()))?;
+    parse_spec(&src)
+}

@@ -1,0 +1,222 @@
+//! Re-run a recorded JSONL trace through the sim kernel.
+//!
+//! A trace written by [`TraceObserver::with_meta`] opens with a
+//! `trace_header` line carrying the full [`EngineConfig`] and stream set
+//! of the recording run, and (optionally) closes with a `report` line
+//! carrying the recorded [`ServingReport::row`]. Replay reconstructs the
+//! config bit-for-bit from the header (floats are printed
+//! shortest-round-trip, so `parse` recovers the exact bits), feeds the
+//! recorded arrival population back through
+//! [`Engine::run_replay`](crate::coordinator::Engine::run_replay), and
+//! compares the replayed row against the recorded one — turning any
+//! captured trace into a regression test.
+//!
+//! [`TraceObserver::with_meta`]: crate::metrics::TraceObserver::with_meta
+//! [`EngineConfig`]: crate::coordinator::EngineConfig
+//! [`ServingReport::row`]: crate::metrics::ServingReport::row
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::schema::{
+    AdmissionKind, BatchPolicyKind, ConditionKind, PolicyKind, SchedulerKind,
+};
+use crate::coordinator::engine::{EngineConfig, PlannerInfo};
+use crate::coordinator::{AdmissionPolicy, Engine, Request, StreamSpec};
+use crate::partition::plan::Objective;
+use crate::util::json::Json;
+use crate::workload::Arrival;
+
+/// The result of replaying a trace.
+#[derive(Debug, Clone)]
+pub struct ReplayOutcome {
+    /// Report row produced by the replayed run.
+    pub row: String,
+    /// Report row recorded in the trace trailer, when present.
+    pub recorded_row: Option<String>,
+    /// Number of recorded arrivals fed back through the kernel.
+    pub arrivals: usize,
+}
+
+impl ReplayOutcome {
+    /// `Some(true)` when the replayed row matches the recorded one
+    /// byte for byte; `None` when the trace carried no report trailer.
+    pub fn matches(&self) -> Option<bool> {
+        self.recorded_row.as_ref().map(|r| r == &self.row)
+    }
+}
+
+/// Replay a trace given as JSONL text.
+pub fn replay_str(jsonl: &str) -> Result<ReplayOutcome> {
+    let mut header: Option<Json> = None;
+    let mut recorded_row: Option<String> = None;
+    let mut arrivals: Vec<Request> = Vec::new();
+
+    for (i, line) in jsonl.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let obj = Json::parse(line).with_context(|| format!("trace line {}", i + 1))?;
+        match obj.get("event").and_then(Json::as_str) {
+            Some("trace_header") => {
+                if header.is_some() {
+                    bail!("trace line {}: duplicate trace_header", i + 1);
+                }
+                if !arrivals.is_empty() {
+                    bail!("trace line {}: trace_header after request records", i + 1);
+                }
+                header = Some(obj);
+            }
+            Some("report") => {
+                recorded_row = Some(obj.need_str("row")?.to_string());
+            }
+            Some(other) => bail!("trace line {}: unknown event `{other}`", i + 1),
+            None => {
+                let req = Request {
+                    id: obj.need_usize("id").with_context(|| format!("trace line {}", i + 1))?,
+                    stream: obj
+                        .need_usize("stream")
+                        .with_context(|| format!("trace line {}", i + 1))?,
+                    arrival_s: obj
+                        .need_f64("arrival_s")
+                        .with_context(|| format!("trace line {}", i + 1))?,
+                    deadline_s: obj
+                        .need_f64("deadline_s")
+                        .with_context(|| format!("trace line {}", i + 1))?,
+                };
+                arrivals.push(req);
+            }
+        }
+    }
+
+    let Some(header) = header else {
+        bail!(
+            "trace has no trace_header line — record it with `adaoper serve --trace` \
+             (TraceObserver::with_meta), headerless traces cannot be replayed"
+        );
+    };
+    let (cfg, streams) = reconstruct(&header)?;
+
+    let mut engine = Engine::new(cfg);
+    let report = engine.run_replay(&streams, &arrivals, &mut [])?;
+    Ok(ReplayOutcome { row: report.row(), recorded_row, arrivals: arrivals.len() })
+}
+
+/// Replay a trace file.
+pub fn replay_path(path: &Path) -> Result<ReplayOutcome> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading trace {}", path.display()))?;
+    replay_str(&text).with_context(|| format!("replaying trace {}", path.display()))
+}
+
+/// Rebuild the recording run's [`EngineConfig`] and stream set from the
+/// `trace_header` object.
+pub fn reconstruct(h: &Json) -> Result<(EngineConfig, Vec<StreamSpec>)> {
+    let version = h.need_u64("version")?;
+    if version != 1 {
+        bail!("unsupported trace version {version} (this build replays version 1)");
+    }
+
+    let mut cfg = EngineConfig {
+        policy: PolicyKind::parse(h.need_str("policy")?)?,
+        objective: parse_objective(h.need_str("objective")?)?,
+        condition: ConditionKind::parse(h.need_str("condition")?)?,
+        duration_s: h.need_f64("duration_s")?,
+        seed: h.need_u64("seed")?,
+        window: h.need_usize("window")?,
+        cooldown_ops: h.need_usize("cooldown_ops")?,
+        monitor_period_s: h.need_f64("monitor_period_s")?,
+        planner_info: match h.need_str("planner_info")? {
+            "profiler" => PlannerInfo::Profiler,
+            "oracle" => PlannerInfo::Oracle,
+            other => bail!("unknown planner_info `{other}` in trace header"),
+        },
+        use_corrector: h.need_bool("use_corrector")?,
+        scheduler: SchedulerKind::parse(h.need_str("scheduler")?)?,
+        admission: AdmissionPolicy::from_kind(
+            AdmissionKind::parse(h.need_str("admission")?)?,
+            h.need_usize("queue_limit")?,
+        ),
+        ..EngineConfig::default()
+    };
+
+    cfg.batching.policy = BatchPolicyKind::parse(h.need_str("batch_policy")?)?;
+    cfg.batching.max = h.need_usize("batch_max")?;
+    cfg.batching.wait_s = h.need_f64("batch_wait_s")?;
+
+    let calib = h.get("calib").ok_or_else(|| anyhow::anyhow!("trace header missing `calib`"))?;
+    cfg.calib.samples = calib.need_usize("samples")?;
+    cfg.calib.seed = calib.need_u64("seed")?;
+    cfg.calib.gbdt.trees = calib.need_usize("trees")?;
+    cfg.calib.gbdt.max_depth = calib.need_usize("max_depth")?;
+    cfg.calib.gbdt.eta = calib.need_f64("eta")?;
+    cfg.calib.gbdt.subsample = calib.need_f64("subsample")?;
+    cfg.calib.gbdt.min_leaf = calib.need_usize("min_leaf")?;
+    cfg.calib.gbdt.bins = calib.need_usize("bins")?;
+    cfg.calib.gbdt.seed = calib.need_u64("gbdt_seed")?;
+
+    let pc =
+        h.get("plan_cache").ok_or_else(|| anyhow::anyhow!("trace header missing `plan_cache`"))?;
+    cfg.plan_cache.capacity = pc.need_usize("capacity")?;
+    cfg.plan_cache.freq_bucket_hz = pc.need_f64("freq_bucket_hz")?;
+    cfg.plan_cache.util_bucket = pc.need_f64("util_bucket")?;
+    cfg.plan_cache.temp_bucket_c = pc.need_f64("temp_bucket_c")?;
+    cfg.plan_cache.bw_bucket = pc.need_f64("bw_bucket")?;
+
+    let mut timeline = Vec::new();
+    for entry in h.need_arr("timeline")? {
+        timeline
+            .push((entry.need_f64("at_s")?, ConditionKind::parse(entry.need_str("condition")?)?));
+    }
+    cfg.condition_timeline = timeline;
+
+    let mut streams = Vec::new();
+    for (i, s) in h.need_arr("streams")?.iter().enumerate() {
+        let id = s.need_usize("id")?;
+        if id != i {
+            bail!("trace header stream {i} carries id {id} (ids must be their index)");
+        }
+        let model_name = s.need_str("model")?;
+        let Some(model) = crate::graph::zoo::by_name(model_name) else {
+            bail!("trace header stream {i} names unknown model `{model_name}`");
+        };
+        let arrival = parse_arrival(
+            s.get("arrival")
+                .ok_or_else(|| anyhow::anyhow!("trace header stream {i} missing `arrival`"))?,
+        )?;
+        streams.push(StreamSpec::new(id, model, arrival, s.need_f64("slo_s")?));
+    }
+
+    Ok((cfg, streams))
+}
+
+fn parse_objective(s: &str) -> Result<Objective> {
+    if let Some(slo) = s.strip_prefix("min-energy-slo:") {
+        let slo_s: f64 =
+            slo.parse().with_context(|| format!("bad objective slo in trace header: `{s}`"))?;
+        return Ok(Objective::MinEnergyUnderSlo { slo_s });
+    }
+    match s {
+        "min-edp" => Ok(Objective::MinEdp),
+        "min-latency" => Ok(Objective::MinLatency),
+        other => bail!("unknown objective `{other}` in trace header"),
+    }
+}
+
+fn parse_arrival(a: &Json) -> Result<Arrival> {
+    match a.need_str("kind")? {
+        "poisson" => Ok(Arrival::Poisson { hz: a.need_f64("hz")? }),
+        "periodic" => {
+            Ok(Arrival::Periodic { hz: a.need_f64("hz")?, jitter: a.need_f64("jitter")? })
+        }
+        "mmpp" => Ok(Arrival::Mmpp {
+            hz_low: a.need_f64("hz_low")?,
+            hz_high: a.need_f64("hz_high")?,
+            dwell_low_s: a.need_f64("dwell_low_s")?,
+            dwell_high_s: a.need_f64("dwell_high_s")?,
+        }),
+        other => bail!("unknown arrival kind `{other}` in trace header"),
+    }
+}

@@ -1,0 +1,91 @@
+//! Execute a scenario spec end to end: parse → validate → lower → run →
+//! evaluate `[expect]` bounds. This is the engine behind
+//! `adaoper scenario run` and the `make scenarios` CI gate.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::Engine;
+use crate::scenario::expect::{evaluate, CheckResult, Metrics};
+use crate::scenario::lower::lower;
+use crate::scenario::parse_spec;
+
+/// Everything a scenario run produced.
+#[derive(Debug, Clone)]
+pub struct ScenarioOutcome {
+    /// Scenario name from the spec.
+    pub name: String,
+    /// The report row (single-engine) or rendered fleet report.
+    pub row: String,
+    /// Per-bound `[expect]` results (empty when the spec has none).
+    pub checks: Vec<CheckResult>,
+}
+
+impl ScenarioOutcome {
+    /// True when every `[expect]` bound held.
+    pub fn passed(&self) -> bool {
+        self.checks.iter().all(|c| c.pass)
+    }
+
+    /// Multi-line human-readable rendering.
+    pub fn render(&self) -> String {
+        let mut out = format!("scenario {}\n{}\n", self.name, self.row);
+        for c in &self.checks {
+            out.push_str("  ");
+            out.push_str(&c.render());
+            out.push('\n');
+        }
+        if self.checks.is_empty() {
+            out.push_str("  (no [expect] bounds declared)\n");
+        } else if self.passed() {
+            out.push_str(&format!("  PASS ({} bounds)\n", self.checks.len()));
+        } else {
+            let failed = self.checks.iter().filter(|c| !c.pass).count();
+            out.push_str(&format!("  FAIL ({failed}/{} bounds violated)\n", self.checks.len()));
+        }
+        out
+    }
+}
+
+/// Run a spec given as TOML source text.
+pub fn run_str(src: &str) -> Result<ScenarioOutcome> {
+    let spec = parse_spec(src)?;
+    let lowered = lower(&spec)?;
+    let (row, metrics) = match &lowered.fleet {
+        Some(fleet_cfg) => {
+            let report = crate::fleet::run_fleet(fleet_cfg)?;
+            (report.render(), Metrics::of_fleet(&report))
+        }
+        None => {
+            let mut engine = Engine::new(lowered.cfg.clone());
+            let report = engine.run(&lowered.streams)?;
+            (report.row(), Metrics::of_report(&report))
+        }
+    };
+    let checks = evaluate(&metrics, &lowered.expect);
+    Ok(ScenarioOutcome { name: lowered.name, row, checks })
+}
+
+/// Run a spec file.
+pub fn run_path(path: &Path) -> Result<ScenarioOutcome> {
+    let src = std::fs::read_to_string(path)
+        .with_context(|| format!("reading scenario spec {}", path.display()))?;
+    run_str(&src).with_context(|| format!("running scenario spec {}", path.display()))
+}
+
+/// Every `*.toml` under `dir`, sorted by file name — the iteration order
+/// of `adaoper scenario run <dir>`.
+pub fn spec_files(dir: &Path) -> Result<Vec<std::path::PathBuf>> {
+    let mut files = Vec::new();
+    for entry in
+        std::fs::read_dir(dir).with_context(|| format!("listing scenario dir {}", dir.display()))?
+    {
+        let path = entry?.path();
+        if path.extension().is_some_and(|e| e == "toml") {
+            files.push(path);
+        }
+    }
+    files.sort();
+    Ok(files)
+}

@@ -1,0 +1,674 @@
+//! Typed scenario spec: the decoded form of a `*.toml` scenario file.
+//!
+//! [`decode`] turns parsed TOML into a [`ScenarioSpec`], rejecting
+//! unknown sections/keys and mistyped values with span-carrying
+//! diagnostics ([`crate::scenario::diag`]). Shape errors (wrong type,
+//! unknown enum spelling, unknown key) are caught here; cross-field
+//! semantic errors (dangling stream refs, overlapping timelines, …) are
+//! the job of [`crate::scenario::validate`].
+//!
+//! [`ScenarioSpec::emit`] writes the spec back out as canonical TOML such
+//! that `decode(parse(spec.emit()))` reproduces the spec field-for-field
+//! — the round-trip property the `scenario_roundtrip` test leans on.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::config::schema::{
+    AdmissionKind, BatchPolicyKind, ConditionKind, PolicyKind, SchedulerKind,
+};
+use crate::config::toml::Value;
+use crate::scenario::diag::spec_err;
+use crate::scenario::expect::{ExpectBound, ExpectKey};
+
+/// Optimisation objective as spelled in a spec file.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ObjectiveDef {
+    /// Minimise the energy-delay product (default).
+    MinEdp,
+    /// Minimise latency regardless of energy.
+    MinLatency,
+    /// Minimise energy subject to a latency ceiling.
+    MinEnergySlo {
+        /// The latency ceiling in milliseconds.
+        slo_ms: f64,
+    },
+}
+
+impl ObjectiveDef {
+    /// Canonical spelling for `objective =` lines.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ObjectiveDef::MinEdp => "min-edp",
+            ObjectiveDef::MinLatency => "min-latency",
+            ObjectiveDef::MinEnergySlo { .. } => "min-energy-slo",
+        }
+    }
+}
+
+/// One `[stream.<name>]` section.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StreamDef {
+    /// Section name; referenced from `[scenario].streams`.
+    pub name: String,
+    /// Model zoo key (`yolov2-tiny`, `mobilenetv1`, …).
+    pub model: String,
+    /// Arrival process kind: `poisson`, `periodic`, or `mmpp`.
+    pub arrival: String,
+    /// Mean arrival rate in Hz.
+    pub rate_hz: f64,
+    /// Periodic jitter fraction; only meaningful for `periodic`.
+    pub jitter: Option<f64>,
+    /// Per-request deadline in milliseconds.
+    pub slo_ms: f64,
+}
+
+/// One `[timeline.<label>]` section: a condition change at a point in
+/// simulated time.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TimelineDef {
+    /// Section label (documentation only; uniqueness enforced by TOML).
+    pub label: String,
+    /// Simulated time of the regime change, seconds from start.
+    pub at_s: f64,
+    /// Condition the device switches to.
+    pub condition: ConditionKind,
+}
+
+/// `[calib]` — offline profiler calibration knobs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CalibDef {
+    /// Synthetic calibration samples to draw.
+    pub samples: usize,
+    /// Calibration PRNG seed.
+    pub seed: u64,
+    /// GBDT ensemble size.
+    pub trees: usize,
+}
+
+impl Default for CalibDef {
+    fn default() -> Self {
+        let d = crate::profiler::calibrate::CalibConfig::default();
+        CalibDef { samples: d.samples, seed: d.seed, trees: d.gbdt.trees }
+    }
+}
+
+/// `[batching]` — dynamic batch formation knobs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BatchDef {
+    /// Formation policy.
+    pub policy: BatchPolicyKind,
+    /// Maximum batch size.
+    pub max: usize,
+    /// Maximum formation wait in milliseconds.
+    pub wait_ms: f64,
+}
+
+impl Default for BatchDef {
+    fn default() -> Self {
+        let d = crate::batching::BatchConfig::default();
+        BatchDef { policy: d.policy, max: d.max, wait_ms: d.wait_s * 1e3 }
+    }
+}
+
+/// `[plan_cache]` — partition plan cache knobs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CacheDef {
+    /// Cache capacity (0 disables caching).
+    pub capacity: usize,
+    /// Utilisation quantisation bucket width.
+    pub util_bucket: f64,
+    /// Frequency quantisation bucket width in MHz.
+    pub freq_bucket_mhz: f64,
+}
+
+impl Default for CacheDef {
+    fn default() -> Self {
+        let d = crate::coordinator::PlanCacheConfig::default();
+        CacheDef {
+            capacity: d.capacity,
+            util_bucket: d.util_bucket,
+            freq_bucket_mhz: d.freq_bucket_hz / 1e6,
+        }
+    }
+}
+
+/// `[fleet]` — when present, the scenario runs through the fleet
+/// simulator (device-class zoo) instead of a single engine.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetDef {
+    /// Number of simulated devices.
+    pub devices: usize,
+    /// Worker threads for the sharded runner.
+    pub threads: usize,
+}
+
+/// A fully decoded scenario spec.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioSpec {
+    /// Scenario name (required, non-empty).
+    pub name: String,
+    /// Simulated duration in seconds.
+    pub duration_s: f64,
+    /// Engine seed — the single source of all run randomness.
+    pub seed: u64,
+    /// Partition policy under test.
+    pub policy: PolicyKind,
+    /// Optimisation objective.
+    pub objective: ObjectiveDef,
+    /// Dispatch scheduler.
+    pub scheduler: SchedulerKind,
+    /// Admission policy kind.
+    pub admission: AdmissionKind,
+    /// Per-stream queue bound; only valid with `admission = "bounded"`.
+    pub queue_limit: Option<usize>,
+    /// Initial workload condition.
+    pub condition: ConditionKind,
+    /// Ordered stream references — defines stream ids 0..n.
+    pub stream_names: Vec<String>,
+    /// Decoded `[stream.*]` sections (file order).
+    pub streams: Vec<StreamDef>,
+    /// Decoded `[timeline.*]` sections (file order; lowered sorted).
+    pub timeline: Vec<TimelineDef>,
+    /// Calibration knobs.
+    pub calib: CalibDef,
+    /// Batching knobs.
+    pub batching: BatchDef,
+    /// Plan cache knobs.
+    pub plan_cache: CacheDef,
+    /// Fleet-mode switch.
+    pub fleet: Option<FleetDef>,
+    /// `[expect]` metric assertions.
+    pub expect: Vec<ExpectBound>,
+}
+
+const ROOT_SECTIONS: &[&str] = &[
+    "scenario", "calib", "batching", "plan_cache", "stream", "timeline", "fleet", "expect",
+];
+const SCENARIO_KEYS: &[&str] = &[
+    "name", "duration_s", "seed", "policy", "objective", "objective_slo_ms", "scheduler",
+    "admission", "queue_limit", "condition", "streams",
+];
+const STREAM_KEYS: &[&str] = &["model", "arrival", "rate_hz", "jitter", "slo_ms"];
+const TIMELINE_KEYS: &[&str] = &["at_s", "condition"];
+const CALIB_KEYS: &[&str] = &["samples", "seed", "trees"];
+const BATCH_KEYS: &[&str] = &["policy", "max", "wait_ms"];
+const CACHE_KEYS: &[&str] = &["capacity", "util_bucket", "freq_bucket_mhz"];
+const FLEET_KEYS: &[&str] = &["devices", "threads"];
+
+/// Decode TOML source into a [`ScenarioSpec`]. Shape errors carry spans;
+/// call [`crate::scenario::validate::validate`] afterwards for semantic
+/// checks (or use [`crate::scenario::parse_spec`] which does both).
+pub fn decode(src: &str) -> Result<ScenarioSpec> {
+    let root = crate::config::toml::parse(src)?;
+    let root = root
+        .as_table()
+        .ok_or_else(|| spec_err(src, "", None, "spec root is not a table"))?;
+
+    for key in root.keys() {
+        if !ROOT_SECTIONS.contains(&key.as_str()) {
+            return Err(spec_err(
+                src,
+                key,
+                None,
+                format!("unknown section (expected one of {})", ROOT_SECTIONS.join(", ")),
+            ));
+        }
+    }
+
+    let scen = section(src, root, "scenario", true)?
+        .expect("required section checked above");
+    check_keys(src, scen, "scenario", SCENARIO_KEYS)?;
+
+    let name = need_str(src, scen, "scenario", "name")?;
+    let duration_s = need_f64(src, scen, "scenario", "duration_s")?;
+    let seed = opt_u64(src, scen, "scenario", "seed", 7)?;
+    let policy = parse_kind(src, scen, "scenario", "policy", "adaoper", PolicyKind::parse)?;
+    let scheduler = parse_kind(src, scen, "scenario", "scheduler", "fifo", SchedulerKind::parse)?;
+    let admission =
+        parse_kind(src, scen, "scenario", "admission", "admit-all", AdmissionKind::parse)?;
+    let condition = parse_kind(src, scen, "scenario", "condition", "moderate", ConditionKind::parse)?;
+    let queue_limit = match scen.get("queue_limit") {
+        Some(v) => Some(usize_of(src, "scenario", "queue_limit", v)?),
+        None => None,
+    };
+    let objective = decode_objective(src, scen)?;
+    let stream_names = match scen.get("streams") {
+        None => Vec::new(),
+        Some(v) => {
+            let arr = v.as_array().ok_or_else(|| {
+                spec_err(src, "scenario", Some("streams"), "must be an array of stream names")
+            })?;
+            let mut names = Vec::new();
+            for item in arr {
+                let s = item.as_str().ok_or_else(|| {
+                    spec_err(src, "scenario", Some("streams"), "stream names must be strings")
+                })?;
+                names.push(s.to_string());
+            }
+            names
+        }
+    };
+
+    let calib = match section(src, root, "calib", false)? {
+        None => CalibDef::default(),
+        Some(t) => {
+            check_keys(src, t, "calib", CALIB_KEYS)?;
+            let d = CalibDef::default();
+            CalibDef {
+                samples: opt_usize(src, t, "calib", "samples", d.samples)?,
+                seed: opt_u64(src, t, "calib", "seed", d.seed)?,
+                trees: opt_usize(src, t, "calib", "trees", d.trees)?,
+            }
+        }
+    };
+
+    let batching = match section(src, root, "batching", false)? {
+        None => BatchDef::default(),
+        Some(t) => {
+            check_keys(src, t, "batching", BATCH_KEYS)?;
+            let d = BatchDef::default();
+            BatchDef {
+                policy: parse_kind(src, t, "batching", "policy", d.policy.name(), BatchPolicyKind::parse)?,
+                max: opt_usize(src, t, "batching", "max", d.max)?,
+                wait_ms: opt_f64(src, t, "batching", "wait_ms", d.wait_ms)?,
+            }
+        }
+    };
+
+    let plan_cache = match section(src, root, "plan_cache", false)? {
+        None => CacheDef::default(),
+        Some(t) => {
+            check_keys(src, t, "plan_cache", CACHE_KEYS)?;
+            let d = CacheDef::default();
+            CacheDef {
+                capacity: opt_usize(src, t, "plan_cache", "capacity", d.capacity)?,
+                util_bucket: opt_f64(src, t, "plan_cache", "util_bucket", d.util_bucket)?,
+                freq_bucket_mhz: opt_f64(src, t, "plan_cache", "freq_bucket_mhz", d.freq_bucket_mhz)?,
+            }
+        }
+    };
+
+    let fleet = match section(src, root, "fleet", false)? {
+        None => None,
+        Some(t) => {
+            check_keys(src, t, "fleet", FLEET_KEYS)?;
+            Some(FleetDef {
+                devices: opt_usize(src, t, "fleet", "devices", 10)?,
+                threads: opt_usize(src, t, "fleet", "threads", 4)?,
+            })
+        }
+    };
+
+    let mut streams = Vec::new();
+    if let Some(group) = root.get("stream") {
+        let tables = group.as_table().ok_or_else(|| {
+            spec_err(src, "stream", None, "must be a group of [stream.<name>] sections")
+        })?;
+        for (sname, sub) in tables {
+            let sect = format!("stream.{sname}");
+            let t = sub
+                .as_table()
+                .ok_or_else(|| spec_err(src, &sect, None, "must be a table"))?;
+            check_keys(src, t, &sect, STREAM_KEYS)?;
+            let jitter = match t.get("jitter") {
+                Some(v) => Some(f64_of(src, &sect, "jitter", v)?),
+                None => None,
+            };
+            streams.push(StreamDef {
+                name: sname.clone(),
+                model: need_str(src, t, &sect, "model")?,
+                arrival: need_str(src, t, &sect, "arrival")?,
+                rate_hz: need_f64(src, t, &sect, "rate_hz")?,
+                jitter,
+                slo_ms: need_f64(src, t, &sect, "slo_ms")?,
+            });
+        }
+    }
+
+    let mut timeline = Vec::new();
+    if let Some(group) = root.get("timeline") {
+        let tables = group.as_table().ok_or_else(|| {
+            spec_err(src, "timeline", None, "must be a group of [timeline.<label>] sections")
+        })?;
+        for (label, sub) in tables {
+            let sect = format!("timeline.{label}");
+            let t = sub
+                .as_table()
+                .ok_or_else(|| spec_err(src, &sect, None, "must be a table"))?;
+            check_keys(src, t, &sect, TIMELINE_KEYS)?;
+            timeline.push(TimelineDef {
+                label: label.clone(),
+                at_s: need_f64(src, t, &sect, "at_s")?,
+                condition: parse_kind(src, t, &sect, "condition", "", ConditionKind::parse)?,
+            });
+        }
+    }
+
+    let mut expect = Vec::new();
+    if let Some(v) = root.get("expect") {
+        let t = v
+            .as_table()
+            .ok_or_else(|| spec_err(src, "expect", None, "must be a table of bounds"))?;
+        for (key, val) in t {
+            let ek = ExpectKey::parse(key).ok_or_else(|| {
+                spec_err(
+                    src,
+                    "expect",
+                    Some(key),
+                    format!(
+                        "unknown expectation (expected one of {})",
+                        ExpectKey::all().iter().map(|k| k.name()).collect::<Vec<_>>().join(", ")
+                    ),
+                )
+            })?;
+            let bound = f64_of(src, "expect", key, val)?;
+            expect.push(ExpectBound { key: ek, bound });
+        }
+    }
+
+    Ok(ScenarioSpec {
+        name,
+        duration_s,
+        seed,
+        policy,
+        objective,
+        scheduler,
+        admission,
+        queue_limit,
+        condition,
+        stream_names,
+        streams,
+        timeline,
+        calib,
+        batching,
+        plan_cache,
+        fleet,
+        expect,
+    })
+}
+
+fn decode_objective(src: &str, scen: &BTreeMap<String, Value>) -> Result<ObjectiveDef> {
+    let name = opt_str(src, scen, "scenario", "objective", "min-edp")?;
+    let slo_ms = scen.get("objective_slo_ms");
+    match name.as_str() {
+        "min-edp" | "edp" => match slo_ms {
+            None => Ok(ObjectiveDef::MinEdp),
+            Some(_) => Err(spec_err(
+                src,
+                "scenario",
+                Some("objective_slo_ms"),
+                "only valid with objective = \"min-energy-slo\"",
+            )),
+        },
+        "min-latency" | "latency" => match slo_ms {
+            None => Ok(ObjectiveDef::MinLatency),
+            Some(_) => Err(spec_err(
+                src,
+                "scenario",
+                Some("objective_slo_ms"),
+                "only valid with objective = \"min-energy-slo\"",
+            )),
+        },
+        "min-energy-slo" | "energy-slo" => {
+            let v = slo_ms.ok_or_else(|| {
+                spec_err(
+                    src,
+                    "scenario",
+                    Some("objective_slo_ms"),
+                    "required when objective = \"min-energy-slo\"",
+                )
+            })?;
+            Ok(ObjectiveDef::MinEnergySlo { slo_ms: f64_of(src, "scenario", "objective_slo_ms", v)? })
+        }
+        other => Err(spec_err(
+            src,
+            "scenario",
+            Some("objective"),
+            format!("unknown objective `{other}` (expected min-edp, min-latency, or min-energy-slo)"),
+        )),
+    }
+}
+
+fn section<'a>(
+    src: &str,
+    root: &'a BTreeMap<String, Value>,
+    name: &str,
+    required: bool,
+) -> Result<Option<&'a BTreeMap<String, Value>>> {
+    match root.get(name) {
+        None if required => Err(spec_err(src, name, None, "required section is missing")),
+        None => Ok(None),
+        Some(v) => v
+            .as_table()
+            .map(Some)
+            .ok_or_else(|| spec_err(src, name, None, "must be a table")),
+    }
+}
+
+fn check_keys(
+    src: &str,
+    table: &BTreeMap<String, Value>,
+    sect: &str,
+    allowed: &[&str],
+) -> Result<()> {
+    for key in table.keys() {
+        if !allowed.contains(&key.as_str()) {
+            return Err(spec_err(
+                src,
+                sect,
+                Some(key),
+                format!("unknown key (expected one of {})", allowed.join(", ")),
+            ));
+        }
+    }
+    Ok(())
+}
+
+fn f64_of(src: &str, sect: &str, key: &str, v: &Value) -> Result<f64> {
+    v.as_float()
+        .ok_or_else(|| spec_err(src, sect, Some(key), "must be a number"))
+}
+
+fn usize_of(src: &str, sect: &str, key: &str, v: &Value) -> Result<usize> {
+    let i = v
+        .as_int()
+        .ok_or_else(|| spec_err(src, sect, Some(key), "must be an integer"))?;
+    usize::try_from(i).map_err(|_| spec_err(src, sect, Some(key), "must be non-negative"))
+}
+
+fn need_str(src: &str, t: &BTreeMap<String, Value>, sect: &str, key: &str) -> Result<String> {
+    match t.get(key) {
+        None => Err(spec_err(src, sect, Some(key), "required key is missing")),
+        Some(v) => v
+            .as_str()
+            .map(str::to_string)
+            .ok_or_else(|| spec_err(src, sect, Some(key), "must be a string")),
+    }
+}
+
+fn need_f64(src: &str, t: &BTreeMap<String, Value>, sect: &str, key: &str) -> Result<f64> {
+    match t.get(key) {
+        None => Err(spec_err(src, sect, Some(key), "required key is missing")),
+        Some(v) => f64_of(src, sect, key, v),
+    }
+}
+
+fn opt_f64(
+    src: &str,
+    t: &BTreeMap<String, Value>,
+    sect: &str,
+    key: &str,
+    default: f64,
+) -> Result<f64> {
+    match t.get(key) {
+        None => Ok(default),
+        Some(v) => f64_of(src, sect, key, v),
+    }
+}
+
+fn opt_usize(
+    src: &str,
+    t: &BTreeMap<String, Value>,
+    sect: &str,
+    key: &str,
+    default: usize,
+) -> Result<usize> {
+    match t.get(key) {
+        None => Ok(default),
+        Some(v) => usize_of(src, sect, key, v),
+    }
+}
+
+fn opt_u64(
+    src: &str,
+    t: &BTreeMap<String, Value>,
+    sect: &str,
+    key: &str,
+    default: u64,
+) -> Result<u64> {
+    match t.get(key) {
+        None => Ok(default),
+        Some(v) => {
+            let i = v
+                .as_int()
+                .ok_or_else(|| spec_err(src, sect, Some(key), "must be an integer"))?;
+            u64::try_from(i).map_err(|_| spec_err(src, sect, Some(key), "must be non-negative"))
+        }
+    }
+}
+
+fn opt_str(
+    src: &str,
+    t: &BTreeMap<String, Value>,
+    sect: &str,
+    key: &str,
+    default: &str,
+) -> Result<String> {
+    match t.get(key) {
+        None => Ok(default.to_string()),
+        Some(v) => v
+            .as_str()
+            .map(str::to_string)
+            .ok_or_else(|| spec_err(src, sect, Some(key), "must be a string")),
+    }
+}
+
+fn parse_kind<K>(
+    src: &str,
+    t: &BTreeMap<String, Value>,
+    sect: &str,
+    key: &str,
+    default: &str,
+    parse: impl Fn(&str) -> Result<K>,
+) -> Result<K> {
+    let spelled = match t.get(key) {
+        None if default.is_empty() => {
+            return Err(spec_err(src, sect, Some(key), "required key is missing"));
+        }
+        None => default.to_string(),
+        Some(v) => v
+            .as_str()
+            .map(str::to_string)
+            .ok_or_else(|| spec_err(src, sect, Some(key), "must be a string"))?,
+    };
+    parse(&spelled).map_err(|e| spec_err(src, sect, Some(key), e))
+}
+
+impl ScenarioSpec {
+    /// Write the spec back out as canonical TOML. Every field is emitted
+    /// explicitly (including values that match defaults) so that
+    /// `decode(emit())` reproduces the spec exactly.
+    pub fn emit(&self) -> String {
+        let mut out = String::new();
+        let p = |out: &mut String, s: String| {
+            out.push_str(&s);
+            out.push('\n');
+        };
+
+        p(&mut out, "[scenario]".into());
+        p(&mut out, format!("name = \"{}\"", self.name));
+        p(&mut out, format!("duration_s = {}", float(self.duration_s)));
+        p(&mut out, format!("seed = {}", self.seed));
+        p(&mut out, format!("policy = \"{}\"", self.policy.name()));
+        p(&mut out, format!("objective = \"{}\"", self.objective.name()));
+        if let ObjectiveDef::MinEnergySlo { slo_ms } = self.objective {
+            p(&mut out, format!("objective_slo_ms = {}", float(slo_ms)));
+        }
+        p(&mut out, format!("scheduler = \"{}\"", self.scheduler.name()));
+        p(&mut out, format!("admission = \"{}\"", self.admission.name()));
+        if let Some(limit) = self.queue_limit {
+            p(&mut out, format!("queue_limit = {limit}"));
+        }
+        p(&mut out, format!("condition = \"{}\"", self.condition.name()));
+        let names: Vec<String> =
+            self.stream_names.iter().map(|n| format!("\"{n}\"")).collect();
+        p(&mut out, format!("streams = [{}]", names.join(", ")));
+
+        p(&mut out, String::new());
+        p(&mut out, "[calib]".into());
+        p(&mut out, format!("samples = {}", self.calib.samples));
+        p(&mut out, format!("seed = {}", self.calib.seed));
+        p(&mut out, format!("trees = {}", self.calib.trees));
+
+        p(&mut out, String::new());
+        p(&mut out, "[batching]".into());
+        p(&mut out, format!("policy = \"{}\"", self.batching.policy.name()));
+        p(&mut out, format!("max = {}", self.batching.max));
+        p(&mut out, format!("wait_ms = {}", float(self.batching.wait_ms)));
+
+        p(&mut out, String::new());
+        p(&mut out, "[plan_cache]".into());
+        p(&mut out, format!("capacity = {}", self.plan_cache.capacity));
+        p(&mut out, format!("util_bucket = {}", float(self.plan_cache.util_bucket)));
+        p(
+            &mut out,
+            format!("freq_bucket_mhz = {}", float(self.plan_cache.freq_bucket_mhz)),
+        );
+
+        for s in &self.streams {
+            p(&mut out, String::new());
+            p(&mut out, format!("[stream.{}]", s.name));
+            p(&mut out, format!("model = \"{}\"", s.model));
+            p(&mut out, format!("arrival = \"{}\"", s.arrival));
+            p(&mut out, format!("rate_hz = {}", float(s.rate_hz)));
+            if let Some(j) = s.jitter {
+                p(&mut out, format!("jitter = {}", float(j)));
+            }
+            p(&mut out, format!("slo_ms = {}", float(s.slo_ms)));
+        }
+
+        for t in &self.timeline {
+            p(&mut out, String::new());
+            p(&mut out, format!("[timeline.{}]", t.label));
+            p(&mut out, format!("at_s = {}", float(t.at_s)));
+            p(&mut out, format!("condition = \"{}\"", t.condition.name()));
+        }
+
+        if let Some(f) = &self.fleet {
+            p(&mut out, String::new());
+            p(&mut out, "[fleet]".into());
+            p(&mut out, format!("devices = {}", f.devices));
+            p(&mut out, format!("threads = {}", f.threads));
+        }
+
+        if !self.expect.is_empty() {
+            p(&mut out, String::new());
+            p(&mut out, "[expect]".into());
+            for b in &self.expect {
+                p(&mut out, format!("{} = {}", b.key.name(), float(b.bound)));
+            }
+        }
+
+        out
+    }
+}
+
+/// Render a float so the TOML parser reads back the identical bits.
+/// Rust's shortest-round-trip `Display` guarantees `parse(format!("{x}"))
+/// == x`; integral values print without a dot, which the spec layer
+/// accepts (`as_float` takes integers too).
+fn float(x: f64) -> String {
+    format!("{x}")
+}

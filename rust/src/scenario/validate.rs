@@ -1,0 +1,274 @@
+//! Semantic validation of a decoded [`ScenarioSpec`].
+//!
+//! [`decode`](crate::scenario::spec::decode) guarantees shape (known
+//! keys, right types, known enum spellings); this pass rejects specs
+//! that are well-formed but inconsistent: dangling or duplicate stream
+//! refs, orphan stream sections, overlapping timeline entries, rate or
+//! jitter values outside their domain, unsatisfiable SLOs, and fleet
+//! specs that ask for single-engine-only features. Every rejection is a
+//! span-carrying diagnostic, never a panic.
+
+use std::collections::BTreeSet;
+
+use anyhow::Result;
+
+use crate::config::schema::AdmissionKind;
+use crate::scenario::diag::spec_err;
+use crate::scenario::spec::{ObjectiveDef, ScenarioSpec};
+
+/// Deadlines below this are unsatisfiable: even the smallest zoo model's
+/// best partition on the fastest simulated SoC needs more than a
+/// millisecond end-to-end, so such a spec can only ever report 100% miss.
+pub const MIN_SLO_MS: f64 = 1.0;
+
+/// Validate cross-field consistency. `src` is the original TOML text,
+/// used only to resolve diagnostic spans.
+pub fn validate(spec: &ScenarioSpec, src: &str) -> Result<()> {
+    if spec.name.trim().is_empty() {
+        return Err(spec_err(src, "scenario", Some("name"), "must not be empty"));
+    }
+    if !(spec.duration_s > 0.0 && spec.duration_s.is_finite()) {
+        return Err(spec_err(src, "scenario", Some("duration_s"), "must be a finite value > 0"));
+    }
+    if let ObjectiveDef::MinEnergySlo { slo_ms } = spec.objective {
+        if !(slo_ms > 0.0 && slo_ms.is_finite()) {
+            return Err(spec_err(
+                src,
+                "scenario",
+                Some("objective_slo_ms"),
+                "must be a finite value > 0",
+            ));
+        }
+    }
+
+    match (spec.admission, spec.queue_limit) {
+        (AdmissionKind::Bounded, Some(limit)) if limit < 1 => {
+            return Err(spec_err(src, "scenario", Some("queue_limit"), "must be >= 1"));
+        }
+        (AdmissionKind::Bounded, None) => {
+            return Err(spec_err(
+                src,
+                "scenario",
+                Some("queue_limit"),
+                "required when admission = \"bounded\"",
+            ));
+        }
+        (_, Some(_)) if spec.admission != AdmissionKind::Bounded => {
+            return Err(spec_err(
+                src,
+                "scenario",
+                Some("queue_limit"),
+                "only valid with admission = \"bounded\"",
+            ));
+        }
+        _ => {}
+    }
+
+    validate_streams(spec, src)?;
+    validate_timeline(spec, src)?;
+    validate_knobs(spec, src)?;
+    validate_fleet(spec, src)?;
+
+    for b in &spec.expect {
+        if !b.bound.is_finite() || b.bound < 0.0 {
+            return Err(spec_err(
+                src,
+                "expect",
+                Some(b.key.name()),
+                "bound must be a finite value >= 0",
+            ));
+        }
+    }
+    Ok(())
+}
+
+fn validate_streams(spec: &ScenarioSpec, src: &str) -> Result<()> {
+    if spec.fleet.is_none() && spec.stream_names.is_empty() {
+        return Err(spec_err(
+            src,
+            "scenario",
+            Some("streams"),
+            "at least one stream is required (or add a [fleet] section)",
+        ));
+    }
+
+    let defined: BTreeSet<&str> = spec.streams.iter().map(|s| s.name.as_str()).collect();
+    let mut seen = BTreeSet::new();
+    for name in &spec.stream_names {
+        if !seen.insert(name.as_str()) {
+            return Err(spec_err(
+                src,
+                "scenario",
+                Some("streams"),
+                format!("stream `{name}` is listed twice"),
+            ));
+        }
+        if !defined.contains(name.as_str()) {
+            return Err(spec_err(
+                src,
+                "scenario",
+                Some("streams"),
+                format!("references undefined stream `{name}` (no [stream.{name}] section)"),
+            ));
+        }
+    }
+    for s in &spec.streams {
+        let sect = format!("stream.{}", s.name);
+        if !spec.stream_names.iter().any(|n| n == &s.name) {
+            return Err(spec_err(
+                src,
+                &sect,
+                None,
+                "defined but not listed in [scenario].streams",
+            ));
+        }
+        if crate::graph::zoo::by_name(&s.model).is_none() {
+            return Err(spec_err(
+                src,
+                &sect,
+                Some("model"),
+                format!(
+                    "unknown model `{}` (expected one of {})",
+                    s.model,
+                    crate::graph::zoo::names().join(", ")
+                ),
+            ));
+        }
+        if !matches!(s.arrival.as_str(), "poisson" | "periodic" | "mmpp") {
+            return Err(spec_err(
+                src,
+                &sect,
+                Some("arrival"),
+                format!("unknown arrival kind `{}` (expected poisson, periodic, or mmpp)", s.arrival),
+            ));
+        }
+        if !(s.rate_hz > 0.0 && s.rate_hz.is_finite()) {
+            return Err(spec_err(src, &sect, Some("rate_hz"), "must be a finite value > 0"));
+        }
+        match s.jitter {
+            Some(_) if s.arrival != "periodic" => {
+                return Err(spec_err(
+                    src,
+                    &sect,
+                    Some("jitter"),
+                    "only valid for arrival = \"periodic\"",
+                ));
+            }
+            Some(j) if !(0.0..=1.0).contains(&j) => {
+                return Err(spec_err(src, &sect, Some("jitter"), "must be within [0, 1]"));
+            }
+            _ => {}
+        }
+        if !s.slo_ms.is_finite() || s.slo_ms < MIN_SLO_MS {
+            return Err(spec_err(
+                src,
+                &sect,
+                Some("slo_ms"),
+                format!("unsatisfiable SLO: must be >= {MIN_SLO_MS} ms"),
+            ));
+        }
+    }
+    Ok(())
+}
+
+fn validate_timeline(spec: &ScenarioSpec, src: &str) -> Result<()> {
+    for t in &spec.timeline {
+        let sect = format!("timeline.{}", t.label);
+        if !t.at_s.is_finite() || t.at_s < 0.0 || t.at_s >= spec.duration_s {
+            return Err(spec_err(
+                src,
+                &sect,
+                Some("at_s"),
+                format!("must lie within [0, duration_s) = [0, {})", spec.duration_s),
+            ));
+        }
+    }
+    let mut sorted: Vec<_> = spec.timeline.iter().collect();
+    sorted.sort_by(|a, b| a.at_s.total_cmp(&b.at_s));
+    for pair in sorted.windows(2) {
+        if pair[0].at_s == pair[1].at_s {
+            return Err(spec_err(
+                src,
+                &format!("timeline.{}", pair[1].label),
+                Some("at_s"),
+                format!(
+                    "overlaps [timeline.{}]: two regime changes at t = {} s",
+                    pair[0].label, pair[0].at_s
+                ),
+            ));
+        }
+    }
+    Ok(())
+}
+
+fn validate_knobs(spec: &ScenarioSpec, src: &str) -> Result<()> {
+    if spec.calib.samples < 1 {
+        return Err(spec_err(src, "calib", Some("samples"), "must be >= 1"));
+    }
+    if spec.calib.trees < 1 {
+        return Err(spec_err(src, "calib", Some("trees"), "must be >= 1"));
+    }
+    if spec.batching.max < 1 {
+        return Err(spec_err(src, "batching", Some("max"), "must be >= 1"));
+    }
+    if !(spec.batching.wait_ms >= 0.0 && spec.batching.wait_ms.is_finite()) {
+        return Err(spec_err(src, "batching", Some("wait_ms"), "must be a finite value >= 0"));
+    }
+    if !(spec.plan_cache.util_bucket > 0.0 && spec.plan_cache.util_bucket.is_finite()) {
+        return Err(spec_err(src, "plan_cache", Some("util_bucket"), "must be a finite value > 0"));
+    }
+    if !(spec.plan_cache.freq_bucket_mhz > 0.0 && spec.plan_cache.freq_bucket_mhz.is_finite()) {
+        return Err(spec_err(
+            src,
+            "plan_cache",
+            Some("freq_bucket_mhz"),
+            "must be a finite value > 0",
+        ));
+    }
+    Ok(())
+}
+
+fn validate_fleet(spec: &ScenarioSpec, src: &str) -> Result<()> {
+    let Some(fleet) = &spec.fleet else { return Ok(()) };
+    if fleet.devices < 1 {
+        return Err(spec_err(src, "fleet", Some("devices"), "must be >= 1"));
+    }
+    if fleet.threads < 1 {
+        return Err(spec_err(src, "fleet", Some("threads"), "must be >= 1"));
+    }
+    if let Some(s) = spec.streams.first() {
+        return Err(spec_err(
+            src,
+            &format!("stream.{}", s.name),
+            None,
+            "fleet scenarios use the built-in per-class workload mix; remove [stream.*] sections",
+        ));
+    }
+    if !spec.stream_names.is_empty() {
+        return Err(spec_err(
+            src,
+            "scenario",
+            Some("streams"),
+            "fleet scenarios use the built-in per-class workload mix; remove the streams list",
+        ));
+    }
+    if let Some(t) = spec.timeline.first() {
+        return Err(spec_err(
+            src,
+            &format!("timeline.{}", t.label),
+            None,
+            "condition timelines are not supported in fleet scenarios",
+        ));
+    }
+    for b in &spec.expect {
+        if !b.key.fleet_supported() {
+            return Err(spec_err(
+                src,
+                "expect",
+                Some(b.key.name()),
+                "not available from the fleet aggregate (single-engine scenarios only)",
+            ));
+        }
+    }
+    Ok(())
+}

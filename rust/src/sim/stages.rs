@@ -203,6 +203,29 @@ impl ArrivalSource {
         Ok(ArrivalSource { total })
     }
 
+    /// Seed the queue from *recorded* arrivals instead of the PRNG — the
+    /// replay path. Requests must be pushed in the same order `seed`
+    /// would have produced them (stream-major, chronological within a
+    /// stream) so `(time, seq)` tie-breaks match the original run; the
+    /// caller sorts by `(stream, id)` which is exactly that order.
+    pub fn seed_recorded(queue: &mut EventQueue, arrivals: &[Request]) -> Result<ArrivalSource> {
+        if arrivals.is_empty() {
+            bail!("replay source contains no arrivals");
+        }
+        for req in arrivals {
+            queue.push(
+                req.arrival_s,
+                Event::Arrival {
+                    req: req.clone(),
+                    admitted: false,
+                },
+            );
+        }
+        Ok(ArrivalSource {
+            total: arrivals.len(),
+        })
+    }
+
     /// Requests generated across all streams.
     pub fn total(&self) -> usize {
         self.total

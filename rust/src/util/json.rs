@@ -1,0 +1,394 @@
+//! Minimal recursive-descent JSON parser (the offline crate universe has
+//! no `serde`), built for reading back the JSONL traces
+//! [`crate::metrics::TraceObserver`] writes.
+//!
+//! Full RFC 8259 value grammar: objects, arrays, strings with `\uXXXX`
+//! escapes, numbers, booleans, `null`. Numbers parse as `f64` (the trace
+//! writer emits floats via `Display`, which round-trips exactly through
+//! `str::parse::<f64>`). Errors carry a byte offset and a short
+//! description; no panics on malformed input.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// A parsed JSON value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    /// `null`.
+    Null,
+    /// `true` | `false`.
+    Bool(bool),
+    /// Any JSON number (always carried as `f64`).
+    Num(f64),
+    /// A string literal, unescaped.
+    Str(String),
+    /// An array.
+    Arr(Vec<Json>),
+    /// An object; key order is not preserved (sorted map).
+    Obj(BTreeMap<String, Json>),
+}
+
+impl Json {
+    /// Parse one JSON value from `input`, requiring it to consume the
+    /// whole string (surrounding whitespace allowed).
+    pub fn parse(input: &str) -> Result<Json> {
+        let mut p = Parser {
+            bytes: input.as_bytes(),
+            pos: 0,
+        };
+        p.skip_ws();
+        let v = p.value()?;
+        p.skip_ws();
+        if p.pos != p.bytes.len() {
+            bail!("trailing garbage at byte {} of JSON input", p.pos);
+        }
+        Ok(v)
+    }
+
+    /// Object member by key; `None` for missing keys or non-objects.
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    /// The value as `f64` (numbers only).
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    /// The value as `u64` (integral, non-negative numbers only).
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Json::Num(x) if *x >= 0.0 && x.fract() == 0.0 && *x <= u64::MAX as f64 => {
+                Some(*x as u64)
+            }
+            _ => None,
+        }
+    }
+
+    /// The value as `usize` (integral, non-negative numbers only).
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_u64().map(|x| x as usize)
+    }
+
+    /// The value as `&str` (strings only).
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// The value as `bool` (booleans only).
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    /// The value as an array slice (arrays only).
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// Required object member of `f64` type, with a key-naming error.
+    pub fn need_f64(&self, key: &str) -> Result<f64> {
+        match self.get(key).and_then(Json::as_f64) {
+            Some(x) => Ok(x),
+            None => bail!("JSON object is missing numeric key `{key}`"),
+        }
+    }
+
+    /// Required object member of `u64` type, with a key-naming error.
+    pub fn need_u64(&self, key: &str) -> Result<u64> {
+        match self.get(key).and_then(Json::as_u64) {
+            Some(x) => Ok(x),
+            None => bail!("JSON object is missing integer key `{key}`"),
+        }
+    }
+
+    /// Required object member of `usize` type, with a key-naming error.
+    pub fn need_usize(&self, key: &str) -> Result<usize> {
+        self.need_u64(key).map(|x| x as usize)
+    }
+
+    /// Required object member of string type, with a key-naming error.
+    pub fn need_str(&self, key: &str) -> Result<&str> {
+        match self.get(key).and_then(Json::as_str) {
+            Some(s) => Ok(s),
+            None => bail!("JSON object is missing string key `{key}`"),
+        }
+    }
+
+    /// Required object member of bool type, with a key-naming error.
+    pub fn need_bool(&self, key: &str) -> Result<bool> {
+        match self.get(key).and_then(Json::as_bool) {
+            Some(b) => Ok(b),
+            None => bail!("JSON object is missing boolean key `{key}`"),
+        }
+    }
+
+    /// Required object member of array type, with a key-naming error.
+    pub fn need_arr(&self, key: &str) -> Result<&[Json]> {
+        match self.get(key).and_then(Json::as_arr) {
+            Some(a) => Ok(a),
+            None => bail!("JSON object is missing array key `{key}`"),
+        }
+    }
+}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn skip_ws(&mut self) {
+        while let Some(&b) = self.bytes.get(self.pos) {
+            if b == b' ' || b == b'\t' || b == b'\n' || b == b'\r' {
+                self.pos += 1;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn expect(&mut self, b: u8) -> Result<()> {
+        match self.peek() {
+            Some(c) if c == b => {
+                self.pos += 1;
+                Ok(())
+            }
+            Some(c) => bail!(
+                "expected `{}` at byte {}, found `{}`",
+                b as char,
+                self.pos,
+                c as char
+            ),
+            None => bail!("expected `{}` at byte {}, found end of input", b as char, self.pos),
+        }
+    }
+
+    fn value(&mut self) -> Result<Json> {
+        match self.peek() {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b't') => self.literal("true", Json::Bool(true)),
+            Some(b'f') => self.literal("false", Json::Bool(false)),
+            Some(b'n') => self.literal("null", Json::Null),
+            Some(b) if b == b'-' || b.is_ascii_digit() => self.number(),
+            Some(b) => bail!("unexpected byte `{}` at {}", b as char, self.pos),
+            None => bail!("unexpected end of JSON input at byte {}", self.pos),
+        }
+    }
+
+    fn literal(&mut self, word: &str, v: Json) -> Result<Json> {
+        let end = self.pos + word.len();
+        if self.bytes.get(self.pos..end) == Some(word.as_bytes()) {
+            self.pos = end;
+            Ok(v)
+        } else {
+            bail!("malformed literal at byte {} (expected `{}`)", self.pos, word)
+        }
+    }
+
+    fn number(&mut self) -> Result<Json> {
+        let start = self.pos;
+        while let Some(b) = self.peek() {
+            if b.is_ascii_digit() || matches!(b, b'-' | b'+' | b'.' | b'e' | b'E') {
+                self.pos += 1;
+            } else {
+                break;
+            }
+        }
+        let text = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap_or("");
+        match text.parse::<f64>() {
+            Ok(x) => Ok(Json::Num(x)),
+            Err(_) => bail!("malformed number `{}` at byte {}", text, start),
+        }
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.peek() {
+                None => bail!("unterminated string at byte {}", self.pos),
+                Some(b'"') => {
+                    self.pos += 1;
+                    return Ok(out);
+                }
+                Some(b'\\') => {
+                    self.pos += 1;
+                    match self.peek() {
+                        Some(b'"') => out.push('"'),
+                        Some(b'\\') => out.push('\\'),
+                        Some(b'/') => out.push('/'),
+                        Some(b'b') => out.push('\u{0008}'),
+                        Some(b'f') => out.push('\u{000c}'),
+                        Some(b'n') => out.push('\n'),
+                        Some(b'r') => out.push('\r'),
+                        Some(b't') => out.push('\t'),
+                        Some(b'u') => {
+                            self.pos += 1;
+                            let cp = self.hex4()?;
+                            // note: surrogate pairs are not recombined;
+                            // the trace writer never emits them
+                            out.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
+                            continue;
+                        }
+                        _ => bail!("bad escape at byte {}", self.pos),
+                    }
+                    self.pos += 1;
+                }
+                Some(_) => {
+                    // copy one UTF-8 scalar (multi-byte safe): find the
+                    // char boundary via str indexing on the remainder
+                    let rest = std::str::from_utf8(&self.bytes[self.pos..])
+                        .map_err(|_| anyhow::anyhow!("invalid UTF-8 at byte {}", self.pos))?;
+                    let c = rest.chars().next().unwrap();
+                    out.push(c);
+                    self.pos += c.len_utf8();
+                }
+            }
+        }
+    }
+
+    fn hex4(&mut self) -> Result<u32> {
+        let end = self.pos + 4;
+        let Some(slice) = self.bytes.get(self.pos..end) else {
+            bail!("truncated \\u escape at byte {}", self.pos);
+        };
+        let text = std::str::from_utf8(slice)
+            .map_err(|_| anyhow::anyhow!("bad \\u escape at byte {}", self.pos))?;
+        let cp = u32::from_str_radix(text, 16)
+            .map_err(|_| anyhow::anyhow!("bad \\u escape `{}` at byte {}", text, self.pos))?;
+        self.pos = end;
+        Ok(cp)
+    }
+
+    fn object(&mut self) -> Result<Json> {
+        self.expect(b'{')?;
+        let mut map = BTreeMap::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Json::Obj(map));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            self.skip_ws();
+            let val = self.value()?;
+            map.insert(key, val);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b'}') => {
+                    self.pos += 1;
+                    return Ok(Json::Obj(map));
+                }
+                _ => bail!("expected `,` or `}}` at byte {}", self.pos),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            self.skip_ws();
+            items.push(self.value()?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(Json::Arr(items));
+                }
+                _ => bail!("expected `,` or `]` at byte {}", self.pos),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars() {
+        assert_eq!(Json::parse("null").unwrap(), Json::Null);
+        assert_eq!(Json::parse("true").unwrap(), Json::Bool(true));
+        assert_eq!(Json::parse(" false ").unwrap(), Json::Bool(false));
+        assert_eq!(Json::parse("3.5").unwrap(), Json::Num(3.5));
+        assert_eq!(Json::parse("-2e3").unwrap(), Json::Num(-2000.0));
+        assert_eq!(Json::parse("\"hi\"").unwrap(), Json::Str("hi".into()));
+    }
+
+    #[test]
+    fn parses_trace_shaped_line() {
+        let line = "{\"id\":12,\"stream\":0,\"arrival_s\":0.8421,\"shed\":false,\
+                    \"ops\":[{\"op\":0,\"placement\":\"gpu\"}],\"x\":null}";
+        let v = Json::parse(line).unwrap();
+        assert_eq!(v.need_usize("id").unwrap(), 12);
+        assert_eq!(v.need_f64("arrival_s").unwrap(), 0.8421);
+        assert!(!v.need_bool("shed").unwrap());
+        let ops = v.need_arr("ops").unwrap();
+        assert_eq!(ops[0].need_str("placement").unwrap(), "gpu");
+        assert_eq!(v.get("x"), Some(&Json::Null));
+        assert_eq!(v.get("missing"), None);
+    }
+
+    #[test]
+    fn float_display_roundtrips_exactly() {
+        for x in [0.1, 1.0 / 3.0, 6.02e23, -4.9e-324, 0.05] {
+            let v = Json::parse(&format!("{x}")).unwrap();
+            assert_eq!(v.as_f64().unwrap().to_bits(), x.to_bits());
+        }
+    }
+
+    #[test]
+    fn unescapes_strings() {
+        assert_eq!(
+            Json::parse("\"a\\\"b\\\\c\\u000a\"").unwrap(),
+            Json::Str("a\"b\\c\n".into())
+        );
+    }
+
+    #[test]
+    fn rejects_malformed_input() {
+        for bad in ["{", "[1,", "{\"a\":}", "tru", "1.2.3", "\"unterminated", "{} extra"] {
+            assert!(Json::parse(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn need_helpers_name_the_key() {
+        let v = Json::parse("{\"a\":1}").unwrap();
+        let err = v.need_str("b").unwrap_err().to_string();
+        assert!(err.contains("`b`"), "{err}");
+    }
+}

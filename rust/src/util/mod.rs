@@ -1,8 +1,9 @@
 //! Utility substrates built in-repo (the offline crate universe has no
 //! `rand`, `serde`, `criterion`, …): PRNG, statistics, ring buffer,
-//! thread pool, logging, and a micro bench harness.
+//! thread pool, logging, a JSON reader, and a micro bench harness.
 
 pub mod bench;
+pub mod json;
 pub mod logger;
 pub mod pool;
 pub mod prng;

@@ -1,0 +1,147 @@
+//! Golden replay suite: recorded traces are regression tests.
+//!
+//! For each scheduler × admission cell, a serving run is captured as a
+//! JSONL trace (header + request lines + report-row trailer) and
+//! snapshotted under `tests/golden/`. The suite then replays the
+//! *stored* trace through `adaoper::scenario::replay_str` — which
+//! reconstructs the full `EngineConfig` from the header and feeds the
+//! recorded arrivals back through the sim kernel — and asserts the
+//! replayed `ServingReport::row()` equals the recorded one byte for
+//! byte.
+//!
+//! Snapshot workflow matches `golden_determinism`: files are compared
+//! when present, bootstrapped when absent (first run on a fresh
+//! checkout), and regenerated under `ADAOPER_UPDATE_GOLDEN=1` — commit
+//! regenerated traces with any intentional behavior change.
+
+use std::path::PathBuf;
+use std::sync::OnceLock;
+
+use adaoper::config::schema::{PolicyKind, SchedulerKind};
+use adaoper::coordinator::{AdmissionPolicy, Engine, EngineConfig, StreamSpec};
+use adaoper::graph::zoo;
+use adaoper::metrics::{TraceMeta, TraceObserver};
+use adaoper::profiler::calibrate::{calibrate_on, CalibConfig, OfflineModel};
+use adaoper::profiler::gbdt::GbdtParams;
+use adaoper::profiler::{EnergyProfiler, EwmaCorrector};
+use adaoper::scenario::replay_str;
+use adaoper::soc::device::DeviceConfig;
+use adaoper::workload::Arrival;
+
+const SEED: u64 = 17;
+const DURATION_S: f64 = 0.8;
+
+fn calib() -> CalibConfig {
+    CalibConfig { samples: 1200, seed: 5, gbdt: GbdtParams { trees: 40, ..Default::default() } }
+}
+
+/// Shared offline fit for the capture side (replay's `Engine::new`
+/// refits from the header's calib block — deterministically the same
+/// model, which is exactly what the suite verifies).
+fn offline() -> &'static OfflineModel {
+    static OFF: OnceLock<OfflineModel> = OnceLock::new();
+    OFF.get_or_init(|| calibrate_on(&calib(), &DeviceConfig::snapdragon_855()))
+}
+
+fn streams() -> Vec<StreamSpec> {
+    vec![
+        StreamSpec::new(0, zoo::yolov2_tiny(), Arrival::Poisson { hz: 30.0 }, 0.25),
+        StreamSpec::new(1, zoo::mobilenet_v1(), Arrival::Poisson { hz: 20.0 }, 0.4),
+    ]
+}
+
+fn cells() -> Vec<(String, SchedulerKind, AdmissionPolicy)> {
+    let mut out = Vec::new();
+    for sched in SchedulerKind::all() {
+        for (name, adm) in [
+            ("admit-all", AdmissionPolicy::AdmitAll),
+            ("drop-late", AdmissionPolicy::DropLate),
+        ] {
+            out.push((format!("{}_{}", sched.name(), name), sched, adm));
+        }
+    }
+    out
+}
+
+/// Run one cell with trace recording on; returns the full JSONL text.
+fn capture(scheduler: SchedulerKind, admission: AdmissionPolicy) -> String {
+    let cfg = EngineConfig {
+        policy: PolicyKind::MaceGpu,
+        scheduler,
+        admission,
+        duration_s: DURATION_S,
+        seed: SEED,
+        calib: calib(),
+        ..Default::default()
+    };
+    let profiler = EnergyProfiler::with_correctors(offline().clone(), || {
+        Box::new(EwmaCorrector::default())
+    });
+    let strs = streams();
+    let mut trace = TraceObserver::with_meta(TraceMeta::of(&cfg, &strs));
+    let mut engine = Engine::with_profiler(cfg, profiler);
+    let report = engine.run_observed(&strs, &mut [&mut trace]).unwrap();
+    trace.push_report_row(&report.row());
+    trace.to_jsonl()
+}
+
+fn golden_path(label: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests")
+        .join("golden")
+        .join(format!("replay_{label}.jsonl"))
+}
+
+fn compare_or_bootstrap(got: &str, path: &PathBuf) -> String {
+    let update = std::env::var("ADAOPER_UPDATE_GOLDEN").is_ok();
+    if update || !path.exists() {
+        std::fs::write(path, got).expect("write golden trace");
+        eprintln!(
+            "golden trace {} {} — commit it",
+            path.display(),
+            if update { "updated" } else { "bootstrapped" }
+        );
+        return got.to_string();
+    }
+    let want = std::fs::read_to_string(path).expect("read golden trace");
+    assert_eq!(
+        got, want,
+        "captured trace {} diverged from snapshot (set ADAOPER_UPDATE_GOLDEN=1 to re-capture \
+         after an intentional behavior change)",
+        path.display()
+    );
+    want
+}
+
+#[test]
+fn replay_reproduces_recorded_report_rows() {
+    for (label, sched, adm) in cells() {
+        let got = capture(sched, adm);
+        let stored = compare_or_bootstrap(&got, &golden_path(&label));
+
+        // replay the *stored* trace: reconstruct the config from its
+        // header and feed the recorded arrivals back through the kernel
+        let outcome = replay_str(&stored).unwrap_or_else(|e| panic!("cell {label}: {e:#}"));
+        assert!(
+            outcome.arrivals > 0,
+            "cell {label}: trace carried no arrivals"
+        );
+        assert_eq!(
+            outcome.matches(),
+            Some(true),
+            "cell {label}: replayed row diverged\n  recorded: {}\n  replayed: {}",
+            outcome.recorded_row.as_deref().unwrap_or("<none>"),
+            outcome.row
+        );
+    }
+}
+
+#[test]
+fn replay_rejects_headerless_traces() {
+    // legacy traces (TraceObserver::new) carry no header and must be
+    // turned away with guidance, not a panic or a garbage run
+    let err = replay_str("{\"id\":0,\"stream\":0,\"arrival_s\":0.1,\"deadline_s\":0.2,\"shed\":false}\n")
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("trace_header"), "unexpected error: {err}");
+}

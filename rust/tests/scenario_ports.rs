@@ -1,0 +1,120 @@
+//! The four ablation scenarios ported onto declarative specs must
+//! reproduce the hand-written configurations exactly: running the spec
+//! under `scenarios/` yields a report row byte-identical to the row from
+//! an `EngineConfig` (or `FleetRunConfig`) constructed in code, and the
+//! spec's `[expect]` bounds hold.
+
+use std::path::{Path, PathBuf};
+
+use adaoper::config::schema::{ConditionKind, PolicyKind, SchedulerKind};
+use adaoper::coordinator::{AdmissionPolicy, Engine, EngineConfig, StreamSpec};
+use adaoper::fleet::{run_fleet, FleetRunConfig};
+use adaoper::graph::zoo;
+use adaoper::scenario;
+use adaoper::workload::Arrival;
+
+fn spec_src(file: &str) -> String {
+    let path: PathBuf =
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("scenarios").join(file);
+    std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("reading {}: {e}", path.display()))
+}
+
+fn base_cfg(duration_s: f64, seed: u64, samples: usize, trees: usize) -> EngineConfig {
+    let mut cfg = EngineConfig {
+        policy: PolicyKind::AdaOper,
+        condition: ConditionKind::Moderate,
+        duration_s,
+        seed,
+        ..EngineConfig::default()
+    };
+    cfg.calib.samples = samples;
+    cfg.calib.seed = 42;
+    cfg.calib.gbdt.trees = trees;
+    cfg
+}
+
+fn stream(id: usize, model: &str, arrival: &str, hz: f64, slo_ms: f64) -> StreamSpec {
+    StreamSpec::new(
+        id,
+        zoo::by_name(model).unwrap(),
+        Arrival::parse(arrival, hz, 0.0).unwrap(),
+        slo_ms / 1e3,
+    )
+}
+
+#[test]
+fn cache_port_matches_hand_written_row() {
+    let outcome = scenario::run_str(&spec_src("cache_recurrence.toml")).unwrap();
+
+    let mut cfg = base_cfg(2.0, 7, 1200, 40);
+    cfg.plan_cache.capacity = 32;
+    cfg.plan_cache.util_bucket = 0.5;
+    cfg.plan_cache.freq_bucket_hz = 50.0 * 1e6;
+    cfg.condition_timeline = vec![
+        (0.5, ConditionKind::High),
+        (1.0, ConditionKind::Moderate),
+        (1.5, ConditionKind::High),
+    ];
+    let streams = vec![
+        stream(0, "yolov2-tiny", "poisson", 10.0, 500.0),
+        stream(1, "mobilenetv1", "poisson", 10.0, 500.0),
+    ];
+    let report = Engine::new(cfg).run(&streams).unwrap();
+
+    assert_eq!(outcome.row, report.row(), "spec-lowered row diverged from hand-written config");
+    assert!(outcome.passed(), "expect bounds failed: {:?}", outcome.checks);
+}
+
+#[test]
+fn scheduler_port_matches_hand_written_row() {
+    let outcome = scenario::run_str(&spec_src("scheduler_overload.toml")).unwrap();
+
+    let mut cfg = base_cfg(1.2, 11, 1200, 40);
+    cfg.scheduler = SchedulerKind::Edf;
+    cfg.admission = AdmissionPolicy::DropLate;
+    let streams = vec![stream(0, "yolov2-tiny", "poisson", 40.0, 120.0)];
+    let report = Engine::new(cfg).run(&streams).unwrap();
+
+    assert_eq!(outcome.row, report.row(), "spec-lowered row diverged from hand-written config");
+    assert!(outcome.passed(), "expect bounds failed: {:?}", outcome.checks);
+}
+
+#[test]
+fn batching_port_matches_hand_written_row() {
+    let outcome = scenario::run_str(&spec_src("batching_burst.toml")).unwrap();
+
+    let mut cfg = base_cfg(1.5, 13, 1200, 40);
+    cfg.scheduler = SchedulerKind::Edf;
+    cfg.batching.policy = adaoper::config::schema::BatchPolicyKind::Slack;
+    cfg.batching.max = 4;
+    cfg.batching.wait_s = 4.0 / 1e3;
+    let streams = vec![stream(0, "yolov2-tiny", "mmpp", 30.0, 300.0)];
+    let report = Engine::new(cfg).run(&streams).unwrap();
+
+    assert_eq!(outcome.row, report.row(), "spec-lowered row diverged from hand-written config");
+    assert!(outcome.passed(), "expect bounds failed: {:?}", outcome.checks);
+}
+
+#[test]
+fn fleet_port_matches_hand_written_render() {
+    let outcome = scenario::run_str(&spec_src("fleet_scale.toml")).unwrap();
+
+    let mut fcfg = FleetRunConfig {
+        devices: 6,
+        threads: 4,
+        seed: 7,
+        duration_s: 1.0,
+        policy: PolicyKind::AdaOper,
+        scheduler: SchedulerKind::Edf,
+        admission: AdmissionPolicy::AdmitAll,
+        ..FleetRunConfig::default()
+    };
+    fcfg.calib.samples = 900;
+    fcfg.calib.seed = 42;
+    fcfg.calib.gbdt.trees = 30;
+    let report = run_fleet(&fcfg).unwrap();
+
+    assert_eq!(outcome.row, report.render(), "spec-lowered fleet render diverged");
+    assert!(outcome.passed(), "expect bounds failed: {:?}", outcome.checks);
+}

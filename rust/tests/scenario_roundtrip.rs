@@ -1,0 +1,125 @@
+//! Round-trip property test: for random valid scenario specs, emitting
+//! the spec back to TOML and re-parsing must lower to an identical
+//! `EngineConfig` (witnessed by the trace-header fingerprint — floats are
+//! printed shortest-round-trip, so equality is exact) and, when run,
+//! produce a byte-identical report row.
+
+use adaoper::config::schema::{
+    AdmissionKind, BatchPolicyKind, ConditionKind, PolicyKind, SchedulerKind,
+};
+use adaoper::coordinator::Engine;
+use adaoper::scenario::spec::{
+    BatchDef, CacheDef, CalibDef, ObjectiveDef, ScenarioSpec, StreamDef, TimelineDef,
+};
+use adaoper::scenario::{fingerprint, lower, parse_spec, ExpectBound, ExpectKey};
+use adaoper::util::Prng;
+
+const MODELS: &[&str] = &["yolov2-tiny", "mobilenetv1", "tiny-exec"];
+const ARRIVALS: &[&str] = &["poisson", "periodic", "mmpp"];
+
+fn random_spec(rng: &mut Prng, tag: usize) -> ScenarioSpec {
+    let duration_s = 1.0;
+    let scheduler = *rng.choose(&SchedulerKind::all());
+    let admission = *rng.choose(&AdmissionKind::all());
+    let queue_limit =
+        if admission == AdmissionKind::Bounded { Some(2 + rng.below(3)) } else { None };
+    let policy = *rng.choose(&[PolicyKind::AdaOper, PolicyKind::MaceGpu, PolicyKind::AllCpu]);
+    let objective = match rng.below(3) {
+        0 => ObjectiveDef::MinEdp,
+        1 => ObjectiveDef::MinLatency,
+        _ => ObjectiveDef::MinEnergySlo { slo_ms: rng.range(150.0, 600.0) },
+    };
+    let batching = match rng.below(3) {
+        0 => BatchDef::default(),
+        1 => BatchDef { policy: BatchPolicyKind::Fixed, max: 2 + rng.below(3), wait_ms: rng.range(1.0, 6.0) },
+        _ => BatchDef { policy: BatchPolicyKind::Slack, max: 2 + rng.below(3), wait_ms: rng.range(1.0, 6.0) },
+    };
+
+    let n_streams = 1 + rng.below(2);
+    let mut stream_names = Vec::new();
+    let mut streams = Vec::new();
+    for i in 0..n_streams {
+        let arrival = rng.choose(ARRIVALS).to_string();
+        let jitter = if arrival == "periodic" { Some(rng.range(0.0, 0.3)) } else { None };
+        let name = format!("s{i}");
+        stream_names.push(name.clone());
+        streams.push(StreamDef {
+            name,
+            model: rng.choose(MODELS).to_string(),
+            arrival,
+            rate_hz: rng.range(8.0, 25.0),
+            jitter,
+            slo_ms: rng.range(150.0, 600.0),
+        });
+    }
+
+    let mut timeline = Vec::new();
+    let n_boundaries = rng.below(3);
+    for (i, frac) in [0.3, 0.7].iter().enumerate().take(n_boundaries) {
+        timeline.push(TimelineDef {
+            label: format!("t{i}"),
+            // distinct by construction: 0.3 vs 0.7 of the horizon, jittered
+            // within non-overlapping windows
+            at_s: duration_s * (frac + rng.range(-0.1, 0.1)),
+            condition: *rng.choose(&[ConditionKind::Idle, ConditionKind::High]),
+        });
+    }
+
+    ScenarioSpec {
+        name: format!("roundtrip-{tag}"),
+        duration_s,
+        seed: rng.below(1_000_000) as u64,
+        policy,
+        objective,
+        scheduler,
+        admission,
+        queue_limit,
+        condition: *rng.choose(&[ConditionKind::Moderate, ConditionKind::High]),
+        stream_names,
+        streams,
+        timeline,
+        calib: CalibDef { samples: 900, seed: 42, trees: 25 },
+        batching,
+        plan_cache: CacheDef::default(),
+        fleet: None,
+        expect: vec![
+            ExpectBound { key: ExpectKey::RequestsMin, bound: 0.0 },
+            ExpectBound { key: ExpectKey::MissPctMax, bound: 100.0 },
+        ],
+    }
+}
+
+#[test]
+fn emit_reparse_lower_is_identity() {
+    // structural identity across many samples (no engine runs: cheap)
+    let mut rng = Prng::new(0x5CE7A810);
+    for tag in 0..24 {
+        let spec = random_spec(&mut rng, tag);
+        let emitted = spec.emit();
+        let reparsed = parse_spec(&emitted)
+            .unwrap_or_else(|e| panic!("emitted spec failed to re-parse: {e}\n{emitted}"));
+        assert_eq!(spec, reparsed, "decode(emit(spec)) != spec\n{emitted}");
+
+        let a = lower(&spec).unwrap();
+        let b = lower(&reparsed).unwrap();
+        assert_eq!(fingerprint(&a), fingerprint(&b), "lowered configs diverged\n{emitted}");
+    }
+}
+
+#[test]
+fn reparsed_spec_runs_byte_identically() {
+    // end-to-end: run both lowerings and compare report rows exactly
+    let mut rng = Prng::new(0x5CE7A811);
+    for tag in 0..2 {
+        let spec = random_spec(&mut rng, tag);
+        let reparsed = parse_spec(&spec.emit()).unwrap();
+
+        let a = lower(&spec).unwrap();
+        let b = lower(&reparsed).unwrap();
+        assert_eq!(fingerprint(&a), fingerprint(&b));
+
+        let row_a = Engine::new(a.cfg.clone()).run(&a.streams).unwrap().row();
+        let row_b = Engine::new(b.cfg.clone()).run(&b.streams).unwrap().row();
+        assert_eq!(row_a, row_b, "re-emitted spec ran differently (tag {tag})");
+    }
+}

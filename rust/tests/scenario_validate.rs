@@ -1,0 +1,287 @@
+//! Validator diagnostics suite: malformed scenario specs must be
+//! rejected with errors that *name the offending section and key* —
+//! never a panic, never a context-free message. Each case corrupts one
+//! aspect of a known-good base spec and asserts the diagnostic points at
+//! it.
+
+use adaoper::scenario::parse_spec;
+
+const BASE: &str = "\
+[scenario]
+name = \"base\"
+duration_s = 2.0
+seed = 7
+policy = \"adaoper\"
+scheduler = \"fifo\"
+admission = \"admit-all\"
+condition = \"moderate\"
+streams = [\"cam\"]
+
+[stream.cam]
+model = \"yolov2-tiny\"
+arrival = \"poisson\"
+rate_hz = 30.0
+slo_ms = 250.0
+";
+
+/// The base spec itself must be valid — otherwise every case below is
+/// vacuous.
+#[test]
+fn base_spec_is_valid() {
+    parse_spec(BASE).unwrap();
+}
+
+fn err_of(src: &str) -> String {
+    match parse_spec(src) {
+        Ok(_) => panic!("spec unexpectedly valid:\n{src}"),
+        Err(e) => e.to_string(),
+    }
+}
+
+/// Corrupt BASE by replacing one line, return the diagnostic.
+fn err_replacing(from: &str, to: &str) -> String {
+    assert!(BASE.contains(from), "base spec lacks `{from}`");
+    err_of(&BASE.replace(from, to))
+}
+
+fn assert_names(err: &str, needles: &[&str]) {
+    for n in needles {
+        assert!(err.contains(n), "error does not name `{n}`: {err}");
+    }
+}
+
+#[test]
+fn missing_scenario_section() {
+    let src = BASE.replace("[scenario]", "[calib]").replace("name = \"base\"", "samples = 900");
+    // everything that was in [scenario] is now an unknown [calib] key, or
+    // the [scenario] section is simply absent — either way the error
+    // must name the offending place
+    let err = err_of(&src);
+    assert!(err.contains("scenario") || err.contains("calib"), "unhelpful error: {err}");
+}
+
+#[test]
+fn missing_name() {
+    let err = err_replacing("name = \"base\"", "");
+    assert_names(&err, &["[scenario]", "name", "missing"]);
+}
+
+#[test]
+fn zero_duration() {
+    let err = err_replacing("duration_s = 2.0", "duration_s = 0.0");
+    assert_names(&err, &["[scenario]", "duration_s", "> 0"]);
+}
+
+#[test]
+fn negative_duration_carries_line_number() {
+    let err = err_replacing("duration_s = 2.0", "duration_s = -1.5");
+    assert_names(&err, &["[scenario]", "duration_s", "line 3"]);
+}
+
+#[test]
+fn unknown_policy() {
+    let err = err_replacing("policy = \"adaoper\"", "policy = \"warp-drive\"");
+    assert_names(&err, &["[scenario]", "policy"]);
+}
+
+#[test]
+fn unknown_scheduler() {
+    let err = err_replacing("scheduler = \"fifo\"", "scheduler = \"lifo\"");
+    assert_names(&err, &["[scenario]", "scheduler"]);
+}
+
+#[test]
+fn unknown_admission() {
+    let err = err_replacing("admission = \"admit-all\"", "admission = \"sometimes\"");
+    assert_names(&err, &["[scenario]", "admission"]);
+}
+
+#[test]
+fn unknown_condition() {
+    let err = err_replacing("condition = \"moderate\"", "condition = \"melting\"");
+    assert_names(&err, &["[scenario]", "condition"]);
+}
+
+#[test]
+fn empty_stream_list() {
+    let src = BASE
+        .replace("streams = [\"cam\"]", "streams = []")
+        .replace("[stream.cam]", "")
+        .replace("model = \"yolov2-tiny\"", "")
+        .replace("arrival = \"poisson\"", "")
+        .replace("rate_hz = 30.0", "")
+        .replace("slo_ms = 250.0", "");
+    let err = err_of(&src);
+    assert_names(&err, &["[scenario]", "streams"]);
+}
+
+#[test]
+fn dangling_stream_ref() {
+    let err = err_replacing("streams = [\"cam\"]", "streams = [\"cam\", \"ghost\"]");
+    assert_names(&err, &["[scenario]", "streams", "ghost"]);
+}
+
+#[test]
+fn duplicate_stream_ref() {
+    let err = err_replacing("streams = [\"cam\"]", "streams = [\"cam\", \"cam\"]");
+    assert_names(&err, &["[scenario]", "streams", "twice"]);
+}
+
+#[test]
+fn orphan_stream_section() {
+    let src = format!(
+        "{BASE}\n[stream.orphan]\nmodel = \"mobilenetv1\"\narrival = \"poisson\"\n\
+         rate_hz = 5.0\nslo_ms = 400.0\n"
+    );
+    let err = err_of(&src);
+    assert_names(&err, &["[stream.orphan]", "not listed"]);
+}
+
+#[test]
+fn unknown_model() {
+    let err = err_replacing("model = \"yolov2-tiny\"", "model = \"gpt-17\"");
+    assert_names(&err, &["[stream.cam]", "model", "gpt-17"]);
+}
+
+#[test]
+fn unknown_arrival_kind() {
+    let err = err_replacing("arrival = \"poisson\"", "arrival = \"quantum\"");
+    assert_names(&err, &["[stream.cam]", "arrival", "quantum"]);
+}
+
+#[test]
+fn non_positive_rate() {
+    let err = err_replacing("rate_hz = 30.0", "rate_hz = 0.0");
+    assert_names(&err, &["[stream.cam]", "rate_hz", "> 0"]);
+}
+
+#[test]
+fn jitter_on_non_periodic_arrival() {
+    let err = err_replacing("rate_hz = 30.0", "rate_hz = 30.0\njitter = 0.1");
+    assert_names(&err, &["[stream.cam]", "jitter", "periodic"]);
+}
+
+#[test]
+fn jitter_out_of_range() {
+    let src = BASE
+        .replace("arrival = \"poisson\"", "arrival = \"periodic\"")
+        .replace("rate_hz = 30.0", "rate_hz = 30.0\njitter = 1.5");
+    let err = err_of(&src);
+    assert_names(&err, &["[stream.cam]", "jitter", "[0, 1]"]);
+}
+
+#[test]
+fn unsatisfiable_slo() {
+    let err = err_replacing("slo_ms = 250.0", "slo_ms = 0.2");
+    assert_names(&err, &["[stream.cam]", "slo_ms", "unsatisfiable"]);
+}
+
+#[test]
+fn timeline_entry_past_horizon() {
+    let src = format!("{BASE}\n[timeline.late]\nat_s = 5.0\ncondition = \"high\"\n");
+    let err = err_of(&src);
+    assert_names(&err, &["[timeline.late]", "at_s"]);
+}
+
+#[test]
+fn overlapping_timeline_entries() {
+    let src = format!(
+        "{BASE}\n[timeline.a]\nat_s = 1.0\ncondition = \"high\"\n\
+         \n[timeline.b]\nat_s = 1.0\ncondition = \"idle\"\n"
+    );
+    let err = err_of(&src);
+    assert_names(&err, &["at_s", "overlaps"]);
+}
+
+#[test]
+fn unknown_key_in_scenario() {
+    let err = err_replacing("seed = 7", "seed = 7\nwarp_factor = 9");
+    assert_names(&err, &["[scenario]", "warp_factor", "unknown key"]);
+}
+
+#[test]
+fn unknown_section() {
+    let err = err_of(&format!("{BASE}\n[telemetry]\nenabled = true\n"));
+    assert_names(&err, &["telemetry", "unknown section"]);
+}
+
+#[test]
+fn unknown_expect_key() {
+    let err = err_of(&format!("{BASE}\n[expect]\nvibes_min = 1.0\n"));
+    assert_names(&err, &["[expect]", "vibes_min"]);
+}
+
+#[test]
+fn negative_expect_bound() {
+    let err = err_of(&format!("{BASE}\n[expect]\nmiss_pct_max = -1.0\n"));
+    assert_names(&err, &["[expect]", "miss_pct_max", ">= 0"]);
+}
+
+#[test]
+fn zero_batch_cap() {
+    let err = err_of(&format!("{BASE}\n[batching]\npolicy = \"fixed\"\nmax = 0\n"));
+    assert_names(&err, &["[batching]", "max", ">= 1"]);
+}
+
+#[test]
+fn bounded_admission_without_queue_limit() {
+    let err = err_replacing("admission = \"admit-all\"", "admission = \"bounded\"");
+    assert_names(&err, &["[scenario]", "queue_limit", "bounded"]);
+}
+
+#[test]
+fn queue_limit_without_bounded_admission() {
+    let err = err_replacing("seed = 7", "seed = 7\nqueue_limit = 4");
+    assert_names(&err, &["[scenario]", "queue_limit", "bounded"]);
+}
+
+#[test]
+fn mistyped_value() {
+    let err = err_replacing("duration_s = 2.0", "duration_s = \"fast\"");
+    assert_names(&err, &["[scenario]", "duration_s", "number"]);
+}
+
+#[test]
+fn objective_slo_without_slo_objective() {
+    let err = err_replacing("seed = 7", "seed = 7\nobjective_slo_ms = 100.0");
+    assert_names(&err, &["[scenario]", "objective_slo_ms", "min-energy-slo"]);
+}
+
+#[test]
+fn fleet_with_stream_sections() {
+    let err = err_of(&format!("{BASE}\n[fleet]\ndevices = 4\nthreads = 2\n"));
+    assert_names(&err, &["[stream.cam]", "fleet"]);
+}
+
+#[test]
+fn fleet_with_unsupported_expect_key() {
+    let src = "\
+[scenario]
+name = \"f\"
+duration_s = 1.0
+
+[fleet]
+devices = 4
+threads = 2
+
+[expect]
+cache_hit_pct_min = 1.0
+";
+    let err = err_of(src);
+    assert_names(&err, &["[expect]", "cache_hit_pct_min", "fleet"]);
+}
+
+#[test]
+fn zero_fleet_devices() {
+    let src = "\
+[scenario]
+name = \"f\"
+duration_s = 1.0
+
+[fleet]
+devices = 0
+threads = 2
+";
+    let err = err_of(src);
+    assert_names(&err, &["[fleet]", "devices", ">= 1"]);
+}
