@@ -3,7 +3,7 @@
 
 CARGO_DIR := rust
 
-.PHONY: verify build test fmt fmt-check clippy bench-build doc smoke scenarios all
+.PHONY: verify build test fmt fmt-check clippy bench-build bench-hot bench-hot-smoke doc smoke scenarios all
 
 # Tier-1 gate: release build + full test suite.
 verify:
@@ -26,6 +26,16 @@ clippy:
 
 bench-build:
 	cd $(CARGO_DIR) && cargo bench --no-run
+
+# Full hot-loop throughput run; appends one JSON record to the committed
+# trajectory file at the repo root (see BENCH_hot_loop.json header line).
+bench-hot:
+	cd $(CARGO_DIR) && ADAOPER_BENCH_JSON=../BENCH_hot_loop.json cargo bench --bench engine_hot_loop
+
+# Quick-mode smoke of the same bench (small calibration budget, no file
+# append) — CI runs this so the bench and its JSON emitter cannot rot.
+bench-hot-smoke:
+	cd $(CARGO_DIR) && ADAOPER_BENCH_QUICK=1 cargo bench --bench engine_hot_loop
 
 doc:
 	cd $(CARGO_DIR) && RUSTDOCFLAGS="-D warnings" cargo doc --no-deps

@@ -9,8 +9,20 @@
 //! placement/remaining-work lookups between picks instead of rebuilding
 //! the full candidate set from the plan tables on every loop iteration.
 //!
-//! `ADAOPER_BENCH_QUICK=1` shrinks the calibration budget.
+//! Calendar-kernel regression note (PR 7): this bench also guards the
+//! O(1) calendar event queue (vs the old binary heap), the arena-recycled
+//! per-request `out_cpu` buffers, the removal of the per-dispatch
+//! `Request` clone and per-completion `RequestOutcome` clone, and the
+//! memoized latency-profile refresh in `PlanTable::refresh_profiles`.
+//! Any of these sliding back shows up here first.
+//!
+//! `ADAOPER_BENCH_QUICK=1` shrinks the calibration budget. The run
+//! always ends with one machine-readable JSON summary line on stdout;
+//! set `ADAOPER_BENCH_JSON=<path>` to also append that line to a file
+//! (the committed trajectory lives in `BENCH_hot_loop.json` at the repo
+//! root — see `make bench-hot`).
 
+use std::io::Write as _;
 use std::time::Instant;
 
 use adaoper::config::schema::{PolicyKind, SchedulerKind};
@@ -84,11 +96,32 @@ fn main() {
     }
     rates.sort_by(|a, b| a.total_cmp(b));
     let mean = rates.iter().sum::<f64>() / rates.len() as f64;
+    let min = rates.first().copied().unwrap_or(0.0);
+    let max = rates.last().copied().unwrap_or(0.0);
     println!(
-        "events/sec: mean {:.0}, min {:.0}, max {:.0} over {} iters",
-        mean,
-        rates.first().copied().unwrap_or(0.0),
-        rates.last().copied().unwrap_or(0.0),
+        "events/sec: mean {mean:.0}, min {min:.0}, max {max:.0} over {} iters",
         rates.len()
     );
+
+    // One machine-readable line for the recorded trajectory. Plain
+    // format! keeps this dependency-free; none of the fields need
+    // escaping.
+    let json = format!(
+        "{{\"bench\":\"engine_hot_loop\",\"mode\":\"{}\",\"seed\":7,\
+         \"iters\":{},\"duration_s\":{duration_s},\
+         \"events_per_sec_mean\":{mean:.1},\"events_per_sec_min\":{min:.1},\
+         \"events_per_sec_max\":{max:.1}}}",
+        if quick { "quick" } else { "full" },
+        rates.len()
+    );
+    println!("{json}");
+    if let Ok(path) = std::env::var("ADAOPER_BENCH_JSON") {
+        let mut f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&path)
+            .unwrap_or_else(|e| panic!("open {path}: {e}"));
+        writeln!(f, "{json}").expect("append bench record");
+        println!("appended record to {path}");
+    }
 }

@@ -35,6 +35,7 @@ use crate::profiler::calibrate::{calibrate_on, CalibConfig};
 use crate::profiler::corrector::{Corrector, EwmaCorrector};
 use crate::profiler::monitor::ResourceMonitor;
 use crate::profiler::EnergyProfiler;
+use crate::sim::arena::RequestArena;
 use crate::sim::event::Event;
 use crate::sim::observer::{emit, emit_done, SimObserver};
 use crate::sim::queue::EventQueue;
@@ -156,6 +157,7 @@ pub struct Engine {
     monitor: ResourceMonitor,
     plan_cache: PlanCache,
     numerics: Option<NumericsHook>,
+    arena: RequestArena,
 }
 
 impl Engine {
@@ -200,6 +202,7 @@ impl Engine {
             monitor: ResourceMonitor::default(),
             plan_cache,
             numerics: None,
+            arena: RequestArena::new(),
         }
     }
 
@@ -212,6 +215,25 @@ impl Engine {
     /// Install the per-op numerics hook (real HLO execution).
     pub fn set_numerics_hook(&mut self, hook: NumericsHook) {
         self.numerics = Some(hook);
+    }
+
+    /// Install a (possibly warm) request-state arena. Reusing a prior
+    /// engine's arena carries its buffer pool across engines — recycled
+    /// buffers are fully overwritten on allocation, so results are
+    /// byte-identical either way (pinned by `tests/arena_recycle.rs`).
+    pub fn set_arena(&mut self, arena: RequestArena) {
+        self.arena = arena;
+    }
+
+    /// Take the arena out of the engine (e.g. to transplant its warm
+    /// buffer pool into the next engine), leaving an empty one behind.
+    pub fn take_arena(&mut self) -> RequestArena {
+        std::mem::take(&mut self.arena)
+    }
+
+    /// Arena lifetime counters: `(buffers handed out, of which recycled)`.
+    pub fn arena_stats(&self) -> (usize, usize) {
+        self.arena.stats()
     }
 
     /// Swap the device's workload condition mid-run-boundary (the
@@ -610,6 +632,9 @@ impl Engine {
         let mut admission = AdmissionStage::new(self.cfg.admission);
         let mut dispatch = DispatchStage::new(self.cfg.scheduler);
         let mut exec = ExecStage::new();
+        // borrow the engine-lifetime buffer pool for this run (restored
+        // before returning so its warm buffers survive across runs)
+        let mut arena = std::mem::take(&mut self.arena);
         let mut monitor = MonitorStage::new(self.cfg.monitor_period_s);
         // `None` with batching disabled: the legacy single-dispatch path
         // below then runs statement-for-statement unchanged
@@ -638,7 +663,7 @@ impl Engine {
                     Some((_, Event::Arrival { req, .. })) => {
                         let now = self.device.time_s();
                         self.admit_one(req, streams, &plans, &mut admission, &mut exec,
-                            &mut dispatch, now, observers);
+                            &mut dispatch, now, &mut arena, observers);
                     }
                     _ => break,
                 }
@@ -659,7 +684,7 @@ impl Engine {
                 if let Some((_, Event::Arrival { req, .. })) = queue.pop() {
                     let now = self.device.time_s();
                     self.admit_one(req, streams, &plans, &mut admission, &mut exec,
-                        &mut dispatch, now, observers);
+                        &mut dispatch, now, &mut arena, observers);
                 }
                 continue; // re-evaluate (with the newcomer, or the next arrival)
             }
@@ -760,7 +785,7 @@ impl Engine {
                 let mut done = formed.members.clone();
                 done.sort_unstable_by(|a, b| b.cmp(a));
                 for ai in done {
-                    if let Some(outcome) = exec.complete_if_done(ai) {
+                    if let Some(outcome) = exec.complete_if_done(ai, &mut arena) {
                         dispatch.note_removed(ai);
                         let met = outcome.met_deadline();
                         emit_done(observers, &outcome, met);
@@ -801,13 +826,14 @@ impl Engine {
             }
 
             // completion
-            if let Some(outcome) = exec.complete_if_done(d.active_idx) {
+            if let Some(outcome) = exec.complete_if_done(d.active_idx, &mut arena) {
                 dispatch.note_removed(d.active_idx);
                 let met = outcome.met_deadline();
                 emit_done(observers, &outcome, met);
             }
         }
         let batch_stats = batcher.as_ref().map(|b| b.stats());
+        self.arena = arena;
         Ok(self.assemble_report(
             streams, &exec, &admission, dispatch.name(), total, batch_stats,
         ))
@@ -825,9 +851,9 @@ impl Engine {
         exec: &mut ExecStage,
         dispatch: &mut DispatchStage,
         now_s: f64,
+        arena: &mut RequestArena,
         observers: &mut [&mut dyn SimObserver],
     ) {
-        let ev_req = req.clone();
         let admitted = match admission.try_admit(
             req,
             streams,
@@ -835,6 +861,7 @@ impl Engine {
             exec.active(),
             exec.avail(),
             now_s,
+            arena,
         ) {
             Some(a) => {
                 exec.admit(a);
@@ -843,7 +870,7 @@ impl Engine {
             }
             None => false,
         };
-        emit(observers, &Event::Arrival { req: ev_req, admitted });
+        emit(observers, &Event::Arrival { req, admitted });
     }
 
     /// Fold the stages' final state into the serving report.

@@ -31,7 +31,7 @@ impl StreamSpec {
 }
 
 /// One inference request.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Copy)]
 pub struct Request {
     /// Globally unique request id.
     pub id: usize,
@@ -44,7 +44,7 @@ pub struct Request {
 }
 
 /// Completed-request record.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Copy)]
 pub struct RequestOutcome {
     /// The request this outcome belongs to.
     pub request: Request,

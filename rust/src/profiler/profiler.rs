@@ -46,6 +46,16 @@ pub trait CostModel {
     ) -> OpCost {
         crate::batching::cost::scale_op_cost(&self.predict(op, placement, ctx, snap), batch)
     }
+
+    /// Version of the model's *internal* correction state: two calls to
+    /// `predict` with identical arguments and identical versions are
+    /// guaranteed to return identical costs, so callers may memoize
+    /// predictions keyed on `(inputs, version)`. `None` (the default)
+    /// means the model offers no such guarantee and callers must always
+    /// recompute — behavior-preserving for models that never opt in.
+    fn version(&self) -> Option<u64> {
+        None
+    }
 }
 
 /// Oracle cost model: the device itself (planning with ground truth).
@@ -123,6 +133,11 @@ pub struct EnergyProfiler {
     /// Threshold above which `drifted()` reports true.
     pub drift_threshold: f64,
     observations: usize,
+    /// Correction-state version ([`CostModel::version`]): bumped whenever
+    /// any corrector factor actually changes value (bitwise) and on every
+    /// correction reset. With [`NullCorrector`]s the factors are constant,
+    /// so the version never moves and memoized predictions stay valid.
+    version: u64,
 }
 
 impl EnergyProfiler {
@@ -150,6 +165,7 @@ impl EnergyProfiler {
             drift_stat: Ewma::new(0.15),
             drift_threshold: 0.07,
             observations: 0,
+            version: 0,
         }
     }
 
@@ -297,6 +313,10 @@ impl EnergyProfiler {
         snap: &Snapshot,
         measured: &OpCost,
     ) {
+        // Correction factors before the update, to detect whether this
+        // observation actually moved any of them (NullCorrectors never
+        // move — their memo version must stay put).
+        let factors_before = self.correction_factors();
         // Residual of the prediction as made (pre-update correction).
         let pred = self.compose(op, placement, ctx, snap);
         let re_total = (measured.energy_j.max(1e-12) / pred.energy_j.max(1e-12))
@@ -364,6 +384,20 @@ impl EnergyProfiler {
         }
         // correction factors changed → cached bases are stale
         self.base_cache.borrow_mut().0 = None;
+        if self.correction_factors() != factors_before {
+            self.version += 1;
+        }
+    }
+
+    /// Bitwise identity of the four correction factors (cpu/gpu ×
+    /// latency/energy) — what [`CostModel::version`] tracks.
+    fn correction_factors(&self) -> [u64; 4] {
+        [
+            self.corr[0].latency.factor().to_bits(),
+            self.corr[0].energy.factor().to_bits(),
+            self.corr[1].latency.factor().to_bits(),
+            self.corr[1].energy.factor().to_bits(),
+        ]
     }
 
     /// True when recent prediction residuals exceed the threshold — the
@@ -388,6 +422,9 @@ impl EnergyProfiler {
         self.base_cache.borrow_mut().0 = None;
         self.drift_stat = Ewma::new(0.15);
         self.observations = 0;
+        // resets always invalidate memoized predictions, even when the
+        // factors happen to land back on their previous values
+        self.version += 1;
     }
 
     /// Name of the installed corrector (`ewma`, `gru`, `null`).
@@ -405,6 +442,10 @@ impl CostModel for EnergyProfiler {
         snap: &Snapshot,
     ) -> OpCost {
         self.compose(op, placement, ctx, snap)
+    }
+
+    fn version(&self) -> Option<u64> {
+        Some(self.version)
     }
 }
 

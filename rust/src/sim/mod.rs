@@ -6,9 +6,16 @@
 //!
 //! * [`event`] — the typed event vocabulary (`Arrival`, `OpDispatch`,
 //!   `OpComplete`, `MonitorTick`, `RegimeReplan`).
-//! * [`queue`] — the `(time, seq)`-keyed [`queue::EventQueue`]:
-//!   NaN-safe ([`f64::total_cmp`]) min-ordering with push-order
-//!   tie-breaking.
+//! * [`queue`] — the `(time, seq)`-keyed [`queue::EventQueue`]: a
+//!   calendar (bucketed) queue, O(1) amortized for the near-future
+//!   events that dominate serving, with NaN-safe ([`f64::total_cmp`])
+//!   min-ordering and push-order tie-breaking. The binary-heap
+//!   predecessor survives as [`queue::BinaryHeapQueue`], the reference
+//!   side of the differential property suite
+//!   (`rust/tests/prop_event_queue.rs`).
+//! * [`arena`] — the [`arena::RequestArena`] buffer pool recycling
+//!   per-request `out_cpu` state across admissions (no hot-loop
+//!   allocations; byte-safety pinned by `rust/tests/arena_recycle.rs`).
 //! * [`observer`] — the [`observer::SimObserver`] hook surface
 //!   (`on_event` / `on_request_done`) plus [`observer::EventCounters`].
 //!   Adding a scenario means adding an observer.
@@ -36,14 +43,16 @@
 //! Golden replay of this contract is pinned by
 //! `rust/tests/golden_determinism.rs`.
 
+pub mod arena;
 pub mod event;
 pub mod observer;
 pub mod queue;
 pub mod stages;
 
+pub use arena::RequestArena;
 pub use event::{Event, EventKind};
 pub use observer::{EventCounters, SimObserver};
-pub use queue::EventQueue;
+pub use queue::{BinaryHeapQueue, EventQueue};
 pub use stages::{
     Active, AdmissionStage, ArrivalSource, Decision, DispatchStage, ExecStage, MonitorStage,
     PlanTable,

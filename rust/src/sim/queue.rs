@@ -1,11 +1,48 @@
 //! Deterministic discrete-event queue.
 //!
-//! A min-heap of [`Event`]s keyed by `(time, seq)`: earlier scheduled
-//! times pop first, and events scheduled for the *same* time pop in push
-//! order (`seq` is a monotonically increasing counter). Time comparison
-//! uses [`f64::total_cmp`], so a NaN timestamp cannot panic the kernel —
-//! it sorts after every finite time and drains last, exactly like the
+//! [`EventQueue`] is a **calendar queue**: a bucketed timing wheel over a
+//! window of "days" (buckets) starting at `year_start`, each `width`
+//! virtual seconds wide, with an overflow list for events outside the
+//! window. Near-future events — the serving kernel's entire live
+//! population once arrivals are seeded — push and pop in O(1) amortized,
+//! versus the binary heap's O(log n) per operation.
+//!
+//! The observable contract is identical to the heap it replaced (kept
+//! below as [`BinaryHeapQueue`] for the differential property suite,
+//! `rust/tests/prop_event_queue.rs`): entries pop in ascending
+//! `(time, seq)` order, where `seq` is a monotonic push counter — events
+//! scheduled for the *same* time pop in push order. Time comparison uses
+//! [`f64::total_cmp`], so a NaN timestamp cannot panic the kernel — it
+//! sorts after every finite time and drains last, exactly like the
 //! NaN-safe arrival sort the legacy engine used.
+//!
+//! ## Why the order is preserved exactly
+//!
+//! * Each bucket (and the overflow) is kept sorted **descending** by
+//!   `(total_cmp(time), seq)` with the minimum at the tail, so popping a
+//!   bucket's minimum is `Vec::pop`.
+//! * The day mapping `t ↦ ⌊(t − year_start)/width⌋` is monotone
+//!   non-decreasing in `t` (IEEE-754 subtraction, division by a positive
+//!   width, and truncation are all monotone), so
+//!   (bucket, time, seq) order ≡ global (time, seq) order.
+//! * Whether a time is bucketable is a pure function of `t` under the
+//!   current window geometry, so equal-time entries always land on the
+//!   same side of the bucket/overflow split and their `seq` tie-break is
+//!   never divided across it.
+//! * Every pop/peek compares the bucket minimum against the overflow
+//!   minimum with a forward `total_cmp`, which also orders `-inf` (a
+//!   non-bucketable time that sorts *before* all finite times) correctly.
+//!
+//! ## Window management
+//!
+//! Far-future events (≥ the window horizon), non-finite times, and NaN go
+//! to the sorted overflow list. When the buckets drain but finite
+//! overflow events remain, the calendar **re-anchors**: all entries are
+//! redistributed into a fresh window starting at the earliest finite
+//! time, with `width = span / population` and a power-of-two bucket count
+//! covering ~2× the span — so a drain cycle re-anchors O(1) times. A push
+//! before `year_start` (replay tooling may do this; the engine never
+//! does) triggers the same rebuild anchored at the pushed time.
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
@@ -20,42 +57,75 @@ struct Entry {
     event: Event,
 }
 
-impl PartialEq for Entry {
-    fn eq(&self, other: &Self) -> bool {
-        self.seq == other.seq
-    }
+/// Forward key order: ascending `(total_cmp(time), seq)`. `seq` is unique,
+/// so distinct entries never compare equal.
+fn cmp_entry(a: &Entry, b: &Entry) -> Ordering {
+    a.time_s.total_cmp(&b.time_s).then(a.seq.cmp(&b.seq))
 }
 
-impl Eq for Entry {}
-
-impl Ord for Entry {
-    fn cmp(&self, other: &Self) -> Ordering {
-        // reversed: BinaryHeap is a max-heap, we want the earliest
-        // (time, seq) on top
-        other
-            .time_s
-            .total_cmp(&self.time_s)
-            .then(other.seq.cmp(&self.seq))
-    }
+/// Insert into a descending-sorted vec (minimum at the tail), preserving
+/// the order. Binary search; no equal keys exist (`seq` is unique).
+fn insert_desc(v: &mut Vec<Entry>, e: Entry) {
+    let i = v.partition_point(|x| cmp_entry(x, &e) == Ordering::Greater);
+    v.insert(i, e);
 }
 
-impl PartialOrd for Entry {
-    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
-        Some(self.cmp(other))
-    }
-}
+/// Buckets on a fresh queue (before the first re-anchor).
+const INIT_BUCKETS: usize = 64;
+/// Bucket width on a fresh queue, seconds.
+const INIT_WIDTH: f64 = 1e-3;
+/// Narrowest bucket a rebuild may choose (guards a zero-span population).
+const MIN_WIDTH: f64 = 1e-9;
+/// Bucket-count bounds for a rebuild.
+const MIN_BUCKETS: usize = 64;
+/// Upper bound on buckets (memory guard for huge populations).
+const MAX_BUCKETS: usize = 65_536;
 
-/// Deterministic `(time, seq)`-ordered event queue.
-#[derive(Debug, Default)]
-pub struct EventQueue {
-    heap: BinaryHeap<Entry>,
+/// Deterministic `(time, seq)`-ordered calendar queue. See the module
+/// docs for the ordering contract and window management.
+#[derive(Debug)]
+pub struct CalendarQueue {
+    /// The day buckets, each sorted descending with its minimum at the
+    /// tail. Invariant: every bucket below `cursor` is empty.
+    buckets: Vec<Vec<Entry>>,
+    /// Start of the bucket window (inclusive), virtual seconds.
+    year_start: f64,
+    /// Width of one bucket, virtual seconds (> 0).
+    width: f64,
+    /// First possibly-non-empty bucket.
+    cursor: usize,
+    /// Entries currently held in `buckets`.
+    in_buckets: usize,
+    /// Out-of-window entries (far-future, non-finite, NaN), sorted
+    /// descending with the minimum at the tail.
+    overflow: Vec<Entry>,
+    /// Monotonic push counter (the tie-break key).
     next_seq: u64,
 }
 
-impl EventQueue {
-    /// Empty queue.
-    pub fn new() -> EventQueue {
-        EventQueue::default()
+/// The event queue the kernel schedules on (the calendar implementation).
+pub type EventQueue = CalendarQueue;
+
+impl Default for CalendarQueue {
+    fn default() -> Self {
+        CalendarQueue::new()
+    }
+}
+
+impl CalendarQueue {
+    /// Empty queue with the initial window geometry.
+    pub fn new() -> CalendarQueue {
+        let mut buckets = Vec::with_capacity(INIT_BUCKETS);
+        buckets.resize_with(INIT_BUCKETS, Vec::new);
+        CalendarQueue {
+            buckets,
+            year_start: 0.0,
+            width: INIT_WIDTH,
+            cursor: 0,
+            in_buckets: 0,
+            overflow: Vec::new(),
+            next_seq: 0,
+        }
     }
 
     /// Schedule `event` at `time_s`. Ties at equal `time_s` pop in push
@@ -63,28 +133,261 @@ impl EventQueue {
     pub fn push(&mut self, time_s: f64, event: Event) {
         let seq = self.next_seq;
         self.next_seq += 1;
-        self.heap.push(Entry { time_s, seq, event });
+        self.insert(Entry {
+            time_s,
+            seq,
+            event,
+        });
     }
 
     /// Pop the earliest entry as `(time, event)`.
     pub fn pop(&mut self) -> Option<(f64, Event)> {
-        self.heap.pop().map(|e| (e.time_s, e.event))
+        self.settle();
+        let from_bucket = match (self.in_buckets > 0, self.overflow.last()) {
+            (false, None) => return None,
+            (true, None) => true,
+            (false, Some(_)) => false,
+            (true, Some(o)) => {
+                let b = self.buckets[self.cursor].last().expect("cursor settled");
+                // finite overflow times sit at/after the horizon, so the
+                // bucket side wins; a -inf/-NaN overflow time wins here
+                cmp_entry(b, o) == Ordering::Less
+            }
+        };
+        let e = if from_bucket {
+            self.in_buckets -= 1;
+            self.buckets[self.cursor].pop().expect("cursor settled")
+        } else {
+            self.overflow.pop().expect("checked non-empty")
+        };
+        Some((e.time_s, e.event))
     }
 
-    /// Scheduled time of the earliest entry, if any.
-    pub fn peek_time(&self) -> Option<f64> {
-        self.heap.peek().map(|e| e.time_s)
+    /// Scheduled time of the earliest entry, if any. (`&mut`: peeking may
+    /// advance the cursor or re-anchor the window; the contents and their
+    /// order never change.)
+    pub fn peek_time(&mut self) -> Option<f64> {
+        self.peek_entry().map(|e| e.time_s)
     }
 
     /// Scheduled time of the earliest entry *if* it is an arrival (the
     /// kernel's preemption rule only looks at arrivals).
-    pub fn peek_arrival_time(&self) -> Option<f64> {
-        match self.heap.peek() {
+    pub fn peek_arrival_time(&mut self) -> Option<f64> {
+        match self.peek_entry() {
             Some(Entry {
                 time_s,
                 event: Event::Arrival { .. },
                 ..
             }) => Some(*time_s),
+            _ => None,
+        }
+    }
+
+    /// Scheduled entries remaining.
+    pub fn len(&self) -> usize {
+        self.in_buckets + self.overflow.len()
+    }
+
+    /// Whether no entries remain.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Window horizon (exclusive upper bound of the bucketable range).
+    fn horizon(&self) -> f64 {
+        self.year_start + self.buckets.len() as f64 * self.width
+    }
+
+    /// Whether `t` belongs in a bucket under the current geometry.
+    fn bucketable(&self, t: f64) -> bool {
+        t.is_finite() && t >= self.year_start && t < self.horizon()
+    }
+
+    /// Day index of a bucketable time. The clamp only guards float
+    /// rounding at the horizon edge; it preserves monotonicity.
+    fn day_of(&self, t: f64) -> usize {
+        (((t - self.year_start) / self.width) as usize).min(self.buckets.len() - 1)
+    }
+
+    fn insert(&mut self, e: Entry) {
+        if e.time_s.is_finite() && e.time_s < self.year_start {
+            // a past-window time re-anchors the calendar so the window
+            // always starts at the earliest schedulable instant
+            self.rebuild(e.time_s);
+        }
+        if self.bucketable(e.time_s) {
+            let idx = self.day_of(e.time_s);
+            if idx < self.cursor {
+                // rewind onto the newly occupied day (every bucket below
+                // the old cursor is empty, so the invariant holds)
+                self.cursor = idx;
+            }
+            insert_desc(&mut self.buckets[idx], e);
+            self.in_buckets += 1;
+        } else {
+            insert_desc(&mut self.overflow, e);
+        }
+    }
+
+    /// Restore "front of the queue is reachable": re-anchor when only
+    /// finite overflow entries remain, then advance the cursor to the
+    /// first non-empty bucket.
+    fn settle(&mut self) {
+        while self.in_buckets == 0 {
+            match self.overflow.last() {
+                // the earliest remaining time is finite but out of
+                // window: re-anchor the calendar there (the rebuild
+                // always buckets at least that entry, so this loop
+                // terminates)
+                Some(e) if e.time_s.is_finite() => {
+                    let t = e.time_s;
+                    self.rebuild(t);
+                }
+                // empty, or only non-finite times remain (they drain
+                // straight from the overflow)
+                _ => break,
+            }
+        }
+        if self.in_buckets > 0 {
+            while self.buckets[self.cursor].is_empty() {
+                self.cursor += 1;
+            }
+        }
+    }
+
+    fn peek_entry(&mut self) -> Option<&Entry> {
+        self.settle();
+        let b = if self.in_buckets > 0 {
+            self.buckets[self.cursor].last()
+        } else {
+            None
+        };
+        match (b, self.overflow.last()) {
+            (None, None) => None,
+            (Some(b), None) => Some(b),
+            (None, Some(o)) => Some(o),
+            (Some(b), Some(o)) => Some(if cmp_entry(b, o) == Ordering::Less { b } else { o }),
+        }
+    }
+
+    /// Redistribute every entry into a fresh window anchored at
+    /// `anchor_hint` (or earlier, if an existing entry precedes it):
+    /// `width = span / finite population`, power-of-two bucket count
+    /// covering ~2× the span.
+    fn rebuild(&mut self, anchor_hint: f64) {
+        let mut all: Vec<Entry> = Vec::with_capacity(self.len());
+        for b in &mut self.buckets {
+            all.append(b);
+        }
+        all.append(&mut self.overflow);
+        self.in_buckets = 0;
+
+        let mut finite = 0usize;
+        let mut min_t = anchor_hint;
+        let mut max_t = anchor_hint;
+        for e in &all {
+            if e.time_s.is_finite() {
+                finite += 1;
+                min_t = min_t.min(e.time_s);
+                max_t = max_t.max(e.time_s);
+            }
+        }
+        self.width = ((max_t - min_t) / finite.max(1) as f64).max(MIN_WIDTH);
+        let nbuckets = (finite.max(1) * 2)
+            .next_power_of_two()
+            .clamp(MIN_BUCKETS, MAX_BUCKETS);
+        self.buckets.clear();
+        self.buckets.resize_with(nbuckets, Vec::new);
+        self.year_start = min_t;
+        self.cursor = 0;
+
+        // distribute in descending (time, seq) order: appending then
+        // keeps every bucket (and the overflow) sorted with its minimum
+        // at the tail
+        all.sort_unstable_by(|a, b| cmp_entry(b, a));
+        for e in all {
+            if self.bucketable(e.time_s) {
+                let idx = self.day_of(e.time_s);
+                self.buckets[idx].push(e);
+                self.in_buckets += 1;
+            } else {
+                self.overflow.push(e);
+            }
+        }
+    }
+}
+
+/// The binary-heap predecessor of [`CalendarQueue`], kept as the
+/// reference implementation for the differential property suite
+/// (`rust/tests/prop_event_queue.rs`): same API, same `(time, seq)`
+/// contract, trivially correct by construction of [`BinaryHeap`].
+#[derive(Debug, Default)]
+pub struct BinaryHeapQueue {
+    heap: BinaryHeap<HeapEntry>,
+    next_seq: u64,
+}
+
+/// Heap entry with the reversed order ([`BinaryHeap`] is a max-heap).
+#[derive(Debug)]
+struct HeapEntry(Entry);
+
+impl PartialEq for HeapEntry {
+    fn eq(&self, other: &Self) -> bool {
+        self.0.seq == other.0.seq
+    }
+}
+
+impl Eq for HeapEntry {}
+
+impl Ord for HeapEntry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // reversed: earliest (time, seq) on top
+        cmp_entry(&other.0, &self.0)
+    }
+}
+
+impl PartialOrd for HeapEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl BinaryHeapQueue {
+    /// Empty queue.
+    pub fn new() -> BinaryHeapQueue {
+        BinaryHeapQueue::default()
+    }
+
+    /// Schedule `event` at `time_s`. Ties at equal `time_s` pop in push
+    /// order.
+    pub fn push(&mut self, time_s: f64, event: Event) {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.heap.push(HeapEntry(Entry {
+            time_s,
+            seq,
+            event,
+        }));
+    }
+
+    /// Pop the earliest entry as `(time, event)`.
+    pub fn pop(&mut self) -> Option<(f64, Event)> {
+        self.heap.pop().map(|e| (e.0.time_s, e.0.event))
+    }
+
+    /// Scheduled time of the earliest entry, if any.
+    pub fn peek_time(&self) -> Option<f64> {
+        self.heap.peek().map(|e| e.0.time_s)
+    }
+
+    /// Scheduled time of the earliest entry *if* it is an arrival.
+    pub fn peek_arrival_time(&self) -> Option<f64> {
+        match self.heap.peek() {
+            Some(HeapEntry(Entry {
+                time_s,
+                event: Event::Arrival { .. },
+                ..
+            })) => Some(*time_s),
             _ => None,
         }
     }
@@ -224,5 +527,92 @@ mod tests {
             .collect();
         use crate::sim::event::EventKind::*;
         assert_eq!(kinds, vec![Arrival, MonitorTick, OpDispatch]);
+    }
+
+    // -- calendar-specific coverage --------------------------------------
+
+    #[test]
+    fn far_future_entries_migrate_from_overflow_in_order() {
+        let mut q = EventQueue::new();
+        // far past the initial 64 × 1 ms window: lands in the overflow,
+        // then the first pop re-anchors the calendar there
+        q.push(5_000.0, arrival(2, 5_000.0));
+        q.push(0.01, arrival(0, 0.01));
+        q.push(4_999.0, arrival(1, 4_999.0));
+        assert_eq!(q.len(), 3);
+        assert_eq!(pop_id(&mut q), 0);
+        assert_eq!(pop_id(&mut q), 1);
+        assert_eq!(pop_id(&mut q), 2);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn past_window_push_rewinds_the_calendar() {
+        let mut q = EventQueue::new();
+        q.push(100.0, arrival(1, 100.0));
+        assert_eq!(q.peek_time(), Some(100.0)); // re-anchors at 100
+        q.push(1.0, arrival(0, 1.0)); // before the new year_start
+        assert_eq!(pop_id(&mut q), 0);
+        assert_eq!(pop_id(&mut q), 1);
+        // negative times too
+        q.push(0.5, arrival(3, 0.5));
+        q.push(-2.0, arrival(2, -2.0));
+        assert_eq!(pop_id(&mut q), 2);
+        assert_eq!(pop_id(&mut q), 3);
+    }
+
+    #[test]
+    fn infinities_sort_by_total_cmp() {
+        let mut q = EventQueue::new();
+        q.push(f64::NAN, arrival(3, f64::NAN));
+        q.push(f64::INFINITY, arrival(2, f64::INFINITY));
+        q.push(0.0, arrival(1, 0.0));
+        q.push(f64::NEG_INFINITY, arrival(0, f64::NEG_INFINITY));
+        for want in 0..4 {
+            assert_eq!(pop_id(&mut q), want);
+        }
+    }
+
+    #[test]
+    fn equal_times_keep_push_order_across_a_rebuild() {
+        let mut q = EventQueue::new();
+        // all beyond the initial horizon → overflow; the rebuild on first
+        // pop must not disturb the seq tie-break
+        for id in 0..16 {
+            q.push(77.7, arrival(id, 77.7));
+        }
+        q.push(76.0, arrival(100, 76.0));
+        assert_eq!(pop_id(&mut q), 100);
+        for id in 0..16 {
+            assert_eq!(pop_id(&mut q), id, "rebuild broke the seq tie-break");
+        }
+    }
+
+    #[test]
+    fn matches_binary_heap_reference_on_a_mixed_workload() {
+        let mut cal = EventQueue::new();
+        let mut heap = BinaryHeapQueue::new();
+        let times = [
+            0.3, 0.1, 0.1, 7.0, 0.2, f64::NAN, 0.1, 1e9, 0.2, -1.0, 0.15, 0.15,
+        ];
+        for (id, &t) in times.iter().enumerate() {
+            cal.push(t, arrival(id, t));
+            heap.push(t, arrival(id, t));
+            if id % 3 == 2 {
+                let a = cal.pop().map(|(t, e)| (t.to_bits(), e.kind()));
+                let b = heap.pop().map(|(t, e)| (t.to_bits(), e.kind()));
+                assert_eq!(a, b);
+                assert_eq!(cal.peek_time().map(f64::to_bits),
+                           heap.peek_time().map(f64::to_bits));
+            }
+        }
+        while !heap.is_empty() {
+            assert_eq!(cal.len(), heap.len());
+            let (ta, ea) = cal.pop().unwrap();
+            let (tb, eb) = heap.pop().unwrap();
+            assert_eq!(ta.to_bits(), tb.to_bits());
+            assert_eq!(ea.kind(), eb.kind());
+        }
+        assert!(cal.is_empty());
     }
 }

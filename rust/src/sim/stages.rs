@@ -54,6 +54,7 @@ use crate::soc::device::{Device, ExecCtx, Snapshot};
 use crate::soc::{Placement, Proc};
 use crate::util::Prng;
 
+use super::arena::RequestArena;
 use super::event::Event;
 use super::queue::EventQueue;
 
@@ -97,13 +98,52 @@ pub struct Active {
 pub struct PlanTable {
     plans: Vec<Plan>,
     profiles: Vec<Vec<f64>>,
+    /// Per-stream plan generation, bumped on every [`PlanTable::set_plan`]
+    /// — part of the profile-memo key.
+    epochs: Vec<u64>,
+    /// Memo key the current profile was computed under (`None` =
+    /// recompute on the next refresh).
+    memo: Vec<Option<ProfileKey>>,
+}
+
+/// Everything a refreshed latency profile depends on: the plan
+/// generation, the cost model's correction version, and the snapshot
+/// fields [`crate::profiler::features::extract`] reads (bitwise — the
+/// memo must never treat two different float inputs as equal).
+/// `Snapshot::time_s` is deliberately excluded: feature extraction never
+/// reads it, so profiles are time-invariant under otherwise-identical
+/// conditions — that invariance is exactly what makes the memo hit
+/// across monitor ticks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct ProfileKey {
+    epoch: u64,
+    model_version: u64,
+    snap: [u64; 6],
+}
+
+/// The snapshot fields the cost features read, as raw bits.
+fn snap_bits(snap: &Snapshot) -> [u64; 6] {
+    [
+        snap.cpu_freq_hz.to_bits(),
+        snap.gpu_freq_hz.to_bits(),
+        snap.cpu_util.to_bits(),
+        snap.gpu_util.to_bits(),
+        snap.temp_c.to_bits(),
+        snap.bw_factor.to_bits(),
+    ]
 }
 
 impl PlanTable {
     /// Build from parallel per-stream vectors.
     pub fn new(plans: Vec<Plan>, profiles: Vec<Vec<f64>>) -> PlanTable {
         debug_assert_eq!(plans.len(), profiles.len());
-        PlanTable { plans, profiles }
+        let n = plans.len();
+        PlanTable {
+            plans,
+            profiles,
+            epochs: vec![0; n],
+            memo: vec![None; n],
+        }
     }
 
     /// The current plan of `stream`.
@@ -121,11 +161,14 @@ impl PlanTable {
     /// Replace the plan of `stream`.
     pub fn set_plan(&mut self, stream: usize, plan: Plan) {
         self.plans[stream] = plan;
+        self.epochs[stream] += 1;
     }
 
     /// Replace the latency profile of `stream`.
     pub fn set_profile(&mut self, stream: usize, profile: Vec<f64>) {
         self.profiles[stream] = profile;
+        // hand-set profiles carry no memo key: recompute on next refresh
+        self.memo[stream] = None;
     }
 
     /// Compute the latency profile of `plan` under `model` at `snap`.
@@ -146,15 +189,33 @@ impl PlanTable {
     /// Refresh every stream's profile against the live snapshot (monitor
     /// period boundary — keeps scheduler slack and admission backlog
     /// estimates tracking device dynamics).
+    ///
+    /// Profiles are **memoized**: when the cost model exposes a
+    /// correction version ([`CostModel::version`]) and neither the plan,
+    /// the version, nor the feature-relevant snapshot bits changed since
+    /// the last refresh, the stored profile is provably the one a
+    /// recompute would produce and the suffix-sum walk is skipped. A
+    /// model without a version (`None` — e.g. the device oracle) always
+    /// recomputes, byte-preserving the pre-memo behavior.
     pub fn refresh_profiles(
         &mut self,
         streams: &[StreamSpec],
         model: &dyn CostModel,
         snap: &Snapshot,
     ) {
+        let versioned = model.version().map(|v| (v, snap_bits(snap)));
         for s in streams {
+            let key = versioned.map(|(version, bits)| ProfileKey {
+                epoch: self.epochs[s.id],
+                model_version: version,
+                snap: bits,
+            });
+            if key.is_some() && self.memo[s.id] == key {
+                continue;
+            }
             let profile = Self::profile_of(&s.model, &self.plans[s.id], model, snap);
             self.profiles[s.id] = profile;
+            self.memo[s.id] = key;
         }
     }
 }
@@ -216,7 +277,7 @@ impl ArrivalSource {
             queue.push(
                 req.arrival_s,
                 Event::Arrival {
-                    req: req.clone(),
+                    req: *req,
                     admitted: false,
                 },
             );
@@ -268,6 +329,7 @@ impl AdmissionStage {
     /// actually arrives ([`remaining_backlog_at`]) — a future-arriving
     /// request must not be shed against a backlog that will have drained
     /// by the time it shows up.
+    #[allow(clippy::too_many_arguments)]
     pub fn try_admit(
         &mut self,
         req: Request,
@@ -276,6 +338,7 @@ impl AdmissionStage {
         active: &[Active],
         avail: &[f64; 2],
         now_s: f64,
+        arena: &mut RequestArena,
     ) -> Option<Active> {
         let now_eff = now_s.max(req.arrival_s);
         let est_start = now_eff.max(avail[0]).max(avail[1]);
@@ -296,7 +359,7 @@ impl AdmissionStage {
             data_ready_s: req.arrival_s,
             start_s: None,
             energy_j: 0.0,
-            out_cpu: vec![INPUT_CPU_FRAC; g.num_ops()],
+            out_cpu: arena.alloc(g.num_ops(), INPUT_CPU_FRAC),
             prev_placement: None,
             req,
         })
@@ -480,6 +543,10 @@ pub struct ExecStage {
     outcomes: Vec<RequestOutcome>,
     cpu_busy_total: f64,
     gpu_busy_total: f64,
+    /// Reused backing store for the per-dispatch `input_cpu_fracs`
+    /// vector (one heap allocation for the whole run instead of one per
+    /// executed op).
+    scratch: Vec<f64>,
 }
 
 impl ExecStage {
@@ -557,12 +624,14 @@ impl ExecStage {
         let g: &ModelGraph = &streams[stream].model;
         let op = &g.ops[op_idx];
         let planned = plans.plan(stream).placements[op_idx];
-        let input_cpu_fracs: Vec<f64> = if op.inputs.is_empty() {
-            vec![INPUT_CPU_FRAC; op.in_shapes.len()]
+        let mut input_cpu_fracs = std::mem::take(&mut self.scratch);
+        input_cpu_fracs.clear();
+        if op.inputs.is_empty() {
+            input_cpu_fracs.resize(op.in_shapes.len(), INPUT_CPU_FRAC);
         } else {
             let a = &self.active[ai];
-            op.inputs.iter().map(|&j| a.out_cpu[j]).collect()
-        };
+            input_cpu_fracs.extend(op.inputs.iter().map(|&j| a.out_cpu[j]));
+        }
         let (new_run_cpu, new_run_gpu) = match self.active[ai].prev_placement {
             None => (true, true),
             Some(p) => (!p.uses(Proc::Cpu), !p.uses(Proc::Gpu)),
@@ -595,6 +664,8 @@ impl ExecStage {
         };
         let measured = device.measure(op, placement, &ctx);
         profiler.observe(op, placement, &ctx, &snap, &measured);
+        // ctx is done with the fracs — reclaim the buffer for next dispatch
+        self.scratch = ctx.input_cpu_fracs;
         self.energy.add_op(&measured);
         {
             let a = &mut self.active[ai];
@@ -680,12 +751,14 @@ impl ExecStage {
         // stand in for the batch: members move in lockstep under the same
         // plan, so their residencies agree except after per-member
         // placement overrides, which the batch path never takes apart
+        let mut input_cpu_fracs = std::mem::take(&mut self.scratch);
+        input_cpu_fracs.clear();
         let lead = &self.active[members[0]];
-        let input_cpu_fracs: Vec<f64> = if op.inputs.is_empty() {
-            vec![INPUT_CPU_FRAC; op.in_shapes.len()]
+        if op.inputs.is_empty() {
+            input_cpu_fracs.resize(op.in_shapes.len(), INPUT_CPU_FRAC);
         } else {
-            op.inputs.iter().map(|&j| lead.out_cpu[j]).collect()
-        };
+            input_cpu_fracs.extend(op.inputs.iter().map(|&j| lead.out_cpu[j]));
+        }
         let (new_run_cpu, new_run_gpu) = match lead.prev_placement {
             None => (true, true),
             Some(p) => (!p.uses(Proc::Cpu), !p.uses(Proc::Gpu)),
@@ -718,6 +791,8 @@ impl ExecStage {
         let measured = device.measure_batch(op, placement, &ctx, batch);
         let per_request = crate::batching::cost::debatch_op_cost(&measured, batch);
         profiler.observe(op, placement, &ctx, &snap, &per_request);
+        // ctx is done with the fracs — reclaim the buffer for next dispatch
+        self.scratch = ctx.input_cpu_fracs;
         self.energy.add_op(&measured);
         let end_s = start_s + measured.latency_s;
         let share_j = measured.energy_j / batch as f64;
@@ -762,12 +837,14 @@ impl ExecStage {
     }
 
     /// If `active[ai]` just ran its last op, retire it: record latency and
-    /// deadline outcome, close the energy account, and return the outcome.
-    pub fn complete_if_done(&mut self, ai: usize) -> Option<RequestOutcome> {
+    /// deadline outcome, close the energy account, recycle its `out_cpu`
+    /// buffer into `arena`, and return the outcome.
+    pub fn complete_if_done(&mut self, ai: usize, arena: &mut RequestArena) -> Option<RequestOutcome> {
         if self.active[ai].next_op < self.active[ai].out_cpu.len() {
             return None;
         }
-        let a = self.active.swap_remove(ai);
+        let mut a = self.active.swap_remove(ai);
+        arena.recycle(std::mem::take(&mut a.out_cpu));
         let outcome = RequestOutcome {
             start_s: a.start_s.expect("completed request must have started"),
             finish_s: a.data_ready_s,
@@ -777,7 +854,7 @@ impl ExecStage {
         self.latencies
             .record(outcome.latency_s(), outcome.queue_s(), outcome.met_deadline());
         self.energy.finish_inference();
-        self.outcomes.push(outcome.clone());
+        self.outcomes.push(outcome);
         Some(outcome)
     }
 
@@ -1009,6 +1086,7 @@ mod tests {
         let active = vec![active_at(1, n)];
         let avail = [1.0, 1.0];
         let mut adm = AdmissionStage::new(AdmissionPolicy::DropLate);
+        let mut arena = RequestArena::new();
 
         // arriving far in the future: today's backlog drains before it,
         // so the request is feasible and must be admitted (regression for
@@ -1020,7 +1098,8 @@ mod tests {
             deadline_s: 10.5,
         };
         assert!(
-            adm.try_admit(future, &streams, &plans, &active, &avail, 1.0).is_some(),
+            adm.try_admit(future, &streams, &plans, &active, &avail, 1.0, &mut arena)
+                .is_some(),
             "future-arriving request spuriously shed"
         );
 
@@ -1033,7 +1112,7 @@ mod tests {
             deadline_s: 1.5,
         };
         assert!(adm
-            .try_admit(now, &streams, &plans, &active, &avail, 1.0)
+            .try_admit(now, &streams, &plans, &active, &avail, 1.0, &mut arena)
             .is_none());
         let c = adm.counters();
         assert_eq!((c.offered, c.admitted, c.shed_late), (2, 1, 1));

@@ -1,0 +1,130 @@
+//! Arena-recycling correctness: no request state leaks across slab reuse.
+//!
+//! The stage pipeline allocates every request's `out_cpu` buffer from a
+//! [`RequestArena`] (PR 7) and recycles the buffer at completion. The
+//! byte-safety claim is that a recycled buffer behaves exactly like a
+//! fresh allocation: fully overwritten, regardless of what (and how much)
+//! the previous occupant left in it.
+//!
+//! The pin: run a fixed-seed scenario on a **fresh** arena and again on a
+//! **deliberately polluted** arena — one warmed by a different engine
+//! serving a different (larger) model, so its pooled buffers hold
+//! wrong-length garbage from foreign requests — and require the rendered
+//! `ServingReport` rows to be byte-identical. One engine run twice is
+//! *not* comparable (its device clock and profiler state persist across
+//! runs), hence the two-engine transplant design.
+
+use std::sync::OnceLock;
+
+use adaoper::config::schema::{PolicyKind, SchedulerKind};
+use adaoper::coordinator::{AdmissionPolicy, Engine, EngineConfig, StreamSpec};
+use adaoper::graph::zoo;
+use adaoper::profiler::calibrate::{calibrate_on, CalibConfig, OfflineModel};
+use adaoper::profiler::gbdt::GbdtParams;
+use adaoper::profiler::{EnergyProfiler, EwmaCorrector};
+use adaoper::sim::RequestArena;
+use adaoper::soc::device::DeviceConfig;
+use adaoper::workload::Arrival;
+
+fn calib() -> CalibConfig {
+    CalibConfig {
+        samples: 1200,
+        seed: 5,
+        gbdt: GbdtParams {
+            trees: 40,
+            ..Default::default()
+        },
+    }
+}
+
+fn offline() -> &'static OfflineModel {
+    static OFF: OnceLock<OfflineModel> = OnceLock::new();
+    OFF.get_or_init(|| calibrate_on(&calib(), &DeviceConfig::snapdragon_855()))
+}
+
+fn engine(seed: u64) -> Engine {
+    let profiler = EnergyProfiler::with_correctors(offline().clone(), || {
+        Box::new(EwmaCorrector::default())
+    });
+    Engine::with_profiler(
+        EngineConfig {
+            policy: PolicyKind::MaceGpu,
+            scheduler: SchedulerKind::Edf,
+            admission: AdmissionPolicy::DropLate,
+            duration_s: 1.2,
+            seed,
+            calib: calib(),
+            ..Default::default()
+        },
+        profiler,
+    )
+}
+
+fn streams() -> Vec<StreamSpec> {
+    vec![
+        StreamSpec::new(0, zoo::yolov2_tiny(), Arrival::Poisson { hz: 30.0 }, 0.25),
+        StreamSpec::new(1, zoo::mobilenet_v1(), Arrival::Poisson { hz: 20.0 }, 0.4),
+    ]
+}
+
+/// An arena whose pooled buffers are leftovers from a *different* model's
+/// requests — different op counts, different resident fractions.
+fn polluted_arena() -> RequestArena {
+    let mut polluter = engine(99);
+    let foreign = vec![StreamSpec::new(
+        0,
+        zoo::yolov2(), // larger graph than either stream under test
+        Arrival::Poisson { hz: 25.0 },
+        0.6,
+    )];
+    polluter.run(&foreign).unwrap();
+    let arena = polluter.take_arena();
+    assert!(
+        arena.pooled() > 0,
+        "polluter run left no buffers to transplant"
+    );
+    arena
+}
+
+#[test]
+fn recycled_arena_is_byte_identical_to_fresh() {
+    // A: fresh arena (the pool starts empty; recycling still happens
+    // within the run as completions feed later admissions)
+    let mut fresh = engine(17);
+    let row_fresh = fresh.run(&streams()).unwrap().row();
+    let (alloc_fresh, recycled_fresh) = fresh.arena_stats();
+    assert!(alloc_fresh > 0);
+
+    // B: identical config/seed, but admissions draw from foreign garbage
+    let mut warm = engine(17);
+    warm.set_arena(polluted_arena());
+    let row_warm = warm.run(&streams()).unwrap().row();
+    let (_, recycled_warm) = warm.arena_stats();
+    // the very first admission already finds a pooled (foreign) buffer,
+    // so the warm engine must recycle strictly more than the fresh one
+    assert!(
+        recycled_warm > recycled_fresh,
+        "transplanted pool was never drawn from ({recycled_warm} vs {recycled_fresh}) \
+         — the test lost its teeth"
+    );
+    assert_eq!(
+        row_fresh, row_warm,
+        "recycled buffers leaked state into the serving report"
+    );
+}
+
+#[test]
+fn within_run_recycling_occurs_under_load() {
+    // completions recycle into admissions within a single run: with 1.2 s
+    // of overlapping arrivals the pool must turn over many times
+    let mut e = engine(17);
+    e.run(&streams()).unwrap();
+    let mut e2 = engine(17);
+    e2.set_arena(e.take_arena());
+    e2.run(&streams()).unwrap();
+    let (allocated, recycled) = e2.arena_stats();
+    assert!(
+        recycled > 0 && recycled <= allocated,
+        "no recycling across runs: {allocated}/{recycled}"
+    );
+}

@@ -1,0 +1,92 @@
+//! Golden wall over the declarative scenario corpus.
+//!
+//! The four ablation ports under `scenarios/` (batching burst, cache
+//! recurrence, fleet scale, scheduler overload) already run in CI with
+//! their `[expect]` bounds (`make scenarios`); this suite additionally
+//! pins their **exact rendered rows** as refactor tripwires alongside the
+//! serving/batching/replay goldens — a kernel change that shifts any
+//! scenario's output by a single byte fails here before it reaches a
+//! bound.
+//!
+//! Snapshot workflow matches `golden_determinism.rs`:
+//! `tests/golden/scenario_rows.txt` is compared when present; when absent
+//! or when `ADAOPER_UPDATE_GOLDEN=1` is set, it is (re)written from the
+//! current kernel and must be committed.
+
+use std::path::{Path, PathBuf};
+
+use adaoper::scenario::runner::spec_files;
+use adaoper::scenario::run_path;
+
+fn corpus_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("scenarios")
+}
+
+fn golden_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests")
+        .join("golden")
+        .join("scenario_rows.txt")
+}
+
+/// Run every spec in `scenarios/`, concatenating labeled rows.
+fn render_corpus() -> String {
+    let specs = spec_files(&corpus_dir()).expect("list scenario corpus");
+    assert!(
+        !specs.is_empty(),
+        "scenario corpus is empty — nothing to pin"
+    );
+    let mut s = String::new();
+    for path in specs {
+        let outcome = run_path(&path).unwrap_or_else(|e| {
+            panic!("scenario {} failed to run: {e:#}", path.display())
+        });
+        assert!(
+            outcome.passed(),
+            "scenario {} failed its [expect] bounds: {:?}",
+            outcome.name,
+            outcome.checks
+        );
+        s.push_str(&outcome.name);
+        s.push_str(": ");
+        s.push_str(&outcome.row);
+        s.push('\n');
+    }
+    s
+}
+
+#[test]
+fn scenario_corpus_matches_golden_rows() {
+    let got = render_corpus();
+    let path = golden_path();
+    compare_or_bootstrap(&got, &path);
+}
+
+fn compare_or_bootstrap(got: &str, path: &Path) {
+    let update = std::env::var("ADAOPER_UPDATE_GOLDEN").is_ok();
+    if update || !path.exists() {
+        std::fs::write(path, got).expect("write golden snapshot");
+        eprintln!(
+            "golden snapshot {} {} — commit it",
+            path.display(),
+            if update { "updated" } else { "bootstrapped" }
+        );
+        return;
+    }
+    let want = std::fs::read_to_string(path).expect("read golden snapshot");
+    if got != want {
+        for (i, (g, w)) in got.lines().zip(want.lines()).enumerate() {
+            assert_eq!(
+                g,
+                w,
+                "first divergence at line {} (set ADAOPER_UPDATE_GOLDEN=1 to re-capture \
+                 after an intentional behavior change)",
+                i + 1
+            );
+        }
+        assert_eq!(got.lines().count(), want.lines().count(), "line counts differ");
+        panic!("golden rows differ only in line endings");
+    }
+}

@@ -1,0 +1,242 @@
+//! Differential property suite for the calendar event queue.
+//!
+//! The calendar [`EventQueue`] replaced the binary-heap queue as the
+//! kernel's scheduler (PR 7). The heap survives as
+//! [`BinaryHeapQueue`] — trivially correct by construction of
+//! `std::collections::BinaryHeap` — and this suite drives both
+//! implementations in lockstep through adversarial random streams:
+//! clustered near-future times (the serving regime the calendar is
+//! optimized for), duplicate timestamps (push-order tie-breaks),
+//! interleaved push/pop (cursor rewinds), far-future monitor ticks
+//! (overflow + re-anchor migration), and `total_cmp` edge cases (NaN,
+//! ±∞, negative/past times). Every pop and peek must agree bitwise on
+//! `(time, event)`; any divergence is an ordering bug in the calendar.
+
+use adaoper::coordinator::request::Request;
+use adaoper::sim::{BinaryHeapQueue, Event, EventKind, EventQueue};
+use adaoper::util::Prng;
+
+fn arrival(id: usize, t: f64) -> Event {
+    Event::Arrival {
+        req: Request {
+            id,
+            stream: id % 3,
+            arrival_s: t,
+            deadline_s: t + 0.25,
+        },
+        admitted: false,
+    }
+}
+
+fn tick(t: f64) -> Event {
+    Event::MonitorTick {
+        t_s: t,
+        regime_changed: false,
+    }
+}
+
+/// Identity of a popped/peeked entry: exact time bits, event kind, and
+/// the request id for arrivals (unique per push, so it witnesses the
+/// seq tie-break order exactly).
+fn fp(t: f64, ev: &Event) -> (u64, EventKind, Option<usize>) {
+    let id = match ev {
+        Event::Arrival { req, .. } => Some(req.id),
+        _ => None,
+    };
+    (t.to_bits(), ev.kind(), id)
+}
+
+/// The two implementations under lockstep.
+#[derive(Default)]
+struct Pair {
+    cal: EventQueue,
+    heap: BinaryHeapQueue,
+}
+
+impl Pair {
+    fn push(&mut self, t: f64, id: usize, is_tick: bool) {
+        let ev = if is_tick { tick(t) } else { arrival(id, t) };
+        self.cal.push(t, ev.clone());
+        self.heap.push(t, ev);
+    }
+
+    #[track_caller]
+    fn pop_agrees(&mut self) -> bool {
+        assert_eq!(self.cal.len(), self.heap.len(), "length diverged");
+        let a = self.cal.pop().map(|(t, ev)| fp(t, &ev));
+        let b = self.heap.pop().map(|(t, ev)| fp(t, &ev));
+        assert_eq!(a, b, "pop diverged");
+        a.is_some()
+    }
+
+    #[track_caller]
+    fn peek_agrees(&mut self) {
+        assert_eq!(
+            self.cal.peek_time().map(f64::to_bits),
+            self.heap.peek_time().map(f64::to_bits),
+            "peek_time diverged"
+        );
+        assert_eq!(
+            self.cal.peek_arrival_time().map(f64::to_bits),
+            self.heap.peek_arrival_time().map(f64::to_bits),
+            "peek_arrival_time diverged"
+        );
+    }
+
+    #[track_caller]
+    fn drain(&mut self) {
+        while self.pop_agrees() {}
+        assert!(self.cal.is_empty() && self.heap.is_empty());
+    }
+}
+
+/// One adversarial random workload: near-future clusters around an
+/// advancing base time, duplicate timestamps, far-future ticks,
+/// occasional NaN/±∞/past-time pushes, and interleaved pops.
+fn run_random_workload(seed: u64, ops: usize) {
+    let mut rng = Prng::new(seed);
+    let mut pair = Pair::default();
+    let mut next_id = 0usize;
+    let mut base = 0.0f64;
+    let mut last_dup = 0.5f64;
+    for _ in 0..ops {
+        if rng.chance(0.6) {
+            // push: mostly clustered near-future, with adversarial tails
+            let roll = rng.f64();
+            let (t, is_tick) = if roll < 0.55 {
+                (base + rng.range(0.0, 0.05), false) // near-future cluster
+            } else if roll < 0.70 {
+                last_dup = if rng.chance(0.3) {
+                    base + rng.range(0.0, 0.02)
+                } else {
+                    last_dup
+                };
+                (last_dup, false) // duplicate timestamp → seq tie-break
+            } else if roll < 0.80 {
+                (base + rng.range(1.0, 500.0), true) // far-future tick
+            } else if roll < 0.88 {
+                (base - rng.range(0.0, 2.0), false) // past/negative time
+            } else if roll < 0.92 {
+                (f64::NAN, false)
+            } else if roll < 0.96 {
+                (f64::INFINITY, true)
+            } else {
+                (f64::NEG_INFINITY, false)
+            };
+            pair.push(t, next_id, is_tick);
+            next_id += 1;
+        } else if rng.chance(0.5) {
+            pair.pop_agrees();
+        } else {
+            pair.peek_agrees();
+        }
+        if rng.chance(0.05) {
+            base += rng.range(0.0, 0.5); // the serving clock moves on
+        }
+    }
+    pair.drain();
+}
+
+#[test]
+fn random_workloads_agree_across_seeds() {
+    for seed in [1u64, 7, 42, 1234, 0xDEAD_BEEF] {
+        run_random_workload(seed, 4000);
+    }
+}
+
+#[test]
+fn pure_near_future_cluster_agrees() {
+    // the calendar's fast path: everything lands inside the bucket window
+    let mut rng = Prng::new(99);
+    let mut pair = Pair::default();
+    for id in 0..2000 {
+        pair.push(rng.range(0.0, 0.06), id, false);
+    }
+    pair.drain();
+}
+
+#[test]
+fn duplicate_timestamp_storm_keeps_push_order() {
+    // heavy tie-break pressure: few distinct times, many entries each
+    let mut rng = Prng::new(5);
+    let times: Vec<f64> = (0..8).map(|_| rng.range(0.0, 1.0)).collect();
+    let mut pair = Pair::default();
+    for id in 0..1200 {
+        let t = times[rng.below(times.len())];
+        pair.push(t, id, false);
+        if rng.chance(0.25) {
+            pair.pop_agrees();
+        }
+    }
+    pair.drain();
+}
+
+#[test]
+fn far_future_ticks_between_near_arrivals() {
+    // the engine's actual mixed shape: dense arrivals plus sparse
+    // monitor-style timeline events far past the initial window
+    let mut rng = Prng::new(21);
+    let mut pair = Pair::default();
+    let mut id = 0;
+    for burst in 0..40 {
+        let base = burst as f64 * 30.0;
+        pair.push(base + 1000.0, id, true); // far-future tick → overflow
+        id += 1;
+        for _ in 0..25 {
+            pair.push(base + rng.range(0.0, 0.1), id, false);
+            id += 1;
+        }
+        for _ in 0..20 {
+            pair.pop_agrees(); // drains the burst, re-anchors toward the tick
+        }
+        pair.peek_agrees();
+    }
+    pair.drain();
+}
+
+#[test]
+fn total_cmp_edge_cases_agree() {
+    // NaN sorts last, -inf first, +inf after all finite — on both sides,
+    // with seq breaking ties among equal non-finite times too
+    let mut pair = Pair::default();
+    let specials = [
+        f64::NAN,
+        f64::INFINITY,
+        f64::NEG_INFINITY,
+        0.0,
+        -0.0,
+        f64::NAN,
+        1e300,
+        -1e300,
+        f64::NEG_INFINITY,
+        5e-324, // smallest subnormal
+    ];
+    for (id, &t) in specials.iter().enumerate() {
+        pair.push(t, id, false);
+        pair.peek_agrees();
+    }
+    pair.drain();
+}
+
+#[test]
+fn interleaved_push_pop_with_rewinds() {
+    // pops advance the calendar cursor; pushes behind it must rewind —
+    // alternate so the cursor keeps moving both ways
+    let mut rng = Prng::new(77);
+    let mut pair = Pair::default();
+    let mut id = 0;
+    for round in 0..300 {
+        let hi = round as f64 * 0.01 + 0.05;
+        for _ in 0..4 {
+            pair.push(rng.range(0.0, hi), id, false);
+            id += 1;
+        }
+        pair.pop_agrees();
+        pair.pop_agrees();
+        // a push earlier than everything popped so far
+        pair.push(rng.range(-1.0, 0.0), id, false);
+        id += 1;
+        pair.pop_agrees();
+    }
+    pair.drain();
+}
