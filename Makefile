@@ -3,7 +3,7 @@
 
 CARGO_DIR := rust
 
-.PHONY: verify build test fmt fmt-check clippy bench-build bench-hot bench-hot-smoke doc smoke scenarios all
+.PHONY: verify build test fmt fmt-check clippy bench-build bench-hot bench-hot-smoke doc smoke scenarios inspect-smoke all
 
 # Tier-1 gate: release build + full test suite.
 verify:
@@ -55,5 +55,19 @@ smoke:
 scenarios:
 	cd $(CARGO_DIR) && cargo run --release -- scenario run ../scenarios
 
+# Telemetry round trip: record a short trace with the audit log and
+# stage timers on, render the audit + stage tables, and export/validate
+# the Perfetto timeline (the validate step runs inside `inspect
+# --perfetto`: parse + per-track span nesting). CI runs this after
+# `make scenarios`.
+inspect-smoke:
+	printf '[profiler]\ncalib_samples = 1500\ngbdt_trees = 40\n' > /tmp/adaoper_inspect_smoke.toml
+	cd $(CARGO_DIR) && cargo run --release -- serve --config /tmp/adaoper_inspect_smoke.toml \
+		--duration 1.0 --trace /tmp/adaoper_inspect_smoke.jsonl --telemetry
+	cd $(CARGO_DIR) && cargo run --release -- inspect /tmp/adaoper_inspect_smoke.jsonl
+	cd $(CARGO_DIR) && cargo run --release -- inspect /tmp/adaoper_inspect_smoke.jsonl --stages
+	cd $(CARGO_DIR) && cargo run --release -- inspect /tmp/adaoper_inspect_smoke.jsonl \
+		--perfetto /tmp/adaoper_inspect_smoke_perfetto.json
+
 # Everything CI checks, in CI order.
-all: verify smoke scenarios clippy bench-build doc fmt-check
+all: verify smoke scenarios inspect-smoke clippy bench-build doc fmt-check

@@ -32,7 +32,7 @@ fn main() -> anyhow::Result<()> {
                 Box::new(GruCorrector::new(8, infer))
             }))
         } else {
-            eprintln!("(artifacts not built — skipping the GRU arm; run `make artifacts`)");
+            adaoper::log_warn!("artifacts not built — skipping the GRU arm; run `make artifacts`");
             None
         };
 

@@ -29,9 +29,10 @@ fn main() -> anyhow::Result<()> {
             CalibConfig::default()
         },
     };
-    eprintln!(
+    adaoper::log_info!(
         "running Figure 2 matrix ({} requests/cell, {} calibration samples) …",
-        cfg.n_requests, cfg.calib.samples
+        cfg.n_requests,
+        cfg.calib.samples
     );
     let rows = fig2::run(&cfg)?;
     print!("{}", fig2::render(&rows));

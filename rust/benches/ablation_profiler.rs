@@ -24,7 +24,7 @@ fn main() {
                 Box::new(GruCorrector::new(8, infer))
             }))
         } else {
-            eprintln!("(artifacts missing — GRU arm skipped)");
+            adaoper::log_warn!("artifacts missing — GRU arm skipped");
             None
         };
     let rows =

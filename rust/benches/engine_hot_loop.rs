@@ -35,6 +35,39 @@ use adaoper::sim::EventCounters;
 use adaoper::soc::device::DeviceConfig;
 use adaoper::workload::Arrival;
 
+/// Only identifier-ish characters survive, so the value drops into the
+/// JSON line unescaped.
+fn sanitize(s: &str) -> String {
+    s.trim()
+        .chars()
+        .filter(|c| c.is_ascii_alphanumeric() || matches!(c, '-' | '_' | '.'))
+        .collect()
+}
+
+/// Short git revision of the working tree, `unknown` outside a checkout.
+fn git_rev() -> String {
+    let rev = std::process::Command::new("git")
+        .args(["rev-parse", "--short", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| sanitize(&s))
+        .unwrap_or_default();
+    if rev.is_empty() { "unknown".to_string() } else { rev }
+}
+
+/// Hostname from the environment or /etc/hostname; bench records are
+/// only comparable within one host, so the line must say which.
+fn host_fingerprint() -> String {
+    let host = std::env::var("HOSTNAME")
+        .ok()
+        .or_else(|| std::fs::read_to_string("/etc/hostname").ok())
+        .map(|s| sanitize(&s))
+        .unwrap_or_default();
+    if host.is_empty() { "unknown".to_string() } else { host }
+}
+
 fn main() {
     let quick = std::env::var("ADAOPER_BENCH_QUICK").is_ok();
     let calib = CalibConfig {
@@ -103,16 +136,46 @@ fn main() {
         rates.len()
     );
 
+    // One extra instrumented iteration for the stage self-profile — kept
+    // out of the throughput stats, since the per-lap clock reads are
+    // exactly the overhead the timed iterations must not carry.
+    let profiler = EnergyProfiler::with_correctors(offline.clone(), || {
+        Box::new(EwmaCorrector::default())
+    });
+    let mut engine = Engine::with_profiler(
+        EngineConfig {
+            policy: PolicyKind::MaceGpu,
+            scheduler: SchedulerKind::Edf,
+            duration_s,
+            seed: 7,
+            calib: calib.clone(),
+            ..Default::default()
+        },
+        profiler,
+    );
+    engine.enable_stage_timers();
+    engine.run(&streams).expect("instrumented run");
+    let stages = engine
+        .take_stage_timers()
+        .map(|t| t.json_object())
+        .unwrap_or_else(|| "{}".to_string());
+
     // One machine-readable line for the recorded trajectory. Plain
-    // format! keeps this dependency-free; none of the fields need
-    // escaping.
+    // format! keeps this dependency-free; git_rev/host are sanitized to
+    // identifier characters so no field needs escaping.
     let json = format!(
         "{{\"bench\":\"engine_hot_loop\",\"mode\":\"{}\",\"seed\":7,\
          \"iters\":{},\"duration_s\":{duration_s},\
          \"events_per_sec_mean\":{mean:.1},\"events_per_sec_min\":{min:.1},\
-         \"events_per_sec_max\":{max:.1}}}",
+         \"events_per_sec_max\":{max:.1},\
+         \"git_rev\":\"{}\",\"host\":\"{}\",\"os\":\"{}\",\"arch\":\"{}\",\
+         \"stages\":{stages}}}",
         if quick { "quick" } else { "full" },
-        rates.len()
+        rates.len(),
+        git_rev(),
+        host_fingerprint(),
+        std::env::consts::OS,
+        std::env::consts::ARCH
     );
     println!("{json}");
     if let Ok(path) = std::env::var("ADAOPER_BENCH_JSON") {

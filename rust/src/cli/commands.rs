@@ -2,7 +2,7 @@
 
 use std::path::Path;
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::batching::BatchConfig;
 use crate::config::schema::{
@@ -42,6 +42,10 @@ COMMANDS
       [--plan-cache-cap N] [--plan-cache-freq-bucket-mhz MHZ]
       [--plan-cache-util-bucket X]
       [--trace PATH]          write per-request JSONL timelines to PATH
+      [--telemetry]           record the plan-decision audit log, kernel
+                              event lines, and stage self-profiling
+                              timers (off by default; with --trace the
+                              audit + timer lines land in the trace)
   fleet                       simulate a heterogeneous device fleet
       [--config F] [--devices N] [--threads T] [--seed S] [--duration S]
       [--scheduler fifo|edf|slack-reclaim] [--policy P] [--quick]
@@ -54,6 +58,12 @@ COMMANDS
   replay <trace.jsonl>        re-run a recorded serve trace through the
                               sim kernel and verify the replayed report
                               row matches the recorded one byte for byte
+  inspect <trace.jsonl>       render the telemetry recorded in a trace:
+                              plan-decision audit table by default;
+      [--stages]              kernel stage self-profiling table
+      [--perfetto OUT]        export a Chrome trace-event / Perfetto
+                              JSON timeline to OUT (open at
+                              ui.perfetto.dev or chrome://tracing)
   fig2 [--requests N]         reproduce the paper's Figure 2
   calibrate [--samples N]     run the offline calibration sweep and report
                               held-out accuracy
@@ -75,6 +85,8 @@ COMMON OPTIONS
   --condition idle|moderate|high                    (default moderate)
   --seed N                                          (default 7)
   --quick                     smaller calibration budget (faster, rougher)
+  --log-level L               error|warn|info|debug|trace (default info;
+                              `--verbose` is shorthand for debug)
 ";
 
 fn calib_of(args: &Args) -> Result<CalibConfig> {
@@ -97,9 +109,16 @@ fn calib_of(args: &Args) -> Result<CalibConfig> {
 
 /// Entry point used by `main.rs`.
 pub fn run(argv: &[String]) -> Result<()> {
-    let args = Args::parse(argv, &["quick", "verbose", "oracle"])?;
+    let args = Args::parse(argv, &["quick", "verbose", "oracle", "telemetry", "stages"])?;
     if args.flag("verbose") {
         crate::util::logger::set_level(crate::util::logger::Level::Debug);
+    }
+    if let Some(l) = args.get("log-level") {
+        // explicit --log-level wins over --verbose
+        match crate::util::logger::parse_level(l) {
+            Some(lv) => crate::util::logger::set_level(lv),
+            None => bail!("--log-level: unknown level `{l}` (error|warn|info|debug|trace)"),
+        }
     }
     let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
     match cmd {
@@ -109,6 +128,7 @@ pub fn run(argv: &[String]) -> Result<()> {
         "fleet" => cmd_fleet(&args),
         "scenario" => cmd_scenario(&args),
         "replay" => cmd_replay(&args),
+        "inspect" => cmd_inspect(&args),
         "fig2" => cmd_fig2(&args),
         "calibrate" => cmd_calibrate(&args),
         "ablation" => cmd_ablation(&args),
@@ -284,9 +304,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
             util_bucket: cfg.partition.plan_cache_util_bucket,
             ..Default::default()
         },
+        telemetry: args.flag("telemetry"),
         ..Default::default()
     };
     let mut engine = Engine::new(ecfg.clone());
+    if ecfg.telemetry {
+        engine.enable_stage_timers();
+    }
 
     let mut streams = Vec::new();
     for (i, m) in cfg.serve.models.iter().enumerate() {
@@ -315,7 +339,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
             // trailer gives replay a byte-identity target.
             let meta = crate::metrics::TraceMeta::of(&ecfg, &streams);
             let mut trace = crate::metrics::TraceObserver::with_meta(meta);
+            if ecfg.telemetry {
+                trace = trace.with_kernel_events();
+            }
             let r = engine.run_observed(&streams, &mut [&mut trace])?;
+            // audit + stage-timer lines precede the report trailer so
+            // `adaoper inspect` sees them; replay skips them
+            if let Some(audit) = engine.audit() {
+                for line in audit.jsonl_lines() {
+                    trace.push_line(line);
+                }
+            }
+            if let Some(timers) = engine.take_stage_timers() {
+                trace.push_line(timers.jsonl());
+            }
             trace.push_report_row(&r.row());
             trace.write_to(Path::new(path))?;
             println!("trace: {} lines (header + requests + report) -> {path}", trace.len());
@@ -388,6 +425,120 @@ fn cmd_replay(args: &Args) -> Result<()> {
             outcome.row
         ),
     }
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    use crate::util::json::Json;
+
+    let Some(target) = args.positional.get(1) else {
+        bail!("usage: adaoper inspect <trace.jsonl> [--stages] [--perfetto out.json]");
+    };
+    let text = std::fs::read_to_string(target)
+        .with_context(|| format!("reading trace {target}"))?;
+
+    if let Some(out_path) = args.get("perfetto") {
+        let json = crate::metrics::perfetto::export_str(&text)?;
+        let n = crate::metrics::perfetto::validate(&json)?;
+        std::fs::write(out_path, &json)
+            .with_context(|| format!("writing perfetto export {out_path}"))?;
+        println!("perfetto: {n} trace event(s) -> {out_path} (open at ui.perfetto.dev)");
+        return Ok(());
+    }
+
+    let mut decisions: Vec<Json> = Vec::new();
+    let mut timers: Option<crate::sim::StageTimers> = None;
+    let mut report_row: Option<String> = None;
+    for (i, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let obj = Json::parse(line).with_context(|| format!("trace line {}", i + 1))?;
+        match obj.get("event").and_then(Json::as_str) {
+            Some("plan_decision") => decisions.push(obj),
+            Some("report") => report_row = Some(obj.need_str("row")?.to_string()),
+            Some("stage_timers") => {
+                let stages = obj
+                    .get("stages")
+                    .ok_or_else(|| anyhow::anyhow!("stage_timers line missing `stages`"))?;
+                let mut t = crate::sim::StageTimers::new();
+                for stage in crate::sim::Stage::ALL {
+                    if let Some(s) = stages.get(stage.name()) {
+                        t.accumulate(stage, s.need_u64("calls")?, s.need_f64("secs")?);
+                    }
+                }
+                timers = Some(t);
+            }
+            _ => {}
+        }
+    }
+
+    if args.flag("stages") {
+        match timers {
+            Some(t) => print!("{}", t.render()),
+            None => println!(
+                "trace carries no stage_timers line — record one with \
+                 `adaoper serve --trace … --telemetry`"
+            ),
+        }
+        return Ok(());
+    }
+
+    if decisions.is_empty() {
+        println!(
+            "trace carries no plan-decision audit — record one with \
+             `adaoper serve --trace … --telemetry`"
+        );
+    } else {
+        let hits = decisions
+            .iter()
+            .filter(|d| d.get("cache_hit").and_then(Json::as_bool) == Some(true))
+            .count();
+        println!("plan-decision audit: {} decision(s), {hits} cache hit(s)", decisions.len());
+        println!(
+            "{:>10} {:>4} {:<14} {:>5} {:>9}    {:>9} {:>10} {:>10} {:>9}  {}",
+            "t ms", "strm", "trigger", "cache", "lat ms", "-> lat ms", "resid cpu", "resid gpu",
+            "solve µs", "plan fp old -> new"
+        );
+        for d in &decisions {
+            let resid = |proc: &str| -> Result<String> {
+                let r = d
+                    .get("residuals")
+                    .and_then(|r| r.get(proc))
+                    .ok_or_else(|| anyhow::anyhow!("plan_decision missing residuals.{proc}"))?;
+                Ok(if r.need_u64("ops")? == 0 {
+                    "-".to_string()
+                } else {
+                    format!("{:+.3}", (r.need_f64("actual_s")? - r.need_f64("pred_s")?) * 1e3)
+                })
+            };
+            println!(
+                "{:>10.3} {:>4} {:<14} {:>5} {:>9.3}    {:>9.3} {:>10} {:>10} {:>9.1}  {} -> {}",
+                d.need_f64("t_s")? * 1e3,
+                d.need_usize("stream")?,
+                d.need_str("trigger")?,
+                if d.need_bool("cache_hit")? { "hit" } else { "miss" },
+                d.get("pred_before").map_or(0.0, |p| {
+                    p.get("latency_s").and_then(Json::as_f64).unwrap_or(0.0) * 1e3
+                }),
+                d.get("pred_after").map_or(0.0, |p| {
+                    p.get("latency_s").and_then(Json::as_f64).unwrap_or(0.0) * 1e3
+                }),
+                resid("cpu")?,
+                resid("gpu")?,
+                d.need_f64("decision_s")? * 1e6,
+                d.need_str("old_fp")?,
+                d.need_str("new_fp")?,
+            );
+        }
+    }
+    if timers.is_some() {
+        println!("(stage self-profiling recorded — render it with `--stages`)");
+    }
+    if let Some(row) = report_row {
+        println!("report: {row}");
+    }
+    Ok(())
 }
 
 fn cmd_fleet(args: &Args) -> Result<()> {

@@ -25,7 +25,8 @@ use crate::batching::{BatchConfig, Batcher, BatchedCostModel};
 use crate::config::schema::{ConditionKind, PolicyKind, SchedulerKind};
 use crate::graph::{ModelGraph, OpNode};
 use crate::metrics::{
-    EnergyAccount, LatencyRecorder, LogHistogram, PlanCacheStats, SchedStats, ServingReport,
+    plan_fingerprint, AuditLog, EnergyAccount, LatencyRecorder, LogHistogram, PlanCacheStats,
+    PlanDecision, SchedStats, ServingReport,
 };
 use crate::partition::baselines::by_policy;
 use crate::partition::dp::DpPartitioner;
@@ -34,7 +35,7 @@ use crate::partition::plan::{Objective, Partitioner, Plan, INPUT_CPU_FRAC};
 use crate::profiler::calibrate::{calibrate_on, CalibConfig};
 use crate::profiler::corrector::{Corrector, EwmaCorrector};
 use crate::profiler::monitor::ResourceMonitor;
-use crate::profiler::EnergyProfiler;
+use crate::profiler::{CostModel, EnergyProfiler};
 use crate::sim::arena::RequestArena;
 use crate::sim::event::Event;
 use crate::sim::observer::{emit, emit_done, SimObserver};
@@ -42,12 +43,13 @@ use crate::sim::queue::EventQueue;
 use crate::sim::stages::{
     cost_model, AdmissionStage, ArrivalSource, DispatchStage, ExecStage, MonitorStage, PlanTable,
 };
+use crate::sim::timers::{Stage, StageTimers};
 use crate::soc::device::{ConditionSpec, Device, DeviceConfig, ExecCtx};
 use crate::soc::{Placement, Proc};
 use crate::workload::WorkloadCondition;
 
 use super::plan_cache::{PlanCache, PlanCacheConfig};
-use super::repartition::{RepartitionController, Trigger};
+use super::repartition::{RepartitionController, Trigger, VIRTUAL_CACHE_HIT_S};
 use super::request::{Request, RequestOutcome, StreamSpec};
 use super::scheduler::AdmissionPolicy;
 
@@ -114,6 +116,11 @@ pub struct EngineConfig {
     /// byte-identical. The scenario layer lowers `[timeline.*]` tables
     /// into this field.
     pub condition_timeline: Vec<(f64, ConditionKind)>,
+    /// Enable the telemetry spine: the plan-decision audit log (and the
+    /// `telemetry` marker in trace headers). Off by default — disabled,
+    /// no audit state exists and every report row and golden trace stays
+    /// byte-identical. Telemetry never reads or advances virtual time.
+    pub telemetry: bool,
 }
 
 impl Default for EngineConfig {
@@ -138,6 +145,7 @@ impl Default for EngineConfig {
             device_label: None,
             batching: BatchConfig::default(),
             condition_timeline: Vec::new(),
+            telemetry: false,
         }
     }
 }
@@ -158,6 +166,10 @@ pub struct Engine {
     plan_cache: PlanCache,
     numerics: Option<NumericsHook>,
     arena: RequestArena,
+    /// Plan-decision audit log of the most recent run (`cfg.telemetry`).
+    audit: Option<AuditLog>,
+    /// Opt-in wall-clock stage timers ([`Engine::enable_stage_timers`]).
+    stage_timers: Option<StageTimers>,
 }
 
 impl Engine {
@@ -203,6 +215,8 @@ impl Engine {
             plan_cache,
             numerics: None,
             arena: RequestArena::new(),
+            audit: None,
+            stage_timers: None,
         }
     }
 
@@ -255,6 +269,25 @@ impl Engine {
     /// Drift triggers that reached a re-solve (diagnostics).
     pub fn drift_evaluations(&self) -> usize {
         self.controller.evaluations()
+    }
+
+    /// The plan-decision audit log of the most recent run; `None` unless
+    /// `cfg.telemetry` was enabled.
+    pub fn audit(&self) -> Option<&AuditLog> {
+        self.audit.as_ref()
+    }
+
+    /// Arm the opt-in wall-clock stage timers for subsequent runs. The
+    /// timers measure host time only — they never touch virtual time, so
+    /// simulated results are unchanged.
+    pub fn enable_stage_timers(&mut self) {
+        self.stage_timers = Some(StageTimers::new());
+    }
+
+    /// Take the accumulated stage timers out of the engine (`None` when
+    /// never enabled), disarming them.
+    pub fn take_stage_timers(&mut self) -> Option<StageTimers> {
+        self.stage_timers.take()
     }
 
     /// Plan-cache counters, `None` when the cache is disabled (capacity 0).
@@ -333,6 +366,7 @@ impl Engine {
     ) -> Result<ServingReport> {
         let g = spec.model.clone();
         let mut plan = self.plan_for(&g)?;
+        self.audit = self.cfg.telemetry.then(|| AuditLog::new(spec.id + 1));
         let mut latencies = LatencyRecorder::new();
         let mut energy = EnergyAccount::new();
         let mut cpu_busy_total = 0.0f64;
@@ -419,6 +453,10 @@ impl Engine {
                     let snap = self.device.snapshot();
                     let model =
                         cost_model(self.cfg.planner_info, &self.profiler, &self.device);
+                    let pre = self
+                        .audit
+                        .as_ref()
+                        .map(|_| (plan_fingerprint(&plan.placements), plan.predicted));
                     if let Some((p, dt)) = self.controller.on_drift(
                         &g,
                         &plan,
@@ -430,6 +468,25 @@ impl Engine {
                         plan = p;
                         req_latency += dt; // decision runs on the CPU path
                         self.device.advance(dt, 1.0, 0.0);
+                        if let (Some((old_fp, pred_before)), Some(audit)) =
+                            (pre, self.audit.as_mut())
+                        {
+                            audit.record(PlanDecision {
+                                t_s: self.device.time_s(),
+                                stream: spec.id,
+                                trigger: Trigger::Drift.name(),
+                                old_fingerprint: old_fp,
+                                new_fingerprint: plan_fingerprint(&plan.placements),
+                                pred_before,
+                                pred_after: plan.predicted,
+                                cache_hit: false,
+                                corrector_version: self.profiler.version(),
+                                decision_s: dt,
+                                pred_s: [0.0; 2],
+                                actual_s: [0.0; 2],
+                                ops: [0; 2],
+                            });
+                        }
                         emit(
                             observers,
                             &Event::RegimeReplan {
@@ -486,6 +543,7 @@ impl Engine {
             plan_cache: self.plan_cache_stats(),
             sched: None,
             batch: None,
+            telemetry: self.audit.as_ref().map(|a| a.summary()),
         })
     }
 
@@ -525,6 +583,10 @@ impl Engine {
         } else {
             model
         };
+        let pre = self
+            .audit
+            .as_ref()
+            .map(|_| (plan_fingerprint(&plan.placements), plan.predicted));
         if let Some((p, dt)) = self.controller.on_regime_change(
             g,
             self.policy.as_ref(),
@@ -537,6 +599,23 @@ impl Engine {
             *plan = p;
             *req_latency += dt;
             self.device.advance(dt, 1.0, 0.0);
+            if let (Some((old_fp, pred_before)), Some(audit)) = (pre, self.audit.as_mut()) {
+                audit.record(PlanDecision {
+                    t_s: self.device.time_s(),
+                    stream,
+                    trigger: Trigger::RegimeChange.name(),
+                    old_fingerprint: old_fp,
+                    new_fingerprint: plan_fingerprint(&plan.placements),
+                    pred_before,
+                    pred_after: plan.predicted,
+                    cache_hit: dt == VIRTUAL_CACHE_HIT_S,
+                    corrector_version: self.profiler.version(),
+                    decision_s: dt,
+                    pred_s: [0.0; 2],
+                    actual_s: [0.0; 2],
+                    ops: [0; 2],
+                });
+            }
             emit(
                 observers,
                 &Event::RegimeReplan {
@@ -629,6 +708,11 @@ impl Engine {
         observers: &mut [&mut dyn SimObserver],
     ) -> Result<ServingReport> {
         let mut plans = self.build_plan_table(streams)?;
+        // telemetry is strictly write-only observation: the audit log and
+        // the wall-clock stage timers never read into the simulation, so
+        // the virtual timeline is byte-identical with them on or off
+        let mut audit = self.cfg.telemetry.then(|| AuditLog::new(streams.len()));
+        let mut timers = self.stage_timers.take();
         let mut admission = AdmissionStage::new(self.cfg.admission);
         let mut dispatch = DispatchStage::new(self.cfg.scheduler);
         let mut exec = ExecStage::new();
@@ -659,11 +743,16 @@ impl Engine {
             }
             // admit arrivals until one is active (shed arrivals pop the next)
             while !exec.has_active() {
-                match queue.pop() {
+                let lap = StageTimers::start(&timers);
+                let popped = queue.pop();
+                StageTimers::stop(&mut timers, Stage::Arrival, lap);
+                match popped {
                     Some((_, Event::Arrival { req, .. })) => {
                         let now = self.device.time_s();
+                        let lap = StageTimers::start(&timers);
                         self.admit_one(req, streams, &plans, &mut admission, &mut exec,
                             &mut dispatch, now, &mut arena, observers);
+                        StageTimers::stop(&mut timers, Stage::Admission, lap);
                     }
                     _ => break,
                 }
@@ -674,23 +763,31 @@ impl Engine {
 
             // the dispatch policy picks which request runs its next op
             // (held batch frontiers floor their candidates' start)
+            let lap = StageTimers::start(&timers);
             let d = match batcher.as_ref() {
                 Some(b) => dispatch.pick_floored(exec.active(), &plans, exec.avail(), b),
                 None => dispatch.pick(exec.active(), &plans, exec.avail()),
             };
+            StageTimers::stop(&mut timers, Stage::Dispatch, lap);
 
             // a strictly earlier queued arrival preempts the decision
             if queue.peek_arrival_time().is_some_and(|t| t < d.start_s) {
-                if let Some((_, Event::Arrival { req, .. })) = queue.pop() {
+                let lap = StageTimers::start(&timers);
+                let popped = queue.pop();
+                StageTimers::stop(&mut timers, Stage::Arrival, lap);
+                if let Some((_, Event::Arrival { req, .. })) = popped {
                     let now = self.device.time_s();
+                    let lap = StageTimers::start(&timers);
                     self.admit_one(req, streams, &plans, &mut admission, &mut exec,
                         &mut dispatch, now, &mut arena, observers);
+                    StageTimers::stop(&mut timers, Stage::Admission, lap);
                 }
                 continue; // re-evaluate (with the newcomer, or the next arrival)
             }
 
             // batch formation: collect the picked frontier's co-dispatchable
             // members and ask the policy to close or hold
+            let lap = StageTimers::start(&timers);
             let batch = match batcher.as_mut() {
                 Some(b) => {
                     let mut formed = b.form(d.active_idx, d.start_s, exec.active());
@@ -707,9 +804,22 @@ impl Engine {
                 }
                 None => None,
             };
+            StageTimers::stop(&mut timers, Stage::Queue, lap);
 
             // advance virtual time, then deliver a due monitor tick
             let start_s = exec.advance_to(&mut self.device, d.start_s);
+            let lap = StageTimers::start(&timers);
+            // snapshot every stream's plan identity before the tick: a
+            // regime change re-plans streams in bulk, and the audit wants
+            // the old→new pair per adopted plan
+            let pre_tick = audit.as_ref().map(|_| {
+                (0..streams.len())
+                    .map(|s| {
+                        let p = plans.plan(s);
+                        (plan_fingerprint(&p.placements), p.predicted)
+                    })
+                    .collect::<Vec<_>>()
+            });
             if let Some(tick) = monitor.maybe_tick(
                 &mut self.monitor, &self.device, &mut self.profiler, self.policy.as_ref(),
                 &mut self.controller, &mut self.plan_cache, &mut plans, streams,
@@ -720,6 +830,25 @@ impl Engine {
                 });
                 for (stream, dt) in &tick.replans {
                     exec.charge_cpu_decision(*dt); // decision runs on CPU
+                    if let (Some(a), Some(pre)) = (audit.as_mut(), pre_tick.as_ref()) {
+                        let (old_fp, pred_before) = pre[*stream];
+                        let newp = plans.plan(*stream);
+                        a.record(PlanDecision {
+                            t_s: self.device.time_s(),
+                            stream: *stream,
+                            trigger: Trigger::RegimeChange.name(),
+                            old_fingerprint: old_fp,
+                            new_fingerprint: plan_fingerprint(&newp.placements),
+                            pred_before,
+                            pred_after: newp.predicted,
+                            cache_hit: *dt == VIRTUAL_CACHE_HIT_S,
+                            corrector_version: self.profiler.version(),
+                            decision_s: *dt,
+                            pred_s: [0.0; 2],
+                            actual_s: [0.0; 2],
+                            ops: [0; 2],
+                        });
+                    }
                     emit(observers, &Event::RegimeReplan {
                         stream: *stream, t_s: self.device.time_s(),
                         trigger: Trigger::RegimeChange, decision_s: *dt,
@@ -727,14 +856,17 @@ impl Engine {
                 }
                 dispatch.invalidate_all();
             }
+            StageTimers::stop(&mut timers, Stage::Monitor, lap);
 
             if let Some(formed) = batch {
                 // batched dispatch: one measurement for every member
+                let lap = StageTimers::start(&timers);
                 let recs = exec.execute_batch(
                     &formed.members, start_s, streams, &plans, &mut self.device,
                     &mut self.profiler, dispatch.scheduler(), self.cfg.planner_info,
                     &mut self.numerics,
                 )?;
+                StageTimers::stop(&mut timers, Stage::Exec, lap);
                 for _ in &recs {
                     self.controller.tick();
                 }
@@ -742,6 +874,11 @@ impl Engine {
                     dispatch.note_op_executed(ai);
                 }
                 for rec in &recs {
+                    if let Some(a) = audit.as_mut() {
+                        let prof = plans.profile(rec.stream);
+                        let pred = prof[rec.op] - prof[rec.op + 1];
+                        a.observe_op(rec.stream, rec.placement, pred, rec.latency_s);
+                    }
                     emit(observers, &Event::OpDispatch {
                         request: rec.request, stream: rec.stream, op: rec.op,
                         start_s: rec.start_s, placement: rec.placement,
@@ -767,6 +904,12 @@ impl Engine {
                 }
 
                 // drift fast path (AdaOper only), anchored at the batch lead
+                let lap = StageTimers::start(&timers);
+                let pre_drift = audit.as_ref().map(|_| {
+                    let s = exec.active()[formed.members[0]].model;
+                    let p = plans.plan(s);
+                    (plan_fingerprint(&p.placements), p.predicted)
+                });
                 if let Some((stream, dt)) = monitor.maybe_drift(
                     formed.members[0], exec.active(), streams, &self.device,
                     &self.profiler, &mut self.controller, &mut plans, self.cfg.policy,
@@ -774,14 +917,34 @@ impl Engine {
                 ) {
                     exec.charge_cpu_decision(dt);
                     dispatch.invalidate_all();
+                    if let (Some((old_fp, pred_before)), Some(a)) = (pre_drift, audit.as_mut()) {
+                        let newp = plans.plan(stream);
+                        a.record(PlanDecision {
+                            t_s: self.device.time_s(),
+                            stream,
+                            trigger: Trigger::Drift.name(),
+                            old_fingerprint: old_fp,
+                            new_fingerprint: plan_fingerprint(&newp.placements),
+                            pred_before,
+                            pred_after: newp.predicted,
+                            cache_hit: false,
+                            corrector_version: self.profiler.version(),
+                            decision_s: dt,
+                            pred_s: [0.0; 2],
+                            actual_s: [0.0; 2],
+                            ops: [0; 2],
+                        });
+                    }
                     emit(observers, &Event::RegimeReplan {
                         stream, t_s: self.device.time_s(),
                         trigger: Trigger::Drift, decision_s: dt,
                     });
                 }
+                StageTimers::stop(&mut timers, Stage::Monitor, lap);
 
                 // completions in descending index order: swap_remove moves
                 // the tail, so lower member indices stay valid
+                let lap = StageTimers::start(&timers);
                 let mut done = formed.members.clone();
                 done.sort_unstable_by(|a, b| b.cmp(a));
                 for ai in done {
@@ -791,17 +954,25 @@ impl Engine {
                         emit_done(observers, &outcome, met);
                     }
                 }
+                StageTimers::stop(&mut timers, Stage::Queue, lap);
                 continue;
             }
 
             // execute the chosen op and account for it
+            let lap = StageTimers::start(&timers);
             let rec = exec.execute(
                 d.active_idx, start_s, streams, &plans, &mut self.device,
                 &mut self.profiler, dispatch.scheduler(), self.cfg.planner_info,
                 &mut self.numerics,
             )?;
+            StageTimers::stop(&mut timers, Stage::Exec, lap);
             self.controller.tick();
             dispatch.note_op_executed(d.active_idx);
+            if let Some(a) = audit.as_mut() {
+                let prof = plans.profile(rec.stream);
+                let pred = prof[rec.op] - prof[rec.op + 1];
+                a.observe_op(rec.stream, rec.placement, pred, rec.latency_s);
+            }
             emit(observers, &Event::OpDispatch {
                 request: rec.request, stream: rec.stream, op: rec.op,
                 start_s: rec.start_s, placement: rec.placement,
@@ -812,6 +983,12 @@ impl Engine {
             });
 
             // drift fast path (AdaOper only)
+            let lap = StageTimers::start(&timers);
+            let pre_drift = audit.as_ref().map(|_| {
+                let s = exec.active()[d.active_idx].model;
+                let p = plans.plan(s);
+                (plan_fingerprint(&p.placements), p.predicted)
+            });
             if let Some((stream, dt)) = monitor.maybe_drift(
                 d.active_idx, exec.active(), streams, &self.device, &self.profiler,
                 &mut self.controller, &mut plans, self.cfg.policy, self.cfg.planner_info,
@@ -819,24 +996,49 @@ impl Engine {
             ) {
                 exec.charge_cpu_decision(dt);
                 dispatch.invalidate_all();
+                if let (Some((old_fp, pred_before)), Some(a)) = (pre_drift, audit.as_mut()) {
+                    let newp = plans.plan(stream);
+                    a.record(PlanDecision {
+                        t_s: self.device.time_s(),
+                        stream,
+                        trigger: Trigger::Drift.name(),
+                        old_fingerprint: old_fp,
+                        new_fingerprint: plan_fingerprint(&newp.placements),
+                        pred_before,
+                        pred_after: newp.predicted,
+                        cache_hit: false,
+                        corrector_version: self.profiler.version(),
+                        decision_s: dt,
+                        pred_s: [0.0; 2],
+                        actual_s: [0.0; 2],
+                        ops: [0; 2],
+                    });
+                }
                 emit(observers, &Event::RegimeReplan {
                     stream, t_s: self.device.time_s(),
                     trigger: Trigger::Drift, decision_s: dt,
                 });
             }
+            StageTimers::stop(&mut timers, Stage::Monitor, lap);
 
             // completion
+            let lap = StageTimers::start(&timers);
             if let Some(outcome) = exec.complete_if_done(d.active_idx, &mut arena) {
                 dispatch.note_removed(d.active_idx);
                 let met = outcome.met_deadline();
                 emit_done(observers, &outcome, met);
             }
+            StageTimers::stop(&mut timers, Stage::Queue, lap);
         }
         let batch_stats = batcher.as_ref().map(|b| b.stats());
         self.arena = arena;
-        Ok(self.assemble_report(
+        self.stage_timers = timers;
+        let mut report = self.assemble_report(
             streams, &exec, &admission, dispatch.name(), total, batch_stats,
-        ))
+        );
+        report.telemetry = audit.as_ref().map(|a| a.summary());
+        self.audit = audit;
+        Ok(report)
     }
 
     /// One admission: run the controller, activate on success, and
@@ -923,6 +1125,7 @@ impl Engine {
             plan_cache: self.plan_cache_stats(),
             sched: Some(sched),
             batch,
+            telemetry: None,
         }
     }
 }

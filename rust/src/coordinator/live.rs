@@ -196,6 +196,7 @@ impl LiveSession {
             plan_cache: None,
             sched: None,
             batch: None,
+            telemetry: None,
         };
         Ok((report, last_output))
     }

@@ -36,6 +36,16 @@ pub enum Trigger {
     RegimeChange,
 }
 
+impl Trigger {
+    /// Stable lowercase label used in trace lines and the audit log.
+    pub fn name(self) -> &'static str {
+        match self {
+            Trigger::Drift => "drift",
+            Trigger::RegimeChange => "regime-change",
+        }
+    }
+}
+
 /// Controller state + statistics.
 pub struct RepartitionController {
     /// Windowed re-solver used on the drift fast path.

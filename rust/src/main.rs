@@ -3,7 +3,7 @@
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     if let Err(e) = adaoper::cli::commands::run(&argv) {
-        eprintln!("error: {e:#}");
+        adaoper::log_error!("{e:#}");
         std::process::exit(1);
     }
 }

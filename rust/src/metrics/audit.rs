@@ -1,0 +1,344 @@
+//! Plan-decision audit log.
+//!
+//! Every repartition the coordinator adopts — a drift correction or a
+//! monitor-tick regime change — is recorded as a [`PlanDecision`]: what
+//! triggered it, the old→new plan fingerprints, the planner's predicted
+//! latency/energy before and after, whether the plan cache served it, and
+//! the corrector version that priced it. Once the new plan runs, the
+//! engine feeds per-op predicted-vs-actual latencies back through
+//! [`AuditLog::observe_op`], attributing them to processors by placement
+//! fraction, so each decision accumulates per-processor residuals.
+//!
+//! The log is emitted as `plan_decision` JSONL lines alongside the
+//! [`crate::metrics::TraceObserver`] stream and summarized (decision
+//! count, median residual, worst regression) as the optional `audit`
+//! section of [`crate::metrics::ServingReport`]. It is entirely opt-in:
+//! with telemetry disabled no `AuditLog` exists and every report row stays
+//! byte-identical.
+
+use crate::partition::plan::PlanCost;
+use crate::soc::{Placement, Proc};
+
+/// FNV-1a fingerprint of a placement vector — a compact, stable identity
+/// for "which plan is this" across the audit stream. Split fractions hash
+/// by their exact bits, so any placement change changes the fingerprint.
+pub fn plan_fingerprint(placements: &[Placement]) -> u64 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = OFFSET;
+    let mut mix = |x: u64| {
+        for shift in [0, 8, 16, 24, 32, 40, 48, 56] {
+            h ^= (x >> shift) & 0xff;
+            h = h.wrapping_mul(PRIME);
+        }
+    };
+    for p in placements {
+        match *p {
+            Placement::Single(Proc::Cpu) => mix(0),
+            Placement::Single(Proc::Gpu) => mix(1),
+            Placement::Split { cpu_frac } => {
+                mix(2);
+                mix(cpu_frac.to_bits());
+            }
+        }
+    }
+    h
+}
+
+/// One adopted repartition, with its post-hoc residual accumulators.
+#[derive(Debug, Clone)]
+pub struct PlanDecision {
+    /// Virtual time the decision was adopted, seconds.
+    pub t_s: f64,
+    /// Stream whose plan changed.
+    pub stream: usize,
+    /// What triggered it (`"drift"` | `"regime-change"`).
+    pub trigger: &'static str,
+    /// Fingerprint of the plan being replaced.
+    pub old_fingerprint: u64,
+    /// Fingerprint of the adopted plan.
+    pub new_fingerprint: u64,
+    /// Planner prediction for the old plan (as of its own adoption).
+    pub pred_before: PlanCost,
+    /// Planner prediction for the new plan.
+    pub pred_after: PlanCost,
+    /// Whether the plan cache served the decision (no DP solve).
+    pub cache_hit: bool,
+    /// Online-corrector version that priced the solve (`None` when the
+    /// cost model carries no corrector, e.g. the device oracle).
+    pub corrector_version: Option<u64>,
+    /// Virtual decision time charged for the solve/lookup, seconds.
+    pub decision_s: f64,
+    /// Per-processor predicted op seconds accumulated under this plan
+    /// (CPU = index 0, GPU = 1), weighted by placement fraction.
+    pub pred_s: [f64; 2],
+    /// Per-processor observed op seconds under this plan.
+    pub actual_s: [f64; 2],
+    /// Ops that contributed to each processor's accumulators.
+    pub ops: [u64; 2],
+}
+
+impl PlanDecision {
+    /// Residual (actual − predicted, seconds) on one processor; `None`
+    /// when no op touched it under this plan.
+    pub fn residual_s(&self, p: Proc) -> Option<f64> {
+        let i = p.index();
+        (self.ops[i] > 0).then(|| self.actual_s[i] - self.pred_s[i])
+    }
+
+    /// The decision as a `plan_decision` JSONL line (fingerprints as hex
+    /// strings: u64 identities must not round-trip through f64).
+    pub fn jsonl(&self) -> String {
+        let proc_obj = |i: usize| {
+            format!(
+                "{{\"ops\":{},\"pred_s\":{},\"actual_s\":{}}}",
+                self.ops[i],
+                num(self.pred_s[i]),
+                num(self.actual_s[i])
+            )
+        };
+        format!(
+            "{{\"event\":\"plan_decision\",\"t_s\":{},\"stream\":{},\"trigger\":\"{}\",\
+             \"old_fp\":\"{:016x}\",\"new_fp\":\"{:016x}\",\
+             \"pred_before\":{{\"latency_s\":{},\"energy_j\":{}}},\
+             \"pred_after\":{{\"latency_s\":{},\"energy_j\":{}}},\
+             \"cache_hit\":{},\"corrector_version\":{},\"decision_s\":{},\
+             \"residuals\":{{\"cpu\":{},\"gpu\":{}}}}}",
+            num(self.t_s),
+            self.stream,
+            self.trigger,
+            self.old_fingerprint,
+            self.new_fingerprint,
+            num(self.pred_before.latency_s),
+            num(self.pred_before.energy_j),
+            num(self.pred_after.latency_s),
+            num(self.pred_after.energy_j),
+            self.cache_hit,
+            match self.corrector_version {
+                Some(v) => v.to_string(),
+                None => "null".to_string(),
+            },
+            num(self.decision_s),
+            proc_obj(0),
+            proc_obj(1),
+        )
+    }
+}
+
+/// JSON number formatting matching the trace writer: finite floats print
+/// shortest-round-trip via `Display`, non-finite become `null`.
+fn num(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x}")
+    } else {
+        "null".to_string()
+    }
+}
+
+/// The audit log one serving run accumulates.
+#[derive(Debug, Clone)]
+pub struct AuditLog {
+    decisions: Vec<PlanDecision>,
+    /// Per stream, index of the decision currently accumulating residuals
+    /// (the most recently adopted plan).
+    open: Vec<Option<usize>>,
+}
+
+impl AuditLog {
+    /// Empty log for `streams` streams.
+    pub fn new(streams: usize) -> AuditLog {
+        AuditLog { decisions: Vec::new(), open: vec![None; streams] }
+    }
+
+    /// Record one adopted repartition; subsequent
+    /// [`AuditLog::observe_op`] calls for its stream accrue to it.
+    pub fn record(&mut self, d: PlanDecision) {
+        let stream = d.stream;
+        self.decisions.push(d);
+        if stream < self.open.len() {
+            self.open[stream] = Some(self.decisions.len() - 1);
+        }
+    }
+
+    /// Feed one executed op's predicted and observed latency back into the
+    /// stream's open decision, split across processors by placement
+    /// fraction. A no-op for streams that never repartitioned.
+    pub fn observe_op(&mut self, stream: usize, placement: Placement, pred_s: f64, actual_s: f64) {
+        let Some(&Some(idx)) = self.open.get(stream) else {
+            return;
+        };
+        let d = &mut self.decisions[idx];
+        for p in Proc::ALL {
+            let frac = placement.frac_on(p);
+            if frac > 0.0 {
+                let i = p.index();
+                d.pred_s[i] += pred_s * frac;
+                d.actual_s[i] += actual_s * frac;
+                d.ops[i] += 1;
+            }
+        }
+    }
+
+    /// Every recorded decision, in adoption order.
+    pub fn decisions(&self) -> &[PlanDecision] {
+        &self.decisions
+    }
+
+    /// One `plan_decision` JSONL line per decision.
+    pub fn jsonl_lines(&self) -> Vec<String> {
+        self.decisions.iter().map(PlanDecision::jsonl).collect()
+    }
+
+    /// Aggregate summary for the serving report.
+    pub fn summary(&self) -> AuditSummary {
+        let mut residuals_ms: Vec<f64> = Vec::new();
+        for d in &self.decisions {
+            for p in Proc::ALL {
+                if let Some(r) = d.residual_s(p) {
+                    residuals_ms.push(r * 1e3);
+                }
+            }
+        }
+        residuals_ms.sort_by(f64::total_cmp);
+        let median_residual_ms = if residuals_ms.is_empty() {
+            None
+        } else {
+            let n = residuals_ms.len();
+            Some(if n % 2 == 1 {
+                residuals_ms[n / 2]
+            } else {
+                0.5 * (residuals_ms[n / 2 - 1] + residuals_ms[n / 2])
+            })
+        };
+        AuditSummary {
+            decisions: self.decisions.len(),
+            drift: self.decisions.iter().filter(|d| d.trigger == "drift").count(),
+            regime: self.decisions.iter().filter(|d| d.trigger == "regime-change").count(),
+            cache_hits: self.decisions.iter().filter(|d| d.cache_hit).count(),
+            median_residual_ms,
+            worst_regression_ms: residuals_ms.last().copied(),
+        }
+    }
+}
+
+/// Compressed audit outcome carried by
+/// [`crate::metrics::ServingReport::telemetry`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct AuditSummary {
+    /// Repartitions recorded.
+    pub decisions: usize,
+    /// … of which drift-triggered.
+    pub drift: usize,
+    /// … of which regime-change-triggered.
+    pub regime: usize,
+    /// … of which served from the plan cache.
+    pub cache_hits: usize,
+    /// Median per-processor residual (actual − predicted op-seconds under
+    /// the adopted plan), milliseconds; `None` when no plan ran.
+    pub median_residual_ms: Option<f64>,
+    /// Worst (most positive) residual — the largest under-prediction,
+    /// milliseconds; `None` when no plan ran.
+    pub worst_regression_ms: Option<f64>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn decision(stream: usize, trigger: &'static str, cache_hit: bool) -> PlanDecision {
+        PlanDecision {
+            t_s: 0.5,
+            stream,
+            trigger,
+            old_fingerprint: plan_fingerprint(&[Placement::CPU, Placement::GPU]),
+            new_fingerprint: plan_fingerprint(&[Placement::GPU, Placement::GPU]),
+            pred_before: PlanCost { latency_s: 0.040, energy_j: 0.2, ..Default::default() },
+            pred_after: PlanCost { latency_s: 0.030, energy_j: 0.15, ..Default::default() },
+            cache_hit,
+            corrector_version: Some(3),
+            decision_s: 1e-5,
+            pred_s: [0.0; 2],
+            actual_s: [0.0; 2],
+            ops: [0; 2],
+        }
+    }
+
+    #[test]
+    fn fingerprint_distinguishes_plans() {
+        let a = plan_fingerprint(&[Placement::CPU, Placement::GPU]);
+        let b = plan_fingerprint(&[Placement::GPU, Placement::CPU]);
+        let c = plan_fingerprint(&[Placement::CPU, Placement::GPU]);
+        assert_ne!(a, b);
+        assert_eq!(a, c);
+        let s1 = plan_fingerprint(&[Placement::Split { cpu_frac: 0.25 }]);
+        let s2 = plan_fingerprint(&[Placement::Split { cpu_frac: 0.30 }]);
+        assert_ne!(s1, s2);
+    }
+
+    #[test]
+    fn observe_op_attributes_by_placement_fraction() {
+        let mut log = AuditLog::new(2);
+        log.record(decision(0, "drift", false));
+        // whole-op on GPU: everything lands on proc 1
+        log.observe_op(0, Placement::GPU, 0.010, 0.012);
+        // split 0.25: quarter to CPU, three quarters to GPU
+        log.observe_op(0, Placement::Split { cpu_frac: 0.25 }, 0.008, 0.008);
+        // stream 1 never repartitioned: silently ignored
+        log.observe_op(1, Placement::CPU, 1.0, 2.0);
+        let d = &log.decisions()[0];
+        assert_eq!(d.ops, [1, 2]);
+        assert!((d.pred_s[0] - 0.002).abs() < 1e-12);
+        assert!((d.actual_s[0] - 0.002).abs() < 1e-12);
+        assert!((d.pred_s[1] - 0.016).abs() < 1e-12);
+        assert!((d.actual_s[1] - 0.018).abs() < 1e-12);
+        assert!((d.residual_s(Proc::Gpu).unwrap() - 0.002).abs() < 1e-12);
+        assert_eq!(log.decisions().len(), 1);
+    }
+
+    #[test]
+    fn summary_matches_hand_computed_oracle() {
+        // two decisions; residuals (ms): GPU +2.0 (d0), CPU -1.0 and
+        // GPU +0.5 (d1) → sorted [-1.0, +0.5, +2.0], median +0.5, worst +2.0
+        let mut log = AuditLog::new(1);
+        log.record(decision(0, "drift", false));
+        log.observe_op(0, Placement::GPU, 0.010, 0.012);
+        log.record(decision(0, "regime-change", true));
+        log.observe_op(0, Placement::CPU, 0.005, 0.004);
+        log.observe_op(0, Placement::GPU, 0.0100, 0.0105);
+        let s = log.summary();
+        assert_eq!(s.decisions, 2);
+        assert_eq!(s.drift, 1);
+        assert_eq!(s.regime, 1);
+        assert_eq!(s.cache_hits, 1);
+        assert!((s.median_residual_ms.unwrap() - 0.5).abs() < 1e-9);
+        assert!((s.worst_regression_ms.unwrap() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_summary_has_no_residuals() {
+        let log = AuditLog::new(1);
+        let s = log.summary();
+        assert_eq!(s.decisions, 0);
+        assert_eq!(s.median_residual_ms, None);
+        assert_eq!(s.worst_regression_ms, None);
+    }
+
+    #[test]
+    fn jsonl_round_trips_through_the_parser() {
+        let mut log = AuditLog::new(1);
+        log.record(decision(0, "drift", false));
+        log.observe_op(0, Placement::GPU, 0.010, 0.012);
+        let lines = log.jsonl_lines();
+        assert_eq!(lines.len(), 1);
+        let v = crate::util::json::Json::parse(&lines[0]).unwrap();
+        assert_eq!(v.need_str("event").unwrap(), "plan_decision");
+        assert_eq!(v.need_str("trigger").unwrap(), "drift");
+        assert!(!v.need_bool("cache_hit").unwrap());
+        assert_eq!(v.get("corrector_version").unwrap().as_u64(), Some(3));
+        let gpu = v.get("residuals").unwrap().get("gpu").unwrap();
+        assert_eq!(gpu.need_u64("ops").unwrap(), 1);
+        assert_eq!(gpu.need_f64("actual_s").unwrap(), 0.012);
+        // fingerprints travel as 16-digit hex strings
+        assert_eq!(v.need_str("old_fp").unwrap().len(), 16);
+    }
+}

@@ -1,15 +1,22 @@
 //! Serving metrics: latency distributions, energy accounting, mergeable
-//! histograms for fleet-scale aggregation, per-request JSONL traces, and
-//! the aggregate report the benches and CLI print.
+//! histograms for fleet-scale aggregation, per-request JSONL traces,
+//! the plan-decision audit log, the telemetry registry, the Perfetto
+//! trace-event exporter, and the aggregate report the benches and CLI
+//! print.
 
+pub mod audit;
 pub mod energy;
 pub mod histogram;
 pub mod latency;
+pub mod perfetto;
+pub mod registry;
 pub mod report;
 pub mod trace;
 
+pub use audit::{plan_fingerprint, AuditLog, AuditSummary, PlanDecision};
 pub use energy::EnergyAccount;
 pub use histogram::LogHistogram;
 pub use latency::LatencyRecorder;
+pub use registry::TelemetryRegistry;
 pub use report::{BatchStats, PlanCacheStats, SchedStats, ServingReport};
 pub use trace::{TraceMeta, TraceObserver};

@@ -1,0 +1,305 @@
+//! Chrome trace-event (Perfetto) export of a recorded serving trace.
+//!
+//! `adaoper inspect <trace.jsonl> --perfetto out.json` turns the JSONL
+//! stream [`crate::metrics::TraceObserver`] writes into the Chrome
+//! trace-event JSON format (`{"traceEvents":[…]}`) that
+//! `chrome://tracing` and [ui.perfetto.dev](https://ui.perfetto.dev)
+//! open directly:
+//!
+//! * one **track per processor** (tid 1 = `cpu`, tid 2 = `gpu`) carrying
+//!   complete (`"ph":"X"`) spans for every executed operator — a `split`
+//!   op draws a span on both tracks;
+//! * instant (`"ph":"i"`) markers for **batch closes** (tid 10),
+//!   **monitor ticks** (tid 11), and **plan switches** (tid 12, from
+//!   `replan` / `plan_decision` lines);
+//! * metadata (`"ph":"M"`) naming the process and every track.
+//!
+//! Timestamps are virtual seconds scaled to microseconds (the trace-event
+//! unit). The export is deterministic: events are emitted in trace line
+//! order, so a fixed-seed trace produces a byte-identical export (pinned
+//! by `rust/tests/golden_perfetto.rs`). [`validate`] re-parses an export
+//! and checks that every span nests correctly per track — the
+//! `make inspect-smoke` gate.
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::util::json::Json;
+
+const PID: u64 = 1;
+const TID_CPU: u64 = 1;
+const TID_GPU: u64 = 2;
+const TID_BATCH: u64 = 10;
+const TID_MONITOR: u64 = 11;
+const TID_PLAN: u64 = 12;
+
+/// Span-nesting tolerance, microseconds (floating-point scale slop).
+const NEST_EPS_US: f64 = 1e-6;
+
+fn us(x: f64) -> String {
+    let v = x * 1e6;
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "0".to_string()
+    }
+}
+
+fn meta_event(tid: Option<u64>, key: &str, name: &str) -> String {
+    match tid {
+        Some(t) => format!(
+            "{{\"ph\":\"M\",\"pid\":{PID},\"tid\":{t},\"name\":\"{key}\",\
+             \"args\":{{\"name\":\"{name}\"}}}}"
+        ),
+        None => format!(
+            "{{\"ph\":\"M\",\"pid\":{PID},\"name\":\"{key}\",\
+             \"args\":{{\"name\":\"{name}\"}}}}"
+        ),
+    }
+}
+
+/// Which processor tracks a placement label draws on.
+fn tids_of(placement: &str) -> Vec<u64> {
+    if placement == "cpu" {
+        vec![TID_CPU]
+    } else if placement == "gpu" {
+        vec![TID_GPU]
+    } else {
+        // split(0.xx) co-executes on both
+        vec![TID_CPU, TID_GPU]
+    }
+}
+
+/// Convert a JSONL trace (as text) to Chrome trace-event JSON.
+pub fn export_str(jsonl: &str) -> Result<String> {
+    let mut events: Vec<String> = vec![
+        meta_event(None, "process_name", "adaoper"),
+        meta_event(Some(TID_CPU), "thread_name", "cpu"),
+        meta_event(Some(TID_GPU), "thread_name", "gpu"),
+        meta_event(Some(TID_BATCH), "thread_name", "batches"),
+        meta_event(Some(TID_MONITOR), "thread_name", "monitor"),
+        meta_event(Some(TID_PLAN), "thread_name", "plans"),
+    ];
+    let mut requests = 0usize;
+    for (i, line) in jsonl.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let obj = Json::parse(line).with_context(|| format!("trace line {}", i + 1))?;
+        match obj.get("event").and_then(Json::as_str) {
+            Some("trace_header") | Some("report") | Some("stage_timers") => {}
+            Some("batch_close") => {
+                events.push(format!(
+                    "{{\"ph\":\"i\",\"pid\":{PID},\"tid\":{TID_BATCH},\"s\":\"t\",\
+                     \"cat\":\"batch\",\"name\":\"batch s{} op{} x{}\",\"ts\":{},\
+                     \"args\":{{\"size\":{},\"wait_us\":{}}}}}",
+                    obj.need_usize("stream")?,
+                    obj.need_usize("op")?,
+                    obj.need_usize("size")?,
+                    us(obj.need_f64("t_s")?),
+                    obj.need_usize("size")?,
+                    us(obj.need_f64("wait_s")?),
+                ));
+            }
+            Some("monitor_tick") => {
+                let changed = obj.need_bool("regime_changed")?;
+                events.push(format!(
+                    "{{\"ph\":\"i\",\"pid\":{PID},\"tid\":{TID_MONITOR},\"s\":\"t\",\
+                     \"cat\":\"monitor\",\"name\":\"{}\",\"ts\":{}}}",
+                    if changed { "regime change" } else { "monitor tick" },
+                    us(obj.need_f64("t_s")?),
+                ));
+            }
+            Some("replan") => {
+                events.push(format!(
+                    "{{\"ph\":\"i\",\"pid\":{PID},\"tid\":{TID_PLAN},\"s\":\"t\",\
+                     \"cat\":\"plan\",\"name\":\"replan {} s{}\",\"ts\":{},\
+                     \"args\":{{\"decision_us\":{}}}}}",
+                    obj.need_str("trigger")?,
+                    obj.need_usize("stream")?,
+                    us(obj.need_f64("t_s")?),
+                    us(obj.need_f64("decision_s")?),
+                ));
+            }
+            Some("plan_decision") => {
+                events.push(format!(
+                    "{{\"ph\":\"i\",\"pid\":{PID},\"tid\":{TID_PLAN},\"s\":\"t\",\
+                     \"cat\":\"plan\",\"name\":\"plan-switch {} s{}\",\"ts\":{},\
+                     \"args\":{{\"old_fp\":\"{}\",\"new_fp\":\"{}\",\"cache_hit\":{}}}}}",
+                    obj.need_str("trigger")?,
+                    obj.need_usize("stream")?,
+                    us(obj.need_f64("t_s")?),
+                    obj.need_str("old_fp")?,
+                    obj.need_str("new_fp")?,
+                    obj.need_bool("cache_hit")?,
+                ));
+            }
+            Some(other) => bail!("trace line {}: unknown event `{other}`", i + 1),
+            None => {
+                // a request line; shed ones carry no ops
+                if obj.need_bool("shed")? {
+                    continue;
+                }
+                requests += 1;
+                let id = obj.need_usize("id")?;
+                let stream = obj.need_usize("stream")?;
+                for op in obj.need_arr("ops")? {
+                    let placement = op.need_str("placement")?;
+                    let k = op.need_usize("op")?;
+                    for tid in tids_of(placement) {
+                        events.push(format!(
+                            "{{\"ph\":\"X\",\"pid\":{PID},\"tid\":{tid},\
+                             \"cat\":\"op\",\"name\":\"s{stream}:op{k}\",\"ts\":{},\"dur\":{},\
+                             \"args\":{{\"request\":{id},\"placement\":\"{placement}\"}}}}",
+                            us(op.need_f64("start_s")?),
+                            us(op.need_f64("latency_s")?),
+                        ));
+                    }
+                }
+            }
+        }
+    }
+    ensure!(
+        requests > 0 || events.len() > 6,
+        "trace carries no completed requests or kernel events to export"
+    );
+    let mut out = String::from("{\"traceEvents\":[\n");
+    for (i, e) in events.iter().enumerate() {
+        if i > 0 {
+            out.push_str(",\n");
+        }
+        out.push_str(e);
+    }
+    out.push_str("\n]}\n");
+    Ok(out)
+}
+
+/// Validate a Chrome trace-event export: it parses, every event carries a
+/// phase and timestamp, and complete spans nest correctly within each
+/// `(pid, tid)` track (identical and contained spans allowed — batched
+/// requests draw identical spans). Returns the number of events checked.
+pub fn validate(json: &str) -> Result<usize> {
+    let v = Json::parse(json).context("parsing trace-event JSON")?;
+    let events = v.need_arr("traceEvents")?;
+    // (pid, tid) -> [(ts, dur)]
+    let mut tracks: std::collections::BTreeMap<(u64, u64), Vec<(f64, f64)>> =
+        std::collections::BTreeMap::new();
+    for (i, e) in events.iter().enumerate() {
+        let ph = e.need_str("ph").with_context(|| format!("event {i}"))?;
+        match ph {
+            "M" => {}
+            "i" => {
+                e.need_f64("ts").with_context(|| format!("instant event {i}"))?;
+            }
+            "X" => {
+                let ts = e.need_f64("ts").with_context(|| format!("span event {i}"))?;
+                let dur = e.need_f64("dur").with_context(|| format!("span event {i}"))?;
+                ensure!(dur >= 0.0, "span event {i} has negative duration {dur}");
+                let pid = e.need_u64("pid")?;
+                let tid = e.need_u64("tid")?;
+                tracks.entry((pid, tid)).or_default().push((ts, dur));
+            }
+            other => bail!("event {i} has unsupported phase `{other}`"),
+        }
+    }
+    for ((pid, tid), spans) in &mut tracks {
+        // sort by start time, longer span first on ties, so a containing
+        // span precedes its children
+        spans.sort_by(|a, b| a.0.total_cmp(&b.0).then(b.1.total_cmp(&a.1)));
+        let mut stack: Vec<f64> = Vec::new();
+        for &(ts, dur) in spans.iter() {
+            while let Some(&top) = stack.last() {
+                if ts >= top - NEST_EPS_US {
+                    stack.pop();
+                } else {
+                    break;
+                }
+            }
+            let end = ts + dur;
+            if let Some(&top) = stack.last() {
+                ensure!(
+                    end <= top + NEST_EPS_US,
+                    "track pid={pid} tid={tid}: span [{ts}, {end}] overlaps the \
+                     enclosing span ending at {top} without nesting"
+                );
+            }
+            stack.push(end);
+        }
+    }
+    Ok(events.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_trace() -> String {
+        [
+            r#"{"id":0,"stream":0,"arrival_s":0.01,"deadline_s":0.26,"shed":false,"start_s":0.012,"finish_s":0.05,"latency_s":0.04,"queue_s":0.002,"energy_j":0.02,"met_deadline":true,"ops":[{"op":0,"start_s":0.012,"latency_s":0.01,"energy_j":0.004,"placement":"gpu"},{"op":1,"start_s":0.022,"latency_s":0.008,"energy_j":0.003,"placement":"split(0.30)"}]}"#,
+            r#"{"id":1,"stream":0,"arrival_s":0.30,"deadline_s":0.55,"shed":true}"#,
+            r#"{"event":"batch_close","stream":0,"op":0,"t_s":0.4,"size":3,"wait_s":0.002}"#,
+            r#"{"event":"monitor_tick","t_s":0.5,"regime_changed":true}"#,
+            r#"{"event":"replan","stream":0,"t_s":0.5,"trigger":"regime-change","decision_s":0.000002}"#,
+            r#"{"event":"plan_decision","t_s":0.5,"stream":0,"trigger":"regime-change","old_fp":"00000000000000aa","new_fp":"00000000000000bb","pred_before":{"latency_s":0.04,"energy_j":0.2},"pred_after":{"latency_s":0.03,"energy_j":0.15},"cache_hit":true,"corrector_version":1,"decision_s":0.000002,"residuals":{"cpu":{"ops":0,"pred_s":0,"actual_s":0},"gpu":{"ops":0,"pred_s":0,"actual_s":0}}}"#,
+        ]
+        .join("\n")
+    }
+
+    #[test]
+    fn export_draws_processor_tracks_and_plan_instants() {
+        let out = export_str(&sample_trace()).unwrap();
+        assert!(out.contains("\"thread_name\""));
+        // split op lands on both tracks: one cpu span + two gpu spans
+        assert_eq!(out.matches("\"tid\":1,\"cat\":\"op\"").count(), 1, "{out}");
+        assert_eq!(out.matches("\"tid\":2,\"cat\":\"op\"").count(), 2, "{out}");
+        assert!(out.contains("plan-switch regime-change s0"));
+        assert!(out.contains("replan regime-change s0"));
+        assert!(out.contains("regime change"));
+        assert!(out.contains("batch s0 op0 x3"));
+        // shed request draws nothing
+        assert!(!out.contains("\"request\":1"));
+    }
+
+    #[test]
+    fn export_validates() {
+        let out = export_str(&sample_trace()).unwrap();
+        let n = validate(&out).unwrap();
+        assert!(n >= 9, "{n}");
+    }
+
+    #[test]
+    fn validate_allows_identical_and_nested_spans() {
+        let ok = r#"{"traceEvents":[
+            {"ph":"X","pid":1,"tid":1,"name":"a","ts":0,"dur":10},
+            {"ph":"X","pid":1,"tid":1,"name":"a","ts":0,"dur":10},
+            {"ph":"X","pid":1,"tid":1,"name":"b","ts":2,"dur":3},
+            {"ph":"X","pid":1,"tid":1,"name":"c","ts":12,"dur":1}
+        ]}"#;
+        assert_eq!(validate(ok).unwrap(), 4);
+    }
+
+    #[test]
+    fn validate_rejects_partial_overlap() {
+        let bad = r#"{"traceEvents":[
+            {"ph":"X","pid":1,"tid":1,"name":"a","ts":0,"dur":10},
+            {"ph":"X","pid":1,"tid":1,"name":"b","ts":5,"dur":10}
+        ]}"#;
+        let err = validate(bad).unwrap_err().to_string();
+        assert!(err.contains("without nesting"), "{err}");
+    }
+
+    #[test]
+    fn validate_rejects_negative_duration_and_bad_phase() {
+        let neg = r#"{"traceEvents":[{"ph":"X","pid":1,"tid":1,"ts":0,"dur":-1}]}"#;
+        assert!(validate(neg).is_err());
+        let ph = r#"{"traceEvents":[{"ph":"Z","ts":0}]}"#;
+        assert!(validate(ph).is_err());
+    }
+
+    #[test]
+    fn export_rejects_empty_traces() {
+        assert!(export_str("").is_err());
+        let header_only = r#"{"event":"report","row":"x"}"#;
+        assert!(export_str(header_only).is_err());
+    }
+}

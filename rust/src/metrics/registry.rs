@@ -1,0 +1,239 @@
+//! Named telemetry registry: counters, gauges, and log-bucket histograms.
+//!
+//! The registry is the fleet-facing half of the observability layer. A
+//! per-device run populates one (typically from its
+//! [`crate::sim::EventCounters`] and latency histogram), and the sharded
+//! fleet runner folds them the same way [`crate::fleet::FleetReport`]
+//! merges class aggregates: **in device order**, through
+//! [`TelemetryRegistry::merge`]. All three stores are `BTreeMap`-keyed, so
+//! iteration order — and therefore every rendered line and every float
+//! summation order — is independent of thread count, making the merged
+//! registry bit-identical for any sharding (pinned by
+//! `rust/tests/telemetry.rs`).
+//!
+//! Everything here is zero-dependency and off by default: nothing in the
+//! engine touches a registry unless telemetry was explicitly enabled.
+
+use std::collections::BTreeMap;
+
+use crate::sim::EventCounters;
+
+use super::histogram::LogHistogram;
+
+/// A named bag of counters, gauges, and mergeable histograms.
+#[derive(Debug, Clone, Default)]
+pub struct TelemetryRegistry {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    histograms: BTreeMap<String, LogHistogram>,
+}
+
+impl TelemetryRegistry {
+    /// Empty registry.
+    pub fn new() -> TelemetryRegistry {
+        TelemetryRegistry::default()
+    }
+
+    /// Add `by` to the named counter (created at zero on first touch).
+    pub fn inc(&mut self, name: &str, by: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += by;
+    }
+
+    /// Current value of a counter (0 when never touched).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    /// Add `v` to the named gauge (gauges merge additively across shards,
+    /// so totals like energy or busy-seconds stay exact).
+    pub fn add_gauge(&mut self, name: &str, v: f64) {
+        *self.gauges.entry(name.to_string()).or_insert(0.0) += v;
+    }
+
+    /// Current value of a gauge (`None` when never touched).
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.get(name).copied()
+    }
+
+    /// Record one sample into the named histogram, creating it with the
+    /// standard latency boundaries ([`LogHistogram::latency`]) on first
+    /// touch so cross-shard merges are always compatible.
+    pub fn record(&mut self, name: &str, x: f64) {
+        self.histograms
+            .entry(name.to_string())
+            .or_insert_with(LogHistogram::latency)
+            .record(x);
+    }
+
+    /// Fold a pre-built histogram into the named slot (merging when the
+    /// slot exists; panics on incompatible boundaries, same as
+    /// [`LogHistogram::merge`]).
+    pub fn merge_histogram(&mut self, name: &str, h: &LogHistogram) {
+        match self.histograms.get_mut(name) {
+            Some(mine) => mine.merge(h),
+            None => {
+                self.histograms.insert(name.to_string(), h.clone());
+            }
+        }
+    }
+
+    /// The named histogram (`None` when never touched).
+    pub fn histogram(&self, name: &str) -> Option<&LogHistogram> {
+        self.histograms.get(name)
+    }
+
+    /// True when nothing was recorded.
+    pub fn is_empty(&self) -> bool {
+        self.counters.is_empty() && self.gauges.is_empty() && self.histograms.is_empty()
+    }
+
+    /// Fold `other` into `self`: counters and gauges add, histograms
+    /// merge. Both sides iterate in key order, so folding a fixed sequence
+    /// of registries is associative and bit-identical regardless of how
+    /// the sequence was sharded (as long as fold order is preserved —
+    /// which the fleet runner guarantees by merging in device order).
+    pub fn merge(&mut self, other: &TelemetryRegistry) {
+        for (k, v) in &other.counters {
+            *self.counters.entry(k.clone()).or_insert(0) += v;
+        }
+        for (k, v) in &other.gauges {
+            *self.gauges.entry(k.clone()).or_insert(0.0) += v;
+        }
+        for (k, h) in &other.histograms {
+            self.merge_histogram(k, h);
+        }
+    }
+
+    /// Populate the standard `sim.*` counters from kernel event tallies.
+    pub fn absorb_counters(&mut self, c: &EventCounters) {
+        for (name, v) in [
+            ("sim.offered", c.offered),
+            ("sim.admitted", c.admitted),
+            ("sim.shed", c.shed),
+            ("sim.op_dispatches", c.op_dispatches),
+            ("sim.op_completes", c.op_completes),
+            ("sim.monitor_ticks", c.monitor_ticks),
+            ("sim.regime_changes", c.regime_changes),
+            ("sim.replans", c.replans),
+            ("sim.completed", c.completed),
+            ("sim.deadline_misses", c.deadline_misses),
+            ("sim.batch_closes", c.batch_closes),
+            ("sim.batched_requests", c.batched_requests),
+        ] {
+            self.inc(name, v as u64);
+        }
+    }
+
+    /// Deterministic human-readable listing (also the bit-identity probe
+    /// the tests compare: two registries render identically iff their
+    /// contents are identical to the displayed precision, and counters
+    /// and histogram counts compare exactly).
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        for (k, v) in &self.counters {
+            s.push_str(&format!("counter {k} = {v}\n"));
+        }
+        for (k, v) in &self.gauges {
+            s.push_str(&format!("gauge   {k} = {v}\n"));
+        }
+        for (k, h) in &self.histograms {
+            s.push_str(&format!(
+                "hist    {k}: n={} mean={:?} p50={:?} p95={:?} max={:?}\n",
+                h.count(),
+                h.mean(),
+                h.quantile(0.50),
+                h.quantile(0.95),
+                h.max()
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(seed: u64) -> TelemetryRegistry {
+        let mut r = TelemetryRegistry::new();
+        r.inc("sim.offered", seed + 3);
+        r.inc("sim.completed", seed);
+        r.add_gauge("energy_j", seed as f64 * 0.125);
+        for i in 0..seed {
+            r.record("latency_s", 1e-3 * (i + 1) as f64);
+        }
+        r
+    }
+
+    #[test]
+    fn counters_gauges_histograms_roundtrip() {
+        let mut r = TelemetryRegistry::new();
+        assert!(r.is_empty());
+        r.inc("a", 2);
+        r.inc("a", 3);
+        r.add_gauge("g", 1.5);
+        r.record("h", 0.01);
+        assert_eq!(r.counter("a"), 5);
+        assert_eq!(r.counter("missing"), 0);
+        assert_eq!(r.gauge("g"), Some(1.5));
+        assert_eq!(r.gauge("missing"), None);
+        assert_eq!(r.histogram("h").unwrap().count(), 1);
+        assert!(!r.is_empty());
+    }
+
+    #[test]
+    fn merge_is_grouping_independent() {
+        // fold [r0, r1, r2, r3] serially vs. in two pre-merged halves:
+        // counters, gauge bits, and histogram counts must match exactly
+        let parts: Vec<TelemetryRegistry> = (0..4).map(|i| sample(i * 7 + 1)).collect();
+        let mut serial = TelemetryRegistry::new();
+        for p in &parts {
+            serial.merge(p);
+        }
+        let mut left = TelemetryRegistry::new();
+        left.merge(&parts[0]);
+        left.merge(&parts[1]);
+        let mut right = TelemetryRegistry::new();
+        right.merge(&parts[2]);
+        right.merge(&parts[3]);
+        let mut halves = TelemetryRegistry::new();
+        halves.merge(&left);
+        halves.merge(&right);
+        assert_eq!(serial.render(), halves.render());
+        assert_eq!(
+            serial.gauge("energy_j").unwrap().to_bits(),
+            halves.gauge("energy_j").unwrap().to_bits()
+        );
+        assert_eq!(
+            serial.histogram("latency_s").unwrap().counts(),
+            halves.histogram("latency_s").unwrap().counts()
+        );
+    }
+
+    #[test]
+    fn absorb_counters_populates_standard_keys() {
+        let c = EventCounters {
+            offered: 10,
+            completed: 8,
+            shed: 2,
+            ..Default::default()
+        };
+        let mut r = TelemetryRegistry::new();
+        r.absorb_counters(&c);
+        assert_eq!(r.counter("sim.offered"), 10);
+        assert_eq!(r.counter("sim.completed"), 8);
+        assert_eq!(r.counter("sim.shed"), 2);
+        assert_eq!(r.counter("sim.replans"), 0);
+    }
+
+    #[test]
+    fn render_lists_in_key_order() {
+        let mut r = TelemetryRegistry::new();
+        r.inc("zeta", 1);
+        r.inc("alpha", 1);
+        let out = r.render();
+        let a = out.find("alpha").unwrap();
+        let z = out.find("zeta").unwrap();
+        assert!(a < z, "{out}");
+    }
+}

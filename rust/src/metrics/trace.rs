@@ -72,6 +72,9 @@ pub struct TraceObserver {
     pending: HashMap<usize, ReqTrace>,
     lines: Vec<String>,
     meta: Option<TraceMeta>,
+    /// Opt-in: also emit `monitor_tick` / `replan` event lines (the
+    /// telemetry path; legacy traces stay byte-identical when off).
+    kernel_events: bool,
 }
 
 /// JSON-safe float: finite values print via `Display`, everything else
@@ -231,7 +234,7 @@ impl TraceMeta {
              \"eta\":{},\"subsample\":{},\"min_leaf\":{},\"bins\":{},\"gbdt_seed\":{}}},\
              \"plan_cache\":{{\"capacity\":{},\"freq_bucket_hz\":{},\"util_bucket\":{},\
              \"temp_bucket_c\":{},\"bw_bucket\":{}}},\
-             \"streams\":[{}],\"timeline\":[{}]}}",
+             \"streams\":[{}],\"timeline\":[{}]{}}}",
             self.cfg.seed,
             json_f64(self.cfg.duration_s),
             self.cfg.policy.name(),
@@ -267,6 +270,8 @@ impl TraceMeta {
             json_f64(pc.bw_bucket),
             streams,
             timeline,
+            // off-path headers keep their exact pre-telemetry bytes
+            if self.cfg.telemetry { ",\"telemetry\":true" } else { "" },
         )
     }
 }
@@ -286,7 +291,22 @@ impl TraceObserver {
             pending: HashMap::new(),
             lines: vec![meta.header_line()],
             meta: Some(meta),
+            kernel_events: false,
         }
+    }
+
+    /// Builder: also emit standalone `monitor_tick` and `replan` event
+    /// lines as the kernel delivers them (the `--telemetry` trace shape;
+    /// the Perfetto exporter turns these into instant markers).
+    pub fn with_kernel_events(mut self) -> TraceObserver {
+        self.kernel_events = true;
+        self
+    }
+
+    /// Append one pre-rendered JSONL line (the engine uses this to attach
+    /// `plan_decision` and `stage_timers` telemetry lines to the stream).
+    pub fn push_line(&mut self, line: String) {
+        self.lines.push(line);
     }
 
     /// Append a `{"event":"report","row":...}` trailer carrying the
@@ -420,7 +440,27 @@ impl SimObserver for TraceObserver {
                     json_f64(*wait_s),
                 ));
             }
-            Event::MonitorTick { .. } | Event::RegimeReplan { .. } => {}
+            Event::MonitorTick { t_s, regime_changed } => {
+                if self.kernel_events {
+                    self.lines.push(format!(
+                        "{{\"event\":\"monitor_tick\",\"t_s\":{},\"regime_changed\":{}}}",
+                        json_f64(*t_s),
+                        regime_changed,
+                    ));
+                }
+            }
+            Event::RegimeReplan { stream, t_s, trigger, decision_s } => {
+                if self.kernel_events {
+                    self.lines.push(format!(
+                        "{{\"event\":\"replan\",\"stream\":{},\"t_s\":{},\
+                         \"trigger\":\"{}\",\"decision_s\":{}}}",
+                        stream,
+                        json_f64(*t_s),
+                        trigger.name(),
+                        json_f64(*decision_s),
+                    ));
+                }
+            }
         }
     }
 
@@ -557,6 +597,30 @@ mod tests {
     }
 
     #[test]
+    fn kernel_events_are_opt_in() {
+        use crate::coordinator::repartition::Trigger;
+        let tick = Event::MonitorTick { t_s: 1.0, regime_changed: true };
+        let replan = Event::RegimeReplan {
+            stream: 0,
+            t_s: 1.0,
+            trigger: Trigger::Drift,
+            decision_s: 1e-5,
+        };
+        let mut off = TraceObserver::new();
+        off.on_event(&tick);
+        off.on_event(&replan);
+        assert!(off.is_empty(), "kernel events must stay silent by default");
+        let mut on = TraceObserver::new().with_kernel_events();
+        on.on_event(&tick);
+        on.on_event(&replan);
+        assert_eq!(on.len(), 2);
+        assert!(on.lines()[0].contains("\"event\":\"monitor_tick\""));
+        assert!(on.lines()[0].contains("\"regime_changed\":true"));
+        assert!(on.lines()[1].contains("\"event\":\"replan\""));
+        assert!(on.lines()[1].contains("\"trigger\":\"drift\""));
+    }
+
+    #[test]
     fn json_helpers() {
         assert_eq!(json_f64(1.5), "1.5");
         assert_eq!(json_f64(f64::NAN), "null");
@@ -627,6 +691,16 @@ mod tests {
         tr.push_report_row("row text");
         assert!(tr.lines()[3].contains("\"event\":\"report\""));
         assert!(tr.lines()[3].contains("\"row\":\"row text\""));
+    }
+
+    #[test]
+    fn header_telemetry_field_is_conditional() {
+        use crate::coordinator::EngineConfig;
+        let plain = TraceMeta { cfg: EngineConfig::default(), streams: vec![] };
+        assert!(!plain.header_line().contains("telemetry"));
+        let cfg = EngineConfig { telemetry: true, ..Default::default() };
+        let on = TraceMeta { cfg, streams: vec![] };
+        assert!(on.header_line().ends_with(",\"telemetry\":true}"));
     }
 
     #[test]

@@ -32,6 +32,11 @@ pub enum ExpectKey {
     RequestsMin,
     /// Shed-request-count upper bound (admission drops).
     ShedMax,
+    /// Plan-decision-count lower bound (audit log; needs telemetry).
+    DecisionsMin,
+    /// Worst per-processor plan-residual regression upper bound,
+    /// milliseconds (audit log; needs telemetry).
+    WorstResidualMsMax,
 }
 
 impl ExpectKey {
@@ -48,6 +53,8 @@ impl ExpectKey {
             "mean_batch_min" => ExpectKey::MeanBatchMin,
             "requests_min" => ExpectKey::RequestsMin,
             "shed_max" => ExpectKey::ShedMax,
+            "decisions_min" => ExpectKey::DecisionsMin,
+            "worst_residual_ms_max" => ExpectKey::WorstResidualMsMax,
             _ => return None,
         })
     }
@@ -65,11 +72,13 @@ impl ExpectKey {
             ExpectKey::MeanBatchMin => "mean_batch_min",
             ExpectKey::RequestsMin => "requests_min",
             ExpectKey::ShedMax => "shed_max",
+            ExpectKey::DecisionsMin => "decisions_min",
+            ExpectKey::WorstResidualMsMax => "worst_residual_ms_max",
         }
     }
 
     /// Every key, for error messages and docs.
-    pub fn all() -> [ExpectKey; 10] {
+    pub fn all() -> [ExpectKey; 12] {
         [
             ExpectKey::P50MsMax,
             ExpectKey::P95MsMax,
@@ -81,6 +90,8 @@ impl ExpectKey {
             ExpectKey::MeanBatchMin,
             ExpectKey::RequestsMin,
             ExpectKey::ShedMax,
+            ExpectKey::DecisionsMin,
+            ExpectKey::WorstResidualMsMax,
         ]
     }
 
@@ -92,7 +103,16 @@ impl ExpectKey {
                 | ExpectKey::CacheHitPctMin
                 | ExpectKey::MeanBatchMin
                 | ExpectKey::RequestsMin
+                | ExpectKey::DecisionsMin
         )
+    }
+
+    /// True for keys sourced from the plan-decision audit log — the
+    /// scenario runner force-enables engine telemetry when a spec
+    /// declares one, so the bound never fails just because the audit was
+    /// off.
+    pub fn needs_telemetry(&self) -> bool {
+        matches!(self, ExpectKey::DecisionsMin | ExpectKey::WorstResidualMsMax)
     }
 
     /// Keys the fleet aggregate can satisfy (per-class histograms carry
@@ -165,6 +185,10 @@ pub struct Metrics {
     pub requests: Option<f64>,
     /// Requests shed by admission.
     pub shed: Option<f64>,
+    /// Plan decisions recorded by the audit log.
+    pub decisions: Option<f64>,
+    /// Worst (most positive) per-processor plan residual, ms.
+    pub worst_residual_ms: Option<f64>,
 }
 
 impl Metrics {
@@ -181,6 +205,8 @@ impl Metrics {
             mean_batch: r.batch.as_ref().map(|b| b.mean_size()),
             requests: Some(r.requests as f64),
             shed: r.sched.as_ref().map(|s| s.shed() as f64),
+            decisions: r.telemetry.as_ref().map(|t| t.decisions as f64),
+            worst_residual_ms: r.telemetry.as_ref().and_then(|t| t.worst_regression_ms),
         }
     }
 
@@ -212,6 +238,8 @@ impl Metrics {
             ExpectKey::MeanBatchMin => self.mean_batch,
             ExpectKey::RequestsMin => self.requests,
             ExpectKey::ShedMax => self.shed,
+            ExpectKey::DecisionsMin => self.decisions,
+            ExpectKey::WorstResidualMsMax => self.worst_residual_ms,
         }
     }
 }

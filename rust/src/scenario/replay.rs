@@ -72,6 +72,9 @@ pub fn replay_str(jsonl: &str) -> Result<ReplayOutcome> {
             Some("report") => {
                 recorded_row = Some(obj.need_str("row")?.to_string());
             }
+            // telemetry event lines (opt-in kernel/audit stream) carry no
+            // arrival state: replay re-derives everything from the header
+            Some("batch_close" | "monitor_tick" | "replan" | "plan_decision" | "stage_timers") => {}
             Some(other) => bail!("trace line {}: unknown event `{other}`", i + 1),
             None => {
                 let req = Request {
@@ -145,6 +148,10 @@ pub fn reconstruct(h: &Json) -> Result<(EngineConfig, Vec<StreamSpec>)> {
     cfg.batching.policy = BatchPolicyKind::parse(h.need_str("batch_policy")?)?;
     cfg.batching.max = h.need_usize("batch_max")?;
     cfg.batching.wait_s = h.need_f64("batch_wait_s")?;
+    // optional marker (headers predating telemetry omit it); telemetry
+    // never changes the virtual timeline, so the replayed row matches the
+    // recorded one either way
+    cfg.telemetry = h.get("telemetry").and_then(Json::as_bool).unwrap_or(false);
 
     let calib = h.get("calib").ok_or_else(|| anyhow::anyhow!("trace header missing `calib`"))?;
     cfg.calib.samples = calib.need_usize("samples")?;

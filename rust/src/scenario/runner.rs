@@ -51,7 +51,14 @@ impl ScenarioOutcome {
 /// Run a spec given as TOML source text.
 pub fn run_str(src: &str) -> Result<ScenarioOutcome> {
     let spec = parse_spec(src)?;
-    let lowered = lower(&spec)?;
+    let mut lowered = lower(&spec)?;
+    // audit-sourced bounds (decisions_min, worst_residual_ms_max) need
+    // the plan-decision log; enable it rather than failing on a missing
+    // metric. Telemetry never perturbs the virtual timeline, so every
+    // other bound sees identical numbers either way.
+    if lowered.expect.iter().any(|b| b.key.needs_telemetry()) {
+        lowered.cfg.telemetry = true;
+    }
     let (row, metrics) = match &lowered.fleet {
         Some(fleet_cfg) => {
             let report = crate::fleet::run_fleet(fleet_cfg)?;

@@ -48,11 +48,13 @@ pub mod event;
 pub mod observer;
 pub mod queue;
 pub mod stages;
+pub mod timers;
 
 pub use arena::RequestArena;
 pub use event::{Event, EventKind};
 pub use observer::{EventCounters, SimObserver};
 pub use queue::{BinaryHeapQueue, EventQueue};
+pub use timers::{Stage, StageTimers};
 pub use stages::{
     Active, AdmissionStage, ArrivalSource, Decision, DispatchStage, ExecStage, MonitorStage,
     PlanTable,

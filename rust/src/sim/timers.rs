@@ -1,0 +1,242 @@
+//! Opt-in wall-clock self-profiling of the sim kernel's stages.
+//!
+//! The serving engine spends its wall time in a handful of stages —
+//! arrival generation, admission, dispatch selection, op execution, the
+//! resource monitor, and event-queue bookkeeping. [`StageTimers`] wraps
+//! each with a monotonic-clock lap counter so `adaoper inspect --stages`
+//! and the hot-loop bench trajectory can say where the time actually
+//! goes (ROADMAP item 4's 10× events/sec target needs exactly this).
+//!
+//! These timers measure **host wall time only**: they never read or
+//! advance virtual time, so enabling them cannot change a single
+//! simulated byte. They are off by default; the engine only laps them
+//! when telemetry was explicitly enabled.
+
+use std::time::Instant;
+
+/// A sim-kernel stage the engine laps.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    /// Arrival generation / event-queue pops.
+    Arrival,
+    /// Admission control.
+    Admission,
+    /// Dispatch candidate selection.
+    Dispatch,
+    /// Operator execution (device model + energy accounting).
+    Exec,
+    /// Resource-monitor ticks and drift checks (incl. any replanning).
+    Monitor,
+    /// Event-queue and batch-queue bookkeeping.
+    Queue,
+}
+
+impl Stage {
+    /// Number of stages (array sizing).
+    pub const COUNT: usize = 6;
+
+    /// Every stage, in index order.
+    pub const ALL: [Stage; Stage::COUNT] = [
+        Stage::Arrival,
+        Stage::Admission,
+        Stage::Dispatch,
+        Stage::Exec,
+        Stage::Monitor,
+        Stage::Queue,
+    ];
+
+    /// Dense index for per-stage arrays.
+    pub fn index(self) -> usize {
+        match self {
+            Stage::Arrival => 0,
+            Stage::Admission => 1,
+            Stage::Dispatch => 2,
+            Stage::Exec => 3,
+            Stage::Monitor => 4,
+            Stage::Queue => 5,
+        }
+    }
+
+    /// Lowercase name (report keys and JSON fields).
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Arrival => "arrival",
+            Stage::Admission => "admission",
+            Stage::Dispatch => "dispatch",
+            Stage::Exec => "exec",
+            Stage::Monitor => "monitor",
+            Stage::Queue => "queue",
+        }
+    }
+}
+
+/// Accumulated wall-clock laps per stage.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StageTimers {
+    secs: [f64; Stage::COUNT],
+    calls: [u64; Stage::COUNT],
+}
+
+impl StageTimers {
+    /// Zeroed timers.
+    pub fn new() -> StageTimers {
+        StageTimers::default()
+    }
+
+    /// Start a lap iff timers are enabled (`None` otherwise, costing one
+    /// branch). Pair with [`StageTimers::stop`].
+    pub fn start(timers: &Option<StageTimers>) -> Option<Instant> {
+        timers.as_ref().map(|_| Instant::now())
+    }
+
+    /// Close a lap opened by [`StageTimers::start`].
+    pub fn stop(timers: &mut Option<StageTimers>, stage: Stage, started: Option<Instant>) {
+        if let (Some(t), Some(t0)) = (timers.as_mut(), started) {
+            t.add(stage, t0.elapsed().as_secs_f64());
+        }
+    }
+
+    /// Record one lap of `secs` against a stage.
+    pub fn add(&mut self, stage: Stage, secs: f64) {
+        self.secs[stage.index()] += secs;
+        self.calls[stage.index()] += 1;
+    }
+
+    /// Fold a pre-aggregated lap tally back in (used when rebuilding a
+    /// timer set from a parsed `stage_timers` trace line, where the call
+    /// count is already summed).
+    pub fn accumulate(&mut self, stage: Stage, calls: u64, secs: f64) {
+        self.secs[stage.index()] += secs;
+        self.calls[stage.index()] += calls;
+    }
+
+    /// Accumulated seconds in a stage.
+    pub fn secs(&self, stage: Stage) -> f64 {
+        self.secs[stage.index()]
+    }
+
+    /// Laps recorded against a stage.
+    pub fn calls(&self, stage: Stage) -> u64 {
+        self.calls[stage.index()]
+    }
+
+    /// Wall seconds across all stages.
+    pub fn total_s(&self) -> f64 {
+        self.secs.iter().sum()
+    }
+
+    /// Fold another run's laps into this one.
+    pub fn merge(&mut self, other: &StageTimers) {
+        for i in 0..Stage::COUNT {
+            self.secs[i] += other.secs[i];
+            self.calls[i] += other.calls[i];
+        }
+    }
+
+    /// The per-stage laps as a JSON object fragment,
+    /// `{"arrival":{"calls":N,"secs":S}, …}` — embedded in both the
+    /// `stage_timers` trace line and the bench trajectory record.
+    pub fn json_object(&self) -> String {
+        let mut s = String::from("{");
+        for (i, stage) in Stage::ALL.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            let secs = self.secs[stage.index()];
+            s.push_str(&format!(
+                "\"{}\":{{\"calls\":{},\"secs\":{}}}",
+                stage.name(),
+                self.calls[stage.index()],
+                if secs.is_finite() { format!("{secs}") } else { "null".to_string() }
+            ));
+        }
+        s.push('}');
+        s
+    }
+
+    /// The full `stage_timers` JSONL trace line.
+    pub fn jsonl(&self) -> String {
+        format!("{{\"event\":\"stage_timers\",\"stages\":{}}}", self.json_object())
+    }
+
+    /// Human-readable table (for `adaoper inspect --stages`).
+    pub fn render(&self) -> String {
+        let total = self.total_s();
+        let mut s = format!("{:<10} {:>10} {:>12} {:>8}\n", "stage", "calls", "wall ms", "share");
+        for stage in Stage::ALL {
+            let secs = self.secs(stage);
+            let share = if total > 0.0 { secs / total * 100.0 } else { 0.0 };
+            s.push_str(&format!(
+                "{:<10} {:>10} {:>12.3} {:>7.1}%\n",
+                stage.name(),
+                self.calls(stage),
+                secs * 1e3,
+                share
+            ));
+        }
+        s.push_str(&format!("{:<10} {:>10} {:>12.3}\n", "total", "", total * 1e3));
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_and_merge_accumulate() {
+        let mut a = StageTimers::new();
+        a.add(Stage::Exec, 0.5);
+        a.add(Stage::Exec, 0.25);
+        a.add(Stage::Monitor, 0.1);
+        let mut b = StageTimers::new();
+        b.add(Stage::Exec, 1.0);
+        a.merge(&b);
+        assert_eq!(a.calls(Stage::Exec), 3);
+        assert!((a.secs(Stage::Exec) - 1.75).abs() < 1e-12);
+        assert!((a.total_s() - 1.85).abs() < 1e-12);
+    }
+
+    #[test]
+    fn start_stop_disabled_is_a_noop() {
+        let mut timers: Option<StageTimers> = None;
+        let t0 = StageTimers::start(&timers);
+        assert!(t0.is_none());
+        StageTimers::stop(&mut timers, Stage::Arrival, t0);
+        assert!(timers.is_none());
+    }
+
+    #[test]
+    fn start_stop_enabled_laps() {
+        let mut timers = Some(StageTimers::new());
+        let t0 = StageTimers::start(&timers);
+        StageTimers::stop(&mut timers, Stage::Dispatch, t0);
+        let t = timers.unwrap();
+        assert_eq!(t.calls(Stage::Dispatch), 1);
+        assert!(t.secs(Stage::Dispatch) >= 0.0);
+    }
+
+    #[test]
+    fn json_object_parses_and_names_every_stage() {
+        let mut t = StageTimers::new();
+        t.add(Stage::Queue, 0.002);
+        let v = crate::util::json::Json::parse(&t.jsonl()).unwrap();
+        assert_eq!(v.need_str("event").unwrap(), "stage_timers");
+        let stages = v.get("stages").unwrap();
+        for stage in Stage::ALL {
+            let entry = stages.get(stage.name()).unwrap();
+            assert!(entry.need_u64("calls").is_ok(), "{}", stage.name());
+        }
+        assert_eq!(stages.get("queue").unwrap().need_f64("secs").unwrap(), 0.002);
+    }
+
+    #[test]
+    fn render_mentions_every_stage() {
+        let t = StageTimers::new();
+        let out = t.render();
+        for stage in Stage::ALL {
+            assert!(out.contains(stage.name()), "{out}");
+        }
+        assert!(out.contains("total"));
+    }
+}

@@ -35,16 +35,26 @@ impl fmt::Display for Level {
     }
 }
 
+/// Parse a level name (`error|warn|info|debug|trace`), as accepted by
+/// both `ADAOPER_LOG` and the CLI `--log-level` option.
+pub fn parse_level(s: &str) -> Option<Level> {
+    match s {
+        "error" => Some(Level::Error),
+        "warn" => Some(Level::Warn),
+        "info" => Some(Level::Info),
+        "debug" => Some(Level::Debug),
+        "trace" => Some(Level::Trace),
+        _ => None,
+    }
+}
+
 static LEVEL: AtomicU8 = AtomicU8::new(u8::MAX); // MAX = uninitialized
 
 fn init_level() -> u8 {
-    let lvl = match std::env::var("ADAOPER_LOG").as_deref() {
-        Ok("error") => Level::Error,
-        Ok("warn") => Level::Warn,
-        Ok("debug") => Level::Debug,
-        Ok("trace") => Level::Trace,
-        _ => Level::Info,
-    } as u8;
+    let lvl = std::env::var("ADAOPER_LOG")
+        .ok()
+        .and_then(|v| parse_level(&v))
+        .unwrap_or(Level::Info) as u8;
     LEVEL.store(lvl, Ordering::Relaxed);
     lvl
 }
@@ -110,6 +120,16 @@ mod tests {
         assert!(Level::Warn < Level::Info);
         assert!(Level::Info < Level::Debug);
         assert!(Level::Debug < Level::Trace);
+    }
+
+    #[test]
+    fn parse_level_accepts_all_names() {
+        assert_eq!(parse_level("error"), Some(Level::Error));
+        assert_eq!(parse_level("warn"), Some(Level::Warn));
+        assert_eq!(parse_level("info"), Some(Level::Info));
+        assert_eq!(parse_level("debug"), Some(Level::Debug));
+        assert_eq!(parse_level("trace"), Some(Level::Trace));
+        assert_eq!(parse_level("loud"), None);
     }
 
     #[test]

@@ -61,6 +61,7 @@ fn row(
             plan_cache: None,
             sched: None,
             batch: None,
+            telemetry: None,
         },
     }
 }

@@ -1,0 +1,157 @@
+//! Golden snapshot for the Perfetto (Chrome trace-event) exporter: a
+//! short fixed-seed telemetry run is recorded in-process, exported with
+//! `perfetto::export_str`, and pinned byte-for-byte against
+//! `tests/golden/perfetto_export.json`.
+//!
+//! Snapshot workflow matches `golden_determinism.rs`: the file is
+//! compared when present; when absent (fresh checkout) or when
+//! `ADAOPER_UPDATE_GOLDEN=1` is set, it is written from the current
+//! exporter and the test passes — commit the regenerated file with any
+//! intentional change to the trace schema or exporter.
+
+use std::path::PathBuf;
+use std::sync::OnceLock;
+
+use adaoper::config::schema::{ConditionKind, PolicyKind, SchedulerKind};
+use adaoper::coordinator::{AdmissionPolicy, Engine, EngineConfig, StreamSpec};
+use adaoper::graph::zoo;
+use adaoper::metrics::perfetto;
+use adaoper::metrics::trace::{TraceMeta, TraceObserver};
+use adaoper::profiler::calibrate::{calibrate_on, CalibConfig, OfflineModel};
+use adaoper::profiler::gbdt::GbdtParams;
+use adaoper::profiler::{EnergyProfiler, EwmaCorrector};
+use adaoper::soc::device::DeviceConfig;
+use adaoper::workload::Arrival;
+
+const SEED: u64 = 17;
+
+fn calib() -> CalibConfig {
+    CalibConfig {
+        samples: 1200,
+        seed: 5,
+        gbdt: GbdtParams {
+            trees: 40,
+            ..Default::default()
+        },
+    }
+}
+
+fn offline() -> &'static OfflineModel {
+    static OFF: OnceLock<OfflineModel> = OnceLock::new();
+    OFF.get_or_init(|| calibrate_on(&calib(), &DeviceConfig::snapdragon_855()))
+}
+
+fn streams() -> Vec<StreamSpec> {
+    vec![
+        StreamSpec::new(0, zoo::yolov2_tiny(), Arrival::Poisson { hz: 30.0 }, 0.25),
+        StreamSpec::new(1, zoo::mobilenet_v1(), Arrival::Poisson { hz: 20.0 }, 0.4),
+    ]
+}
+
+/// Short AdaOper run with telemetry + kernel events on and a regime
+/// change at 0.5 s, so the export carries op spans on both processor
+/// tracks plus monitor/plan instants.
+fn config() -> EngineConfig {
+    EngineConfig {
+        policy: PolicyKind::AdaOper,
+        scheduler: SchedulerKind::Edf,
+        admission: AdmissionPolicy::DropLate,
+        duration_s: 1.0,
+        seed: SEED,
+        calib: calib(),
+        condition_timeline: vec![(0.5, ConditionKind::High)],
+        telemetry: true,
+        ..Default::default()
+    }
+}
+
+/// Record the trace exactly the way `adaoper serve --telemetry --trace`
+/// does: kernel events + request lines, then the audit decisions and the
+/// report trailer.
+fn record_trace() -> String {
+    let ecfg = config();
+    let profiler = EnergyProfiler::with_correctors(offline().clone(), || {
+        Box::new(EwmaCorrector::default())
+    });
+    let mut engine = Engine::with_profiler(ecfg.clone(), profiler);
+    let streams = streams();
+    let mut trace = TraceObserver::with_meta(TraceMeta::of(&ecfg, &streams)).with_kernel_events();
+    let report = engine.run_observed(&streams, &mut [&mut trace]).unwrap();
+    if let Some(audit) = engine.audit() {
+        for line in audit.jsonl_lines() {
+            trace.push_line(line);
+        }
+    }
+    trace.push_report_row(&report.row());
+    trace.to_jsonl()
+}
+
+fn export() -> &'static String {
+    static E: OnceLock<String> = OnceLock::new();
+    E.get_or_init(|| perfetto::export_str(&record_trace()).expect("export fixed-seed trace"))
+}
+
+fn golden_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden/perfetto_export.json")
+}
+
+#[test]
+fn export_matches_golden_snapshot() {
+    let got = export();
+    let path = golden_path();
+    compare_or_bootstrap(got, &path);
+}
+
+#[test]
+fn export_is_deterministic_and_valid() {
+    // a second independent recording must serialize byte-identically
+    let again = perfetto::export_str(&record_trace()).unwrap();
+    assert_eq!(export(), &again, "perfetto export is not deterministic");
+
+    // the export passes its own span-nesting validator with real spans
+    let spans = perfetto::validate(export()).expect("span nesting");
+    assert!(spans > 0, "export carries no complete op spans");
+
+    // structural floor: both processor tracks are named, ops landed on
+    // them, and the regime change at 0.5 s produced a plan-switch instant
+    for meta in [
+        r#""name":"cpu""#,
+        r#""name":"gpu""#,
+        r#""name":"monitor""#,
+        r#""name":"plans""#,
+    ] {
+        assert!(export().contains(meta), "missing track meta {meta}");
+    }
+    assert!(export().contains(r#""cat":"op""#), "no op spans in export");
+    assert!(
+        export().contains("plan-switch"),
+        "regime change produced no plan-switch instant"
+    );
+}
+
+fn compare_or_bootstrap(got: &str, path: &PathBuf) {
+    let update = std::env::var("ADAOPER_UPDATE_GOLDEN").is_ok();
+    if update || !path.exists() {
+        std::fs::write(path, got).expect("write golden snapshot");
+        eprintln!(
+            "golden snapshot {} {} — commit it",
+            path.display(),
+            if update { "updated" } else { "bootstrapped" }
+        );
+        return;
+    }
+    let want = std::fs::read_to_string(path).expect("read golden snapshot");
+    if got != want {
+        for (i, (g, w)) in got.lines().zip(want.lines()).enumerate() {
+            assert_eq!(
+                g,
+                w,
+                "first divergence at line {} (set ADAOPER_UPDATE_GOLDEN=1 to re-capture \
+                 after an intentional exporter/schema change)",
+                i + 1
+            );
+        }
+        assert_eq!(got.lines().count(), want.lines().count(), "line counts differ");
+        panic!("golden export differs only in line endings");
+    }
+}

@@ -1,0 +1,200 @@
+//! Telemetry-layer integration: the fleet telemetry registry must be
+//! bit-identical across thread counts (same contract `tests/fleet.rs`
+//! pins for `FleetReport`), the plan-decision audit summary must match a
+//! hand-computed oracle over the raw per-decision accumulators on a
+//! fixed-seed run with forced regime drift, and enabling telemetry must
+//! only *append* to the report row — the telemetry-off row is a
+//! byte-exact prefix of the telemetry-on row.
+
+use std::sync::OnceLock;
+
+use adaoper::config::schema::{ConditionKind, PolicyKind, SchedulerKind};
+use adaoper::coordinator::{AdmissionPolicy, Engine, EngineConfig, StreamSpec};
+use adaoper::fleet::runner::{calibrate_classes, run_fleet_with};
+use adaoper::fleet::{DeviceClass, FleetReport, FleetRunConfig};
+use adaoper::graph::zoo;
+use adaoper::metrics::ServingReport;
+use adaoper::profiler::calibrate::{calibrate_on, CalibConfig, OfflineModel};
+use adaoper::profiler::gbdt::GbdtParams;
+use adaoper::profiler::{EnergyProfiler, EwmaCorrector};
+use adaoper::soc::device::DeviceConfig;
+use adaoper::soc::Proc;
+use adaoper::workload::Arrival;
+
+const SEED: u64 = 17;
+
+fn calib() -> CalibConfig {
+    CalibConfig {
+        samples: 1200,
+        seed: 5,
+        gbdt: GbdtParams {
+            trees: 40,
+            ..Default::default()
+        },
+    }
+}
+
+/// One shared offline model (the GBDT fit is deterministic but
+/// expensive).
+fn offline() -> &'static OfflineModel {
+    static OFF: OnceLock<OfflineModel> = OnceLock::new();
+    OFF.get_or_init(|| calibrate_on(&calib(), &DeviceConfig::snapdragon_855()))
+}
+
+fn streams() -> Vec<StreamSpec> {
+    vec![
+        StreamSpec::new(0, zoo::yolov2_tiny(), Arrival::Poisson { hz: 30.0 }, 0.25),
+        StreamSpec::new(1, zoo::mobilenet_v1(), Arrival::Poisson { hz: 20.0 }, 0.4),
+    ]
+}
+
+/// Fixed-seed AdaOper run with a mid-run regime change, so the audit log
+/// is guaranteed at least one recorded plan decision.
+fn drift_config(telemetry: bool) -> EngineConfig {
+    EngineConfig {
+        policy: PolicyKind::AdaOper,
+        scheduler: SchedulerKind::Edf,
+        admission: AdmissionPolicy::DropLate,
+        duration_s: 1.2,
+        seed: SEED,
+        calib: calib(),
+        condition_timeline: vec![(0.5, ConditionKind::High)],
+        telemetry,
+        ..Default::default()
+    }
+}
+
+fn run_drift(telemetry: bool) -> (ServingReport, Engine) {
+    let profiler = EnergyProfiler::with_correctors(offline().clone(), || {
+        Box::new(EwmaCorrector::default())
+    });
+    let mut engine = Engine::with_profiler(drift_config(telemetry), profiler);
+    let report = engine.run(&streams()).unwrap();
+    (report, engine)
+}
+
+#[test]
+fn audit_summary_matches_hand_computed_oracle() {
+    let (report, engine) = run_drift(true);
+    let audit = engine.audit().expect("telemetry on ⇒ audit log present");
+    let decisions = audit.decisions();
+    assert!(!decisions.is_empty(), "regime change at 0.5 s recorded no plan decision");
+
+    // oracle: recompute the summary straight from the raw accumulators
+    let mut residuals_ms: Vec<f64> = Vec::new();
+    for d in decisions {
+        for p in [Proc::Cpu, Proc::Gpu] {
+            let i = p.index();
+            if d.ops[i] > 0 {
+                residuals_ms.push((d.actual_s[i] - d.pred_s[i]) * 1e3);
+                // residual_s must agree with the raw fields it derives from
+                let r = d.residual_s(p).unwrap();
+                assert_eq!(r.to_bits(), (d.actual_s[i] - d.pred_s[i]).to_bits());
+            } else {
+                assert_eq!(d.residual_s(p), None);
+            }
+        }
+    }
+    residuals_ms.sort_by(f64::total_cmp);
+    let median = if residuals_ms.is_empty() {
+        None
+    } else {
+        let n = residuals_ms.len();
+        Some(if n % 2 == 1 {
+            residuals_ms[n / 2]
+        } else {
+            0.5 * (residuals_ms[n / 2 - 1] + residuals_ms[n / 2])
+        })
+    };
+
+    let summary = audit.summary();
+    assert_eq!(summary.decisions, decisions.len());
+    assert_eq!(summary.drift, decisions.iter().filter(|d| d.trigger == "drift").count());
+    assert_eq!(
+        summary.regime,
+        decisions.iter().filter(|d| d.trigger == "regime-change").count()
+    );
+    assert_eq!(summary.drift + summary.regime, summary.decisions);
+    assert_eq!(summary.cache_hits, decisions.iter().filter(|d| d.cache_hit).count());
+    assert_eq!(summary.median_residual_ms, median);
+    assert_eq!(summary.worst_regression_ms, residuals_ms.last().copied());
+    if let Some(worst) = summary.worst_regression_ms {
+        assert!(worst.is_finite());
+    }
+
+    // the report carries the same summary
+    assert_eq!(report.telemetry.as_ref(), Some(&summary));
+    // and every decision actually changed or re-priced the plan
+    for d in decisions {
+        assert!((0.0..=1.2 + 1e-9).contains(&d.t_s), "decision at {}", d.t_s);
+        assert!(d.decision_s >= 0.0);
+    }
+}
+
+#[test]
+fn telemetry_off_row_is_byte_prefix_of_telemetry_on_row() {
+    let (off, _) = run_drift(false);
+    let (on, _) = run_drift(true);
+    assert!(off.telemetry.is_none());
+    assert!(on.telemetry.is_some());
+    let (row_off, row_on) = (off.row(), on.row());
+    assert!(
+        row_on.starts_with(&row_off),
+        "telemetry must only append:\n off: {row_off}\n on:  {row_on}"
+    );
+    assert!(row_on.contains("audit "), "{row_on}");
+}
+
+fn fleet_cfg(threads: usize) -> FleetRunConfig {
+    FleetRunConfig {
+        devices: 80,
+        threads,
+        seed: 42,
+        duration_s: 0.8,
+        telemetry: true,
+        calib: CalibConfig {
+            samples: 900,
+            seed: 42,
+            gbdt: GbdtParams {
+                trees: 25,
+                ..Default::default()
+            },
+        },
+        ..Default::default()
+    }
+}
+
+fn fleet_reports() -> &'static (FleetReport, FleetReport) {
+    static R: OnceLock<(FleetReport, FleetReport)> = OnceLock::new();
+    R.get_or_init(|| {
+        let offline = calibrate_classes(&fleet_cfg(1).calib, &DeviceClass::all(), 3);
+        (
+            run_fleet_with(&fleet_cfg(1), &offline).unwrap(),
+            run_fleet_with(&fleet_cfg(8), &offline).unwrap(),
+        )
+    })
+}
+
+#[test]
+fn fleet_registry_bit_identical_across_thread_counts() {
+    let (a, b) = fleet_reports();
+    let ra = a.telemetry.as_ref().expect("telemetry on ⇒ registry present");
+    let rb = b.telemetry.as_ref().expect("telemetry on ⇒ registry present");
+    // rendered listing is byte-identical …
+    assert_eq!(ra.render(), rb.render());
+    // … and so is the merged state, down to float bits
+    for key in ["sim.offered", "sim.completed", "sim.shed", "sim.op_dispatches"] {
+        assert_eq!(ra.counter(key), rb.counter(key), "{key}");
+    }
+    assert_eq!(
+        ra.gauge("fleet.energy_j").unwrap().to_bits(),
+        rb.gauge("fleet.energy_j").unwrap().to_bits()
+    );
+    assert_eq!(
+        ra.histogram("latency_s").unwrap().counts(),
+        rb.histogram("latency_s").unwrap().counts()
+    );
+    // the registry tallies agree with the fleet aggregate it rode along
+    assert_eq!(ra.counter("sim.completed"), a.fleet.completed as u64);
+    assert!(ra.counter("sim.offered") >= ra.counter("sim.completed"));
+}
