@@ -3,7 +3,7 @@
 
 CARGO_DIR := rust
 
-.PHONY: verify build test fmt fmt-check clippy bench-build bench-hot bench-hot-smoke doc smoke scenarios inspect-smoke all
+.PHONY: verify build test fmt fmt-check clippy bench-build bench-hot bench-hot-smoke bench-dp bench-dp-smoke doc smoke scenarios inspect-smoke all
 
 # Tier-1 gate: release build + full test suite.
 verify:
@@ -36,6 +36,18 @@ bench-hot:
 # append) — CI runs this so the bench and its JSON emitter cannot rot.
 bench-hot-smoke:
 	cd $(CARGO_DIR) && ADAOPER_BENCH_QUICK=1 cargo bench --bench engine_hot_loop
+
+# DP-solver throughput (map reference vs flattened lattice); appends one
+# JSON record to the committed trajectory file at the repo root (see
+# BENCH_dp_solve.json header line). Each record carries both backends, so
+# every line is its own before/after ratio.
+bench-dp:
+	cd $(CARGO_DIR) && ADAOPER_BENCH_JSON=../BENCH_dp_solve.json cargo bench --bench dp_solve
+
+# Quick-mode smoke of the solver bench (also asserts the two backends
+# still agree bit-for-bit before timing) — CI runs this.
+bench-dp-smoke:
+	cd $(CARGO_DIR) && ADAOPER_BENCH_QUICK=1 cargo bench --bench dp_solve
 
 doc:
 	cd $(CARGO_DIR) && RUSTDOCFLAGS="-D warnings" cargo doc --no-deps

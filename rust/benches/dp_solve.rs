@@ -1,0 +1,214 @@
+//! DP-partitioner solve throughput: full-model solves/sec and
+//! windowed-repair solves/sec on YOLOv2 at the default 64-bucket Pareto
+//! lattice, measured for BOTH solver backends — the rolling-`BTreeMap`
+//! reference ([`MapDpPartitioner`]) and the flattened-lattice core that
+//! replaced it — so every recorded line carries its own before/after
+//! ratio. The cost model is the calibrated GBDT profiler (as in serving),
+//! whose [`CostModel::version`] lets the lattice backend memoize predict
+//! calls per DP column.
+//!
+//! Before any timing, both backends solve once and the plans and
+//! predicted costs are asserted bit-identical — a bench of two solvers
+//! that disagree would be meaningless.
+//!
+//! `ADAOPER_BENCH_QUICK=1` shrinks calibration and the per-case budget.
+//! The run always ends with one machine-readable JSON summary line on
+//! stdout; set `ADAOPER_BENCH_JSON=<path>` to also append that line to a
+//! file (the committed trajectory lives in `BENCH_dp_solve.json` at the
+//! repo root — see `make bench-dp`).
+
+use std::io::Write as _;
+use std::time::Duration;
+
+use adaoper::graph::zoo;
+use adaoper::partition::dp::{DpPartitioner, DpScratch, MapDpPartitioner};
+use adaoper::partition::plan::Objective;
+use adaoper::profiler::calibrate::{calibrate_on, CalibConfig};
+use adaoper::profiler::gbdt::GbdtParams;
+use adaoper::profiler::{EnergyProfiler, EwmaCorrector};
+use adaoper::soc::device::{Device, DeviceConfig};
+use adaoper::util::bench::{black_box, print_table, Bencher};
+use adaoper::workload::WorkloadCondition;
+
+/// Only identifier-ish characters survive, so the value drops into the
+/// JSON line unescaped.
+fn sanitize(s: &str) -> String {
+    s.trim()
+        .chars()
+        .filter(|c| c.is_ascii_alphanumeric() || matches!(c, '-' | '_' | '.'))
+        .collect()
+}
+
+/// Short git revision of the working tree, `unknown` outside a checkout.
+fn git_rev() -> String {
+    let rev = std::process::Command::new("git")
+        .args(["rev-parse", "--short", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| sanitize(&s))
+        .unwrap_or_default();
+    if rev.is_empty() { "unknown".to_string() } else { rev }
+}
+
+/// Hostname from the environment or /etc/hostname; bench records are
+/// only comparable within one host, so the line must say which.
+fn host_fingerprint() -> String {
+    let host = std::env::var("HOSTNAME")
+        .ok()
+        .or_else(|| std::fs::read_to_string("/etc/hostname").ok())
+        .map(|s| sanitize(&s))
+        .unwrap_or_default();
+    if host.is_empty() { "unknown".to_string() } else { host }
+}
+
+/// Noise-free device so both solvers see one frozen snapshot.
+fn frozen_device() -> Device {
+    let mut d = Device::new(DeviceConfig {
+        noise_sigma: 0.0,
+        drift_sigma: 0.0,
+        seed: 7,
+        ..DeviceConfig::snapdragon_855()
+    });
+    let mut c = WorkloadCondition::high().spec;
+    c.cpu_bg_sigma = 0.0;
+    c.cpu_burst = 0.0;
+    c.gpu_bg_sigma = 0.0;
+    c.gpu_burst = 0.0;
+    c.drift_sigma = 0.0;
+    d.apply_condition(&c);
+    d
+}
+
+fn main() {
+    let quick = std::env::var("ADAOPER_BENCH_QUICK").is_ok();
+    let calib = CalibConfig {
+        samples: if quick { 1200 } else { 2500 },
+        seed: 7,
+        gbdt: GbdtParams {
+            trees: if quick { 30 } else { 60 },
+            ..Default::default()
+        },
+    };
+
+    println!("== dp_solve: partitioner solves/sec, map vs lattice (yolov2, 64 buckets) ==");
+    println!("calibrating profiler ({} samples) …", calib.samples);
+    let offline = calibrate_on(&calib, &DeviceConfig::snapdragon_855());
+    let profiler = EnergyProfiler::with_correctors(offline, || {
+        Box::new(EwmaCorrector::default())
+    });
+
+    let d = frozen_device();
+    let snap = d.snapshot();
+    let g = zoo::yolov2();
+    let n = g.num_ops();
+
+    let lat = DpPartitioner::new(Objective::MinEdp); // 64-bucket default
+    let map = MapDpPartitioner::new(Objective::MinEdp);
+
+    // sanity: a bench of two solvers that disagree measures nothing
+    let a = lat.solve(&g, &profiler, &snap).expect("lattice solve");
+    let b = map.solve(&g, &profiler, &snap).expect("map solve");
+    assert_eq!(a.placements, b.placements, "backends diverged on full solve");
+    assert_eq!(a.predicted.energy_j.to_bits(), b.predicted.energy_j.to_bits());
+    assert_eq!(a.predicted.latency_s.to_bits(), b.predicted.latency_s.to_bits());
+
+    let bencher = Bencher::new(
+        Duration::from_millis(if quick { 100 } else { 300 }),
+        Duration::from_millis(if quick { 400 } else { 1500 }),
+    );
+    let mut scratch = DpScratch::new();
+
+    // full-model solves
+    let r_full_map = bencher.run("full solve / map (yolov2)", || {
+        black_box(map.solve(&g, &profiler, &snap).expect("map solve"));
+    });
+    let r_full_lat = bencher.run("full solve / lattice (yolov2)", || {
+        black_box(
+            lat.solve_in(&g, &profiler, &snap, &mut scratch)
+                .expect("lattice solve"),
+        );
+    });
+
+    // windowed repair: an 8-op window mid-model over the pinned full plan
+    // (the repartition controller's steady-state call shape)
+    let start = n / 3;
+    let end = (start + 8).min(n);
+    let pinned = &a.placements;
+    let wa = lat
+        .solve_range(&g, &profiler, &snap, start, end, pinned, None)
+        .expect("lattice window");
+    let wb = map
+        .solve_range(&g, &profiler, &snap, start, end, pinned, None)
+        .expect("map window");
+    assert_eq!(wa.placements, wb.placements, "backends diverged on window");
+    assert_eq!(wa.cost.energy_j.to_bits(), wb.cost.energy_j.to_bits());
+    let r_win_map = bencher.run("window-8 solve / map (yolov2)", || {
+        black_box(
+            map.solve_range(&g, &profiler, &snap, start, end, pinned, None)
+                .expect("map window"),
+        );
+    });
+    let r_win_lat = bencher.run("window-8 solve / lattice (yolov2)", || {
+        black_box(
+            lat.solve_range_in(&g, &profiler, &snap, start, end, pinned, None, &mut scratch)
+                .expect("lattice window"),
+        );
+    });
+
+    print_table(
+        "dp_solve",
+        &[
+            r_full_map.clone(),
+            r_full_lat.clone(),
+            r_win_map.clone(),
+            r_win_lat.clone(),
+        ],
+    );
+
+    let full_map = 1.0 / r_full_map.summary.mean;
+    let full_lat = 1.0 / r_full_lat.summary.mean;
+    let win_map = 1.0 / r_win_map.summary.mean;
+    let win_lat = 1.0 / r_win_lat.summary.mean;
+    println!(
+        "full solves/sec: map {full_map:.0}, lattice {full_lat:.0} ({:.2}x); \
+         window-8 solves/sec: map {win_map:.0}, lattice {win_lat:.0} ({:.2}x)",
+        full_lat / full_map,
+        win_lat / win_map
+    );
+
+    // One machine-readable line for the recorded trajectory. Plain
+    // format! keeps this dependency-free; git_rev/host are sanitized to
+    // identifier characters so no field needs escaping.
+    let json = format!(
+        "{{\"bench\":\"dp_solve\",\"mode\":\"{}\",\"seed\":7,\
+         \"graph\":\"yolov2\",\"ops\":{n},\"buckets\":64,\"choices\":{},\
+         \"window\":8,\
+         \"solves_per_sec_map\":{full_map:.1},\
+         \"solves_per_sec_lattice\":{full_lat:.1},\
+         \"speedup_full\":{:.2},\
+         \"window_solves_per_sec_map\":{win_map:.1},\
+         \"window_solves_per_sec_lattice\":{win_lat:.1},\
+         \"speedup_window\":{:.2},\
+         \"git_rev\":\"{}\",\"host\":\"{}\",\"os\":\"{}\",\"arch\":\"{}\"}}",
+        if quick { "quick" } else { "full" },
+        lat.choices.len(),
+        full_lat / full_map,
+        win_lat / win_map,
+        git_rev(),
+        host_fingerprint(),
+        std::env::consts::OS,
+        std::env::consts::ARCH
+    );
+    println!("{json}");
+    if let Ok(path) = std::env::var("ADAOPER_BENCH_JSON") {
+        let mut f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&path)
+            .unwrap_or_else(|e| panic!("open {path}: {e}"));
+        writeln!(f, "{json}").expect("append bench record");
+        println!("appended record to {path}");
+    }
+}

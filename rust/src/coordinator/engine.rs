@@ -29,7 +29,7 @@ use crate::metrics::{
     PlanDecision, SchedStats, ServingReport,
 };
 use crate::partition::baselines::by_policy;
-use crate::partition::dp::DpPartitioner;
+use crate::partition::dp::{DpBackend, DpPartitioner};
 use crate::partition::incremental::IncrementalRepartitioner;
 use crate::partition::plan::{Objective, Partitioner, Plan, INPUT_CPU_FRAC};
 use crate::profiler::calibrate::{calibrate_on, CalibConfig};
@@ -121,6 +121,11 @@ pub struct EngineConfig {
     /// no audit state exists and every report row and golden trace stays
     /// byte-identical. Telemetry never reads or advances virtual time.
     pub telemetry: bool,
+    /// DP solver core for AdaOper planning (initial solves, regime
+    /// re-plans, and drift window repairs). The two backends return
+    /// bit-identical plans — this knob exists for A/B solve-time
+    /// measurement; leave it at the default (lattice) otherwise.
+    pub dp_backend: DpBackend,
 }
 
 impl Default for EngineConfig {
@@ -146,6 +151,7 @@ impl Default for EngineConfig {
             batching: BatchConfig::default(),
             condition_timeline: Vec::new(),
             telemetry: false,
+            dp_backend: DpBackend::default(),
         }
     }
 }
@@ -196,10 +202,15 @@ impl Engine {
             WorkloadCondition::by_name(cfg.condition.name()).unwrap().spec
         });
         device.apply_condition(&cond_spec);
-        let policy = by_policy(cfg.policy, cfg.objective);
+        let policy: Box<dyn Partitioner + Send + Sync> =
+            if matches!(cfg.policy, PolicyKind::AdaOper) {
+                Box::new(DpPartitioner::new(cfg.objective).with_backend(cfg.dp_backend))
+            } else {
+                by_policy(cfg.policy, cfg.objective)
+            };
         let controller = RepartitionController::new(
             IncrementalRepartitioner::new(
-                DpPartitioner::new(cfg.objective),
+                DpPartitioner::new(cfg.objective).with_backend(cfg.dp_backend),
                 cfg.window,
             ),
             cfg.cooldown_ops,
@@ -482,6 +493,7 @@ impl Engine {
                                 cache_hit: false,
                                 corrector_version: self.profiler.version(),
                                 decision_s: dt,
+                                solve_wall_s: self.controller.last_solve_wall_s(),
                                 pred_s: [0.0; 2],
                                 actual_s: [0.0; 2],
                                 ops: [0; 2],
@@ -611,6 +623,7 @@ impl Engine {
                     cache_hit: dt == VIRTUAL_CACHE_HIT_S,
                     corrector_version: self.profiler.version(),
                     decision_s: dt,
+                    solve_wall_s: self.controller.last_solve_wall_s(),
                     pred_s: [0.0; 2],
                     actual_s: [0.0; 2],
                     ops: [0; 2],
@@ -828,7 +841,7 @@ impl Engine {
                 emit(observers, &Event::MonitorTick {
                     t_s: self.device.time_s(), regime_changed: tick.regime_changed,
                 });
-                for (stream, dt) in &tick.replans {
+                for (stream, dt, wall) in &tick.replans {
                     exec.charge_cpu_decision(*dt); // decision runs on CPU
                     if let (Some(a), Some(pre)) = (audit.as_mut(), pre_tick.as_ref()) {
                         let (old_fp, pred_before) = pre[*stream];
@@ -844,6 +857,7 @@ impl Engine {
                             cache_hit: *dt == VIRTUAL_CACHE_HIT_S,
                             corrector_version: self.profiler.version(),
                             decision_s: *dt,
+                            solve_wall_s: *wall,
                             pred_s: [0.0; 2],
                             actual_s: [0.0; 2],
                             ops: [0; 2],
@@ -930,6 +944,7 @@ impl Engine {
                             cache_hit: false,
                             corrector_version: self.profiler.version(),
                             decision_s: dt,
+                            solve_wall_s: self.controller.last_solve_wall_s(),
                             pred_s: [0.0; 2],
                             actual_s: [0.0; 2],
                             ops: [0; 2],
@@ -1009,6 +1024,7 @@ impl Engine {
                         cache_hit: false,
                         corrector_version: self.profiler.version(),
                         decision_s: dt,
+                        solve_wall_s: self.controller.last_solve_wall_s(),
                         pred_s: [0.0; 2],
                         actual_s: [0.0; 2],
                         ops: [0; 2],

@@ -7,7 +7,7 @@ use std::time::Instant;
 
 use crate::graph::ModelGraph;
 use crate::partition::incremental::IncrementalRepartitioner;
-use crate::partition::{Objective, Plan, Partitioner};
+use crate::partition::{DpScratch, Objective, Plan, Partitioner};
 use crate::profiler::CostModel;
 use crate::soc::device::Snapshot;
 
@@ -59,6 +59,9 @@ pub struct RepartitionController {
     repartitions: usize,
     full_solves: usize,
     decision_time_s: f64,
+    last_solve_wall_s: f64,
+    // long-lived lattice-DP scratch: steady-state replans allocate nothing
+    scratch: DpScratch,
 }
 
 impl RepartitionController {
@@ -73,6 +76,8 @@ impl RepartitionController {
             repartitions: 0,
             full_solves: 0,
             decision_time_s: 0.0,
+            last_solve_wall_s: 0.0,
+            scratch: DpScratch::new(),
         }
     }
 
@@ -104,14 +109,16 @@ impl RepartitionController {
         let t0 = Instant::now();
         let current = self
             .incremental
-            .remaining_cost(g, plan, frontier, model, snap, out_cpu)
+            .remaining_cost_in(g, plan, frontier, model, snap, out_cpu, &mut self.scratch)
             .ok()?;
         let patched = self
             .incremental
-            .repartition(g, plan, frontier, model, snap, out_cpu)
+            .repartition_in(g, plan, frontier, model, snap, out_cpu, &mut self.scratch)
             .ok()?;
         self.ops_since_last = 0;
-        self.decision_time_s += t0.elapsed().as_secs_f64();
+        let wall = t0.elapsed().as_secs_f64();
+        self.last_solve_wall_s = wall;
+        self.decision_time_s += wall;
         let cur_score = current.energy_j * current.latency_s;
         let new_score = patched.predicted.energy_j * patched.predicted.latency_s;
         if new_score > cur_score * (1.0 - self.hysteresis) {
@@ -152,18 +159,22 @@ impl RepartitionController {
         if let Some(cache) = cache.as_deref_mut() {
             if let Some(plan) = cache.lookup(&g.name, snap, objective, batch_hint) {
                 self.repartitions += 1;
-                self.decision_time_s += t0.elapsed().as_secs_f64();
+                let wall = t0.elapsed().as_secs_f64();
+                self.last_solve_wall_s = wall;
+                self.decision_time_s += wall;
                 self.ops_since_last = 0;
                 return Some((plan, VIRTUAL_CACHE_HIT_S));
             }
         }
-        let plan = policy.partition(g, model, snap).ok()?;
+        let plan = policy.partition_in(g, model, snap, &mut self.scratch).ok()?;
         if let Some(cache) = cache {
             cache.insert(&g.name, snap, objective, batch_hint, plan.clone());
         }
         self.full_solves += 1;
         self.repartitions += 1;
-        self.decision_time_s += t0.elapsed().as_secs_f64();
+        let wall = t0.elapsed().as_secs_f64();
+        self.last_solve_wall_s = wall;
+        self.decision_time_s += wall;
         self.ops_since_last = 0;
         Some((plan, g.num_ops() as f64 * VIRTUAL_SOLVE_S_PER_OP))
     }
@@ -181,6 +192,14 @@ impl RepartitionController {
     /// Full (non-cached) regime-change solves.
     pub fn full_solves(&self) -> usize {
         self.full_solves
+    }
+
+    /// Measured wall-clock time of the most recent decision (drift
+    /// evaluation or regime-change solve/lookup), seconds. Telemetry
+    /// only — the simulated timeline is always charged the deterministic
+    /// virtual cost, never this value.
+    pub fn last_solve_wall_s(&self) -> f64 {
+        self.last_solve_wall_s
     }
 
     /// Mean decision time per repartition.

@@ -69,6 +69,11 @@ pub struct PlanDecision {
     pub corrector_version: Option<u64>,
     /// Virtual decision time charged for the solve/lookup, seconds.
     pub decision_s: f64,
+    /// Measured wall-clock time of the solve/lookup, seconds. Telemetry
+    /// only (the timeline is charged `decision_s`); host-dependent, so it
+    /// is reported in the JSONL stream but never folded into the
+    /// [`AuditSummary`] or any rendered/golden output.
+    pub solve_wall_s: f64,
     /// Per-processor predicted op seconds accumulated under this plan
     /// (CPU = index 0, GPU = 1), weighted by placement fraction.
     pub pred_s: [f64; 2],
@@ -103,7 +108,7 @@ impl PlanDecision {
              \"pred_before\":{{\"latency_s\":{},\"energy_j\":{}}},\
              \"pred_after\":{{\"latency_s\":{},\"energy_j\":{}}},\
              \"cache_hit\":{},\"corrector_version\":{},\"decision_s\":{},\
-             \"residuals\":{{\"cpu\":{},\"gpu\":{}}}}}",
+             \"solve_wall_s\":{},\"residuals\":{{\"cpu\":{},\"gpu\":{}}}}}",
             num(self.t_s),
             self.stream,
             self.trigger,
@@ -119,6 +124,7 @@ impl PlanDecision {
                 None => "null".to_string(),
             },
             num(self.decision_s),
+            num(self.solve_wall_s),
             proc_obj(0),
             proc_obj(1),
         )
@@ -257,6 +263,7 @@ mod tests {
             cache_hit,
             corrector_version: Some(3),
             decision_s: 1e-5,
+            solve_wall_s: 3e-6,
             pred_s: [0.0; 2],
             actual_s: [0.0; 2],
             ops: [0; 2],
@@ -335,6 +342,7 @@ mod tests {
         assert_eq!(v.need_str("trigger").unwrap(), "drift");
         assert!(!v.need_bool("cache_hit").unwrap());
         assert_eq!(v.get("corrector_version").unwrap().as_u64(), Some(3));
+        assert_eq!(v.need_f64("solve_wall_s").unwrap(), 3e-6);
         let gpu = v.get("residuals").unwrap().get("gpu").unwrap();
         assert_eq!(gpu.need_u64("ops").unwrap(), 1);
         assert_eq!(gpu.need_f64("actual_s").unwrap(), 0.012);

@@ -17,19 +17,70 @@
 //! Candidate placements per op: CPU, GPU, and a grid of CoDL-style
 //! intra-op split ratios — so AdaOper's search space *contains* CoDL-like
 //! co-execution and the single-processor baselines as special cases.
+//!
+//! ## Two solver backends
+//!
+//! The DP core exists twice, selected by [`DpBackend`]:
+//!
+//! * [`DpBackend::Lattice`] (default) — the frontier op *set* of a column
+//!   is identical for every state in it (it depends only on liveness, not
+//!   on choices), so a state is encoded as a dense mixed-radix integer
+//!   over the frontier ops' choice digits and a column is two flat,
+//!   preallocated `Vec<Pt>` CSR buffers that ping-pong each op. The
+//!   per-(state, choice) `input_cpu_fracs` allocation, the linear frontier
+//!   `lookup` scans, and the per-op `BTreeMap` rebuilds of the reference
+//!   solver are all replaced by precomputed index tables; every buffer
+//!   lives in a reusable [`DpScratch`] (owned long-term by the
+//!   repartition controller) so steady-state replans allocate nothing.
+//!   Cost-model queries are memoized per column, keyed by the digits of
+//!   the frontier ops the cost actually depends on (the op's in-window
+//!   inputs plus its predecessor's run-start flags) — sound whenever the
+//!   model opts in via [`CostModel::version`].
+//! * [`DpBackend::Map`] — the original rolling
+//!   `BTreeMap<frontier-key, Pareto set>` solver, kept verbatim as
+//!   [`MapDpPartitioner`]: the readable specification of the DP, the
+//!   differential-testing oracle (`tests/prop_dp_lattice.rs` drives both
+//!   backends in lockstep and demands bit-identical plans and costs), and
+//!   the "before" arm of `make bench-dp`.
+//!
+//! The two backends are *bit-identical* by construction: ascending dense
+//! cell index reproduces the `BTreeMap`'s key iteration order, each
+//! target slot receives its per-source runs in the reference append
+//! order, and the natural-run merge used for pruning is exactly a stable
+//! sort by (latency, energy) — see the invariant notes on
+//! [`merge_prune_slot`].
 
 use anyhow::Result;
+use std::cmp::Ordering;
 use std::collections::BTreeMap;
 
-use crate::graph::{ModelGraph, OpId};
+use crate::graph::{ModelGraph, OpId, OpNode};
 use crate::profiler::CostModel;
-use crate::soc::device::{ExecCtx, Snapshot};
+use crate::soc::device::{ExecCtx, OpCost, Snapshot};
 use crate::soc::{Placement, Proc};
 
 use super::plan::{Objective, Partitioner, Plan, PlanCost, INPUT_CPU_FRAC};
 
 /// Default intra-op split grid (CPU fractions).
 pub const DEFAULT_SPLITS: [f64; 3] = [0.08, 0.15, 0.25];
+
+/// Hard cap on a dense-lattice column: `choices^frontier_len` cells. A
+/// solve whose liveness pattern would exceed this anywhere (pathological
+/// fan-in with a huge candidate grid) falls back to the map solver, which
+/// only materializes reachable states.
+const LATTICE_CELL_CAP: usize = 1 << 14;
+
+/// Which DP core a [`DpPartitioner`] runs. Both return bit-identical
+/// plans and predicted costs; they differ only in speed and allocation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum DpBackend {
+    /// Dense flattened-lattice solver (fast path, zero steady-state
+    /// allocation when driven through a reused [`DpScratch`]).
+    #[default]
+    Lattice,
+    /// Reference rolling-`BTreeMap` solver (pre-lattice implementation).
+    Map,
+}
 
 /// The AdaOper dynamic-programming partitioner.
 #[derive(Debug, Clone)]
@@ -40,6 +91,8 @@ pub struct DpPartitioner {
     pub choices: Vec<Placement>,
     /// Pareto-frontier thinning width per DP state.
     pub latency_buckets: usize,
+    /// DP core to run (defaults to the lattice).
+    pub backend: DpBackend,
 }
 
 impl DpPartitioner {
@@ -51,6 +104,7 @@ impl DpPartitioner {
             objective,
             choices,
             latency_buckets: 64,
+            backend: DpBackend::default(),
         }
     }
 
@@ -68,6 +122,12 @@ impl DpPartitioner {
         self
     }
 
+    /// Select the DP core (A/B tests and the solver bench).
+    pub fn with_backend(mut self, backend: DpBackend) -> Self {
+        self.backend = backend;
+        self
+    }
+
     /// Solve for a full model.
     pub fn solve(
         &self,
@@ -75,7 +135,21 @@ impl DpPartitioner {
         model: &dyn CostModel,
         snap: &Snapshot,
     ) -> Result<Plan> {
-        let sol = self.solve_range(g, model, snap, 0, g.num_ops(), &[], None)?;
+        let mut scratch = DpScratch::default();
+        self.solve_in(g, model, snap, &mut scratch)
+    }
+
+    /// Solve for a full model, reusing `scratch` across calls so the
+    /// steady state allocates nothing.
+    pub fn solve_in(
+        &self,
+        g: &ModelGraph,
+        model: &dyn CostModel,
+        snap: &Snapshot,
+        scratch: &mut DpScratch,
+    ) -> Result<Plan> {
+        let sol =
+            self.solve_range_in(g, model, snap, 0, g.num_ops(), &[], None, scratch)?;
         Ok(Plan {
             placements: sol.placements,
             predicted: sol.cost,
@@ -90,6 +164,393 @@ impl DpPartitioner {
     /// Returns placements for the *whole* graph (pinned parts copied) and
     /// the cost over `[start, n)` (window + fixed tail).
     pub fn solve_range(
+        &self,
+        g: &ModelGraph,
+        model: &dyn CostModel,
+        snap: &Snapshot,
+        start: usize,
+        end: usize,
+        pinned: &[Placement],
+        prev_out_cpu: Option<&[f64]>,
+    ) -> Result<RangeSolution> {
+        let mut scratch = DpScratch::default();
+        self.solve_range_in(g, model, snap, start, end, pinned, prev_out_cpu, &mut scratch)
+    }
+
+    /// [`DpPartitioner::solve_range`] with caller-owned scratch; the
+    /// repartition controller keeps one [`DpScratch`] alive so repeated
+    /// window solves reuse every buffer.
+    #[allow(clippy::too_many_arguments)]
+    pub fn solve_range_in(
+        &self,
+        g: &ModelGraph,
+        model: &dyn CostModel,
+        snap: &Snapshot,
+        start: usize,
+        end: usize,
+        pinned: &[Placement],
+        prev_out_cpu: Option<&[f64]>,
+        scratch: &mut DpScratch,
+    ) -> Result<RangeSolution> {
+        let n = g.num_ops();
+        assert!(start <= end && end <= n);
+        if self.backend == DpBackend::Map {
+            return self.map_solve_range(g, model, snap, start, end, pinned, prev_out_cpu);
+        }
+        if start == end {
+            // nothing free — evaluate pinned tail directly
+            let tail =
+                self.eval_fixed_in(g, model, snap, start, pinned, prev_out_cpu, scratch);
+            return Ok(RangeSolution {
+                placements: pinned.to_vec(),
+                cost: tail,
+            });
+        }
+        let last_use = g.last_use();
+        if !lattice_fits(&last_use, start, end, self.choices.len(), &mut scratch.new_f) {
+            return self.map_solve_range(g, model, snap, start, end, pinned, prev_out_cpu);
+        }
+        self.lattice_solve_range(
+            g,
+            model,
+            snap,
+            start,
+            end,
+            pinned,
+            prev_out_cpu,
+            &last_use,
+            scratch,
+        )
+    }
+
+    /// The dense flattened-lattice DP core. Bit-identical to
+    /// [`DpPartitioner::map_solve_range`]; see the module docs for the
+    /// order-preservation argument.
+    #[allow(clippy::too_many_arguments)]
+    fn lattice_solve_range(
+        &self,
+        g: &ModelGraph,
+        model: &dyn CostModel,
+        snap: &Snapshot,
+        start: usize,
+        end: usize,
+        pinned: &[Placement],
+        prev_out_cpu: Option<&[f64]>,
+        last_use: &[usize],
+        scratch: &mut DpScratch,
+    ) -> Result<RangeSolution> {
+        let n = g.num_ops();
+        let k = self.choices.len();
+        // predict memo is only sound when the model guarantees that equal
+        // (inputs, version) imply equal outputs
+        let memo = model.version().is_some();
+        let sc = &mut *scratch;
+
+        sc.arena.clear();
+        sc.base_out.clear();
+        match prev_out_cpu {
+            Some(v) => sc.base_out.extend_from_slice(v),
+            None => sc.base_out.extend((0..n).map(|i| {
+                if i < start && !pinned.is_empty() {
+                    pinned[i].frac_on(Proc::Cpu)
+                } else {
+                    INPUT_CPU_FRAC
+                }
+            })),
+        }
+        let prev_before_start: Option<Placement> = if start > 0 && !pinned.is_empty() {
+            Some(pinned[start - 1])
+        } else {
+            None
+        };
+
+        // column before the window: one empty-frontier cell, origin point
+        sc.prev_f.clear();
+        sc.prev_off.clear();
+        sc.prev_off.extend_from_slice(&[0, 1]);
+        sc.prev_pts.clear();
+        sc.prev_pts.push(Pt {
+            e: 0.0,
+            t: 0.0,
+            back: u32::MAX,
+        });
+
+        for i in start..end {
+            let op = &g.ops[i];
+
+            // -- frontier bookkeeping: which previous-frontier positions
+            // survive op i. Identical for every cell of the column (it
+            // depends on liveness only), which is what makes the dense
+            // encoding possible.
+            sc.surv_pos.clear();
+            sc.new_f.clear();
+            for (p, &j) in sc.prev_f.iter().enumerate() {
+                if last_use[j] > i {
+                    sc.surv_pos.push(p as u8);
+                    sc.new_f.push(j);
+                }
+            }
+            sc.new_f.push(i);
+            let m_prev = sc.prev_f.len();
+            let prev_cells = sc.prev_off.len() - 1;
+            let next_cells = k.pow(sc.surv_pos.len() as u32 + 1);
+
+            // -- frontier positions the cost of op i depends on: its
+            // in-window inputs plus op i-1 (run-start flags). Both are
+            // provably on the previous frontier: an input j of i has
+            // last_use[j] >= i > i-1, and i-1 has all consumers > i-1.
+            sc.rel_pos.clear();
+            if i > start {
+                let p = sc.prev_f.binary_search(&(i - 1)).expect("i-1 live") as u8;
+                sc.rel_pos.push(p);
+            }
+            for &j in &op.inputs {
+                if j >= start {
+                    let p = sc.prev_f.binary_search(&j).expect("input live") as u8;
+                    if !sc.rel_pos.contains(&p) {
+                        sc.rel_pos.push(p);
+                    }
+                }
+            }
+            sc.rel_pos.sort_unstable();
+
+            // -- predict memo: one table entry per (relevant digit combo,
+            // choice); the lattice revisits the same cost context once per
+            // combination of the *irrelevant* frontier digits.
+            if memo {
+                let rel_cells = k.pow(sc.rel_pos.len() as u32);
+                sc.cost_tab.clear();
+                sc.mdigits.clear();
+                sc.mdigits.resize(m_prev, 0);
+                for _rel in 0..rel_cells {
+                    for &choice in &self.choices {
+                        let c = predict_one(
+                            &self.choices,
+                            op,
+                            model,
+                            snap,
+                            &sc.base_out,
+                            start,
+                            i,
+                            &sc.prev_f,
+                            &sc.mdigits,
+                            prev_before_start,
+                            &mut sc.ctx,
+                            choice,
+                        );
+                        sc.cost_tab.push((c.energy_j, c.latency_s));
+                    }
+                    advance_at(&mut sc.mdigits, &sc.rel_pos, k as u8);
+                }
+            }
+
+            // -- pass 1: size every target slot so the column is one flat
+            // CSR allocation-free fill
+            sc.next_off.clear();
+            sc.next_off.resize(next_cells + 1, 0);
+            sc.digits.clear();
+            sc.digits.resize(m_prev, 0);
+            for s in 0..prev_cells {
+                let len = sc.prev_off[s + 1] - sc.prev_off[s];
+                if len > 0 {
+                    let mut th = 0usize;
+                    for &p in &sc.surv_pos {
+                        th = th * k + sc.digits[p as usize] as usize;
+                    }
+                    for ci in 0..k {
+                        sc.next_off[th * k + ci + 1] += len;
+                    }
+                }
+                advance(&mut sc.digits, k as u8);
+            }
+            for t in 0..next_cells {
+                sc.next_off[t + 1] += sc.next_off[t];
+            }
+            let total = sc.next_off[next_cells];
+            sc.cursor.clear();
+            sc.cursor.extend_from_slice(&sc.next_off[..next_cells]);
+            sc.next_pts.clear();
+            sc.next_pts.resize(
+                total,
+                Pt {
+                    e: 0.0,
+                    t: 0.0,
+                    back: 0,
+                },
+            );
+
+            // -- pass 2: shift every source Pareto set into its target
+            // slots. Source cells are visited in ascending index order —
+            // the reference solver's BTreeMap iteration order — so each
+            // slot receives its per-source runs in exactly the reference
+            // append order.
+            sc.digits.clear();
+            sc.digits.resize(m_prev, 0);
+            for s in 0..prev_cells {
+                let lo = sc.prev_off[s];
+                let hi = sc.prev_off[s + 1];
+                if lo < hi {
+                    let mut th = 0usize;
+                    for &p in &sc.surv_pos {
+                        th = th * k + sc.digits[p as usize] as usize;
+                    }
+                    let mut rel = 0usize;
+                    if memo {
+                        for &p in &sc.rel_pos {
+                            rel = rel * k + sc.digits[p as usize] as usize;
+                        }
+                    }
+                    for (ci, &choice) in self.choices.iter().enumerate() {
+                        let (de, dt) = if memo {
+                            sc.cost_tab[rel * k + ci]
+                        } else {
+                            let c = predict_one(
+                                &self.choices,
+                                op,
+                                model,
+                                snap,
+                                &sc.base_out,
+                                start,
+                                i,
+                                &sc.prev_f,
+                                &sc.digits,
+                                prev_before_start,
+                                &mut sc.ctx,
+                                choice,
+                            );
+                            (c.energy_j, c.latency_s)
+                        };
+                        let slot = th * k + ci;
+                        let mut cur = sc.cursor[slot];
+                        // branchless inner loop: straight indexed
+                        // shift-copy, `back` temporarily holds the parent
+                        // (patched to an arena index if the point survives
+                        // pruning)
+                        for src in lo..hi {
+                            let pt = sc.prev_pts[src];
+                            sc.next_pts[cur] = Pt {
+                                e: pt.e + de,
+                                t: pt.t + dt,
+                                back: pt.back,
+                            };
+                            cur += 1;
+                        }
+                        sc.cursor[slot] = cur;
+                    }
+                }
+                advance(&mut sc.digits, k as u8);
+            }
+
+            // -- pass 3: prune each slot and write the pruned column back
+            // into the `prev` buffers (they were fully consumed by pass 2)
+            sc.prev_pts.clear();
+            sc.prev_off.clear();
+            sc.prev_off.push(0);
+            for slot in 0..next_cells {
+                let lo = sc.next_off[slot];
+                let hi = sc.next_off[slot + 1];
+                merge_prune_slot(
+                    &sc.next_pts[lo..hi],
+                    self.latency_buckets,
+                    &mut sc.runs,
+                    &mut sc.run_cur,
+                    &mut sc.kept,
+                );
+                let ci = (slot % k) as u8;
+                for p in &sc.kept {
+                    let back = sc.arena.len() as u32;
+                    sc.arena.push((ci, p.back));
+                    sc.prev_pts.push(Pt {
+                        e: p.e,
+                        t: p.t,
+                        back,
+                    });
+                }
+                sc.prev_off.push(sc.prev_pts.len());
+            }
+            std::mem::swap(&mut sc.prev_f, &mut sc.new_f);
+        }
+
+        // ---- pick the best terminal point (adding the fixed tail cost,
+        // which depends on the final frontier residency). Ascending cell
+        // index is the reference solver's terminal key order.
+        let mut best: Option<(f64, Pt, PlanCost)> = None;
+        let cells = sc.prev_off.len() - 1;
+        sc.digits.clear();
+        sc.digits.resize(sc.prev_f.len(), 0);
+        for s in 0..cells {
+            let lo = sc.prev_off[s];
+            let hi = sc.prev_off[s + 1];
+            if lo < hi {
+                // residency after the window for the tail evaluation
+                sc.out_cpu.clear();
+                sc.out_cpu.extend_from_slice(&sc.base_out);
+                for (p, &j) in sc.prev_f.iter().enumerate() {
+                    sc.out_cpu[j] = self.choices[sc.digits[p] as usize].frac_on(Proc::Cpu);
+                }
+                let tail = if end < n {
+                    let prev_pl = sc
+                        .prev_f
+                        .iter()
+                        .position(|&j| j == end - 1)
+                        .map(|p| self.choices[sc.digits[p] as usize]);
+                    self.eval_tail_in(
+                        g,
+                        model,
+                        snap,
+                        end,
+                        pinned,
+                        &mut sc.out_cpu,
+                        prev_pl,
+                        &mut sc.ctx,
+                    )
+                } else {
+                    PlanCost::default()
+                };
+                for pt in &sc.prev_pts[lo..hi] {
+                    let e = pt.e + tail.energy_j;
+                    let t = pt.t + tail.latency_s;
+                    let score = self.objective.score(e, t);
+                    if best.as_ref().map_or(true, |(bs, _, _)| score < *bs) {
+                        best = Some((
+                            score,
+                            *pt,
+                            PlanCost {
+                                energy_j: e,
+                                latency_s: t,
+                                transfer_s: 0.0,
+                                transfer_j: 0.0,
+                            },
+                        ));
+                    }
+                }
+            }
+            advance(&mut sc.digits, k as u8);
+        }
+        let (_, pt, cost) = best.expect("DP produced no states");
+
+        // ---- reconstruct
+        let mut placements: Vec<Placement> = if pinned.is_empty() {
+            vec![Placement::GPU; n]
+        } else {
+            pinned.to_vec()
+        };
+        let mut back = pt.back;
+        let mut i = end;
+        while back != u32::MAX {
+            i -= 1;
+            let (ci, parent) = sc.arena[back as usize];
+            placements[i] = self.choices[ci as usize];
+            back = parent;
+        }
+        debug_assert_eq!(i, start);
+        Ok(RangeSolution { placements, cost })
+    }
+
+    /// The reference rolling-`BTreeMap` DP core (pre-lattice), kept
+    /// verbatim as the differential-testing oracle and bench baseline.
+    #[allow(clippy::too_many_arguments)]
+    fn map_solve_range(
         &self,
         g: &ModelGraph,
         model: &dyn CostModel,
@@ -273,7 +734,8 @@ impl DpPartitioner {
         Ok(RangeSolution { placements, cost })
     }
 
-    /// Cost of the fixed ops `[from, n)` given post-window residencies.
+    /// Cost of the fixed ops `[from, n)` given post-window residencies
+    /// (map backend; allocates per op, kept verbatim for the baseline).
     fn eval_tail(
         &self,
         g: &ModelGraph,
@@ -316,6 +778,52 @@ impl DpPartitioner {
         total
     }
 
+    /// Allocation-free twin of [`DpPartitioner::eval_tail`]: mutates the
+    /// caller's residency buffer in place and reuses one [`ExecCtx`].
+    /// Numerically identical (same predict sequence and accumulation).
+    #[allow(clippy::too_many_arguments)]
+    fn eval_tail_in(
+        &self,
+        g: &ModelGraph,
+        model: &dyn CostModel,
+        snap: &Snapshot,
+        from: usize,
+        pinned: &[Placement],
+        out_cpu: &mut [f64],
+        prev_placement: Option<Placement>,
+        ctx: &mut ExecCtx,
+    ) -> PlanCost {
+        let mut prev = prev_placement;
+        let mut total = PlanCost::default();
+        for i in from..g.num_ops() {
+            let op = &g.ops[i];
+            let placement = pinned[i];
+            ctx.input_cpu_fracs.clear();
+            if op.inputs.is_empty() {
+                ctx.input_cpu_fracs.resize(op.in_shapes.len(), INPUT_CPU_FRAC);
+            } else {
+                for &j in &op.inputs {
+                    ctx.input_cpu_fracs.push(out_cpu[j]);
+                }
+            }
+            let (new_run_cpu, new_run_gpu) = match prev {
+                None => (true, true),
+                Some(p) => (!p.uses(Proc::Cpu), !p.uses(Proc::Gpu)),
+            };
+            ctx.new_run_cpu = new_run_cpu;
+            ctx.new_run_gpu = new_run_gpu;
+            ctx.concurrent = false;
+            let c = model.predict(op, placement, ctx, snap);
+            total.energy_j += c.energy_j;
+            total.latency_s += c.latency_s;
+            total.transfer_s += c.transfer_s;
+            total.transfer_j += c.transfer_j;
+            out_cpu[i] = placement.frac_on(Proc::Cpu);
+            prev = Some(placement);
+        }
+        total
+    }
+
     fn eval_fixed(
         &self,
         g: &ModelGraph,
@@ -344,6 +852,365 @@ impl DpPartitioner {
             None
         };
         self.eval_tail(g, model, snap, from, pinned, &out_cpu, prev)
+    }
+
+    /// Scratch-buffer twin of [`DpPartitioner::eval_fixed`]: the
+    /// residency vector is built in (and borrowed from) `scratch` instead
+    /// of being reallocated on every fixed-tail evaluation.
+    fn eval_fixed_in(
+        &self,
+        g: &ModelGraph,
+        model: &dyn CostModel,
+        snap: &Snapshot,
+        from: usize,
+        pinned: &[Placement],
+        prev_out_cpu: Option<&[f64]>,
+        scratch: &mut DpScratch,
+    ) -> PlanCost {
+        let n = g.num_ops();
+        let sc = &mut *scratch;
+        sc.out_cpu.clear();
+        match prev_out_cpu {
+            Some(v) => sc.out_cpu.extend_from_slice(v),
+            None => sc.out_cpu.extend((0..n).map(|i| {
+                if !pinned.is_empty() {
+                    pinned[i].frac_on(Proc::Cpu)
+                } else {
+                    INPUT_CPU_FRAC
+                }
+            })),
+        }
+        let prev = if from > 0 && !pinned.is_empty() {
+            Some(pinned[from - 1])
+        } else {
+            None
+        };
+        self.eval_tail_in(g, model, snap, from, pinned, &mut sc.out_cpu, prev, &mut sc.ctx)
+    }
+}
+
+/// The pre-lattice reference solver: a rolling `BTreeMap<frontier key,
+/// Pareto set>` dynamic program. Kept as the readable specification of
+/// the DP, as the differential-testing oracle the lattice backend must
+/// match bit for bit, and as the "before" arm of `make bench-dp`.
+#[derive(Debug, Clone)]
+pub struct MapDpPartitioner(pub DpPartitioner);
+
+impl MapDpPartitioner {
+    /// Reference solver with the default candidate set.
+    pub fn new(objective: Objective) -> Self {
+        MapDpPartitioner(DpPartitioner::new(objective).with_backend(DpBackend::Map))
+    }
+
+    /// Solve for a full model; always runs the map core.
+    pub fn solve(
+        &self,
+        g: &ModelGraph,
+        model: &dyn CostModel,
+        snap: &Snapshot,
+    ) -> Result<Plan> {
+        let sol = self.solve_range(g, model, snap, 0, g.num_ops(), &[], None)?;
+        Ok(Plan {
+            placements: sol.placements,
+            predicted: sol.cost,
+            policy: "adaoper-map".into(),
+        })
+    }
+
+    /// Windowed solve; see [`DpPartitioner::solve_range`]. Always runs
+    /// the map core, whatever `self.0.backend` says.
+    #[allow(clippy::too_many_arguments)]
+    pub fn solve_range(
+        &self,
+        g: &ModelGraph,
+        model: &dyn CostModel,
+        snap: &Snapshot,
+        start: usize,
+        end: usize,
+        pinned: &[Placement],
+        prev_out_cpu: Option<&[f64]>,
+    ) -> Result<RangeSolution> {
+        self.0
+            .map_solve_range(g, model, snap, start, end, pinned, prev_out_cpu)
+    }
+}
+
+impl Partitioner for MapDpPartitioner {
+    fn name(&self) -> &str {
+        "adaoper-map"
+    }
+
+    fn partition(
+        &self,
+        g: &ModelGraph,
+        model: &dyn CostModel,
+        snap: &Snapshot,
+    ) -> Result<Plan> {
+        self.solve(g, model, snap)
+    }
+}
+
+/// Reusable solver state for the lattice backend: the two CSR column
+/// buffers, the decision arena, index/odometer tables, the predict memo,
+/// and one [`ExecCtx`]. Owned long-term by the repartition controller so
+/// repeated repartitions allocate nothing once the buffers have grown to
+/// the working size; `DpScratch::default()` works for one-off solves.
+#[derive(Debug, Clone)]
+pub struct DpScratch {
+    // decision arena: (choice_idx, parent) reconstruction links
+    arena: Vec<(u8, u32)>,
+    // frontier op ids (ascending) of the previous / next column
+    prev_f: Vec<usize>,
+    new_f: Vec<usize>,
+    // previous-frontier positions surviving the current op / feeding its cost
+    surv_pos: Vec<u8>,
+    rel_pos: Vec<u8>,
+    // mixed-radix odometers (cell enumeration / memo enumeration)
+    digits: Vec<u8>,
+    mdigits: Vec<u8>,
+    // CSR columns: pruned previous column, pre-prune next column
+    prev_off: Vec<usize>,
+    prev_pts: Vec<Pt>,
+    next_off: Vec<usize>,
+    next_pts: Vec<Pt>,
+    cursor: Vec<usize>,
+    // predict memo: (energy_j, latency_s) per (relevant digits, choice)
+    cost_tab: Vec<(f64, f64)>,
+    // per-slot prune state: run starts, merge cursors, kept points
+    runs: Vec<usize>,
+    run_cur: Vec<usize>,
+    kept: Vec<Pt>,
+    // residency buffers: pre-window base, terminal/tail working copy
+    base_out: Vec<f64>,
+    out_cpu: Vec<f64>,
+    // the one execution context reused for every cost-model query
+    ctx: ExecCtx,
+}
+
+impl DpScratch {
+    /// Fresh, empty scratch (buffers grow on first use, then get reused).
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl Default for DpScratch {
+    fn default() -> Self {
+        DpScratch {
+            arena: Vec::new(),
+            prev_f: Vec::new(),
+            new_f: Vec::new(),
+            surv_pos: Vec::new(),
+            rel_pos: Vec::new(),
+            digits: Vec::new(),
+            mdigits: Vec::new(),
+            prev_off: Vec::new(),
+            prev_pts: Vec::new(),
+            next_off: Vec::new(),
+            next_pts: Vec::new(),
+            cursor: Vec::new(),
+            cost_tab: Vec::new(),
+            runs: Vec::new(),
+            run_cur: Vec::new(),
+            kept: Vec::new(),
+            base_out: Vec::new(),
+            out_cpu: Vec::new(),
+            ctx: ExecCtx {
+                input_cpu_fracs: Vec::new(),
+                new_run_cpu: true,
+                new_run_gpu: true,
+                concurrent: false,
+            },
+        }
+    }
+}
+
+/// True when every DP column of `[start, end)` fits the dense-lattice
+/// cell cap (`choices^frontier_len` cells); `buf` is reused frontier
+/// storage. Liveness — and therefore the answer — is independent of any
+/// placement choice, so this can run before the solve.
+fn lattice_fits(
+    last_use: &[usize],
+    start: usize,
+    end: usize,
+    k: usize,
+    buf: &mut Vec<usize>,
+) -> bool {
+    buf.clear();
+    for i in start..end {
+        buf.retain(|&j| last_use[j] > i);
+        buf.push(i);
+        match k.checked_pow(buf.len() as u32) {
+            Some(c) if c <= LATTICE_CELL_CAP => {}
+            _ => return false,
+        }
+    }
+    true
+}
+
+/// One cost-model query for op `i` under `choice`, with the placements of
+/// the previous frontier ops `prev_f` given by `digits` (only positions
+/// of in-window inputs and of op `i-1` are read, so a memo enumeration
+/// may leave the other digits at zero). Builds the [`ExecCtx`] in place —
+/// identical field by field to the reference solver's per-(state, choice)
+/// context — and returns the model's prediction.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn predict_one(
+    choices: &[Placement],
+    op: &OpNode,
+    model: &dyn CostModel,
+    snap: &Snapshot,
+    base_out_cpu: &[f64],
+    start: usize,
+    i: usize,
+    prev_f: &[usize],
+    digits: &[u8],
+    prev_before_start: Option<Placement>,
+    ctx: &mut ExecCtx,
+    choice: Placement,
+) -> OpCost {
+    ctx.input_cpu_fracs.clear();
+    if op.inputs.is_empty() {
+        ctx.input_cpu_fracs.resize(op.in_shapes.len(), INPUT_CPU_FRAC);
+    } else {
+        for &j in &op.inputs {
+            let frac = if j >= start {
+                let p = prev_f.binary_search(&j).expect("input live");
+                choices[digits[p] as usize].frac_on(Proc::Cpu)
+            } else {
+                base_out_cpu[j]
+            };
+            ctx.input_cpu_fracs.push(frac);
+        }
+    }
+    let prev = if i == start {
+        prev_before_start
+    } else {
+        let p = prev_f.binary_search(&(i - 1)).expect("i-1 live");
+        Some(choices[digits[p] as usize])
+    };
+    let (new_run_cpu, new_run_gpu) = match prev {
+        None => (true, true),
+        Some(p) => (!p.uses(Proc::Cpu), !p.uses(Proc::Gpu)),
+    };
+    ctx.new_run_cpu = new_run_cpu;
+    ctx.new_run_gpu = new_run_gpu;
+    ctx.concurrent = false;
+    model.predict(op, choice, ctx, snap)
+}
+
+/// Order used throughout pruning: latency first, then energy, via
+/// `total_cmp` (a total order, so NaN costs cannot panic the solver).
+#[inline]
+fn cmp_pt(a: &Pt, b: &Pt) -> Ordering {
+    a.t.total_cmp(&b.t).then(a.e.total_cmp(&b.e))
+}
+
+/// Advance a mixed-radix (base-`k`) odometer by one, least-significant
+/// digit last — ascending odometer order is ascending cell index, which
+/// is the reference solver's `BTreeMap` key order.
+#[inline]
+fn advance(digits: &mut [u8], k: u8) {
+    for d in digits.iter_mut().rev() {
+        *d += 1;
+        if *d < k {
+            return;
+        }
+        *d = 0;
+    }
+}
+
+/// Advance only the digits at positions `pos` (enumerates the predict
+/// memo over the cost-relevant frontier positions).
+#[inline]
+fn advance_at(digits: &mut [u8], pos: &[u8], k: u8) {
+    for &p in pos.iter().rev() {
+        let d = &mut digits[p as usize];
+        *d += 1;
+        if *d < k {
+            return;
+        }
+        *d = 0;
+    }
+}
+
+/// Pareto-prune one pre-prune lattice slot into `kept`, allocation- and
+/// sort-free, with output *identical* to the reference path
+/// (`prune(sort_by(t, e) → dominance filter → thinning)`):
+///
+/// * `seg` is a concatenation of per-source runs, and splitting it into
+///   *maximal non-decreasing* runs by (t, e) then k-way merging with ties
+///   broken toward the earlier run is natural merge sort — exactly a
+///   stable sort by (t, e). (If two true source runs happen to
+///   concatenate into one sorted run, treating them as one run emits the
+///   same sequence, so detecting run boundaries by order alone is safe.)
+/// * The dominance filter (`e < best_e - 1e-15`) is applied to the merged
+///   stream in emission order, as `prune` applies it post-sort.
+/// * Thinning indexes `kept[b * (len-1) / (buckets-1)]` — `prune`'s exact
+///   formula — done in place (source index ≥ destination index always),
+///   followed by the same value-equality dedup.
+fn merge_prune_slot(
+    seg: &[Pt],
+    buckets: usize,
+    runs: &mut Vec<usize>,
+    run_cur: &mut Vec<usize>,
+    kept: &mut Vec<Pt>,
+) {
+    kept.clear();
+    if seg.is_empty() {
+        return;
+    }
+    runs.clear();
+    runs.push(0);
+    for w in 1..seg.len() {
+        if cmp_pt(&seg[w - 1], &seg[w]) == Ordering::Greater {
+            runs.push(w);
+        }
+    }
+    runs.push(seg.len());
+    let nr = runs.len() - 1;
+    let mut best_e = f64::INFINITY;
+    if nr == 1 {
+        // already sorted (the common case once columns are Pareto-thin)
+        for p in seg {
+            if p.e < best_e - 1e-15 {
+                best_e = p.e;
+                kept.push(*p);
+            }
+        }
+    } else {
+        run_cur.clear();
+        run_cur.extend_from_slice(&runs[..nr]);
+        loop {
+            let mut r = usize::MAX;
+            for q in 0..nr {
+                if run_cur[q] < runs[q + 1]
+                    && (r == usize::MAX
+                        || cmp_pt(&seg[run_cur[q]], &seg[run_cur[r]]) == Ordering::Less)
+                {
+                    r = q;
+                }
+            }
+            if r == usize::MAX {
+                break;
+            }
+            let p = seg[run_cur[r]];
+            run_cur[r] += 1;
+            if p.e < best_e - 1e-15 {
+                best_e = p.e;
+                kept.push(p);
+            }
+        }
+    }
+    if kept.len() > buckets {
+        // keep endpoints + evenly spaced interior points, in place
+        let len = kept.len();
+        for b in 0..buckets {
+            kept[b] = kept[b * (len - 1) / (buckets - 1)];
+        }
+        kept.truncate(buckets);
+        kept.dedup_by(|a, b| a.t == b.t && a.e == b.e);
     }
 }
 
@@ -402,7 +1269,7 @@ impl ParetoPoint for (f64, f64) {
 }
 
 /// A DP point: accumulated (energy, latency) plus its decision backpointer.
-#[derive(Clone, Copy)]
+#[derive(Debug, Clone, Copy)]
 struct Pt {
     e: f64,
     t: f64,
@@ -431,6 +1298,16 @@ impl Partitioner for DpPartitioner {
     ) -> Result<Plan> {
         self.solve(g, model, snap)
     }
+
+    fn partition_in(
+        &self,
+        g: &ModelGraph,
+        model: &dyn CostModel,
+        snap: &Snapshot,
+        scratch: &mut DpScratch,
+    ) -> Result<Plan> {
+        self.solve_in(g, model, snap, scratch)
+    }
 }
 
 #[cfg(test)]
@@ -457,6 +1334,13 @@ mod tests {
         d
     }
 
+    fn assert_cost_bits_eq(a: &PlanCost, b: &PlanCost, what: &str) {
+        assert_eq!(a.energy_j.to_bits(), b.energy_j.to_bits(), "{what}: energy");
+        assert_eq!(a.latency_s.to_bits(), b.latency_s.to_bits(), "{what}: latency");
+        assert_eq!(a.transfer_s.to_bits(), b.transfer_s.to_bits(), "{what}: transfer_s");
+        assert_eq!(a.transfer_j.to_bits(), b.transfer_j.to_bits(), "{what}: transfer_j");
+    }
+
     #[test]
     fn pareto_prune_removes_dominated() {
         let mut pts = vec![(1.0, 5.0), (2.0, 4.0), (3.0, 3.0), (2.5, 3.5), (4.0, 2.9)];
@@ -480,6 +1364,62 @@ mod tests {
         // endpoints survive
         assert!(pts.iter().any(|p| p.1 == 0.0));
         assert!(pts.iter().any(|p| p.1 == 499.0));
+    }
+
+    #[test]
+    fn merge_prune_matches_reference_prune() {
+        // random-ish slots (shifted-run structure and adversarial ties)
+        // must come out of the merge path exactly as out of sort+prune
+        let mut state = 0x9e3779b97f4a7c15u64;
+        let mut next = move || {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            (state >> 11) as f64 / (1u64 << 53) as f64
+        };
+        for buckets in [2, 4, 64] {
+            for trial in 0..50 {
+                // build a slot out of 1..=5 sorted runs, as pass 2 would
+                let nruns = 1 + trial % 5;
+                let mut seg: Vec<Pt> = Vec::new();
+                for r in 0..nruns {
+                    let mut run: Vec<Pt> = (0..(1 + (trial + r) % 7))
+                        .map(|q| Pt {
+                            // coarse grid → plenty of exact (t, e) ties
+                            e: (next() * 8.0).floor(),
+                            t: (next() * 8.0).floor(),
+                            back: (r * 100 + q) as u32,
+                        })
+                        .collect();
+                    run.sort_by(cmp_pt);
+                    seg.extend(run);
+                }
+                let mut reference = seg.clone();
+                prune(&mut reference, buckets);
+                let (mut runs, mut cur, mut kept) = (Vec::new(), Vec::new(), Vec::new());
+                merge_prune_slot(&seg, buckets, &mut runs, &mut cur, &mut kept);
+                assert_eq!(kept.len(), reference.len(), "trial {trial} buckets {buckets}");
+                for (a, b) in kept.iter().zip(&reference) {
+                    assert_eq!(a.e.to_bits(), b.e.to_bits());
+                    assert_eq!(a.t.to_bits(), b.t.to_bits());
+                    // same surviving decision, not just same value
+                    assert_eq!(a.back, b.back, "trial {trial} buckets {buckets}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lattice_cell_cap_guard() {
+        // chain: every frontier is one op wide → any sane grid fits
+        let chain: Vec<usize> = (1..=6).collect();
+        let mut buf = Vec::new();
+        assert!(lattice_fits(&chain, 0, 6, 5, &mut buf));
+        // op 0 stays live to the end → two-wide frontier; 5^2 fits,
+        // 200^2 exceeds the cap and must route to the map solver
+        let skip = vec![6, 6, 3, 4, 5, 6];
+        assert!(lattice_fits(&skip, 0, 6, 5, &mut buf));
+        assert!(!lattice_fits(&skip, 0, 6, 200, &mut buf));
     }
 
     #[test]
@@ -583,6 +1523,79 @@ mod tests {
         for g in [zoo::yolov2(), zoo::resnet18()] {
             let plan = DpPartitioner::new(Objective::MinEdp).solve(&g, &d, &snap).unwrap();
             assert_eq!(plan.placements.len(), g.num_ops());
+        }
+    }
+
+    #[test]
+    fn lattice_matches_map_bit_for_bit_on_full_solves() {
+        for cond in [WorkloadCondition::moderate(), WorkloadCondition::high()] {
+            let d = frozen_device(cond);
+            let snap = d.snapshot();
+            for obj in [
+                Objective::MinEdp,
+                Objective::MinLatency,
+                Objective::MinEnergyUnderSlo { slo_s: 0.05 },
+            ] {
+                for g in [zoo::yolov2(), zoo::yolov2_tiny(), zoo::resnet18()] {
+                    let lat = DpPartitioner::new(obj).solve(&g, &d, &snap).unwrap();
+                    let map = MapDpPartitioner::new(obj).solve(&g, &d, &snap).unwrap();
+                    assert_eq!(
+                        lat.placements, map.placements,
+                        "{} under {obj:?}: plans diverge",
+                        g.name
+                    );
+                    assert_cost_bits_eq(&lat.predicted, &map.predicted, &g.name);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lattice_matches_map_on_pinned_windows() {
+        let d = frozen_device(WorkloadCondition::moderate());
+        let snap = d.snapshot();
+        let g = zoo::yolov2();
+        let n = g.num_ops();
+        let pinned: Vec<Placement> = (0..n)
+            .map(|i| if i % 2 == 0 { Placement::GPU } else { Placement::CPU })
+            .collect();
+        let residency: Vec<f64> = (0..n).map(|i| (i % 3) as f64 * 0.5).collect();
+        let lat = DpPartitioner::new(Objective::MinEdp);
+        let map = MapDpPartitioner::new(Objective::MinEdp);
+        for (start, end) in [(0, 5), (5, 12), (3, n), (0, n), (7, 7), (n, n)] {
+            for prev in [None, Some(&residency[..])] {
+                let a = lat
+                    .solve_range(&g, &d, &snap, start, end, &pinned, prev)
+                    .unwrap();
+                let b = map
+                    .solve_range(&g, &d, &snap, start, end, &pinned, prev)
+                    .unwrap();
+                assert_eq!(
+                    a.placements, b.placements,
+                    "window [{start},{end}) prev={} diverged",
+                    prev.is_some()
+                );
+                assert_cost_bits_eq(&a.cost, &b.cost, &format!("window [{start},{end})"));
+            }
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_is_deterministic() {
+        // a warm scratch (grown buffers, stale contents) must not change
+        // any result
+        let d = frozen_device(WorkloadCondition::high());
+        let snap = d.snapshot();
+        let dp = DpPartitioner::new(Objective::MinEdp);
+        let mut scratch = DpScratch::new();
+        for g in [zoo::yolov2(), zoo::resnet18(), zoo::yolov2_tiny()] {
+            let cold = dp.solve(&g, &d, &snap).unwrap();
+            let warm1 = dp.solve_in(&g, &d, &snap, &mut scratch).unwrap();
+            let warm2 = dp.solve_in(&g, &d, &snap, &mut scratch).unwrap();
+            assert_eq!(cold.placements, warm1.placements, "{}", g.name);
+            assert_eq!(warm1.placements, warm2.placements, "{}", g.name);
+            assert_cost_bits_eq(&cold.predicted, &warm1.predicted, &g.name);
+            assert_cost_bits_eq(&warm1.predicted, &warm2.predicted, &g.name);
         }
     }
 }

@@ -16,7 +16,7 @@ use crate::graph::ModelGraph;
 use crate::profiler::CostModel;
 use crate::soc::device::Snapshot;
 
-use super::dp::DpPartitioner;
+use super::dp::{DpPartitioner, DpScratch};
 use super::plan::Plan;
 
 /// Windowed repartitioner wrapping the DP.
@@ -47,12 +47,30 @@ impl IncrementalRepartitioner {
         snap: &Snapshot,
         out_cpu: Option<&[f64]>,
     ) -> Result<Plan> {
+        let mut scratch = DpScratch::default();
+        self.repartition_in(g, plan, frontier, model, snap, out_cpu, &mut scratch)
+    }
+
+    /// [`IncrementalRepartitioner::repartition`] with caller-owned solver
+    /// scratch: the repartition controller keeps one [`DpScratch`] alive
+    /// so steady-state window repairs allocate nothing.
+    #[allow(clippy::too_many_arguments)]
+    pub fn repartition_in(
+        &self,
+        g: &ModelGraph,
+        plan: &Plan,
+        frontier: usize,
+        model: &dyn CostModel,
+        snap: &Snapshot,
+        out_cpu: Option<&[f64]>,
+        scratch: &mut DpScratch,
+    ) -> Result<Plan> {
         let n = g.num_ops();
         if frontier >= n {
             return Ok(plan.clone());
         }
         let end = (frontier + self.window).min(n);
-        let sol = self.dp.solve_range(
+        let sol = self.dp.solve_range_in(
             g,
             model,
             snap,
@@ -60,6 +78,7 @@ impl IncrementalRepartitioner {
             end,
             &plan.placements,
             out_cpu,
+            scratch,
         )?;
         Ok(Plan {
             placements: sol.placements,
@@ -79,7 +98,24 @@ impl IncrementalRepartitioner {
         snap: &Snapshot,
         out_cpu: Option<&[f64]>,
     ) -> Result<crate::partition::plan::PlanCost> {
-        let sol = self.dp.solve_range(
+        let mut scratch = DpScratch::default();
+        self.remaining_cost_in(g, plan, frontier, model, snap, out_cpu, &mut scratch)
+    }
+
+    /// [`IncrementalRepartitioner::remaining_cost`] with caller-owned
+    /// solver scratch (see [`IncrementalRepartitioner::repartition_in`]).
+    #[allow(clippy::too_many_arguments)]
+    pub fn remaining_cost_in(
+        &self,
+        g: &ModelGraph,
+        plan: &Plan,
+        frontier: usize,
+        model: &dyn CostModel,
+        snap: &Snapshot,
+        out_cpu: Option<&[f64]>,
+        scratch: &mut DpScratch,
+    ) -> Result<crate::partition::plan::PlanCost> {
+        let sol = self.dp.solve_range_in(
             g,
             model,
             snap,
@@ -87,6 +123,7 @@ impl IncrementalRepartitioner {
             frontier, // empty window → pure fixed-tail evaluation
             &plan.placements,
             out_cpu,
+            scratch,
         )?;
         Ok(sol.cost)
     }

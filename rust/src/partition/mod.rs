@@ -6,7 +6,10 @@
 //! * [`dp`] — AdaOper's partitioner: bottom-up iterative dynamic program
 //!   over the operator DAG frontier with Pareto (energy, latency) states,
 //!   rolling storage (only the previous DP column is kept — the paper's
-//!   space optimization), and latency-bucket pruning.
+//!   space optimization), and latency-bucket pruning. Two bit-identical
+//!   backends: the dense flattened-lattice fast path (default, zero
+//!   steady-state allocation via [`dp::DpScratch`]) and the reference
+//!   rolling-map solver kept as [`dp::MapDpPartitioner`].
 //! * [`incremental`] — windowed repartitioning: on energy-drift triggers
 //!   only a bounded window of operators around the execution frontier is
 //!   re-solved (the paper's "redistribution of partial operators").
@@ -22,5 +25,5 @@ pub mod exhaustive;
 pub mod incremental;
 pub mod plan;
 
-pub use dp::DpPartitioner;
+pub use dp::{DpBackend, DpPartitioner, DpScratch, MapDpPartitioner};
 pub use plan::{evaluate, Objective, Partitioner, Plan, PlanCost};

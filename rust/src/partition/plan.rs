@@ -87,6 +87,20 @@ pub trait Partitioner {
         model: &dyn CostModel,
         snap: &Snapshot,
     ) -> anyhow::Result<Plan>;
+    /// [`Partitioner::partition`] with caller-owned solver scratch, so
+    /// policies that can reuse buffers (the lattice DP) allocate nothing
+    /// on repeated replans. The default ignores the scratch — baselines
+    /// have no reusable state.
+    fn partition_in(
+        &self,
+        g: &ModelGraph,
+        model: &dyn CostModel,
+        snap: &Snapshot,
+        scratch: &mut super::dp::DpScratch,
+    ) -> anyhow::Result<Plan> {
+        let _ = scratch;
+        self.partition(g, model, snap)
+    }
 }
 
 /// Walks a graph in topo order producing the per-op [`ExecCtx`] implied by

@@ -53,6 +53,9 @@ pub trait CostModel {
     /// predictions keyed on `(inputs, version)`. `None` (the default)
     /// means the model offers no such guarantee and callers must always
     /// recompute — behavior-preserving for models that never opt in.
+    /// The lattice DP solver ([`crate::partition::DpPartitioner`]) is the
+    /// main consumer: with a version present it builds a per-column
+    /// predict memo instead of re-querying the model per DP state.
     fn version(&self) -> Option<u64> {
         None
     }

@@ -888,8 +888,9 @@ impl ExecStage {
 pub struct TickOutcome {
     /// Whether the sample flagged a regime change.
     pub regime_changed: bool,
-    /// Re-plans adopted this tick: `(stream, virtual decision seconds)`.
-    pub replans: Vec<(usize, f64)>,
+    /// Re-plans adopted this tick: `(stream, virtual decision seconds,
+    /// measured solve wall-clock seconds — telemetry only)`.
+    pub replans: Vec<(usize, f64, f64)>,
 }
 
 /// Monitor-tick bookkeeping, regime-change re-planning, profile refresh,
@@ -968,7 +969,7 @@ impl MonitorStage {
                     Some(&mut *cache),
                 ) {
                     plans.set_plan(s.id, plan);
-                    replans.push((s.id, dt));
+                    replans.push((s.id, dt, controller.last_solve_wall_s()));
                 }
             }
         }

@@ -1,0 +1,209 @@
+//! Differential suite: the flattened-lattice DP core vs the rolling
+//! `BTreeMap` reference solver ([`MapDpPartitioner`]), driven in lockstep
+//! over random graphs, frozen device snapshots, every objective family,
+//! both candidate grids, both bucket widths, and randomly pinned windows
+//! (including empty ones). Placements AND all four predicted `PlanCost`
+//! fields must match **bit for bit** — the lattice backend is a speed
+//! optimization, never a behavior change — both with the raw device model
+//! (no [`CostModel::version`] → memo disabled) and through a versioned
+//! wrapper that turns the per-column predict memo on.
+
+use adaoper::experiments::ablations::random_chain;
+use adaoper::graph::{zoo, ModelGraph, OpNode};
+use adaoper::partition::dp::{DpBackend, DpPartitioner, MapDpPartitioner};
+use adaoper::partition::plan::{Objective, PlanCost};
+use adaoper::profiler::CostModel;
+use adaoper::soc::device::{Device, DeviceConfig, ExecCtx, OpCost, Snapshot};
+use adaoper::soc::Placement;
+use adaoper::util::Prng;
+use adaoper::workload::WorkloadCondition;
+
+fn frozen(cond: WorkloadCondition, seed: u64) -> Device {
+    let mut d = Device::new(DeviceConfig {
+        noise_sigma: 0.0,
+        drift_sigma: 0.0,
+        seed,
+        ..DeviceConfig::snapdragon_855()
+    });
+    let mut c = cond.spec;
+    c.cpu_bg_sigma = 0.0;
+    c.cpu_burst = 0.0;
+    c.gpu_bg_sigma = 0.0;
+    c.gpu_burst = 0.0;
+    c.drift_sigma = 0.0;
+    d.apply_condition(&c);
+    d
+}
+
+/// Wrapper that opts into prediction memoization ([`CostModel::version`])
+/// without changing any prediction — exercises the lattice solver's
+/// per-column predict memo, which the raw `Device` (version = `None`)
+/// never enters.
+struct MemoDevice<'a>(&'a Device);
+
+impl CostModel for MemoDevice<'_> {
+    fn predict(
+        &self,
+        op: &OpNode,
+        placement: Placement,
+        ctx: &ExecCtx,
+        snap: &Snapshot,
+    ) -> OpCost {
+        CostModel::predict(self.0, op, placement, ctx, snap)
+    }
+
+    fn version(&self) -> Option<u64> {
+        Some(7)
+    }
+}
+
+fn assert_cost_bits(a: &PlanCost, b: &PlanCost, what: &str) {
+    assert_eq!(a.energy_j.to_bits(), b.energy_j.to_bits(), "{what}: energy_j");
+    assert_eq!(a.latency_s.to_bits(), b.latency_s.to_bits(), "{what}: latency_s");
+    assert_eq!(a.transfer_s.to_bits(), b.transfer_s.to_bits(), "{what}: transfer_s");
+    assert_eq!(a.transfer_j.to_bits(), b.transfer_j.to_bits(), "{what}: transfer_j");
+}
+
+fn random_graph(rng: &mut Prng) -> ModelGraph {
+    match rng.below(5) {
+        0 => zoo::yolov2(),
+        1 => zoo::yolov2_tiny(),
+        2 => zoo::resnet18(),
+        3 => zoo::mobilenet_v1(),
+        _ => random_chain(6 + rng.below(7), rng.next_u64()),
+    }
+}
+
+fn random_objective(rng: &mut Prng) -> Objective {
+    match rng.below(3) {
+        0 => Objective::MinEdp,
+        1 => Objective::MinLatency,
+        _ => Objective::MinEnergyUnderSlo {
+            slo_s: 0.002 * (1 + rng.below(250)) as f64,
+        },
+    }
+}
+
+fn random_solver(rng: &mut Prng) -> DpPartitioner {
+    let mut dp = DpPartitioner::new(random_objective(rng));
+    if rng.chance(0.5) {
+        dp = dp.with_choices(vec![Placement::CPU, Placement::GPU]);
+    }
+    dp.with_buckets(if rng.chance(0.5) { 4 } else { 64 })
+}
+
+/// Full-model solves: lattice == map, bit for bit, with and without the
+/// predict memo engaged.
+#[test]
+fn full_solves_are_bit_identical_across_backends() {
+    for seed in 0..5u64 {
+        let mut rng = Prng::new(0x1A77_1CE0 ^ seed);
+        for trial in 0..3 {
+            let g = random_graph(&mut rng);
+            let cond = if rng.chance(0.5) {
+                WorkloadCondition::moderate()
+            } else {
+                WorkloadCondition::high()
+            };
+            let d = frozen(cond, rng.next_u64());
+            let snap = d.snapshot();
+            let lat = random_solver(&mut rng);
+            let map = lat.clone().with_backend(DpBackend::Map);
+            let tag = format!("seed {seed} trial {trial} {}", g.name);
+
+            let a = lat.solve(&g, &d, &snap).unwrap();
+            let b = map.solve(&g, &d, &snap).unwrap();
+            assert_eq!(a.placements, b.placements, "{tag}: plain model");
+            assert_cost_bits(&a.predicted, &b.predicted, &tag);
+
+            // memoized path must change nothing — vs the map oracle AND
+            // vs the lattice's own un-memoized run
+            let memo = MemoDevice(&d);
+            let m = lat.solve(&g, &memo, &snap).unwrap();
+            assert_eq!(a.placements, m.placements, "{tag}: memo model");
+            assert_cost_bits(&a.predicted, &m.predicted, &tag);
+        }
+    }
+}
+
+/// Windowed solves with pinned prefix/suffix and optional pre-window GPU
+/// residency: lattice == map on every window, including empty ones.
+#[test]
+fn pinned_window_solves_are_bit_identical_across_backends() {
+    for seed in 0..5u64 {
+        let mut rng = Prng::new(0xD1FF_0000 ^ seed);
+        let g = random_graph(&mut rng);
+        let n = g.num_ops();
+        let d = frozen(
+            if seed % 2 == 0 {
+                WorkloadCondition::moderate()
+            } else {
+                WorkloadCondition::high()
+            },
+            rng.next_u64(),
+        );
+        let snap = d.snapshot();
+        let pinned: Vec<Placement> = (0..n)
+            .map(|_| match rng.below(3) {
+                0 => Placement::CPU,
+                1 => Placement::GPU,
+                _ => Placement::Split { cpu_frac: 0.15 },
+            })
+            .collect();
+        let residency: Vec<f64> = (0..n).map(|_| rng.below(3) as f64 * 0.5).collect();
+        let lat = random_solver(&mut rng);
+        let map = MapDpPartitioner(lat.clone().with_backend(DpBackend::Map));
+        // random windows plus the degenerate edges
+        let mut windows = vec![(0, n), (n, n), (n / 2, n / 2)];
+        for _ in 0..4 {
+            let start = rng.below(n + 1);
+            let end = start + rng.below(n - start + 1);
+            windows.push((start, end));
+        }
+        for (start, end) in windows {
+            for prev in [None, Some(&residency[..])] {
+                let a = lat
+                    .solve_range(&g, &d, &snap, start, end, &pinned, prev)
+                    .unwrap();
+                let b = map
+                    .solve_range(&g, &d, &snap, start, end, &pinned, prev)
+                    .unwrap();
+                let tag = format!(
+                    "seed {seed} {} window [{start},{end}) prev={}",
+                    g.name,
+                    prev.is_some()
+                );
+                assert_eq!(a.placements, b.placements, "{tag}");
+                assert_cost_bits(&a.cost, &b.cost, &tag);
+
+                let memo = MemoDevice(&d);
+                let m = lat
+                    .solve_range(&g, &memo, &snap, start, end, &pinned, prev)
+                    .unwrap();
+                assert_eq!(a.placements, m.placements, "{tag}: memo");
+                assert_cost_bits(&a.cost, &m.cost, &tag);
+            }
+        }
+    }
+}
+
+/// A warm scratch carried across *different* graphs, windows and models
+/// (the controller's usage pattern) never perturbs results relative to the
+/// map oracle solved cold.
+#[test]
+fn warm_scratch_across_graphs_matches_cold_map_oracle() {
+    use adaoper::partition::dp::DpScratch;
+    let mut rng = Prng::new(0x5C4A_7C8);
+    let mut scratch = DpScratch::new();
+    for round in 0..8 {
+        let g = random_graph(&mut rng);
+        let d = frozen(WorkloadCondition::high(), rng.next_u64());
+        let snap = d.snapshot();
+        let lat = random_solver(&mut rng);
+        let map = lat.clone().with_backend(DpBackend::Map);
+        let a = lat.solve_in(&g, &d, &snap, &mut scratch).unwrap();
+        let b = map.solve(&g, &d, &snap).unwrap();
+        assert_eq!(a.placements, b.placements, "round {round} {}", g.name);
+        assert_cost_bits(&a.predicted, &b.predicted, &format!("round {round}"));
+    }
+}

@@ -5,7 +5,7 @@
 use adaoper::experiments::ablations::random_chain;
 use adaoper::graph::zoo;
 use adaoper::partition::baselines::RandomPartitioner;
-use adaoper::partition::dp::DpPartitioner;
+use adaoper::partition::dp::{DpBackend, DpPartitioner};
 use adaoper::partition::exhaustive::ExhaustivePartitioner;
 use adaoper::partition::incremental::IncrementalRepartitioner;
 use adaoper::partition::plan::{evaluate, Objective, Partitioner};
@@ -108,11 +108,29 @@ fn dp_matches_exhaustive_for_every_objective_and_slo() {
             Objective::MinEnergyUnderSlo { slo_s: 0.5 },   // slack
         ];
         for obj in objectives {
-            let dp = DpPartitioner::new(obj)
+            // both DP backends must hit the exhaustive optimum — and agree
+            // with each other bit for bit
+            let solver = DpPartitioner::new(obj)
                 .with_choices(choices.clone())
-                .with_buckets(4096) // no thinning → DP is exact on chains
+                .with_buckets(4096); // no thinning → DP is exact on chains
+            let dp = solver.partition(&g, &d, &snap).unwrap();
+            let map = solver
+                .clone()
+                .with_backend(DpBackend::Map)
                 .partition(&g, &d, &snap)
                 .unwrap();
+            assert_eq!(
+                dp.placements, map.placements,
+                "trial {trial} n={n} {obj:?}: lattice and map backends diverge"
+            );
+            assert_eq!(
+                dp.predicted.energy_j.to_bits(),
+                map.predicted.energy_j.to_bits()
+            );
+            assert_eq!(
+                dp.predicted.latency_s.to_bits(),
+                map.predicted.latency_s.to_bits()
+            );
             let ex = ExhaustivePartitioner::new(obj, choices.clone())
                 .partition(&g, &d, &snap)
                 .unwrap();
