@@ -3,7 +3,7 @@
 
 CARGO_DIR := rust
 
-.PHONY: verify build test fmt fmt-check clippy bench-build bench-hot bench-hot-smoke bench-dp bench-dp-smoke doc smoke scenarios inspect-smoke all
+.PHONY: verify build test fmt fmt-check clippy bench-build bench-hot bench-hot-smoke bench-dp bench-dp-smoke bench-check doc smoke scenarios inspect-smoke all
 
 # Tier-1 gate: release build + full test suite.
 verify:
@@ -49,6 +49,14 @@ bench-dp:
 bench-dp-smoke:
 	cd $(CARGO_DIR) && ADAOPER_BENCH_QUICK=1 cargo bench --bench dp_solve
 
+# Validate the committed bench trajectory files against the
+# adaoper-bench-v2 schema (header line + required per-record stats). CI
+# cannot re-measure bench-host appends, but it can prove the files still
+# parse and match the schema their headers promise.
+bench-check:
+	cd $(CARGO_DIR) && cargo run --release --bin bench_check -- \
+		../BENCH_hot_loop.json ../BENCH_dp_solve.json
+
 doc:
 	cd $(CARGO_DIR) && RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 
@@ -75,11 +83,12 @@ scenarios:
 inspect-smoke:
 	printf '[profiler]\ncalib_samples = 1500\ngbdt_trees = 40\n' > /tmp/adaoper_inspect_smoke.toml
 	cd $(CARGO_DIR) && cargo run --release -- serve --config /tmp/adaoper_inspect_smoke.toml \
-		--duration 1.0 --trace /tmp/adaoper_inspect_smoke.jsonl --telemetry
+		--duration 1.0 --trace /tmp/adaoper_inspect_smoke.jsonl --telemetry --health
 	cd $(CARGO_DIR) && cargo run --release -- inspect /tmp/adaoper_inspect_smoke.jsonl
 	cd $(CARGO_DIR) && cargo run --release -- inspect /tmp/adaoper_inspect_smoke.jsonl --stages
+	cd $(CARGO_DIR) && cargo run --release -- inspect /tmp/adaoper_inspect_smoke.jsonl --alerts
 	cd $(CARGO_DIR) && cargo run --release -- inspect /tmp/adaoper_inspect_smoke.jsonl \
 		--perfetto /tmp/adaoper_inspect_smoke_perfetto.json
 
 # Everything CI checks, in CI order.
-all: verify smoke scenarios inspect-smoke clippy bench-build doc fmt-check
+all: verify smoke scenarios inspect-smoke clippy bench-build bench-check doc fmt-check

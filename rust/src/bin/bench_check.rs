@@ -1,0 +1,96 @@
+//! Validator for the committed bench trajectory files
+//! (`BENCH_hot_loop.json`, `BENCH_dp_solve.json`) — `make bench-check`.
+//!
+//! The trajectories are append-only JSONL: a schema header line followed
+//! by one record per bench-host run. Appends happen on developer
+//! machines outside CI, so CI cannot re-measure them — but it *can*
+//! prove the files still parse and every record carries the fields the
+//! header promises. A hand-edited header, a torn append, or a bench
+//! emitter that drifted from the recorded schema all fail here instead
+//! of rotting silently until the next perf investigation.
+
+use adaoper::util::json::Json;
+use anyhow::{bail, ensure, Context, Result};
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    ensure!(!args.is_empty(), "usage: bench_check <BENCH_*.json> […]");
+    for path in &args {
+        let (bench, records) =
+            check_file(path).with_context(|| format!("validating {path}"))?;
+        println!("{path}: ok ({bench}, {records} data record(s))");
+    }
+    Ok(())
+}
+
+/// Validate one trajectory file; returns the bench name and the number
+/// of data records. Zero records is valid — a freshly seeded trajectory
+/// is just its header.
+fn check_file(path: &str) -> Result<(String, usize)> {
+    let text = std::fs::read_to_string(path)?;
+    let mut lines = text.lines().enumerate().filter(|(_, l)| !l.trim().is_empty());
+
+    let (_, header) = lines.next().context("empty file: missing schema header")?;
+    let h = Json::parse(header).context("schema header is not valid JSON")?;
+    let schema = h.need_str("schema")?;
+    ensure!(schema == "adaoper-bench-v2", "unknown schema `{schema}` (want adaoper-bench-v2)");
+    let bench = h.need_str("bench")?.to_string();
+    ensure!(!h.need_str("note")?.is_empty(), "header `note` must describe the trajectory");
+
+    // per-bench required numeric stats; provenance fields (git_rev,
+    // host, os, arch) are v2-only and stay optional so committed v1
+    // records keep validating
+    let required: &[&str] = match bench.as_str() {
+        "engine_hot_loop" => {
+            &["events_per_sec_mean", "events_per_sec_min", "events_per_sec_max"]
+        }
+        "dp_solve" => &[
+            "solves_per_sec_map",
+            "solves_per_sec_lattice",
+            "speedup_full",
+            "window_solves_per_sec_map",
+            "window_solves_per_sec_lattice",
+            "speedup_window",
+        ],
+        other => bail!("header names unknown bench `{other}`"),
+    };
+
+    let mut records = 0usize;
+    for (i, line) in lines {
+        records += 1;
+        let lineno = i + 1;
+        let rec = Json::parse(line)
+            .with_context(|| format!("data line {lineno} is not valid JSON"))?;
+        let b = rec.need_str("bench").with_context(|| format!("data line {lineno}"))?;
+        ensure!(b == bench, "data line {lineno}: bench `{b}` != header bench `{bench}`");
+        let mode = rec.need_str("mode").with_context(|| format!("data line {lineno}"))?;
+        ensure!(
+            mode == "full" || mode == "quick",
+            "data line {lineno}: unknown mode `{mode}`"
+        );
+        for key in required {
+            let v = rec
+                .get(key)
+                .and_then(Json::as_f64)
+                .with_context(|| format!("data line {lineno}: missing numeric `{key}`"))?;
+            ensure!(
+                v.is_finite() && v > 0.0,
+                "data line {lineno}: `{key}` = {v} is not finite and positive"
+            );
+        }
+        if bench == "engine_hot_loop" {
+            let f = |k: &str| rec.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+            let (min, mean, max) = (
+                f("events_per_sec_min"),
+                f("events_per_sec_mean"),
+                f("events_per_sec_max"),
+            );
+            ensure!(
+                min <= mean && mean <= max,
+                "data line {lineno}: events_per_sec min {min} / mean {mean} / max {max} \
+                 out of order"
+            );
+        }
+    }
+    Ok((bench, records))
+}

@@ -17,6 +17,7 @@ use crate::partition::plan::Objective;
 use crate::profiler::calibrate::{self, CalibConfig};
 use crate::profiler::gbdt::GbdtParams;
 use crate::soc::device::{Device, DeviceConfig};
+use crate::util::json::Json;
 use crate::workload::{Arrival, WorkloadCondition};
 
 use super::args::Args;
@@ -46,6 +47,11 @@ COMMANDS
                               event lines, and stage self-profiling
                               timers (off by default; with --trace the
                               audit + timer lines land in the trace)
+      [--health]              run the streaming health monitor (windowed
+                              SLO burn-rate, energy-budget, drift, and
+                              queue-depth rules; alerts log at warn level
+                              and land in the trace; also enabled by the
+                              [health] config section)
   fleet                       simulate a heterogeneous device fleet
       [--config F] [--devices N] [--threads T] [--seed S] [--duration S]
       [--scheduler fifo|edf|slack-reclaim] [--policy P] [--quick]
@@ -60,7 +66,10 @@ COMMANDS
                               row matches the recorded one byte for byte
   inspect <trace.jsonl>       render the telemetry recorded in a trace:
                               plan-decision audit table by default;
+                              malformed lines (truncated writes) are
+                              skipped with a warning, not fatal
       [--stages]              kernel stage self-profiling table
+      [--alerts]              health-alert table (record with --health)
       [--perfetto OUT]        export a Chrome trace-event / Perfetto
                               JSON timeline to OUT (open at
                               ui.perfetto.dev or chrome://tracing)
@@ -109,7 +118,10 @@ fn calib_of(args: &Args) -> Result<CalibConfig> {
 
 /// Entry point used by `main.rs`.
 pub fn run(argv: &[String]) -> Result<()> {
-    let args = Args::parse(argv, &["quick", "verbose", "oracle", "telemetry", "stages"])?;
+    let args = Args::parse(
+        argv,
+        &["quick", "verbose", "oracle", "telemetry", "stages", "health", "alerts"],
+    )?;
     if args.flag("verbose") {
         crate::util::logger::set_level(crate::util::logger::Level::Debug);
     }
@@ -305,6 +317,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
             ..Default::default()
         },
         telemetry: args.flag("telemetry"),
+        health: (args.flag("health") || cfg.health.enabled)
+            .then(|| cfg.health.rules.clone()),
         ..Default::default()
     };
     let mut engine = Engine::new(ecfg.clone());
@@ -427,11 +441,69 @@ fn cmd_replay(args: &Args) -> Result<()> {
     }
 }
 
-fn cmd_inspect(args: &Args) -> Result<()> {
-    use crate::util::json::Json;
+/// Everything `adaoper inspect` extracts from a trace's JSONL body, plus
+/// the count of malformed lines it skipped. Truncated or garbled lines
+/// (interrupted writes, partial flushes on crash) are warned about and
+/// counted rather than aborting the whole inspection — the tail of a
+/// trace that died mid-write is exactly when inspection matters most.
+#[derive(Debug, Default)]
+pub struct TraceScan {
+    /// `plan_decision` audit lines, in file order.
+    pub decisions: Vec<Json>,
+    /// Health `alert` transition lines, in file order.
+    pub alerts: Vec<Json>,
+    /// Kernel stage self-profiling totals, when recorded.
+    pub timers: Option<crate::sim::StageTimers>,
+    /// The recorded final report row, when present.
+    pub report_row: Option<String>,
+    /// Non-empty lines that failed to parse as JSON.
+    pub skipped: usize,
+}
 
+/// Scan a trace's text into a [`TraceScan`]. Unparseable lines are
+/// counted and logged at warn level; lines that parse but carry a
+/// structurally wrong payload for a known event still error, since that
+/// indicates a schema mismatch rather than a torn write.
+pub fn scan_trace(text: &str) -> Result<TraceScan> {
+    let mut scan = TraceScan::default();
+    for (i, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let obj = match Json::parse(line) {
+            Ok(obj) => obj,
+            Err(e) => {
+                scan.skipped += 1;
+                crate::log_warn!("inspect: skipping malformed trace line {}: {e:#}", i + 1);
+                continue;
+            }
+        };
+        match obj.get("event").and_then(Json::as_str) {
+            Some("plan_decision") => scan.decisions.push(obj),
+            Some("alert") => scan.alerts.push(obj),
+            Some("report") => scan.report_row = Some(obj.need_str("row")?.to_string()),
+            Some("stage_timers") => {
+                let stages = obj
+                    .get("stages")
+                    .ok_or_else(|| anyhow::anyhow!("stage_timers line missing `stages`"))?;
+                let mut t = crate::sim::StageTimers::new();
+                for stage in crate::sim::Stage::ALL {
+                    if let Some(s) = stages.get(stage.name()) {
+                        t.accumulate(stage, s.need_u64("calls")?, s.need_f64("secs")?);
+                    }
+                }
+                scan.timers = Some(t);
+            }
+            _ => {}
+        }
+    }
+    Ok(scan)
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
     let Some(target) = args.positional.get(1) else {
-        bail!("usage: adaoper inspect <trace.jsonl> [--stages] [--perfetto out.json]");
+        bail!("usage: adaoper inspect <trace.jsonl> [--stages] [--alerts] [--perfetto out.json]");
     };
     let text = std::fs::read_to_string(target)
         .with_context(|| format!("reading trace {target}"))?;
@@ -445,32 +517,41 @@ fn cmd_inspect(args: &Args) -> Result<()> {
         return Ok(());
     }
 
-    let mut decisions: Vec<Json> = Vec::new();
-    let mut timers: Option<crate::sim::StageTimers> = None;
-    let mut report_row: Option<String> = None;
-    for (i, line) in text.lines().enumerate() {
-        let line = line.trim();
-        if line.is_empty() {
-            continue;
+    let scan = scan_trace(&text)?;
+    if scan.skipped > 0 {
+        println!("warning: skipped {} malformed trace line(s)", scan.skipped);
+    }
+    let TraceScan { decisions, alerts, timers, report_row, .. } = scan;
+
+    if args.flag("alerts") {
+        if alerts.is_empty() {
+            println!(
+                "trace carries no health alerts — record one with \
+                 `adaoper serve --trace … --health`"
+            );
+            return Ok(());
         }
-        let obj = Json::parse(line).with_context(|| format!("trace line {}", i + 1))?;
-        match obj.get("event").and_then(Json::as_str) {
-            Some("plan_decision") => decisions.push(obj),
-            Some("report") => report_row = Some(obj.need_str("row")?.to_string()),
-            Some("stage_timers") => {
-                let stages = obj
-                    .get("stages")
-                    .ok_or_else(|| anyhow::anyhow!("stage_timers line missing `stages`"))?;
-                let mut t = crate::sim::StageTimers::new();
-                for stage in crate::sim::Stage::ALL {
-                    if let Some(s) = stages.get(stage.name()) {
-                        t.accumulate(stage, s.need_u64("calls")?, s.need_f64("secs")?);
-                    }
-                }
-                timers = Some(t);
-            }
-            _ => {}
+        println!("health alerts: {} transition(s)", alerts.len());
+        println!(
+            "{:>10} {:<14} {:<7} {:<18} {:>10} {:>10}",
+            "t ms", "rule", "target", "transition", "signal", "threshold"
+        );
+        for a in &alerts {
+            let target = a
+                .get("stream")
+                .and_then(Json::as_usize)
+                .map_or("global".to_string(), |s| format!("s{s}"));
+            println!(
+                "{:>10.3} {:<14} {:<7} {:<18} {:>10.4} {:>10.4}",
+                a.need_f64("t_s")? * 1e3,
+                a.need_str("rule")?,
+                target,
+                format!("{} -> {}", a.need_str("prev")?, a.need_str("state")?),
+                a.need_f64("signal")?,
+                a.need_f64("threshold")?,
+            );
         }
+        return Ok(());
     }
 
     if args.flag("stages") {
@@ -535,6 +616,9 @@ fn cmd_inspect(args: &Args) -> Result<()> {
     if timers.is_some() {
         println!("(stage self-profiling recorded — render it with `--stages`)");
     }
+    if !alerts.is_empty() {
+        println!("({} health alert(s) recorded — render them with `--alerts`)", alerts.len());
+    }
     if let Some(row) = report_row {
         println!("report: {row}");
     }
@@ -583,6 +667,7 @@ fn cmd_fleet(args: &Args) -> Result<()> {
             wait_s: batch_wait_ms / 1e3,
         },
         calib: calib_of(args)?,
+        health: cfg.health.enabled.then(|| cfg.health.rules.clone()),
         ..Default::default()
     };
     println!(

@@ -399,6 +399,18 @@ impl Default for FleetConfig {
     }
 }
 
+/// Health-monitor configuration (`[health]`; see
+/// [`crate::metrics::health`]). Off by default: serving output stays
+/// byte-identical until the monitor is opted into here or via
+/// `serve --health`.
+#[derive(Debug, Clone, Default)]
+pub struct HealthAppConfig {
+    /// Run the streaming health monitor during `adaoper serve`.
+    pub enabled: bool,
+    /// Rule thresholds handed to the monitor when enabled.
+    pub rules: crate::metrics::HealthConfig,
+}
+
 /// Top-level application configuration.
 #[derive(Debug, Clone, Default)]
 pub struct AppConfig {
@@ -410,6 +422,8 @@ pub struct AppConfig {
     pub partition: PartitionConfig,
     /// Fleet-simulation section (`[fleet]`).
     pub fleet: FleetConfig,
+    /// Health-monitor section (`[health]`).
+    pub health: HealthAppConfig,
     /// Directory holding `*.hlo.txt` artifacts.
     pub artifacts_dir: String,
 }
@@ -565,6 +579,48 @@ impl AppConfig {
             bail!("fleet.batch_wait_ms must be >= 0");
         }
 
+        cfg.health.enabled = v.bool_or("health.enabled", cfg.health.enabled);
+        let h = &mut cfg.health.rules;
+        h.fast_window_s = v.float_or("health.fast_window_s", h.fast_window_s);
+        h.slow_window_s = v.float_or("health.slow_window_s", h.slow_window_s);
+        h.slo_target = v.float_or("health.slo_target", h.slo_target);
+        h.burn_warn = v.float_or("health.burn_warn", h.burn_warn);
+        h.burn_critical = v.float_or("health.burn_critical", h.burn_critical);
+        h.energy_budget_mj = v.float_or("health.energy_budget_mj", h.energy_budget_mj);
+        h.drift_warn = v.float_or("health.drift_warn", h.drift_warn);
+        h.drift_critical = v.float_or("health.drift_critical", h.drift_critical);
+        let qw = v.int_or("health.queue_warn", h.queue_warn as i64);
+        let qc = v.int_or("health.queue_critical", h.queue_critical as i64);
+        if qw < 1 || qc <= qw {
+            bail!("health.queue_warn must be >= 1 and health.queue_critical > queue_warn");
+        }
+        h.queue_warn = qw as usize;
+        h.queue_critical = qc as usize;
+        h.clear_ratio = v.float_or("health.clear_ratio", h.clear_ratio);
+        let min_samples = v.int_or("health.min_samples", h.min_samples as i64);
+        if min_samples < 1 {
+            bail!("health.min_samples must be >= 1");
+        }
+        h.min_samples = min_samples as u64;
+        if !(h.fast_window_s > 0.0 && h.fast_window_s < h.slow_window_s) {
+            bail!("health.fast_window_s must be > 0 and < health.slow_window_s");
+        }
+        if !(h.slo_target > 0.0 && h.slo_target <= 1.0) {
+            bail!("health.slo_target must be in (0, 1]");
+        }
+        if !(h.burn_warn > 0.0 && h.burn_critical > h.burn_warn) {
+            bail!("health.burn_warn must be > 0 and health.burn_critical > burn_warn");
+        }
+        if h.energy_budget_mj < 0.0 {
+            bail!("health.energy_budget_mj must be >= 0 (0 disables the energy rule)");
+        }
+        if !(h.drift_warn > 0.0 && h.drift_critical > h.drift_warn) {
+            bail!("health.drift_warn must be > 0 and health.drift_critical > drift_warn");
+        }
+        if !(h.clear_ratio > 0.0 && h.clear_ratio < 1.0) {
+            bail!("health.clear_ratio must be strictly within (0, 1)");
+        }
+
         Ok(cfg)
     }
 
@@ -696,6 +752,48 @@ mod tests {
             "[fleet]\nscheduler = \"lifo\"\n",
             "[fleet]\nadmission = \"maybe\"\n",
             "[fleet]\nqueue_limit = 0\n",
+        ] {
+            let v = toml::parse(bad).unwrap();
+            assert!(AppConfig::from_value(&v).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn health_section_decodes_and_validates() {
+        // off by default, with the monitor's documented thresholds
+        let cfg = AppConfig::from_value(&toml::parse("").unwrap()).unwrap();
+        assert!(!cfg.health.enabled);
+        assert_eq!(cfg.health.rules, crate::metrics::HealthConfig::default());
+
+        let v = toml::parse(
+            "[health]\nenabled = true\nslo_target = 0.05\nburn_warn = 2.0\n\
+             burn_critical = 6.0\nenergy_budget_mj = 40.0\nmin_samples = 3\n",
+        )
+        .unwrap();
+        let cfg = AppConfig::from_value(&v).unwrap();
+        assert!(cfg.health.enabled);
+        assert_eq!(cfg.health.rules.slo_target, 0.05);
+        assert_eq!(cfg.health.rules.burn_critical, 6.0);
+        assert_eq!(cfg.health.rules.energy_budget_mj, 40.0);
+        assert_eq!(cfg.health.rules.min_samples, 3);
+        // untouched knobs keep their defaults
+        assert_eq!(
+            cfg.health.rules.drift_warn,
+            crate::metrics::HealthConfig::default().drift_warn
+        );
+
+        for bad in [
+            "[health]\nfast_window_s = 0.0\n",
+            "[health]\nfast_window_s = 9.0\n", // >= slow_window_s
+            "[health]\nslo_target = 0.0\n",
+            "[health]\nslo_target = 1.5\n",
+            "[health]\nburn_critical = 0.5\n", // <= burn_warn
+            "[health]\nenergy_budget_mj = -1.0\n",
+            "[health]\ndrift_critical = 0.01\n", // <= drift_warn
+            "[health]\nqueue_warn = 0\n",
+            "[health]\nqueue_critical = 2\n", // <= queue_warn
+            "[health]\nclear_ratio = 1.0\n",
+            "[health]\nmin_samples = 0\n",
         ] {
             let v = toml::parse(bad).unwrap();
             assert!(AppConfig::from_value(&v).is_err(), "accepted {bad:?}");

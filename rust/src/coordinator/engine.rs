@@ -25,8 +25,8 @@ use crate::batching::{BatchConfig, Batcher, BatchedCostModel};
 use crate::config::schema::{ConditionKind, PolicyKind, SchedulerKind};
 use crate::graph::{ModelGraph, OpNode};
 use crate::metrics::{
-    plan_fingerprint, AuditLog, EnergyAccount, LatencyRecorder, LogHistogram, PlanCacheStats,
-    PlanDecision, SchedStats, ServingReport,
+    plan_fingerprint, AuditLog, EnergyAccount, HealthConfig, HealthMonitor, LatencyRecorder,
+    LogHistogram, PlanCacheStats, PlanDecision, SchedStats, ServingReport,
 };
 use crate::partition::baselines::by_policy;
 use crate::partition::dp::{DpBackend, DpPartitioner};
@@ -38,7 +38,7 @@ use crate::profiler::monitor::ResourceMonitor;
 use crate::profiler::{CostModel, EnergyProfiler};
 use crate::sim::arena::RequestArena;
 use crate::sim::event::Event;
-use crate::sim::observer::{emit, emit_done, SimObserver};
+use crate::sim::observer::{emit, emit_alert, emit_done, SimObserver};
 use crate::sim::queue::EventQueue;
 use crate::sim::stages::{
     cost_model, AdmissionStage, ArrivalSource, DispatchStage, ExecStage, MonitorStage, PlanTable,
@@ -126,6 +126,12 @@ pub struct EngineConfig {
     /// bit-identical plans — this knob exists for A/B solve-time
     /// measurement; leave it at the default (lattice) otherwise.
     pub dp_backend: DpBackend,
+    /// Streaming health monitor configuration (`--health`, `[health]`).
+    /// `None` (the default) means no health state exists and every report
+    /// row, trace, and golden stays byte-identical. Like telemetry, the
+    /// monitor is strictly write-only observation: it never reads or
+    /// advances virtual time and never perturbs planning.
+    pub health: Option<HealthConfig>,
 }
 
 impl Default for EngineConfig {
@@ -152,6 +158,7 @@ impl Default for EngineConfig {
             condition_timeline: Vec::new(),
             telemetry: false,
             dp_backend: DpBackend::default(),
+            health: None,
         }
     }
 }
@@ -556,6 +563,9 @@ impl Engine {
             sched: None,
             batch: None,
             telemetry: self.audit.as_ref().map(|a| a.summary()),
+            // closed-loop runs have no monitor-tick event stream to
+            // evaluate health rules on; the open-loop path owns health
+            health: None,
         })
     }
 
@@ -725,6 +735,15 @@ impl Engine {
         // the wall-clock stage timers never read into the simulation, so
         // the virtual timeline is byte-identical with them on or off
         let mut audit = self.cfg.telemetry.then(|| AuditLog::new(streams.len()));
+        // the health monitor is the same contract: windows and rule
+        // machines only ever *receive* completions/residuals and are
+        // evaluated at ticks — alerts ride the observer channel, so the
+        // served timeline is byte-identical with health on or off
+        let mut health = self
+            .cfg
+            .health
+            .clone()
+            .map(|h| HealthMonitor::new(h, streams.len()));
         let mut timers = self.stage_timers.take();
         let mut admission = AdmissionStage::new(self.cfg.admission);
         let mut dispatch = DispatchStage::new(self.cfg.scheduler);
@@ -869,6 +888,24 @@ impl Engine {
                     });
                 }
                 dispatch.invalidate_all();
+                // evaluate health rules on the tick the monitor just took
+                if let Some(h) = health.as_mut() {
+                    let t_s = self.device.time_s();
+                    for alert in h.on_tick(t_s, exec.active().len()) {
+                        crate::log_warn!(
+                            "health alert t={:.3}s rule={} stream={} {}→{} signal={:.3} threshold={:.3}",
+                            alert.t_s,
+                            alert.rule,
+                            alert.stream.map_or("-".to_string(), |s| s.to_string()),
+                            alert.prev.name(),
+                            alert.state.name(),
+                            alert.signal,
+                            alert.threshold,
+                        );
+                        emit(observers, &Event::Alert { alert });
+                        emit_alert(observers, &alert);
+                    }
+                }
             }
             StageTimers::stop(&mut timers, Stage::Monitor, lap);
 
@@ -888,10 +925,15 @@ impl Engine {
                     dispatch.note_op_executed(ai);
                 }
                 for rec in &recs {
-                    if let Some(a) = audit.as_mut() {
+                    if audit.is_some() || health.is_some() {
                         let prof = plans.profile(rec.stream);
                         let pred = prof[rec.op] - prof[rec.op + 1];
-                        a.observe_op(rec.stream, rec.placement, pred, rec.latency_s);
+                        if let Some(a) = audit.as_mut() {
+                            a.observe_op(rec.stream, rec.placement, pred, rec.latency_s);
+                        }
+                        if let Some(h) = health.as_mut() {
+                            h.on_op(rec.stream, rec.end_s, pred, rec.latency_s);
+                        }
                     }
                     emit(observers, &Event::OpDispatch {
                         request: rec.request, stream: rec.stream, op: rec.op,
@@ -966,6 +1008,10 @@ impl Engine {
                     if let Some(outcome) = exec.complete_if_done(ai, &mut arena) {
                         dispatch.note_removed(ai);
                         let met = outcome.met_deadline();
+                        if let Some(h) = health.as_mut() {
+                            h.on_done(outcome.request.stream, outcome.finish_s, met,
+                                outcome.energy_j);
+                        }
                         emit_done(observers, &outcome, met);
                     }
                 }
@@ -983,10 +1029,15 @@ impl Engine {
             StageTimers::stop(&mut timers, Stage::Exec, lap);
             self.controller.tick();
             dispatch.note_op_executed(d.active_idx);
-            if let Some(a) = audit.as_mut() {
+            if audit.is_some() || health.is_some() {
                 let prof = plans.profile(rec.stream);
                 let pred = prof[rec.op] - prof[rec.op + 1];
-                a.observe_op(rec.stream, rec.placement, pred, rec.latency_s);
+                if let Some(a) = audit.as_mut() {
+                    a.observe_op(rec.stream, rec.placement, pred, rec.latency_s);
+                }
+                if let Some(h) = health.as_mut() {
+                    h.on_op(rec.stream, rec.end_s, pred, rec.latency_s);
+                }
             }
             emit(observers, &Event::OpDispatch {
                 request: rec.request, stream: rec.stream, op: rec.op,
@@ -1042,6 +1093,9 @@ impl Engine {
             if let Some(outcome) = exec.complete_if_done(d.active_idx, &mut arena) {
                 dispatch.note_removed(d.active_idx);
                 let met = outcome.met_deadline();
+                if let Some(h) = health.as_mut() {
+                    h.on_done(outcome.request.stream, outcome.finish_s, met, outcome.energy_j);
+                }
                 emit_done(observers, &outcome, met);
             }
             StageTimers::stop(&mut timers, Stage::Queue, lap);
@@ -1053,6 +1107,7 @@ impl Engine {
             streams, &exec, &admission, dispatch.name(), total, batch_stats,
         );
         report.telemetry = audit.as_ref().map(|a| a.summary());
+        report.health = health.as_ref().map(|h| h.summary());
         self.audit = audit;
         Ok(report)
     }
@@ -1142,6 +1197,7 @@ impl Engine {
             sched: Some(sched),
             batch,
             telemetry: None,
+            health: None,
         }
     }
 }

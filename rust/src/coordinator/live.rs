@@ -197,6 +197,7 @@ impl LiveSession {
             sched: None,
             batch: None,
             telemetry: None,
+            health: None,
         };
         Ok((report, last_output))
     }

@@ -21,7 +21,7 @@ use crate::config::schema::{PolicyKind, SchedulerKind};
 use crate::coordinator::request::RequestOutcome;
 use crate::coordinator::{AdmissionPolicy, Engine, EngineConfig, StreamSpec};
 use crate::graph::zoo as model_zoo;
-use crate::metrics::{LogHistogram, ServingReport, TelemetryRegistry};
+use crate::metrics::{HealthConfig, LogHistogram, ServingReport, TelemetryRegistry};
 use crate::profiler::calibrate::{calibrate_on, CalibConfig, OfflineModel};
 use crate::profiler::{EnergyProfiler, EwmaCorrector};
 use crate::sim::{EventCounters, SimObserver};
@@ -59,6 +59,11 @@ pub struct FleetRunConfig {
     /// (merged in device order, so it is bit-identical for any `threads`
     /// value). Off by default: `FleetReport::render` never changes.
     pub telemetry: bool,
+    /// Health-monitor config every device's engine runs (`None` keeps the
+    /// engines alert-free and the fleet table byte-identical to before).
+    /// Per-class alert counts merge in device order, so they are
+    /// bit-identical for any `threads` value.
+    pub health: Option<HealthConfig>,
 }
 
 impl Default for FleetRunConfig {
@@ -75,6 +80,7 @@ impl Default for FleetRunConfig {
             mix: FleetMix::default(),
             calib: CalibConfig::default(),
             telemetry: false,
+            health: None,
         }
     }
 }
@@ -143,6 +149,15 @@ pub struct ClassAgg {
     pub batches: usize,
     /// Requests dispatched inside those batches.
     pub batched_requests: usize,
+    /// Health alerts (state transitions) across devices — 0 when the
+    /// health monitor is off.
+    pub alerts: u64,
+    /// Alerts whose target state was `warn`.
+    pub warn_alerts: u64,
+    /// Alerts whose target state was `critical`.
+    pub critical_alerts: u64,
+    /// Profiler-drift escalations across devices.
+    pub drift_alerts: u64,
     /// Merged per-request latency histogram.
     pub latency: LogHistogram,
 }
@@ -161,6 +176,10 @@ impl ClassAgg {
             cache_lookups: 0,
             batches: 0,
             batched_requests: 0,
+            alerts: 0,
+            warn_alerts: 0,
+            critical_alerts: 0,
+            drift_alerts: 0,
             latency: LogHistogram::latency(),
         }
     }
@@ -187,8 +206,20 @@ impl ClassAgg {
             self.batches += b.batched_dispatches;
             self.batched_requests += b.batched_requests;
         }
+        self.absorb_health(r);
         if let Some(h) = &r.latency_hist {
             self.latency.merge(h);
+        }
+    }
+
+    /// Fold the report's health summary (no-op when the monitor was off);
+    /// u64 sums, so the merge is exact and order-independent.
+    fn absorb_health(&mut self, r: &ServingReport) {
+        if let Some(h) = &r.health {
+            self.alerts += h.alerts;
+            self.warn_alerts += h.warn;
+            self.critical_alerts += h.critical;
+            self.drift_alerts += h.drift_alerts;
         }
     }
 
@@ -209,8 +240,13 @@ impl ClassAgg {
         }
         self.batches += probe.counters.batch_closes;
         self.batched_requests += probe.counters.batched_requests;
+        self.absorb_health(r);
         self.latency.merge(&probe.latency);
         debug_assert_eq!(probe.counters.completed, r.requests);
+        debug_assert_eq!(
+            probe.counters.alerts as u64,
+            r.health.map_or(0, |h| h.alerts)
+        );
     }
 
     /// Deadline-miss rate over completed requests (0 when none completed).
@@ -345,6 +381,23 @@ impl FleetReport {
             }
         }
         row("fleet", &self.fleet);
+        // health rollup only when the run actually alerted, so
+        // monitor-off (and alert-free) fleet output stays byte-identical
+        if self.fleet.alerts > 0 {
+            s.push_str("health alerts:\n");
+            let mut alert_row = |name: &str, a: &ClassAgg| {
+                s.push_str(&format!(
+                    "  {:<10} {:>6} alerts ({} warn / {} critical, {} drift)\n",
+                    name, a.alerts, a.warn_alerts, a.critical_alerts, a.drift_alerts
+                ));
+            };
+            for (class, agg) in &self.per_class {
+                if agg.devices > 0 {
+                    alert_row(class.name(), agg);
+                }
+            }
+            alert_row("fleet", &self.fleet);
+        }
         s
     }
 }
@@ -447,12 +500,15 @@ fn run_sharded(
     let (duration_s, policy, scheduler, admission) =
         (cfg.duration_s, cfg.policy, cfg.scheduler, cfg.admission);
     let batching = cfg.batching.clone();
+    let health = cfg.health.clone();
     let results: Vec<Result<(ServingReport, DeviceProbe)>> =
         pool.map(specs.clone(), move |spec| {
             let off = shared[spec.class.index()]
                 .as_ref()
                 .expect("offline model present for sampled class");
-            run_device(&spec, off, duration_s, policy, scheduler, admission, &batching)
+            run_device(
+                &spec, off, duration_s, policy, scheduler, admission, &batching, &health,
+            )
         });
 
     // merge in device order (ThreadPool::map preserves it), so float sums
@@ -499,6 +555,7 @@ fn run_device(
     scheduler: SchedulerKind,
     admission: AdmissionPolicy,
     batching: &BatchConfig,
+    health: &Option<HealthConfig>,
 ) -> Result<(ServingReport, DeviceProbe)> {
     let model = model_zoo::by_name(&spec.model)
         .ok_or_else(|| anyhow!("unknown fleet model `{}`", spec.model))?;
@@ -510,6 +567,7 @@ fn run_device(
             scheduler,
             admission,
             batching: batching.clone(),
+            health: health.clone(),
             condition: spec.condition,
             condition_spec: Some(spec.class.condition(spec.condition)),
             duration_s,
@@ -572,6 +630,7 @@ mod tests {
             }),
             batch: None,
             telemetry: None,
+            health: None,
         }
     }
 
@@ -690,6 +749,49 @@ mod tests {
         assert!((report.fleet.mean_batch_size() - 2.5).abs() < 1e-12);
         assert!(report.render().contains("avgB"));
         assert_eq!(ClassAgg::empty().mean_batch_size(), 0.0);
+    }
+
+    #[test]
+    fn health_rollup_sums_summaries_and_gates_render() {
+        use crate::metrics::HealthSummary;
+        let mut with_alerts = fake_report(5, 1.0, 0.1);
+        with_alerts.health = Some(HealthSummary {
+            ticks: 20,
+            alerts: 3,
+            warn: 2,
+            critical: 1,
+            drift_alerts: 1,
+        });
+        let mut agg = ClassAgg::empty();
+        agg.absorb(&fake_report(5, 1.0, 0.1)); // monitor off: no-op
+        agg.absorb(&with_alerts);
+        agg.absorb(&with_alerts);
+        assert_eq!(agg.alerts, 6);
+        assert_eq!(agg.warn_alerts, 4);
+        assert_eq!(agg.critical_alerts, 2);
+        assert_eq!(agg.drift_alerts, 2);
+
+        let per_class: Vec<(DeviceClass, ClassAgg)> = DeviceClass::all()
+            .iter()
+            .map(|&c| (c, ClassAgg::empty()))
+            .collect();
+        let mut report = FleetReport {
+            devices: 3,
+            seed: 42,
+            duration_s: 1.0,
+            policy: "adaoper".into(),
+            scheduler: "edf".into(),
+            per_class,
+            fleet: ClassAgg::empty(),
+            telemetry: None,
+        };
+        report.fleet.absorb(&fake_report(5, 1.0, 0.1));
+        // alert-free run: table unchanged
+        assert!(!report.render().contains("health alerts"));
+        report.fleet = agg;
+        let out = report.render();
+        assert!(out.contains("health alerts:"), "{out}");
+        assert!(out.contains("6 alerts (4 warn / 2 critical, 2 drift)"), "{out}");
     }
 
     #[test]

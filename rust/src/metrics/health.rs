@@ -1,0 +1,627 @@
+//! Streaming health rules: windowed SLO burn-rate, energy budget,
+//! profiler drift, and queue saturation — evaluated at monitor ticks,
+//! entirely opt-in, and strictly write-only observation.
+//!
+//! AdaOper's adaptation story presumes something can *notice*, while
+//! serving, that a stream is burning its SLO budget or that the
+//! profiler's predictions have gone stale. The PR 8 telemetry spine is
+//! retrospective; this module closes the sensing loop:
+//!
+//! * [`HealthMonitor`] is fed request completions
+//!   ([`on_done`](HealthMonitor::on_done)) and per-op prediction
+//!   residuals ([`on_op`](HealthMonitor::on_op)) as the kernel delivers
+//!   them, accumulating into the deterministic sliding windows of
+//!   [`crate::metrics::window`];
+//! * at each `MonitorTick` the engine calls
+//!   [`on_tick`](HealthMonitor::on_tick), which evaluates every rule
+//!   and returns the state *transitions* as [`Alert`]s (streams in
+//!   ascending order, rules in a fixed order — fully deterministic);
+//! * each rule is a hysteresis state machine
+//!   ([`Ok`](HealthState::Ok) → [`Warn`](HealthState::Warn) →
+//!   [`Critical`](HealthState::Critical)) with distinct trip and clear
+//!   thresholds (clear = trip × [`clear_ratio`](HealthConfig::clear_ratio)),
+//!   so a signal hovering at a boundary cannot flap alerts.
+//!
+//! Rules (signals are dimensionless, thresholds compare directly):
+//!
+//! | rule | signal | default trips |
+//! |------|--------|---------------|
+//! | `slo_burn` | `min(fast, slow)` burn rate, where burn = windowed miss-rate / `slo_target` (SRE multi-window: both must burn) | warn 1, critical 4 |
+//! | `energy_budget` | windowed mJ/request ÷ `energy_budget_mj` (rule off when budget = 0) | warn 1, critical 1.5 |
+//! | `drift` | windowed mean relative residual \|actual − pred\| / pred | warn 0.15, critical 0.35 |
+//! | `queue_depth` | in-flight requests at the tick (global) | warn 8, critical 32 |
+//!
+//! The monitor never reads or advances virtual time and never touches
+//! the planner: with `[health]` absent nothing here runs, and with it
+//! present the served timeline is byte-identical — alerts ride the
+//! observer channel only.
+
+use crate::metrics::window::{WindowCounter, WindowStat};
+
+/// Number of ring buckets per window (fixed: windows stay mergeable
+/// across shards because every monitor uses the same shape).
+const BUCKETS: usize = 16;
+
+/// Knobs for the streaming health monitor. All windows are in virtual
+/// seconds; presence of the config (CLI `--health`, `[health]` in a
+/// config file or scenario spec) is what enables the layer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HealthConfig {
+    /// Fast burn-rate window (seconds).
+    pub fast_window_s: f64,
+    /// Slow burn-rate window (seconds); also the drift window.
+    pub slow_window_s: f64,
+    /// SLO error budget: the tolerated deadline-miss fraction. Burn
+    /// rate = windowed miss-rate / this.
+    pub slo_target: f64,
+    /// `slo_burn` Warn trip threshold (burn-rate units).
+    pub burn_warn: f64,
+    /// `slo_burn` Critical trip threshold.
+    pub burn_critical: f64,
+    /// Energy budget per request in millijoules; `0` disables the
+    /// `energy_budget` rule.
+    pub energy_budget_mj: f64,
+    /// `drift` Warn trip (mean relative residual).
+    pub drift_warn: f64,
+    /// `drift` Critical trip.
+    pub drift_critical: f64,
+    /// `queue_depth` Warn trip (in-flight requests).
+    pub queue_warn: usize,
+    /// `queue_depth` Critical trip.
+    pub queue_critical: usize,
+    /// Hysteresis: a tripped state clears only once its signal falls
+    /// below `trip × clear_ratio`.
+    pub clear_ratio: f64,
+    /// Minimum in-window samples before a windowed rule is evaluated
+    /// (cold windows stay `Ok`).
+    pub min_samples: u64,
+}
+
+impl Default for HealthConfig {
+    fn default() -> HealthConfig {
+        HealthConfig {
+            fast_window_s: 1.0,
+            slow_window_s: 5.0,
+            slo_target: 0.01,
+            burn_warn: 1.0,
+            burn_critical: 4.0,
+            energy_budget_mj: 0.0,
+            drift_warn: 0.15,
+            drift_critical: 0.35,
+            queue_warn: 8,
+            queue_critical: 32,
+            clear_ratio: 0.8,
+            min_samples: 5,
+        }
+    }
+}
+
+/// A rule's severity level.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Default)]
+pub enum HealthState {
+    /// Signal below every trip threshold (or window still cold).
+    #[default]
+    Ok,
+    /// Warn tripped, Critical not.
+    Warn,
+    /// Critical tripped.
+    Critical,
+}
+
+impl HealthState {
+    /// Stable lowercase name used in trace lines and reports.
+    pub fn name(&self) -> &'static str {
+        match self {
+            HealthState::Ok => "ok",
+            HealthState::Warn => "warn",
+            HealthState::Critical => "critical",
+        }
+    }
+}
+
+/// One health-rule state transition, emitted as an `Event::Alert`
+/// through the observer channel and as an `{"event":"alert",...}` trace
+/// line.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Alert {
+    /// Virtual time of the monitor tick that evaluated the rule.
+    pub t_s: f64,
+    /// Rule name: `slo_burn` | `energy_budget` | `drift` | `queue_depth`.
+    pub rule: &'static str,
+    /// Stream the rule watches; `None` for global rules (`queue_depth`).
+    pub stream: Option<usize>,
+    /// State before the transition.
+    pub prev: HealthState,
+    /// State after the transition.
+    pub state: HealthState,
+    /// The signal value that drove the transition.
+    pub signal: f64,
+    /// The threshold crossed: the trip for escalations, the clear
+    /// boundary for de-escalations to `Ok`.
+    pub threshold: f64,
+}
+
+/// Hysteresis state machine shared by every rule.
+///
+/// Escalation uses the trip thresholds directly; de-escalation requires
+/// the signal to fall below `trip × clear_ratio` of the level being
+/// left, so a signal oscillating around a trip cannot flap.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RuleFsm {
+    state: HealthState,
+}
+
+impl RuleFsm {
+    /// Current state.
+    pub fn state(&self) -> HealthState {
+        self.state
+    }
+
+    /// Advance on one observation of `signal` against the `(warn, crit)`
+    /// trips with hysteresis `clear_ratio`; returns the transition
+    /// `(prev, new, threshold)` when the state changed.
+    pub fn step(
+        &mut self,
+        signal: f64,
+        warn: f64,
+        crit: f64,
+        clear_ratio: f64,
+    ) -> Option<(HealthState, HealthState, f64)> {
+        use HealthState::{Critical, Ok, Warn};
+        let prev = self.state;
+        let next = match prev {
+            Ok => {
+                if signal >= crit {
+                    Critical
+                } else if signal >= warn {
+                    Warn
+                } else {
+                    Ok
+                }
+            }
+            Warn => {
+                if signal >= crit {
+                    Critical
+                } else if signal < warn * clear_ratio {
+                    Ok
+                } else {
+                    Warn
+                }
+            }
+            Critical => {
+                if signal >= crit * clear_ratio {
+                    Critical
+                } else if signal >= warn {
+                    Warn
+                } else if signal < warn * clear_ratio {
+                    Ok
+                } else {
+                    Warn
+                }
+            }
+        };
+        if next == prev {
+            return None;
+        }
+        self.state = next;
+        let threshold = match next {
+            Critical => crit,
+            Warn => {
+                if next > prev {
+                    warn
+                } else {
+                    crit * clear_ratio
+                }
+            }
+            Ok => warn * clear_ratio,
+        };
+        Some((prev, next, threshold))
+    }
+}
+
+/// Windowed accumulators + rule machines for one stream.
+#[derive(Debug, Clone)]
+struct StreamHealth {
+    done_fast: WindowCounter,
+    miss_fast: WindowCounter,
+    done_slow: WindowCounter,
+    miss_slow: WindowCounter,
+    /// mJ per completed request over the fast window.
+    energy_mj: WindowStat,
+    /// Relative per-op residual |actual − pred| / pred over the slow
+    /// window.
+    residual: WindowStat,
+    burn: RuleFsm,
+    energy: RuleFsm,
+    drift: RuleFsm,
+}
+
+impl StreamHealth {
+    fn new(cfg: &HealthConfig) -> StreamHealth {
+        StreamHealth {
+            done_fast: WindowCounter::new(cfg.fast_window_s, BUCKETS),
+            miss_fast: WindowCounter::new(cfg.fast_window_s, BUCKETS),
+            done_slow: WindowCounter::new(cfg.slow_window_s, BUCKETS),
+            miss_slow: WindowCounter::new(cfg.slow_window_s, BUCKETS),
+            energy_mj: WindowStat::new(cfg.fast_window_s, BUCKETS),
+            residual: WindowStat::new(cfg.slow_window_s, BUCKETS),
+            burn: RuleFsm::default(),
+            energy: RuleFsm::default(),
+            drift: RuleFsm::default(),
+        }
+    }
+}
+
+/// Counts of health activity over a run, appended to
+/// [`ServingReport`](crate::metrics::ServingReport) strictly after the
+/// telemetry section. All-`u64` so fleet rollups merge exactly.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct HealthSummary {
+    /// Monitor ticks the rules were evaluated on.
+    pub ticks: u64,
+    /// Total state transitions (alerts) emitted.
+    pub alerts: u64,
+    /// Transitions *into* `Warn`.
+    pub warn: u64,
+    /// Transitions *into* `Critical`.
+    pub critical: u64,
+    /// `drift`-rule transitions into `Warn` or `Critical`.
+    pub drift_alerts: u64,
+}
+
+impl HealthSummary {
+    /// Fold `other` into `self` (plain u64 sums — exact, associative).
+    pub fn absorb(&mut self, other: &HealthSummary) {
+        self.ticks += other.ticks;
+        self.alerts += other.alerts;
+        self.warn += other.warn;
+        self.critical += other.critical;
+        self.drift_alerts += other.drift_alerts;
+    }
+}
+
+/// The streaming health monitor: one per engine run when `[health]` is
+/// configured. Fed from observer-adjacent call sites in the engine's
+/// event loop; evaluated on monitor ticks.
+#[derive(Debug, Clone)]
+pub struct HealthMonitor {
+    cfg: HealthConfig,
+    streams: Vec<StreamHealth>,
+    queue: RuleFsm,
+    summary: HealthSummary,
+}
+
+impl HealthMonitor {
+    /// Monitor for `streams` concurrent streams under `cfg`.
+    pub fn new(cfg: HealthConfig, streams: usize) -> HealthMonitor {
+        let streams = (0..streams).map(|_| StreamHealth::new(&cfg)).collect();
+        HealthMonitor {
+            cfg,
+            streams,
+            queue: RuleFsm::default(),
+            summary: HealthSummary::default(),
+        }
+    }
+
+    /// The active configuration.
+    pub fn config(&self) -> &HealthConfig {
+        &self.cfg
+    }
+
+    /// Observe one completed request on `stream` at virtual time `t_s`.
+    pub fn on_done(&mut self, stream: usize, t_s: f64, met_deadline: bool, energy_j: f64) {
+        let Some(s) = self.streams.get_mut(stream) else {
+            return;
+        };
+        s.done_fast.record(t_s, 1);
+        s.done_slow.record(t_s, 1);
+        if !met_deadline {
+            s.miss_fast.record(t_s, 1);
+            s.miss_slow.record(t_s, 1);
+        }
+        s.energy_mj.record(t_s, energy_j * 1e3);
+    }
+
+    /// Observe one executed operator's prediction residual on `stream`:
+    /// `pred_s` from the profiler's latency profile, `actual_s` as
+    /// measured. Non-positive predictions are skipped (no meaningful
+    /// relative residual).
+    pub fn on_op(&mut self, stream: usize, t_s: f64, pred_s: f64, actual_s: f64) {
+        let Some(s) = self.streams.get_mut(stream) else {
+            return;
+        };
+        if pred_s > 0.0 && actual_s.is_finite() {
+            s.residual.record(t_s, (actual_s - pred_s).abs() / pred_s);
+        }
+    }
+
+    /// Evaluate every rule at a monitor tick: `t_s` is the tick's
+    /// virtual time, `queue_depth` the number of in-flight requests.
+    /// Returns the state transitions in deterministic order (streams
+    /// ascending; per stream `slo_burn`, `energy_budget`, `drift`; the
+    /// global `queue_depth` rule last).
+    pub fn on_tick(&mut self, t_s: f64, queue_depth: usize) -> Vec<Alert> {
+        let mut alerts = Vec::new();
+        self.summary.ticks += 1;
+        let cfg = self.cfg.clone();
+        for (i, s) in self.streams.iter_mut().enumerate() {
+            // slo_burn: SRE multi-window — both the fast and the slow
+            // window must be burning, so the signal is the min.
+            let done_f = s.done_fast.total(t_s);
+            if done_f >= cfg.min_samples {
+                let burn_f = miss_rate(s.miss_fast.total(t_s), done_f) / cfg.slo_target;
+                let done_s = s.done_slow.total(t_s);
+                let burn_s = miss_rate(s.miss_slow.total(t_s), done_s) / cfg.slo_target;
+                let signal = burn_f.min(burn_s);
+                if let Some((prev, state, threshold)) =
+                    s.burn
+                        .step(signal, cfg.burn_warn, cfg.burn_critical, cfg.clear_ratio)
+                {
+                    alerts.push(Alert {
+                        t_s,
+                        rule: "slo_burn",
+                        stream: Some(i),
+                        prev,
+                        state,
+                        signal,
+                        threshold,
+                    });
+                }
+            }
+
+            // energy_budget: windowed mJ/request vs the target.
+            if cfg.energy_budget_mj > 0.0 && s.energy_mj.count(t_s) >= cfg.min_samples {
+                if let Some(mean_mj) = s.energy_mj.mean(t_s) {
+                    let signal = mean_mj / cfg.energy_budget_mj;
+                    if let Some((prev, state, threshold)) =
+                        s.energy.step(signal, 1.0, 1.5, cfg.clear_ratio)
+                    {
+                        alerts.push(Alert {
+                            t_s,
+                            rule: "energy_budget",
+                            stream: Some(i),
+                            prev,
+                            state,
+                            signal,
+                            threshold,
+                        });
+                    }
+                }
+            }
+
+            // drift: windowed mean relative residual of the profiler's
+            // per-op latency predictions.
+            if s.residual.count(t_s) >= cfg.min_samples {
+                if let Some(signal) = s.residual.mean(t_s) {
+                    if let Some((prev, state, threshold)) =
+                        s.drift
+                            .step(signal, cfg.drift_warn, cfg.drift_critical, cfg.clear_ratio)
+                    {
+                        alerts.push(Alert {
+                            t_s,
+                            rule: "drift",
+                            stream: Some(i),
+                            prev,
+                            state,
+                            signal,
+                            threshold,
+                        });
+                    }
+                }
+            }
+        }
+
+        // queue_depth: global, instantaneous.
+        let signal = queue_depth as f64;
+        if let Some((prev, state, threshold)) = self.queue.step(
+            signal,
+            self.cfg.queue_warn as f64,
+            self.cfg.queue_critical as f64,
+            self.cfg.clear_ratio,
+        ) {
+            alerts.push(Alert {
+                t_s,
+                rule: "queue_depth",
+                stream: None,
+                prev,
+                state,
+                signal,
+                threshold,
+            });
+        }
+
+        for a in &alerts {
+            self.summary.alerts += 1;
+            match a.state {
+                HealthState::Warn => self.summary.warn += 1,
+                HealthState::Critical => self.summary.critical += 1,
+                HealthState::Ok => {}
+            }
+            if a.rule == "drift" && a.state > a.prev {
+                self.summary.drift_alerts += 1;
+            }
+        }
+        alerts
+    }
+
+    /// The run's health rollup.
+    pub fn summary(&self) -> HealthSummary {
+        self.summary
+    }
+}
+
+fn miss_rate(miss: u64, done: u64) -> f64 {
+    if done == 0 {
+        0.0
+    } else {
+        miss as f64 / done as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fsm_trips_and_clears_with_hysteresis() {
+        let mut f = RuleFsm::default();
+        // below warn: stays Ok, no transition
+        assert!(f.step(0.5, 1.0, 4.0, 0.8).is_none());
+        // trips Warn at the warn threshold
+        let (prev, next, thr) = f.step(1.2, 1.0, 4.0, 0.8).expect("warn trip");
+        assert_eq!((prev, next), (HealthState::Ok, HealthState::Warn));
+        assert_eq!(thr, 1.0);
+        // hovering between clear (0.8) and trip (1.0): no flap
+        assert!(f.step(0.9, 1.0, 4.0, 0.8).is_none());
+        assert!(f.step(0.95, 1.0, 4.0, 0.8).is_none());
+        // escalates straight to Critical
+        let (prev, next, thr) = f.step(5.0, 1.0, 4.0, 0.8).expect("critical trip");
+        assert_eq!((prev, next), (HealthState::Warn, HealthState::Critical));
+        assert_eq!(thr, 4.0);
+        // stays Critical down to the clear boundary (4.0 * 0.8 = 3.2)
+        assert!(f.step(3.5, 1.0, 4.0, 0.8).is_none());
+        // drops to Warn below the critical clear but above warn trip
+        let (prev, next, _) = f.step(2.0, 1.0, 4.0, 0.8).expect("de-escalate");
+        assert_eq!((prev, next), (HealthState::Critical, HealthState::Warn));
+        // clears to Ok below warn * clear_ratio
+        let (prev, next, thr) = f.step(0.1, 1.0, 4.0, 0.8).expect("clear");
+        assert_eq!((prev, next), (HealthState::Warn, HealthState::Ok));
+        assert!((thr - 0.8).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fsm_ok_jumps_straight_to_critical() {
+        let mut f = RuleFsm::default();
+        let (prev, next, _) = f.step(10.0, 1.0, 4.0, 0.8).expect("trip");
+        assert_eq!((prev, next), (HealthState::Ok, HealthState::Critical));
+        // and can fall straight back to Ok when the signal collapses
+        let (prev, next, _) = f.step(0.0, 1.0, 4.0, 0.8).expect("clear");
+        assert_eq!((prev, next), (HealthState::Critical, HealthState::Ok));
+    }
+
+    fn cfg() -> HealthConfig {
+        HealthConfig {
+            fast_window_s: 1.0,
+            slow_window_s: 2.0,
+            min_samples: 3,
+            ..HealthConfig::default()
+        }
+    }
+
+    #[test]
+    fn cold_windows_stay_silent() {
+        let mut m = HealthMonitor::new(cfg(), 1);
+        // fewer than min_samples completions: no burn evaluation even
+        // though everything missed
+        m.on_done(0, 0.1, false, 0.001);
+        m.on_done(0, 0.2, false, 0.001);
+        assert!(m.on_tick(0.3, 0).is_empty());
+        assert_eq!(m.summary().alerts, 0);
+        assert_eq!(m.summary().ticks, 1);
+    }
+
+    #[test]
+    fn burn_rule_trips_critical_on_sustained_misses() {
+        let mut m = HealthMonitor::new(cfg(), 1);
+        for k in 0..10 {
+            m.on_done(0, 0.05 * k as f64, false, 0.001);
+        }
+        let alerts = m.on_tick(0.5, 0);
+        assert_eq!(alerts.len(), 1, "{alerts:?}");
+        let a = alerts[0];
+        assert_eq!(a.rule, "slo_burn");
+        assert_eq!(a.stream, Some(0));
+        assert_eq!(a.state, HealthState::Critical);
+        // 100% miss-rate over a 1% budget = burn 100
+        assert!((a.signal - 100.0).abs() < 1e-9, "signal {}", a.signal);
+        // clears once the window drains (all completions roll out)
+        let cleared = m.on_tick(5.0, 0);
+        assert!(cleared.is_empty(), "cold window must not evaluate: {cleared:?}");
+        assert_eq!(m.summary().critical, 1);
+    }
+
+    #[test]
+    fn drift_rule_counts_into_summary() {
+        let mut m = HealthMonitor::new(cfg(), 1);
+        for k in 0..5 {
+            // predictions off by 50%
+            m.on_op(0, 0.1 * k as f64, 0.010, 0.015);
+        }
+        let alerts = m.on_tick(0.5, 0);
+        assert_eq!(alerts.len(), 1);
+        assert_eq!(alerts[0].rule, "drift");
+        assert_eq!(alerts[0].state, HealthState::Critical);
+        assert_eq!(m.summary().drift_alerts, 1);
+        assert_eq!(m.summary().alerts, 1);
+    }
+
+    #[test]
+    fn energy_rule_is_off_without_budget() {
+        let mut m = HealthMonitor::new(cfg(), 1);
+        for k in 0..10 {
+            m.on_done(0, 0.05 * k as f64, true, 10.0); // absurd 10 J/req
+        }
+        assert!(m.on_tick(0.5, 0).is_empty(), "budget 0 disables the rule");
+
+        let mut on = HealthMonitor::new(
+            HealthConfig { energy_budget_mj: 5.0, ..cfg() },
+            1,
+        );
+        for k in 0..10 {
+            on.on_done(0, 0.05 * k as f64, true, 0.010); // 10 mJ vs 5 mJ budget
+        }
+        let alerts = on.on_tick(0.5, 0);
+        assert_eq!(alerts.len(), 1, "{alerts:?}");
+        assert_eq!(alerts[0].rule, "energy_budget");
+        assert_eq!(alerts[0].state, HealthState::Critical);
+        assert!((alerts[0].signal - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn queue_rule_is_global_and_last() {
+        let mut m = HealthMonitor::new(cfg(), 2);
+        for k in 0..10 {
+            m.on_done(0, 0.05 * k as f64, false, 0.001);
+        }
+        let alerts = m.on_tick(0.5, 100);
+        assert_eq!(alerts.len(), 2);
+        assert_eq!(alerts[0].rule, "slo_burn");
+        let q = alerts[1];
+        assert_eq!(q.rule, "queue_depth");
+        assert_eq!(q.stream, None);
+        assert_eq!(q.state, HealthState::Critical);
+        assert_eq!(q.signal, 100.0);
+        // queue drains: de-escalates deterministically
+        let cleared = m.on_tick(6.0, 0);
+        let q = cleared.iter().find(|a| a.rule == "queue_depth").expect("clear");
+        assert_eq!(q.state, HealthState::Ok);
+    }
+
+    #[test]
+    fn alerts_count_transitions_not_ticks() {
+        let mut m = HealthMonitor::new(cfg(), 1);
+        for k in 0..20 {
+            m.on_done(0, 0.02 * k as f64, false, 0.001);
+        }
+        assert_eq!(m.on_tick(0.4, 0).len(), 1);
+        // still critical on the next tick: no new alert
+        for k in 0..20 {
+            m.on_done(0, 0.4 + 0.02 * k as f64, false, 0.001);
+        }
+        assert!(m.on_tick(0.8, 0).is_empty());
+        assert_eq!(m.summary().alerts, 1);
+        assert_eq!(m.summary().ticks, 2);
+    }
+
+    #[test]
+    fn summary_absorb_is_plain_sums() {
+        let a = HealthSummary { ticks: 2, alerts: 3, warn: 1, critical: 2, drift_alerts: 1 };
+        let b = HealthSummary { ticks: 5, alerts: 1, warn: 1, critical: 0, drift_alerts: 0 };
+        let mut m = a;
+        m.absorb(&b);
+        assert_eq!(
+            m,
+            HealthSummary { ticks: 7, alerts: 4, warn: 2, critical: 2, drift_alerts: 1 }
+        );
+    }
+}

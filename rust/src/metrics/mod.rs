@@ -1,22 +1,27 @@
 //! Serving metrics: latency distributions, energy accounting, mergeable
 //! histograms for fleet-scale aggregation, per-request JSONL traces,
-//! the plan-decision audit log, the telemetry registry, the Perfetto
+//! the plan-decision audit log, the telemetry registry, the streaming
+//! health monitor with its sliding-window primitives, the Perfetto
 //! trace-event exporter, and the aggregate report the benches and CLI
 //! print.
 
 pub mod audit;
 pub mod energy;
+pub mod health;
 pub mod histogram;
 pub mod latency;
 pub mod perfetto;
 pub mod registry;
 pub mod report;
 pub mod trace;
+pub mod window;
 
 pub use audit::{plan_fingerprint, AuditLog, AuditSummary, PlanDecision};
 pub use energy::EnergyAccount;
+pub use health::{Alert, HealthConfig, HealthMonitor, HealthState, HealthSummary};
 pub use histogram::LogHistogram;
 pub use latency::LatencyRecorder;
 pub use registry::TelemetryRegistry;
 pub use report::{BatchStats, PlanCacheStats, SchedStats, ServingReport};
 pub use trace::{TraceMeta, TraceObserver};
+pub use window::{WindowCounter, WindowHistogram, WindowStat};

@@ -10,8 +10,11 @@
 //!   complete (`"ph":"X"`) spans for every executed operator — a `split`
 //!   op draws a span on both tracks;
 //! * instant (`"ph":"i"`) markers for **batch closes** (tid 10),
-//!   **monitor ticks** (tid 11), and **plan switches** (tid 12, from
-//!   `replan` / `plan_decision` lines);
+//!   **monitor ticks** (tid 11), **plan switches** (tid 12, from
+//!   `replan` / `plan_decision` lines), and **health alerts** (tid 13,
+//!   from `alert` lines — the track metadata is only emitted when the
+//!   trace actually carries alerts, keeping alert-free exports
+//!   byte-identical);
 //! * metadata (`"ph":"M"`) naming the process and every track.
 //!
 //! Timestamps are virtual seconds scaled to microseconds (the trace-event
@@ -31,6 +34,7 @@ const TID_GPU: u64 = 2;
 const TID_BATCH: u64 = 10;
 const TID_MONITOR: u64 = 11;
 const TID_PLAN: u64 = 12;
+const TID_HEALTH: u64 = 13;
 
 /// Span-nesting tolerance, microseconds (floating-point scale slop).
 const NEST_EPS_US: f64 = 1e-6;
@@ -80,6 +84,9 @@ pub fn export_str(jsonl: &str) -> Result<String> {
         meta_event(Some(TID_PLAN), "thread_name", "plans"),
     ];
     let mut requests = 0usize;
+    // the health track's metadata is pushed lazily on the first alert
+    // line, so alert-free traces export byte-identically to before
+    let mut health_track = false;
     for (i, line) in jsonl.lines().enumerate() {
         let line = line.trim();
         if line.is_empty() {
@@ -132,6 +139,28 @@ pub fn export_str(jsonl: &str) -> Result<String> {
                     obj.need_str("old_fp")?,
                     obj.need_str("new_fp")?,
                     obj.need_bool("cache_hit")?,
+                ));
+            }
+            Some("alert") => {
+                if !health_track {
+                    health_track = true;
+                    events.push(meta_event(Some(TID_HEALTH), "thread_name", "health"));
+                }
+                let stream = obj
+                    .get("stream")
+                    .and_then(Json::as_usize)
+                    .map_or("global".to_string(), |s| format!("s{s}"));
+                events.push(format!(
+                    "{{\"ph\":\"i\",\"pid\":{PID},\"tid\":{TID_HEALTH},\"s\":\"t\",\
+                     \"cat\":\"health\",\"name\":\"{} {} {}\",\"ts\":{},\
+                     \"args\":{{\"prev\":\"{}\",\"signal\":{},\"threshold\":{}}}}}",
+                    obj.need_str("rule")?,
+                    stream,
+                    obj.need_str("state")?,
+                    us(obj.need_f64("t_s")?),
+                    obj.need_str("prev")?,
+                    obj.need_f64("signal")?,
+                    obj.need_f64("threshold")?,
                 ));
             }
             Some(other) => bail!("trace line {}: unknown event `{other}`", i + 1),
@@ -265,6 +294,25 @@ mod tests {
         let out = export_str(&sample_trace()).unwrap();
         let n = validate(&out).unwrap();
         assert!(n >= 9, "{n}");
+    }
+
+    #[test]
+    fn alert_lines_draw_health_instants_on_lazy_track() {
+        let trace = format!(
+            "{}\n{}\n{}",
+            sample_trace(),
+            r#"{"event":"alert","t_s":0.6,"rule":"slo_burn","stream":0,"prev":"ok","state":"warn","signal":2.5,"threshold":1}"#,
+            r#"{"event":"alert","t_s":0.7,"rule":"queue_depth","stream":null,"prev":"warn","state":"ok","signal":3,"threshold":6.4}"#,
+        );
+        let out = export_str(&trace).unwrap();
+        assert_eq!(out.matches("\"name\":\"health\"").count(), 1, "{out}");
+        assert!(out.contains("slo_burn s0 warn"), "{out}");
+        assert!(out.contains("queue_depth global ok"), "{out}");
+        assert!(out.contains("\"tid\":13,\"s\":\"t\",\"cat\":\"health\""), "{out}");
+        validate(&out).unwrap();
+        // alert-free traces carry no health track at all
+        let plain = export_str(&sample_trace()).unwrap();
+        assert!(!plain.contains("health"), "{plain}");
     }
 
     #[test]

@@ -119,6 +119,7 @@ impl TelemetryRegistry {
             ("sim.deadline_misses", c.deadline_misses),
             ("sim.batch_closes", c.batch_closes),
             ("sim.batched_requests", c.batched_requests),
+            ("sim.alerts", c.alerts),
         ] {
             self.inc(name, v as u64);
         }

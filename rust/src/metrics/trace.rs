@@ -42,6 +42,7 @@ use anyhow::{Context, Result};
 
 use crate::coordinator::engine::EngineConfig;
 use crate::coordinator::request::{RequestOutcome, StreamSpec};
+use crate::metrics::health::HealthConfig;
 use crate::partition::plan::Objective;
 use crate::sim::event::Event;
 use crate::sim::observer::SimObserver;
@@ -160,6 +161,29 @@ fn arrival_json(a: &Arrival) -> String {
     }
 }
 
+/// Render a [`HealthConfig`] as the JSON object the trace header carries
+/// (and `adaoper replay` reconstructs) when the health monitor is on.
+fn health_json(h: &HealthConfig) -> String {
+    format!(
+        "{{\"fast_window_s\":{},\"slow_window_s\":{},\"slo_target\":{},\
+         \"burn_warn\":{},\"burn_critical\":{},\"energy_budget_mj\":{},\
+         \"drift_warn\":{},\"drift_critical\":{},\"queue_warn\":{},\
+         \"queue_critical\":{},\"clear_ratio\":{},\"min_samples\":{}}}",
+        json_f64(h.fast_window_s),
+        json_f64(h.slow_window_s),
+        json_f64(h.slo_target),
+        json_f64(h.burn_warn),
+        json_f64(h.burn_critical),
+        json_f64(h.energy_budget_mj),
+        json_f64(h.drift_warn),
+        json_f64(h.drift_critical),
+        h.queue_warn,
+        h.queue_critical,
+        json_f64(h.clear_ratio),
+        h.min_samples,
+    )
+}
+
 impl TraceMeta {
     /// Capture the metadata of a run about to execute under `cfg` over
     /// `streams`.
@@ -234,7 +258,7 @@ impl TraceMeta {
              \"eta\":{},\"subsample\":{},\"min_leaf\":{},\"bins\":{},\"gbdt_seed\":{}}},\
              \"plan_cache\":{{\"capacity\":{},\"freq_bucket_hz\":{},\"util_bucket\":{},\
              \"temp_bucket_c\":{},\"bw_bucket\":{}}},\
-             \"streams\":[{}],\"timeline\":[{}]{}}}",
+             \"streams\":[{}],\"timeline\":[{}]{}{}}}",
             self.cfg.seed,
             json_f64(self.cfg.duration_s),
             self.cfg.policy.name(),
@@ -272,6 +296,12 @@ impl TraceMeta {
             timeline,
             // off-path headers keep their exact pre-telemetry bytes
             if self.cfg.telemetry { ",\"telemetry\":true" } else { "" },
+            // likewise: the health object only appears when configured,
+            // strictly after the telemetry marker
+            match &self.cfg.health {
+                Some(h) => format!(",\"health\":{}", health_json(h)),
+                None => String::new(),
+            },
         )
     }
 }
@@ -460,6 +490,24 @@ impl SimObserver for TraceObserver {
                         json_f64(*decision_s),
                     ));
                 }
+            }
+            // alerts only exist on runs with the health monitor on, so
+            // no gating is needed: legacy traces never see them
+            Event::Alert { alert } => {
+                let stream = alert
+                    .stream
+                    .map_or("null".to_string(), |s| s.to_string());
+                self.lines.push(format!(
+                    "{{\"event\":\"alert\",\"t_s\":{},\"rule\":\"{}\",\"stream\":{},\
+                     \"prev\":\"{}\",\"state\":\"{}\",\"signal\":{},\"threshold\":{}}}",
+                    json_f64(alert.t_s),
+                    alert.rule,
+                    stream,
+                    alert.prev.name(),
+                    alert.state.name(),
+                    json_f64(alert.signal),
+                    json_f64(alert.threshold),
+                ));
             }
         }
     }
@@ -701,6 +749,64 @@ mod tests {
         let cfg = EngineConfig { telemetry: true, ..Default::default() };
         let on = TraceMeta { cfg, streams: vec![] };
         assert!(on.header_line().ends_with(",\"telemetry\":true}"));
+    }
+
+    #[test]
+    fn header_health_field_is_conditional() {
+        use crate::coordinator::EngineConfig;
+        use crate::metrics::health::HealthConfig;
+        let plain = TraceMeta { cfg: EngineConfig::default(), streams: vec![] };
+        assert!(!plain.header_line().contains("health"));
+        let cfg = EngineConfig {
+            telemetry: true,
+            health: Some(HealthConfig::default()),
+            ..Default::default()
+        };
+        let on = TraceMeta { cfg, streams: vec![] };
+        let h = on.header_line();
+        // health renders strictly after the telemetry marker
+        assert!(h.contains(",\"telemetry\":true,\"health\":{"), "{h}");
+        assert!(h.contains("\"slo_target\":0.01"), "{h}");
+        assert!(h.contains("\"min_samples\":5"), "{h}");
+        assert!(h.ends_with("}}"), "{h}");
+    }
+
+    #[test]
+    fn alert_lines_render_rule_and_states() {
+        use crate::metrics::health::{Alert, HealthState};
+        let mut tr = TraceObserver::new();
+        tr.on_event(&Event::Alert {
+            alert: Alert {
+                t_s: 1.25,
+                rule: "slo_burn",
+                stream: Some(1),
+                prev: HealthState::Ok,
+                state: HealthState::Critical,
+                signal: 12.5,
+                threshold: 4.0,
+            },
+        });
+        tr.on_event(&Event::Alert {
+            alert: Alert {
+                t_s: 2.5,
+                rule: "queue_depth",
+                stream: None,
+                prev: HealthState::Warn,
+                state: HealthState::Ok,
+                signal: 2.0,
+                threshold: 6.4,
+            },
+        });
+        assert_eq!(tr.len(), 2);
+        let l = &tr.lines()[0];
+        assert!(l.starts_with('{') && l.ends_with('}'), "{l}");
+        assert!(l.contains("\"event\":\"alert\""));
+        assert!(l.contains("\"rule\":\"slo_burn\""));
+        assert!(l.contains("\"stream\":1"));
+        assert!(l.contains("\"prev\":\"ok\""));
+        assert!(l.contains("\"state\":\"critical\""));
+        assert!(tr.lines()[1].contains("\"stream\":null"));
+        assert!(tr.lines()[1].contains("\"state\":\"ok\""));
     }
 
     #[test]

@@ -1,0 +1,628 @@
+//! Deterministic sliding-window statistics over virtual time.
+//!
+//! The health layer ([`crate::metrics::health`]) needs "what happened in
+//! the last N seconds" views of the serving stream — miss rates, energy
+//! per request, profiler residuals — evaluated *inside* the simulation
+//! at monitor ticks. These primitives provide that as time-bucketed
+//! rings keyed by the **absolute bucket index** `floor(t / bucket_s)`:
+//!
+//! * [`WindowCounter`] — a ring of `u64` counters (windowed counts and
+//!   rates, exact under merge);
+//! * [`WindowStat`] — a paired count/sum ring (windowed means);
+//! * [`WindowHistogram`] — a ring of [`LogHistogram`] slots (windowed
+//!   quantiles via the mergeable log-bucket sketch).
+//!
+//! Determinism contract (same as the rest of the metrics layer):
+//!
+//! * all state advances on *virtual* time handed in by the caller —
+//!   nothing here reads a clock;
+//! * advancing to bucket `i` zeroes every slot between the old head and
+//!   `i`, so a window's contents depend only on the recorded events,
+//!   never on how often it was polled;
+//! * [`merge`](WindowCounter::merge) aligns two rings on their absolute
+//!   bucket indices and adds slot-wise. Counter merges are exact and
+//!   associative; float sums are merged in caller order, so shard-order
+//!   merging (device order in the fleet runner) gives bit-identical
+//!   results for any thread count.
+//!
+//! Events may arrive slightly out of order (the kernel delivers in
+//! causal, not time-sorted, order): a record older than the window is
+//! dropped, one inside the window lands in its own bucket.
+
+use crate::metrics::histogram::LogHistogram;
+
+/// Shared ring bookkeeping: bucket width, head index, primed flag.
+#[derive(Debug, Clone, PartialEq)]
+struct Ring {
+    bucket_s: f64,
+    /// Absolute bucket index of the newest slot (valid once `primed`).
+    head: u64,
+    primed: bool,
+}
+
+impl Ring {
+    fn new(window_s: f64, buckets: usize) -> Ring {
+        assert!(
+            window_s.is_finite() && window_s > 0.0,
+            "window_s must be positive"
+        );
+        assert!(buckets > 0, "need at least one bucket");
+        Ring {
+            bucket_s: window_s / buckets as f64,
+            head: 0,
+            primed: false,
+        }
+    }
+
+    fn index(&self, t_s: f64) -> u64 {
+        let t = if t_s.is_finite() && t_s > 0.0 { t_s } else { 0.0 };
+        (t / self.bucket_s) as u64
+    }
+
+    /// Advance the head to `idx`, returning the range of slot positions
+    /// (ring offsets) that must be reset. Returns `None` when nothing
+    /// needs clearing.
+    fn advance(&mut self, idx: u64, n: u64) -> AdvanceClear {
+        if !self.primed {
+            self.primed = true;
+            self.head = idx;
+            return AdvanceClear::None;
+        }
+        if idx <= self.head {
+            return AdvanceClear::None;
+        }
+        let clear = if idx - self.head >= n {
+            AdvanceClear::All
+        } else {
+            AdvanceClear::Span(self.head + 1, idx)
+        };
+        self.head = idx;
+        clear
+    }
+
+    fn compatible(&self, other: &Ring, n: usize, n_other: usize) -> bool {
+        self.bucket_s == other.bucket_s && n == n_other
+    }
+}
+
+/// What [`Ring::advance`] asks the owner to reset.
+enum AdvanceClear {
+    None,
+    /// Every slot.
+    All,
+    /// Absolute bucket indices `lo..=hi`.
+    Span(u64, u64),
+}
+
+/// Time-bucketed ring of `u64` counters over a fixed look-back window.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WindowCounter {
+    ring: Ring,
+    window_s: f64,
+    slots: Vec<u64>,
+}
+
+impl WindowCounter {
+    /// Ring covering the trailing `window_s` seconds with `buckets`
+    /// equal slots. Panics unless `window_s > 0` and `buckets > 0`.
+    pub fn new(window_s: f64, buckets: usize) -> WindowCounter {
+        WindowCounter {
+            ring: Ring::new(window_s, buckets),
+            window_s,
+            slots: vec![0; buckets],
+        }
+    }
+
+    /// The configured look-back span in seconds.
+    pub fn window_s(&self) -> f64 {
+        self.window_s
+    }
+
+    fn apply(&mut self, clear: AdvanceClear) {
+        let n = self.slots.len() as u64;
+        match clear {
+            AdvanceClear::None => {}
+            AdvanceClear::All => self.slots.iter_mut().for_each(|s| *s = 0),
+            AdvanceClear::Span(lo, hi) => {
+                for i in lo..=hi {
+                    self.slots[(i % n) as usize] = 0;
+                }
+            }
+        }
+    }
+
+    /// Move the window forward to virtual time `t_s` (no-op when `t_s`
+    /// is not ahead of the head bucket).
+    pub fn advance(&mut self, t_s: f64) {
+        let idx = self.ring.index(t_s);
+        let n = self.slots.len() as u64;
+        let clear = self.ring.advance(idx, n);
+        self.apply(clear);
+    }
+
+    /// Count `n` events at virtual time `t_s`. Events older than the
+    /// window (after any forward motion already seen) are dropped.
+    pub fn record(&mut self, t_s: f64, n: u64) {
+        self.advance(t_s);
+        let idx = self.ring.index(t_s);
+        let len = self.slots.len() as u64;
+        if self.ring.head - idx < len {
+            self.slots[(idx % len) as usize] += n;
+        }
+    }
+
+    /// Total count inside the window as of `t_s`.
+    pub fn total(&mut self, t_s: f64) -> u64 {
+        self.advance(t_s);
+        self.slots.iter().sum()
+    }
+
+    /// Windowed event rate in Hz as of `t_s`.
+    pub fn rate_hz(&mut self, t_s: f64) -> f64 {
+        self.total(t_s) as f64 / self.window_s
+    }
+
+    /// Fold `other` into `self` (slot-wise addition aligned on absolute
+    /// bucket indices; the head advances to the later of the two).
+    /// Exact and associative. Panics on shape mismatch.
+    pub fn merge(&mut self, other: &WindowCounter) {
+        assert!(
+            self.ring
+                .compatible(&other.ring, self.slots.len(), other.slots.len()),
+            "merging incompatible windows"
+        );
+        if !other.ring.primed {
+            return;
+        }
+        if !self.ring.primed {
+            *self = other.clone();
+            return;
+        }
+        let n = self.slots.len() as u64;
+        let head = self.ring.head.max(other.ring.head);
+        let clear = self.ring.advance(head, n);
+        self.apply(clear);
+        for k in 0..n {
+            if k > other.ring.head {
+                break;
+            }
+            let idx = other.ring.head - k;
+            if head - idx < n {
+                self.slots[(idx % n) as usize] += other.slots[(idx % n) as usize];
+            }
+        }
+    }
+}
+
+/// Paired count/sum ring: windowed means of a float-valued series.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WindowStat {
+    counts: WindowCounter,
+    sums: Vec<f64>,
+}
+
+impl WindowStat {
+    /// Stat window covering the trailing `window_s` seconds with
+    /// `buckets` equal slots.
+    pub fn new(window_s: f64, buckets: usize) -> WindowStat {
+        WindowStat {
+            counts: WindowCounter::new(window_s, buckets),
+            sums: vec![0.0; buckets],
+        }
+    }
+
+    fn advance(&mut self, t_s: f64) {
+        let idx = self.counts.ring.index(t_s);
+        let n = self.sums.len() as u64;
+        match self.counts.ring.advance(idx, n) {
+            AdvanceClear::None => {}
+            AdvanceClear::All => {
+                self.counts.slots.iter_mut().for_each(|s| *s = 0);
+                self.sums.iter_mut().for_each(|s| *s = 0.0);
+            }
+            AdvanceClear::Span(lo, hi) => {
+                for i in lo..=hi {
+                    self.counts.slots[(i % n) as usize] = 0;
+                    self.sums[(i % n) as usize] = 0.0;
+                }
+            }
+        }
+    }
+
+    /// Record one sample `x` at virtual time `t_s` (dropped when older
+    /// than the window).
+    pub fn record(&mut self, t_s: f64, x: f64) {
+        self.advance(t_s);
+        let idx = self.counts.ring.index(t_s);
+        let n = self.sums.len() as u64;
+        if self.counts.ring.head - idx < n {
+            self.counts.slots[(idx % n) as usize] += 1;
+            self.sums[(idx % n) as usize] += x;
+        }
+    }
+
+    /// Number of in-window samples as of `t_s`.
+    pub fn count(&mut self, t_s: f64) -> u64 {
+        self.advance(t_s);
+        self.counts.slots.iter().sum()
+    }
+
+    /// Sum of in-window samples as of `t_s`.
+    pub fn sum(&mut self, t_s: f64) -> f64 {
+        self.advance(t_s);
+        self.sums.iter().sum()
+    }
+
+    /// Mean of in-window samples as of `t_s`; `None` when empty.
+    pub fn mean(&mut self, t_s: f64) -> Option<f64> {
+        let n = self.count(t_s);
+        if n == 0 {
+            None
+        } else {
+            Some(self.sums.iter().sum::<f64>() / n as f64)
+        }
+    }
+
+    /// Fold `other` into `self` (counts exactly, sums in caller order —
+    /// merge shards in a fixed order for bit-identical results).
+    pub fn merge(&mut self, other: &WindowStat) {
+        assert!(
+            self.counts
+                .ring
+                .compatible(&other.counts.ring, self.sums.len(), other.sums.len()),
+            "merging incompatible windows"
+        );
+        if !other.counts.ring.primed {
+            return;
+        }
+        if !self.counts.ring.primed {
+            *self = other.clone();
+            return;
+        }
+        let n = self.sums.len() as u64;
+        let head = self.counts.ring.head.max(other.counts.ring.head);
+        match self.counts.ring.advance(head, n) {
+            AdvanceClear::None => {}
+            AdvanceClear::All => {
+                self.counts.slots.iter_mut().for_each(|s| *s = 0);
+                self.sums.iter_mut().for_each(|s| *s = 0.0);
+            }
+            AdvanceClear::Span(lo, hi) => {
+                for i in lo..=hi {
+                    self.counts.slots[(i % n) as usize] = 0;
+                    self.sums[(i % n) as usize] = 0.0;
+                }
+            }
+        }
+        for k in 0..n {
+            if k > other.counts.ring.head {
+                break;
+            }
+            let idx = other.counts.ring.head - k;
+            if head - idx < n {
+                let p = (idx % n) as usize;
+                self.counts.slots[p] += other.counts.slots[p];
+                self.sums[p] += other.sums[p];
+            }
+        }
+    }
+}
+
+/// Ring of [`LogHistogram`] slots: windowed quantiles with the same
+/// mergeable log-bucket sketch the fleet layer uses.
+#[derive(Debug, Clone)]
+pub struct WindowHistogram {
+    ring: Ring,
+    lo: f64,
+    hi: f64,
+    growth: f64,
+    slots: Vec<LogHistogram>,
+}
+
+impl WindowHistogram {
+    /// Windowed histogram over the trailing `window_s` seconds, each
+    /// slot a `LogHistogram::new(lo, hi, growth)`.
+    pub fn new(window_s: f64, buckets: usize, lo: f64, hi: f64, growth: f64) -> WindowHistogram {
+        WindowHistogram {
+            ring: Ring::new(window_s, buckets),
+            lo,
+            hi,
+            growth,
+            slots: (0..buckets).map(|_| LogHistogram::new(lo, hi, growth)).collect(),
+        }
+    }
+
+    /// Windowed latency histogram with the standard serving shape.
+    pub fn latency(window_s: f64, buckets: usize) -> WindowHistogram {
+        WindowHistogram::new(window_s, buckets, 1e-6, 1e4, 1.05)
+    }
+
+    fn fresh(&self) -> LogHistogram {
+        LogHistogram::new(self.lo, self.hi, self.growth)
+    }
+
+    fn advance(&mut self, t_s: f64) {
+        let idx = self.ring.index(t_s);
+        let n = self.slots.len() as u64;
+        match self.ring.advance(idx, n) {
+            AdvanceClear::None => {}
+            AdvanceClear::All => {
+                let blank = self.fresh();
+                self.slots.iter_mut().for_each(|s| *s = blank.clone());
+            }
+            AdvanceClear::Span(lo, hi) => {
+                for i in lo..=hi {
+                    let blank = self.fresh();
+                    self.slots[(i % n) as usize] = blank;
+                }
+            }
+        }
+    }
+
+    /// Record one sample at virtual time `t_s` (dropped when older than
+    /// the window).
+    pub fn record(&mut self, t_s: f64, x: f64) {
+        self.advance(t_s);
+        let idx = self.ring.index(t_s);
+        let n = self.slots.len() as u64;
+        if self.ring.head - idx < n {
+            self.slots[(idx % n) as usize].record(x);
+        }
+    }
+
+    /// Merge of every in-window slot as of `t_s` — quantiles/means read
+    /// off the returned sketch.
+    pub fn snapshot(&mut self, t_s: f64) -> LogHistogram {
+        self.advance(t_s);
+        let mut out = self.fresh();
+        for s in &self.slots {
+            out.merge(s);
+        }
+        out
+    }
+
+    /// Fold `other` into `self`, slot-wise, aligned on absolute bucket
+    /// indices. Panics on shape mismatch.
+    pub fn merge(&mut self, other: &WindowHistogram) {
+        assert!(
+            self.ring
+                .compatible(&other.ring, self.slots.len(), other.slots.len()),
+            "merging incompatible windows"
+        );
+        if !other.ring.primed {
+            return;
+        }
+        if !self.ring.primed {
+            *self = other.clone();
+            return;
+        }
+        let n = self.slots.len() as u64;
+        let head = self.ring.head.max(other.ring.head);
+        match self.ring.advance(head, n) {
+            AdvanceClear::None => {}
+            AdvanceClear::All => {
+                let blank = self.fresh();
+                self.slots.iter_mut().for_each(|s| *s = blank.clone());
+            }
+            AdvanceClear::Span(lo, hi) => {
+                for i in lo..=hi {
+                    let blank = self.fresh();
+                    self.slots[(i % n) as usize] = blank;
+                }
+            }
+        }
+        for k in 0..n {
+            if k > other.ring.head {
+                break;
+            }
+            let idx = other.ring.head - k;
+            if head - idx < n {
+                let p = (idx % n) as usize;
+                self.slots[p].merge(&other.slots[p]);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Tiny deterministic LCG for the property suites (no external rng
+    /// deps, stable across hosts).
+    struct Lcg(u64);
+    impl Lcg {
+        fn next_u64(&mut self) -> u64 {
+            self.0 = self.0.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            self.0
+        }
+        fn f64_01(&mut self) -> f64 {
+            (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+        }
+    }
+
+    #[test]
+    fn counts_inside_window_only() {
+        let mut w = WindowCounter::new(1.0, 4); // bucket_s = 0.25
+        w.record(0.1, 1);
+        w.record(0.3, 1);
+        w.record(0.9, 1);
+        assert_eq!(w.total(0.9), 3);
+        // advance past the first two buckets: only t=0.9 survives
+        assert_eq!(w.total(1.6), 1);
+        // advance far past everything
+        assert_eq!(w.total(10.0), 0);
+    }
+
+    #[test]
+    fn polling_frequency_does_not_change_contents() {
+        let mut a = WindowCounter::new(2.0, 8);
+        let mut b = WindowCounter::new(2.0, 8);
+        for (t, n) in [(0.2, 3u64), (0.9, 1), (1.7, 2), (2.4, 5)] {
+            a.record(t, n);
+            b.record(t, n);
+            // poll `b` obsessively between records
+            for k in 0..10 {
+                b.advance(t + k as f64 * 0.01);
+            }
+        }
+        assert_eq!(a.total(2.5), b.total(2.5));
+    }
+
+    #[test]
+    fn late_events_in_window_land_old_events_drop() {
+        let mut w = WindowCounter::new(1.0, 4);
+        w.record(2.0, 1);
+        w.record(1.9, 1); // slightly late but inside window: kept
+        assert_eq!(w.total(2.0), 2);
+        w.record(0.1, 7); // far older than the window: dropped
+        assert_eq!(w.total(2.0), 2);
+    }
+
+    #[test]
+    fn rate_is_total_over_span() {
+        let mut w = WindowCounter::new(2.0, 4);
+        w.record(0.1, 4);
+        w.record(0.9, 4);
+        assert!((w.rate_hz(1.0) - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn counter_matches_bruteforce_over_random_streams() {
+        let mut rng = Lcg(0xADA0_9E17);
+        for _case in 0..50 {
+            let buckets = 2 + (rng.next_u64() % 14) as usize;
+            let window_s = 0.5 + rng.f64_01() * 4.0;
+            let mut w = WindowCounter::new(window_s, buckets);
+            let bucket_s = window_s / buckets as f64;
+            let mut events: Vec<(f64, u64)> = Vec::new();
+            let mut t = 0.0;
+            for _ in 0..200 {
+                t += rng.f64_01() * 0.3;
+                let n = rng.next_u64() % 4;
+                events.push((t, n));
+                w.record(t, n);
+            }
+            let head = (t / bucket_s) as u64;
+            let brute: u64 = events
+                .iter()
+                .filter(|(et, _)| {
+                    let idx = (*et / bucket_s) as u64;
+                    head - idx < buckets as u64
+                })
+                .map(|(_, n)| *n)
+                .sum();
+            assert_eq!(w.total(t), brute, "window vs brute force diverged");
+        }
+    }
+
+    #[test]
+    fn stat_mean_matches_bruteforce() {
+        let mut rng = Lcg(42);
+        for _case in 0..30 {
+            let buckets = 2 + (rng.next_u64() % 10) as usize;
+            let window_s = 1.0 + rng.f64_01() * 3.0;
+            let bucket_s = window_s / buckets as f64;
+            let mut w = WindowStat::new(window_s, buckets);
+            let mut events: Vec<(f64, f64)> = Vec::new();
+            let mut t = 0.0;
+            for _ in 0..150 {
+                t += rng.f64_01() * 0.2;
+                let x = rng.f64_01() * 10.0;
+                events.push((t, x));
+                w.record(t, x);
+            }
+            let head = (t / bucket_s) as u64;
+            let inside: Vec<f64> = events
+                .iter()
+                .filter(|(et, _)| head - (*et / bucket_s) as u64 < buckets as u64)
+                .map(|(_, x)| *x)
+                .collect();
+            assert_eq!(w.count(t), inside.len() as u64);
+            let brute = inside.iter().sum::<f64>() / inside.len() as f64;
+            let got = w.mean(t).expect("non-empty window");
+            assert!((got - brute).abs() < 1e-9, "mean {got} vs brute {brute}");
+        }
+    }
+
+    #[test]
+    fn counter_merge_is_associative_and_matches_union() {
+        let mut rng = Lcg(7);
+        for _case in 0..40 {
+            let buckets = 3 + (rng.next_u64() % 8) as usize;
+            let window_s = 1.0 + rng.f64_01() * 2.0;
+            let mut shards: Vec<WindowCounter> = Vec::new();
+            let mut union = WindowCounter::new(window_s, buckets);
+            let mut t_max: f64 = 0.0;
+            for _ in 0..3 {
+                let mut w = WindowCounter::new(window_s, buckets);
+                let mut t = rng.f64_01();
+                for _ in 0..60 {
+                    t += rng.f64_01() * 0.15;
+                    let n = rng.next_u64() % 3;
+                    w.record(t, n);
+                    union.record(t, n);
+                }
+                t_max = t_max.max(t);
+                shards.push(w);
+            }
+            // ((a ⊕ b) ⊕ c)
+            let mut left = shards[0].clone();
+            left.merge(&shards[1]);
+            left.merge(&shards[2]);
+            // (a ⊕ (b ⊕ c))
+            let mut bc = shards[1].clone();
+            bc.merge(&shards[2]);
+            let mut right = shards[0].clone();
+            right.merge(&bc);
+            assert_eq!(left, right, "merge not associative");
+            // the merged ring sees the union of all shards' events that
+            // are still inside the latest head's window
+            assert_eq!(left.total(t_max), union.total(t_max));
+        }
+    }
+
+    #[test]
+    fn merge_with_unprimed_sides() {
+        let empty = WindowCounter::new(1.0, 4);
+        let mut w = WindowCounter::new(1.0, 4);
+        w.record(0.5, 2);
+        let mut a = w.clone();
+        a.merge(&empty);
+        assert_eq!(a.total(0.5), 2);
+        let mut b = empty.clone();
+        b.merge(&w);
+        assert_eq!(b.total(0.5), 2);
+    }
+
+    #[test]
+    fn histogram_snapshot_windows_out_old_samples() {
+        let mut w = WindowHistogram::latency(1.0, 4);
+        w.record(0.1, 0.010);
+        w.record(0.9, 0.020);
+        assert_eq!(w.snapshot(0.9).count(), 2);
+        let snap = w.snapshot(1.6); // first bucket rolled out
+        assert_eq!(snap.count(), 1);
+        let m = snap.mean().expect("one sample");
+        assert!((m - 0.020).abs() < 0.002, "mean {m}");
+    }
+
+    #[test]
+    fn histogram_merge_counts_union() {
+        let mut a = WindowHistogram::latency(1.0, 4);
+        let mut b = WindowHistogram::latency(1.0, 4);
+        a.record(0.2, 0.010);
+        b.record(0.3, 0.030);
+        b.record(0.8, 0.050);
+        a.merge(&b);
+        assert_eq!(a.snapshot(0.8).count(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "incompatible")]
+    fn merge_shape_mismatch_panics() {
+        let mut a = WindowCounter::new(1.0, 4);
+        let b = WindowCounter::new(1.0, 8);
+        a.merge(&b);
+    }
+}

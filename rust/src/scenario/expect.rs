@@ -37,6 +37,10 @@ pub enum ExpectKey {
     /// Worst per-processor plan-residual regression upper bound,
     /// milliseconds (audit log; needs telemetry).
     WorstResidualMsMax,
+    /// Health-alert-count upper bound (needs the health monitor).
+    AlertsMax,
+    /// Profiler-drift-escalation lower bound (needs the health monitor).
+    DriftAlertsMin,
 }
 
 impl ExpectKey {
@@ -55,6 +59,8 @@ impl ExpectKey {
             "shed_max" => ExpectKey::ShedMax,
             "decisions_min" => ExpectKey::DecisionsMin,
             "worst_residual_ms_max" => ExpectKey::WorstResidualMsMax,
+            "alerts_max" => ExpectKey::AlertsMax,
+            "drift_alerts_min" => ExpectKey::DriftAlertsMin,
             _ => return None,
         })
     }
@@ -74,11 +80,13 @@ impl ExpectKey {
             ExpectKey::ShedMax => "shed_max",
             ExpectKey::DecisionsMin => "decisions_min",
             ExpectKey::WorstResidualMsMax => "worst_residual_ms_max",
+            ExpectKey::AlertsMax => "alerts_max",
+            ExpectKey::DriftAlertsMin => "drift_alerts_min",
         }
     }
 
     /// Every key, for error messages and docs.
-    pub fn all() -> [ExpectKey; 12] {
+    pub fn all() -> [ExpectKey; 14] {
         [
             ExpectKey::P50MsMax,
             ExpectKey::P95MsMax,
@@ -92,6 +100,8 @@ impl ExpectKey {
             ExpectKey::ShedMax,
             ExpectKey::DecisionsMin,
             ExpectKey::WorstResidualMsMax,
+            ExpectKey::AlertsMax,
+            ExpectKey::DriftAlertsMin,
         ]
     }
 
@@ -104,6 +114,7 @@ impl ExpectKey {
                 | ExpectKey::MeanBatchMin
                 | ExpectKey::RequestsMin
                 | ExpectKey::DecisionsMin
+                | ExpectKey::DriftAlertsMin
         )
     }
 
@@ -113,6 +124,14 @@ impl ExpectKey {
     /// off.
     pub fn needs_telemetry(&self) -> bool {
         matches!(self, ExpectKey::DecisionsMin | ExpectKey::WorstResidualMsMax)
+    }
+
+    /// True for keys sourced from the health monitor — the scenario
+    /// runner enables a default `[health]` config when a spec declares
+    /// one without the section, so the bound never fails just because
+    /// the monitor was off.
+    pub fn needs_health(&self) -> bool {
+        matches!(self, ExpectKey::AlertsMax | ExpectKey::DriftAlertsMin)
     }
 
     /// Keys the fleet aggregate can satisfy (per-class histograms carry
@@ -189,6 +208,10 @@ pub struct Metrics {
     pub decisions: Option<f64>,
     /// Worst (most positive) per-processor plan residual, ms.
     pub worst_residual_ms: Option<f64>,
+    /// Health alerts (state transitions) recorded by the monitor.
+    pub alerts: Option<f64>,
+    /// Profiler-drift escalations recorded by the monitor.
+    pub drift_alerts: Option<f64>,
 }
 
 impl Metrics {
@@ -207,6 +230,8 @@ impl Metrics {
             shed: r.sched.as_ref().map(|s| s.shed() as f64),
             decisions: r.telemetry.as_ref().map(|t| t.decisions as f64),
             worst_residual_ms: r.telemetry.as_ref().and_then(|t| t.worst_regression_ms),
+            alerts: r.health.as_ref().map(|h| h.alerts as f64),
+            drift_alerts: r.health.as_ref().map(|h| h.drift_alerts as f64),
         }
     }
 
@@ -240,6 +265,8 @@ impl Metrics {
             ExpectKey::ShedMax => self.shed,
             ExpectKey::DecisionsMin => self.decisions,
             ExpectKey::WorstResidualMsMax => self.worst_residual_ms,
+            ExpectKey::AlertsMax => self.alerts,
+            ExpectKey::DriftAlertsMin => self.drift_alerts,
         }
     }
 }

@@ -59,6 +59,7 @@ pub fn lower(spec: &ScenarioSpec) -> Result<Lowered> {
     cfg.plan_cache.capacity = spec.plan_cache.capacity;
     cfg.plan_cache.util_bucket = spec.plan_cache.util_bucket;
     cfg.plan_cache.freq_bucket_hz = spec.plan_cache.freq_bucket_mhz * 1e6;
+    cfg.health = spec.health.clone();
 
     let mut timeline: Vec<_> = spec.timeline.iter().map(|t| (t.at_s, t.condition)).collect();
     timeline.sort_by(|a, b| a.0.total_cmp(&b.0));
@@ -92,6 +93,7 @@ pub fn lower(spec: &ScenarioSpec) -> Result<Lowered> {
         admission: cfg.admission,
         batching: cfg.batching.clone(),
         calib: cfg.calib.clone(),
+        health: cfg.health.clone(),
         ..FleetRunConfig::default()
     });
 

@@ -72,9 +72,13 @@ pub fn replay_str(jsonl: &str) -> Result<ReplayOutcome> {
             Some("report") => {
                 recorded_row = Some(obj.need_str("row")?.to_string());
             }
-            // telemetry event lines (opt-in kernel/audit stream) carry no
-            // arrival state: replay re-derives everything from the header
-            Some("batch_close" | "monitor_tick" | "replan" | "plan_decision" | "stage_timers") => {}
+            // telemetry event lines (opt-in kernel/audit stream) and health
+            // alerts carry no arrival state: replay re-derives everything
+            // from the header
+            Some(
+                "batch_close" | "monitor_tick" | "replan" | "plan_decision" | "stage_timers"
+                | "alert",
+            ) => {}
             Some(other) => bail!("trace line {}: unknown event `{other}`", i + 1),
             None => {
                 let req = Request {
@@ -152,6 +156,27 @@ pub fn reconstruct(h: &Json) -> Result<(EngineConfig, Vec<StreamSpec>)> {
     // never changes the virtual timeline, so the replayed row matches the
     // recorded one either way
     cfg.telemetry = h.get("telemetry").and_then(Json::as_bool).unwrap_or(false);
+    // optional health config (headers predating the health layer omit it);
+    // the monitor is write-only observation, but the reconstructed config
+    // must match so the replayed report row — including its health
+    // section — stays byte-identical to the recorded one
+    cfg.health = match h.get("health") {
+        None => None,
+        Some(hc) => Some(crate::metrics::HealthConfig {
+            fast_window_s: hc.need_f64("fast_window_s")?,
+            slow_window_s: hc.need_f64("slow_window_s")?,
+            slo_target: hc.need_f64("slo_target")?,
+            burn_warn: hc.need_f64("burn_warn")?,
+            burn_critical: hc.need_f64("burn_critical")?,
+            energy_budget_mj: hc.need_f64("energy_budget_mj")?,
+            drift_warn: hc.need_f64("drift_warn")?,
+            drift_critical: hc.need_f64("drift_critical")?,
+            queue_warn: hc.need_usize("queue_warn")?,
+            queue_critical: hc.need_usize("queue_critical")?,
+            clear_ratio: hc.need_f64("clear_ratio")?,
+            min_samples: hc.need_u64("min_samples")?,
+        }),
+    };
 
     let calib = h.get("calib").ok_or_else(|| anyhow::anyhow!("trace header missing `calib`"))?;
     cfg.calib.samples = calib.need_usize("samples")?;

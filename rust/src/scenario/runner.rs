@@ -59,6 +59,12 @@ pub fn run_str(src: &str) -> Result<ScenarioOutcome> {
     if lowered.expect.iter().any(|b| b.key.needs_telemetry()) {
         lowered.cfg.telemetry = true;
     }
+    // likewise for health-sourced bounds (alerts_max, drift_alerts_min):
+    // a spec asserting on alerts without a [health] section gets the
+    // default monitor config instead of a guaranteed-NaN failure
+    if lowered.expect.iter().any(|b| b.key.needs_health()) && lowered.cfg.health.is_none() {
+        lowered.cfg.health = Some(crate::metrics::HealthConfig::default());
+    }
     let (row, metrics) = match &lowered.fleet {
         Some(fleet_cfg) => {
             let report = crate::fleet::run_fleet(fleet_cfg)?;

@@ -19,6 +19,7 @@ use crate::config::schema::{
     AdmissionKind, BatchPolicyKind, ConditionKind, PolicyKind, SchedulerKind,
 };
 use crate::config::toml::Value;
+use crate::metrics::HealthConfig;
 use crate::scenario::diag::spec_err;
 use crate::scenario::expect::{ExpectBound, ExpectKey};
 
@@ -179,12 +180,17 @@ pub struct ScenarioSpec {
     pub plan_cache: CacheDef,
     /// Fleet-mode switch.
     pub fleet: Option<FleetDef>,
+    /// `[health]` — streaming health monitor (SLO burn-rate, energy
+    /// budget, drift, queue-depth alerting). `None` keeps the engine
+    /// alert-free and every output byte-identical to a health-less build.
+    pub health: Option<HealthConfig>,
     /// `[expect]` metric assertions.
     pub expect: Vec<ExpectBound>,
 }
 
 const ROOT_SECTIONS: &[&str] = &[
-    "scenario", "calib", "batching", "plan_cache", "stream", "timeline", "fleet", "expect",
+    "scenario", "calib", "batching", "plan_cache", "stream", "timeline", "fleet", "health",
+    "expect",
 ];
 const SCENARIO_KEYS: &[&str] = &[
     "name", "duration_s", "seed", "policy", "objective", "objective_slo_ms", "scheduler",
@@ -196,6 +202,11 @@ const CALIB_KEYS: &[&str] = &["samples", "seed", "trees"];
 const BATCH_KEYS: &[&str] = &["policy", "max", "wait_ms"];
 const CACHE_KEYS: &[&str] = &["capacity", "util_bucket", "freq_bucket_mhz"];
 const FLEET_KEYS: &[&str] = &["devices", "threads"];
+const HEALTH_KEYS: &[&str] = &[
+    "fast_window_s", "slow_window_s", "slo_target", "burn_warn", "burn_critical",
+    "energy_budget_mj", "drift_warn", "drift_critical", "queue_warn", "queue_critical",
+    "clear_ratio", "min_samples",
+];
 
 /// Decode TOML source into a [`ScenarioSpec`]. Shape errors carry spans;
 /// call [`crate::scenario::validate::validate`] afterwards for semantic
@@ -301,6 +312,28 @@ pub fn decode(src: &str) -> Result<ScenarioSpec> {
         }
     };
 
+    let health = match section(src, root, "health", false)? {
+        None => None,
+        Some(t) => {
+            check_keys(src, t, "health", HEALTH_KEYS)?;
+            let d = HealthConfig::default();
+            Some(HealthConfig {
+                fast_window_s: opt_f64(src, t, "health", "fast_window_s", d.fast_window_s)?,
+                slow_window_s: opt_f64(src, t, "health", "slow_window_s", d.slow_window_s)?,
+                slo_target: opt_f64(src, t, "health", "slo_target", d.slo_target)?,
+                burn_warn: opt_f64(src, t, "health", "burn_warn", d.burn_warn)?,
+                burn_critical: opt_f64(src, t, "health", "burn_critical", d.burn_critical)?,
+                energy_budget_mj: opt_f64(src, t, "health", "energy_budget_mj", d.energy_budget_mj)?,
+                drift_warn: opt_f64(src, t, "health", "drift_warn", d.drift_warn)?,
+                drift_critical: opt_f64(src, t, "health", "drift_critical", d.drift_critical)?,
+                queue_warn: opt_usize(src, t, "health", "queue_warn", d.queue_warn)?,
+                queue_critical: opt_usize(src, t, "health", "queue_critical", d.queue_critical)?,
+                clear_ratio: opt_f64(src, t, "health", "clear_ratio", d.clear_ratio)?,
+                min_samples: opt_u64(src, t, "health", "min_samples", d.min_samples)?,
+            })
+        }
+    };
+
     let mut streams = Vec::new();
     if let Some(group) = root.get("stream") {
         let tables = group.as_table().ok_or_else(|| {
@@ -385,6 +418,7 @@ pub fn decode(src: &str) -> Result<ScenarioSpec> {
         batching,
         plan_cache,
         fleet,
+        health,
         expect,
     })
 }
@@ -651,6 +685,23 @@ impl ScenarioSpec {
             p(&mut out, "[fleet]".into());
             p(&mut out, format!("devices = {}", f.devices));
             p(&mut out, format!("threads = {}", f.threads));
+        }
+
+        if let Some(h) = &self.health {
+            p(&mut out, String::new());
+            p(&mut out, "[health]".into());
+            p(&mut out, format!("fast_window_s = {}", float(h.fast_window_s)));
+            p(&mut out, format!("slow_window_s = {}", float(h.slow_window_s)));
+            p(&mut out, format!("slo_target = {}", float(h.slo_target)));
+            p(&mut out, format!("burn_warn = {}", float(h.burn_warn)));
+            p(&mut out, format!("burn_critical = {}", float(h.burn_critical)));
+            p(&mut out, format!("energy_budget_mj = {}", float(h.energy_budget_mj)));
+            p(&mut out, format!("drift_warn = {}", float(h.drift_warn)));
+            p(&mut out, format!("drift_critical = {}", float(h.drift_critical)));
+            p(&mut out, format!("queue_warn = {}", h.queue_warn));
+            p(&mut out, format!("queue_critical = {}", h.queue_critical));
+            p(&mut out, format!("clear_ratio = {}", float(h.clear_ratio)));
+            p(&mut out, format!("min_samples = {}", h.min_samples));
         }
 
         if !self.expect.is_empty() {

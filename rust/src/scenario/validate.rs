@@ -67,6 +67,7 @@ pub fn validate(spec: &ScenarioSpec, src: &str) -> Result<()> {
     validate_streams(spec, src)?;
     validate_timeline(spec, src)?;
     validate_knobs(spec, src)?;
+    validate_health(spec, src)?;
     validate_fleet(spec, src)?;
 
     for b in &spec.expect {
@@ -224,6 +225,66 @@ fn validate_knobs(spec: &ScenarioSpec, src: &str) -> Result<()> {
             Some("freq_bucket_mhz"),
             "must be a finite value > 0",
         ));
+    }
+    Ok(())
+}
+
+fn validate_health(spec: &ScenarioSpec, src: &str) -> Result<()> {
+    let Some(h) = &spec.health else { return Ok(()) };
+    let finite_pos = |v: f64| v > 0.0 && v.is_finite();
+    if !finite_pos(h.fast_window_s) {
+        return Err(spec_err(src, "health", Some("fast_window_s"), "must be a finite value > 0"));
+    }
+    if !finite_pos(h.slow_window_s) {
+        return Err(spec_err(src, "health", Some("slow_window_s"), "must be a finite value > 0"));
+    }
+    if h.fast_window_s >= h.slow_window_s {
+        return Err(spec_err(
+            src,
+            "health",
+            Some("fast_window_s"),
+            "must be shorter than slow_window_s (the slow window confirms the fast one)",
+        ));
+    }
+    if !finite_pos(h.slo_target) || h.slo_target > 1.0 {
+        return Err(spec_err(src, "health", Some("slo_target"), "must be within (0, 1]"));
+    }
+    if !finite_pos(h.burn_warn) {
+        return Err(spec_err(src, "health", Some("burn_warn"), "must be a finite value > 0"));
+    }
+    if !(h.burn_critical > h.burn_warn && h.burn_critical.is_finite()) {
+        return Err(spec_err(src, "health", Some("burn_critical"), "must be > burn_warn"));
+    }
+    if !(h.energy_budget_mj >= 0.0 && h.energy_budget_mj.is_finite()) {
+        return Err(spec_err(
+            src,
+            "health",
+            Some("energy_budget_mj"),
+            "must be a finite value >= 0 (0 disables the energy rule)",
+        ));
+    }
+    if !finite_pos(h.drift_warn) {
+        return Err(spec_err(src, "health", Some("drift_warn"), "must be a finite value > 0"));
+    }
+    if !(h.drift_critical > h.drift_warn && h.drift_critical.is_finite()) {
+        return Err(spec_err(src, "health", Some("drift_critical"), "must be > drift_warn"));
+    }
+    if h.queue_warn < 1 {
+        return Err(spec_err(src, "health", Some("queue_warn"), "must be >= 1"));
+    }
+    if h.queue_critical <= h.queue_warn {
+        return Err(spec_err(src, "health", Some("queue_critical"), "must be > queue_warn"));
+    }
+    if !(h.clear_ratio > 0.0 && h.clear_ratio < 1.0) {
+        return Err(spec_err(
+            src,
+            "health",
+            Some("clear_ratio"),
+            "must lie strictly within (0, 1) for the hysteresis gap to exist",
+        ));
+    }
+    if h.min_samples < 1 {
+        return Err(spec_err(src, "health", Some("min_samples"), "must be >= 1"));
     }
     Ok(())
 }

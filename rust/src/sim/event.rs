@@ -11,6 +11,7 @@
 
 use crate::coordinator::repartition::Trigger;
 use crate::coordinator::request::Request;
+use crate::metrics::health::Alert;
 use crate::soc::Placement;
 
 /// One simulation event, stamped with virtual-time fields.
@@ -90,6 +91,13 @@ pub enum Event {
         /// became dispatchable, seconds.
         wait_s: f64,
     },
+    /// A health rule changed state (see [`crate::metrics::health`]).
+    /// Emitted only on runs with the health monitor configured; the
+    /// matching typed hook is [`super::observer::SimObserver::on_alert`].
+    Alert {
+        /// The state transition, with its rule, signal, and threshold.
+        alert: Alert,
+    },
 }
 
 /// Discriminant of an [`Event`], for counting and display.
@@ -107,6 +115,8 @@ pub enum EventKind {
     RegimeReplan,
     /// [`Event::BatchClose`].
     BatchClose,
+    /// [`Event::Alert`].
+    Alert,
 }
 
 impl EventKind {
@@ -119,6 +129,7 @@ impl EventKind {
             EventKind::MonitorTick => "monitor_tick",
             EventKind::RegimeReplan => "regime_replan",
             EventKind::BatchClose => "batch_close",
+            EventKind::Alert => "alert",
         }
     }
 }
@@ -133,6 +144,7 @@ impl Event {
             Event::MonitorTick { .. } => EventKind::MonitorTick,
             Event::RegimeReplan { .. } => EventKind::RegimeReplan,
             Event::BatchClose { .. } => EventKind::BatchClose,
+            Event::Alert { .. } => EventKind::Alert,
         }
     }
 
@@ -145,6 +157,7 @@ impl Event {
             Event::MonitorTick { t_s, .. } => *t_s,
             Event::RegimeReplan { t_s, .. } => *t_s,
             Event::BatchClose { t_s, .. } => *t_s,
+            Event::Alert { alert } => alert.t_s,
         }
     }
 }
@@ -187,5 +200,19 @@ mod tests {
         assert_eq!(ev.kind(), EventKind::BatchClose);
         assert_eq!(ev.time_s(), 3.5);
         assert_eq!(ev.kind().name(), "batch_close");
+        let ev = Event::Alert {
+            alert: crate::metrics::health::Alert {
+                t_s: 4.25,
+                rule: "slo_burn",
+                stream: Some(0),
+                prev: crate::metrics::health::HealthState::Ok,
+                state: crate::metrics::health::HealthState::Warn,
+                signal: 2.0,
+                threshold: 1.0,
+            },
+        };
+        assert_eq!(ev.kind(), EventKind::Alert);
+        assert_eq!(ev.time_s(), 4.25);
+        assert_eq!(ev.kind().name(), "alert");
     }
 }

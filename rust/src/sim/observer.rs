@@ -8,6 +8,7 @@
 //! engine through this trait instead of poking report internals.
 
 use crate::coordinator::request::RequestOutcome;
+use crate::metrics::health::Alert;
 
 use super::event::Event;
 
@@ -31,6 +32,11 @@ pub trait SimObserver {
     /// scenarios need not destructure the event. Never called on runs with
     /// batching disabled.
     fn on_batch(&mut self, _stream: usize, _op: usize, _size: usize, _wait_s: f64) {}
+
+    /// Called once per health-rule state transition alongside the
+    /// corresponding [`Event::Alert`] — the typed hook for alert
+    /// consumers. Never called on runs without the health monitor.
+    fn on_alert(&mut self, _alert: &Alert) {}
 }
 
 /// Broadcast one event to every observer.
@@ -65,6 +71,14 @@ pub fn emit_batch(
     }
 }
 
+/// Broadcast one health alert to every observer (the typed hook; the
+/// engine additionally emits the matching [`Event::Alert`]).
+pub fn emit_alert(observers: &mut [&mut dyn SimObserver], alert: &Alert) {
+    for o in observers.iter_mut() {
+        o.on_alert(alert);
+    }
+}
+
 /// Event tallies — the workhorse observer the experiment sweeps and the
 /// fleet runner build on.
 #[derive(Debug, Clone, Copy, Default)]
@@ -96,6 +110,9 @@ pub struct EventCounters {
     pub batch_closes: usize,
     /// Requests dispatched inside those batched dispatches.
     pub batched_requests: usize,
+    /// Health-rule state transitions ([`Event::Alert`] count); always 0
+    /// on runs without the health monitor.
+    pub alerts: usize,
 }
 
 impl EventCounters {
@@ -135,6 +152,7 @@ impl SimObserver for EventCounters {
                     self.batched_requests += size;
                 }
             }
+            Event::Alert { .. } => self.alerts += 1,
         }
     }
 
@@ -205,9 +223,21 @@ mod tests {
             size: 1,
             wait_s: 0.004,
         });
+        c.on_event(&Event::Alert {
+            alert: crate::metrics::health::Alert {
+                t_s: 0.5,
+                rule: "queue_depth",
+                stream: None,
+                prev: crate::metrics::health::HealthState::Ok,
+                state: crate::metrics::health::HealthState::Warn,
+                signal: 9.0,
+                threshold: 8.0,
+            },
+        });
         assert_eq!((c.offered, c.admitted, c.shed), (2, 1, 1));
         assert_eq!((c.monitor_ticks, c.regime_changes), (1, 1));
         assert_eq!((c.batch_closes, c.batched_requests), (1, 3));
+        assert_eq!(c.alerts, 1);
         c.on_request_done(&outcome(0.0, 0.5, 1.0), true);
         c.on_request_done(&outcome(0.1, 2.0, 1.1), false);
         assert_eq!((c.completed, c.deadline_misses), (2, 1));

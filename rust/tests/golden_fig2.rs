@@ -62,6 +62,7 @@ fn row(
             sched: None,
             batch: None,
             telemetry: None,
+            health: None,
         },
     }
 }

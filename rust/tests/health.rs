@@ -1,0 +1,218 @@
+//! Health-layer integration: enabling the streaming health monitor must
+//! only *append* to the report row (the health-off row is a byte-exact
+//! prefix of the health-on row), the recorded alert stream must be
+//! deterministic and survive trace replay byte-identically, fleet
+//! alert rollups must be bit-identical across thread counts, and
+//! `inspect`'s trace scanner must skip torn/garbage JSONL lines instead
+//! of aborting.
+
+use std::sync::OnceLock;
+
+use adaoper::cli::commands::scan_trace;
+use adaoper::config::schema::{ConditionKind, PolicyKind, SchedulerKind};
+use adaoper::coordinator::{AdmissionPolicy, Engine, EngineConfig, StreamSpec};
+use adaoper::fleet::runner::{calibrate_classes, run_fleet_with};
+use adaoper::fleet::{DeviceClass, FleetReport, FleetRunConfig};
+use adaoper::graph::zoo;
+use adaoper::metrics::trace::{TraceMeta, TraceObserver};
+use adaoper::metrics::{HealthConfig, ServingReport};
+use adaoper::profiler::calibrate::{calibrate_on, CalibConfig, OfflineModel};
+use adaoper::profiler::gbdt::GbdtParams;
+use adaoper::profiler::{EnergyProfiler, EwmaCorrector};
+use adaoper::scenario::replay_str;
+use adaoper::soc::device::DeviceConfig;
+use adaoper::workload::Arrival;
+
+const SEED: u64 = 17;
+
+fn calib() -> CalibConfig {
+    CalibConfig {
+        samples: 1200,
+        seed: 5,
+        gbdt: GbdtParams {
+            trees: 40,
+            ..Default::default()
+        },
+    }
+}
+
+fn offline() -> &'static OfflineModel {
+    static OFF: OnceLock<OfflineModel> = OnceLock::new();
+    OFF.get_or_init(|| calibrate_on(&calib(), &DeviceConfig::snapdragon_855()))
+}
+
+fn streams() -> Vec<StreamSpec> {
+    vec![
+        StreamSpec::new(0, zoo::yolov2_tiny(), Arrival::Poisson { hz: 30.0 }, 0.25),
+        StreamSpec::new(1, zoo::mobilenet_v1(), Arrival::Poisson { hz: 20.0 }, 0.4),
+    ]
+}
+
+/// An aggressive rule set: the drift trip is far below any realistic
+/// windowed mean relative residual of the GBDT latency profile, so the
+/// fixed-seed drift run is guaranteed to fire at least one drift alert.
+fn tight_health() -> HealthConfig {
+    HealthConfig {
+        fast_window_s: 0.3,
+        slow_window_s: 1.0,
+        drift_warn: 1e-4,
+        drift_critical: 1e3,
+        min_samples: 3,
+        ..HealthConfig::default()
+    }
+}
+
+/// Fixed-seed AdaOper run with a mid-run regime change (the same fixture
+/// `tests/telemetry.rs` pins for the audit log).
+fn drift_config(health: Option<HealthConfig>) -> EngineConfig {
+    EngineConfig {
+        policy: PolicyKind::AdaOper,
+        scheduler: SchedulerKind::Edf,
+        admission: AdmissionPolicy::DropLate,
+        duration_s: 1.2,
+        seed: SEED,
+        calib: calib(),
+        condition_timeline: vec![(0.5, ConditionKind::High)],
+        health,
+        ..Default::default()
+    }
+}
+
+fn run_drift(health: Option<HealthConfig>) -> ServingReport {
+    let profiler = EnergyProfiler::with_correctors(offline().clone(), || {
+        Box::new(EwmaCorrector::default())
+    });
+    let mut engine = Engine::with_profiler(drift_config(health), profiler);
+    engine.run(&streams()).unwrap()
+}
+
+#[test]
+fn health_off_row_is_byte_prefix_of_health_on_row() {
+    let off = run_drift(None);
+    let on = run_drift(Some(tight_health()));
+    assert!(off.health.is_none());
+    let summary = on.health.expect("health on ⇒ summary present");
+    assert!(summary.ticks > 0, "run evaluated no monitor ticks");
+    assert!(summary.alerts > 0, "aggressive drift trip fired no alert");
+    assert!(summary.drift_alerts > 0, "no drift alert despite 1e-4 trip");
+
+    let (row_off, row_on) = (off.row(), on.row());
+    assert!(
+        row_on.starts_with(&row_off),
+        "health must only append:\n off: {row_off}\n on:  {row_on}"
+    );
+    assert!(row_on.contains("health "), "{row_on}");
+}
+
+/// Record the trace exactly the way `adaoper serve --trace --health`
+/// does; alert lines ride the observer channel into the JSONL body.
+fn record_trace() -> String {
+    let ecfg = drift_config(Some(tight_health()));
+    let profiler = EnergyProfiler::with_correctors(offline().clone(), || {
+        Box::new(EwmaCorrector::default())
+    });
+    let mut engine = Engine::with_profiler(ecfg.clone(), profiler);
+    let streams = streams();
+    let mut trace = TraceObserver::with_meta(TraceMeta::of(&ecfg, &streams));
+    let report = engine.run_observed(&streams, &mut [&mut trace]).unwrap();
+    trace.push_report_row(&report.row());
+    trace.to_jsonl()
+}
+
+fn alert_lines(jsonl: &str) -> Vec<&str> {
+    jsonl.lines().filter(|l| l.contains("\"event\":\"alert\"")).collect()
+}
+
+#[test]
+fn alert_stream_is_deterministic_and_replays_byte_identically() {
+    let trace = record_trace();
+    let alerts = alert_lines(&trace);
+    assert!(!alerts.is_empty(), "drift run recorded no alert lines");
+
+    // a second independent recording serializes the identical stream
+    let again = record_trace();
+    assert_eq!(alerts, alert_lines(&again), "alert stream is not deterministic");
+    assert_eq!(trace, again, "trace body is not deterministic");
+
+    // replay reconstructs the health config from the header and must
+    // reproduce the recorded row — including the health section —
+    // byte-for-byte
+    let outcome = replay_str(&trace).unwrap();
+    assert!(outcome.row.contains("health "), "{}", outcome.row);
+    assert_eq!(
+        outcome.matches(),
+        Some(true),
+        "replay row diverged\n  recorded: {:?}\n  replayed: {}",
+        outcome.recorded_row,
+        outcome.row
+    );
+}
+
+fn fleet_cfg(threads: usize) -> FleetRunConfig {
+    FleetRunConfig {
+        devices: 12,
+        threads,
+        seed: 42,
+        duration_s: 0.8,
+        health: Some(tight_health()),
+        calib: CalibConfig {
+            samples: 900,
+            seed: 42,
+            gbdt: GbdtParams {
+                trees: 25,
+                ..Default::default()
+            },
+        },
+        ..Default::default()
+    }
+}
+
+fn fleet_reports() -> &'static (FleetReport, FleetReport) {
+    static R: OnceLock<(FleetReport, FleetReport)> = OnceLock::new();
+    R.get_or_init(|| {
+        let offline = calibrate_classes(&fleet_cfg(1).calib, &DeviceClass::all(), 3);
+        (
+            run_fleet_with(&fleet_cfg(1), &offline).unwrap(),
+            run_fleet_with(&fleet_cfg(8), &offline).unwrap(),
+        )
+    })
+}
+
+#[test]
+fn fleet_alert_rollups_bit_identical_across_thread_counts() {
+    let (a, b) = fleet_reports();
+    // all-u64 sums merged in device order: exact for any thread count
+    assert!(a.fleet.alerts > 0, "fleet run fired no alerts under a 1e-4 drift trip");
+    assert_eq!(a.fleet.alerts, b.fleet.alerts);
+    assert_eq!(a.fleet.warn_alerts, b.fleet.warn_alerts);
+    assert_eq!(a.fleet.critical_alerts, b.fleet.critical_alerts);
+    assert_eq!(a.fleet.drift_alerts, b.fleet.drift_alerts);
+    // and the rendered report — including the health section — is
+    // byte-identical
+    assert_eq!(a.render(), b.render());
+    assert!(a.render().contains("health alerts:"), "{}", a.render());
+}
+
+#[test]
+fn inspect_scanner_skips_torn_lines_instead_of_aborting() {
+    let trace = record_trace();
+    let n_alerts = alert_lines(&trace).len();
+
+    // corrupt the body the way a crashed writer does: a torn (truncated)
+    // JSON line and a line of garbage, in the middle of valid lines
+    let mut lines: Vec<String> = trace.lines().map(str::to_string).collect();
+    let torn = lines.last().unwrap()[..10].to_string();
+    lines.insert(2, torn);
+    lines.insert(3, "%%% not json at all %%%".to_string());
+    let corrupt = lines.join("\n");
+
+    let scan = scan_trace(&corrupt).expect("scanner must not abort on torn lines");
+    assert_eq!(scan.skipped, 2, "exactly the two injected lines are skipped");
+    assert_eq!(scan.alerts.len(), n_alerts, "valid alert lines survive");
+    assert!(scan.report_row.is_some(), "the report trailer survives");
+
+    // the pristine trace scans clean
+    let clean = scan_trace(&trace).unwrap();
+    assert_eq!(clean.skipped, 0);
+    assert_eq!(clean.alerts.len(), n_alerts);
+}

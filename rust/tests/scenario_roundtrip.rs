@@ -8,6 +8,7 @@ use adaoper::config::schema::{
     AdmissionKind, BatchPolicyKind, ConditionKind, PolicyKind, SchedulerKind,
 };
 use adaoper::coordinator::Engine;
+use adaoper::metrics::HealthConfig;
 use adaoper::scenario::spec::{
     BatchDef, CacheDef, CalibDef, ObjectiveDef, ScenarioSpec, StreamDef, TimelineDef,
 };
@@ -65,6 +66,21 @@ fn random_spec(rng: &mut Prng, tag: usize) -> ScenarioSpec {
         });
     }
 
+    // half the specs carry a [health] section with randomized (valid)
+    // knobs, so the round-trip covers its floats and integers too
+    let health = if rng.below(2) == 0 {
+        None
+    } else {
+        Some(HealthConfig {
+            fast_window_s: rng.range(0.4, 0.9),
+            slow_window_s: rng.range(2.0, 6.0),
+            slo_target: rng.range(0.005, 0.2),
+            energy_budget_mj: if rng.below(2) == 0 { 0.0 } else { rng.range(5.0, 50.0) },
+            min_samples: 1 + rng.below(8) as u64,
+            ..HealthConfig::default()
+        })
+    };
+
     ScenarioSpec {
         name: format!("roundtrip-{tag}"),
         duration_s,
@@ -82,6 +98,7 @@ fn random_spec(rng: &mut Prng, tag: usize) -> ScenarioSpec {
         batching,
         plan_cache: CacheDef::default(),
         fleet: None,
+        health,
         expect: vec![
             ExpectBound { key: ExpectKey::RequestsMin, bound: 0.0 },
             ExpectBound { key: ExpectKey::MissPctMax, bound: 100.0 },
